@@ -1,0 +1,108 @@
+//! Programmable benchmark sweep: evaluate the multi-set work-matrix
+//! path across a custom grid from the command line — the tool we used
+//! for the perf pass (EXPERIMENTS.md §Perf).
+//!
+//!     cargo run --release --example benchmark_sweep -- \
+//!         --n 1000,4000 --l 16,64 --k 10 --d 100 --backend xla,cpu_st
+
+use ebc::bench::report::{fmt_secs, Reporter};
+use ebc::bench::workload::fig2_workload;
+use ebc::bench::{measure, Settings};
+use ebc::engine::{DeviceDataset, Engine, EngineConfig, Precision};
+use ebc::runtime::Runtime;
+use ebc::submodular::EbcFunction;
+use ebc::util::threadpool::default_threads;
+use std::time::Duration;
+
+fn parse_list(args: &[String], flag: &str, default: &str) -> Vec<usize> {
+    let raw = args
+        .iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string());
+    raw.split(',').filter_map(|s| s.trim().parse().ok()).collect()
+}
+
+fn parse_str(args: &[String], flag: &str, default: &str) -> String {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    ebc::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let ns = parse_list(&args, "--n", "1000,4000");
+    let ls = parse_list(&args, "--l", "16,64");
+    let ks = parse_list(&args, "--k", "10");
+    let ds = parse_list(&args, "--d", "100");
+    let backends = parse_str(&args, "--backend", "xla,cpu_st");
+    let backends: Vec<&str> = backends.split(',').collect();
+
+    let rt = Runtime::discover()?;
+    let eng = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
+    let settings = Settings {
+        warmup: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(100),
+        max_iters: 25,
+    };
+
+    let mut rep = Reporter::new(
+        "custom sweep — multi-set evaluation",
+        &["n", "l", "k", "d", "backend", "mean", "p95"],
+    );
+    for &n in &ns {
+        for &l in &ls {
+            for &k in &ks {
+                for &d in &ds {
+                    let p = fig2_workload(n, l, k, d, 0xCAFE);
+                    let refs = p.set_refs();
+                    for b in &backends {
+                        let summary = match *b {
+                            "xla" => {
+                                let mut dds = DeviceDataset::new(p.ground.clone());
+                                measure(&settings, || {
+                                    std::hint::black_box(
+                                        eng.eval_sets(&mut dds, &refs).unwrap(),
+                                    );
+                                })
+                            }
+                            "cpu_st" => {
+                                let f = EbcFunction::new(p.ground.clone());
+                                measure(&settings, || {
+                                    std::hint::black_box(f.eval_sets_st(&refs));
+                                })
+                            }
+                            "cpu_mt" => {
+                                let f = EbcFunction::new(p.ground.clone());
+                                let t = default_threads();
+                                measure(&settings, || {
+                                    std::hint::black_box(f.eval_sets_mt(&refs, t));
+                                })
+                            }
+                            other => {
+                                eprintln!("unknown backend '{other}', skipping");
+                                continue;
+                            }
+                        };
+                        rep.row(&[
+                            n.to_string(),
+                            l.to_string(),
+                            k.to_string(),
+                            d.to_string(),
+                            b.to_string(),
+                            fmt_secs(summary.mean),
+                            fmt_secs(summary.p95),
+                        ]);
+                    }
+                }
+            }
+        }
+    }
+    rep.print();
+    let path = rep.save_csv("custom_sweep")?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: summarize a synthetic dataset through the full stack —
+//! AOT-compiled Pallas/JAX graphs driven from Rust via PJRT.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::linalg::Matrix;
+use ebc::optim::{Greedy, Optimizer};
+use ebc::runtime::Runtime;
+use ebc::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    ebc::util::logging::init();
+
+    // 1. a dataset: 2000 vectors in 100 dimensions, three blobs
+    // centers away from the origin: EBC's auxiliary exemplar e0 = 0 means
+    // data at the origin is "covered for free" and would never be picked
+    let mut rng = Rng::new(42);
+    let mut data = Vec::with_capacity(2000 * 100);
+    for i in 0..2000 {
+        let center = 5.0 + (i % 3) as f32 * 8.0;
+        for _ in 0..100 {
+            data.push(center + rng.normal());
+        }
+    }
+    let v = Matrix::from_vec(2000, 100, data);
+
+    // 2. the engine: loads artifacts/, compiles on the PJRT CPU client
+    let rt = Runtime::discover()?;
+    let engine = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
+    let mut oracle = XlaOracle::new(engine, v);
+
+    // 3. greedy summarization, k = 6
+    let result = Greedy::default().run(&mut oracle, 6);
+
+    println!("representatives: {:?}", result.indices);
+    println!("f(S) trajectory: {:?}", result.f_trajectory);
+    println!(
+        "wall: {:.3}s over {} oracle calls ({:.2e} scalar distances)",
+        result.wall_seconds,
+        result.oracle_calls,
+        result.oracle_work as f64
+    );
+
+    // blobs at 0, 8, 16 -> the first three picks must hit three blobs
+    let blobs: std::collections::BTreeSet<usize> =
+        result.indices.iter().take(3).map(|i| i % 3).collect();
+    assert_eq!(blobs.len(), 3, "expected one exemplar per blob");
+    println!("OK: one exemplar per blob among the first three picks");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Streaming coordinator demo: a fleet of four simulated IMMs pushing
+//! melt-pressure cycles through the backpressure queue into per-machine
+//! sliding windows, with EBC summaries refreshed on the configured
+//! cadence and served to "operator" queries — the deployment scenario
+//! the paper's §6 motivates.
+//!
+//!     cargo run --release --example streaming_service [-- --samples 3524]
+
+use ebc::config::schema::ServiceConfig;
+use ebc::coordinator::{snapshot, Coordinator, RouteResult, SimulatedFleet};
+use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::imm::{Part, ProcessState};
+use ebc::linalg::Matrix;
+use ebc::runtime::Runtime;
+use ebc::submodular::Oracle;
+
+fn main() -> anyhow::Result<()> {
+    ebc::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let samples = args
+        .iter()
+        .position(|a| a == "--samples")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512usize);
+
+    let mut cfg = ServiceConfig::default();
+    cfg.name = "demo-plant".into();
+    cfg.summary.k = 5;
+    cfg.summary.refresh_every = 100;
+    cfg.summary.window = 500;
+    cfg.coordinator.queue_capacity = 2048;
+    cfg.coordinator.ingest_batch = 32;
+
+    let rt = Runtime::discover()?;
+    let engine = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
+    let factory = move |m: Matrix| -> Box<dyn Oracle> {
+        Box::new(XlaOracle::new(engine.clone(), m))
+    };
+    let mut coordinator = Coordinator::new(cfg, Box::new(factory));
+
+    let mut fleet = SimulatedFleet::new(
+        &[
+            ("imm-cover-1", Part::Cover, ProcessState::Stable),
+            ("imm-cover-2", Part::Cover, ProcessState::StartUp),
+            ("imm-plate-1", Part::Plate, ProcessState::Regrind),
+            ("imm-plate-2", Part::Plate, ProcessState::Downtimes),
+        ],
+        samples,
+        20260711,
+    );
+
+    println!("streaming {} cycles (d={samples}) through the coordinator ...", fleet.remaining());
+    let t0 = std::time::Instant::now();
+    let n = coordinator.run_stream(&mut fleet);
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "\nprocessed {n} cycles in {dt:.2}s -> {:.0} cycles/s ingest throughput",
+        n as f64 / dt
+    );
+    let m = &coordinator.metrics;
+    println!(
+        "metrics: ingested={} evicted={} throttle={} refreshes={} (avg refresh {:.3}s)",
+        m.ingested,
+        m.evicted,
+        m.throttle_signals,
+        m.refreshes,
+        m.refresh_seconds_total / m.refreshes.max(1) as f64
+    );
+
+    println!("\noperator queries:");
+    for name in ["imm-cover-1", "imm-cover-2", "imm-plate-1", "imm-plate-2", "imm-plate"] {
+        let res = coordinator.query(name);
+        println!("  {name:<14} -> {}", res.describe());
+        if name == "imm-plate" {
+            assert!(matches!(res, RouteResult::Ambiguous { .. }));
+        }
+    }
+
+    println!("\nprofile:\n{}", coordinator.profile.report());
+    let snap = snapshot::snapshot(&coordinator);
+    let path = std::path::Path::new("bench_results").join("service_snapshot.json");
+    std::fs::create_dir_all("bench_results")?;
+    std::fs::write(&path, snap.dump())?;
+    println!("snapshot -> {}", path.display());
+    Ok(())
+}

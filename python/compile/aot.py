@@ -1,0 +1,195 @@
+"""AOT pipeline: lower every manifest variant to HLO **text** and write
+``artifacts/<name>.hlo.txt`` + ``artifacts/manifest.json``.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Graphs are lowered with ``return_tuple=True``; the Rust runtime unwraps
+tuples (rust/src/runtime/executable.rs).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--full] [--only REGEX]
+    python -m compile.aot --report          # VMEM/MXU estimates only
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import manifest as mf
+from . import model
+from .kernels import gains as gains_kernel
+from .kernels import work_matrix as wm_kernel
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_variant(v: mf.Variant):
+    """Build + lower one variant; returns (hlo_text, input_names)."""
+    if v.kind == "gains":
+        if v.impl == "jnp":
+            fn = model.make_gains_jnp(v.dtype)
+        else:
+            fn = model.make_gains(v.dtype, block_n=v.eff_block_n(),
+                                  block_c=v.eff_block_c())
+        args = [_spec((v.n, v.d)), _spec((v.n,)), _spec((v.n,)),
+                _spec((v.n,)), _spec((v.c, v.d)), _spec((v.c,))]
+        inputs = ["v", "vsq", "vmask", "mindist", "c", "cmask"]
+    elif v.kind == "update":
+        fn = model.make_update(v.dtype)
+        args = [_spec((v.n, v.d)), _spec((v.n,)), _spec((v.n,)),
+                _spec((v.n,)), _spec((v.d,))]
+        inputs = ["v", "vsq", "vmask", "mindist", "s"]
+    elif v.kind == "eval_multi":
+        if v.impl == "jnp":
+            fn = model.make_eval_multi_jnp(v.l, v.dtype)
+        else:
+            fn = model.make_eval_multi(v.l, v.dtype, block_n=v.eff_block_n(),
+                                       block_l=v.eff_block_l())
+        args = [_spec((v.n, v.d)), _spec((v.n,)), _spec((v.n,)),
+                _spec((v.l * v.k, v.d)), _spec((v.l * v.k,))]
+        inputs = ["v", "vsq", "vmask", "s_flat", "smask_flat"]
+    else:
+        raise ValueError(v.kind)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), inputs
+
+
+def variant_report(v: mf.Variant) -> dict:
+    """Static perf estimates recorded into the manifest (DESIGN.md §Perf)."""
+    dt_bytes = 4 if v.dtype == "f32" else 2
+    if v.kind == "gains":
+        bn, bc = v.eff_block_n(), v.eff_block_c()
+        flops = gains_kernel.mxu_flops(v.n, v.c, v.d)
+        if v.impl == "jnp":
+            vmem = (v.n + v.c) * v.d * dt_bytes + v.n * v.c * 4
+            grid = 1
+        else:
+            vmem = gains_kernel.vmem_bytes(bn, bc, v.d, dt_bytes)
+            grid = (v.n // bn) * (v.c // bc)
+    elif v.kind == "eval_multi":
+        bn, bl = v.eff_block_n(), v.eff_block_l()
+        flops = 2.0 * v.n * v.l * v.k * v.d
+        if v.impl == "jnp":
+            vmem = (v.n + v.l * v.k) * v.d * dt_bytes + v.n * v.l * v.k * 4
+            grid = 1
+        else:
+            vmem = wm_kernel.vmem_bytes(bn, bl, v.k, v.d, dt_bytes)
+            grid = (v.n // bn) * (v.l // bl)
+    else:  # update: one matvec
+        vmem = v.n * v.d * dt_bytes + 4 * v.n * 4
+        flops = 2.0 * v.n * v.d
+        grid = 1
+    return {
+        "vmem_bytes": int(vmem),
+        "mxu_flops": float(flops),
+        "grid_programs": int(grid),
+        # MXU utilization proxy: fraction of an aligned 128x128xd tile the
+        # matmul occupies (1.0 when all dims are multiples of 128).
+        "mxu_alignment": _mxu_alignment(v),
+    }
+
+
+def _mxu_alignment(v: mf.Variant) -> float:
+    def frac(x, q=128):
+        return x / (((x + q - 1) // q) * q)
+    if v.kind == "gains":
+        return frac(v.eff_block_n()) * frac(v.eff_block_c()) * frac(v.d)
+    if v.kind == "eval_multi":
+        return frac(v.eff_block_n()) * frac(v.eff_block_l() * v.k) * frac(v.d)
+    return frac(v.d)
+
+
+def entry_dict(v: mf.Variant, inputs, report, elapsed_s):
+    return {
+        "name": v.name,
+        "file": v.filename,
+        "kind": v.kind,
+        "impl": v.impl,
+        "dtype": v.dtype,
+        "n": v.n,
+        "d": v.d,
+        "c": v.c,
+        "l": v.l,
+        "k": v.k,
+        "block_n": v.eff_block_n(),
+        "block_c": v.eff_block_c() if v.kind == "gains" else 0,
+        "block_l": v.eff_block_l() if v.kind == "eval_multi" else 0,
+        "inputs": inputs,
+        "lower_seconds": round(elapsed_s, 3),
+        **report,
+    }
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--full", action="store_true",
+                   help="extended bucket set for --full benchmark sweeps")
+    p.add_argument("--only", default=None,
+                   help="regex filter on variant names")
+    p.add_argument("--report", action="store_true",
+                   help="print VMEM/MXU estimates and exit (no lowering)")
+    args = p.parse_args(argv)
+
+    variants = mf.full_manifest() if args.full else mf.default_manifest()
+    if args.only:
+        rx = re.compile(args.only)
+        variants = [v for v in variants if rx.search(v.name)]
+    if not variants:
+        print("no variants match", file=sys.stderr)
+        return 1
+
+    if args.report:
+        hdr = f"{'variant':44s} {'vmem':>10s} {'programs':>9s} {'GFLOP':>9s} {'mxu_align':>9s}"
+        print(hdr)
+        for v in variants:
+            r = variant_report(v)
+            print(f"{v.name:44s} {r['vmem_bytes']/1e6:8.2f}MB "
+                  f"{r['grid_programs']:9d} {r['mxu_flops']/1e9:9.3f} "
+                  f"{r['mxu_alignment']:9.3f}")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for v in variants:
+        t0 = time.time()
+        text, inputs = lower_variant(v)
+        path = os.path.join(args.out_dir, v.filename)
+        with open(path, "w") as f:
+            f.write(text)
+        dt = time.time() - t0
+        entries.append(entry_dict(v, inputs, variant_report(v), dt))
+        print(f"  lowered {v.name:44s} {len(text)/1e3:8.1f} kB  {dt:5.1f}s")
+
+    man = {"version": MANIFEST_VERSION, "entries": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

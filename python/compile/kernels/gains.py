@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: batched greedy marginal gains.
+
+This is the TPU-style realisation of the paper's GPU algorithm (§4.2)
+specialised to the Greedy optimizer's evaluation pattern
+``S_multi = {S ∪ {c_1}, ..., S ∪ {c_m}}``: because every set shares the
+prefix ``S``, its contribution is carried by the per-ground-vector state
+``mindist`` and each cell of the work matrix reduces to
+
+    W[j, i] = max(mindist_i - d²(v_i, c_j), 0) * vmask_i / |V|
+
+Hardware mapping (cf. DESIGN.md §Hardware-Adaptation):
+
+* the CUDA block's shared-memory tile of ``V`` becomes a ``(bn, d)``
+  BlockSpec that stages the ground tile into VMEM once per grid row;
+* the per-thread scalar distance loop becomes one MXU matmul
+  ``Vtile @ Ctileᵀ`` (compute dtype f32 or bf16, f32 accumulation);
+* the coalesced global-memory layout of ``S_multi`` becomes the dense
+  candidate tile ``(bc, d)``, staged per grid column;
+* the row-reduce ``W·1`` is fused: each program emits the partial
+  column-sum of its tile, and the surrounding L2 graph adds the
+  ``grid_n`` partials.
+
+Grid: ``(N/bn, C/bc)``; output partials: ``(N/bn, C)`` f32.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_C = 128
+
+
+def _gains_kernel(v_ref, vsq_ref, vmask_ref, mind_ref, c_ref, csq_ref, out_ref):
+    """One (bn, bc) tile of the work matrix, reduced over bn.
+
+    All refs live in VMEM. ``v_ref``/``c_ref`` carry the compute dtype;
+    every reduction happens in f32.
+    """
+    v = v_ref[...]                         # (bn, d)  compute dtype
+    c = c_ref[...]                         # (bc, d)  compute dtype
+    # Cross term on the MXU: (bn, d) x (bc, d)^T with f32 accumulation.
+    cross = jax.lax.dot_general(
+        v, c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                      # (bn, bc) f32
+    vsq = vsq_ref[...]                     # (bn,)  f32
+    csq = csq_ref[...]                     # (bc,)  f32
+    d2 = jnp.maximum(vsq[:, None] + csq[None, :] - 2.0 * cross, 0.0)
+    mind = mind_ref[...]                   # (bn,)  f32
+    vmask = vmask_ref[...]                 # (bn,)  f32
+    red = jnp.maximum(mind[:, None] - d2, 0.0) * vmask[:, None]
+    out_ref[...] = jnp.sum(red, axis=0, keepdims=True)  # (1, bc) f32
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_c"))
+def gains_partials(v, vsq, vmask, mindist, c, csq,
+                   block_n=DEFAULT_BLOCK_N, block_c=DEFAULT_BLOCK_C):
+    """Run the tiled kernel; returns per-row-block partial sums (N/bn, C).
+
+    v: (N, d) compute dtype; c: (C, d) compute dtype; all vectors f32.
+    N must be a multiple of block_n and C of block_c (the Rust engine's
+    bucket/padding policy guarantees this; see rust/src/engine/tiling.rs).
+    """
+    n, d = v.shape
+    cc = c.shape[0]
+    bn = min(block_n, n)
+    bc = min(block_c, cc)
+    assert n % bn == 0 and cc % bc == 0, (n, cc, bn, bc)
+    grid = (n // bn, cc // bc)
+    return pl.pallas_call(
+        _gains_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),   # V tile ("shared mem")
+            pl.BlockSpec((bn,), lambda i, j: (i,)),       # vsq
+            pl.BlockSpec((bn,), lambda i, j: (i,)),       # vmask
+            pl.BlockSpec((bn,), lambda i, j: (i,)),       # mindist
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),   # candidate tile
+            pl.BlockSpec((bc,), lambda i, j: (j,)),       # csq
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], cc), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(v, vsq, vmask, mindist, c, csq)
+
+
+def vmem_bytes(block_n, block_c, d, dtype_bytes):
+    """VMEM footprint estimate of one program instance (DESIGN.md §Perf)."""
+    v_tile = block_n * d * dtype_bytes
+    c_tile = block_c * d * dtype_bytes
+    vecs = (3 * block_n + block_c) * 4
+    acc = block_n * block_c * 4  # d2/red tile, f32
+    out = block_c * 4
+    return v_tile + c_tile + vecs + acc + out
+
+
+def mxu_flops(n, c, d):
+    """MXU FLOPs of the cross-term matmul for a full (N, C) evaluation."""
+    return 2.0 * n * c * d

@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracle for the EBC kernels.
+
+This is the correctness ground truth for the Pallas kernels in
+``work_matrix.py`` and ``gains.py``: pytest (``python/tests``) asserts
+``assert_allclose`` between each kernel and the functions here across a
+hypothesis sweep of shapes and dtypes.
+
+Conventions (shared with the Rust engine, see rust/src/engine/):
+
+* ``v``       -- ground set, shape ``(N, d)``; padded rows are arbitrary but
+                 masked by ``vmask``.
+* ``vsq``     -- ``|v_i|^2`` precomputed per dataset, shape ``(N,)``, f32.
+                 This doubles as the distance to the auxiliary exemplar
+                 ``e0 = 0`` of the EBC definition (paper eq. 4).
+* ``vmask``   -- 1.0 for real rows, 0.0 for padding, shape ``(N,)``.
+* ``mindist`` -- current min squared distance of every ground vector to
+                 ``S ∪ {e0}``; initialised to ``vsq`` (distance to e0).
+* squared Euclidean distance throughout (paper §5).
+
+All reductions are performed in f32 regardless of the compute dtype.
+"""
+
+import jax.numpy as jnp
+
+BIG = 1e30  # sentinel for masked candidates / set slots
+
+
+def pairwise_sqdist(a, b):
+    """Squared Euclidean distances, shape (n, m), for a:(n,d) b:(m,d)."""
+    an = jnp.sum(a * a, axis=1, keepdims=True)
+    bn = jnp.sum(b * b, axis=1, keepdims=True).T
+    d2 = an + bn - 2.0 * (a @ b.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def ebc_value_ref(v, vmask, s, smask):
+    """Direct EBC function value f(S) = L({e0}) - L(S ∪ {e0}) (paper eq. 4).
+
+    v: (N, d), vmask: (N,), s: (k, d), smask: (k,).
+    """
+    vsq = jnp.sum(v * v, axis=1)
+    d2 = pairwise_sqdist(v, s) + (1.0 - smask)[None, :] * BIG
+    m = jnp.minimum(jnp.min(d2, axis=1), vsq)  # include e0
+    n = jnp.sum(vmask)
+    return jnp.sum(vmask * (vsq - m)) / n
+
+
+def ebc_gains_ref(v, vsq, vmask, mindist, c, cmask):
+    """Marginal gains Δf(c_j | S) for a batch of candidates.
+
+    Δf(c | S) = mean_i max(mindist_i - d²(v_i, c), 0)  -- the batched
+    greedy step. Masked candidates get -BIG so they never win argmax.
+
+    v: (N, d), c: (C, d); returns (C,) f32.
+    """
+    d2 = pairwise_sqdist(v, c)
+    red = jnp.maximum(mindist[:, None] - d2, 0.0) * vmask[:, None]
+    gains = jnp.sum(red, axis=0) / jnp.sum(vmask)
+    return gains * cmask - (1.0 - cmask) * BIG
+
+
+def ebc_update_ref(v, vsq, vmask, mindist, s):
+    """After selecting exemplar ``s``: new mindist and the new f(S) value.
+
+    s: (d,). Returns (new_mindist (N,), f_value scalar).
+    """
+    d2 = jnp.maximum(vsq - 2.0 * (v @ s) + jnp.sum(s * s), 0.0)
+    nm = jnp.minimum(mindist, d2)
+    f = jnp.sum(vmask * (vsq - nm)) / jnp.sum(vmask)
+    return nm, f
+
+
+def ebc_eval_multi_ref(v, vsq, vmask, s_flat, smask_flat, num_sets):
+    """The paper's work-matrix evaluation (Alg. 2): f(S_j) for l sets at once.
+
+    s_flat: (l*k, d) -- the single dense "evaluation set matrix" S of the
+    paper's memory layout (§4.2); smask_flat: (l*k,) marks real slots.
+    Returns (l,) f32 of EBC function values.
+    """
+    l = num_sets
+    k = s_flat.shape[0] // l
+    d2 = pairwise_sqdist(v, s_flat) + (1.0 - smask_flat)[None, :] * BIG
+    d2 = d2.reshape(v.shape[0], l, k)
+    m = jnp.min(d2, axis=2)                      # (N, l) min over set slots
+    m = jnp.minimum(m, vsq[:, None])             # include e0
+    contrib = vmask[:, None] * (vsq[:, None] - m)
+    return jnp.sum(contrib, axis=0) / jnp.sum(vmask)

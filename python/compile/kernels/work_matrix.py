@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: the paper's work matrix W for arbitrary multi-set
+evaluation (Algorithm 2).
+
+Unlike ``gains.py`` (which exploits the shared-prefix structure of the
+Greedy step), this kernel evaluates *arbitrary* sets
+``S_multi = {S_1, ..., S_l}``, each with up to ``k`` members — the
+evaluation pattern of the sieve-family optimizers (SieveStreaming,
+SieveStreaming++, ThreeSieves) and of the paper's Fig. 2 benchmark.
+
+Memory layout follows the paper §4.2 "Memory Layout": all sets are packed
+into one dense evaluation-set matrix ``S ∈ ((l·k), d)`` with a slot mask
+for ragged sets (the paper leaves unused entries "simply empty"; we mask
+them with +BIG so they never win the min). The matrix is transferred from
+the Rust coordinator in a single Literal per call.
+
+Each grid program computes a ``(bn, bl)`` tile of W:
+
+    W[j, i] = vmask_i * (vsq_i - min(vsq_i, min_{s ∈ S_j} d²(v_i, s))) / |V|
+
+(the e0 column of the EBC definition is folded in via ``vsq``), reduced
+over the ``bn`` ground rows into a partial ``(1, bl)`` f32 row. The L2
+graph sums the ``N/bn`` partials — the paper's ``W · 1`` reduce.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_L = 8
+
+
+def _work_matrix_kernel(v_ref, vsq_ref, vmask_ref, s_ref, ssq_ref,
+                        smask_ref, out_ref, *, k):
+    v = v_ref[...]                          # (bn, d) compute dtype
+    s = s_ref[...]                          # (bl*k, d) compute dtype
+    cross = jax.lax.dot_general(
+        v, s,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                       # (bn, bl*k) f32
+    vsq = vsq_ref[...]                      # (bn,) f32
+    ssq = ssq_ref[...]                      # (bl*k,) f32
+    smask = smask_ref[...]                  # (bl*k,) f32
+    d2 = jnp.maximum(vsq[:, None] + ssq[None, :] - 2.0 * cross, 0.0)
+    d2 = d2 + (1.0 - smask)[None, :] * BIG  # empty slots never win the min
+    bn = d2.shape[0]
+    bl = d2.shape[1] // k
+    m = jnp.min(d2.reshape(bn, bl, k), axis=2)   # (bn, bl)
+    m = jnp.minimum(m, vsq[:, None])             # e0 column
+    vmask = vmask_ref[...]
+    contrib = vmask[:, None] * (vsq[:, None] - m)
+    out_ref[...] = jnp.sum(contrib, axis=0, keepdims=True)  # (1, bl)
+
+
+@functools.partial(jax.jit, static_argnames=("num_sets", "block_n", "block_l"))
+def work_matrix_partials(v, vsq, vmask, s_flat, ssq, smask, num_sets,
+                         block_n=DEFAULT_BLOCK_N, block_l=DEFAULT_BLOCK_L):
+    """Partial f-value sums, shape (N/bn, l) f32.
+
+    s_flat: (l*k, d) packed evaluation-set matrix; ssq/smask: (l*k,) f32.
+    N % block_n == 0 and l % block_l == 0 (engine padding guarantees it).
+    """
+    n, d = v.shape
+    lk = s_flat.shape[0]
+    assert lk % num_sets == 0, (lk, num_sets)
+    k = lk // num_sets
+    bn = min(block_n, n)
+    bl = min(block_l, num_sets)
+    assert n % bn == 0 and num_sets % bl == 0, (n, num_sets, bn, bl)
+    grid = (n // bn, num_sets // bl)
+    kern = functools.partial(_work_matrix_kernel, k=k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),       # V tile
+            pl.BlockSpec((bn,), lambda i, j: (i,)),           # vsq
+            pl.BlockSpec((bn,), lambda i, j: (i,)),           # vmask
+            pl.BlockSpec((bl * k, d), lambda i, j: (j, 0)),   # set tile
+            pl.BlockSpec((bl * k,), lambda i, j: (j,)),       # ssq
+            pl.BlockSpec((bl * k,), lambda i, j: (j,)),       # smask
+        ],
+        out_specs=pl.BlockSpec((1, bl), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], num_sets), jnp.float32),
+        interpret=True,
+    )(v, vsq, vmask, s_flat, ssq, smask)
+
+
+def vmem_bytes(block_n, block_l, k, d, dtype_bytes):
+    """VMEM footprint estimate of one program instance."""
+    v_tile = block_n * d * dtype_bytes
+    s_tile = block_l * k * d * dtype_bytes
+    vecs = 2 * block_n * 4 + 2 * block_l * k * 4
+    acc = block_n * block_l * k * 4
+    return v_tile + s_tile + vecs + acc

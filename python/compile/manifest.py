@@ -1,0 +1,152 @@
+"""The artifact manifest: every (graph kind, impl, shape bucket, dtype)
+variant that ``aot.py`` lowers to ``artifacts/*.hlo.txt`` and that the
+Rust engine (rust/src/runtime/artifact.rs) loads at start-up.
+
+Two kernel implementations are shipped for the batched graphs
+(DESIGN.md §Perf / EXPERIMENTS.md §Perf):
+
+* ``pallas`` — the L1 tiled work-matrix kernels (gains.py /
+  work_matrix.py): the TPU-shaped realization of the paper's GPU
+  algorithm. Under interpret=True the grid lowers to an XLA while-loop,
+  which pays per-step dispatch overhead on the CPU PJRT backend — so
+  these are the *architecture/compile-only* reference for real TPUs.
+* ``jnp``   — the same work-matrix math as one fused matmul + reduction,
+  which XLA-CPU vectorizes aggressively: the fast path on this testbed.
+
+Buckets are chosen so every workload in the experiment index
+(DESIGN.md §3) pads to a bucket with low waste:
+
+* d=128   covers the paper's synthetic benchmarks (d=100, Fig. 2/Table 1)
+* d=3584  covers the IMM melt-pressure cycles (d=3524, Fig. 3/Table 2/4)
+* jnp eval_multi gets a fine (n, l) grid — padding waste directly
+  multiplies runtime (the perf-pass lesson).
+
+All pallas block sizes must divide their bucket (asserted below).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Variant:
+    kind: str                      # "gains" | "update" | "eval_multi"
+    n: int                         # ground-set bucket
+    d: int                         # feature-dim bucket
+    dtype: str                     # "f32" | "bf16"
+    impl: str = "pallas"           # "pallas" | "jnp"
+    c: int = 0                     # gains: candidate bucket
+    l: int = 0                     # eval_multi: set-count bucket
+    k: int = 0                     # eval_multi: per-set slot bucket
+    block_n: int = 512
+    block_c: int = 256
+    block_l: int = 0               # 0 = auto (fit ~4 MB of set tile)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "gains":
+            core = f"n{self.n}_d{self.d}_c{self.c}"
+        elif self.kind == "update":
+            core = f"n{self.n}_d{self.d}"
+        elif self.kind == "eval_multi":
+            core = f"l{self.l}_k{self.k}_n{self.n}_d{self.d}"
+        else:
+            raise ValueError(self.kind)
+        tag = "" if self.impl == "pallas" else f"_{self.impl}"
+        return f"{self.kind}{tag}_{core}_{self.dtype}"
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+    def eff_block_n(self) -> int:
+        return min(self.block_n, self.n)
+
+    def eff_block_c(self) -> int:
+        return min(self.block_c, self.c)
+
+    def eff_block_l(self) -> int:
+        """Auto block_l: as many sets per program as fit ~4 MB of tile."""
+        if self.block_l:
+            return min(self.block_l, self.l)
+        dt = 4 if self.dtype == "f32" else 2
+        per_set = max(self.k * self.d * dt, 1)
+        bl = max(1, (4 << 20) // per_set)
+        # largest divisor of l that is <= bl
+        best = 1
+        for cand in range(1, self.l + 1):
+            if self.l % cand == 0 and cand <= bl:
+                best = cand
+        return best
+
+    def validate(self):
+        assert self.dtype in ("f32", "bf16"), self.dtype
+        assert self.impl in ("pallas", "jnp"), self.impl
+        if self.impl == "jnp" or self.kind == "update":
+            return
+        assert self.n % self.eff_block_n() == 0, (self.n, self.eff_block_n())
+        if self.kind == "gains":
+            assert self.c % self.eff_block_c() == 0, (self.c, self.eff_block_c())
+        if self.kind == "eval_multi":
+            assert self.l % self.eff_block_l() == 0, (self.l, self.eff_block_l())
+            assert self.k > 0
+
+
+def _both_dtypes(**kw):
+    return [Variant(dtype="f32", **kw), Variant(dtype="bf16", **kw)]
+
+
+def default_manifest():
+    """The standard bucket set (built by ``make artifacts``)."""
+    out = []
+    # ---- gains: greedy hot path ----------------------------------------
+    # jnp fast path: fine n grid
+    for n in [1024, 2048, 4096, 8192, 16384]:
+        for c in [256, 1024]:
+            if c > n:
+                continue
+            out += _both_dtypes(kind="gains", impl="jnp", n=n, d=128, c=c)
+    out += _both_dtypes(kind="gains", impl="jnp", n=1024, d=3584, c=256)
+    out += _both_dtypes(kind="gains", impl="jnp", n=1024, d=3584, c=1024)
+    # pallas reference buckets (TPU-shaped; compile-only on real HW)
+    for n, d, c in [(1024, 128, 256), (4096, 128, 1024), (1024, 3584, 256)]:
+        out += _both_dtypes(kind="gains", impl="pallas", n=n, d=d, c=c)
+    # ---- update: post-selection state refresh (always pure jnp) ---------
+    for n, d in [(1024, 128), (2048, 128), (4096, 128), (8192, 128),
+                 (16384, 128), (1024, 3584)]:
+        out += _both_dtypes(kind="update", impl="jnp", n=n, d=d)
+    # ---- eval_multi: sieve-family + Fig. 2 multi-set workloads ----------
+    # jnp fast path: fine (n, l, k) grid — padding waste multiplies runtime
+    for n in [1024, 2048, 4096, 8192, 16384]:
+        for l in [8, 16, 32, 64, 128, 256]:
+            out += _both_dtypes(kind="eval_multi", impl="jnp", n=n, d=128, l=l, k=16)
+    for n in [1024, 2048, 4096]:
+        for l in [16, 32, 64]:
+            out += _both_dtypes(kind="eval_multi", impl="jnp", n=n, d=128, l=l, k=32)
+        for l in [32, 64]:
+            out += _both_dtypes(kind="eval_multi", impl="jnp", n=n, d=128, l=l, k=64)
+    out += _both_dtypes(kind="eval_multi", impl="jnp", n=1024, d=3584, l=64, k=16)
+    # pallas reference buckets
+    for l, k, n, d in [(64, 16, 1024, 128), (256, 16, 4096, 128),
+                       (64, 64, 4096, 128), (64, 16, 1024, 3584)]:
+        out += _both_dtypes(kind="eval_multi", impl="pallas", n=n, d=d, l=l, k=k)
+    for v in out:
+        v.validate()
+    names = [v.name for v in out]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    return out
+
+
+def full_manifest():
+    """Extended buckets for the --full benchmark sweeps."""
+    out = default_manifest()
+    for n in [32768]:
+        out += _both_dtypes(kind="gains", impl="jnp", n=n, d=128, c=1024)
+        out += _both_dtypes(kind="update", impl="jnp", n=n, d=128)
+        for l in [64, 256]:
+            out += _both_dtypes(kind="eval_multi", impl="jnp", n=n, d=128, l=l, k=16)
+    out += _both_dtypes(kind="gains", impl="jnp", n=4096, d=3584, c=1024)
+    out += _both_dtypes(kind="update", impl="jnp", n=4096, d=3584)
+    out += _both_dtypes(kind="eval_multi", impl="jnp", n=4096, d=128, l=64, k=512)
+    for v in out:
+        v.validate()
+    return out

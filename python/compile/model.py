@@ -1,0 +1,148 @@
+"""L2: the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Three graph families, each calling the L1 Pallas kernels so that kernel
+and reduction lower into one HLO module (single executable per variant):
+
+* ``make_gains``      -- batched greedy marginal gains (kernel: gains.py)
+* ``make_update``     -- post-selection mindist update + new f value
+* ``make_eval_multi`` -- multi-set work-matrix evaluation (kernel:
+                         work_matrix.py)
+
+All module *inputs and outputs are f32*; for the reduced-precision
+("FP16") variants the graph casts V/C/S to bfloat16 before the kernel's
+MXU matmul and accumulates in f32. Keeping the interface f32 keeps the
+Rust Literal handling uniform; the transfer-bandwidth half of the paper's
+FP16 win is modeled analytically in rust/src/gpumodel (DESIGN.md §4).
+
+Every function returns a tuple (lowered with return_tuple=True) — the
+Rust side unwraps with ``to_tuple1``/``to_tuple``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gains as gains_kernel
+from .kernels import work_matrix as wm_kernel
+
+BIG = 1e30
+
+
+def _cast(x, dtype):
+    return x if dtype == "f32" else x.astype(jnp.bfloat16)
+
+
+def make_gains(dtype="f32", block_n=None, block_c=None):
+    """Graph: (v, vsq, vmask, mindist, c, cmask) -> (gains,).
+
+    gains[j] = Δf(c_j | S) in f32; masked candidates get -BIG.
+    """
+    kw = {}
+    if block_n is not None:
+        kw["block_n"] = block_n
+    if block_c is not None:
+        kw["block_c"] = block_c
+
+    def gains_fn(v, vsq, vmask, mindist, c, cmask):
+        vc = _cast(v, dtype)
+        cc_ = _cast(c, dtype)
+        csq = jnp.sum(c * c, axis=1)  # f32; candidates change per call
+        partials = gains_kernel.gains_partials(vc, vsq, vmask, mindist,
+                                               cc_, csq, **kw)
+        g = jnp.sum(partials, axis=0) / jnp.sum(vmask)
+        g = g * cmask - (1.0 - cmask) * BIG
+        return (g,)
+
+    return gains_fn
+
+
+def make_update(dtype="f32"):
+    """Graph: (v, vsq, vmask, mindist, s) -> (new_mindist, f_value).
+
+    Pure-jnp L2 (one matvec + elementwise min — no tiling win); the
+    mindist buffer is donated at lowering time (aot.py).
+    """
+
+    def update_fn(v, vsq, vmask, mindist, s):
+        vc = _cast(v, dtype)
+        sc = _cast(s, dtype)
+        cross = (vc @ sc).astype(jnp.float32)
+        d2 = jnp.maximum(vsq - 2.0 * cross + jnp.sum(s * s), 0.0)
+        nm = jnp.minimum(mindist, d2)
+        f = jnp.sum(vmask * (vsq - nm)) / jnp.sum(vmask)
+        return (nm, f)
+
+    return update_fn
+
+
+def make_gains_jnp(dtype="f32"):
+    """Pure-jnp variant of ``make_gains`` — the whole work matrix as one
+    XLA-fusable matmul + reductions (no Pallas grid).
+
+    Rationale (EXPERIMENTS.md §Perf): interpret-mode Pallas lowers the
+    grid to an XLA while-loop of dynamic-slices, which the CPU backend
+    executes with per-step dispatch overhead. The jnp formulation is the
+    *same math* (it IS the paper's work matrix) and is what a fused
+    device kernel achieves; on real TPU hardware the Pallas variant is
+    the one to compile. Both are shipped; the engine selects per config.
+    """
+
+    def gains_fn(v, vsq, vmask, mindist, c, cmask):
+        vc = _cast(v, dtype)
+        cc_ = _cast(c, dtype)
+        csq = jnp.sum(c * c, axis=1)
+        cross = jax.lax.dot_general(
+            vc, cc_, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (N, C)
+        d2 = jnp.maximum(vsq[:, None] + csq[None, :] - 2.0 * cross, 0.0)
+        red = jnp.maximum(mindist[:, None] - d2, 0.0) * vmask[:, None]
+        g = jnp.sum(red, axis=0) / jnp.sum(vmask)
+        return (g * cmask - (1.0 - cmask) * BIG,)
+
+    return gains_fn
+
+
+def make_eval_multi_jnp(num_sets, dtype="f32"):
+    """Pure-jnp variant of ``make_eval_multi`` (see make_gains_jnp)."""
+
+    def eval_multi_fn(v, vsq, vmask, s_flat, smask_flat):
+        vc = _cast(v, dtype)
+        sf = _cast(s_flat, dtype)
+        ssq = jnp.sum(s_flat * s_flat, axis=1)
+        cross = jax.lax.dot_general(
+            vc, sf, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (N, l*k)
+        d2 = jnp.maximum(vsq[:, None] + ssq[None, :] - 2.0 * cross, 0.0)
+        d2 = d2 + (1.0 - smask_flat)[None, :] * BIG
+        n = v.shape[0]
+        k = s_flat.shape[0] // num_sets
+        m = jnp.min(d2.reshape(n, num_sets, k), axis=2)
+        m = jnp.minimum(m, vsq[:, None])
+        contrib = vmask[:, None] * (vsq[:, None] - m)
+        f = jnp.sum(contrib, axis=0) / jnp.sum(vmask)
+        return (f,)
+
+    return eval_multi_fn
+
+
+def make_eval_multi(num_sets, dtype="f32", block_n=None, block_l=None):
+    """Graph: (v, vsq, vmask, s_flat, smask_flat) -> (f_values,).
+
+    f_values: (l,) f32 — EBC value of each packed set (paper Alg. 2 +
+    the W·1 reduce).
+    """
+    kw = {}
+    if block_n is not None:
+        kw["block_n"] = block_n
+    if block_l is not None:
+        kw["block_l"] = block_l
+
+    def eval_multi_fn(v, vsq, vmask, s_flat, smask_flat):
+        vc = _cast(v, dtype)
+        sf = _cast(s_flat, dtype)
+        ssq = jnp.sum(s_flat * s_flat, axis=1)
+        partials = wm_kernel.work_matrix_partials(
+            vc, vsq, vmask, sf, ssq, smask_flat, num_sets, **kw)
+        f = jnp.sum(partials, axis=0) / jnp.sum(vmask)
+        return (f,)
+
+    return eval_multi_fn

@@ -1,0 +1,161 @@
+"""L1 Pallas kernels vs the pure-jnp oracle: hypothesis sweeps over
+shapes, block sizes, masks and dtypes (the core correctness signal of the
+compile path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gains as gains_kernel
+from compile.kernels import ref
+from compile.kernels import work_matrix as wm_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def make_problem(rng, n, d, c):
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    vsq = (v * v).sum(1).astype(np.float32)
+    vmask = np.ones(n, np.float32)
+    pad = rng.integers(0, max(n // 4, 1))
+    if pad:
+        vmask[n - pad:] = 0.0
+    mindist = (vsq * rng.uniform(0.3, 1.0, size=n)).astype(np.float32)
+    cands = rng.normal(size=(c, d)).astype(np.float32)
+    cmask = np.ones(c, np.float32)
+    cpad = rng.integers(0, max(c // 4, 1))
+    if cpad:
+        cmask[c - cpad:] = 0.0
+    return v, vsq, vmask, mindist, cands, cmask
+
+
+@settings(**SETTINGS)
+@given(
+    st.sampled_from([32, 64, 96, 128]),   # n
+    st.sampled_from([4, 16, 100]),        # d
+    st.sampled_from([8, 16, 32]),         # c
+    st.sampled_from([16, 32]),            # block_n
+    st.sampled_from([8, 16]),             # block_c
+    st.integers(0, 2**31 - 1),
+)
+def test_gains_kernel_matches_ref(n, d, c, bn, bc, seed):
+    if n % bn or c % bc:
+        return
+    rng = np.random.default_rng(seed)
+    v, vsq, vmask, mindist, cands, cmask = make_problem(rng, n, d, c)
+    csq = (cands * cands).sum(1)
+    partials = gains_kernel.gains_partials(
+        jnp.array(v), jnp.array(vsq), jnp.array(vmask), jnp.array(mindist),
+        jnp.array(cands), jnp.array(csq), block_n=bn, block_c=bc)
+    got = np.asarray(partials).sum(0) / vmask.sum()
+    want = np.asarray(ref.ebc_gains_ref(
+        jnp.array(v), jnp.array(vsq), jnp.array(vmask), jnp.array(mindist),
+        jnp.array(cands), jnp.ones(c)))
+    # compare unmasked gains (ref applies cmask; kernel doesn't)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    st.sampled_from([32, 64, 128]),       # n
+    st.sampled_from([4, 16, 64]),         # d
+    st.sampled_from([4, 8, 16]),          # l
+    st.sampled_from([2, 4, 8]),           # k
+    st.integers(0, 2**31 - 1),
+)
+def test_work_matrix_kernel_matches_ref(n, d, l, k, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    vsq = (v * v).sum(1).astype(np.float32)
+    vmask = np.ones(n, np.float32)
+    s_flat = rng.normal(size=(l * k, d)).astype(np.float32)
+    smask = (rng.uniform(size=l * k) > 0.3).astype(np.float32)
+    ssq = (s_flat * s_flat).sum(1).astype(np.float32)
+    partials = wm_kernel.work_matrix_partials(
+        jnp.array(v), jnp.array(vsq), jnp.array(vmask),
+        jnp.array(s_flat), jnp.array(ssq), jnp.array(smask),
+        num_sets=l, block_n=32, block_l=min(4, l))
+    got = np.asarray(partials).sum(0) / vmask.sum()
+    want = np.asarray(ref.ebc_eval_multi_ref(
+        jnp.array(v), jnp.array(vsq), jnp.array(vmask),
+        jnp.array(s_flat), jnp.array(smask), l))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_gains_kernel_respects_vmask():
+    rng = np.random.default_rng(0)
+    n, d, c = 64, 10, 8
+    v, vsq, vmask, mindist, cands, _ = make_problem(rng, n, d, c)
+    vmask = np.ones(n, np.float32)
+    vmask[32:] = 0.0
+    csq = (cands * cands).sum(1)
+    # kernel on the full array with mask == ref on the sliced array
+    partials = gains_kernel.gains_partials(
+        jnp.array(v), jnp.array(vsq), jnp.array(vmask), jnp.array(mindist),
+        jnp.array(cands), jnp.array(csq), block_n=32, block_c=8)
+    got = np.asarray(partials).sum(0) / 32.0
+    want = np.asarray(ref.ebc_gains_ref(
+        jnp.array(v[:32]), jnp.array(vsq[:32]), jnp.ones(32),
+        jnp.array(mindist[:32]), jnp.array(cands), jnp.ones(c)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_work_matrix_empty_set_value_zero():
+    rng = np.random.default_rng(1)
+    n, d, l, k = 32, 6, 4, 3
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    vsq = (v * v).sum(1).astype(np.float32)
+    s_flat = rng.normal(size=(l * k, d)).astype(np.float32)
+    smask = np.zeros(l * k, np.float32)  # all slots empty
+    ssq = (s_flat * s_flat).sum(1).astype(np.float32)
+    partials = wm_kernel.work_matrix_partials(
+        jnp.array(v), jnp.array(vsq), jnp.ones(n),
+        jnp.array(s_flat), jnp.array(ssq), jnp.array(smask),
+        num_sets=l, block_n=32, block_l=4)
+    got = np.asarray(partials).sum(0) / n
+    np.testing.assert_allclose(got, np.zeros(l), atol=1e-5)
+
+
+def test_bf16_model_close_to_f32():
+    rng = np.random.default_rng(2)
+    n, d, c = 128, 100, 16
+    v, vsq, vmask, mindist, cands, cmask = make_problem(rng, n, d, c)
+    args = (jnp.array(v), jnp.array(vsq), jnp.array(vmask),
+            jnp.array(mindist), jnp.array(cands), jnp.array(cmask))
+    g32 = np.asarray(model.make_gains("f32")(*args)[0])
+    g16 = np.asarray(model.make_gains("bf16")(*args)[0])
+    real = cmask > 0
+    np.testing.assert_allclose(g16[real], g32[real], rtol=3e-2, atol=3e-2)
+
+
+def test_jnp_variants_match_pallas_variants():
+    """The two shipped kernel impls (DESIGN.md §Perf) are numerically
+    interchangeable."""
+    rng = np.random.default_rng(5)
+    n, d, c = 128, 100, 16
+    v, vsq, vmask, mindist, cands, cmask = make_problem(rng, n, d, c)
+    args = (jnp.array(v), jnp.array(vsq), jnp.array(vmask),
+            jnp.array(mindist), jnp.array(cands), jnp.array(cmask))
+    g_pallas = np.asarray(model.make_gains("f32", block_n=64, block_c=16)(*args)[0])
+    g_jnp = np.asarray(model.make_gains_jnp("f32")(*args)[0])
+    real = cmask > 0
+    np.testing.assert_allclose(g_pallas[real], g_jnp[real], rtol=1e-5, atol=1e-5)
+
+    l, k = 8, 4
+    s_flat = rng.normal(size=(l * k, d)).astype(np.float32)
+    smask = (rng.uniform(size=l * k) > 0.2).astype(np.float32)
+    eargs = (jnp.array(v), jnp.array(vsq), jnp.array(vmask),
+             jnp.array(s_flat), jnp.array(smask))
+    e_pallas = np.asarray(model.make_eval_multi(l, "f32", block_n=64, block_l=4)(*eargs)[0])
+    e_jnp = np.asarray(model.make_eval_multi_jnp(l, "f32")(*eargs)[0])
+    np.testing.assert_allclose(e_pallas, e_jnp, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_estimates_positive():
+    assert gains_kernel.vmem_bytes(256, 128, 128, 4) > 0
+    assert wm_kernel.vmem_bytes(256, 8, 16, 128, 2) > 0
+    assert gains_kernel.mxu_flops(1024, 256, 128) == 2.0 * 1024 * 256 * 128

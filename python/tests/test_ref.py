@@ -1,0 +1,130 @@
+"""Correctness of the pure-jnp oracle itself against numpy brute force
+and against the mathematical structure of EBC (monotone submodular)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def brute_sqdist(a, b):
+    n, m = a.shape[0], b.shape[0]
+    out = np.zeros((n, m), np.float32)
+    for i in range(n):
+        for j in range(m):
+            diff = a[i] - b[j]
+            out[i, j] = float(np.dot(diff, diff))
+    return out
+
+
+def brute_ebc_value(v, s):
+    """f(S) = L({e0}) - L(S ∪ {e0}), e0 = 0, straight from Def. 5."""
+    n = v.shape[0]
+    l_e0 = sum(float(np.dot(v[i], v[i])) for i in range(n)) / n
+    acc = 0.0
+    for i in range(n):
+        best = float(np.dot(v[i], v[i]))  # distance to e0
+        for srow in s:
+            d = v[i] - srow
+            best = min(best, float(np.dot(d, d)))
+        acc += best
+    return l_e0 - acc / n
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def test_pairwise_sqdist_matches_brute(rng):
+    a = rng.normal(size=(17, 9)).astype(np.float32)
+    b = rng.normal(size=(11, 9)).astype(np.float32)
+    got = np.asarray(ref.pairwise_sqdist(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, brute_sqdist(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_ebc_value_matches_def5(rng):
+    v = rng.normal(size=(25, 6)).astype(np.float32)
+    idx = [3, 11, 19]
+    s = v[idx]
+    smask = np.ones(len(idx), np.float32)
+    vmask = np.ones(25, np.float32)
+    got = float(ref.ebc_value_ref(jnp.array(v), jnp.array(vmask),
+                                  jnp.array(s), jnp.array(smask)))
+    want = brute_ebc_value(v, s)
+    assert abs(got - want) < 1e-4
+
+
+def test_ebc_value_empty_set_is_zero(rng):
+    v = rng.normal(size=(10, 4)).astype(np.float32)
+    s = np.zeros((2, 4), np.float32)
+    got = float(ref.ebc_value_ref(jnp.array(v), jnp.ones(10),
+                                  jnp.array(s), jnp.zeros(2)))
+    # masked-out set == empty set == f value 0... except e0 IS the zero
+    # vector, so masked slots (+BIG) never win and f = 0
+    assert abs(got) < 1e-5
+
+
+def test_gains_equal_value_differences(rng):
+    v = rng.normal(size=(30, 5)).astype(np.float32)
+    vsq = (v * v).sum(1)
+    vmask = np.ones(30, np.float32)
+    base_idx = [4, 22]
+    base = v[base_idx]
+    d2 = brute_sqdist(v, base)
+    mindist = np.minimum(d2.min(1), vsq)
+    cands = v[[0, 9, 29]]
+    g = np.asarray(ref.ebc_gains_ref(jnp.array(v), jnp.array(vsq),
+                                     jnp.array(vmask), jnp.array(mindist),
+                                     jnp.array(cands), jnp.ones(3)))
+    f_base = brute_ebc_value(v, base)
+    for ci, c in enumerate([0, 9, 29]):
+        f_ext = brute_ebc_value(v, v[base_idx + [c]])
+        assert abs(g[ci] - (f_ext - f_base)) < 1e-4
+
+
+def test_monotone_and_submodular_sampled(rng):
+    v = rng.normal(size=(15, 4)).astype(np.float32)
+    vmask = np.ones(15, np.float32)
+
+    def f(idx):
+        if not idx:
+            return 0.0
+        s = v[list(idx)]
+        return float(ref.ebc_value_ref(jnp.array(v), jnp.array(vmask),
+                                       jnp.array(s), jnp.ones(len(idx))))
+
+    for _ in range(10):
+        a = set(rng.choice(15, size=2, replace=False).tolist())
+        b = a | set(rng.choice(15, size=4, replace=False).tolist())
+        e = int(rng.integers(15))
+        if e in b:
+            continue
+        # monotone
+        assert f(sorted(b)) >= f(sorted(a)) - 1e-5
+        # submodular: gain at A >= gain at B
+        ga = f(sorted(a | {e})) - f(sorted(a))
+        gb = f(sorted(b | {e})) - f(sorted(b))
+        assert ga >= gb - 1e-4
+
+
+def test_update_consistent_with_eval_multi(rng):
+    v = rng.normal(size=(20, 6)).astype(np.float32)
+    vsq = (v * v).sum(1)
+    vmask = np.ones(20, np.float32)
+    mindist = vsq.copy()
+    chosen = [2, 17]
+    f_last = 0.0
+    for c in chosen:
+        mindist, f_last = ref.ebc_update_ref(
+            jnp.array(v), jnp.array(vsq), jnp.array(vmask),
+            jnp.array(mindist), jnp.array(v[c]))
+        mindist = np.asarray(mindist)
+    fs = ref.ebc_eval_multi_ref(
+        jnp.array(v), jnp.array(vsq), jnp.array(vmask),
+        jnp.array(v[chosen]), jnp.ones(2), 1)
+    assert abs(float(f_last) - float(fs[0])) < 1e-5

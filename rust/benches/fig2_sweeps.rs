@@ -1,0 +1,148 @@
+//! Paper Fig. 2: wall-clock runtime of multi-set EBC evaluation as a
+//! function of N (ground size), l (number of sets), and k (set size),
+//! for the ST CPU baseline (Alg. 1), the MT CPU baseline (§4.1) and the
+//! batched accelerator engine (f32 + bf16).
+//!
+//! The sweep is scaled to this testbed (DESIGN.md §4); set
+//! `EBC_BENCH_FULL=1` for larger sizes. Emits `bench_results/fig2_sweeps.csv`.
+
+use ebc::bench::report::{fmt_secs, Reporter};
+use ebc::bench::workload::{fig2_workload, Fig2Sweep};
+use ebc::bench::{full_mode, measure, Settings};
+use ebc::engine::{DeviceDataset, Engine, EngineConfig, Precision};
+use ebc::runtime::Runtime;
+use ebc::submodular::EbcFunction;
+use ebc::util::threadpool::default_threads;
+use std::time::Duration;
+
+fn settings() -> Settings {
+    Settings {
+        warmup: 1,
+        min_iters: if full_mode() { 5 } else { 2 },
+        min_time: Duration::from_millis(if full_mode() { 500 } else { 50 }),
+        max_iters: 50,
+    }
+}
+
+struct Row {
+    axis: &'static str,
+    value: usize,
+    st: f64,
+    mt: f64,
+    xla_f32: f64,
+    xla_bf16: f64,
+}
+
+fn run_point(
+    eng32: &Engine,
+    eng16: &Engine,
+    axis: &'static str,
+    n: usize,
+    l: usize,
+    k: usize,
+    d: usize,
+    value: usize,
+) -> Row {
+    let problem = fig2_workload(n, l, k, d, 0xF16 + value as u64);
+    let refs = problem.set_refs();
+    let f = EbcFunction::new(problem.ground.clone());
+    let threads = default_threads();
+    let s = settings();
+
+    let st = measure(&s, || {
+        std::hint::black_box(f.eval_sets_st(&refs));
+    });
+    let mt = measure(&s, || {
+        std::hint::black_box(f.eval_sets_mt(&refs, threads));
+    });
+    let mut ds32 = DeviceDataset::new(problem.ground.clone());
+    let xla_f32 = measure(&s, || {
+        std::hint::black_box(eng32.eval_sets(&mut ds32, &refs).unwrap());
+    });
+    let mut ds16 = DeviceDataset::new(problem.ground.clone());
+    let xla_bf16 = measure(&s, || {
+        std::hint::black_box(eng16.eval_sets(&mut ds16, &refs).unwrap());
+    });
+    Row {
+        axis,
+        value,
+        st: st.mean,
+        mt: mt.mean,
+        xla_f32: xla_f32.mean,
+        xla_bf16: xla_bf16.mean,
+    }
+}
+
+fn main() {
+    let rt = Runtime::discover().expect("run `make artifacts` first");
+    let eng32 = Engine::new(rt.clone(), EngineConfig { precision: Precision::F32, cpu_fallback: false, ..Default::default() });
+    let eng16 = Engine::new(rt, EngineConfig { precision: Precision::Bf16, cpu_fallback: false, ..Default::default() });
+    let sweep = Fig2Sweep::scaled(!full_mode());
+
+    let mut rows: Vec<Row> = Vec::new();
+    println!(
+        "fig2: base point N={} l={} k={} d={}",
+        sweep.base_n, sweep.base_l, sweep.base_k, sweep.d
+    );
+    for &n in &sweep.n_values {
+        rows.push(run_point(&eng32, &eng16, "N", n, sweep.base_l, sweep.base_k, sweep.d, n));
+        eprintln!("  N={n} done");
+    }
+    for &l in &sweep.l_values {
+        rows.push(run_point(&eng32, &eng16, "l", sweep.base_n, l, sweep.base_k, sweep.d, l));
+        eprintln!("  l={l} done");
+    }
+    for &k in &sweep.k_values {
+        rows.push(run_point(&eng32, &eng16, "k", sweep.base_n, sweep.base_l, k, sweep.d, k));
+        eprintln!("  k={k} done");
+    }
+
+    let mut rep = Reporter::new(
+        "Fig. 2 — runtime vs N / l / k (seconds, mean)",
+        &["axis", "value", "cpu_st", "cpu_mt", "xla_f32", "xla_bf16", "xla32/st", "xla32/mt"],
+    );
+    for r in &rows {
+        rep.row(&[
+            r.axis.to_string(),
+            r.value.to_string(),
+            fmt_secs(r.st),
+            fmt_secs(r.mt),
+            fmt_secs(r.xla_f32),
+            fmt_secs(r.xla_bf16),
+            format!("{:.2}x", r.st / r.xla_f32),
+            format!("{:.2}x", r.mt / r.xla_f32),
+        ]);
+    }
+    rep.print();
+    // CSV for plotting
+    let mut csv = Reporter::new(
+        "fig2 raw",
+        &["axis", "value", "cpu_st_s", "cpu_mt_s", "xla_f32_s", "xla_bf16_s"],
+    );
+    for r in &rows {
+        csv.row(&[
+            r.axis.to_string(),
+            r.value.to_string(),
+            format!("{:.6}", r.st),
+            format!("{:.6}", r.mt),
+            format!("{:.6}", r.xla_f32),
+            format!("{:.6}", r.xla_bf16),
+        ]);
+    }
+    let path = csv.save_csv("fig2_sweeps").expect("save csv");
+    println!("\nwrote {}", path.display());
+
+    // the paper's qualitative shape: runtime grows monotonically with
+    // each axis for every implementation
+    for axis in ["N", "l", "k"] {
+        let series: Vec<&Row> = rows.iter().filter(|r| r.axis == axis).collect();
+        for w in series.windows(2) {
+            if w[1].st < w[0].st * 0.7 {
+                eprintln!(
+                    "WARNING: ST runtime not monotone on {axis}: {} -> {}",
+                    w[0].st, w[1].st
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Paper Fig. 4: the five representatives of the plate/regrind campaign,
+//! exported as melt-pressure curves + an ASCII rendition, demonstrating
+//! the two viscosity effects (peak injection pressure shift,
+//! plasticization-time shift). Emits `bench_results/fig4_regrind_plate.csv`.
+
+use ebc::bench::quick_mode;
+use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::imm::casestudy::{fig4_table, summarize_case};
+use ebc::imm::simulator::{CycleParams, MeltPressureModel};
+use ebc::imm::{generate_dataset_with, Part, ProcessState, CYCLE_SAMPLES};
+use ebc::linalg::Matrix;
+use ebc::optim::Greedy;
+use ebc::runtime::Runtime;
+use ebc::submodular::Oracle;
+
+fn ascii_plot(curves: &[(String, Vec<f32>)], width: usize, height: usize) {
+    let maxv = curves
+        .iter()
+        .flat_map(|(_, c)| c.iter())
+        .cloned()
+        .fold(f32::MIN, f32::max);
+    let symbols = ['0', '1', '2', '3', '4'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (ci, (_, curve)) in curves.iter().enumerate() {
+        for x in 0..width {
+            let idx = x * curve.len() / width;
+            let v = curve[idx].max(0.0);
+            let y = ((v / maxv) * (height - 1) as f32).round() as usize;
+            let row = height - 1 - y.min(height - 1);
+            grid[row][x] = symbols[ci % symbols.len()];
+        }
+    }
+    println!("melt pressure [0..{maxv:.0} bar] over the cycle window:");
+    for row in grid {
+        println!("|{}|", row.into_iter().collect::<String>());
+    }
+    for (ci, (name, _)) in curves.iter().enumerate() {
+        println!("  {} = {name}", symbols[ci % symbols.len()]);
+    }
+}
+
+fn main() {
+    let samples = if quick_mode() { 512 } else { CYCLE_SAMPLES };
+    let rt = Runtime::discover().expect("run `make artifacts` first");
+    let engine = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
+    let factory = move |m: Matrix| -> Box<dyn Oracle> {
+        Box::new(XlaOracle::new(engine.clone(), m))
+    };
+
+    let ds = generate_dataset_with(Part::Plate, ProcessState::Regrind, 20260711, samples);
+    let res = summarize_case(ds, &Greedy { batch: 256 }, &factory, 5);
+    println!(
+        "plate/regrind representatives (cycle -> section): {:?}",
+        res.reps
+            .iter()
+            .map(|&i| (i, res.dataset.section[i]))
+            .collect::<Vec<_>>()
+    );
+
+    // the two Fig. 4 effects, quantified per representative
+    let mut model = MeltPressureModel::new(Part::Plate.spec());
+    model.samples = samples;
+    let params = CycleParams::default();
+    println!("\n{:<8} {:>8} {:>12} {:>16}", "cycle", "regrind", "peak [bar]", "plast [samples]");
+    let mut by_sec: Vec<&usize> = res.reps.iter().collect();
+    by_sec.sort_by_key(|&&i| res.dataset.section[i]);
+    let mut curves = Vec::new();
+    for &&rep in &by_sec {
+        let curve = res.dataset.cycles.row(rep);
+        let sec = res.dataset.section[rep];
+        println!(
+            "{:<8} {:>7}% {:>12.1} {:>16}",
+            rep,
+            sec * 25,
+            MeltPressureModel::peak_of(curve),
+            model.plast_samples_of(curve, &params)
+        );
+        curves.push((format!("cycle {rep} ({}% regrind)", sec * 25), curve.to_vec()));
+    }
+    println!();
+    ascii_plot(&curves, 100, 18);
+
+    let t = fig4_table(&res);
+    let dir = std::env::var("EBC_BENCH_OUT").unwrap_or_else(|_| "bench_results".into());
+    let path = std::path::Path::new(&dir).join("fig4_regrind_plate.csv");
+    t.save(&path).expect("save");
+    println!("\nwrote {} ({} samples x {} curves)", path.display(), samples, res.reps.len());
+}

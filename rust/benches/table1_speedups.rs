@@ -1,0 +1,187 @@
+//! Paper Table 1: min/mean/max speedups across the N / l / k sweep
+//! variations, in two halves:
+//!
+//! 1. **Measured on this testbed**: the batched engine (f32 + bf16)
+//!    against the ST and MT CPU baselines, over the same sweep as the
+//!    fig2 bench.
+//! 2. **Modeled for the paper's devices** (Quadro RTX 5000 vs Xeon
+//!    W-2155, Jetson TX2 vs Cortex-A72) via the calibrated roofline
+//!    model, over the paper's actual sweep values — regenerating the
+//!    shape of the published table.
+//!
+//! Emits `bench_results/table1_{measured,modeled}.csv`.
+
+use ebc::bench::report::Reporter;
+use ebc::bench::workload::{fig2_workload, Fig2Sweep};
+use ebc::bench::{full_mode, measure, Settings};
+use ebc::engine::{DeviceDataset, Engine, EngineConfig, Precision};
+use ebc::gpumodel::{
+    a72_mt, speedup, xeon_mt, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
+};
+use ebc::runtime::Runtime;
+use ebc::submodular::EbcFunction;
+use ebc::util::stats::MinMeanMax;
+use ebc::util::threadpool::default_threads;
+use std::time::Duration;
+
+fn settings() -> Settings {
+    Settings {
+        warmup: 1,
+        min_iters: 2,
+        min_time: Duration::from_millis(50),
+        max_iters: 20,
+    }
+}
+
+fn fmt_mmm(m: &MinMeanMax) -> Vec<String> {
+    vec![
+        format!("{:.1}x", m.min),
+        format!("{:.1}x", m.mean),
+        format!("{:.1}x", m.max),
+    ]
+}
+
+fn main() {
+    // ---------------- measured half -------------------------------------
+    let rt = Runtime::discover().expect("run `make artifacts` first");
+    let eng32 = Engine::new(rt.clone(), EngineConfig { precision: Precision::F32, cpu_fallback: false, ..Default::default() });
+    let eng16 = Engine::new(rt, EngineConfig { precision: Precision::Bf16, cpu_fallback: false, ..Default::default() });
+    let sweep = Fig2Sweep::scaled(!full_mode());
+    let threads = default_threads();
+    let s = settings();
+
+    // per-axis collections of speedups
+    let mut sp: std::collections::BTreeMap<(&str, &str), Vec<f64>> = Default::default();
+    let mut points: Vec<(&str, usize, usize, usize)> = Vec::new();
+    for &n in &sweep.n_values {
+        points.push(("N", n, sweep.base_l, sweep.base_k));
+    }
+    for &l in &sweep.l_values {
+        points.push(("l", sweep.base_n, l, sweep.base_k));
+    }
+    for &k in &sweep.k_values {
+        points.push(("k", sweep.base_n, sweep.base_l, k));
+    }
+
+    for (axis, n, l, k) in &points {
+        let problem = fig2_workload(*n, *l, *k, sweep.d, 0x7AB1);
+        let refs = problem.set_refs();
+        let f = EbcFunction::new(problem.ground.clone());
+        let st = measure(&s, || {
+            std::hint::black_box(f.eval_sets_st(&refs));
+        })
+        .mean;
+        let mt = measure(&s, || {
+            std::hint::black_box(f.eval_sets_mt(&refs, threads));
+        })
+        .mean;
+        let mut ds = DeviceDataset::new(problem.ground.clone());
+        let x32 = measure(&s, || {
+            std::hint::black_box(eng32.eval_sets(&mut ds, &refs).unwrap());
+        })
+        .mean;
+        let mut ds2 = DeviceDataset::new(problem.ground.clone());
+        let x16 = measure(&s, || {
+            std::hint::black_box(eng16.eval_sets(&mut ds2, &refs).unwrap());
+        })
+        .mean;
+        sp.entry((axis, "f32_st")).or_default().push(st / x32);
+        sp.entry((axis, "f32_mt")).or_default().push(mt / x32);
+        sp.entry((axis, "bf16_st")).or_default().push(st / x16);
+        sp.entry((axis, "bf16_mt")).or_default().push(mt / x16);
+        eprintln!("  {axis}: N={n} l={l} k={k} done");
+    }
+
+    let mut rep = Reporter::new(
+        "Table 1 (measured, this testbed) — engine speedup over CPU baselines",
+        &["axis", "variant", "min", "mean", "max"],
+    );
+    let mut csv = Reporter::new("t1m", &["axis", "variant", "min", "mean", "max"]);
+    for ((axis, variant), vals) in &sp {
+        let m = MinMeanMax::of(vals);
+        let mut row = vec![axis.to_string(), variant.to_string()];
+        row.extend(fmt_mmm(&m));
+        rep.row(&row);
+        csv.row(&[
+            axis.to_string(),
+            variant.to_string(),
+            format!("{:.3}", m.min),
+            format!("{:.3}", m.mean),
+            format!("{:.3}", m.max),
+        ]);
+    }
+    rep.print();
+    csv.save_csv("table1_measured").expect("save");
+
+    // ---------------- modeled half (paper devices, paper sweep) ---------
+    // the paper's actual sweep values (§5.1)
+    let paper_n: Vec<usize> = vec![1000, 29500, 100_000, 200_000, 400_000];
+    let paper_l: Vec<usize> = vec![1000, 3785, 10_000, 18_000, 26_070];
+    let paper_k: Vec<usize> = vec![10, 45, 150, 290, 430];
+    let base = (50_000usize, 5_000usize, 10usize);
+    let mut model_points: Vec<(&str, EbcWorkload)> = Vec::new();
+    for &n in &paper_n {
+        model_points.push(("N", EbcWorkload { n, l: base.1, k: base.2, d: 100 }));
+    }
+    for &l in &paper_l {
+        model_points.push(("l", EbcWorkload { n: base.0, l, k: base.2, d: 100 }));
+    }
+    for &k in &paper_k {
+        model_points.push(("k", EbcWorkload { n: base.0, l: base.1, k, d: 100 }));
+    }
+
+    let xeon_mt = xeon_mt();
+    let a72_mt = a72_mt();
+    let pairs: Vec<(&str, _, _, _)> = vec![
+        ("Quadro fp32 vs Xeon ST", &QUADRO_RTX_5000, ModelPrecision::Fp32, &XEON_W2155),
+        ("Quadro fp32 vs Xeon MT", &QUADRO_RTX_5000, ModelPrecision::Fp32, &xeon_mt),
+        ("Quadro fp16 vs Xeon ST", &QUADRO_RTX_5000, ModelPrecision::Fp16, &XEON_W2155),
+        ("Quadro fp16 vs Xeon MT", &QUADRO_RTX_5000, ModelPrecision::Fp16, &xeon_mt),
+        ("TX2 fp32 vs A72 ST", &TX2, ModelPrecision::Fp32, &A72),
+        ("TX2 fp32 vs A72 MT", &TX2, ModelPrecision::Fp32, &a72_mt),
+        ("TX2 fp16 vs A72 ST", &TX2, ModelPrecision::Fp16, &A72),
+        ("TX2 fp16 vs A72 MT", &TX2, ModelPrecision::Fp16, &a72_mt),
+    ];
+    // paper Table 1 reference bands for the shape check (min..max over all axes)
+    let paper_bands: &[(&str, f64, f64)] = &[
+        ("Quadro fp32 vs Xeon ST", 34.0, 72.0),
+        ("Quadro fp32 vs Xeon MT", 3.3, 5.1),
+        ("Quadro fp16 vs Xeon ST", 8.5, 438.2),
+        ("Quadro fp16 vs Xeon MT", 0.8, 30.8),
+        ("TX2 fp32 vs A72 ST", 4.3, 6.0),
+        ("TX2 fp32 vs A72 MT", 1.5, 2.7),
+        ("TX2 fp16 vs A72 ST", 5.1, 35.5),
+        ("TX2 fp16 vs A72 MT", 1.3, 15.8),
+    ];
+
+    let mut rep2 = Reporter::new(
+        "Table 1 (modeled, paper devices + paper sweep) — roofline predictions",
+        &["pair", "min", "mean", "max", "paper_band"],
+    );
+    let mut csv2 = Reporter::new("t1p", &["pair", "min", "mean", "max"]);
+    for (name, fast, pf, slow) in &pairs {
+        let vals: Vec<f64> = model_points
+            .iter()
+            .map(|(_, w)| speedup(fast, *pf, slow, ModelPrecision::Fp32, w))
+            .collect();
+        let m = MinMeanMax::of(&vals);
+        let band = paper_bands
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, lo, hi)| format!("{lo}-{hi}x"))
+            .unwrap_or_default();
+        let mut row = vec![name.to_string()];
+        row.extend(fmt_mmm(&m));
+        row.push(band);
+        rep2.row(&row);
+        csv2.row(&[
+            name.to_string(),
+            format!("{:.2}", m.min),
+            format!("{:.2}", m.mean),
+            format!("{:.2}", m.max),
+        ]);
+    }
+    rep2.print();
+    let p = csv2.save_csv("table1_modeled").expect("save");
+    println!("\nwrote {}", p.display());
+}

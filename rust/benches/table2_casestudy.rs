@@ -1,0 +1,76 @@
+//! Paper Table 2: the top-5 representatives for all ten injection-
+//! molding campaigns (2 parts x 5 process states) at full fidelity
+//! (d = 3524 unless EBC_BENCH_QUICK=1), through the accelerated engine.
+//! Also validates the paper's process-knowledge expectations and prints
+//! per-campaign summarization latency (the §6 "reasonable time frame"
+//! claim). Emits `bench_results/table2.csv`.
+
+use ebc::bench::quick_mode;
+use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::imm::casestudy::{run_table2, table2_text, validate_expectations};
+use ebc::imm::CYCLE_SAMPLES;
+use ebc::linalg::Matrix;
+use ebc::optim::Greedy;
+use ebc::runtime::Runtime;
+use ebc::submodular::Oracle;
+use ebc::bench::report::Reporter;
+
+fn main() {
+    let samples = if quick_mode() { 512 } else { CYCLE_SAMPLES };
+    let rt = Runtime::discover().expect("run `make artifacts` first");
+    let engine = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
+    let factory = move |m: Matrix| -> Box<dyn Oracle> {
+        Box::new(XlaOracle::new(engine.clone(), m))
+    };
+
+    eprintln!("generating + summarizing 10 campaigns at d={samples} ...");
+    let results = run_table2(&Greedy { batch: 256 }, &factory, 5, samples, 20260711);
+    println!("{}", table2_text(&results, 5));
+
+    let mut csv = Reporter::new(
+        "table2",
+        &["part", "state", "rep1", "rep2", "rep3", "rep4", "rep5", "f_value", "wall_s", "ok"],
+    );
+    let mut failures = 0;
+    for r in &results {
+        let ok = match validate_expectations(r) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("EXPECTATION FAIL {}/{}: {e}", r.part.name(), r.state.name());
+                failures += 1;
+                false
+            }
+        };
+        let rep = |i: usize| r.reps.get(i).map(|x| x.to_string()).unwrap_or_default();
+        csv.row(&[
+            r.part.name().to_string(),
+            r.state.name().to_string(),
+            rep(0),
+            rep(1),
+            rep(2),
+            rep(3),
+            rep(4),
+            format!("{:.2}", r.f_value),
+            format!("{:.3}", r.wall_seconds),
+            ok.to_string(),
+        ]);
+        println!(
+            "  {:>6}/{:<16} wall {:>7.2}s  f={:.1}  reps {:?}",
+            r.part.name(),
+            r.state.name(),
+            r.wall_seconds,
+            r.f_value,
+            r.reps
+        );
+    }
+    let p = csv.save_csv("table2").expect("save");
+    println!("\nwrote {}", p.display());
+    let total: f64 = results.iter().map(|r| r.wall_seconds).sum();
+    println!(
+        "total summarization time for the whole study: {total:.1}s \
+         ({failures} expectation failures)"
+    );
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Benchmark harness (criterion is unavailable offline — DESIGN.md §4).
+//!
+//! Provides timed measurement with warmup, a row-oriented reporter that
+//! prints paper-style tables and saves CSV next to `bench_output.txt`,
+//! and the workload generators for the paper's experiments.
+
+pub mod report;
+pub mod workload;
+
+pub use report::Reporter;
+pub use workload::{fig2_workload, EvalProblem};
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Measurement settings (overridable via env for quick runs:
+/// `EBC_BENCH_ITERS`, `EBC_BENCH_MIN_MS`).
+#[derive(Debug, Clone, Copy)]
+pub struct Settings {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub min_time: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        let iters = std::env::var("EBC_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5);
+        let min_ms = std::env::var("EBC_BENCH_MIN_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(200u64);
+        Settings {
+            warmup: 1,
+            min_iters: iters,
+            min_time: Duration::from_millis(min_ms),
+            max_iters: 1000,
+        }
+    }
+}
+
+/// Time a closure under the settings; returns per-iteration summaries.
+pub fn measure(settings: &Settings, mut f: impl FnMut()) -> Summary {
+    for _ in 0..settings.warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < settings.min_iters
+        || (start.elapsed() < settings.min_time && samples.len() < settings.max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Quick-mode check: set `EBC_BENCH_QUICK=1` to shrink sweeps (used by
+/// `cargo bench` in CI-sized environments).
+pub fn quick_mode() -> bool {
+    std::env::var("EBC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Full-mode check: `EBC_BENCH_FULL=1` runs the paper-scale sweeps
+/// (default is the scaled sweep of DESIGN.md §4 — this container has a
+/// single CPU core).
+pub fn full_mode() -> bool {
+    std::env::var("EBC_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_summary() {
+        let s = Settings {
+            warmup: 1,
+            min_iters: 3,
+            min_time: Duration::from_millis(1),
+            max_iters: 10,
+        };
+        let sum = measure(&s, || std::thread::sleep(Duration::from_micros(100)));
+        assert!(sum.n >= 3);
+        assert!(sum.mean >= 50e-6);
+    }
+}

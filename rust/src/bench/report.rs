@@ -1,0 +1,106 @@
+//! Bench reporter: aligned console tables (the paper's figure/table
+//! shapes) + CSV export under `bench_results/`.
+
+use crate::util::csv::Table;
+
+/// Collects rows for one experiment and renders them.
+pub struct Reporter {
+    title: String,
+    table: Table,
+    widths: Vec<usize>,
+}
+
+impl Reporter {
+    pub fn new(title: &str, columns: &[&str]) -> Reporter {
+        let widths = columns.iter().map(|c| c.len().max(10)).collect();
+        Reporter { title: title.to_string(), table: Table::new(columns), widths }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        for (i, c) in cells.iter().enumerate() {
+            if i < self.widths.len() {
+                self.widths[i] = self.widths[i].max(c.len());
+            }
+        }
+        self.table.push(cells.to_vec());
+    }
+
+    /// Render the aligned table to stdout.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let hdr: Vec<String> = self
+            .table
+            .header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>w$}", h, w = self.widths[i]))
+            .collect();
+        println!("{}", hdr.join("  "));
+        println!("{}", "-".repeat(hdr.join("  ").len()));
+        for r in &self.table.rows {
+            let cells: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = self.widths[i]))
+                .collect();
+            println!("{}", cells.join("  "));
+        }
+    }
+
+    /// Save under `bench_results/<slug>.csv` (relative to repo root).
+    pub fn save_csv(&self, slug: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("EBC_BENCH_OUT").unwrap_or_else(|_| "bench_results".into());
+        let path = std::path::Path::new(&dir).join(format!("{slug}.csv"));
+        self.table.save(&path)?;
+        Ok(path)
+    }
+
+    pub fn table(&self) -> &Table {
+        &self.table
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Format a speedup factor.
+pub fn fmt_x(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else {
+        format!("{x:.1}x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reporter_rows_and_csv() {
+        let mut r = Reporter::new("t", &["a", "b"]);
+        r.row(&["1".into(), "2".into()]);
+        r.row(&["333333333333".into(), "4".into()]);
+        assert_eq!(r.table().rows.len(), 2);
+        r.print(); // visual smoke
+        let csv = r.table().to_csv();
+        assert!(csv.starts_with("a,b\n"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(5e-6), "5.0µs");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_x(3.14), "3.1x");
+        assert_eq!(fmt_x(452.0), "452x");
+    }
+}

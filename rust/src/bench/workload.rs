@@ -1,0 +1,101 @@
+//! Workload generators for the paper's experiments.
+//!
+//! Fig. 2 / Table 1 problems: a random Gaussian ground set of N vectors
+//! (d=100) and l evaluation sets of k vectors each, drawn uniformly from
+//! the ground set — "Every problem is randomly generated" (§5); data
+//! generation is excluded from the measured runtime, as in the paper.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// One multi-set evaluation problem instance.
+pub struct EvalProblem {
+    pub ground: Matrix,
+    pub sets: Vec<Vec<usize>>,
+}
+
+impl EvalProblem {
+    pub fn set_refs(&self) -> Vec<&[usize]> {
+        self.sets.iter().map(|s| s.as_slice()).collect()
+    }
+}
+
+/// Generate the paper's Fig. 2 workload: N ground vectors of dim `d`,
+/// `l` sets of `k` member indices.
+pub fn fig2_workload(n: usize, l: usize, k: usize, d: usize, seed: u64) -> EvalProblem {
+    let mut rng = Rng::new(seed);
+    let ground = Matrix::random_normal(n, d, &mut rng);
+    let sets = (0..l)
+        .map(|_| rng.sample_indices(n, k.min(n)))
+        .collect();
+    EvalProblem { ground, sets }
+}
+
+/// The paper's sweep values, scaled to this testbed. The paper used
+/// N ∈ {1000, ..., 400000}, l ∈ {1000, ..., 26070}, k ∈ {10, ..., 430}
+/// around the base point (N=50000, l=5000, k=10, d=100); we keep the
+/// base-point proportions but cap sizes (DESIGN.md §4, substitution 6).
+pub struct Fig2Sweep {
+    pub base_n: usize,
+    pub base_l: usize,
+    pub base_k: usize,
+    pub d: usize,
+    pub n_values: Vec<usize>,
+    pub l_values: Vec<usize>,
+    pub k_values: Vec<usize>,
+}
+
+impl Fig2Sweep {
+    pub fn scaled(quick: bool) -> Fig2Sweep {
+        if quick {
+            Fig2Sweep {
+                base_n: 2000,
+                base_l: 32,
+                base_k: 10,
+                d: 100,
+                n_values: vec![500, 1000, 2000, 4000],
+                l_values: vec![8, 16, 32, 64],
+                k_values: vec![10, 16, 32, 64],
+            }
+        } else {
+            Fig2Sweep {
+                base_n: 4000,
+                base_l: 64,
+                base_k: 10,
+                d: 100,
+                n_values: vec![1000, 2000, 4000, 8000, 16000],
+                l_values: vec![16, 32, 64, 128, 256],
+                k_values: vec![10, 16, 32, 64],
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_shapes() {
+        let p = fig2_workload(100, 7, 5, 10, 1);
+        assert_eq!(p.ground.rows(), 100);
+        assert_eq!(p.ground.cols(), 10);
+        assert_eq!(p.sets.len(), 7);
+        assert!(p.sets.iter().all(|s| s.len() == 5));
+        assert!(p.sets.iter().flatten().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn reproducible() {
+        let a = fig2_workload(50, 3, 4, 6, 9);
+        let b = fig2_workload(50, 3, 4, 6, 9);
+        assert_eq!(a.ground, b.ground);
+        assert_eq!(a.sets, b.sets);
+    }
+
+    #[test]
+    fn k_capped_at_n() {
+        let p = fig2_workload(5, 2, 10, 3, 2);
+        assert!(p.sets.iter().all(|s| s.len() == 5));
+    }
+}

@@ -1,0 +1,232 @@
+//! Command-line argument parsing for the launcher (clap is unavailable
+//! offline). Subcommand + `--flag value` / `--flag` / `--flag=value`
+//! style, with typed accessors and a generated usage string.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A declared flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A declared subcommand.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// The application spec: named subcommands with flags.
+#[derive(Debug, Clone, Default)]
+pub struct AppSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl AppSpec {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.help));
+        }
+        s.push_str("\nRun `<command> --help` for flags.\n");
+        s
+    }
+
+    pub fn command_usage(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nFLAGS:\n", self.name, cmd.name, cmd.help);
+        for f in &cmd.flags {
+            let arg = if f.takes_value { format!("--{} <v>", f.name) } else { format!("--{}", f.name) };
+            let def = f.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {:<24} {}{}\n", arg, f.help, def));
+        }
+        s
+    }
+
+    /// Parse argv (without the program name). Returns (command, matches)
+    /// or Err with a usage message.
+    pub fn parse(&self, args: &[String]) -> Result<(String, Matches)> {
+        let Some(cmd_name) = args.first() else {
+            bail!("{}", self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            bail!("{}", self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| anyhow!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut present: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.command_usage(cmd));
+            }
+            if let Some(raw) = a.strip_prefix("--") {
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (raw.to_string(), None),
+                };
+                let spec = cmd
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        anyhow!("unknown flag '--{name}'\n\n{}", self.command_usage(cmd))
+                    })?;
+                present.push(name.clone());
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .ok_or_else(|| anyhow!("flag '--{name}' expects a value"))?
+                                .clone()
+                        }
+                    };
+                    values.insert(name, v);
+                } else if inline.is_some() {
+                    bail!("flag '--{name}' takes no value");
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults
+        for f in &cmd.flags {
+            if f.takes_value && !values.contains_key(f.name) {
+                if let Some(d) = f.default {
+                    values.insert(f.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok((cmd_name.clone(), Matches { values, present, positional }))
+    }
+}
+
+/// Parsed flag values for one invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    present: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+    pub fn has(&self, name: &str) -> bool {
+        self.present.iter().any(|p| p == name)
+    }
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow!("missing flag '--{name}'"))?;
+        v.parse().map_err(|_| anyhow!("flag '--{name}': '{v}' is not a non-negative integer"))
+    }
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow!("missing flag '--{name}'"))?;
+        v.parse().map_err(|_| anyhow!("flag '--{name}': '{v}' is not a number"))
+    }
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing flag '--{name}'"))
+    }
+}
+
+/// Convenience: flag spec constructors.
+pub fn flag(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, takes_value: false, default: None }
+}
+pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> FlagSpec {
+    FlagSpec { name, help, takes_value: true, default: Some(default) }
+}
+pub fn req(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, takes_value: true, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> AppSpec {
+        AppSpec {
+            name: "ebc-summarizer",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "bench",
+                help: "run benches",
+                flags: vec![
+                    opt("n", "ground size", "1000"),
+                    opt("out", "output file", "out.csv"),
+                    flag("full", "full sweep"),
+                    req("seed", "rng seed"),
+                ],
+            }],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let (cmd, m) = app()
+            .parse(&sv(&["bench", "--n", "500", "--full", "--seed=42"]))
+            .unwrap();
+        assert_eq!(cmd, "bench");
+        assert_eq!(m.usize("n").unwrap(), 500);
+        assert_eq!(m.str("out").unwrap(), "out.csv"); // default
+        assert!(m.has("full"));
+        assert_eq!(m.usize("seed").unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_required_flag_errors_on_access() {
+        let (_, m) = app().parse(&sv(&["bench"])).unwrap();
+        assert!(m.usize("seed").is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_flag() {
+        assert!(app().parse(&sv(&["nope"])).is_err());
+        assert!(app().parse(&sv(&["bench", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn value_for_boolean_flag_rejected() {
+        assert!(app().parse(&sv(&["bench", "--full=yes"])).is_err());
+    }
+
+    #[test]
+    fn help_surfaces_usage() {
+        let err = app().parse(&sv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("COMMANDS"));
+        let err = app().parse(&sv(&["bench", "--help"])).unwrap_err().to_string();
+        assert!(err.contains("--seed"));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let (_, m) = app().parse(&sv(&["bench", "pos1", "--n", "5", "pos2"])).unwrap();
+        assert_eq!(m.positional, vec!["pos1", "pos2"]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-subset parser (`parse`) + the typed
+//! schema (`schema`) the launcher and the coordinator consume.
+//!
+//! Supported TOML subset (sufficient for service configs): `[section]`
+//! and `[section.sub]` headers, `key = value` with string / integer /
+//! float / boolean / string-array values, `#` comments.
+
+pub mod parse;
+pub mod schema;
+
+pub use parse::ConfigDoc;
+pub use schema::{CoordinatorConfig, EngineSection, ServiceConfig, SummarySection};

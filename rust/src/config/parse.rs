@@ -1,0 +1,245 @@
+//! TOML-subset document parser.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrArray(Vec<String>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path keys ("section.key") → values.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigDoc {
+    map: BTreeMap<String, Value>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let val = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            map.insert(full, val);
+        }
+        Ok(ConfigDoc { map })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ConfigDoc> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            match parse_value(p)? {
+                Value::Str(v) => items.push(v),
+                other => bail!("only string arrays supported, got {other:?}"),
+            }
+        }
+        return Ok(Value::StrArray(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# service config
+name = "fleet-a"
+
+[engine]
+precision = "bf16"   # half precision
+batch = 1024
+cpu_fallback = true
+
+[summary]
+k = 5
+algorithm = "greedy"
+refresh_every = 100
+machines = ["imm-1", "imm-2"]
+
+[summary.quality]
+min_gain = 0.001
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name", ""), "fleet-a");
+        assert_eq!(c.str("engine.precision", "f32"), "bf16");
+        assert_eq!(c.int("engine.batch", 0), 1024);
+        assert!(c.bool("engine.cpu_fallback", false));
+        assert_eq!(c.int("summary.k", 0), 5);
+        assert!((c.float("summary.quality.min_gain", 0.0) - 0.001).abs() < 1e-12);
+        match c.get("summary.machines") {
+            Some(Value::StrArray(a)) => assert_eq!(a, &["imm-1", "imm-2"]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = ConfigDoc::parse("").unwrap();
+        assert_eq!(c.int("nope", 7), 7);
+        assert_eq!(c.str("nope", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(ConfigDoc::parse("[unterminated").is_err());
+        assert!(ConfigDoc::parse("novalue").is_err());
+        assert!(ConfigDoc::parse("x = ").is_err());
+        assert!(ConfigDoc::parse("x = \"open").is_err());
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let c = ConfigDoc::parse("x = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(c.str("x", ""), "a#b");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = ConfigDoc::parse("a = 3\nb = 3.5\nc = -2\n").unwrap();
+        assert_eq!(c.int("a", 0), 3);
+        assert_eq!(c.float("b", 0.0), 3.5);
+        assert_eq!(c.int("c", 0), -2);
+        assert_eq!(c.float("a", 0.0), 3.0); // int coerces to float
+    }
+}

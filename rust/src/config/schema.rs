@@ -1,0 +1,194 @@
+//! Typed configuration schema over [`super::parse::ConfigDoc`].
+
+use super::parse::{ConfigDoc, Value};
+use crate::runtime::artifact::Precision;
+use anyhow::{bail, Result};
+
+/// `[engine]` section.
+#[derive(Debug, Clone)]
+pub struct EngineSection {
+    pub precision: Precision,
+    pub cpu_fallback: bool,
+    pub batch: usize,
+}
+
+impl Default for EngineSection {
+    fn default() -> Self {
+        EngineSection { precision: Precision::F32, cpu_fallback: true, batch: 1024 }
+    }
+}
+
+/// `[summary]` section: what the coordinator maintains per machine.
+#[derive(Debug, Clone)]
+pub struct SummarySection {
+    pub k: usize,
+    pub algorithm: String,
+    /// Recompute the summary after this many new cycles.
+    pub refresh_every: usize,
+    /// Sliding window of cycles the summary covers (0 = unbounded).
+    pub window: usize,
+}
+
+impl Default for SummarySection {
+    fn default() -> Self {
+        SummarySection {
+            k: 5,
+            algorithm: "greedy".into(),
+            refresh_every: 50,
+            window: 1000,
+        }
+    }
+}
+
+/// `[coordinator]` section: service-level knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Ingestion queue capacity per machine before backpressure engages.
+    pub queue_capacity: usize,
+    /// Max cycles batched into one ingest tick.
+    pub ingest_batch: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 2, queue_capacity: 256, ingest_batch: 32 }
+    }
+}
+
+/// Full service config.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub name: String,
+    pub engine: EngineSection,
+    pub summary: SummarySection,
+    pub coordinator: CoordinatorConfig,
+    pub machines: Vec<String>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            name: "ebc-service".into(),
+            engine: EngineSection::default(),
+            summary: SummarySection::default(),
+            coordinator: CoordinatorConfig::default(),
+            machines: vec![],
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Result<ServiceConfig> {
+        let precision = match doc.str("engine.precision", "f32").as_str() {
+            "f32" => Precision::F32,
+            "bf16" | "fp16" | "half" => Precision::Bf16,
+            other => bail!("engine.precision: unknown '{other}'"),
+        };
+        let algorithm = doc.str("summary.algorithm", "greedy");
+        if !matches!(
+            algorithm.as_str(),
+            "greedy" | "lazy_greedy" | "stochastic_greedy" | "sieve_streaming"
+                | "sieve_streaming_pp" | "three_sieves" | "random"
+        ) {
+            bail!("summary.algorithm: unknown '{algorithm}'");
+        }
+        let machines = match doc.get("coordinator.machines") {
+            Some(Value::StrArray(a)) => a.clone(),
+            _ => vec![],
+        };
+        let pos = |key: &str, default: i64| -> Result<usize> {
+            let v = doc.int(key, default);
+            if v < 0 {
+                bail!("{key} must be >= 0, got {v}");
+            }
+            Ok(v as usize)
+        };
+        Ok(ServiceConfig {
+            name: doc.str("name", "ebc-service"),
+            engine: EngineSection {
+                precision,
+                cpu_fallback: doc.bool("engine.cpu_fallback", true),
+                batch: pos("engine.batch", 1024)?,
+            },
+            summary: SummarySection {
+                k: pos("summary.k", 5)?,
+                algorithm,
+                refresh_every: pos("summary.refresh_every", 50)?,
+                window: pos("summary.window", 1000)?,
+            },
+            coordinator: CoordinatorConfig {
+                workers: pos("coordinator.workers", 2)?.max(1),
+                queue_capacity: pos("coordinator.queue_capacity", 256)?.max(1),
+                ingest_batch: pos("coordinator.ingest_batch", 32)?.max(1),
+            },
+            machines,
+        })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ServiceConfig> {
+        Self::from_doc(&ConfigDoc::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_roundtrip() {
+        let doc = ConfigDoc::parse(
+            r#"
+name = "plant-7"
+[engine]
+precision = "bf16"
+batch = 256
+[summary]
+k = 10
+algorithm = "three_sieves"
+refresh_every = 25
+window = 500
+[coordinator]
+workers = 4
+queue_capacity = 128
+ingest_batch = 16
+machines = ["cover-line", "plate-line"]
+"#,
+        )
+        .unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.name, "plant-7");
+        assert_eq!(c.engine.precision, Precision::Bf16);
+        assert_eq!(c.engine.batch, 256);
+        assert_eq!(c.summary.k, 10);
+        assert_eq!(c.summary.algorithm, "three_sieves");
+        assert_eq!(c.coordinator.workers, 4);
+        assert_eq!(c.machines, vec!["cover-line", "plate-line"]);
+    }
+
+    #[test]
+    fn defaults_without_sections() {
+        let c = ServiceConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert_eq!(c.summary.k, 5);
+        assert_eq!(c.engine.precision, Precision::F32);
+        assert_eq!(c.coordinator.workers, 2);
+    }
+
+    #[test]
+    fn rejects_unknown_algorithm() {
+        let doc = ConfigDoc::parse("[summary]\nalgorithm = \"magic\"\n").unwrap();
+        assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_precision() {
+        let doc = ConfigDoc::parse("[engine]\nprecision = \"fp8\"\n").unwrap();
+        assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_negative() {
+        let doc = ConfigDoc::parse("[summary]\nk = -3\n").unwrap();
+        assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Bounded ingestion queue with watermark-based backpressure.
+//!
+//! Policy: below the high watermark records are accepted; between high
+//! watermark and capacity the producer is advised to throttle; at
+//! capacity the **oldest** record is dropped (summaries prefer fresh
+//! data — a stale cycle is strictly less useful to an operator).
+
+use std::collections::VecDeque;
+
+/// Advice returned to the producer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accepted,
+    /// Accepted, but the queue is past the high watermark.
+    AcceptedThrottle,
+    /// Accepted after evicting the oldest queued record.
+    AcceptedEvicted,
+}
+
+/// Bounded FIFO with watermarks.
+pub struct BoundedQueue<T> {
+    q: VecDeque<T>,
+    capacity: usize,
+    high_watermark: usize,
+    pub evicted: u64,
+    pub accepted: u64,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0);
+        BoundedQueue {
+            q: VecDeque::with_capacity(capacity),
+            capacity,
+            high_watermark: (capacity * 3) / 4,
+            evicted: 0,
+            accepted: 0,
+        }
+    }
+
+    pub fn push(&mut self, item: T) -> Admission {
+        self.accepted += 1;
+        if self.q.len() >= self.capacity {
+            self.q.pop_front();
+            self.evicted += 1;
+            self.q.push_back(item);
+            return Admission::AcceptedEvicted;
+        }
+        self.q.push_back(item);
+        if self.q.len() > self.high_watermark {
+            Admission::AcceptedThrottle
+        } else {
+            Admission::Accepted
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    /// Drain up to `max` items.
+    pub fn drain(&mut self, max: usize) -> Vec<T> {
+        let take = max.min(self.q.len());
+        self.q.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+    pub fn above_watermark(&self) -> bool {
+        self.q.len() > self.high_watermark
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_below_watermark() {
+        let mut q = BoundedQueue::new(8); // watermark 6
+        for i in 0..6 {
+            assert_eq!(q.push(i), Admission::Accepted);
+        }
+        assert_eq!(q.push(6), Admission::AcceptedThrottle);
+        assert_eq!(q.push(7), Admission::AcceptedThrottle);
+        // full: evict oldest
+        assert_eq!(q.push(8), Admission::AcceptedEvicted);
+        assert_eq!(q.len(), 8);
+        assert_eq!(q.pop(), Some(1)); // 0 evicted
+        assert_eq!(q.evicted, 1);
+    }
+
+    #[test]
+    fn drain_respects_order_and_max() {
+        let mut q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.drain(3), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.drain(100), vec![3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        BoundedQueue::<u8>::new(0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Ingest batcher: groups queued cycle records per machine so each
+//! coordinator tick folds whole batches into machine windows (fewer
+//! window locks, fewer summary-refresh triggers).
+
+use crate::coordinator::stream::CycleRecord;
+use std::collections::BTreeMap;
+
+/// Group records by machine, preserving per-machine arrival order.
+pub fn group_by_machine(records: Vec<CycleRecord>) -> BTreeMap<String, Vec<CycleRecord>> {
+    let mut out: BTreeMap<String, Vec<CycleRecord>> = BTreeMap::new();
+    for r in records {
+        out.entry(r.machine.clone()).or_default().push(r);
+    }
+    out
+}
+
+/// Batch sizing policy: adapt the per-tick drain to queue depth — drain
+/// more aggressively as the queue fills (keeps latency bounded under
+/// burst load, the knob the backpressure ablation exercises).
+pub fn adaptive_drain(queue_len: usize, base: usize, capacity: usize) -> usize {
+    if queue_len == 0 {
+        return 0;
+    }
+    let fill = queue_len as f64 / capacity as f64;
+    if fill > 0.75 {
+        (base * 4).min(queue_len)
+    } else if fill > 0.5 {
+        (base * 2).min(queue_len)
+    } else {
+        base.min(queue_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(m: &str, seq: u64) -> CycleRecord {
+        CycleRecord { machine: m.into(), seq, values: vec![0.0] }
+    }
+
+    #[test]
+    fn groups_preserve_order() {
+        let recs = vec![rec("b", 0), rec("a", 0), rec("b", 1), rec("a", 1), rec("b", 2)];
+        let g = group_by_machine(recs);
+        assert_eq!(g["a"].iter().map(|r| r.seq).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(g["b"].iter().map(|r| r.seq).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn adaptive_drain_scales_with_fill() {
+        assert_eq!(adaptive_drain(0, 8, 100), 0);
+        assert_eq!(adaptive_drain(10, 8, 100), 8);
+        assert_eq!(adaptive_drain(60, 8, 100), 16);
+        assert_eq!(adaptive_drain(90, 8, 100), 32);
+        // never more than available
+        assert_eq!(adaptive_drain(5, 8, 100), 5);
+    }
+}

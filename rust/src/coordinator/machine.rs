@@ -1,0 +1,179 @@
+//! Per-machine state: a sliding window of recent cycles + the cached
+//! summary served to operators.
+
+use crate::coordinator::stream::CycleRecord;
+use crate::linalg::Matrix;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A cached data summarization of one machine's recent cycles.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    /// Sequence numbers of the representative cycles, in selection order.
+    pub representative_seqs: Vec<u64>,
+    /// Window-relative indices at refresh time.
+    pub representative_idx: Vec<usize>,
+    /// EBC value of the summary.
+    pub f_value: f32,
+    /// How many cycles the window held at refresh.
+    pub window_len: usize,
+    /// Wall-clock cost of the refresh (seconds).
+    pub refresh_seconds: f64,
+    /// Monotone refresh counter.
+    pub version: u64,
+}
+
+/// Sliding-window state of one machine.
+#[derive(Debug)]
+pub struct MachineState {
+    pub name: String,
+    dim: Option<usize>,
+    window: VecDeque<(u64, Vec<f32>)>,
+    window_cap: usize,
+    /// Cycles ingested since the last summary refresh.
+    pub since_refresh: usize,
+    pub total_ingested: u64,
+    pub summary: Option<Summary>,
+    pub last_seen: Option<Instant>,
+}
+
+impl MachineState {
+    pub fn new(name: &str, window_cap: usize) -> MachineState {
+        MachineState {
+            name: name.to_string(),
+            dim: None,
+            window: VecDeque::new(),
+            window_cap: window_cap.max(1),
+            since_refresh: 0,
+            total_ingested: 0,
+            summary: None,
+            last_seen: None,
+        }
+    }
+
+    /// Fold one record into the window. Returns false (and ignores the
+    /// record) on dimension mismatch — a malformed sensor frame.
+    pub fn ingest(&mut self, rec: &CycleRecord) -> bool {
+        match self.dim {
+            None => self.dim = Some(rec.values.len()),
+            Some(d) if d != rec.values.len() => {
+                log::warn!(
+                    "machine {}: dropping malformed frame seq={} dim {} != {}",
+                    self.name,
+                    rec.seq,
+                    rec.values.len(),
+                    d
+                );
+                return false;
+            }
+            _ => {}
+        }
+        if self.window.len() == self.window_cap {
+            self.window.pop_front();
+        }
+        self.window.push_back((rec.seq, rec.values.clone()));
+        self.since_refresh += 1;
+        self.total_ingested += 1;
+        self.last_seen = Some(Instant::now());
+        true
+    }
+
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn dim(&self) -> Option<usize> {
+        self.dim
+    }
+
+    /// Materialize the window as a (n x d) matrix + the seq of each row.
+    pub fn window_matrix(&self) -> Option<(Matrix, Vec<u64>)> {
+        let d = self.dim?;
+        if self.window.is_empty() {
+            return None;
+        }
+        let mut data = Vec::with_capacity(self.window.len() * d);
+        let mut seqs = Vec::with_capacity(self.window.len());
+        for (seq, row) in &self.window {
+            data.extend_from_slice(row);
+            seqs.push(*seq);
+        }
+        Some((Matrix::from_vec(seqs.len(), d, data), seqs))
+    }
+
+    /// Store a fresh summary.
+    pub fn set_summary(&mut self, s: Summary) {
+        self.summary = Some(s);
+        self.since_refresh = 0;
+    }
+
+    /// Does the refresh policy trigger?
+    pub fn needs_refresh(&self, refresh_every: usize) -> bool {
+        if self.window.is_empty() {
+            return false;
+        }
+        match &self.summary {
+            None => true,
+            Some(_) => self.since_refresh >= refresh_every.max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64, vals: &[f32]) -> CycleRecord {
+        CycleRecord { machine: "m".into(), seq, values: vals.to_vec() }
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut m = MachineState::new("m", 3);
+        for s in 0..5u64 {
+            assert!(m.ingest(&rec(s, &[s as f32, 0.0])));
+        }
+        assert_eq!(m.window_len(), 3);
+        let (mat, seqs) = m.window_matrix().unwrap();
+        assert_eq!(seqs, vec![2, 3, 4]);
+        assert_eq!(mat.row(0), &[2.0, 0.0]);
+        assert_eq!(m.total_ingested, 5);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let mut m = MachineState::new("m", 4);
+        assert!(m.ingest(&rec(0, &[1.0, 2.0])));
+        assert!(!m.ingest(&rec(1, &[1.0])));
+        assert_eq!(m.window_len(), 1);
+    }
+
+    #[test]
+    fn refresh_policy() {
+        let mut m = MachineState::new("m", 10);
+        assert!(!m.needs_refresh(5)); // empty window: nothing to summarize
+        m.ingest(&rec(0, &[0.0]));
+        assert!(m.needs_refresh(5)); // no summary yet
+        m.set_summary(Summary {
+            representative_seqs: vec![0],
+            representative_idx: vec![0],
+            f_value: 0.0,
+            window_len: 1,
+            refresh_seconds: 0.0,
+            version: 1,
+        });
+        assert!(!m.needs_refresh(5));
+        for s in 1..=4 {
+            m.ingest(&rec(s, &[s as f32]));
+        }
+        assert!(!m.needs_refresh(5)); // 4 < 5
+        m.ingest(&rec(5, &[5.0]));
+        assert!(m.needs_refresh(5));
+    }
+
+    #[test]
+    fn empty_window_matrix_none() {
+        let m = MachineState::new("m", 2);
+        assert!(m.window_matrix().is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! Streaming summarization coordinator — the Industry-4.0 deployment the
+//! paper motivates (§6 "Summaries"): operators supervise *fleets* of
+//! injection-molding machines; when they switch to one, they want a
+//! short, current summary of the cycles since their last visit.
+//!
+//! Architecture (one process, event-driven):
+//!
+//! ```text
+//!   sensor streams ──> backpressure queue ──> batcher ──┐
+//!                                                       v
+//!   operator query ──> router ──> per-machine state ──> summary
+//!                                        │                 ^
+//!                                        └── refresh via optimizer
+//!                                            (CPU or XLA engine oracle)
+//! ```
+//!
+//! Summaries are maintained *incrementally*: every `refresh_every` new
+//! cycles the machine's sliding window is re-summarized with the
+//! configured optimizer; queries are served from the cached summary in
+//! O(1).
+
+pub mod backpressure;
+pub mod batcher;
+pub mod machine;
+pub mod router;
+pub mod service;
+pub mod snapshot;
+pub mod stream;
+
+pub use machine::{MachineState, Summary};
+pub use router::{RouteResult, Router};
+pub use service::{Coordinator, CoordinatorMetrics, OracleFactory};
+pub use stream::{CycleRecord, SimulatedFleet, StreamSource};

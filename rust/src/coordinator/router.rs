@@ -1,0 +1,158 @@
+//! Operator-facing request router: resolves machine names (exact or
+//! unique-prefix) and serves summary queries from cached state.
+
+use crate::coordinator::machine::{MachineState, Summary};
+use std::collections::BTreeMap;
+
+/// Routing outcome for a summary query.
+#[derive(Debug, Clone)]
+pub enum RouteResult {
+    /// Cached summary for the machine.
+    Summary(Summary),
+    /// Machine known but no summary computed yet.
+    NotReady { ingested: u64 },
+    /// Name didn't resolve.
+    UnknownMachine { suggestions: Vec<String> },
+    /// Prefix matched several machines.
+    Ambiguous { matches: Vec<String> },
+}
+
+impl RouteResult {
+    /// Human-readable one-liner for CLI output.
+    pub fn describe(&self) -> String {
+        match self {
+            RouteResult::Summary(s) => format!(
+                "summary v{} over {} cycles: representatives (seq) {:?}, f={:.4}, refreshed in {:.3}s",
+                s.version, s.window_len, s.representative_seqs, s.f_value, s.refresh_seconds
+            ),
+            RouteResult::NotReady { ingested } => {
+                format!("no summary yet ({ingested} cycles ingested)")
+            }
+            RouteResult::UnknownMachine { suggestions } => {
+                format!("unknown machine; did you mean {suggestions:?}?")
+            }
+            RouteResult::Ambiguous { matches } => format!("ambiguous prefix: {matches:?}"),
+        }
+    }
+}
+
+/// Stateless resolver over the coordinator's machine map.
+pub struct Router;
+
+impl Router {
+    /// Resolve `query` against the machine map.
+    pub fn resolve<'a>(
+        machines: &'a BTreeMap<String, MachineState>,
+        query: &str,
+    ) -> Result<&'a MachineState, RouteResult> {
+        if let Some(m) = machines.get(query) {
+            return Ok(m);
+        }
+        let matches: Vec<&String> = machines
+            .keys()
+            .filter(|k| k.starts_with(query))
+            .collect();
+        match matches.len() {
+            1 => Ok(&machines[matches[0]]),
+            0 => Err(RouteResult::UnknownMachine {
+                suggestions: nearest_names(machines, query, 3),
+            }),
+            _ => Err(RouteResult::Ambiguous {
+                matches: matches.into_iter().cloned().collect(),
+            }),
+        }
+    }
+
+    /// Full query path: resolve + fetch summary.
+    pub fn query(machines: &BTreeMap<String, MachineState>, name: &str) -> RouteResult {
+        match Self::resolve(machines, name) {
+            Ok(m) => match &m.summary {
+                Some(s) => RouteResult::Summary(s.clone()),
+                None => RouteResult::NotReady { ingested: m.total_ingested },
+            },
+            Err(e) => e,
+        }
+    }
+}
+
+/// Closest names by edit distance (suggestions for typos).
+fn nearest_names(
+    machines: &BTreeMap<String, MachineState>,
+    query: &str,
+    top: usize,
+) -> Vec<String> {
+    let mut scored: Vec<(usize, &String)> = machines
+        .keys()
+        .map(|k| (edit_distance(k, query), k))
+        .collect();
+    scored.sort_by_key(|(d, k)| (*d, (*k).clone()));
+    scored.into_iter().take(top).map(|(_, k)| k.clone()).collect()
+}
+
+/// Levenshtein distance (small strings; O(nm) is fine).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for i in 1..=a.len() {
+        let mut cur = vec![i; b.len() + 1];
+        for j in 1..=b.len() {
+            let cost = if a[i - 1] == b[j - 1] { 0 } else { 1 };
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machines(names: &[&str]) -> BTreeMap<String, MachineState> {
+        names
+            .iter()
+            .map(|n| (n.to_string(), MachineState::new(n, 10)))
+            .collect()
+    }
+
+    #[test]
+    fn exact_and_prefix_resolution() {
+        let m = machines(&["imm-plate-1", "imm-plate-2", "imm-cover-1"]);
+        assert!(Router::resolve(&m, "imm-cover-1").is_ok());
+        assert!(Router::resolve(&m, "imm-cover").is_ok()); // unique prefix
+        match Router::resolve(&m, "imm-plate") {
+            Err(RouteResult::Ambiguous { matches }) => assert_eq!(matches.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_gets_suggestions() {
+        let m = machines(&["alpha", "beta", "gamma"]);
+        match Router::query(&m, "btea") {
+            RouteResult::UnknownMachine { suggestions } => {
+                assert_eq!(suggestions[0], "beta");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn not_ready_before_first_summary() {
+        let m = machines(&["a"]);
+        match Router::query(&m, "a") {
+            RouteResult::NotReady { ingested } => assert_eq!(ingested, 0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn edit_distance_basic() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+}

@@ -1,0 +1,319 @@
+//! The coordinator service: ties queue → batcher → machines → optimizer.
+
+use crate::config::schema::ServiceConfig;
+use crate::coordinator::backpressure::{Admission, BoundedQueue};
+use crate::coordinator::batcher::{adaptive_drain, group_by_machine};
+use crate::coordinator::machine::{MachineState, Summary};
+use crate::coordinator::router::{RouteResult, Router};
+use crate::coordinator::stream::{CycleRecord, StreamSource};
+use crate::linalg::Matrix;
+use crate::optim::{
+    Greedy, LazyGreedy, Optimizer, RandomSelection, SieveStreaming, SieveStreamingPp,
+    StochasticGreedy, ThreeSieves,
+};
+use crate::submodular::Oracle;
+use crate::util::timer::Profile;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Produces an oracle for a window matrix — the seam between the
+/// coordinator and the evaluation backend (CPU baseline or XLA engine).
+pub type OracleFactory = Box<dyn Fn(Matrix) -> Box<dyn Oracle>>;
+
+/// Service-level counters.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorMetrics {
+    pub ingested: u64,
+    pub malformed: u64,
+    pub evicted: u64,
+    pub throttle_signals: u64,
+    pub refreshes: u64,
+    pub refresh_seconds_total: f64,
+    pub queries: u64,
+}
+
+/// The streaming summarization coordinator.
+pub struct Coordinator {
+    cfg: ServiceConfig,
+    queue: BoundedQueue<CycleRecord>,
+    machines: BTreeMap<String, MachineState>,
+    oracle_factory: OracleFactory,
+    pub metrics: CoordinatorMetrics,
+    pub profile: Profile,
+    version: u64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: ServiceConfig, oracle_factory: OracleFactory) -> Coordinator {
+        let queue = BoundedQueue::new(cfg.coordinator.queue_capacity);
+        let mut machines = BTreeMap::new();
+        for name in &cfg.machines {
+            machines.insert(name.clone(), MachineState::new(name, cfg.summary.window.max(1)));
+        }
+        Coordinator {
+            cfg,
+            queue,
+            machines,
+            oracle_factory,
+            metrics: CoordinatorMetrics::default(),
+            profile: Profile::new(),
+            version: 0,
+        }
+    }
+
+    fn build_optimizer(&self) -> Box<dyn Optimizer> {
+        match self.cfg.summary.algorithm.as_str() {
+            "greedy" => Box::new(Greedy { batch: self.cfg.engine.batch }),
+            "lazy_greedy" => Box::new(LazyGreedy::default()),
+            "stochastic_greedy" => Box::new(StochasticGreedy::default()),
+            "sieve_streaming" => Box::new(SieveStreaming::default()),
+            "sieve_streaming_pp" => Box::new(SieveStreamingPp::default()),
+            "three_sieves" => Box::new(ThreeSieves { epsilon: 0.1, t: 50 }),
+            "random" => Box::new(RandomSelection::default()),
+            other => unreachable!("schema validated algorithm '{other}'"),
+        }
+    }
+
+    /// Offer one record (sensor push path). Returns the admission advice.
+    pub fn offer(&mut self, rec: CycleRecord) -> Admission {
+        let adm = self.queue.push(rec);
+        match adm {
+            Admission::AcceptedEvicted => self.metrics.evicted += 1,
+            Admission::AcceptedThrottle => self.metrics.throttle_signals += 1,
+            Admission::Accepted => {}
+        }
+        adm
+    }
+
+    /// One event-loop tick: drain a batch, fold into machines, refresh
+    /// summaries that are due. Returns the number of records processed.
+    pub fn tick(&mut self) -> usize {
+        let drain = adaptive_drain(
+            self.queue.len(),
+            self.cfg.coordinator.ingest_batch,
+            self.queue.capacity(),
+        );
+        let records = self.queue.drain(drain);
+        let count = records.len();
+        let grouped = self.profile.scope("coord.batch", || group_by_machine(records));
+        for (name, recs) in grouped {
+            let window_cap = self.cfg.summary.window.max(1);
+            let m = self
+                .machines
+                .entry(name.clone())
+                .or_insert_with(|| MachineState::new(&name, window_cap));
+            for r in &recs {
+                if m.ingest(r) {
+                    self.metrics.ingested += 1;
+                } else {
+                    self.metrics.malformed += 1;
+                }
+            }
+        }
+        // refresh pass
+        let due: Vec<String> = self
+            .machines
+            .iter()
+            .filter(|(_, m)| m.needs_refresh(self.cfg.summary.refresh_every))
+            .map(|(n, _)| n.clone())
+            .collect();
+        for name in due {
+            self.refresh(&name);
+        }
+        count
+    }
+
+    /// Recompute the summary of one machine now.
+    pub fn refresh(&mut self, name: &str) {
+        let Some(m) = self.machines.get(name) else { return };
+        let Some((window, seqs)) = m.window_matrix() else { return };
+        let k = self.cfg.summary.k.min(window.rows());
+        let optimizer = self.build_optimizer();
+        let t0 = Instant::now();
+        let mut oracle = (self.oracle_factory)(window);
+        let res = self
+            .profile
+            .scope("coord.refresh", || optimizer.run(oracle.as_mut(), k));
+        let dt = t0.elapsed().as_secs_f64();
+        self.version += 1;
+        let summary = Summary {
+            representative_seqs: res.indices.iter().map(|&i| seqs[i]).collect(),
+            representative_idx: res.indices.clone(),
+            f_value: res.f_final,
+            window_len: seqs.len(),
+            refresh_seconds: dt,
+            version: self.version,
+        };
+        self.metrics.refreshes += 1;
+        self.metrics.refresh_seconds_total += dt;
+        if let Some(m) = self.machines.get_mut(name) {
+            m.set_summary(summary);
+        }
+    }
+
+    /// Operator query: cached summary for `machine`.
+    pub fn query(&mut self, machine: &str) -> RouteResult {
+        self.metrics.queries += 1;
+        Router::query(&self.machines, machine)
+    }
+
+    /// Drive a whole stream to exhaustion (utility for examples/tests).
+    pub fn run_stream(&mut self, source: &mut dyn StreamSource) -> usize {
+        let mut total = 0;
+        loop {
+            let mut pushed = 0;
+            // fill up to the ingest batch, then tick
+            for _ in 0..self.cfg.coordinator.ingest_batch {
+                match source.next_record() {
+                    Some(rec) => {
+                        self.offer(rec);
+                        pushed += 1;
+                    }
+                    None => break,
+                }
+            }
+            if pushed == 0 && self.queue.is_empty() {
+                break;
+            }
+            total += self.tick();
+        }
+        // final flush
+        while !self.queue.is_empty() {
+            total += self.tick();
+        }
+        total
+    }
+
+    pub fn machines(&self) -> &BTreeMap<String, MachineState> {
+        &self.machines
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::CpuOracle;
+
+    fn cpu_factory() -> OracleFactory {
+        Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>)
+    }
+
+    fn cfg(k: usize, refresh_every: usize, window: usize) -> ServiceConfig {
+        let mut c = ServiceConfig::default();
+        c.summary.k = k;
+        c.summary.refresh_every = refresh_every;
+        c.summary.window = window;
+        c.summary.algorithm = "greedy".into();
+        c.engine.batch = 64;
+        c
+    }
+
+    fn rec(m: &str, seq: u64, x: f32) -> CycleRecord {
+        CycleRecord { machine: m.into(), seq, values: vec![x, x * 0.5, 1.0] }
+    }
+
+    #[test]
+    fn ingests_and_refreshes() {
+        let mut c = Coordinator::new(cfg(2, 5, 100), cpu_factory());
+        for s in 0..20u64 {
+            c.offer(rec("m1", s, s as f32));
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        assert_eq!(c.metrics.ingested, 20);
+        assert!(c.metrics.refreshes >= 1);
+        match c.query("m1") {
+            RouteResult::Summary(s) => {
+                assert!(s.representative_seqs.len() <= 2);
+                assert!(s.window_len <= 20);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn summary_seqs_track_window() {
+        // window of 10: after 30 records the reps must be from seq >= 20
+        let mut c = Coordinator::new(cfg(3, 5, 10), cpu_factory());
+        for s in 0..30u64 {
+            c.offer(rec("m1", s, (s % 7) as f32));
+            c.tick();
+        }
+        c.refresh("m1");
+        match c.query("m1") {
+            RouteResult::Summary(s) => {
+                assert!(s.representative_seqs.iter().all(|&q| q >= 20), "{:?}", s.representative_seqs);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_frames_counted() {
+        let mut c = Coordinator::new(cfg(2, 100, 50), cpu_factory());
+        c.offer(rec("m1", 0, 1.0));
+        c.offer(CycleRecord { machine: "m1".into(), seq: 1, values: vec![1.0] }); // wrong dim
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        assert_eq!(c.metrics.ingested, 1);
+        assert_eq!(c.metrics.malformed, 1);
+    }
+
+    #[test]
+    fn unknown_machine_routes() {
+        let mut c = Coordinator::new(cfg(2, 5, 10), cpu_factory());
+        c.offer(rec("alpha", 0, 1.0));
+        c.tick();
+        match c.query("alhpa") {
+            RouteResult::UnknownMachine { suggestions } => {
+                assert_eq!(suggestions[0], "alpha");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_evicts_under_burst() {
+        let mut small = cfg(2, 1000, 10);
+        small.coordinator.queue_capacity = 16;
+        let mut c = Coordinator::new(small, cpu_factory());
+        for s in 0..100u64 {
+            c.offer(rec("m", s, s as f32));
+        }
+        assert!(c.metrics.evicted > 0);
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        // freshest records survived
+        let m = &c.machines()["m"];
+        let (_, seqs) = m.window_matrix().unwrap();
+        assert_eq!(*seqs.last().unwrap(), 99);
+    }
+
+    #[test]
+    fn run_stream_processes_everything() {
+        use crate::coordinator::stream::SimulatedFleet;
+        use crate::imm::{Part, ProcessState};
+        let mut cfg = cfg(3, 50, 200);
+        cfg.coordinator.queue_capacity = 4096;
+        let mut c = Coordinator::new(cfg, cpu_factory());
+        let mut fleet = SimulatedFleet::new(
+            &[("a", Part::Cover, ProcessState::Stable)],
+            16,
+            3,
+        );
+        let n = c.run_stream(&mut fleet);
+        assert_eq!(n, 1000);
+        assert!(matches!(c.query("a"), RouteResult::Summary(_)));
+    }
+}

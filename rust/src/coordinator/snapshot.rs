@@ -1,0 +1,208 @@
+//! JSON snapshots of coordinator state (operator dashboards / CLI).
+
+use crate::coordinator::service::Coordinator;
+use crate::util::json::{Json, ObjBuilder};
+
+/// Serialize service state (metrics + per-machine summary heads).
+pub fn snapshot(c: &Coordinator) -> Json {
+    let m = &c.metrics;
+    let mut machines = Vec::new();
+    for (name, ms) in c.machines() {
+        let mut b = ObjBuilder::new()
+            .str("name", name.as_str())
+            .int("window_len", ms.window_len())
+            .int("total_ingested", ms.total_ingested as usize)
+            .int("since_refresh", ms.since_refresh);
+        if let Some(s) = &ms.summary {
+            let reps = Json::Arr(
+                s.representative_seqs
+                    .iter()
+                    .map(|&q| Json::Num(q as f64))
+                    .collect(),
+            );
+            b = b
+                .val("representatives", reps)
+                .num("f_value", s.f_value as f64)
+                .num("refresh_seconds", s.refresh_seconds)
+                .int("version", s.version as usize);
+        }
+        machines.push(b.build());
+    }
+    ObjBuilder::new()
+        .str("service", c.config().name.clone())
+        .int("queue_len", c.queue_len())
+        .val(
+            "metrics",
+            ObjBuilder::new()
+                .int("ingested", m.ingested as usize)
+                .int("malformed", m.malformed as usize)
+                .int("evicted", m.evicted as usize)
+                .int("throttle_signals", m.throttle_signals as usize)
+                .int("refreshes", m.refreshes as usize)
+                .num("refresh_seconds_total", m.refresh_seconds_total)
+                .int("queries", m.queries as usize)
+                .build(),
+        )
+        .val("machines", Json::Arr(machines))
+        .build()
+}
+
+/// Persist a snapshot to disk (atomic: write + rename).
+pub fn save(c: &Coordinator, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, snapshot(c).dump())?;
+    std::fs::rename(tmp, path)
+}
+
+/// A summary head restored from a persisted snapshot — what an operator
+/// dashboard can show immediately after a coordinator restart, before
+/// fresh cycles arrive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RestoredSummary {
+    pub machine: String,
+    pub representative_seqs: Vec<u64>,
+    pub f_value: f32,
+    pub version: u64,
+    pub total_ingested: u64,
+}
+
+/// Parse a persisted snapshot back into summary heads.
+pub fn restore(text: &str) -> Result<Vec<RestoredSummary>, String> {
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    let machines = j
+        .get("machines")
+        .and_then(Json::as_arr)
+        .ok_or("snapshot missing machines")?;
+    let mut out = Vec::with_capacity(machines.len());
+    for m in machines {
+        let name = m
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("machine missing name")?
+            .to_string();
+        let total = m
+            .get("total_ingested")
+            .and_then(Json::as_usize)
+            .unwrap_or(0) as u64;
+        let reps = match m.get("representatives").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|x| x.as_usize().map(|u| u as u64))
+                .collect::<Option<Vec<u64>>>()
+                .ok_or("bad representative seq")?,
+            None => continue, // machine had no summary yet
+        };
+        out.push(RestoredSummary {
+            machine: name,
+            representative_seqs: reps,
+            f_value: m
+                .get("f_value")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as f32,
+            version: m.get("version").and_then(Json::as_usize).unwrap_or(0) as u64,
+            total_ingested: total,
+        });
+    }
+    Ok(out)
+}
+
+/// Load summary heads from a snapshot file.
+pub fn load(path: impl AsRef<std::path::Path>) -> Result<Vec<RestoredSummary>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    restore(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ServiceConfig;
+    use crate::coordinator::stream::CycleRecord;
+    use crate::linalg::Matrix;
+    use crate::submodular::{CpuOracle, Oracle};
+
+    #[test]
+    fn snapshot_roundtrips_as_json() {
+        let mut cfg = ServiceConfig::default();
+        cfg.summary.k = 2;
+        cfg.summary.refresh_every = 2;
+        let factory = Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+        let mut c = Coordinator::new(cfg, factory);
+        for s in 0..6u64 {
+            c.offer(CycleRecord {
+                machine: "mx".into(),
+                seq: s,
+                values: vec![s as f32, 1.0],
+            });
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        let snap = snapshot(&c);
+        let text = snap.dump();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("service").unwrap().as_str(), Some("ebc-service"));
+        let machines = parsed.get("machines").unwrap().as_arr().unwrap();
+        assert_eq!(machines.len(), 1);
+        assert_eq!(machines[0].get("name").unwrap().as_str(), Some("mx"));
+        assert!(machines[0].get("representatives").is_some());
+    }
+
+    fn demo_coordinator() -> Coordinator {
+        let mut cfg = ServiceConfig::default();
+        cfg.summary.k = 2;
+        cfg.summary.refresh_every = 2;
+        let factory = Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+        let mut c = Coordinator::new(cfg, factory);
+        for s in 0..8u64 {
+            c.offer(CycleRecord {
+                machine: "mx".into(),
+                seq: s,
+                values: vec![s as f32, 2.0],
+            });
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        c
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = demo_coordinator();
+        let dir = std::env::temp_dir().join("ebc_snapshot_test");
+        let path = dir.join("snap.json");
+        save(&c, &path).unwrap();
+        let restored = load(&path).unwrap();
+        assert_eq!(restored.len(), 1);
+        let r = &restored[0];
+        assert_eq!(r.machine, "mx");
+        assert_eq!(r.total_ingested, 8);
+        let live = match crate::coordinator::Router::query(c.machines(), "mx") {
+            crate::coordinator::RouteResult::Summary(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(r.representative_seqs, live.representative_seqs);
+        assert_eq!(r.version, live.version);
+        assert!((r.f_value - live.f_value).abs() < 1e-3);
+    }
+
+    #[test]
+    fn restore_skips_machines_without_summary_and_rejects_garbage() {
+        let text = r#"{"machines": [
+            {"name": "fresh", "total_ingested": 3},
+            {"name": "ready", "total_ingested": 9, "representatives": [4, 7],
+             "f_value": 1.5, "version": 2}
+        ]}"#;
+        let rs = restore(text).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].machine, "ready");
+        assert_eq!(rs[0].representative_seqs, vec![4, 7]);
+        assert!(restore("not json").is_err());
+        assert!(restore("{}").is_err());
+        assert!(restore(r#"{"machines": [{"total_ingested": 1}]}"#).is_err());
+    }
+}

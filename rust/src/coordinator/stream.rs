@@ -1,0 +1,139 @@
+//! Cycle ingestion sources.
+
+use crate::imm::{generate_dataset_with, Part, ProcessState};
+use crate::util::rng::Rng;
+
+/// One molding cycle arriving from a machine's sensor recorder.
+#[derive(Debug, Clone)]
+pub struct CycleRecord {
+    pub machine: String,
+    /// Machine-local monotone sequence number.
+    pub seq: u64,
+    /// Melt-pressure curve.
+    pub values: Vec<f32>,
+}
+
+/// A pullable stream of cycle records (None = exhausted).
+pub trait StreamSource {
+    fn next_record(&mut self) -> Option<CycleRecord>;
+}
+
+/// Simulated fleet: each machine replays a generated IMM campaign;
+/// records are interleaved round-robin with random skips, approximating
+/// asynchronous arrival.
+pub struct SimulatedFleet {
+    machines: Vec<FleetMachine>,
+    rng: Rng,
+    cursor: usize,
+}
+
+struct FleetMachine {
+    name: String,
+    data: crate::linalg::Matrix,
+    next: usize,
+    seq: u64,
+}
+
+impl SimulatedFleet {
+    /// Build a fleet of `specs` = (name, part, state) with `samples`-dim
+    /// cycles (use a small value in tests, 3524 for realism).
+    pub fn new(specs: &[(&str, Part, ProcessState)], samples: usize, seed: u64) -> SimulatedFleet {
+        let machines = specs
+            .iter()
+            .enumerate()
+            .map(|(i, (name, part, state))| FleetMachine {
+                name: name.to_string(),
+                data: generate_dataset_with(*part, *state, seed + i as u64, samples).cycles,
+                next: 0,
+                seq: 0,
+            })
+            .collect();
+        SimulatedFleet { machines, rng: Rng::new(seed ^ 0xF1EE7), cursor: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.machines.iter().map(|m| m.data.rows() - m.next).sum()
+    }
+}
+
+impl StreamSource for SimulatedFleet {
+    fn next_record(&mut self) -> Option<CycleRecord> {
+        let n = self.machines.len();
+        for _ in 0..n {
+            let i = self.cursor % n;
+            self.cursor += 1;
+            // random skip: not all machines produce at identical rates
+            if self.rng.f32() < 0.2 {
+                continue;
+            }
+            let m = &mut self.machines[i];
+            if m.next < m.data.rows() {
+                let rec = CycleRecord {
+                    machine: m.name.clone(),
+                    seq: m.seq,
+                    values: m.data.row(m.next).to_vec(),
+                };
+                m.next += 1;
+                m.seq += 1;
+                return Some(rec);
+            }
+        }
+        // fall back to strict order to drain the tail
+        for m in self.machines.iter_mut() {
+            if m.next < m.data.rows() {
+                let rec = CycleRecord {
+                    machine: m.name.clone(),
+                    seq: m.seq,
+                    values: m.data.row(m.next).to_vec(),
+                };
+                m.next += 1;
+                m.seq += 1;
+                return Some(rec);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_drains_completely() {
+        let mut fleet = SimulatedFleet::new(
+            &[
+                ("a", Part::Cover, ProcessState::Stable),
+                ("b", Part::Plate, ProcessState::StartUp),
+            ],
+            32,
+            1,
+        );
+        let total = fleet.remaining();
+        assert_eq!(total, 2000);
+        let mut count = 0;
+        let mut per_machine = std::collections::BTreeMap::new();
+        while let Some(rec) = fleet.next_record() {
+            count += 1;
+            *per_machine.entry(rec.machine.clone()).or_insert(0u64) += 1;
+            assert_eq!(rec.values.len(), 32);
+        }
+        assert_eq!(count, total);
+        assert_eq!(per_machine["a"], 1000);
+        assert_eq!(per_machine["b"], 1000);
+    }
+
+    #[test]
+    fn seq_monotone_per_machine() {
+        let mut fleet =
+            SimulatedFleet::new(&[("a", Part::Cover, ProcessState::Stable)], 16, 2);
+        let mut last = None;
+        while let Some(rec) = fleet.next_record() {
+            if let Some(l) = last {
+                assert_eq!(rec.seq, l + 1);
+            }
+            last = Some(rec.seq);
+        }
+        assert_eq!(last, Some(999));
+    }
+}

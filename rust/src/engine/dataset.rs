@@ -1,0 +1,82 @@
+//! Device-resident ground set.
+//!
+//! The paper (§4.2 Memory Layout): *"Since the ground matrix never
+//! changes between different function evaluations it is copied to the
+//! GPU's global memory on algorithm initialization."* — here: the padded
+//! V / vsq / vmask trio is uploaded once per bucket shape and cached;
+//! every subsequent call only transfers the per-call payload (mindist,
+//! candidates or packed sets).
+
+use crate::engine::tiling::{mask, pad_matrix, pad_vec};
+use crate::linalg::{sq_norms, Matrix};
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Ground-set buffers for one (n_pad, d_pad) bucket.
+pub struct GroundBuffers {
+    pub v: xla::PjRtBuffer,
+    pub vsq: xla::PjRtBuffer,
+    pub vmask: xla::PjRtBuffer,
+    /// mindist column pre-filled with +BIG — reused by dist-column calls.
+    pub big: xla::PjRtBuffer,
+}
+
+/// A dataset registered with the engine: host copy + per-bucket device
+/// buffer cache.
+pub struct DeviceDataset {
+    v: Matrix,
+    vsq: Vec<f32>,
+    buffers: HashMap<(usize, usize), GroundBuffers>,
+    pub upload_bytes: u64,
+}
+
+pub const BIG: f32 = 1e30;
+
+impl DeviceDataset {
+    pub fn new(v: Matrix) -> DeviceDataset {
+        let vsq = sq_norms(v.data(), v.cols());
+        DeviceDataset { v, vsq, buffers: HashMap::new(), upload_bytes: 0 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.v.rows()
+    }
+    pub fn d(&self) -> usize {
+        self.v.cols()
+    }
+    pub fn ground(&self) -> &Matrix {
+        &self.v
+    }
+    pub fn vsq(&self) -> &[f32] {
+        &self.vsq
+    }
+
+    /// Get (uploading on first use) the ground buffers for a bucket.
+    pub fn buffers(&mut self, rt: &Runtime, n_pad: usize, d_pad: usize) -> Result<&GroundBuffers> {
+        if !self.buffers.contains_key(&(n_pad, d_pad)) {
+            let vp = pad_matrix(&self.v, n_pad, d_pad);
+            let vsqp = pad_vec(&self.vsq, n_pad, 0.0);
+            let vmaskp = mask(self.n(), n_pad);
+            let bigp = vec![BIG; n_pad];
+            let gb = GroundBuffers {
+                v: rt.upload(&vp, &[n_pad, d_pad])?,
+                vsq: rt.upload(&vsqp, &[n_pad])?,
+                vmask: rt.upload(&vmaskp, &[n_pad])?,
+                big: rt.upload(&bigp, &[n_pad])?,
+            };
+            self.upload_bytes += 4 * (vp.len() + vsqp.len() + vmaskp.len() + bigp.len()) as u64;
+            log::debug!(
+                "dataset: uploaded ground bucket ({n_pad}, {d_pad}) = {:.1} MB",
+                4.0 * vp.len() as f64 / 1e6
+            );
+            self.buffers.insert((n_pad, d_pad), gb);
+        }
+        Ok(self.buffers.get(&(n_pad, d_pad)).unwrap())
+    }
+
+    /// Number of distinct bucket uploads so far.
+    pub fn bucket_count(&self) -> usize {
+        self.buffers.len()
+    }
+}

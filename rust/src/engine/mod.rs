@@ -1,0 +1,281 @@
+//! The accelerated EBC evaluation engine — the Rust face of the paper's
+//! contribution. It drives the AOT-compiled Pallas/JAX work-matrix
+//! graphs through PJRT, with the paper's memory discipline:
+//!
+//! * ground set uploaded **once** per bucket ([`dataset::DeviceDataset`]);
+//! * per-call payload (candidate batch / packed evaluation-set matrix)
+//!   shipped in a single transfer each (paper §4.2 Memory Layout);
+//! * all shapes padded + masked to fixed buckets ([`tiling`]);
+//! * precision selectable per engine: f32 or bf16 (the paper's FP32/FP16
+//!   axis, DESIGN.md §4).
+//!
+//! [`XlaOracle`] adapts the engine to the [`crate::submodular::Oracle`]
+//! trait so every optimizer in [`crate::optim`] runs on it unchanged.
+
+pub mod dataset;
+pub mod tiling;
+
+pub use crate::runtime::artifact::{KernelImpl, Precision};
+pub use dataset::DeviceDataset;
+
+use crate::linalg::Matrix;
+use crate::runtime::Runtime;
+use crate::submodular::{EbcFunction, Oracle};
+use crate::util::timer::Profile;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use tiling::{mask, pad_matrix, pad_vec, pack_sets};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub precision: Precision,
+    /// Fall back to the CPU evaluator when no bucket fits (otherwise error).
+    pub cpu_fallback: bool,
+    /// Preferred kernel implementation. `Jnp` (default) is the fused
+    /// fast path on the CPU PJRT backend; `Pallas` selects the tiled
+    /// TPU-shaped L1 kernels (see EXPERIMENTS.md §Perf). The manifest
+    /// pick falls back to the other impl when no bucket of the
+    /// preferred impl fits.
+    pub kernel: KernelImpl,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            precision: Precision::F32,
+            cpu_fallback: true,
+            kernel: KernelImpl::Jnp,
+        }
+    }
+}
+
+/// The batched evaluation engine.
+#[derive(Clone)]
+pub struct Engine {
+    rt: Runtime,
+    cfg: EngineConfig,
+    pub profile: Arc<Profile>,
+    work: Arc<AtomicU64>,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Engine {
+        Engine { rt, cfg, profile: Arc::new(Profile::new()), work: Arc::new(AtomicU64::new(0)) }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.cfg.precision
+    }
+
+    /// Batched greedy marginal gains for external candidate vectors.
+    ///
+    /// Returns Δf(c_j | S) for each row of `cands` given the state
+    /// `mindist` over `ds`'s ground set.
+    pub fn gains(
+        &self,
+        ds: &mut DeviceDataset,
+        mindist: &[f32],
+        cands: &Matrix,
+    ) -> Result<Vec<f32>> {
+        let (n, d, c) = (ds.n(), ds.d(), cands.rows());
+        assert_eq!(mindist.len(), n);
+        assert_eq!(cands.cols(), d);
+        let entry = match self
+            .rt
+            .manifest()
+            .pick_gains(n, d, c, self.cfg.precision, self.cfg.kernel)
+        {
+            Some(e) => e.clone(),
+            None => {
+                // candidate batch exceeds every C bucket: chunk it over
+                // the largest-C bucket that fits (n, d)
+                let largest = self
+                    .rt
+                    .manifest()
+                    .pick_gains_largest_c(n, d, self.cfg.precision, self.cfg.kernel)
+                    .ok_or_else(|| anyhow!("no gains bucket fits (n={n}, d={d})"))?
+                    .clone();
+                let mut out = Vec::with_capacity(c);
+                let idx: Vec<usize> = (0..c).collect();
+                for chunk in idx.chunks(largest.c) {
+                    let sub = cands.gather(chunk);
+                    out.extend(self.gains(ds, mindist, &sub)?);
+                }
+                return Ok(out);
+            }
+        };
+        let graph = self.rt.load(&entry)?;
+        let gb = ds.buffers(&self.rt, entry.n, entry.d)?;
+
+        let out = self.profile.scope("engine.gains", || -> Result<_> {
+            let mind_b = self.rt.upload(&pad_vec(mindist, entry.n, 0.0), &[entry.n])?;
+            let c_b = self
+                .rt
+                .upload(&pad_matrix(cands, entry.c, entry.d), &[entry.c, entry.d])?;
+            let cmask_b = self.rt.upload(&mask(c, entry.c), &[entry.c])?;
+            let outs = graph
+                .execute_buffers(&[&gb.v, &gb.vsq, &gb.vmask, &mind_b, &c_b, &cmask_b])?;
+            Ok(outs[0].to_vec::<f32>()?)
+        })?;
+        self.work.fetch_add((n * c) as u64, Ordering::Relaxed);
+        Ok(out[..c].to_vec())
+    }
+
+    /// d²(v_i, s) for every ground vector (one column of the distance
+    /// matrix) — implemented as `update` with mindist = +BIG.
+    pub fn dist_col_vec(&self, ds: &mut DeviceDataset, s: &[f32]) -> Result<Vec<f32>> {
+        let (nm, _f) = self.update_inner(ds, None, s)?;
+        Ok(nm)
+    }
+
+    /// Fold a selected exemplar into the state on-device:
+    /// returns (new mindist, new f value).
+    pub fn update(
+        &self,
+        ds: &mut DeviceDataset,
+        mindist: &[f32],
+        s: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        self.update_inner(ds, Some(mindist), s)
+    }
+
+    fn update_inner(
+        &self,
+        ds: &mut DeviceDataset,
+        mindist: Option<&[f32]>,
+        s: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        let (n, d) = (ds.n(), ds.d());
+        assert_eq!(s.len(), d);
+        let entry = self
+            .rt
+            .manifest()
+            .pick_update(n, d, self.cfg.precision)
+            .ok_or_else(|| anyhow!("no update bucket fits (n={n}, d={d})"))?
+            .clone();
+        let graph = self.rt.load(&entry)?;
+        let gb = ds.buffers(&self.rt, entry.n, entry.d)?;
+
+        let (nm, f) = self.profile.scope("engine.update", || -> Result<_> {
+            let s_b = self.rt.upload(&pad_vec(s, entry.d, 0.0), &[entry.d])?;
+            let outs = match mindist {
+                Some(md) => {
+                    assert_eq!(md.len(), n);
+                    let mind_b = self.rt.upload(&pad_vec(md, entry.n, 0.0), &[entry.n])?;
+                    graph.execute_buffers(&[&gb.v, &gb.vsq, &gb.vmask, &mind_b, &s_b])?
+                }
+                // +BIG state: output column == raw distances
+                None => graph.execute_buffers(&[&gb.v, &gb.vsq, &gb.vmask, &gb.big, &s_b])?,
+            };
+            let nm = outs[0].to_vec::<f32>()?;
+            let f = outs[1].to_vec::<f32>()?[0];
+            Ok((nm, f))
+        })?;
+        self.work.fetch_add(n as u64, Ordering::Relaxed);
+        Ok((nm[..n].to_vec(), f))
+    }
+
+    /// Work-matrix evaluation of many sets at once (paper Algorithm 2):
+    /// EBC values f(S_j) for sets of ground-row indices.
+    pub fn eval_sets(&self, ds: &mut DeviceDataset, sets: &[&[usize]]) -> Result<Vec<f32>> {
+        let (n, d) = (ds.n(), ds.d());
+        let l = sets.len();
+        let kmax = sets.iter().map(|s| s.len()).max().unwrap_or(0).max(1);
+        let entry = match self
+            .rt
+            .manifest()
+            .pick_eval_multi(l, kmax, n, d, self.cfg.precision, self.cfg.kernel)
+        {
+            Some(e) => e.clone(),
+            None if self.cfg.cpu_fallback => {
+                log::warn!(
+                    "eval_sets: no bucket fits (l={l}, k={kmax}, n={n}, d={d}); CPU fallback"
+                );
+                let f = EbcFunction::new(ds.ground().clone());
+                return Ok(f.eval_sets_st(sets));
+            }
+            None => return Err(anyhow!("no eval_multi bucket fits (l={l}, k={kmax})")),
+        };
+        let graph = self.rt.load(&entry)?;
+        // pack before taking the ground-buffer borrow
+        let (s_flat, smask) = pack_sets(ds.ground(), sets, entry.l, entry.k, entry.d);
+        let gb = ds.buffers(&self.rt, entry.n, entry.d)?;
+
+        let out = self.profile.scope("engine.eval_sets", || -> Result<_> {
+            let s_b = self.rt.upload(&s_flat, &[entry.l * entry.k, entry.d])?;
+            let smask_b = self.rt.upload(&smask, &[entry.l * entry.k])?;
+            let outs = graph.execute_buffers(&[&gb.v, &gb.vsq, &gb.vmask, &s_b, &smask_b])?;
+            Ok(outs[0].to_vec::<f32>()?)
+        })?;
+        self.work
+            .fetch_add((n * sets.iter().map(|s| s.len()).sum::<usize>()) as u64, Ordering::Relaxed);
+        Ok(out[..l].to_vec())
+    }
+
+    pub fn work_counter(&self) -> u64 {
+        self.work.load(Ordering::Relaxed)
+    }
+}
+
+/// [`Oracle`] adapter: optimizers drive the engine exactly like the CPU
+/// baselines. Holds the dataset + a CPU mirror for index gathering.
+pub struct XlaOracle {
+    engine: Engine,
+    ds: DeviceDataset,
+}
+
+impl XlaOracle {
+    pub fn new(engine: Engine, v: Matrix) -> XlaOracle {
+        XlaOracle { ds: DeviceDataset::new(v), engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn dataset(&mut self) -> &mut DeviceDataset {
+        &mut self.ds
+    }
+}
+
+impl Oracle for XlaOracle {
+    fn n(&self) -> usize {
+        self.ds.n()
+    }
+    fn dim(&self) -> usize {
+        self.ds.d()
+    }
+    fn vsq(&self) -> &[f32] {
+        self.ds.vsq()
+    }
+
+    fn gains(&mut self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
+        let cmat = self.ds.ground().gather(cands);
+        self.engine
+            .gains(&mut self.ds, mindist, &cmat)
+            .expect("engine gains")
+    }
+
+    fn dist_col(&mut self, j: usize) -> Vec<f32> {
+        let s = self.ds.ground().row(j).to_vec();
+        self.engine
+            .dist_col_vec(&mut self.ds, &s)
+            .expect("engine dist_col")
+    }
+
+    fn eval_sets(&mut self, sets: &[&[usize]]) -> Vec<f32> {
+        self.engine
+            .eval_sets(&mut self.ds, sets)
+            .expect("engine eval_sets")
+    }
+
+    fn work_counter(&self) -> u64 {
+        self.engine.work_counter()
+    }
+}

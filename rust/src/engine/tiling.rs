@@ -1,0 +1,109 @@
+//! Padding/packing policy: every request is padded up to the fixed
+//! shapes of the chosen artifact bucket and masked (DESIGN.md §5).
+//!
+//! * zero-padded feature dims are exact for squared Euclidean
+//!   (they contribute (0−0)² = 0);
+//! * padded ground rows carry `vmask = 0` → excluded from every mean;
+//! * padded candidates carry `cmask = 0` → gain forced to −BIG;
+//! * padded set slots carry `smask = 0` → distance forced to +BIG
+//!   (never win the min) — the paper's "entry simply remains empty".
+
+use crate::linalg::Matrix;
+
+/// Pack a (rows x cols) matrix into a zero-padded row-major buffer of
+/// shape (rows_pad x cols_pad).
+pub fn pad_matrix(m: &Matrix, rows_pad: usize, cols_pad: usize) -> Vec<f32> {
+    assert!(rows_pad >= m.rows() && cols_pad >= m.cols());
+    let mut out = vec![0f32; rows_pad * cols_pad];
+    for i in 0..m.rows() {
+        out[i * cols_pad..i * cols_pad + m.cols()].copy_from_slice(m.row(i));
+    }
+    out
+}
+
+/// Zero-pad a vector to `len`, filling with `fill`.
+pub fn pad_vec(v: &[f32], len: usize, fill: f32) -> Vec<f32> {
+    assert!(len >= v.len());
+    let mut out = vec![fill; len];
+    out[..v.len()].copy_from_slice(v);
+    out
+}
+
+/// 1/0 mask with `real` ones followed by `len - real` zeros.
+pub fn mask(real: usize, len: usize) -> Vec<f32> {
+    assert!(len >= real);
+    let mut m = vec![0f32; len];
+    m[..real].fill(1.0);
+    m
+}
+
+/// Pack ragged index sets into the dense evaluation-set matrix of the
+/// paper's memory layout: rows gathered from `ground`, `k_pad` slots per
+/// set, `l_pad` sets. Returns (s_flat, smask_flat) with s_flat of shape
+/// (l_pad * k_pad, d_pad) row-major.
+pub fn pack_sets(
+    ground: &Matrix,
+    sets: &[&[usize]],
+    l_pad: usize,
+    k_pad: usize,
+    d_pad: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert!(l_pad >= sets.len());
+    let d = ground.cols();
+    assert!(d_pad >= d);
+    let mut s_flat = vec![0f32; l_pad * k_pad * d_pad];
+    let mut smask = vec![0f32; l_pad * k_pad];
+    for (j, set) in sets.iter().enumerate() {
+        assert!(set.len() <= k_pad, "set {j} larger than k bucket");
+        for (slot, &idx) in set.iter().enumerate() {
+            let row = (j * k_pad + slot) * d_pad;
+            s_flat[row..row + d].copy_from_slice(ground.row(idx));
+            smask[j * k_pad + slot] = 1.0;
+        }
+    }
+    (s_flat, smask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_matrix_layout() {
+        let m = Matrix::from_rows(&[&[1., 2.], &[3., 4.]]);
+        let p = pad_matrix(&m, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1., 2., 0., 0.]);
+        assert_eq!(&p[4..8], &[3., 4., 0., 0.]);
+        assert_eq!(&p[8..12], &[0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn mask_and_pad_vec() {
+        assert_eq!(mask(2, 4), vec![1., 1., 0., 0.]);
+        assert_eq!(pad_vec(&[5., 6.], 4, 9.), vec![5., 6., 9., 9.]);
+    }
+
+    #[test]
+    fn pack_sets_layout() {
+        let g = Matrix::from_rows(&[&[1., 1.], &[2., 2.], &[3., 3.]]);
+        let sets: Vec<&[usize]> = vec![&[2], &[0, 1]];
+        let (s, m) = pack_sets(&g, &sets, 3, 2, 3);
+        // set 0 slot 0 = row 2
+        assert_eq!(&s[0..3], &[3., 3., 0.]);
+        // set 0 slot 1 empty
+        assert_eq!(&s[3..6], &[0., 0., 0.]);
+        // set 1 slots = rows 0, 1
+        assert_eq!(&s[6..9], &[1., 1., 0.]);
+        assert_eq!(&s[9..12], &[2., 2., 0.]);
+        assert_eq!(m, vec![1., 0., 1., 1., 0., 0.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than k bucket")]
+    fn pack_sets_rejects_oversized() {
+        let g = Matrix::from_rows(&[&[1.], &[2.], &[3.]]);
+        let sets: Vec<&[usize]> = vec![&[0, 1, 2]];
+        pack_sets(&g, &sets, 1, 2, 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Analytical device performance model (DESIGN.md §S9).
+//!
+//! We do not have the paper's four testbeds (NVIDIA Quadro RTX 5000,
+//! Jetson TX2, Intel Xeon W-2155, ARM Cortex-A72). This module predicts
+//! their wall-clock for an EBC evaluation workload from a roofline-style
+//! model — compute throughput vs. memory bandwidth vs. interconnect —
+//! and regenerates the *shape* of the paper's Table 1 (who wins, by
+//! roughly what factor, FP16 vs FP32, workstation vs embedded).
+
+pub mod devices;
+pub mod roofline;
+
+pub use devices::{
+    a72_mt, mt_variant, xeon_mt, DeviceClass, DeviceSpec, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
+};
+pub use roofline::{predict_seconds, speedup, EbcWorkload, Precision as ModelPrecision};

@@ -1,0 +1,172 @@
+//! Roofline prediction for the EBC multi-set evaluation workload.
+//!
+//! Workload model (paper §4): evaluating `l` sets of `k` exemplars
+//! against `N` ground vectors of dimension `d` costs
+//!
+//! * FLOPs:   3 · N · l · k · d      (sub, mul, add per element)
+//! * traffic: the ground tile is cached (shared memory / VMEM / L2), so
+//!   DRAM traffic ≈ N·d + l·k·d reads + N·l write of the work matrix,
+//!   in `bytes_per_elem`;
+//! * link:    payload upload l·k·d (ground set resident per the paper);
+//! * launch:  one kernel + one reduce launch.
+//!
+//! Predicted time = max(compute, memory) + link + launches — the
+//! standard overlap-free roofline upper bound.
+
+use super::devices::{DeviceClass, DeviceSpec};
+
+/// Precision of the modeled run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+}
+
+impl Precision {
+    pub fn bytes(&self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Fp16 => 2.0,
+        }
+    }
+}
+
+/// An EBC multi-set evaluation problem instance (the paper's N, l, k, d).
+#[derive(Debug, Clone, Copy)]
+pub struct EbcWorkload {
+    pub n: usize,
+    pub l: usize,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl EbcWorkload {
+    pub fn flops(&self) -> f64 {
+        3.0 * self.n as f64 * self.l as f64 * self.k as f64 * self.d as f64
+    }
+
+    /// DRAM traffic in elements (ground tile cached on-chip per block).
+    pub fn dram_elems(&self) -> f64 {
+        let ground = self.n as f64 * self.d as f64;
+        let sets = self.l as f64 * self.k as f64 * self.d as f64;
+        let work_matrix = self.n as f64 * self.l as f64;
+        ground + sets + work_matrix
+    }
+
+    /// Per-call interconnect payload in elements (sets only; V resident).
+    pub fn link_elems(&self) -> f64 {
+        self.l as f64 * self.k as f64 * self.d as f64
+    }
+}
+
+/// Predicted wall-clock seconds for one evaluation on `dev`.
+pub fn predict_seconds(dev: &DeviceSpec, w: &EbcWorkload, p: Precision) -> f64 {
+    let flops = w.flops();
+    let gflops = dev.fp32_gflops
+        * dev.efficiency
+        * if p == Precision::Fp16 { dev.fp16_speedup } else { 1.0 };
+    let t_compute = flops / (gflops * 1e9);
+
+    let bytes = w.dram_elems() * p.bytes();
+    let t_mem = bytes / (dev.mem_bw_gbs * 1e9);
+
+    let t_link = match dev.class {
+        DeviceClass::DiscreteGpu => w.link_elems() * p.bytes() / (dev.link_bw_gbs * 1e9),
+        _ => 0.0,
+    };
+
+    let t_launch = 2.0 * dev.launch_overhead_us * 1e-6;
+
+    t_compute.max(t_mem) + t_link + t_launch
+}
+
+/// Speedup of `fast` over `slow` on the same workload.
+/// `p_fast`/`p_slow` may differ — the paper's FP16-GPU-vs-FP32-CPU cells.
+pub fn speedup(
+    fast: &DeviceSpec,
+    p_fast: Precision,
+    slow: &DeviceSpec,
+    p_slow: Precision,
+    w: &EbcWorkload,
+) -> f64 {
+    predict_seconds(slow, w, p_slow) / predict_seconds(fast, w, p_fast)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpumodel::devices::*;
+
+    fn paper_base() -> EbcWorkload {
+        // the paper's initial point: N=50000, l=5000, k=10, d=100
+        EbcWorkload { n: 50_000, l: 5_000, k: 10, d: 100 }
+    }
+
+    #[test]
+    fn quadro_vs_xeon_fp32_in_paper_band() {
+        // paper Table 1: FP32 ST speedups 34x–72x
+        let s = speedup(
+            &QUADRO_RTX_5000,
+            Precision::Fp32,
+            &XEON_W2155,
+            Precision::Fp32,
+            &paper_base(),
+        );
+        assert!((20.0..150.0).contains(&s), "modeled {s}x outside plausibility band");
+    }
+
+    #[test]
+    fn fp16_beats_fp32_on_gpu() {
+        let w = paper_base();
+        let f32t = predict_seconds(&QUADRO_RTX_5000, &w, Precision::Fp32);
+        let f16t = predict_seconds(&QUADRO_RTX_5000, &w, Precision::Fp16);
+        assert!(f16t < f32t);
+    }
+
+    #[test]
+    fn tx2_vs_a72_smaller_than_quadro_vs_xeon() {
+        // the paper's embedded speedups (<= ~35x) are far below the
+        // workstation ones (<= ~450x)
+        let w = paper_base();
+        let emb = speedup(&TX2, Precision::Fp32, &A72, Precision::Fp32, &w);
+        let wk = speedup(&QUADRO_RTX_5000, Precision::Fp16, &XEON_W2155, Precision::Fp32, &w);
+        assert!(emb < wk);
+        assert!(emb > 1.0, "TX2 must beat the A72 ({emb}x)");
+    }
+
+    #[test]
+    fn tiny_workload_hurts_gpu() {
+        // launch + PCIe overhead dominates small problems: speedup shrinks
+        let tiny = EbcWorkload { n: 100, l: 2, k: 2, d: 10 };
+        let big = paper_base();
+        let s_tiny = speedup(&QUADRO_RTX_5000, Precision::Fp32, &XEON_W2155, Precision::Fp32, &tiny);
+        let s_big = speedup(&QUADRO_RTX_5000, Precision::Fp32, &XEON_W2155, Precision::Fp32, &big);
+        assert!(s_tiny < s_big);
+    }
+
+    #[test]
+    fn mt_xeon_closes_gap() {
+        // paper: MT CPU reduces the GPU advantage to 3.3x–5.1x (FP32)
+        let w = paper_base();
+        let s = speedup(&QUADRO_RTX_5000, Precision::Fp32, &xeon_mt(), Precision::Fp32, &w);
+        let st = speedup(&QUADRO_RTX_5000, Precision::Fp32, &XEON_W2155, Precision::Fp32, &w);
+        assert!(s < st);
+        assert!((2.0..8.0).contains(&s), "{s}x outside the paper's MT band shape");
+    }
+
+    #[test]
+    fn fp16_band_matches_paper_scale() {
+        // paper Table 1 FP16 vs FP32-CPU (ST): mean ~ 250-400x at the base point
+        let w = paper_base();
+        let s = speedup(&QUADRO_RTX_5000, Precision::Fp16, &XEON_W2155, Precision::Fp32, &w);
+        assert!((100.0..500.0).contains(&s), "{s}");
+    }
+
+    #[test]
+    fn embedded_band_matches_paper_scale() {
+        // paper: TX2 fp32 vs A72 ST = 4.3-6x
+        let w = paper_base();
+        let s = speedup(&TX2, Precision::Fp32, &A72, Precision::Fp32, &w);
+        assert!((3.0..9.0).contains(&s), "{s}");
+    }
+}

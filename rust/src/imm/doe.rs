@@ -1,0 +1,113 @@
+//! Central composite design (CCD) for the case study's DOE state.
+//!
+//! The paper: *"The DOE is a central composite design with star points
+//! and central point, yielding a total of 43 different machine
+//! settings"* — that is the 5-factor CCD: 2⁵ = 32 factorial corners +
+//! 2·5 = 10 star points + 1 center = 43.
+//!
+//! Factors (coded −1..+1, star at ±α): melt temperature, injection
+//! speed, holding pressure, back pressure, cooling time. Each maps onto
+//! [`CycleParams`] through first-order process physics.
+
+use crate::imm::simulator::CycleParams;
+
+/// Number of process factors.
+pub const FACTORS: usize = 5;
+
+/// One DOE operating point in coded units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignPoint {
+    /// coded levels: [melt_temp, inj_speed, hold_press, back_press, cool_time]
+    pub coded: [f32; FACTORS],
+}
+
+/// Full 5-factor CCD: 32 corners, 10 star points (α = 2.0), 1 center.
+pub fn central_composite() -> Vec<DesignPoint> {
+    let mut pts = Vec::with_capacity(43);
+    // factorial corners
+    for mask in 0..(1u32 << FACTORS) {
+        let mut coded = [0f32; FACTORS];
+        for (f, c) in coded.iter_mut().enumerate() {
+            *c = if mask & (1 << f) != 0 { 1.0 } else { -1.0 };
+        }
+        pts.push(DesignPoint { coded });
+    }
+    // star points
+    const ALPHA: f32 = 2.0;
+    for f in 0..FACTORS {
+        for sign in [-1.0f32, 1.0] {
+            let mut coded = [0f32; FACTORS];
+            coded[f] = sign * ALPHA;
+            pts.push(DesignPoint { coded });
+        }
+    }
+    // center
+    pts.push(DesignPoint { coded: [0.0; FACTORS] });
+    pts
+}
+
+impl DesignPoint {
+    /// Map coded levels to cycle parameters.
+    ///
+    /// Opposing effects are deliberate (the paper explains why fewer
+    /// than 43 sections surface among the representatives): higher melt
+    /// temperature *lowers* viscosity/pressure while higher injection
+    /// speed *raises* pressure, so some corners nearly cancel.
+    pub fn params(&self) -> CycleParams {
+        let [temp, speed, hold, back, _cool] = self.coded;
+        CycleParams {
+            // Arrhenius-ish: hot melt -> thinner
+            viscosity: (1.0 - 0.06 * temp).clamp(0.6, 1.4),
+            injection_speed: (1.0 + 0.08 * speed).clamp(0.6, 1.4),
+            holding_factor: (1.0 + 0.07 * hold).clamp(0.6, 1.4),
+            back_factor: (1.0 + 0.10 * back).clamp(0.6, 1.4),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ccd_has_43_points() {
+        let pts = central_composite();
+        assert_eq!(pts.len(), 43);
+        // all distinct
+        for i in 0..pts.len() {
+            for j in i + 1..pts.len() {
+                assert_ne!(pts[i], pts[j], "duplicate design points {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn structure_counts() {
+        let pts = central_composite();
+        let corners = pts.iter().filter(|p| p.coded.iter().all(|c| c.abs() == 1.0)).count();
+        let stars = pts
+            .iter()
+            .filter(|p| p.coded.iter().filter(|c| c.abs() > 1.5).count() == 1
+                && p.coded.iter().filter(|c| **c == 0.0).count() == FACTORS - 1)
+            .count();
+        let center = pts.iter().filter(|p| p.coded.iter().all(|c| *c == 0.0)).count();
+        assert_eq!((corners, stars, center), (32, 10, 1));
+    }
+
+    #[test]
+    fn opposing_factors_can_cancel() {
+        // hot melt + fast injection ≈ nominal peak (the paper's explanation)
+        let both = DesignPoint { coded: [1.0, 1.0, 0.0, 0.0, 0.0] }.params();
+        let peak_proxy = both.viscosity.powf(0.8) * both.injection_speed.powf(0.6);
+        assert!((peak_proxy - 1.0).abs() < 0.05, "{peak_proxy}");
+    }
+
+    #[test]
+    fn params_in_valid_range() {
+        for p in central_composite() {
+            let cp = p.params();
+            assert!(cp.viscosity >= 0.6 && cp.viscosity <= 1.4);
+            assert!(cp.injection_speed >= 0.6 && cp.injection_speed <= 1.4);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Injection-molding machine (IMM) process simulator — the substrate for
+//! the paper's §6 case study (Table 2, Fig. 4), standing in for the
+//! proprietary Weppler production data (DESIGN.md §4).
+//!
+//! The simulator synthesizes **melt-pressure time series** for complete
+//! molding cycles — the sensor the paper selects for its analysis — and
+//! reproduces each induced process state's signature:
+//!
+//! * **start-up**: thermal non-equilibrium decaying toward steady state;
+//! * **stable**: stationary noise around the operating point;
+//! * **downtimes**: stop every 100 cycles, thermal re-approach afterwards;
+//! * **regrind**: material fraction stepped 0→100 % every 200 cycles,
+//!   shifting melt viscosity (peak injection pressure + plasticization
+//!   time — the two effects visible in the paper's Fig. 4);
+//! * **DOE**: a 5-factor central composite design (2⁵ + 2·5 + 1 = 43
+//!   operating points, 20 cycles each = 860 cycles, as in the paper).
+
+pub mod casestudy;
+pub mod dataset;
+pub mod doe;
+pub mod parts;
+pub mod simulator;
+pub mod states;
+
+pub use dataset::{generate_dataset, CaseDataset};
+pub use dataset::generate_dataset_with;
+pub use parts::{Part, PartSpec};
+pub use simulator::{CycleParams, MeltPressureModel, CYCLE_SAMPLES};
+pub use states::ProcessState;

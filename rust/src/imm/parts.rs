@@ -1,0 +1,94 @@
+//! The two molded parts of the case study. Geometry drives the nominal
+//! process parameters: the *plate* is thin-walled and long-flow (high
+//! injection pressure, long holding), the *cover* is boxier (lower peak,
+//! more plasticization volume).
+
+/// Which part is being molded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Part {
+    Cover,
+    Plate,
+}
+
+impl Part {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Part::Cover => "cover",
+            Part::Plate => "plate",
+        }
+    }
+    pub fn all() -> [Part; 2] {
+        [Part::Cover, Part::Plate]
+    }
+}
+
+/// Nominal process parameters of a part (operating point).
+#[derive(Debug, Clone, Copy)]
+pub struct PartSpec {
+    /// Peak melt pressure during injection at nominal viscosity [bar].
+    pub peak_pressure: f32,
+    /// Holding-phase pressure [bar].
+    pub holding_pressure: f32,
+    /// Plasticization back-pressure [bar].
+    pub back_pressure: f32,
+    /// Injection phase duration, fraction of the recorded window.
+    pub t_injection: f32,
+    /// Holding phase duration fraction.
+    pub t_holding: f32,
+    /// Decompression-1 duration fraction.
+    pub t_decomp1: f32,
+    /// Nominal plasticization duration fraction (viscosity shifts it).
+    pub t_plast: f32,
+    /// Sensor noise std [bar].
+    pub noise: f32,
+}
+
+impl Part {
+    pub fn spec(&self) -> PartSpec {
+        match self {
+            // thin plate: long flow path -> high peak, long holding
+            Part::Plate => PartSpec {
+                peak_pressure: 1150.0,
+                holding_pressure: 520.0,
+                back_pressure: 95.0,
+                t_injection: 0.12,
+                t_holding: 0.34,
+                t_decomp1: 0.05,
+                t_plast: 0.30,
+                noise: 4.0,
+            },
+            // cover: larger volume, lower peak, longer plasticization
+            Part::Cover => PartSpec {
+                peak_pressure: 870.0,
+                holding_pressure: 430.0,
+                back_pressure: 120.0,
+                t_injection: 0.15,
+                t_holding: 0.28,
+                t_decomp1: 0.05,
+                t_plast: 0.36,
+                noise: 4.0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_are_physical() {
+        for p in Part::all() {
+            let s = p.spec();
+            assert!(s.peak_pressure > s.holding_pressure);
+            assert!(s.holding_pressure > s.back_pressure);
+            let total = s.t_injection + s.t_holding + s.t_decomp1 + s.t_plast;
+            assert!(total < 1.0, "{}: phases exceed window", p.name());
+        }
+    }
+
+    #[test]
+    fn parts_differ() {
+        assert!(Part::Plate.spec().peak_pressure > Part::Cover.spec().peak_pressure);
+    }
+}

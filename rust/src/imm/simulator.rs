@@ -1,0 +1,207 @@
+//! The melt-pressure cycle model.
+//!
+//! One recorded window spans injection → holding → decompression 1 →
+//! plasticization → decompression 2 (the paper sequences its time series
+//! with exactly these trigger signals) at [`CYCLE_SAMPLES`] samples —
+//! d = 3524, the dimensionality of the paper's Fig. 3.
+//!
+//! Physics-inspired effects:
+//! * melt **viscosity** scales the injection peak (higher viscosity →
+//!   higher pressure at controlled injection speed) and stretches the
+//!   **plasticization time** (the two Fig. 4 effects);
+//! * **melt temperature** lowers viscosity (Arrhenius-like factor);
+//! * **injection speed** raises the peak;
+//! * thermal **non-equilibrium** raises effective viscosity (cold mold).
+
+use crate::imm::parts::PartSpec;
+use crate::util::rng::Rng;
+
+/// Samples per recorded cycle window — the paper's d = 3524.
+pub const CYCLE_SAMPLES: usize = 3524;
+
+/// Per-cycle physical parameters (after all state effects are applied).
+#[derive(Debug, Clone, Copy)]
+pub struct CycleParams {
+    /// Relative melt viscosity (1.0 = nominal).
+    pub viscosity: f32,
+    /// Relative injection speed (1.0 = nominal).
+    pub injection_speed: f32,
+    /// Relative holding pressure (1.0 = nominal).
+    pub holding_factor: f32,
+    /// Relative back pressure (1.0 = nominal).
+    pub back_factor: f32,
+}
+
+impl Default for CycleParams {
+    fn default() -> Self {
+        CycleParams {
+            viscosity: 1.0,
+            injection_speed: 1.0,
+            holding_factor: 1.0,
+            back_factor: 1.0,
+        }
+    }
+}
+
+/// Deterministic-shape melt-pressure generator for one part.
+#[derive(Debug, Clone, Copy)]
+pub struct MeltPressureModel {
+    pub spec: PartSpec,
+    pub samples: usize,
+}
+
+impl MeltPressureModel {
+    pub fn new(spec: PartSpec) -> MeltPressureModel {
+        MeltPressureModel { spec, samples: CYCLE_SAMPLES }
+    }
+
+    /// Synthesize one cycle's melt-pressure curve.
+    pub fn cycle(&self, p: &CycleParams, rng: &mut Rng) -> Vec<f32> {
+        let s = &self.spec;
+        let n = self.samples;
+        let mut out = vec![0f32; n];
+
+        // phase boundaries (plasticization stretches with viscosity)
+        let n_inj = (s.t_injection * n as f32) as usize;
+        let n_hold = (s.t_holding * n as f32) as usize;
+        let n_dec1 = (s.t_decomp1 * n as f32) as usize;
+        let plast_stretch = 0.55 + 0.45 * p.viscosity; // Fig. 4 effect #2
+        let n_plast = ((s.t_plast * plast_stretch) * n as f32) as usize;
+
+        let peak = s.peak_pressure * p.viscosity.powf(0.8) * p.injection_speed.powf(0.6);
+        let hold = s.holding_pressure * p.holding_factor;
+        let back = s.back_pressure * p.back_factor * p.viscosity.powf(0.3);
+
+        let mut i = 0usize;
+        // --- injection: concave ramp to the peak -------------------------
+        for t in 0..n_inj {
+            let x = (t + 1) as f32 / n_inj as f32;
+            // filling front: pressure grows superlinearly near the end
+            out[i] = peak * (0.25 * x + 0.75 * x.powi(3));
+            i += 1;
+        }
+        // --- switchover + holding: fast settle to hold, slow decay -------
+        for t in 0..n_hold {
+            if i >= n {
+                break;
+            }
+            let x = t as f32 / n_hold.max(1) as f32;
+            let settle = (peak - hold) * (-14.0 * x).exp();
+            out[i] = hold * (1.0 - 0.12 * x) + settle;
+            i += 1;
+        }
+        // --- decompression 1: exponential drop to ~0 ---------------------
+        let p_start = out[i.saturating_sub(1)];
+        for t in 0..n_dec1 {
+            if i >= n {
+                break;
+            }
+            let x = (t + 1) as f32 / n_dec1.max(1) as f32;
+            out[i] = p_start * (-7.0 * x).exp();
+            i += 1;
+        }
+        // --- plasticization: back-pressure plateau with screw ripple -----
+        let plast_end = (i + n_plast).min(n);
+        let mut t = 0usize;
+        while i < plast_end {
+            let ripple = 1.0 + 0.05 * ((t as f32) * 0.11).sin();
+            out[i] = back * ripple;
+            i += 1;
+            t += 1;
+        }
+        // --- decompression 2 + idle rest of window -----------------------
+        let mut pcur = back;
+        while i < n {
+            pcur *= 0.97;
+            out[i] = pcur;
+            i += 1;
+        }
+
+        // sensor noise
+        for v in out.iter_mut() {
+            *v += rng.normal() * s.noise;
+        }
+        out
+    }
+
+    /// Peak injection pressure of a synthesized curve (diagnostics).
+    pub fn peak_of(curve: &[f32]) -> f32 {
+        curve.iter().cloned().fold(f32::MIN, f32::max)
+    }
+
+    /// Plasticization duration estimate: samples above 40% of back
+    /// pressure after the holding phase (diagnostics for Fig. 4 checks).
+    pub fn plast_samples_of(&self, curve: &[f32], params: &CycleParams) -> usize {
+        let s = &self.spec;
+        let start = ((s.t_injection + s.t_holding + s.t_decomp1) * self.samples as f32) as usize;
+        let thresh = 0.4 * s.back_pressure * params.back_factor;
+        curve[start.min(curve.len())..]
+            .iter()
+            .filter(|&&v| v > thresh)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imm::parts::Part;
+
+    fn model() -> MeltPressureModel {
+        MeltPressureModel::new(Part::Plate.spec())
+    }
+
+    #[test]
+    fn curve_has_expected_shape() {
+        let m = model();
+        let mut rng = Rng::new(1);
+        let c = m.cycle(&CycleParams::default(), &mut rng);
+        assert_eq!(c.len(), CYCLE_SAMPLES);
+        let peak = MeltPressureModel::peak_of(&c);
+        // peak during injection, close to spec
+        assert!((peak - m.spec.peak_pressure).abs() < 0.15 * m.spec.peak_pressure);
+        // end of window near zero
+        assert!(c[CYCLE_SAMPLES - 1].abs() < 50.0);
+        // holding plateau is below the peak and above back pressure
+        let hold_idx = ((m.spec.t_injection + 0.5 * m.spec.t_holding) * CYCLE_SAMPLES as f32) as usize;
+        assert!(c[hold_idx] < peak && c[hold_idx] > m.spec.back_pressure);
+    }
+
+    #[test]
+    fn viscosity_raises_peak_and_stretches_plasticization() {
+        // the two Fig. 4 effects
+        let m = model();
+        let mut rng = Rng::new(2);
+        let lo = CycleParams { viscosity: 0.8, ..Default::default() };
+        let hi = CycleParams { viscosity: 1.2, ..Default::default() };
+        let c_lo = m.cycle(&lo, &mut rng);
+        let c_hi = m.cycle(&hi, &mut rng);
+        assert!(
+            MeltPressureModel::peak_of(&c_hi) > MeltPressureModel::peak_of(&c_lo) + 50.0
+        );
+        assert!(m.plast_samples_of(&c_hi, &hi) > m.plast_samples_of(&c_lo, &lo));
+    }
+
+    #[test]
+    fn injection_speed_raises_peak() {
+        let m = model();
+        let mut rng = Rng::new(3);
+        let slow = m.cycle(&CycleParams { injection_speed: 0.8, ..Default::default() }, &mut rng);
+        let fast = m.cycle(&CycleParams { injection_speed: 1.2, ..Default::default() }, &mut rng);
+        assert!(MeltPressureModel::peak_of(&fast) > MeltPressureModel::peak_of(&slow));
+    }
+
+    #[test]
+    fn noise_makes_cycles_distinct_but_close() {
+        let m = model();
+        let mut rng = Rng::new(4);
+        let a = m.cycle(&CycleParams::default(), &mut rng);
+        let b = m.cycle(&CycleParams::default(), &mut rng);
+        let d2: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!(d2 > 0.0);
+        // nominal cycles stay close relative to a viscosity shift
+        let shifted = m.cycle(&CycleParams { viscosity: 1.2, ..Default::default() }, &mut rng);
+        let d2_shift: f32 = a.iter().zip(&shifted).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!(d2_shift > 10.0 * d2);
+    }
+}

@@ -1,0 +1,59 @@
+//! The five induced process states of the case study (paper §6).
+
+/// Induced process condition of one recorded dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProcessState {
+    /// Machine started at minimal temperature, far from equilibrium.
+    StartUp,
+    /// Thermal equilibrium, no external influences.
+    Stable,
+    /// Stopped every 100 cycles for varying durations.
+    Downtimes,
+    /// Regrind fraction stepped 0 → 100 % in five 200-cycle sections.
+    Regrind,
+    /// 43-point central composite design, 20 cycles per point.
+    Doe,
+}
+
+impl ProcessState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProcessState::StartUp => "start-up",
+            ProcessState::Stable => "stable process",
+            ProcessState::Downtimes => "downtimes",
+            ProcessState::Regrind => "regrind material",
+            ProcessState::Doe => "DOE",
+        }
+    }
+
+    pub fn all() -> [ProcessState; 5] {
+        [
+            ProcessState::StartUp,
+            ProcessState::Stable,
+            ProcessState::Downtimes,
+            ProcessState::Regrind,
+            ProcessState::Doe,
+        ]
+    }
+
+    /// Cycles recorded per dataset — 1000 everywhere except the DOE's
+    /// 43 × 20 = 860 (paper §6).
+    pub fn cycles(&self) -> usize {
+        match self {
+            ProcessState::Doe => 860,
+            _ => 1000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_paper() {
+        assert_eq!(ProcessState::Doe.cycles(), 860);
+        assert_eq!(ProcessState::Stable.cycles(), 1000);
+        assert_eq!(ProcessState::all().len(), 5);
+    }
+}

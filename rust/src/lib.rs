@@ -1,0 +1,86 @@
+//! # ebc-summarizer
+//!
+//! Production reproduction of *"Providing Meaningful Data Summarizations
+//! Using Exemplar-based Clustering in Industry 4.0"* (Honysz,
+//! Schulze-Struchtrup, Buschjäger, Morik — 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2** (build-time Python, `python/compile/`): Pallas work-matrix
+//!   kernels + JAX graphs, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3** (this crate): the coordinator — submodular optimizers, the
+//!   batched accelerator engine driving the AOT artifacts through PJRT,
+//!   the injection-molding case-study substrate, and a streaming
+//!   summarization service for machine fleets.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `ebc-summarizer` binary is self-contained.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | std-only infra: PRNG, stats, JSON, CSV, thread pool, timers |
+//! | [`linalg`] | dense row-major matrices + squared-Euclidean distances |
+//! | [`submodular`] | EBC (ST/MT CPU baselines, paper Alg. 1) + IVM |
+//! | [`optim`] | Greedy family + sieve-family streaming optimizers |
+//! | [`reduce`] | dimensionality reduction (JL projection, PCA) — paper §7 future work |
+//! | [`runtime`] | PJRT client, artifact manifest, loaded executables |
+//! | [`engine`] | the paper's contribution: batched multi-set evaluation |
+//! | [`gpumodel`] | analytical device model (Quadro/TX2/Xeon/A72) |
+//! | [`imm`] | injection-molding process simulator (case-study substrate) |
+//! | [`coordinator`] | streaming summarization service + router |
+//! | [`bench`] | bench harness (criterion unavailable offline) |
+//! | [`config`] | TOML-subset config system |
+//! | [`cli`] | argument parsing for the launcher binary |
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod gpumodel;
+pub mod imm;
+pub mod linalg;
+pub mod optim;
+pub mod reduce;
+pub mod runtime;
+pub mod submodular;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the `artifacts/` directory: `$EBC_ARTIFACTS` override, else
+/// walk up from the current dir / executable looking for
+/// `artifacts/manifest.json`.
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("EBC_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").is_file() {
+            return Some(p);
+        }
+    }
+    let mut starts = vec![];
+    if let Ok(cwd) = std::env::current_dir() {
+        starts.push(cwd);
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        if let Some(dir) = exe.parent() {
+            starts.push(dir.to_path_buf());
+        }
+    }
+    if let Ok(md) = std::env::var("CARGO_MANIFEST_DIR") {
+        starts.push(std::path::PathBuf::from(md));
+    }
+    for start in starts {
+        let mut cur = Some(start.as_path());
+        while let Some(dir) = cur {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").is_file() {
+                return Some(cand);
+            }
+            cur = dir.parent();
+        }
+    }
+    None
+}

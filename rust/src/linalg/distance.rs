@@ -1,0 +1,109 @@
+//! Squared-Euclidean distance kernels for the CPU baselines.
+//!
+//! The paper (§5) uses d(x, y) = ‖x − y‖₂² throughout; the ST/MT CPU
+//! implementations use the straightforward subtract-square-accumulate
+//! loop in chunks of 8 so LLVM autovectorizes it (the paper's baselines
+//! use OpenMP SIMD for the same inner reduction).
+
+/// ‖x − y‖₂², autovectorized 8-lane accumulation.
+#[inline]
+pub fn sq_euclidean(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let b = c * 8;
+        // fixed-width loop: LLVM lowers this to packed SIMD
+        for lane in 0..8 {
+            let d = x[b + lane] - y[b + lane];
+            acc[lane] += d * d;
+        }
+    }
+    let mut sum = acc.iter().sum::<f32>();
+    for i in chunks * 8..n {
+        let d = x[i] - y[i];
+        sum += d * d;
+    }
+    sum
+}
+
+/// Same as [`sq_euclidean`] but with early-exit: stops accumulating as
+/// soon as the partial sum exceeds `bound`, returning a value > bound.
+/// Used by the lazy CPU evaluator where only min distances matter.
+#[inline]
+pub fn sq_euclidean_accum(x: &[f32], y: &[f32], bound: f32) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut sum = 0f32;
+    let mut i = 0;
+    let n = x.len();
+    while i < n {
+        let end = (i + 64).min(n);
+        while i < end {
+            let d = x[i] - y[i];
+            sum += d * d;
+            i += 1;
+        }
+        if sum > bound {
+            return sum;
+        }
+    }
+    sum
+}
+
+/// ‖v_i‖² for every row of a row-major (n x d) matrix.
+pub fn sq_norms(data: &[f32], d: usize) -> Vec<f32> {
+    assert!(d > 0 && data.len() % d == 0);
+    data.chunks_exact(d)
+        .map(|row| row.iter().map(|x| x * x).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(x: &[f32], y: &[f32]) -> f32 {
+        x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+    }
+
+    #[test]
+    fn matches_naive_various_lengths() {
+        let mut rng = Rng::new(1);
+        for n in [0, 1, 3, 7, 8, 9, 15, 16, 17, 100, 3524] {
+            let x: Vec<f32> = rng.normal_vec(n);
+            let y: Vec<f32> = rng.normal_vec(n);
+            let a = sq_euclidean(&x, &y);
+            let b = naive(&x, &y);
+            assert!((a - b).abs() <= 1e-3 * (1.0 + b), "n={n}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn accum_early_exit_is_conservative() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = rng.normal_vec(512);
+        let y: Vec<f32> = rng.normal_vec(512);
+        let full = sq_euclidean(&x, &y);
+        // generous bound: must compute the exact value
+        let exact = sq_euclidean_accum(&x, &y, f32::INFINITY);
+        assert!((exact - full).abs() < 1e-3 * (1.0 + full));
+        // tiny bound: must return something larger than the bound
+        let early = sq_euclidean_accum(&x, &y, 0.001);
+        assert!(early > 0.001);
+    }
+
+    #[test]
+    fn sq_norms_rows() {
+        let data = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(sq_norms(&data, 2), vec![5.0, 25.0]);
+        assert_eq!(sq_norms(&data, 4), vec![30.0]);
+    }
+
+    #[test]
+    fn zero_distance() {
+        let x = [1.5f32; 33];
+        assert_eq!(sq_euclidean(&x, &x), 0.0);
+    }
+}

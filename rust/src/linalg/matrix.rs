@@ -1,0 +1,146 @@
+//! Row-major dense f32 matrix. Deliberately small: the heavy lifting
+//! happens in the XLA engine; this type carries datasets, candidate
+//! batches and evaluation sets between modules.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from row slices.
+    pub fn from_rows(rows: &[&[f32]]) -> Matrix {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix { rows: rows.len(), cols, data }
+    }
+
+    /// i.i.d. standard-normal entries (the paper's synthetic benchmark data).
+    pub fn random_normal(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Gather rows by index into a new matrix.
+    pub fn gather(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Copy this matrix into a zero-padded (rows_pad x cols_pad) buffer.
+    pub fn padded(&self, rows_pad: usize, cols_pad: usize) -> Matrix {
+        assert!(rows_pad >= self.rows && cols_pad >= self.cols);
+        let mut out = Matrix::zeros(rows_pad, cols_pad);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Vertical concat.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let m = Matrix::from_rows(&[&[1., 2.], &[3., 4.], &[5., 6.]]);
+        let g = m.gather(&[2, 0]);
+        assert_eq!(g.row(0), &[5., 6.]);
+        assert_eq!(g.row(1), &[1., 2.]);
+    }
+
+    #[test]
+    fn padded_zero_fills() {
+        let m = Matrix::from_rows(&[&[1., 2.]]);
+        let p = m.padded(2, 4);
+        assert_eq!(p.row(0), &[1., 2., 0., 0.]);
+        assert_eq!(p.row(1), &[0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn vstack() {
+        let a = Matrix::from_rows(&[&[1., 2.]]);
+        let b = Matrix::from_rows(&[&[3., 4.], &[5., 6.]]);
+        let c = a.vstack(&b);
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.row(2), &[5., 6.]);
+    }
+
+    #[test]
+    fn random_reproducible() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(
+            Matrix::random_normal(4, 3, &mut r1),
+            Matrix::random_normal(4, 3, &mut r2)
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Dense linear-algebra substrate: row-major f32 matrices + the distance
+//! kernels the CPU baselines and the engine's host-side paths use.
+
+pub mod distance;
+pub mod matrix;
+
+pub use distance::{sq_euclidean, sq_euclidean_accum, sq_norms};
+pub use matrix::Matrix;

@@ -1,0 +1,331 @@
+//! `ebc-summarizer` — the L3 coordinator launcher.
+//!
+//! Subcommands:
+//! * `info`       — runtime + artifact inventory
+//! * `summarize`  — summarize a synthetic dataset (quick demo)
+//! * `casestudy`  — the paper's §6 injection-molding study (Table 2 / Fig. 4)
+//! * `serve`      — run the streaming coordinator over a simulated fleet
+//! * `devices`    — analytical device-model predictions (Table 1 shape)
+
+use anyhow::Result;
+use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
+use ebc::config::schema::ServiceConfig;
+use ebc::coordinator::{Coordinator, SimulatedFleet};
+use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::gpumodel::{
+    predict_seconds, speedup, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
+};
+use ebc::imm::casestudy::{
+    fig4_table, run_table2, table2_text, validate_expectations,
+};
+use ebc::imm::{Part, ProcessState};
+use ebc::linalg::Matrix;
+use ebc::optim::{Greedy, Optimizer, ThreeSieves};
+use ebc::runtime::Runtime;
+use ebc::submodular::{CpuOracle, Oracle};
+use ebc::util::logging;
+use ebc::util::rng::Rng;
+
+fn app() -> AppSpec {
+    AppSpec {
+        name: "ebc-summarizer",
+        about: "Exemplar-based clustering data summarization for Industry 4.0",
+        commands: vec![
+            CommandSpec {
+                name: "info",
+                help: "show runtime platform + artifact inventory",
+                flags: vec![],
+            },
+            CommandSpec {
+                name: "summarize",
+                help: "summarize a synthetic dataset (quick demo)",
+                flags: vec![
+                    opt("n", "ground-set size", "1000"),
+                    opt("d", "dimensionality", "100"),
+                    opt("k", "summary size", "5"),
+                    opt("seed", "rng seed", "42"),
+                    opt("backend", "cpu | xla", "xla"),
+                    opt("precision", "f32 | bf16", "f32"),
+                    opt("algorithm", "greedy | three_sieves", "greedy"),
+                ],
+            },
+            CommandSpec {
+                name: "casestudy",
+                help: "injection-molding case study (paper §6)",
+                flags: vec![
+                    opt("k", "representatives per dataset", "5"),
+                    opt("samples", "samples per cycle (paper: 3524)", "3524"),
+                    opt("seed", "rng seed", "7"),
+                    opt("backend", "cpu | xla", "xla"),
+                    flag("table2", "print Table 2"),
+                    flag("fig4", "export Fig. 4 regrind curves (plate)"),
+                    flag("validate", "check process-knowledge expectations"),
+                ],
+            },
+            CommandSpec {
+                name: "serve",
+                help: "run the streaming coordinator over a simulated fleet",
+                flags: vec![
+                    opt("config", "service config file (TOML subset)", ""),
+                    opt("samples", "samples per cycle", "256"),
+                    opt("seed", "rng seed", "1"),
+                    opt("backend", "cpu | xla", "cpu"),
+                ],
+            },
+            CommandSpec {
+                name: "devices",
+                help: "analytical device model: paper Table 1 predictions",
+                flags: vec![
+                    opt("n", "ground-set size", "50000"),
+                    opt("l", "number of sets", "5000"),
+                    opt("k", "set size", "10"),
+                    opt("d", "dimensionality", "100"),
+                ],
+            },
+        ],
+    }
+}
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let spec = app();
+    let (cmd, m) = match spec.parse(&args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "info" => cmd_info(),
+        "summarize" => cmd_summarize(&m),
+        "casestudy" => cmd_casestudy(&m),
+        "serve" => cmd_serve(&m),
+        "devices" => cmd_devices(&m),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn oracle_factory(backend: &str, precision: Precision) -> Result<Box<dyn Fn(Matrix) -> Box<dyn Oracle>>> {
+    match backend {
+        "cpu" => Ok(Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>)),
+        "xla" => {
+            let rt = Runtime::discover()?;
+            let engine = Engine::new(rt, EngineConfig { precision, cpu_fallback: true, ..Default::default() });
+            Ok(Box::new(move |m: Matrix| {
+                Box::new(XlaOracle::new(engine.clone(), m)) as Box<dyn Oracle>
+            }))
+        }
+        other => anyhow::bail!("unknown backend '{other}' (cpu | xla)"),
+    }
+}
+
+fn parse_precision(s: &str) -> Result<Precision> {
+    match s {
+        "f32" => Ok(Precision::F32),
+        "bf16" | "fp16" => Ok(Precision::Bf16),
+        other => anyhow::bail!("unknown precision '{other}'"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::discover()?;
+    println!(
+        "platform: {} ({} device(s))",
+        rt.client().platform_name(),
+        rt.client().device_count()
+    );
+    println!("artifacts: {}", rt.manifest().dir.display());
+    println!(
+        "{:<44} {:>6} {:>6} {:>6} {:>10} {:>9}",
+        "name", "n", "d", "c/l*k", "vmem", "programs"
+    );
+    for e in &rt.manifest().entries {
+        let extra = if e.c > 0 {
+            e.c.to_string()
+        } else {
+            format!("{}x{}", e.l, e.k)
+        };
+        println!(
+            "{:<44} {:>6} {:>6} {:>6} {:>8.2}MB {:>9}",
+            e.name,
+            e.n,
+            e.d,
+            extra,
+            e.vmem_bytes as f64 / 1e6,
+            e.grid_programs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_summarize(m: &Matches) -> Result<()> {
+    let n = m.usize("n")?;
+    let d = m.usize("d")?;
+    let k = m.usize("k")?;
+    let seed = m.usize("seed")? as u64;
+    let precision = parse_precision(m.str("precision")?)?;
+    let factory = oracle_factory(m.str("backend")?, precision)?;
+    let mut rng = Rng::new(seed);
+    let data = Matrix::random_normal(n, d, &mut rng);
+
+    let optimizer: Box<dyn Optimizer> = match m.str("algorithm")? {
+        "greedy" => Box::new(Greedy::default()),
+        "three_sieves" => Box::new(ThreeSieves::default()),
+        other => anyhow::bail!("unknown algorithm '{other}'"),
+    };
+    let mut oracle = factory(data);
+    let res = optimizer.run(oracle.as_mut(), k);
+    println!(
+        "summary of {n}x{d} ({}, backend={}): k={}",
+        optimizer.name(),
+        m.str("backend")?,
+        res.k()
+    );
+    println!("representatives: {:?}", res.indices);
+    println!("f(S) = {:.6}", res.f_final);
+    println!(
+        "wall: {:.3}s, oracle calls: {}, distance work: {:.2e}",
+        res.wall_seconds, res.oracle_calls, res.oracle_work as f64
+    );
+    Ok(())
+}
+
+fn cmd_casestudy(m: &Matches) -> Result<()> {
+    let k = m.usize("k")?;
+    let samples = m.usize("samples")?;
+    let seed = m.usize("seed")? as u64;
+    let factory = oracle_factory(m.str("backend")?, Precision::F32)?;
+    let optimizer = Greedy::default();
+
+    log::info!("generating 10 campaigns ({} samples/cycle) + summarizing", samples);
+    let results = run_table2(&optimizer, factory.as_ref(), k, samples, seed);
+
+    if m.has("table2") || (!m.has("fig4") && !m.has("validate")) {
+        println!("{}", table2_text(&results, k));
+        for r in &results {
+            println!(
+                "  {:>6}/{:<16} f={:.1} wall={:.2}s",
+                r.part.name(),
+                r.state.name(),
+                r.f_value,
+                r.wall_seconds
+            );
+        }
+    }
+    if m.has("validate") {
+        let mut failures = 0;
+        for r in &results {
+            match validate_expectations(r) {
+                Ok(()) => println!("  OK   {} / {}", r.part.name(), r.state.name()),
+                Err(e) => {
+                    failures += 1;
+                    println!("  FAIL {} / {}: {e}", r.part.name(), r.state.name());
+                }
+            }
+        }
+        if failures > 0 {
+            anyhow::bail!("{failures} expectation(s) violated");
+        }
+    }
+    if m.has("fig4") {
+        let plate_regrind = results
+            .iter()
+            .find(|r| r.part == Part::Cover && r.state == ProcessState::Regrind)
+            .map(|_| ())
+            .and(Some(()));
+        let _ = plate_regrind;
+        let r = results
+            .iter()
+            .find(|r| r.part == Part::Plate && r.state == ProcessState::Regrind)
+            .expect("plate/regrind present");
+        let t = fig4_table(r);
+        let path = std::path::Path::new("bench_results").join("fig4_regrind_plate.csv");
+        t.save(&path)?;
+        println!("fig4: wrote {} ({} curves)", path.display(), r.reps.len());
+    }
+    Ok(())
+}
+
+fn cmd_serve(m: &Matches) -> Result<()> {
+    let samples = m.usize("samples")?;
+    let seed = m.usize("seed")? as u64;
+    let cfg = match m.str("config")? {
+        "" => ServiceConfig::default(),
+        path => ServiceConfig::load(path)?,
+    };
+    let factory = oracle_factory(m.str("backend")?, cfg.engine.precision)?;
+    let mut coordinator = Coordinator::new(cfg, factory);
+    let mut fleet = SimulatedFleet::new(
+        &[
+            ("imm-cover-1", Part::Cover, ProcessState::Stable),
+            ("imm-cover-2", Part::Cover, ProcessState::StartUp),
+            ("imm-plate-1", Part::Plate, ProcessState::Regrind),
+            ("imm-plate-2", Part::Plate, ProcessState::Downtimes),
+        ],
+        samples,
+        seed,
+    );
+    let t0 = std::time::Instant::now();
+    let n = coordinator.run_stream(&mut fleet);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("processed {n} cycles in {dt:.2}s ({:.0} cycles/s)", n as f64 / dt);
+    for name in ["imm-cover-1", "imm-cover-2", "imm-plate-1", "imm-plate-2"] {
+        println!("--- {name}: {}", coordinator.query(name).describe());
+    }
+    println!(
+        "\nmetrics: {:?}\n\n{}",
+        coordinator.metrics,
+        coordinator.profile.report()
+    );
+    Ok(())
+}
+
+fn cmd_devices(m: &Matches) -> Result<()> {
+    let w = EbcWorkload {
+        n: m.usize("n")?,
+        l: m.usize("l")?,
+        k: m.usize("k")?,
+        d: m.usize("d")?,
+    };
+    println!("workload: N={} l={} k={} d={} ({:.2} GFLOP)", w.n, w.l, w.k, w.d, w.flops() / 1e9);
+    println!("\npredicted runtimes:");
+    for (dev, p) in [
+        (&QUADRO_RTX_5000, ModelPrecision::Fp32),
+        (&QUADRO_RTX_5000, ModelPrecision::Fp16),
+        (&TX2, ModelPrecision::Fp32),
+        (&TX2, ModelPrecision::Fp16),
+        (&XEON_W2155, ModelPrecision::Fp32),
+        (&A72, ModelPrecision::Fp32),
+    ] {
+        println!(
+            "  {:<18} {:>5}: {:>10.4}s",
+            dev.name,
+            if p == ModelPrecision::Fp16 { "fp16" } else { "fp32" },
+            predict_seconds(dev, &w, p)
+        );
+    }
+    println!("\npredicted speedups (paper Table 1 shape):");
+    println!(
+        "  Quadro fp32 vs Xeon ST fp32: {:6.1}x (paper: 34-72x)",
+        speedup(&QUADRO_RTX_5000, ModelPrecision::Fp32, &XEON_W2155, ModelPrecision::Fp32, &w)
+    );
+    println!(
+        "  Quadro fp16 vs Xeon ST fp32: {:6.1}x (paper: 8.5-438x)",
+        speedup(&QUADRO_RTX_5000, ModelPrecision::Fp16, &XEON_W2155, ModelPrecision::Fp32, &w)
+    );
+    println!(
+        "  TX2    fp32 vs A72 ST fp32:  {:6.1}x (paper: 4.3-6x)",
+        speedup(&TX2, ModelPrecision::Fp32, &A72, ModelPrecision::Fp32, &w)
+    );
+    println!(
+        "  TX2    fp16 vs A72 ST fp32:  {:6.1}x (paper: 5.1-35.5x)",
+        speedup(&TX2, ModelPrecision::Fp16, &A72, ModelPrecision::Fp32, &w)
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Submodular maximization under a cardinality constraint (paper §3,
+//! problem 2): the Greedy family and the streaming sieve family.
+//!
+//! Every optimizer runs against a [`crate::submodular::Oracle`], so the
+//! same code drives the CPU baselines and the accelerated engine — the
+//! paper's point that optimizers issue *multi-set* evaluation patterns
+//! (`S_multi`) which the accelerator batches.
+
+pub mod greedy;
+pub mod lazy_greedy;
+pub mod random;
+pub mod sieve_streaming;
+pub mod sieve_streaming_pp;
+pub mod stochastic_greedy;
+pub mod three_sieves;
+
+pub use greedy::Greedy;
+pub use lazy_greedy::LazyGreedy;
+pub use random::RandomSelection;
+pub use sieve_streaming::SieveStreaming;
+pub use sieve_streaming_pp::SieveStreamingPp;
+pub use stochastic_greedy::StochasticGreedy;
+pub use three_sieves::ThreeSieves;
+
+use crate::submodular::Oracle;
+
+/// Outcome of an optimization run.
+#[derive(Debug, Clone)]
+pub struct SummaryResult {
+    /// Selected ground-set indices, in selection order.
+    pub indices: Vec<usize>,
+    /// f(S) after each selection (same length as `indices`).
+    pub f_trajectory: Vec<f32>,
+    /// Final function value.
+    pub f_final: f32,
+    /// Wall-clock seconds of the whole run.
+    pub wall_seconds: f64,
+    /// Number of oracle gain/eval calls issued.
+    pub oracle_calls: usize,
+    /// Oracle-reported scalar-distance work.
+    pub oracle_work: u64,
+}
+
+impl SummaryResult {
+    pub fn k(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// A cardinality-constrained submodular maximizer.
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+    /// Produce a summary of at most `k` elements.
+    fn run(&self, oracle: &mut dyn Oracle, k: usize) -> SummaryResult;
+}
+
+/// Exhaustive search over all subsets of size <= k — the gold standard
+/// for tiny instances, used by the property tests to verify the greedy
+/// (1 − 1/e) guarantee.
+pub fn exhaustive_best(oracle: &mut dyn Oracle, k: usize) -> (Vec<usize>, f32) {
+    let n = oracle.n();
+    assert!(n <= 20, "exhaustive search only for tiny instances");
+    let mut best = (vec![], 0f32);
+    // enumerate all subsets with <= k bits over n items
+    for mask in 0u32..(1u32 << n) {
+        if (mask.count_ones() as usize) > k {
+            continue;
+        }
+        let set: Vec<usize> = (0..n).filter(|i| mask & (1 << i) != 0).collect();
+        let v = oracle.eval_sets(&[&set])[0];
+        if v > best.1 {
+            best = (set, v);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::submodular::CpuOracle;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exhaustive_on_separated_clusters() {
+        let v = Matrix::from_rows(&[
+            &[0.0, 10.0],
+            &[0.1, 10.0],
+            &[10.0, 0.0],
+            &[10.0, 0.1],
+        ]);
+        let mut o = CpuOracle::new(v);
+        let (set, val) = exhaustive_best(&mut o, 2);
+        assert_eq!(set.len(), 2);
+        assert!(val > 0.0);
+        // optimal 2-summary must take one point from each cluster
+        let c0 = set.iter().filter(|&&i| i < 2).count();
+        assert_eq!(c0, 1, "{set:?}");
+    }
+
+    #[test]
+    fn exhaustive_monotone_in_k() {
+        let mut rng = Rng::new(1);
+        let v = Matrix::random_normal(8, 3, &mut rng);
+        let mut o = CpuOracle::new(v);
+        let (_, v1) = exhaustive_best(&mut o, 1);
+        let (_, v2) = exhaustive_best(&mut o, 2);
+        let (_, v3) = exhaustive_best(&mut o, 3);
+        assert!(v2 >= v1 && v3 >= v2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Dimensionality reduction for industrial process data — the paper's
+//! §7 future work: *"it may be interesting to see, which dimensionality
+//! reduction techniques are appropriate for industrial process control,
+//! to reduce optimization times and to provide summaries even faster."*
+//!
+//! Two reducers, both preserving the squared-Euclidean geometry EBC
+//! consumes:
+//!
+//! * [`RandomProjection`] — sparse Achlioptas projection with the
+//!   Johnson–Lindenstrauss guarantee: pairwise distances preserved to
+//!   (1 ± ε) w.h.p. at m = O(log n / ε²) dims, fit-free and streamable
+//!   (the right default for the coordinator's ingest path);
+//! * [`Pca`] — top-r principal components via orthogonal iteration on
+//!   the centered data (no d×d covariance materialized — X is 1000×3524
+//!   in the case study), capturing the melt-pressure curves' dominant
+//!   modes.
+//!
+//! The `ablations` bench (`reduce`) measures what both do to summary
+//! fidelity and optimization time on the case-study data.
+
+pub mod pca;
+pub mod random_projection;
+
+pub use pca::Pca;
+pub use random_projection::RandomProjection;
+
+use crate::linalg::Matrix;
+
+/// A fitted feature-space reducer.
+pub trait Reducer {
+    /// Output dimensionality.
+    fn out_dim(&self) -> usize;
+    /// Project one row.
+    fn transform_row(&self, row: &[f32]) -> Vec<f32>;
+    /// Project a whole matrix.
+    fn transform(&self, m: &Matrix) -> Matrix {
+        let mut data = Vec::with_capacity(m.rows() * self.out_dim());
+        for i in 0..m.rows() {
+            data.extend(self.transform_row(m.row(i)));
+        }
+        Matrix::from_vec(m.rows(), self.out_dim(), data)
+    }
+}
+
+/// Fraction of pairwise squared distances preserved within (1 ± eps),
+/// sampled — the JL quality metric used by tests and the ablation.
+pub fn distance_distortion_ok_fraction(
+    original: &Matrix,
+    reduced: &Matrix,
+    eps: f32,
+    pairs: usize,
+    seed: u64,
+) -> f32 {
+    use crate::linalg::sq_euclidean;
+    use crate::util::rng::Rng;
+    assert_eq!(original.rows(), reduced.rows());
+    let n = original.rows();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut rng = Rng::new(seed);
+    let mut ok = 0usize;
+    for _ in 0..pairs {
+        let i = rng.below(n);
+        let j = (i + 1 + rng.below(n - 1)) % n;
+        let d0 = sq_euclidean(original.row(i), original.row(j));
+        let d1 = sq_euclidean(reduced.row(i), reduced.row(j));
+        if d0 == 0.0 {
+            ok += (d1 < 1e-6) as usize;
+        } else {
+            let ratio = d1 / d0;
+            ok += (ratio >= 1.0 - eps && ratio <= 1.0 + eps) as usize;
+        }
+    }
+    ok as f32 / pairs as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn distortion_metric_perfect_on_identity() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::random_normal(30, 8, &mut rng);
+        let frac = distance_distortion_ok_fraction(&m, &m, 0.01, 100, 2);
+        assert_eq!(frac, 1.0);
+    }
+
+    #[test]
+    fn distortion_metric_detects_scaling() {
+        let mut rng = Rng::new(3);
+        let m = Matrix::random_normal(20, 6, &mut rng);
+        // double every coordinate: squared distances x4 -> all out of band
+        let scaled = Matrix::from_vec(
+            20,
+            6,
+            m.data().iter().map(|x| 2.0 * x).collect(),
+        );
+        let frac = distance_distortion_ok_fraction(&m, &scaled, 0.5, 100, 4);
+        assert_eq!(frac, 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! PCA via orthogonal (block power) iteration — top-r principal
+//! components of the centered data without materializing the d×d
+//! covariance: each iteration computes Xᵀ(X Q) in O(n·d·r).
+//!
+//! Melt-pressure cycles are dominated by a handful of physical modes
+//! (peak height, holding level, plasticization length), so small r
+//! captures most variance — the tailored reducer for the case study.
+
+use crate::linalg::Matrix;
+use crate::reduce::Reducer;
+use crate::util::rng::Rng;
+
+pub struct Pca {
+    mean: Vec<f32>,
+    /// row-major (r x d) orthonormal component matrix
+    components: Vec<f32>,
+    in_dim: usize,
+    r: usize,
+    /// variance explained per component (descending)
+    pub explained: Vec<f32>,
+}
+
+impl Pca {
+    /// Fit top-`r` components with `iters` orthogonal iterations.
+    pub fn fit(data: &Matrix, r: usize, iters: usize, seed: u64) -> Pca {
+        let (n, d) = (data.rows(), data.cols());
+        assert!(r >= 1 && r <= d.min(n), "r={r} out of range");
+        // mean
+        let mut mean = vec![0f64; d];
+        for i in 0..n {
+            for (j, m) in mean.iter_mut().enumerate() {
+                *m += data.row(i)[j] as f64;
+            }
+        }
+        let mean: Vec<f32> = mean.into_iter().map(|x| (x / n as f64) as f32).collect();
+
+        // Q: (r x d) random init, orthonormalized
+        let mut rng = Rng::new(seed ^ 0x9CA0_0A9C);
+        let mut q: Vec<f32> = (0..r * d).map(|_| rng.normal()).collect();
+        gram_schmidt(&mut q, r, d);
+
+        let mut scratch = vec![0f32; n * r];
+        for _ in 0..iters.max(1) {
+            // Y = Xc Qᵀ   (n x r)
+            for i in 0..n {
+                let row = data.row(i);
+                for c in 0..r {
+                    let comp = &q[c * d..(c + 1) * d];
+                    let mut acc = 0f32;
+                    for j in 0..d {
+                        acc += (row[j] - mean[j]) * comp[j];
+                    }
+                    scratch[i * r + c] = acc;
+                }
+            }
+            // Qnew = Yᵀ Xc   (r x d)
+            let mut qn = vec![0f32; r * d];
+            for i in 0..n {
+                let row = data.row(i);
+                for c in 0..r {
+                    let w = scratch[i * r + c];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let dst = &mut qn[c * d..(c + 1) * d];
+                    for j in 0..d {
+                        dst[j] += w * (row[j] - mean[j]);
+                    }
+                }
+            }
+            gram_schmidt(&mut qn, r, d);
+            q = qn;
+        }
+
+        // explained variance per component = var of projections
+        let mut explained = vec![0f32; r];
+        for i in 0..n {
+            let row = data.row(i);
+            for c in 0..r {
+                let comp = &q[c * d..(c + 1) * d];
+                let mut acc = 0f32;
+                for j in 0..d {
+                    acc += (row[j] - mean[j]) * comp[j];
+                }
+                explained[c] += acc * acc;
+            }
+        }
+        for e in explained.iter_mut() {
+            *e /= n as f32;
+        }
+        Pca { mean, components: q, in_dim: d, r, explained }
+    }
+}
+
+/// In-place modified Gram–Schmidt over `r` row vectors of length `d`.
+fn gram_schmidt(q: &mut [f32], r: usize, d: usize) {
+    for c in 0..r {
+        // subtract projections onto previous rows
+        for p in 0..c {
+            let (head, tail) = q.split_at_mut(c * d);
+            let prev = &head[p * d..(p + 1) * d];
+            let cur = &mut tail[..d];
+            let dot: f32 = prev.iter().zip(cur.iter()).map(|(a, b)| a * b).sum();
+            for j in 0..d {
+                cur[j] -= dot * prev[j];
+            }
+        }
+        let cur = &mut q[c * d..(c + 1) * d];
+        let norm: f32 = cur.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            for x in cur.iter_mut() {
+                *x /= norm;
+            }
+        } else {
+            // degenerate direction: re-seed with a unit basis vector
+            cur.fill(0.0);
+            cur[c % d] = 1.0;
+        }
+    }
+}
+
+impl Reducer for Pca {
+    fn out_dim(&self) -> usize {
+        self.r
+    }
+
+    fn transform_row(&self, row: &[f32]) -> Vec<f32> {
+        assert_eq!(row.len(), self.in_dim);
+        (0..self.r)
+            .map(|c| {
+                let comp = &self.components[c * self.in_dim..(c + 1) * self.in_dim];
+                let mut acc = 0f32;
+                for j in 0..self.in_dim {
+                    acc += (row[j] - self.mean[j]) * comp[j];
+                }
+                acc
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// planted 2-mode data in d=40: x = a*u + b*v + small noise
+    fn planted(n: usize, rng: &mut Rng) -> Matrix {
+        let d = 40;
+        let u: Vec<f32> = (0..d).map(|j| ((j as f32) * 0.3).sin()).collect();
+        let v: Vec<f32> = (0..d).map(|j| ((j as f32) * 0.11).cos()).collect();
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let a = rng.normal() * 10.0;
+            let b = rng.normal() * 3.0;
+            for j in 0..d {
+                data.push(a * u[j] + b * v[j] + 0.01 * rng.normal());
+            }
+        }
+        Matrix::from_vec(n, d, data)
+    }
+
+    #[test]
+    fn recovers_planted_low_rank() {
+        let mut rng = Rng::new(1);
+        let data = planted(200, &mut rng);
+        let pca = Pca::fit(&data, 3, 15, 2);
+        // first two components carry essentially all the variance
+        let total: f32 = pca.explained.iter().sum();
+        let top2: f32 = pca.explained[0] + pca.explained[1];
+        assert!(top2 / total > 0.99, "{:?}", pca.explained);
+        // explained variances descending
+        assert!(pca.explained[0] >= pca.explained[1]);
+        assert!(pca.explained[1] >= pca.explained[2]);
+    }
+
+    #[test]
+    fn components_orthonormal() {
+        let mut rng = Rng::new(3);
+        let data = Matrix::random_normal(80, 20, &mut rng);
+        let pca = Pca::fit(&data, 4, 10, 4);
+        for a in 0..4 {
+            for b in 0..4 {
+                let ca = &pca.components[a * 20..(a + 1) * 20];
+                let cb = &pca.components[b * 20..(b + 1) * 20];
+                let dot: f32 = ca.iter().zip(cb).map(|(x, y)| x * y).sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({a},{b}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn transform_shape_and_centering() {
+        let mut rng = Rng::new(5);
+        let data = planted(50, &mut rng);
+        let pca = Pca::fit(&data, 2, 10, 6);
+        let red = pca.transform(&data);
+        assert_eq!((red.rows(), red.cols()), (50, 2));
+        // projected data is centered
+        for c in 0..2 {
+            let mean: f32 = (0..50).map(|i| red.row(i)[c]).sum::<f32>() / 50.0;
+            assert!(mean.abs() < 0.5, "component {c} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn preserves_low_rank_distances_well() {
+        use crate::reduce::distance_distortion_ok_fraction;
+        let mut rng = Rng::new(7);
+        let data = planted(100, &mut rng);
+        let pca = Pca::fit(&data, 2, 15, 8);
+        let red = pca.transform(&data);
+        // rank-2 data: distances essentially exact in 2 components
+        let frac = distance_distortion_ok_fraction(&data, &red, 0.05, 200, 9);
+        assert!(frac > 0.95, "{frac}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Sparse random projection (Achlioptas 2003): entries of the m×d
+//! projection matrix are √(3/m)·{+1, 0, −1} with probabilities
+//! {1/6, 2/3, 1/6} — the database-friendly JL transform. Fit-free: the
+//! matrix is a pure function of (seed, d, m), so coordinator replicas
+//! project identically without coordination.
+
+use crate::reduce::Reducer;
+use crate::util::rng::Rng;
+
+pub struct RandomProjection {
+    in_dim: usize,
+    out_dim: usize,
+    /// row-major (out_dim x in_dim), entries already scaled by sqrt(3/m)
+    proj: Vec<f32>,
+}
+
+impl RandomProjection {
+    pub fn new(in_dim: usize, out_dim: usize, seed: u64) -> RandomProjection {
+        assert!(out_dim > 0 && in_dim > 0);
+        let scale = (3.0f32 / out_dim as f32).sqrt();
+        let mut rng = Rng::new(seed ^ 0xA11C_E017);
+        let mut proj = Vec::with_capacity(in_dim * out_dim);
+        for _ in 0..in_dim * out_dim {
+            let u = rng.f32();
+            proj.push(if u < 1.0 / 6.0 {
+                scale
+            } else if u < 2.0 / 6.0 {
+                -scale
+            } else {
+                0.0
+            });
+        }
+        RandomProjection { in_dim, out_dim, proj }
+    }
+
+    /// JL dimension for n points at distortion eps (standard bound,
+    /// constant 4: m >= 4 ln n / (eps²/2 - eps³/3)).
+    pub fn jl_dim(n: usize, eps: f32) -> usize {
+        let e = eps as f64;
+        let denom = e * e / 2.0 - e * e * e / 3.0;
+        ((4.0 * (n.max(2) as f64).ln()) / denom).ceil() as usize
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+}
+
+impl Reducer for RandomProjection {
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn transform_row(&self, row: &[f32]) -> Vec<f32> {
+        assert_eq!(row.len(), self.in_dim);
+        let mut out = vec![0f32; self.out_dim];
+        // out[o] = sum_i P[o, i] * row[i]; P is row-major (out x in)
+        for (o, out_v) in out.iter_mut().enumerate() {
+            let prow = &self.proj[o * self.in_dim..(o + 1) * self.in_dim];
+            let mut acc = 0f32;
+            for i in 0..self.in_dim {
+                // sparse entries: 2/3 are zero; branch-free multiply is
+                // still fastest with autovectorization
+                acc += prow[i] * row[i];
+            }
+            *out_v = acc;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::reduce::distance_distortion_ok_fraction;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn preserves_distances_at_jl_dim() {
+        let n = 60;
+        let d = 500;
+        let eps = 0.4;
+        let m = RandomProjection::jl_dim(n, eps);
+        let mut rng = Rng::new(7);
+        let data = Matrix::random_normal(n, d, &mut rng);
+        let rp = RandomProjection::new(d, m, 42);
+        let red = rp.transform(&data);
+        assert_eq!(red.cols(), m);
+        let frac = distance_distortion_ok_fraction(&data, &red, eps, 300, 9);
+        // JL holds w.h.p.; demand the overwhelming majority in-band
+        assert!(frac > 0.9, "only {frac} of pairs within (1±{eps})");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = RandomProjection::new(64, 16, 5);
+        let b = RandomProjection::new(64, 16, 5);
+        let row: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        assert_eq!(a.transform_row(&row), b.transform_row(&row));
+        let c = RandomProjection::new(64, 16, 6);
+        assert_ne!(a.transform_row(&row), c.transform_row(&row));
+    }
+
+    #[test]
+    fn jl_dim_monotone() {
+        assert!(RandomProjection::jl_dim(1000, 0.2) > RandomProjection::jl_dim(1000, 0.4));
+        assert!(RandomProjection::jl_dim(10000, 0.3) > RandomProjection::jl_dim(100, 0.3));
+    }
+
+    #[test]
+    fn entries_distribution_roughly_achlioptas() {
+        let rp = RandomProjection::new(200, 50, 11);
+        let zeros = rp.proj.iter().filter(|&&x| x == 0.0).count() as f64
+            / rp.proj.len() as f64;
+        assert!((zeros - 2.0 / 3.0).abs() < 0.03, "zero fraction {zeros}");
+        let pos = rp.proj.iter().filter(|&&x| x > 0.0).count();
+        let neg = rp.proj.iter().filter(|&&x| x < 0.0).count();
+        let ratio = pos as f64 / neg as f64;
+        assert!((0.8..1.25).contains(&ratio), "sign balance {ratio}");
+    }
+}

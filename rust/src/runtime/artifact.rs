@@ -1,0 +1,346 @@
+//! Artifact manifest: the JSON index `aot.py` writes next to the HLO
+//! files. The engine uses it to pick the smallest bucket that fits a
+//! request (see `engine::tiling`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Graph family of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Batched greedy marginal gains: inputs (v, vsq, vmask, mindist, c, cmask).
+    Gains,
+    /// Post-selection state update: inputs (v, vsq, vmask, mindist, s).
+    Update,
+    /// Multi-set work-matrix evaluation: inputs (v, vsq, vmask, s_flat, smask_flat).
+    EvalMulti,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "gains" => ArtifactKind::Gains,
+            "update" => ArtifactKind::Update,
+            "eval_multi" => ArtifactKind::EvalMulti,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::Gains => "gains",
+            ArtifactKind::Update => "update",
+            ArtifactKind::EvalMulti => "eval_multi",
+        }
+    }
+}
+
+/// Compute precision of an artifact (interface is always f32; bf16
+/// variants cast inside the graph — DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    Bf16,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "bf16" => Precision::Bf16,
+            other => bail!("unknown precision '{other}'"),
+        })
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+}
+
+/// Kernel implementation of an artifact (DESIGN.md §Perf): `Pallas` is
+/// the L1 tiled work-matrix kernel (TPU-shaped; interpret-mode on CPU),
+/// `Jnp` the fused matmul formulation XLA-CPU vectorizes (fast path on
+/// this testbed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelImpl {
+    Pallas,
+    Jnp,
+}
+
+impl KernelImpl {
+    pub fn parse(s: &str) -> Result<KernelImpl> {
+        Ok(match s {
+            "pallas" => KernelImpl::Pallas,
+            "jnp" => KernelImpl::Jnp,
+            other => bail!("unknown kernel impl '{other}'"),
+        })
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelImpl::Pallas => "pallas",
+            KernelImpl::Jnp => "jnp",
+        }
+    }
+}
+
+/// One manifest entry = one fixed-shape HLO module on disk.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub imp: KernelImpl,
+    pub precision: Precision,
+    pub n: usize,
+    pub d: usize,
+    pub c: usize,
+    pub l: usize,
+    pub k: usize,
+    pub inputs: Vec<String>,
+    /// Static perf estimates recorded by aot.py (DESIGN.md §Perf).
+    pub vmem_bytes: usize,
+    pub mxu_flops: f64,
+    pub grid_programs: usize,
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let raw = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for e in raw {
+            entries.push(Self::parse_entry(e, &dir)?);
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    fn parse_entry(e: &Json, dir: &Path) -> Result<ArtifactEntry> {
+        let s = |k: &str| -> Result<String> {
+            e.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("entry missing string field '{k}'"))
+        };
+        let u = |k: &str| -> Result<usize> {
+            e.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("entry missing int field '{k}'"))
+        };
+        let inputs = e
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("entry missing inputs"))?
+            .iter()
+            .map(|x| x.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("non-string input name"))?;
+        Ok(ArtifactEntry {
+            name: s("name")?,
+            file: dir.join(s("file")?),
+            kind: ArtifactKind::parse(&s("kind")?)?,
+            imp: KernelImpl::parse(
+                e.get("impl").and_then(Json::as_str).unwrap_or("pallas"),
+            )?,
+            precision: Precision::parse(&s("dtype")?)?,
+            n: u("n")?,
+            d: u("d")?,
+            c: u("c")?,
+            l: u("l")?,
+            k: u("k")?,
+            inputs,
+            vmem_bytes: u("vmem_bytes").unwrap_or(0),
+            mxu_flops: e.get("mxu_flops").and_then(Json::as_f64).unwrap_or(0.0),
+            grid_programs: u("grid_programs").unwrap_or(0),
+        })
+    }
+
+    /// Smallest-fitting gains bucket for (n, d, c) at the given precision
+    /// and preferred kernel impl (falls back to the other impl if the
+    /// preferred one has no fitting bucket).
+    pub fn pick_gains(
+        &self,
+        n: usize,
+        d: usize,
+        c: usize,
+        p: Precision,
+        imp: KernelImpl,
+    ) -> Option<&ArtifactEntry> {
+        let pick = |want: Option<KernelImpl>| {
+            self.entries
+                .iter()
+                .filter(|e| {
+                    e.kind == ArtifactKind::Gains
+                        && e.precision == p
+                        && want.is_none_or(|w| e.imp == w)
+                        && e.n >= n
+                        && e.d >= d
+                        && e.c >= c
+                })
+                .min_by_key(|e| (e.n as u64) * (e.d as u64) + (e.c as u64) * (e.d as u64))
+        };
+        pick(Some(imp)).or_else(|| pick(None))
+    }
+
+    /// The gains bucket with the largest candidate capacity that fits
+    /// (n, d) — used by the engine to chunk oversized candidate batches.
+    pub fn pick_gains_largest_c(
+        &self,
+        n: usize,
+        d: usize,
+        p: Precision,
+        imp: KernelImpl,
+    ) -> Option<&ArtifactEntry> {
+        let pick = |want: Option<KernelImpl>| {
+            self.entries
+                .iter()
+                .filter(|e| {
+                    e.kind == ArtifactKind::Gains
+                        && e.precision == p
+                        && want.is_none_or(|w| e.imp == w)
+                        && e.n >= n
+                        && e.d >= d
+                })
+                // prefer max C, then the tightest (n, d)
+                .max_by_key(|e| (e.c, std::cmp::Reverse((e.n as u64) * (e.d as u64))))
+        };
+        pick(Some(imp)).or_else(|| pick(None))
+    }
+
+    /// Smallest-fitting update bucket for (n, d) (impl-agnostic: the
+    /// update graph is pure jnp in every variant).
+    pub fn pick_update(&self, n: usize, d: usize, p: Precision) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Update && e.precision == p && e.n >= n && e.d >= d)
+            .min_by_key(|e| (e.n as u64) * (e.d as u64))
+    }
+
+    /// Smallest-fitting eval_multi bucket for (l, k, n, d).
+    pub fn pick_eval_multi(
+        &self,
+        l: usize,
+        k: usize,
+        n: usize,
+        d: usize,
+        p: Precision,
+        imp: KernelImpl,
+    ) -> Option<&ArtifactEntry> {
+        let pick = |want: Option<KernelImpl>| {
+            self.entries
+                .iter()
+                .filter(|e| {
+                    e.kind == ArtifactKind::EvalMulti
+                        && e.precision == p
+                        && want.is_none_or(|w| e.imp == w)
+                        && e.l >= l
+                        && e.k >= k
+                        && e.n >= n
+                        && e.d >= d
+                })
+                .min_by_key(|e| (e.n as u64 + e.l as u64 * e.k as u64) * e.d as u64)
+        };
+        pick(Some(imp)).or_else(|| pick(None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "gains_n1024_d128_c256_f32", "file": "g.hlo.txt", "kind": "gains",
+         "dtype": "f32", "n": 1024, "d": 128, "c": 256, "l": 0, "k": 0,
+         "block_n": 256, "block_c": 128, "block_l": 8,
+         "inputs": ["v","vsq","vmask","mindist","c","cmask"],
+         "vmem_bytes": 345678, "mxu_flops": 6.7e7, "grid_programs": 8},
+        {"name": "gains_n4096_d128_c1024_f32", "file": "g2.hlo.txt", "kind": "gains",
+         "dtype": "f32", "n": 4096, "d": 128, "c": 1024, "l": 0, "k": 0,
+         "inputs": ["v","vsq","vmask","mindist","c","cmask"],
+         "vmem_bytes": 345678, "mxu_flops": 1.0e9, "grid_programs": 128},
+        {"name": "eval_multi_l64_k16_n1024_d128_bf16", "file": "e.hlo.txt",
+         "kind": "eval_multi", "dtype": "bf16", "n": 1024, "d": 128, "c": 0,
+         "l": 64, "k": 16, "inputs": ["v","vsq","vmask","s_flat","smask_flat"],
+         "vmem_bytes": 10, "mxu_flops": 1.0, "grid_programs": 32}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries[0].kind, ArtifactKind::Gains);
+        assert_eq!(m.entries[0].n, 1024);
+        assert_eq!(m.entries[2].precision, Precision::Bf16);
+        assert_eq!(m.entries[0].file, PathBuf::from("/tmp/a/g.hlo.txt"));
+    }
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let e = m
+            .pick_gains(1000, 100, 200, Precision::F32, KernelImpl::Pallas)
+            .unwrap();
+        assert_eq!(e.name, "gains_n1024_d128_c256_f32");
+        let e = m
+            .pick_gains(2000, 100, 200, Precision::F32, KernelImpl::Pallas)
+            .unwrap();
+        assert_eq!(e.name, "gains_n4096_d128_c1024_f32");
+        assert!(m
+            .pick_gains(100_000, 100, 200, Precision::F32, KernelImpl::Pallas)
+            .is_none());
+        assert!(m
+            .pick_gains(100, 100, 100, Precision::Bf16, KernelImpl::Pallas)
+            .is_none());
+        // impl fallback: no jnp gains in the sample -> falls back to pallas
+        let e = m
+            .pick_gains(1000, 100, 200, Precision::F32, KernelImpl::Jnp)
+            .unwrap();
+        assert_eq!(e.imp, KernelImpl::Pallas);
+    }
+
+    #[test]
+    fn pick_eval_multi_dims() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m
+            .pick_eval_multi(60, 10, 1000, 128, Precision::Bf16, KernelImpl::Pallas)
+            .is_some());
+        assert!(m
+            .pick_eval_multi(65, 10, 1000, 128, Precision::Bf16, KernelImpl::Pallas)
+            .is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

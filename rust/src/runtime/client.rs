@@ -1,0 +1,84 @@
+//! The PJRT runtime: one CPU client + a cache of compiled executables.
+//!
+//! Compilation (HLO text → `HloModuleProto` → `XlaComputation` →
+//! `PjRtLoadedExecutable`) happens lazily on first use of each variant
+//! and is cached for the lifetime of the runtime — the paper's
+//! "algorithm initialization" step.
+
+use crate::runtime::artifact::{ArtifactEntry, Manifest};
+use crate::runtime::executable::LoadedGraph;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared handle to the PJRT client + executable cache.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<LoadedGraph>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the given artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.entries.len()
+        );
+        Ok(Runtime {
+            inner: Arc::new(Inner { client, manifest, cache: Mutex::new(HashMap::new()) }),
+        })
+    }
+
+    /// Create a runtime by discovering the artifacts directory
+    /// (`$EBC_ARTIFACTS` or walking up from cwd/exe).
+    pub fn discover() -> Result<Runtime> {
+        let dir = crate::artifacts_dir()
+            .context("artifacts/manifest.json not found; run `make artifacts`")?;
+        Self::new(dir)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.inner.client
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// Fetch (compiling + caching on first use) the executable for an entry.
+    pub fn load(&self, entry: &ArtifactEntry) -> Result<Arc<LoadedGraph>> {
+        {
+            let cache = self.inner.cache.lock().unwrap();
+            if let Some(g) = cache.get(&entry.name) {
+                return Ok(Arc::clone(g));
+            }
+        }
+        // compile outside the lock (slow); racing compiles are benign
+        let g = Arc::new(LoadedGraph::compile(&self.inner.client, entry)?);
+        let mut cache = self.inner.cache.lock().unwrap();
+        Ok(Arc::clone(cache.entry(entry.name.clone()).or_insert(g)))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.inner.cache.lock().unwrap().len()
+    }
+
+    /// Upload an f32 host slice as a device buffer.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.inner
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host->device transfer")
+    }
+}

@@ -1,0 +1,67 @@
+//! A compiled artifact: HLO text parsed, ids reassigned by the text
+//! parser (the reason text is the interchange format — DESIGN.md §1),
+//! compiled for the CPU PJRT client.
+
+use crate::runtime::artifact::ArtifactEntry;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// One compiled, ready-to-execute graph.
+pub struct LoadedGraph {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_seconds: f64,
+}
+
+impl LoadedGraph {
+    pub fn compile(client: &xla::PjRtClient, entry: &ArtifactEntry) -> Result<LoadedGraph> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.name))?;
+        let compile_seconds = t0.elapsed().as_secs_f64();
+        log::debug!("compiled {} in {:.2}s", entry.name, compile_seconds);
+        Ok(LoadedGraph { entry: entry.clone(), exe, compile_seconds })
+    }
+
+    /// Execute with device-resident buffers; returns the un-tupled
+    /// output literals (graphs are lowered with `return_tuple=True`).
+    pub fn execute_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs ({:?}), got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                self.entry.inputs,
+                args.len()
+            );
+        }
+        let outs = self.exe.execute_b(args).context("execute_b")?;
+        let lit = outs[0][0].to_literal_sync().context("device->host transfer")?;
+        Ok(lit.to_tuple().context("un-tupling output")?)
+    }
+
+    /// Execute with host literals (uploads every argument; the engine
+    /// prefers [`Self::execute_buffers`] with a device-resident ground set).
+    pub fn execute_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                args.len()
+            );
+        }
+        let outs = self.exe.execute::<xla::Literal>(args).context("execute")?;
+        let lit = outs[0][0].to_literal_sync().context("device->host transfer")?;
+        Ok(lit.to_tuple().context("un-tupling output")?)
+    }
+}
+
+/// Read an f32 vector out of an output literal.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see DESIGN.md §1) and executes
+//! them on the CPU PJRT client via the `xla` crate.
+//!
+//! Python never runs here: this module is the only boundary between the
+//! Rust coordinator and the compiled L1/L2 compute graphs.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+
+pub use artifact::{ArtifactEntry, ArtifactKind, Manifest};
+pub use client::Runtime;
+pub use executable::LoadedGraph;

@@ -1,0 +1,317 @@
+//! Exemplar-based clustering on the CPU — the paper's Algorithm 1
+//! (single-threaded) and its set-parallel multi-threaded variant (§4.1),
+//! both serving as the baselines of Fig. 2 / Table 1, plus the
+//! mindist-incremental [`CpuOracle`] the optimizers use.
+
+use crate::linalg::{sq_euclidean, sq_norms, Matrix};
+use crate::submodular::Oracle;
+use crate::util::threadpool::scoped_chunks;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The EBC function f(S) = L({e0}) − L(S ∪ {e0}) over a fixed ground set
+/// (paper Definition 5), with e0 = 0 and d = squared Euclidean.
+pub struct EbcFunction {
+    v: Matrix,
+    vsq: Vec<f32>,
+    /// scalar distance-evaluation counter (ablation metric)
+    work: AtomicU64,
+}
+
+impl EbcFunction {
+    pub fn new(v: Matrix) -> EbcFunction {
+        let vsq = sq_norms(v.data(), v.cols());
+        EbcFunction { v, vsq, work: AtomicU64::new(0) }
+    }
+
+    pub fn ground(&self) -> &Matrix {
+        &self.v
+    }
+
+    pub fn vsq(&self) -> &[f32] {
+        &self.vsq
+    }
+
+    /// Paper Algorithm 1, verbatim structure: for every v_i take the min
+    /// distance over S ∪ {e0}, average, and subtract from L({e0}).
+    ///
+    /// `set` holds row indices into the ground matrix.
+    pub fn eval(&self, set: &[usize]) -> f32 {
+        let n = self.v.rows();
+        let mut acc = 0f64;
+        for i in 0..n {
+            let vi = self.v.row(i);
+            let mut t = self.vsq[i]; // distance to e0
+            for &s in set {
+                let d = sq_euclidean(vi, self.v.row(s));
+                if d < t {
+                    t = d;
+                }
+            }
+            acc += (self.vsq[i] - t) as f64;
+        }
+        self.work
+            .fetch_add((n * set.len()) as u64, Ordering::Relaxed);
+        (acc / n as f64) as f32
+    }
+
+    /// Evaluate f for sets whose members are *external* vectors (used by
+    /// the streaming coordinator where candidates are not ground rows).
+    pub fn eval_external(&self, set: &Matrix) -> f32 {
+        assert_eq!(set.cols(), self.v.cols());
+        let n = self.v.rows();
+        let mut acc = 0f64;
+        for i in 0..n {
+            let vi = self.v.row(i);
+            let mut t = self.vsq[i];
+            for s in 0..set.rows() {
+                let d = sq_euclidean(vi, set.row(s));
+                if d < t {
+                    t = d;
+                }
+            }
+            acc += (self.vsq[i] - t) as f64;
+        }
+        (acc / n as f64) as f32
+    }
+
+    /// Single-threaded multi-set evaluation: Algorithm 1 looped over
+    /// S_multi — the paper's ST baseline for Fig. 2.
+    pub fn eval_sets_st(&self, sets: &[&[usize]]) -> Vec<f32> {
+        sets.iter().map(|s| self.eval(s)).collect()
+    }
+
+    /// Multi-threaded multi-set evaluation: the outer loop over sets is
+    /// distributed over a thread pool — the paper's MT baseline (§4.1,
+    /// "runs the mentioned algorithm on different sets in parallel").
+    pub fn eval_sets_mt(&self, sets: &[&[usize]], threads: usize) -> Vec<f32> {
+        let mut out = vec![0f32; sets.len()];
+        {
+            let slots: Vec<std::sync::Mutex<&mut f32>> =
+                out.iter_mut().map(std::sync::Mutex::new).collect();
+            scoped_chunks(sets.len(), threads, |_, start, end| {
+                for j in start..end {
+                    let v = self.eval(sets[j]);
+                    **slots[j].lock().unwrap() = v;
+                }
+            });
+        }
+        out
+    }
+
+    /// d²(v_i, v_j) for all i.
+    pub fn dist_col(&self, j: usize) -> Vec<f32> {
+        let vj = self.v.row(j);
+        self.work
+            .fetch_add(self.v.rows() as u64, Ordering::Relaxed);
+        (0..self.v.rows())
+            .map(|i| sq_euclidean(self.v.row(i), vj))
+            .collect()
+    }
+
+    /// Batched marginal gains given the incremental state.
+    pub fn gains(&self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
+        let n = self.v.rows() as f32;
+        self.work
+            .fetch_add((self.v.rows() * cands.len()) as u64, Ordering::Relaxed);
+        cands
+            .iter()
+            .map(|&c| {
+                let vc = self.v.row(c);
+                let mut acc = 0f64;
+                for i in 0..self.v.rows() {
+                    let d = sq_euclidean(self.v.row(i), vc);
+                    let r = mindist[i] - d;
+                    if r > 0.0 {
+                        acc += r as f64;
+                    }
+                }
+                (acc / n as f64) as f32
+            })
+            .collect()
+    }
+
+    /// Multi-threaded gains (candidate-parallel).
+    pub fn gains_mt(&self, mindist: &[f32], cands: &[usize], threads: usize) -> Vec<f32> {
+        let mut out = vec![0f32; cands.len()];
+        {
+            let slots: Vec<std::sync::Mutex<&mut f32>> =
+                out.iter_mut().map(std::sync::Mutex::new).collect();
+            scoped_chunks(cands.len(), threads, |_, start, end| {
+                let part = self.gains(mindist, &cands[start..end]);
+                for (o, v) in (start..end).zip(part) {
+                    **slots[o].lock().unwrap() = v;
+                }
+            });
+        }
+        out
+    }
+
+    pub fn work_counter(&self) -> u64 {
+        self.work.load(Ordering::Relaxed)
+    }
+}
+
+/// CPU-backed [`Oracle`]: single-threaded when `threads == 1`, else the
+/// MT baseline.
+pub struct CpuOracle {
+    f: EbcFunction,
+    threads: usize,
+}
+
+impl CpuOracle {
+    pub fn new(v: Matrix) -> CpuOracle {
+        CpuOracle { f: EbcFunction::new(v), threads: 1 }
+    }
+
+    pub fn new_mt(v: Matrix, threads: usize) -> CpuOracle {
+        CpuOracle { f: EbcFunction::new(v), threads: threads.max(1) }
+    }
+
+    pub fn function(&self) -> &EbcFunction {
+        &self.f
+    }
+}
+
+impl Oracle for CpuOracle {
+    fn n(&self) -> usize {
+        self.f.ground().rows()
+    }
+    fn dim(&self) -> usize {
+        self.f.ground().cols()
+    }
+    fn vsq(&self) -> &[f32] {
+        self.f.vsq()
+    }
+    fn gains(&mut self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
+        if self.threads <= 1 {
+            self.f.gains(mindist, cands)
+        } else {
+            self.f.gains_mt(mindist, cands, self.threads)
+        }
+    }
+    fn dist_col(&mut self, j: usize) -> Vec<f32> {
+        self.f.dist_col(j)
+    }
+    fn eval_sets(&mut self, sets: &[&[usize]]) -> Vec<f32> {
+        if self.threads <= 1 {
+            self.f.eval_sets_st(sets)
+        } else {
+            self.f.eval_sets_mt(sets, self.threads)
+        }
+    }
+    fn work_counter(&self) -> u64 {
+        self.f.work_counter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::{f_from_mindist, fold_mindist, initial_mindist};
+    use crate::util::rng::Rng;
+
+    fn toy() -> Matrix {
+        // three well-separated clusters in 2D
+        Matrix::from_rows(&[
+            &[0.0, 0.0],
+            &[0.1, 0.0],
+            &[5.0, 5.0],
+            &[5.1, 5.0],
+            &[-4.0, 3.0],
+            &[-4.0, 3.1],
+        ])
+    }
+
+    #[test]
+    fn empty_set_value_zero() {
+        let f = EbcFunction::new(toy());
+        assert_eq!(f.eval(&[]), 0.0);
+    }
+
+    #[test]
+    fn monotone_on_chain() {
+        let f = EbcFunction::new(toy());
+        let chain: [&[usize]; 4] = [&[], &[2], &[2, 4], &[2, 4, 0]];
+        let vals: Vec<f32> = chain.iter().map(|s| f.eval(s)).collect();
+        for w in vals.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6, "{vals:?}");
+        }
+    }
+
+    #[test]
+    fn duplicate_member_changes_nothing() {
+        let f = EbcFunction::new(toy());
+        assert!((f.eval(&[2, 4]) - f.eval(&[2, 4, 4])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gains_match_direct_differences() {
+        let mut rng = Rng::new(1);
+        let v = Matrix::random_normal(40, 6, &mut rng);
+        let f = EbcFunction::new(v);
+        let base: Vec<usize> = vec![3, 17];
+        let fs = f.eval(&base);
+        // build mindist for the base set
+        let mut mind = f.vsq().to_vec();
+        for &s in &base {
+            fold_mindist(&mut mind, &f.dist_col(s));
+        }
+        let cands = [0usize, 9, 25, 39];
+        let g = f.gains(&mind, &cands);
+        for (ci, &c) in cands.iter().enumerate() {
+            let mut ext = base.clone();
+            ext.push(c);
+            let direct = f.eval(&ext) - fs;
+            assert!(
+                (g[ci] - direct).abs() < 1e-4,
+                "cand {c}: gain {} vs direct {direct}",
+                g[ci]
+            );
+        }
+    }
+
+    #[test]
+    fn mt_matches_st() {
+        let mut rng = Rng::new(2);
+        let v = Matrix::random_normal(30, 5, &mut rng);
+        let f = EbcFunction::new(v);
+        let sets: Vec<Vec<usize>> = vec![vec![0, 5], vec![7], vec![], vec![1, 2, 3]];
+        let refs: Vec<&[usize]> = sets.iter().map(|s| s.as_slice()).collect();
+        let st = f.eval_sets_st(&refs);
+        let mt = f.eval_sets_mt(&refs, 4);
+        for (a, b) in st.iter().zip(&mt) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn f_from_mindist_matches_eval() {
+        let mut rng = Rng::new(3);
+        let v = Matrix::random_normal(25, 4, &mut rng);
+        let mut o = CpuOracle::new(v);
+        let set = [4usize, 11, 20];
+        let mut mind = initial_mindist(&o);
+        for &s in &set {
+            fold_mindist(&mut mind, &o.dist_col(s));
+        }
+        let via_state = f_from_mindist(o.vsq(), &mind);
+        let direct = o.function().eval(&set);
+        assert!((via_state - direct).abs() < 1e-5, "{via_state} vs {direct}");
+    }
+
+    #[test]
+    fn eval_external_matches_internal_rows() {
+        let v = toy();
+        let f = EbcFunction::new(v.clone());
+        let ext = v.gather(&[2, 4]);
+        assert!((f.eval_external(&ext) - f.eval(&[2, 4])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn work_counter_increases() {
+        let f = EbcFunction::new(toy());
+        let w0 = f.work_counter();
+        f.eval(&[1, 2]);
+        assert!(f.work_counter() > w0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Submodular functions (paper §3–4): the Exemplar-based-clustering
+//! function with its CPU evaluators (Algorithm 1, single- and
+//! multi-threaded — the paper's baselines), the IVM comparator, and the
+//! [`Oracle`] abstraction every optimizer in [`crate::optim`] runs
+//! against. The accelerated implementation of the same trait lives in
+//! [`crate::engine`].
+
+pub mod ebc;
+pub mod ivm;
+
+pub use ebc::{CpuOracle, EbcFunction};
+
+/// Evaluation interface between datasets and optimizers.
+///
+/// A summary is a set of *indices into the ground set*. Optimizer state
+/// is carried by `mindist` (min squared distance of every ground vector
+/// to the current summary ∪ {e0}; initialized to [`Oracle::vsq`]), which
+/// makes the greedy/streaming marginal-gain pattern O(N·C) per step
+/// instead of O(N·k·C) — on both CPU and the accelerator.
+pub trait Oracle {
+    /// Ground-set size.
+    fn n(&self) -> usize;
+    /// Feature dimensionality.
+    fn dim(&self) -> usize;
+    /// ‖v_i‖² per ground vector == d²(v_i, e0) (EBC's auxiliary exemplar).
+    fn vsq(&self) -> &[f32];
+
+    /// Marginal gains Δf(c | S) for candidate indices, given the state.
+    fn gains(&mut self, mindist: &[f32], cands: &[usize]) -> Vec<f32>;
+
+    /// d²(v_i, v_j) for every i — used to fold a selection into `mindist`.
+    fn dist_col(&mut self, j: usize) -> Vec<f32>;
+
+    /// Work-matrix evaluation of arbitrary sets (paper Algorithm 2):
+    /// EBC value f(S_j) for each set of ground indices.
+    fn eval_sets(&mut self, sets: &[&[usize]]) -> Vec<f32>;
+
+    /// Number of scalar distance evaluations performed so far (for the
+    /// call-count ablations); implementations may approximate.
+    fn work_counter(&self) -> u64 {
+        0
+    }
+}
+
+/// Fresh mindist state (distance to e0 only — the empty summary).
+pub fn initial_mindist(oracle: &dyn Oracle) -> Vec<f32> {
+    oracle.vsq().to_vec()
+}
+
+/// f(S) given the current state: mean(vsq) − mean(mindist).
+pub fn f_from_mindist(vsq: &[f32], mindist: &[f32]) -> f32 {
+    debug_assert_eq!(vsq.len(), mindist.len());
+    let n = vsq.len() as f32;
+    let mut acc = 0f64;
+    for i in 0..vsq.len() {
+        acc += (vsq[i] - mindist[i]) as f64;
+    }
+    (acc / n as f64) as f32
+}
+
+/// Fold a selected column into the state: mindist ← min(mindist, dcol).
+pub fn fold_mindist(mindist: &mut [f32], dcol: &[f32]) {
+    debug_assert_eq!(mindist.len(), dcol.len());
+    for i in 0..mindist.len() {
+        if dcol[i] < mindist[i] {
+            mindist[i] = dcol[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f_from_mindist_zero_for_empty() {
+        let vsq = vec![1.0, 2.0, 3.0];
+        assert_eq!(f_from_mindist(&vsq, &vsq), 0.0);
+    }
+
+    #[test]
+    fn fold_takes_elementwise_min() {
+        let mut m = vec![3.0, 1.0, 2.0];
+        fold_mindist(&mut m, &[2.0, 5.0, 2.0]);
+        assert_eq!(m, vec![2.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Tiny CSV writer/reader for bench outputs and case-study exports
+//! (Fig. 4 curves, Fig. 2/3 series). RFC-4180-style quoting.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// In-memory CSV table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Push a row of display-able values.
+    pub fn push_display(&mut self, row: &[&dyn std::fmt::Display]) {
+        self.push(row.iter().map(|v| v.to_string()).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for r in &self.rows {
+            write_row(&mut out, r);
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    pub fn parse(s: &str) -> Result<Table, String> {
+        let mut lines = parse_csv(s)?;
+        if lines.is_empty() {
+            return Err("empty csv".into());
+        }
+        let header = lines.remove(0);
+        for (i, r) in lines.iter().enumerate() {
+            if r.len() != header.len() {
+                return Err(format!("row {i} arity {} != header {}", r.len(), header.len()));
+            }
+        }
+        Ok(Table { header, rows: lines })
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+}
+
+fn needs_quote(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+}
+
+fn write_row(out: &mut String, row: &[String]) {
+    for (i, cell) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quote(cell) {
+            out.push('"');
+            for c in cell.chars() {
+                if c == '"' {
+                    out.push('"');
+                }
+                out.push(c);
+            }
+            out.push('"');
+        } else {
+            let _ = write!(out, "{cell}");
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_csv(s: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut rows = Vec::new();
+    let mut row = Vec::new();
+    let mut cell = String::new();
+    let mut chars = s.chars().peekable();
+    let mut in_quotes = false;
+    let mut row_started = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cell.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => cell.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    in_quotes = true;
+                    row_started = true;
+                }
+                ',' => {
+                    row.push(std::mem::take(&mut cell));
+                    row_started = true;
+                }
+                '\r' => {}
+                '\n' => {
+                    if row_started || !cell.is_empty() || !row.is_empty() {
+                        row.push(std::mem::take(&mut cell));
+                        rows.push(std::mem::take(&mut row));
+                    }
+                    row_started = false;
+                }
+                c => {
+                    cell.push(c);
+                    row_started = true;
+                }
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quote".into());
+    }
+    if row_started || !cell.is_empty() || !row.is_empty() {
+        row.push(cell);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["1".into(), "x,y".into()]);
+        t.push(vec!["he said \"hi\"".into(), "line\nbreak".into()]);
+        let s = t.to_csv();
+        let t2 = Table::parse(&s).unwrap();
+        assert_eq!(t.header, t2.header);
+        assert_eq!(t.rows, t2.rows);
+    }
+
+    #[test]
+    fn col_lookup() {
+        let t = Table::new(&["n", "runtime_s"]);
+        assert_eq!(t.col("runtime_s"), Some(1));
+        assert_eq!(t.col("nope"), None);
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+        assert!(Table::parse("").is_err());
+        assert!(Table::parse("a,\"b").is_err());
+    }
+
+    #[test]
+    fn push_display() {
+        let mut t = Table::new(&["x", "y"]);
+        t.push_display(&[&1.5f64, &"s"]);
+        assert_eq!(t.rows[0], vec!["1.5", "s"]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal `log`-crate backend writing to stderr with level filtering
+//! via `EBC_LOG` (error|warn|info|debug|trace; default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+use std::time::Instant;
+
+static INIT: Once = Once::new();
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:10.3}s {lvl} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        let filter = match std::env::var("EBC_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            Ok("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        let logger = Box::leak(Box::new(StderrLogger { start: Instant::now() }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(filter);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

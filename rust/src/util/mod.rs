@@ -1,0 +1,62 @@
+//! std-only infrastructure substrate.
+//!
+//! The build environment is fully offline (DESIGN.md §4), so the usual
+//! ecosystem crates (rand, serde, rayon, criterion, proptest, clap) are
+//! unavailable; this module tree provides the small, tested subset of
+//! their functionality the rest of the crate needs.
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+/// Argmax over an f32 slice; ties broken toward the lower index.
+/// Returns `None` for an empty slice or all-NaN input.
+pub fn argmax_f32(xs: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, b)) if x <= b => {}
+            _ => best = Some((i, x)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Round `x` up to the next multiple of `q` (q > 0).
+pub fn round_up(x: usize, q: usize) -> usize {
+    debug_assert!(q > 0);
+    x.div_ceil(q) * q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax_f32(&[1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax_f32(&[]), None);
+        assert_eq!(argmax_f32(&[f32::NAN, 1.0]), Some(1));
+        assert_eq!(argmax_f32(&[f32::NAN]), None);
+        // ties go to the first index
+        assert_eq!(argmax_f32(&[2.0, 2.0, 1.0]), Some(0));
+        assert_eq!(argmax_f32(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), Some(0));
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(1000, 1024), 1024);
+    }
+}

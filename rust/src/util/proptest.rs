@@ -1,0 +1,116 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! Deterministic, seed-driven case generation with shrinking-lite: on
+//! failure the failing seed is reported so the case replays exactly.
+//! Used by `rust/tests/proptests.rs` for the submodularity/monotonicity
+//! invariants and the coordinator invariants.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("EBC_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xEBC0_FFEE);
+        let cases = std::env::var("EBC_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(32);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` draws an arbitrary
+/// input from the RNG; `prop` returns `Err(reason)` on violation.
+///
+/// Panics with the offending case index + seed on first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (EBC_PROPTEST_SEED={} replays \
+                 the run; case seed {case_seed:#x}):\n  reason: {reason}\n  input: {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Draw a small random dataset: (n, d, row-major data) with n in
+/// [1, max_n], d in [1, max_d], values ~ N(0, scale).
+pub fn arb_dataset(rng: &mut Rng, max_n: usize, max_d: usize, scale: f32) -> (usize, usize, Vec<f32>) {
+    let n = 1 + rng.below(max_n);
+    let d = 1 + rng.below(max_d);
+    let data = (0..n * d).map(|_| rng.normal() * scale).collect();
+    (n, d, data)
+}
+
+/// Draw a random subset of [0, n) of size <= max_k (possibly empty).
+pub fn arb_subset(rng: &mut Rng, n: usize, max_k: usize) -> Vec<usize> {
+    let k = rng.below(max_k.min(n) + 1);
+    rng.sample_indices(n, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        let cfg = Config { cases: 16, seed: 1 };
+        forall("x*x >= 0", &cfg, |r| r.normal(), |x| {
+            if x * x >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative square".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        let cfg = Config { cases: 4, seed: 2 };
+        forall("always fails", &cfg, |r| r.f32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn arb_dataset_shapes() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let (n, d, data) = arb_dataset(&mut rng, 20, 10, 1.0);
+            assert!(n >= 1 && n <= 20);
+            assert!(d >= 1 && d <= 10);
+            assert_eq!(data.len(), n * d);
+        }
+    }
+
+    #[test]
+    fn arb_subset_valid() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let s = arb_subset(&mut rng, 10, 5);
+            assert!(s.len() <= 5);
+            let mut dedup = s.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), s.len());
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Fixed-size thread pool over std::thread + mpsc (rayon/tokio are
+//! unavailable offline).
+//!
+//! Two use sites:
+//! * the **MT CPU baseline** of the paper's §4.1 (set-parallel EBC) —
+//!   [`scoped_chunks`] mirrors the OpenMP `parallel for` over subsets;
+//! * the **coordinator**'s worker pool ([`ThreadPool`]) for background
+//!   ingestion and summary refresh jobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple fixed-size worker pool; jobs are executed FIFO.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                thread::Builder::new()
+                    .name(format!("ebc-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, queued }
+    }
+
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers drain + exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel-for over chunked index ranges using scoped threads: calls
+/// `f(chunk_index, start, end)` with [start, end) partitioning [0, n).
+/// The MT-CPU-baseline analog of the paper's OpenMP parallelization.
+pub fn scoped_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    let chunk = n.div_ceil(threads);
+    thread::scope(|scope| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(t, start, end));
+        }
+    });
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn par_map<T: Sync, R: Send>(items: &[T], threads: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+        scoped_chunks(items.len(), threads, |_, start, end| {
+            for i in start..end {
+                let r = f(&items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            }
+        });
+    }
+    out.into_iter().map(|x| x.expect("filled")).collect()
+}
+
+/// Default worker count: honours `EBC_THREADS`, else available_parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("EBC_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join all
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scoped_chunks_cover_range() {
+        let seen = Mutex::new(vec![false; 103]);
+        scoped_chunks(103, 4, |_, start, end| {
+            for i in start..end {
+                let mut s = seen.lock().unwrap();
+                assert!(!s[i], "index {i} visited twice");
+                s[i] = true;
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn scoped_chunks_empty_and_single() {
+        scoped_chunks(0, 4, |_, _, _| panic!("should not run"));
+        let hits = AtomicU64::new(0);
+        scoped_chunks(1, 8, |_, s, e| {
+            assert_eq!((s, e), (0, 1));
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..57).collect();
+        let out = par_map(&items, 3, |&x| x * 2);
+        assert_eq!(out, (0..57).map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,147 @@
+//! Case-study integration tests: the paper's §6 qualitative Table 2
+//! expectations must hold on the simulated campaigns, end-to-end through
+//! the real optimizer (reduced cycle fidelity keeps runtime sane; the
+//! full d=3524 run is exercised by `examples/injection_molding` and the
+//! table2 bench).
+
+use ebc::imm::casestudy::{
+    fig4_table, run_table2, summarize_case, table2_text, validate_expectations,
+};
+use ebc::imm::simulator::MeltPressureModel;
+use ebc::imm::{generate_dataset_with, Part, ProcessState};
+use ebc::linalg::Matrix;
+use ebc::optim::{Greedy, Optimizer, RandomSelection};
+use ebc::submodular::{CpuOracle, Oracle};
+
+const SAMPLES: usize = 256;
+const SEED: u64 = 20260711;
+
+fn cpu(m: Matrix) -> Box<dyn Oracle> {
+    Box::new(CpuOracle::new(m))
+}
+
+#[test]
+fn table2_expectations_hold_for_all_ten_datasets() {
+    let results = run_table2(&Greedy { batch: 4096 }, &cpu, 5, SAMPLES, SEED);
+    assert_eq!(results.len(), 10);
+    let mut failures = Vec::new();
+    for r in &results {
+        if let Err(e) = validate_expectations(r) {
+            failures.push(format!("{}/{}: {e}", r.part.name(), r.state.name()));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "paper §6 expectations violated:\n  {}\n\n{}",
+        failures.join("\n  "),
+        table2_text(&results, 5)
+    );
+}
+
+#[test]
+fn greedy_beats_random_on_every_campaign() {
+    for part in Part::all() {
+        for state in ProcessState::all() {
+            let ds = generate_dataset_with(part, state, SEED, 128);
+            let g = summarize_case(ds, &Greedy { batch: 4096 }, &cpu, 5);
+            let ds2 = generate_dataset_with(part, state, SEED, 128);
+            let r = summarize_case(ds2, &RandomSelection { seed: 3 }, &cpu, 5);
+            assert!(
+                g.f_value >= r.f_value * 0.999,
+                "{}/{}: greedy {} < random {}",
+                part.name(),
+                state.name(),
+                g.f_value,
+                r.f_value
+            );
+        }
+    }
+}
+
+#[test]
+fn fig4_regrind_representatives_show_both_effects() {
+    // the paper's Fig. 4: across regrind levels, max melt pressure AND
+    // plasticization time are affected
+    let ds = generate_dataset_with(Part::Plate, ProcessState::Regrind, SEED, 512);
+    let model = {
+        let mut m = MeltPressureModel::new(Part::Plate.spec());
+        m.samples = 512;
+        m
+    };
+    let res = summarize_case(ds, &Greedy { batch: 4096 }, &cpu, 5);
+
+    // order representatives by regrind section
+    let mut by_section: Vec<(usize, usize)> = res
+        .reps
+        .iter()
+        .map(|&i| (res.dataset.section[i], i))
+        .collect();
+    by_section.sort_unstable();
+    assert!(by_section.len() >= 4, "{by_section:?}");
+
+    let lo_sec = by_section.first().unwrap();
+    let hi_sec = by_section.last().unwrap();
+    assert!(hi_sec.0 > lo_sec.0);
+    let peak_lo = MeltPressureModel::peak_of(res.dataset.cycles.row(lo_sec.1));
+    let peak_hi = MeltPressureModel::peak_of(res.dataset.cycles.row(hi_sec.1));
+    assert!(
+        peak_lo > peak_hi + 30.0,
+        "peak should drop with regrind: {peak_lo} vs {peak_hi}"
+    );
+    let params = ebc::imm::simulator::CycleParams::default();
+    let plast_lo = model.plast_samples_of(res.dataset.cycles.row(lo_sec.1), &params);
+    let plast_hi = model.plast_samples_of(res.dataset.cycles.row(hi_sec.1), &params);
+    assert!(
+        plast_lo > plast_hi,
+        "plasticization should shorten with regrind: {plast_lo} vs {plast_hi}"
+    );
+}
+
+#[test]
+fn fig4_export_has_five_distinct_curves() {
+    let ds = generate_dataset_with(Part::Plate, ProcessState::Regrind, SEED, 256);
+    let res = summarize_case(ds, &Greedy { batch: 4096 }, &cpu, 5);
+    let t = fig4_table(&res);
+    assert_eq!(t.header.len(), 1 + res.reps.len());
+    assert_eq!(t.rows.len(), 256);
+    // header names carry the regrind percentage
+    assert!(t.header[1].contains("regrind"));
+    // columns differ (distinct cycles)
+    let c1: Vec<&String> = t.rows.iter().map(|r| &r[1]).collect();
+    let c2: Vec<&String> = t.rows.iter().map(|r| &r[2]).collect();
+    assert_ne!(c1, c2);
+}
+
+#[test]
+fn doe_covers_many_operation_points_with_large_k() {
+    // paper: 43 points; with k=43 the cover reaches 33 sections, the
+    // plate 28 — i.e. clearly more than half but fewer than all.
+    let ds = generate_dataset_with(Part::Cover, ProcessState::Doe, SEED, 128);
+    let res = summarize_case(ds, &Greedy { batch: 4096 }, &cpu, 43);
+    let mut secs: Vec<usize> = res.reps.iter().map(|&i| res.dataset.section[i]).collect();
+    secs.sort_unstable();
+    secs.dedup();
+    assert!(
+        secs.len() >= 20 && secs.len() <= 43,
+        "sections covered: {}",
+        secs.len()
+    );
+}
+
+#[test]
+fn startup_representative_order_is_stable_across_backends_seeds() {
+    // determinism: same seed -> same representatives
+    let a = summarize_case(
+        generate_dataset_with(Part::Cover, ProcessState::StartUp, 5, 128),
+        &Greedy { batch: 1024 },
+        &cpu,
+        5,
+    );
+    let b = summarize_case(
+        generate_dataset_with(Part::Cover, ProcessState::StartUp, 5, 128),
+        &Greedy { batch: 64 },
+        &cpu,
+        5,
+    );
+    assert_eq!(a.reps, b.reps);
+}

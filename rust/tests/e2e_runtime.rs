@@ -1,0 +1,238 @@
+//! End-to-end runtime tests: AOT HLO artifacts loaded through PJRT must
+//! reproduce the CPU reference implementation bit-for-bit-ish (f32
+//! tolerance) across the whole Oracle surface, for both precisions.
+//!
+//! Requires `make artifacts` (panics with a message otherwise).
+
+use ebc::engine::{DeviceDataset, Engine, EngineConfig, Precision, XlaOracle};
+use ebc::linalg::Matrix;
+use ebc::optim::{Greedy, Optimizer, ThreeSieves};
+use ebc::runtime::Runtime;
+use ebc::submodular::{fold_mindist, CpuOracle, EbcFunction, Oracle};
+use ebc::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => panic!("artifacts missing — run `make artifacts` first: {e}"),
+    }
+}
+
+fn engine(p: Precision) -> Engine {
+    Engine::new(runtime(), EngineConfig { precision: p, cpu_fallback: false, ..Default::default() })
+}
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn gains_match_cpu_f32() {
+    let mut rng = Rng::new(1);
+    let v = Matrix::random_normal(500, 100, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let mut ds = DeviceDataset::new(v.clone());
+    let eng = engine(Precision::F32);
+
+    // non-trivial state: two selections folded in
+    let mut mindist = f.vsq().to_vec();
+    fold_mindist(&mut mindist, &f.dist_col(3));
+    fold_mindist(&mut mindist, &f.dist_col(77));
+
+    let cands: Vec<usize> = vec![0, 9, 99, 250, 499];
+    let cpu = f.gains(&mindist, &cands);
+    let cmat = v.gather(&cands);
+    let xla = eng.gains(&mut ds, &mindist, &cmat).unwrap();
+    assert_eq!(xla.len(), cands.len());
+    for (i, (&a, &b)) in cpu.iter().zip(&xla).enumerate() {
+        assert!(close(a, b, 1e-4), "cand {i}: cpu {a} xla {b}");
+    }
+}
+
+#[test]
+fn gains_bf16_close_to_f32() {
+    let mut rng = Rng::new(2);
+    let v = Matrix::random_normal(300, 100, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let mindist = f.vsq().to_vec();
+    let cands: Vec<usize> = (0..50).collect();
+    let cpu = f.gains(&mindist, &cands);
+
+    let eng = engine(Precision::Bf16);
+    let mut ds = DeviceDataset::new(v.clone());
+    let xla = eng.gains(&mut ds, &mindist, &v.gather(&cands)).unwrap();
+    // bf16 has ~3 decimal digits; distances are O(d)=O(100)
+    for (i, (&a, &b)) in cpu.iter().zip(&xla).enumerate() {
+        assert!(close(a, b, 3e-2), "cand {i}: cpu {a} bf16 {b}");
+    }
+}
+
+#[test]
+fn update_and_dist_col_match_cpu() {
+    let mut rng = Rng::new(3);
+    let v = Matrix::random_normal(400, 100, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let eng = engine(Precision::F32);
+    let mut ds = DeviceDataset::new(v.clone());
+
+    // dist_col via +BIG trick
+    let dcol_cpu = f.dist_col(42);
+    let dcol_xla = eng.dist_col_vec(&mut ds, v.row(42)).unwrap();
+    for i in 0..dcol_cpu.len() {
+        assert!(close(dcol_cpu[i], dcol_xla[i], 1e-4), "i={i}");
+    }
+
+    // update folds + returns f
+    let mut mindist = f.vsq().to_vec();
+    let (nm, fval) = eng.update(&mut ds, &mindist, v.row(42)).unwrap();
+    fold_mindist(&mut mindist, &dcol_cpu);
+    for i in 0..nm.len() {
+        assert!(close(mindist[i], nm[i], 1e-4), "i={i}");
+    }
+    let f_direct = f.eval(&[42]);
+    assert!(close(fval, f_direct, 1e-4), "{fval} vs {f_direct}");
+}
+
+#[test]
+fn eval_sets_match_cpu_work_matrix() {
+    let mut rng = Rng::new(4);
+    let v = Matrix::random_normal(700, 100, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let eng = engine(Precision::F32);
+    let mut ds = DeviceDataset::new(v.clone());
+
+    // ragged sets, incl. singleton and larger ones
+    let sets: Vec<Vec<usize>> = vec![
+        vec![0],
+        vec![1, 2, 3],
+        vec![600, 5, 99, 320, 17],
+        (0..16).collect(),
+        vec![699],
+    ];
+    let refs: Vec<&[usize]> = sets.iter().map(|s| s.as_slice()).collect();
+    let cpu = f.eval_sets_st(&refs);
+    let xla = eng.eval_sets(&mut ds, &refs).unwrap();
+    for i in 0..cpu.len() {
+        assert!(close(cpu[i], xla[i], 1e-4), "set {i}: cpu {} xla {}", cpu[i], xla[i]);
+    }
+}
+
+#[test]
+fn greedy_on_xla_matches_greedy_on_cpu() {
+    let mut rng = Rng::new(5);
+    let v = Matrix::random_normal(600, 100, &mut rng);
+    let g_cpu = Greedy { batch: 256 }.run(&mut CpuOracle::new(v.clone()), 8);
+    let mut xo = XlaOracle::new(engine(Precision::F32), v);
+    let g_xla = Greedy { batch: 256 }.run(&mut xo, 8);
+    assert_eq!(g_cpu.indices, g_xla.indices, "selection paths diverged");
+    assert!(close(g_cpu.f_final, g_xla.f_final, 1e-4));
+}
+
+#[test]
+fn three_sieves_on_xla_close_to_cpu() {
+    let mut rng = Rng::new(6);
+    let v = Matrix::random_normal(400, 100, &mut rng);
+    let ts = ThreeSieves { epsilon: 0.1, t: 20 };
+    let r_cpu = ts.run(&mut CpuOracle::new(v.clone()), 5);
+    let mut xo = XlaOracle::new(engine(Precision::F32), v);
+    let r_xla = ts.run(&mut xo, 5);
+    assert_eq!(r_cpu.indices, r_xla.indices);
+    assert!(close(r_cpu.f_final, r_xla.f_final, 1e-3));
+}
+
+#[test]
+fn padded_d_dimension_is_exact() {
+    // d=37 pads to the d=128 bucket; zero-padding must not change values
+    let mut rng = Rng::new(7);
+    let v = Matrix::random_normal(100, 37, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let eng = engine(Precision::F32);
+    let mut ds = DeviceDataset::new(v.clone());
+    let sets: Vec<Vec<usize>> = vec![vec![5, 50], vec![99]];
+    let refs: Vec<&[usize]> = sets.iter().map(|s| s.as_slice()).collect();
+    let cpu = f.eval_sets_st(&refs);
+    let xla = eng.eval_sets(&mut ds, &refs).unwrap();
+    for i in 0..cpu.len() {
+        assert!(close(cpu[i], xla[i], 1e-4));
+    }
+}
+
+#[test]
+fn oversized_request_errors_without_fallback() {
+    let mut rng = Rng::new(8);
+    let v = Matrix::random_normal(64, 8, &mut rng);
+    let eng = engine(Precision::F32);
+    let mut ds = DeviceDataset::new(v);
+    // k=2000 exceeds every eval_multi bucket
+    let big: Vec<usize> = (0..64).cycle().take(2000).collect();
+    let sets: Vec<&[usize]> = vec![&big];
+    assert!(eng.eval_sets(&mut ds, &sets).is_err());
+}
+
+#[test]
+fn cpu_fallback_handles_oversized() {
+    let mut rng = Rng::new(9);
+    let v = Matrix::random_normal(64, 8, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let eng = Engine::new(runtime(), EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
+    let mut ds = DeviceDataset::new(v);
+    let big: Vec<usize> = (0..64).cycle().take(2000).collect();
+    let sets: Vec<&[usize]> = vec![&big];
+    let got = eng.eval_sets(&mut ds, &sets).unwrap();
+    let want = f.eval_sets_st(&sets);
+    assert!(close(got[0], want[0], 1e-4));
+}
+
+#[test]
+fn pallas_and_jnp_impls_agree() {
+    use ebc::engine::KernelImpl;
+    let mut rng = Rng::new(11);
+    let v = Matrix::random_normal(600, 100, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let mk = |imp: KernelImpl| {
+        Engine::new(
+            runtime(),
+            EngineConfig { precision: Precision::F32, cpu_fallback: false, kernel: imp },
+        )
+    };
+    let mindist = f.vsq().to_vec();
+    let cands: Vec<usize> = (0..64).collect();
+    let cmat = v.gather(&cands);
+
+    // one engine per impl: device buffers are client-bound, so the same
+    // dataset must keep talking to the same runtime
+    let eng_p = mk(KernelImpl::Pallas);
+    let eng_j = mk(KernelImpl::Jnp);
+    let mut ds_p = DeviceDataset::new(v.clone());
+    let mut ds_j = DeviceDataset::new(v.clone());
+    let g_pallas = eng_p.gains(&mut ds_p, &mindist, &cmat).unwrap();
+    let g_jnp = eng_j.gains(&mut ds_j, &mindist, &cmat).unwrap();
+    for i in 0..g_pallas.len() {
+        assert!(close(g_pallas[i], g_jnp[i], 1e-4), "i={i}: {} vs {}", g_pallas[i], g_jnp[i]);
+    }
+
+    let sets: Vec<Vec<usize>> = vec![vec![3, 14, 150], vec![599], (0..12).collect()];
+    let refs: Vec<&[usize]> = sets.iter().map(|s| s.as_slice()).collect();
+    let e_pallas = eng_p.eval_sets(&mut ds_p, &refs).unwrap();
+    let e_jnp = eng_j.eval_sets(&mut ds_j, &refs).unwrap();
+    let cpu = f.eval_sets_st(&refs);
+    for i in 0..cpu.len() {
+        assert!(close(e_pallas[i], cpu[i], 1e-4), "pallas set {i}");
+        assert!(close(e_jnp[i], cpu[i], 1e-4), "jnp set {i}");
+    }
+}
+
+#[test]
+fn ground_buffers_cached_across_calls() {
+    let mut rng = Rng::new(10);
+    let v = Matrix::random_normal(200, 100, &mut rng);
+    let eng = engine(Precision::F32);
+    let mut ds = DeviceDataset::new(v.clone());
+    let mindist = ds.vsq().to_vec();
+    let cands = v.gather(&[0, 1]);
+    eng.gains(&mut ds, &mindist, &cands).unwrap();
+    let uploads_after_first = ds.upload_bytes;
+    eng.gains(&mut ds, &mindist, &cands).unwrap();
+    assert_eq!(ds.upload_bytes, uploads_after_first, "ground set re-uploaded");
+    assert_eq!(ds.bucket_count(), 1);
+}

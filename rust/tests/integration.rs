@@ -1,0 +1,307 @@
+//! Cross-module integration: coordinator over the XLA engine, config →
+//! service wiring, CLI spec, snapshots — the paths the launcher uses.
+
+use ebc::cli;
+use ebc::config::parse::ConfigDoc;
+use ebc::config::schema::ServiceConfig;
+use ebc::coordinator::{snapshot, Coordinator, RouteResult, SimulatedFleet};
+use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::imm::{Part, ProcessState};
+use ebc::linalg::Matrix;
+use ebc::runtime::Runtime;
+use ebc::submodular::{CpuOracle, Oracle};
+use ebc::util::json::Json;
+
+fn xla_factory(p: Precision) -> Box<dyn Fn(Matrix) -> Box<dyn Oracle>> {
+    let rt = Runtime::discover().expect("make artifacts first");
+    let engine = Engine::new(rt, EngineConfig { precision: p, cpu_fallback: true, ..Default::default() });
+    Box::new(move |m: Matrix| Box::new(XlaOracle::new(engine.clone(), m)) as Box<dyn Oracle>)
+}
+
+#[test]
+fn coordinator_over_xla_engine_summarizes_fleet() {
+    let mut cfg = ServiceConfig::default();
+    cfg.summary.k = 3;
+    cfg.summary.refresh_every = 100;
+    cfg.summary.window = 300;
+    cfg.coordinator.queue_capacity = 4096;
+    let mut c = Coordinator::new(cfg, xla_factory(Precision::F32));
+    let mut fleet = SimulatedFleet::new(
+        &[
+            ("imm-a", Part::Cover, ProcessState::Stable),
+            ("imm-b", Part::Plate, ProcessState::Regrind),
+        ],
+        100, // pads into the d=128 bucket
+        42,
+    );
+    let n = c.run_stream(&mut fleet);
+    assert_eq!(n, 2000);
+    for m in ["imm-a", "imm-b"] {
+        match c.query(m) {
+            RouteResult::Summary(s) => {
+                assert_eq!(s.representative_seqs.len(), 3);
+                assert!(s.f_value > 0.0, "{m}: f={}", s.f_value);
+            }
+            other => panic!("{m}: {other:?}"),
+        }
+    }
+    assert!(c.metrics.refreshes >= 2);
+}
+
+#[test]
+fn xla_and_cpu_coordinators_agree_on_representatives() {
+    let mk_cfg = || {
+        let mut cfg = ServiceConfig::default();
+        cfg.summary.k = 4;
+        cfg.summary.refresh_every = 1000;
+        cfg.summary.window = 400;
+        cfg.coordinator.queue_capacity = 4096;
+        cfg
+    };
+    let cpu_factory: Box<dyn Fn(Matrix) -> Box<dyn Oracle>> =
+        Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+
+    let run = |factory: Box<dyn Fn(Matrix) -> Box<dyn Oracle>>| {
+        let mut c = Coordinator::new(mk_cfg(), factory);
+        let mut fleet =
+            SimulatedFleet::new(&[("m", Part::Cover, ProcessState::StartUp)], 100, 7);
+        c.run_stream(&mut fleet);
+        c.refresh("m");
+        match c.query("m") {
+            RouteResult::Summary(s) => s.representative_seqs,
+            other => panic!("{other:?}"),
+        }
+    };
+    let reps_cpu = run(cpu_factory);
+    let reps_xla = run(xla_factory(Precision::F32));
+    assert_eq!(reps_cpu, reps_xla);
+}
+
+#[test]
+fn service_config_file_to_coordinator() {
+    let doc = ConfigDoc::parse(
+        r#"
+name = "plant-x"
+[engine]
+precision = "f32"
+[summary]
+k = 2
+algorithm = "lazy_greedy"
+refresh_every = 10
+window = 50
+[coordinator]
+queue_capacity = 64
+ingest_batch = 8
+"#,
+    )
+    .unwrap();
+    let cfg = ServiceConfig::from_doc(&doc).unwrap();
+    let factory: Box<dyn Fn(Matrix) -> Box<dyn Oracle>> =
+        Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+    let mut c = Coordinator::new(cfg, factory);
+    let mut fleet = SimulatedFleet::new(&[("p", Part::Plate, ProcessState::Stable)], 24, 9);
+    c.run_stream(&mut fleet);
+    match c.query("p") {
+        RouteResult::Summary(s) => assert_eq!(s.representative_seqs.len(), 2),
+        other => panic!("{other:?}"),
+    }
+    // snapshot is valid JSON with the configured service name
+    let snap = snapshot::snapshot(&c);
+    let parsed = Json::parse(&snap.dump()).unwrap();
+    assert_eq!(parsed.get("service").unwrap().as_str(), Some("plant-x"));
+}
+
+#[test]
+fn cli_spec_covers_all_subcommands() {
+    // mirror of the launcher's spec: parse representative command lines
+    let spec = cli::AppSpec {
+        name: "t",
+        about: "t",
+        commands: vec![
+            cli::CommandSpec {
+                name: "summarize",
+                help: "",
+                flags: vec![
+                    cli::opt("n", "", "1000"),
+                    cli::opt("backend", "", "xla"),
+                ],
+            },
+            cli::CommandSpec {
+                name: "casestudy",
+                help: "",
+                flags: vec![cli::flag("table2", ""), cli::opt("k", "", "5")],
+            },
+        ],
+    };
+    let args: Vec<String> = ["summarize", "--n", "123", "--backend", "cpu"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let (cmd, m) = spec.parse(&args).unwrap();
+    assert_eq!(cmd, "summarize");
+    assert_eq!(m.usize("n").unwrap(), 123);
+    assert_eq!(m.str("backend").unwrap(), "cpu");
+
+    let args: Vec<String> = ["casestudy", "--table2"].iter().map(|s| s.to_string()).collect();
+    let (_, m) = spec.parse(&args).unwrap();
+    assert!(m.has("table2"));
+    assert_eq!(m.usize("k").unwrap(), 5);
+}
+
+#[test]
+fn bf16_coordinator_close_to_f32() {
+    let mk_cfg = || {
+        let mut cfg = ServiceConfig::default();
+        cfg.summary.k = 3;
+        cfg.summary.refresh_every = 1000;
+        cfg.summary.window = 200;
+        cfg.coordinator.queue_capacity = 2048;
+        cfg
+    };
+    let run = |p: Precision| {
+        let mut c = Coordinator::new(mk_cfg(), xla_factory(p));
+        let mut fleet =
+            SimulatedFleet::new(&[("m", Part::Cover, ProcessState::Regrind)], 64, 3);
+        c.run_stream(&mut fleet);
+        c.refresh("m");
+        match c.query("m") {
+            RouteResult::Summary(s) => s.f_value,
+            other => panic!("{other:?}"),
+        }
+    };
+    let f32v = run(Precision::F32);
+    let bf16v = run(Precision::Bf16);
+    let rel = (f32v - bf16v).abs() / f32v.max(1e-9);
+    assert!(rel < 0.05, "f32 {f32v} vs bf16 {bf16v} (rel {rel})");
+}
+
+// ------------------------------------------------- failure injection
+
+#[test]
+fn missing_hlo_file_is_an_error_not_a_panic() {
+    use ebc::runtime::{ArtifactEntry, ArtifactKind, LoadedGraph};
+    let rt = Runtime::discover().expect("make artifacts first");
+    let entry = ArtifactEntry {
+        name: "missing".into(),
+        file: std::path::PathBuf::from("/nonexistent/x.hlo.txt"),
+        kind: ArtifactKind::Gains,
+        imp: ebc::runtime::artifact::KernelImpl::Jnp,
+        precision: ebc::runtime::artifact::Precision::F32,
+        n: 8,
+        d: 8,
+        c: 8,
+        l: 0,
+        k: 0,
+        inputs: vec!["v".into()],
+        vmem_bytes: 0,
+        mxu_flops: 0.0,
+        grid_programs: 0,
+    };
+    assert!(LoadedGraph::compile(rt.client(), &entry).is_err());
+}
+
+#[test]
+fn corrupt_hlo_text_is_an_error() {
+    use ebc::runtime::{ArtifactEntry, ArtifactKind, LoadedGraph};
+    let rt = Runtime::discover().expect("make artifacts first");
+    let dir = std::env::temp_dir().join("ebc_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.hlo.txt");
+    std::fs::write(&path, "HloModule utterly % broken {{{").unwrap();
+    let entry = ArtifactEntry {
+        name: "bad".into(),
+        file: path,
+        kind: ArtifactKind::Update,
+        imp: ebc::runtime::artifact::KernelImpl::Jnp,
+        precision: ebc::runtime::artifact::Precision::F32,
+        n: 8,
+        d: 8,
+        c: 0,
+        l: 0,
+        k: 0,
+        inputs: vec!["v".into()],
+        vmem_bytes: 0,
+        mxu_flops: 0.0,
+        grid_programs: 0,
+    };
+    assert!(LoadedGraph::compile(rt.client(), &entry).is_err());
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    use ebc::runtime::Manifest;
+    let dir = std::env::temp_dir().join("ebc_manifest_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 1}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err()); // entries missing
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "entries": [{"name": "x"}]}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err()); // fields missing
+}
+
+#[test]
+fn engine_chunks_oversized_candidate_batches() {
+    use ebc::engine::DeviceDataset;
+    use ebc::submodular::EbcFunction;
+    use ebc::util::rng::Rng;
+    let mut rng = Rng::new(77);
+    let v = ebc::linalg::Matrix::random_normal(512, 100, &mut rng);
+    let f = EbcFunction::new(v.clone());
+    let rt = Runtime::discover().expect("make artifacts first");
+    let eng = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: false, ..Default::default() });
+    let mut ds = DeviceDataset::new(v.clone());
+    let mindist = f.vsq().to_vec();
+    // 3000 candidates exceeds every C bucket (max 1024) -> chunked
+    let cands: Vec<usize> = (0..512).cycle().take(3000).collect();
+    let got = eng.gains(&mut ds, &mindist, &v.gather(&cands)).unwrap();
+    assert_eq!(got.len(), 3000);
+    let want = f.gains(&mindist, &cands);
+    for i in (0..3000).step_by(371) {
+        assert!(
+            (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+            "i={i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn single_row_dataset_works() {
+    use ebc::submodular::Oracle as _;
+    let v = Matrix::from_rows(&[&[3.0f32; 100]]);
+    let rt = Runtime::discover().expect("make artifacts first");
+    let eng = Engine::new(rt, EngineConfig::default());
+    let mut o = XlaOracle::new(eng, v);
+    let g = o.gains(&o.vsq().to_vec(), &[0]);
+    // singleton gain of the only point = f({v0}) = mean(vsq) = |v0|^2
+    assert!((g[0] - 900.0).abs() < 1.0, "{}", g[0]);
+}
+
+#[test]
+fn artifacts_inventory_complete() {
+    let rt = Runtime::discover().expect("make artifacts first");
+    let man = rt.manifest();
+    // both precisions for every kind
+    for kind in ["gains", "update", "eval_multi"] {
+        for dt in ["f32", "bf16"] {
+            assert!(
+                man.entries
+                    .iter()
+                    .any(|e| e.kind.as_str() == kind && e.precision.as_str() == dt),
+                "missing {kind}/{dt}"
+            );
+        }
+    }
+    // the case-study bucket (d=3524 pads to 3584) must exist for both impls
+    use ebc::runtime::artifact::{KernelImpl, Precision as P};
+    let jnp = man.pick_gains(1000, 3524, 256, P::F32, KernelImpl::Jnp).unwrap();
+    assert_eq!(jnp.imp, KernelImpl::Jnp);
+    let pal = man.pick_gains(1000, 3524, 256, P::F32, KernelImpl::Pallas).unwrap();
+    assert_eq!(pal.imp, KernelImpl::Pallas);
+}

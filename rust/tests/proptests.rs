@@ -1,0 +1,348 @@
+//! Property-based tests (via the in-tree mini-framework,
+//! `ebc::util::proptest`) over the mathematical invariants the paper
+//! relies on and the coordinator's state machine.
+
+use ebc::coordinator::backpressure::BoundedQueue;
+use ebc::coordinator::{Coordinator, CycleRecord, RouteResult};
+use ebc::config::schema::ServiceConfig;
+use ebc::linalg::Matrix;
+use ebc::optim::{exhaustive_best, Greedy, LazyGreedy, Optimizer, SieveStreaming};
+use ebc::submodular::{CpuOracle, EbcFunction, Oracle};
+use ebc::util::proptest::{arb_dataset, arb_subset, forall, Config};
+use ebc::util::rng::Rng;
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+// ---------------------------------------------------------------- EBC math
+
+#[test]
+fn prop_ebc_is_monotone() {
+    forall(
+        "EBC monotone: A ⊆ B ⇒ f(A) <= f(B)",
+        &cfg(),
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 25, 8, 2.0);
+            let a = arb_subset(rng, n, 4);
+            let mut b = a.clone();
+            for e in arb_subset(rng, n, 4) {
+                if !b.contains(&e) {
+                    b.push(e);
+                }
+            }
+            (n, d, data, a, b)
+        },
+        |(n, d, data, a, b)| {
+            let f = EbcFunction::new(Matrix::from_vec(*n, *d, data.clone()));
+            let fa = f.eval(a);
+            let fb = f.eval(b);
+            if fb >= fa - 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("f(A)={fa} > f(B)={fb}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_ebc_is_submodular() {
+    forall(
+        "EBC diminishing returns: Δ(e|A) >= Δ(e|B) for A ⊆ B",
+        &cfg(),
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 20, 6, 2.0);
+            let a = arb_subset(rng, n, 3);
+            let mut b = a.clone();
+            for x in arb_subset(rng, n, 4) {
+                if !b.contains(&x) {
+                    b.push(x);
+                }
+            }
+            let e = rng.below(n);
+            (n, d, data, a, b, e)
+        },
+        |(n, d, data, a, b, e)| {
+            if b.contains(e) {
+                return Ok(());
+            }
+            let f = EbcFunction::new(Matrix::from_vec(*n, *d, data.clone()));
+            let ga = f.eval(&[a.clone(), vec![*e]].concat()) - f.eval(a);
+            let gb = f.eval(&[b.clone(), vec![*e]].concat()) - f.eval(b);
+            if ga >= gb - 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("Δ(e|A)={ga} < Δ(e|B)={gb}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_ebc_nonnegative_and_empty_zero() {
+    forall(
+        "EBC: f(∅)=0 and f(S) >= 0",
+        &cfg(),
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 30, 6, 2.0);
+            let s = arb_subset(rng, n, 6);
+            (n, d, data, s)
+        },
+        |(n, d, data, s)| {
+            let f = EbcFunction::new(Matrix::from_vec(*n, *d, data.clone()));
+            if f.eval(&[]) != 0.0 {
+                return Err("f(∅) != 0".into());
+            }
+            let v = f.eval(s);
+            if v >= -1e-6 {
+                Ok(())
+            } else {
+                Err(format!("f(S)={v} < 0"))
+            }
+        },
+    );
+}
+
+// ----------------------------------------------------------- optimizers
+
+#[test]
+fn prop_greedy_guarantee_vs_exhaustive() {
+    let cfg = Config { cases: 12, ..Config::default() };
+    forall(
+        "greedy >= (1 - 1/e) OPT",
+        &cfg,
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 11, 4, 2.0);
+            let k = 1 + rng.below(3);
+            (n, d, data, k)
+        },
+        |(n, d, data, k)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            let g = Greedy::default().run(&mut CpuOracle::new(v.clone()), *k);
+            let (_, opt) = exhaustive_best(&mut CpuOracle::new(v), *k);
+            let bound = (1.0 - (-1.0f32).exp()) * opt;
+            if g.f_final >= bound - 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("greedy {} < bound {bound} (opt {opt})", g.f_final))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_lazy_equals_greedy() {
+    forall(
+        "lazy greedy f == plain greedy f",
+        &Config { cases: 10, ..Config::default() },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 40, 5, 2.0);
+            let k = 1 + rng.below(6);
+            (n, d, data, k)
+        },
+        |(n, d, data, k)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            let g = Greedy::default().run(&mut CpuOracle::new(v.clone()), *k);
+            let l = LazyGreedy::default().run(&mut CpuOracle::new(v), *k);
+            if (g.f_final - l.f_final).abs() <= 1e-4 * (1.0 + g.f_final.abs()) {
+                Ok(())
+            } else {
+                Err(format!("greedy {} vs lazy {}", g.f_final, l.f_final))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sieve_streaming_guarantee() {
+    forall(
+        "sieve streaming >= ~(1/2 - eps) greedy",
+        &Config { cases: 8, ..Config::default() },
+        |rng| {
+            let (_, d, _) = arb_dataset(rng, 10, 4, 2.0);
+            let n = 20 + rng.below(40);
+            let data: Vec<f32> = (0..n * d).map(|_| rng.normal() * 2.0).collect();
+            (n, d, data, 3usize)
+        },
+        |(n, d, data, k)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            let g = Greedy::default().run(&mut CpuOracle::new(v.clone()), *k);
+            let s = SieveStreaming { epsilon: 0.05 }.run(&mut CpuOracle::new(v), *k);
+            // generous slack: the 1/2-eps bound is vs OPT, greedy ≈ OPT
+            if s.f_final >= 0.40 * g.f_final - 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("sieve {} << greedy {}", s.f_final, g.f_final))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------- coordinator
+
+#[test]
+fn prop_bounded_queue_never_overflows() {
+    forall(
+        "queue len <= capacity, accounting consistent",
+        &cfg(),
+        |rng| {
+            let cap = 1 + rng.below(32);
+            let ops = 1 + rng.below(200);
+            (cap, ops, rng.next_u64())
+        },
+        |(cap, ops, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut q = BoundedQueue::new(*cap);
+            let mut popped = 0u64;
+            for i in 0..*ops {
+                if rng.f32() < 0.7 {
+                    q.push(i);
+                } else if q.pop().is_some() {
+                    popped += 1;
+                }
+                if q.len() > *cap {
+                    return Err(format!("len {} > cap {cap}", q.len()));
+                }
+            }
+            let accounted = q.len() as u64 + popped + q.evicted;
+            if accounted == q.accepted {
+                Ok(())
+            } else {
+                Err(format!(
+                    "accounting: len {} + popped {popped} + evicted {} != accepted {}",
+                    q.len(),
+                    q.evicted,
+                    q.accepted
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_coordinator_summary_within_window() {
+    forall(
+        "summary representatives always inside the current window",
+        &Config { cases: 10, ..Config::default() },
+        |rng| {
+            let window = 5 + rng.below(20);
+            let total = 10 + rng.below(80);
+            let d = 2 + rng.below(4);
+            (window, total, d, rng.next_u64())
+        },
+        |(window, total, d, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut cfg = ServiceConfig::default();
+            cfg.summary.k = 3;
+            cfg.summary.refresh_every = 4;
+            cfg.summary.window = *window;
+            let factory =
+                Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+            let mut c = Coordinator::new(cfg, factory);
+            for s in 0..*total as u64 {
+                let vals: Vec<f32> = (0..*d).map(|_| rng.normal()).collect();
+                c.offer(CycleRecord { machine: "m".into(), seq: s, values: vals });
+                c.tick();
+            }
+            while c.queue_len() > 0 {
+                c.tick();
+            }
+            c.refresh("m");
+            match c.query("m") {
+                RouteResult::Summary(s) => {
+                    let lo = (*total as u64).saturating_sub(*window as u64);
+                    if s.representative_seqs.iter().all(|&q| q >= lo) {
+                        Ok(())
+                    } else {
+                        Err(format!("reps {:?} below window floor {lo}", s.representative_seqs))
+                    }
+                }
+                other => Err(format!("no summary: {other:?}")),
+            }
+        },
+    );
+}
+
+// --------------------------------------------------- CPU MT == CPU ST
+
+#[test]
+fn prop_mt_eval_matches_st() {
+    forall(
+        "MT multi-set eval == ST",
+        &Config { cases: 10, ..Config::default() },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 40, 5, 1.5);
+            let sets: Vec<Vec<usize>> =
+                (0..1 + rng.below(6)).map(|_| arb_subset(rng, n, 5)).collect();
+            (n, d, data, sets)
+        },
+        |(n, d, data, sets)| {
+            let f = EbcFunction::new(Matrix::from_vec(*n, *d, data.clone()));
+            let refs: Vec<&[usize]> = sets.iter().map(|s| s.as_slice()).collect();
+            let st = f.eval_sets_st(&refs);
+            let mt = f.eval_sets_mt(&refs, 3);
+            for (a, b) in st.iter().zip(&mt) {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("st {a} vs mt {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------- greedy batching invariance
+
+#[test]
+fn prop_greedy_batch_invariant() {
+    forall(
+        "greedy result independent of candidate batch size",
+        &Config { cases: 8, ..Config::default() },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 50, 4, 2.0);
+            let b1 = 1 + rng.below(16);
+            let b2 = 17 + rng.below(64);
+            (n, d, data, b1, b2)
+        },
+        |(n, d, data, b1, b2)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            let r1 = Greedy { batch: *b1 }.run(&mut CpuOracle::new(v.clone()), 5);
+            let r2 = Greedy { batch: *b2 }.run(&mut CpuOracle::new(v), 5);
+            if r1.indices == r2.indices {
+                Ok(())
+            } else {
+                Err(format!("{:?} vs {:?}", r1.indices, r2.indices))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------- rng sanity
+
+#[test]
+fn prop_sample_indices_always_distinct_in_range() {
+    forall(
+        "sample_indices: distinct, in range",
+        &cfg(),
+        |rng| {
+            let n = 1 + rng.below(100);
+            let m = rng.below(n + 1);
+            (n, m, rng.next_u64())
+        },
+        |(n, m, seed)| {
+            let mut r = Rng::new(*seed);
+            let idx = r.sample_indices(*n, *m);
+            if idx.len() != *m {
+                return Err("wrong count".into());
+            }
+            let mut s = idx.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != *m || s.iter().any(|&i| i >= *n) {
+                return Err(format!("invalid sample {idx:?}"));
+            }
+            Ok(())
+        },
+    );
+}
