@@ -1,0 +1,20 @@
+# Developer entry points. `make verify` is the tier-1 gate CI runs.
+
+.PHONY: verify build test bench artifacts
+
+verify:
+	cargo build --release && cargo test -q
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	EBC_BENCH_QUICK=1 cargo bench
+
+# AOT-lower the Pallas/JAX graphs to HLO text + manifest (requires the
+# Python layer; the Rust binary is self-contained afterwards).
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../artifacts

@@ -164,7 +164,7 @@ fn ablation_drain() {
         cfg.summary.window = 256;
         cfg.coordinator.queue_capacity = 512;
         cfg.coordinator.ingest_batch = if adaptive { 16 } else { 16 };
-        let factory: Box<dyn Fn(Matrix) -> Box<dyn Oracle>> =
+        let factory: ebc::coordinator::OracleFactory =
             Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
         let mut c = Coordinator::new(cfg, factory);
         let mut rng = Rng::new(7);

@@ -1,0 +1,66 @@
+//! Shard-scaling bench: two-stage sharded summarization wall-clock and
+//! quality as a function of the shard count P and the per-shard
+//! optimizer, on a generated IMM campaign — the horizontal companion to
+//! the paper's vertical (accelerator) scaling figures. Emits
+//! `bench_results/shard_scaling_bench.csv`.
+//!
+//!     cargo bench --bench shard_scaling
+//!
+//! `EBC_BENCH_QUICK=1` shrinks the sweep; `EBC_THREADS` caps the
+//! shard-stage worker pool.
+
+use ebc::bench::report::fmt_secs;
+use ebc::bench::{quick_mode, shard_scaling_sweep, Reporter, ShardSweepConfig};
+use ebc::imm::{generate_dataset_with, Part, ProcessState};
+use ebc::submodular::{CpuOracle, Oracle};
+
+fn main() -> anyhow::Result<()> {
+    ebc::util::logging::init();
+    let quick = quick_mode();
+    let samples = if quick { 128 } else { 512 };
+    let data = generate_dataset_with(Part::Cover, ProcessState::Stable, 7, samples).cycles;
+    let factory = |m: ebc::linalg::Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+
+    let algorithms: Vec<String> = if quick {
+        vec!["greedy".into()]
+    } else {
+        vec!["greedy".into(), "lazy_greedy".into(), "stochastic_greedy".into()]
+    };
+    let mut points = Vec::new();
+    for partitioner in ["round_robin", "hash", "locality"] {
+        let cfg = ShardSweepConfig {
+            k: 10,
+            shard_counts: vec![1, 2, 4, 8],
+            algorithms: algorithms.clone(),
+            partitioner: partitioner.into(),
+            threads: 0,
+            seed: 0xEBC,
+        };
+        let pts = shard_scaling_sweep(&data, &factory, &cfg)?;
+        points.extend(pts.into_iter().map(|p| (partitioner, p)));
+    }
+
+    let mut rep = Reporter::new(
+        "shard scaling (IMM cover/stable)",
+        &[
+            "partitioner", "algorithm", "P", "shard_s", "merge_s", "total_s",
+            "speedup", "quality",
+        ],
+    );
+    for (partitioner, p) in &points {
+        rep.row(&[
+            partitioner.to_string(),
+            p.algorithm.clone(),
+            p.shards.to_string(),
+            fmt_secs(p.shard_seconds),
+            fmt_secs(p.merge_seconds),
+            fmt_secs(p.total_seconds),
+            format!("{:.2}x", p.speedup),
+            format!("{:.3}", p.quality_ratio),
+        ]);
+    }
+    rep.print();
+    let path = rep.save_csv("shard_scaling_bench")?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -5,9 +5,11 @@
 //! and the workload generators for the paper's experiments.
 
 pub mod report;
+pub mod shard_scaling;
 pub mod workload;
 
 pub use report::Reporter;
+pub use shard_scaling::{shard_scaling_sweep, ShardScalingPoint, ShardSweepConfig};
 pub use workload::{fig2_workload, EvalProblem};
 
 use crate::util::stats::Summary;

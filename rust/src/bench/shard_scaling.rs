@@ -1,0 +1,152 @@
+//! Scaling harness for the shard subsystem: sweep shard counts ×
+//! optimizers over one dataset and account wall-clock + quality against
+//! the single-node run. Shared by the `shard-bench` CLI subcommand and
+//! the `shard_scaling` bench target.
+
+use crate::linalg::Matrix;
+use crate::optim::build_optimizer;
+use crate::shard::{build_partitioner, ShardOracleFactory, ShardedSummarizer};
+use anyhow::{anyhow, Result};
+
+/// One (optimizer, shard-count) measurement.
+#[derive(Debug, Clone)]
+pub struct ShardScalingPoint {
+    pub algorithm: String,
+    pub shards: usize,
+    pub shards_used: usize,
+    /// Wall-clock of the parallel per-shard stage.
+    pub shard_seconds: f64,
+    pub merge_seconds: f64,
+    pub total_seconds: f64,
+    /// Single-node wall-clock of the same optimizer (the P-independent
+    /// reference, measured once per algorithm).
+    pub single_seconds: f64,
+    pub f_merged: f32,
+    pub f_single: f32,
+    /// f_merged / f_single.
+    pub quality_ratio: f64,
+    /// single_seconds / total_seconds.
+    pub speedup: f64,
+}
+
+/// Sweep settings.
+#[derive(Debug, Clone)]
+pub struct ShardSweepConfig {
+    pub k: usize,
+    pub shard_counts: Vec<usize>,
+    pub algorithms: Vec<String>,
+    pub partitioner: String,
+    /// Worker threads for the per-shard stage (0 = auto).
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for ShardSweepConfig {
+    fn default() -> Self {
+        ShardSweepConfig {
+            k: 10,
+            shard_counts: vec![1, 2, 4, 8],
+            algorithms: vec!["greedy".into()],
+            partitioner: "round_robin".into(),
+            threads: 0,
+            seed: 0xEBC,
+        }
+    }
+}
+
+/// Run the sweep. The baseline per algorithm is taken from the P = 1
+/// point's reference run, so every row's `speedup` compares against the
+/// same single-node measurement.
+pub fn shard_scaling_sweep(
+    data: &Matrix,
+    factory: &ShardOracleFactory,
+    cfg: &ShardSweepConfig,
+) -> Result<Vec<ShardScalingPoint>> {
+    let partitioner = build_partitioner(&cfg.partitioner, cfg.seed)
+        .ok_or_else(|| anyhow!("unknown partitioner '{}'", cfg.partitioner))?;
+    let mut out = Vec::new();
+    for alg in &cfg.algorithms {
+        let optimizer = build_optimizer(alg, 1024)
+            .ok_or_else(|| anyhow!("unknown algorithm '{alg}'"))?;
+        let mut single: Option<(f64, f32)> = None; // (seconds, f)
+        for &p in &cfg.shard_counts {
+            let mut s = ShardedSummarizer::new(partitioner.as_ref(), optimizer.as_ref(), p);
+            s.threads = cfg.threads;
+            let res = if single.is_none() {
+                let r = s.summarize_with_baseline(data, factory, cfg.k);
+                let b = r.baseline.as_ref().expect("baseline requested");
+                single = Some((b.wall_seconds, b.f_final));
+                r
+            } else {
+                s.summarize(data, factory, cfg.k)
+            };
+            let (single_seconds, f_single) = single.expect("baseline set");
+            let total = res.total_seconds();
+            out.push(ShardScalingPoint {
+                algorithm: alg.clone(),
+                shards: p,
+                shards_used: res.shards_used,
+                shard_seconds: res.shard_seconds,
+                merge_seconds: res.merge_seconds,
+                total_seconds: total,
+                single_seconds,
+                f_merged: res.merged.f_final,
+                f_single,
+                quality_ratio: if f_single <= 0.0 {
+                    1.0
+                } else {
+                    res.merged.f_final as f64 / f_single as f64
+                },
+                speedup: if total > 0.0 { single_seconds / total } else { 0.0 },
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::{CpuOracle, Oracle};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sweep_produces_one_point_per_cell() {
+        let mut rng = Rng::new(1);
+        let data = Matrix::random_normal(80, 6, &mut rng);
+        let factory = |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+        let cfg = ShardSweepConfig {
+            k: 4,
+            shard_counts: vec![1, 2],
+            algorithms: vec!["greedy".into(), "stochastic_greedy".into()],
+            ..Default::default()
+        };
+        let points = shard_scaling_sweep(&data, &factory, &cfg).unwrap();
+        assert_eq!(points.len(), 4);
+        for pt in &points {
+            assert!(pt.total_seconds > 0.0);
+            assert!(pt.quality_ratio > 0.5, "{pt:?}");
+        }
+        // P = 1 greedy is exactly the single-node run
+        let p1 = &points[0];
+        assert_eq!(p1.shards, 1);
+        assert_eq!(p1.f_merged.to_bits(), p1.f_single.to_bits());
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_names() {
+        let mut rng = Rng::new(2);
+        let data = Matrix::random_normal(10, 3, &mut rng);
+        let factory = |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+        let bad_alg = ShardSweepConfig {
+            algorithms: vec!["magic".into()],
+            ..Default::default()
+        };
+        assert!(shard_scaling_sweep(&data, &factory, &bad_alg).is_err());
+        let bad_part = ShardSweepConfig {
+            partitioner: "psychic".into(),
+            ..Default::default()
+        };
+        assert!(shard_scaling_sweep(&data, &factory, &bad_part).is_err());
+    }
+}

@@ -40,6 +40,34 @@ impl Default for SummarySection {
     }
 }
 
+/// `[shard]` section: the sharded two-stage summarizer used by
+/// fleet-level queries (and tunable for `shard-bench`).
+#[derive(Debug, Clone)]
+pub struct ShardSection {
+    /// Number of shards P the ground set is split into.
+    pub shards: usize,
+    /// Partition strategy: one of [`crate::shard::PARTITIONERS`].
+    pub partitioner: String,
+    /// Worker threads for the per-shard stage (0 = auto).
+    pub threads: usize,
+    /// Exemplars each shard contributes in stage 1 (0 = final k).
+    pub per_shard_k: usize,
+    /// Seed for hash mixing / the locality projection.
+    pub seed: u64,
+}
+
+impl Default for ShardSection {
+    fn default() -> Self {
+        ShardSection {
+            shards: 2,
+            partitioner: "round_robin".into(),
+            threads: 0,
+            per_shard_k: 0,
+            seed: 0xEBC,
+        }
+    }
+}
+
 /// `[coordinator]` section: service-level knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -63,6 +91,7 @@ pub struct ServiceConfig {
     pub engine: EngineSection,
     pub summary: SummarySection,
     pub coordinator: CoordinatorConfig,
+    pub shard: ShardSection,
     pub machines: Vec<String>,
 }
 
@@ -73,6 +102,7 @@ impl Default for ServiceConfig {
             engine: EngineSection::default(),
             summary: SummarySection::default(),
             coordinator: CoordinatorConfig::default(),
+            shard: ShardSection::default(),
             machines: vec![],
         }
     }
@@ -86,12 +116,18 @@ impl ServiceConfig {
             other => bail!("engine.precision: unknown '{other}'"),
         };
         let algorithm = doc.str("summary.algorithm", "greedy");
-        if !matches!(
-            algorithm.as_str(),
-            "greedy" | "lazy_greedy" | "stochastic_greedy" | "sieve_streaming"
-                | "sieve_streaming_pp" | "three_sieves" | "random"
-        ) {
-            bail!("summary.algorithm: unknown '{algorithm}'");
+        if !crate::optim::ALGORITHMS.contains(&algorithm.as_str()) {
+            bail!(
+                "summary.algorithm: unknown '{algorithm}' (expected one of {:?})",
+                crate::optim::ALGORITHMS
+            );
+        }
+        let partitioner = doc.str("shard.partitioner", "round_robin");
+        if !crate::shard::PARTITIONERS.contains(&partitioner.as_str()) {
+            bail!(
+                "shard.partitioner: unknown '{partitioner}' (expected one of {:?})",
+                crate::shard::PARTITIONERS
+            );
         }
         let machines = match doc.get("coordinator.machines") {
             Some(Value::StrArray(a)) => a.clone(),
@@ -121,6 +157,13 @@ impl ServiceConfig {
                 workers: pos("coordinator.workers", 2)?.max(1),
                 queue_capacity: pos("coordinator.queue_capacity", 256)?.max(1),
                 ingest_batch: pos("coordinator.ingest_batch", 32)?.max(1),
+            },
+            shard: ShardSection {
+                shards: pos("shard.shards", 2)?.max(1),
+                partitioner,
+                threads: pos("shard.threads", 0)?,
+                per_shard_k: pos("shard.per_shard_k", 0)?,
+                seed: pos("shard.seed", 0xEBC)? as u64,
             },
             machines,
         })
@@ -153,6 +196,12 @@ workers = 4
 queue_capacity = 128
 ingest_batch = 16
 machines = ["cover-line", "plate-line"]
+[shard]
+shards = 8
+partitioner = "locality"
+threads = 2
+per_shard_k = 12
+seed = 99
 "#,
         )
         .unwrap();
@@ -163,6 +212,11 @@ machines = ["cover-line", "plate-line"]
         assert_eq!(c.summary.k, 10);
         assert_eq!(c.summary.algorithm, "three_sieves");
         assert_eq!(c.coordinator.workers, 4);
+        assert_eq!(c.shard.shards, 8);
+        assert_eq!(c.shard.partitioner, "locality");
+        assert_eq!(c.shard.threads, 2);
+        assert_eq!(c.shard.per_shard_k, 12);
+        assert_eq!(c.shard.seed, 99);
         assert_eq!(c.machines, vec!["cover-line", "plate-line"]);
     }
 
@@ -172,6 +226,22 @@ machines = ["cover-line", "plate-line"]
         assert_eq!(c.summary.k, 5);
         assert_eq!(c.engine.precision, Precision::F32);
         assert_eq!(c.coordinator.workers, 2);
+        assert_eq!(c.shard.shards, 2);
+        assert_eq!(c.shard.partitioner, "round_robin");
+        assert_eq!(c.shard.threads, 0);
+    }
+
+    #[test]
+    fn rejects_unknown_partitioner() {
+        let doc = ConfigDoc::parse("[shard]\npartitioner = \"psychic\"\n").unwrap();
+        assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn shards_clamped_to_at_least_one() {
+        let doc = ConfigDoc::parse("[shard]\nshards = 0\n").unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.shard.shards, 1);
     }
 
     #[test]

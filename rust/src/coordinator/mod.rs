@@ -18,6 +18,11 @@
 //! cycles the machine's sliding window is re-summarized with the
 //! configured optimizer; queries are served from the cached summary in
 //! O(1).
+//!
+//! Fleet-level queries (the reserved [`FLEET_QUERY`] name, `@fleet`)
+//! pool every machine's window and answer through the sharded
+//! two-stage summarizer ([`crate::shard`]), so "summarize the whole
+//! fleet" scales with worker threads instead of fleet size.
 
 pub mod backpressure;
 pub mod batcher;
@@ -28,6 +33,6 @@ pub mod snapshot;
 pub mod stream;
 
 pub use machine::{MachineState, Summary};
-pub use router::{RouteResult, Router};
+pub use router::{FleetSummary, RouteResult, Router, FLEET_QUERY};
 pub use service::{Coordinator, CoordinatorMetrics, OracleFactory};
 pub use stream::{CycleRecord, SimulatedFleet, StreamSource};

@@ -4,11 +4,40 @@
 use crate::coordinator::machine::{MachineState, Summary};
 use std::collections::BTreeMap;
 
+/// Reserved query name answered with a fleet-wide sharded summary
+/// instead of a per-machine lookup ('@' cannot start a machine name).
+pub const FLEET_QUERY: &str = "@fleet";
+
+/// A cross-machine summary of the whole fleet's recent cycles,
+/// computed on demand by sharding the concatenated per-machine windows
+/// (see [`crate::shard`]).
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    /// Representative cycles as (machine, seq), in selection order.
+    pub representatives: Vec<(String, u64)>,
+    /// EBC value of the merged summary over the pooled windows.
+    pub f_value: f32,
+    /// Total window rows pooled across machines.
+    pub window_total: usize,
+    /// Machines contributing windows.
+    pub machines: usize,
+    /// Machines skipped (empty window or dimension mismatch).
+    pub machines_skipped: usize,
+    /// Non-empty shards the first stage ran.
+    pub shards: usize,
+    /// Wall-clock of the parallel per-shard stage (seconds).
+    pub shard_seconds: f64,
+    /// Wall-clock of the merge stage (seconds).
+    pub merge_seconds: f64,
+}
+
 /// Routing outcome for a summary query.
 #[derive(Debug, Clone)]
 pub enum RouteResult {
     /// Cached summary for the machine.
     Summary(Summary),
+    /// On-demand fleet-wide summary (the [`FLEET_QUERY`] route).
+    Fleet(FleetSummary),
     /// Machine known but no summary computed yet.
     NotReady { ingested: u64 },
     /// Name didn't resolve.
@@ -24,6 +53,17 @@ impl RouteResult {
             RouteResult::Summary(s) => format!(
                 "summary v{} over {} cycles: representatives (seq) {:?}, f={:.4}, refreshed in {:.3}s",
                 s.version, s.window_len, s.representative_seqs, s.f_value, s.refresh_seconds
+            ),
+            RouteResult::Fleet(s) => format!(
+                "fleet summary over {} machine(s) / {} cycles ({} shard(s)): \
+                 representatives {:?}, f={:.4}, shard {:.3}s + merge {:.3}s",
+                s.machines,
+                s.window_total,
+                s.shards,
+                s.representatives,
+                s.f_value,
+                s.shard_seconds,
+                s.merge_seconds
             ),
             RouteResult::NotReady { ingested } => {
                 format!("no summary yet ({ingested} cycles ingested)")

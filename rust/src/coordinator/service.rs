@@ -4,13 +4,11 @@ use crate::config::schema::ServiceConfig;
 use crate::coordinator::backpressure::{Admission, BoundedQueue};
 use crate::coordinator::batcher::{adaptive_drain, group_by_machine};
 use crate::coordinator::machine::{MachineState, Summary};
-use crate::coordinator::router::{RouteResult, Router};
+use crate::coordinator::router::{FleetSummary, RouteResult, Router, FLEET_QUERY};
 use crate::coordinator::stream::{CycleRecord, StreamSource};
 use crate::linalg::Matrix;
-use crate::optim::{
-    Greedy, LazyGreedy, Optimizer, RandomSelection, SieveStreaming, SieveStreamingPp,
-    StochasticGreedy, ThreeSieves,
-};
+use crate::optim::{build_optimizer, Optimizer};
+use crate::shard::{build_partitioner, ShardedSummarizer};
 use crate::submodular::Oracle;
 use crate::util::timer::Profile;
 use std::collections::BTreeMap;
@@ -18,7 +16,9 @@ use std::time::Instant;
 
 /// Produces an oracle for a window matrix — the seam between the
 /// coordinator and the evaluation backend (CPU baseline or XLA engine).
-pub type OracleFactory = Box<dyn Fn(Matrix) -> Box<dyn Oracle>>;
+/// `Send + Sync` so fleet-level queries can build shard oracles from
+/// pool workers concurrently (see [`crate::shard`]).
+pub type OracleFactory = Box<dyn Fn(Matrix) -> Box<dyn Oracle> + Send + Sync>;
 
 /// Service-level counters.
 #[derive(Debug, Clone, Default)]
@@ -30,6 +30,12 @@ pub struct CoordinatorMetrics {
     pub refreshes: u64,
     pub refresh_seconds_total: f64,
     pub queries: u64,
+    /// Fleet-wide (`@fleet`) summary queries served.
+    pub fleet_queries: u64,
+    /// Non-empty shards executed by fleet queries (first stage).
+    pub shard_runs: u64,
+    /// Cumulative wall-clock of fleet-query merge stages.
+    pub shard_merge_seconds_total: f64,
 }
 
 /// The streaming summarization coordinator.
@@ -48,6 +54,10 @@ impl Coordinator {
         let queue = BoundedQueue::new(cfg.coordinator.queue_capacity);
         let mut machines = BTreeMap::new();
         for name in &cfg.machines {
+            if name.starts_with('@') {
+                log::warn!("ignoring machine '{name}': '@' names are reserved for routes");
+                continue;
+            }
             machines.insert(name.clone(), MachineState::new(name, cfg.summary.window.max(1)));
         }
         Coordinator {
@@ -62,16 +72,10 @@ impl Coordinator {
     }
 
     fn build_optimizer(&self) -> Box<dyn Optimizer> {
-        match self.cfg.summary.algorithm.as_str() {
-            "greedy" => Box::new(Greedy { batch: self.cfg.engine.batch }),
-            "lazy_greedy" => Box::new(LazyGreedy::default()),
-            "stochastic_greedy" => Box::new(StochasticGreedy::default()),
-            "sieve_streaming" => Box::new(SieveStreaming::default()),
-            "sieve_streaming_pp" => Box::new(SieveStreamingPp::default()),
-            "three_sieves" => Box::new(ThreeSieves { epsilon: 0.1, t: 50 }),
-            "random" => Box::new(RandomSelection::default()),
-            other => unreachable!("schema validated algorithm '{other}'"),
-        }
+        build_optimizer(&self.cfg.summary.algorithm, self.cfg.engine.batch)
+            .unwrap_or_else(|| {
+                unreachable!("schema validated algorithm '{}'", self.cfg.summary.algorithm)
+            })
     }
 
     /// Offer one record (sensor push path). Returns the admission advice.
@@ -97,6 +101,13 @@ impl Coordinator {
         let count = records.len();
         let grouped = self.profile.scope("coord.batch", || group_by_machine(records));
         for (name, recs) in grouped {
+            if name.starts_with('@') {
+                // '@' prefixes are reserved for query routes (FLEET_QUERY);
+                // a machine by such a name would be unqueryable
+                log::warn!("dropping {} frame(s) from reserved name '{name}'", recs.len());
+                self.metrics.malformed += recs.len() as u64;
+                continue;
+            }
             let window_cap = self.cfg.summary.window.max(1);
             let m = self
                 .machines
@@ -151,10 +162,100 @@ impl Coordinator {
         }
     }
 
-    /// Operator query: cached summary for `machine`.
+    /// Operator query: cached summary for `machine`, or — for the
+    /// reserved [`FLEET_QUERY`] name — an on-demand fleet-wide summary.
     pub fn query(&mut self, machine: &str) -> RouteResult {
         self.metrics.queries += 1;
+        if machine == FLEET_QUERY {
+            return self.fleet_summary();
+        }
         Router::query(&self.machines, machine)
+    }
+
+    /// Answer "summarize the whole fleet": pool every machine's current
+    /// window into one ground set and run the sharded two-stage
+    /// summarizer over it with the `[shard]` config. Machines whose
+    /// window is empty or whose sensor dimensionality differs from the
+    /// fleet majority (the dimension carrying the most pooled rows)
+    /// are skipped.
+    pub fn fleet_summary(&mut self) -> RouteResult {
+        self.metrics.fleet_queries += 1;
+
+        // pool windows; rows[i] = (machine, seq) for fleet matrix row i.
+        // Collect everything first: the fleet dimensionality is the one
+        // carrying the most pooled rows (a lone rogue sensor must not
+        // hijack the fleet), and one up-front allocation avoids the
+        // quadratic cost of repeated vstack.
+        let mut windows: Vec<(&str, Matrix, Vec<u64>)> = Vec::new();
+        let mut skipped = 0usize;
+        for (name, m) in &self.machines {
+            match m.window_matrix() {
+                Some((window, seqs)) => windows.push((name.as_str(), window, seqs)),
+                None => skipped += 1,
+            }
+        }
+        // majority dimension by pooled row count (ties: larger dim)
+        let mut rows_per_dim: BTreeMap<usize, usize> = BTreeMap::new();
+        for (_, w, _) in &windows {
+            *rows_per_dim.entry(w.cols()).or_default() += w.rows();
+        }
+        let Some((&d, _)) = rows_per_dim.iter().max_by_key(|(_, &r)| r) else {
+            // nothing to pool yet: report aggregate ingestion progress
+            let total: u64 = self.machines.values().map(|m| m.total_ingested).sum();
+            return RouteResult::NotReady { ingested: total };
+        };
+        let mut machines = 0usize;
+        let total_rows = rows_per_dim[&d];
+        let mut data = Vec::with_capacity(total_rows * d);
+        let mut rows: Vec<(String, u64)> = Vec::with_capacity(total_rows);
+        for (name, window, seqs) in windows {
+            if window.cols() != d {
+                log::warn!(
+                    "fleet query: skipping {name} (dim {} != fleet majority dim {d})",
+                    window.cols()
+                );
+                skipped += 1;
+                continue;
+            }
+            data.extend_from_slice(window.data());
+            rows.extend(seqs.into_iter().map(|s| (name.to_string(), s)));
+            machines += 1;
+        }
+        let fleet_matrix = Matrix::from_vec(total_rows, d, data);
+
+        let sc = &self.cfg.shard;
+        let partitioner = build_partitioner(&sc.partitioner, sc.seed)
+            .unwrap_or_else(|| unreachable!("schema validated partitioner '{}'", sc.partitioner));
+        let optimizer = self.build_optimizer();
+        let mut sharded =
+            ShardedSummarizer::new(partitioner.as_ref(), optimizer.as_ref(), sc.shards);
+        sharded.threads = sc.threads;
+        sharded.per_shard_k = sc.per_shard_k;
+        sharded.merge_batch = self.cfg.engine.batch;
+        let k = self.cfg.summary.k.min(fleet_matrix.rows());
+        let factory = |m: Matrix| (self.oracle_factory)(m);
+        let res = self
+            .profile
+            .scope("coord.fleet", || sharded.summarize(&fleet_matrix, &factory, k));
+
+        self.metrics.shard_runs += res.shards_used as u64;
+        self.metrics.shard_merge_seconds_total += res.merge_seconds;
+
+        RouteResult::Fleet(FleetSummary {
+            representatives: res
+                .merged
+                .indices
+                .iter()
+                .map(|&i| rows[i].clone())
+                .collect(),
+            f_value: res.merged.f_final,
+            window_total: rows.len(),
+            machines,
+            machines_skipped: skipped,
+            shards: res.shards_used,
+            shard_seconds: res.shard_seconds,
+            merge_seconds: res.merge_seconds,
+        })
     }
 
     /// Drive a whole stream to exhaustion (utility for examples/tests).
@@ -298,6 +399,119 @@ mod tests {
         let m = &c.machines()["m"];
         let (_, seqs) = m.window_matrix().unwrap();
         assert_eq!(*seqs.last().unwrap(), 99);
+    }
+
+    #[test]
+    fn fleet_query_shards_merges_and_counts() {
+        let mut cfg = cfg(3, 1000, 100);
+        cfg.shard.shards = 2;
+        let mut c = Coordinator::new(cfg, cpu_factory());
+        for m in ["m1", "m2", "m3"] {
+            for s in 0..12u64 {
+                c.offer(rec(m, s, (s as f32) + m.len() as f32));
+            }
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        match c.query(FLEET_QUERY) {
+            RouteResult::Fleet(f) => {
+                assert_eq!(f.machines, 3);
+                assert_eq!(f.machines_skipped, 0);
+                assert_eq!(f.window_total, 36);
+                assert_eq!(f.shards, 2);
+                assert!(f.representatives.len() <= 3 && !f.representatives.is_empty());
+                assert!(f.f_value > 0.0);
+                for (m, seq) in &f.representatives {
+                    assert!(["m1", "m2", "m3"].contains(&m.as_str()), "{m}");
+                    assert!(*seq < 12, "{seq}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // the new counters moved
+        assert_eq!(c.metrics.fleet_queries, 1);
+        assert_eq!(c.metrics.shard_runs, 2);
+        assert!(c.metrics.shard_merge_seconds_total > 0.0);
+        assert_eq!(c.metrics.queries, 1); // fleet queries count as queries too
+        c.query(FLEET_QUERY);
+        assert_eq!(c.metrics.fleet_queries, 2);
+        assert_eq!(c.metrics.shard_runs, 4);
+    }
+
+    #[test]
+    fn fleet_dimension_is_majority_not_first() {
+        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        // "aaa-probe" sorts first but carries the minority dimension
+        c.offer(CycleRecord { machine: "aaa-probe".into(), seq: 0, values: vec![1.0, 2.0] });
+        for s in 0..6u64 {
+            c.offer(rec("m1", s, s as f32));
+            c.offer(rec("m2", s, s as f32 + 1.0));
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        match c.query(FLEET_QUERY) {
+            RouteResult::Fleet(f) => {
+                assert_eq!(f.machines, 2);
+                assert_eq!(f.machines_skipped, 1);
+                assert_eq!(f.window_total, 12);
+                assert!(f.representatives.iter().all(|(m, _)| m != "aaa-probe"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn reserved_route_names_rejected_at_ingest() {
+        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        c.offer(rec("@fleet", 0, 1.0));
+        c.offer(rec("ok", 0, 1.0));
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        assert_eq!(c.metrics.ingested, 1);
+        assert_eq!(c.metrics.malformed, 1);
+        assert!(!c.machines().contains_key("@fleet"));
+        // the route still answers as a fleet query
+        assert!(matches!(c.query(FLEET_QUERY), RouteResult::Fleet(_)));
+    }
+
+    #[test]
+    fn fleet_query_without_data_is_not_ready() {
+        let mut c = Coordinator::new(cfg(2, 5, 10), cpu_factory());
+        match c.query(FLEET_QUERY) {
+            RouteResult::NotReady { ingested: 0 } => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.metrics.fleet_queries, 1);
+        assert_eq!(c.metrics.shard_runs, 0);
+    }
+
+    #[test]
+    fn fleet_query_skips_dimension_mismatched_machines() {
+        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        // m1 produces 3-dim cycles (the `rec` helper), modd 2-dim ones
+        for s in 0..8u64 {
+            c.offer(rec("m1", s, s as f32));
+            c.offer(CycleRecord {
+                machine: "modd".into(),
+                seq: s,
+                values: vec![s as f32, 1.0],
+            });
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        match c.query(FLEET_QUERY) {
+            RouteResult::Fleet(f) => {
+                assert_eq!(f.machines, 1);
+                assert_eq!(f.machines_skipped, 1);
+                assert_eq!(f.window_total, 8);
+                assert!(f.representatives.iter().all(|(m, _)| m == "m1"));
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

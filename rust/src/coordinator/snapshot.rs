@@ -41,6 +41,9 @@ pub fn snapshot(c: &Coordinator) -> Json {
                 .int("refreshes", m.refreshes as usize)
                 .num("refresh_seconds_total", m.refresh_seconds_total)
                 .int("queries", m.queries as usize)
+                .int("fleet_queries", m.fleet_queries as usize)
+                .int("shard_runs", m.shard_runs as usize)
+                .num("shard_merge_seconds_total", m.shard_merge_seconds_total)
                 .build(),
         )
         .val("machines", Json::Arr(machines))

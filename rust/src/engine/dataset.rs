@@ -9,6 +9,7 @@
 
 use crate::engine::tiling::{mask, pad_matrix, pad_vec};
 use crate::linalg::{sq_norms, Matrix};
+use crate::runtime::xla;
 use crate::runtime::Runtime;
 use anyhow::Result;
 use std::collections::HashMap;

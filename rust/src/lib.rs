@@ -28,7 +28,8 @@
 //! | [`engine`] | the paper's contribution: batched multi-set evaluation |
 //! | [`gpumodel`] | analytical device model (Quadro/TX2/Xeon/A72) |
 //! | [`imm`] | injection-molding process simulator (case-study substrate) |
-//! | [`coordinator`] | streaming summarization service + router |
+//! | [`shard`] | sharded two-stage summarization (partition → optimize → merge) |
+//! | [`coordinator`] | streaming summarization service + router + fleet queries |
 //! | [`bench`] | bench harness (criterion unavailable offline) |
 //! | [`config`] | TOML-subset config system |
 //! | [`cli`] | argument parsing for the launcher binary |
@@ -44,6 +45,7 @@ pub mod linalg;
 pub mod optim;
 pub mod reduce;
 pub mod runtime;
+pub mod shard;
 pub mod submodular;
 pub mod util;
 

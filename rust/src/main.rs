@@ -1,16 +1,19 @@
 //! `ebc-summarizer` — the L3 coordinator launcher.
 //!
 //! Subcommands:
-//! * `info`       — runtime + artifact inventory
-//! * `summarize`  — summarize a synthetic dataset (quick demo)
-//! * `casestudy`  — the paper's §6 injection-molding study (Table 2 / Fig. 4)
-//! * `serve`      — run the streaming coordinator over a simulated fleet
-//! * `devices`    — analytical device-model predictions (Table 1 shape)
+//! * `info`        — runtime + artifact inventory
+//! * `summarize`   — summarize a synthetic dataset (quick demo)
+//! * `casestudy`   — the paper's §6 injection-molding study (Table 2 / Fig. 4)
+//! * `serve`       — run the streaming coordinator over a simulated fleet
+//! * `shard-bench` — sharded two-stage scaling sweep (shards × wall-clock)
+//! * `devices`     — analytical device-model predictions (Table 1 shape)
 
 use anyhow::Result;
+use ebc::bench::report::fmt_secs;
+use ebc::bench::{shard_scaling_sweep, Reporter, ShardSweepConfig};
 use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
 use ebc::config::schema::ServiceConfig;
-use ebc::coordinator::{Coordinator, SimulatedFleet};
+use ebc::coordinator::{Coordinator, OracleFactory, SimulatedFleet, FLEET_QUERY};
 use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
 use ebc::gpumodel::{
     predict_seconds, speedup, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
@@ -20,7 +23,7 @@ use ebc::imm::casestudy::{
 };
 use ebc::imm::{Part, ProcessState};
 use ebc::linalg::Matrix;
-use ebc::optim::{Greedy, Optimizer, ThreeSieves};
+use ebc::optim::{Greedy, Optimizer};
 use ebc::runtime::Runtime;
 use ebc::submodular::{CpuOracle, Oracle};
 use ebc::util::logging;
@@ -46,7 +49,7 @@ fn app() -> AppSpec {
                     opt("seed", "rng seed", "42"),
                     opt("backend", "cpu | xla", "xla"),
                     opt("precision", "f32 | bf16", "f32"),
-                    opt("algorithm", "greedy | three_sieves", "greedy"),
+                    opt("algorithm", "any optim registry name (greedy, lazy_greedy, ...)", "greedy"),
                 ],
             },
             CommandSpec {
@@ -69,6 +72,20 @@ fn app() -> AppSpec {
                     opt("config", "service config file (TOML subset)", ""),
                     opt("samples", "samples per cycle", "256"),
                     opt("seed", "rng seed", "1"),
+                    opt("backend", "cpu | xla", "cpu"),
+                ],
+            },
+            CommandSpec {
+                name: "shard-bench",
+                help: "sharded two-stage summarization scaling sweep on a generated IMM dataset",
+                flags: vec![
+                    opt("samples", "samples per cycle (dataset dimensionality)", "256"),
+                    opt("k", "summary size", "10"),
+                    opt("seed", "rng seed", "7"),
+                    opt("shards", "comma-separated shard counts", "1,2,4,8"),
+                    opt("partitioner", "round_robin | hash | locality", "round_robin"),
+                    opt("algorithms", "comma-separated optimizer names", "greedy"),
+                    opt("threads", "shard-stage worker threads (0 = auto)", "0"),
                     opt("backend", "cpu | xla", "cpu"),
                 ],
             },
@@ -102,6 +119,7 @@ fn main() {
         "summarize" => cmd_summarize(&m),
         "casestudy" => cmd_casestudy(&m),
         "serve" => cmd_serve(&m),
+        "shard-bench" => cmd_shard_bench(&m),
         "devices" => cmd_devices(&m),
         _ => unreachable!(),
     };
@@ -111,7 +129,7 @@ fn main() {
     }
 }
 
-fn oracle_factory(backend: &str, precision: Precision) -> Result<Box<dyn Fn(Matrix) -> Box<dyn Oracle>>> {
+fn oracle_factory(backend: &str, precision: Precision) -> Result<OracleFactory> {
     match backend {
         "cpu" => Ok(Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>)),
         "xla" => {
@@ -174,11 +192,11 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
     let mut rng = Rng::new(seed);
     let data = Matrix::random_normal(n, d, &mut rng);
 
-    let optimizer: Box<dyn Optimizer> = match m.str("algorithm")? {
-        "greedy" => Box::new(Greedy::default()),
-        "three_sieves" => Box::new(ThreeSieves::default()),
-        other => anyhow::bail!("unknown algorithm '{other}'"),
-    };
+    let name = m.str("algorithm")?;
+    let optimizer: Box<dyn Optimizer> = ebc::optim::build_optimizer(name, 1024)
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown algorithm '{name}' (expected one of {:?})", ebc::optim::ALGORITHMS)
+        })?;
     let mut oracle = factory(data);
     let res = optimizer.run(oracle.as_mut(), k);
     println!(
@@ -204,7 +222,7 @@ fn cmd_casestudy(m: &Matches) -> Result<()> {
     let optimizer = Greedy::default();
 
     log::info!("generating 10 campaigns ({} samples/cycle) + summarizing", samples);
-    let results = run_table2(&optimizer, factory.as_ref(), k, samples, seed);
+    let results = run_table2(&optimizer, &|m| factory(m), k, samples, seed);
 
     if m.has("table2") || (!m.has("fig4") && !m.has("validate")) {
         println!("{}", table2_text(&results, k));
@@ -278,11 +296,101 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     for name in ["imm-cover-1", "imm-cover-2", "imm-plate-1", "imm-plate-2"] {
         println!("--- {name}: {}", coordinator.query(name).describe());
     }
+    println!("--- fleet: {}", coordinator.query(FLEET_QUERY).describe());
     println!(
         "\nmetrics: {:?}\n\n{}",
         coordinator.metrics,
         coordinator.profile.report()
     );
+    Ok(())
+}
+
+fn parse_usize_list(raw: &str, flag: &str) -> Result<Vec<usize>> {
+    let out: Vec<usize> = raw
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|_| anyhow::anyhow!("flag '--{flag}': '{raw}' is not a comma-separated list of integers"))?;
+    if out.is_empty() {
+        anyhow::bail!("flag '--{flag}': empty list");
+    }
+    Ok(out)
+}
+
+fn cmd_shard_bench(m: &Matches) -> Result<()> {
+    let samples = m.usize("samples")?;
+    let k = m.usize("k")?;
+    let seed = m.usize("seed")? as u64;
+    let shard_counts = parse_usize_list(m.str("shards")?, "shards")?;
+    let algorithms: Vec<String> = m
+        .str("algorithms")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if algorithms.is_empty() {
+        anyhow::bail!("flag '--algorithms': empty list");
+    }
+    let threads = m.usize("threads")?;
+    let factory = oracle_factory(m.str("backend")?, Precision::F32)?;
+
+    log::info!("generating IMM dataset (cover/stable, d={samples})");
+    let data = ebc::imm::generate_dataset_with(
+        Part::Cover,
+        ProcessState::Stable,
+        seed,
+        samples,
+    )
+    .cycles;
+    println!(
+        "shard scaling sweep: {}x{} IMM cycles, k={k}, partitioner={}, threads={}",
+        data.rows(),
+        data.cols(),
+        m.str("partitioner")?,
+        if threads == 0 {
+            ebc::util::threadpool::default_threads()
+        } else {
+            threads
+        }
+    );
+
+    let cfg = ShardSweepConfig {
+        k,
+        shard_counts,
+        algorithms,
+        partitioner: m.str("partitioner")?.to_string(),
+        threads,
+        seed,
+    };
+    let points = shard_scaling_sweep(&data, &|m| factory(m), &cfg)?;
+
+    let mut rep = Reporter::new(
+        "shard-bench: two-stage wall-clock vs single-node",
+        &[
+            "algorithm", "P", "shard_s", "merge_s", "total_s", "single_s", "speedup",
+            "f_merged", "f_single", "quality",
+        ],
+    );
+    for p in &points {
+        rep.row(&[
+            p.algorithm.clone(),
+            p.shards.to_string(),
+            fmt_secs(p.shard_seconds),
+            fmt_secs(p.merge_seconds),
+            fmt_secs(p.total_seconds),
+            fmt_secs(p.single_seconds),
+            format!("{:.2}x", p.speedup),
+            format!("{:.4}", p.f_merged),
+            format!("{:.4}", p.f_single),
+            format!("{:.3}", p.quality_ratio),
+        ]);
+    }
+    rep.print();
+    match rep.save_csv("shard_scaling") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => log::warn!("csv export failed: {e}"),
+    }
     Ok(())
 }
 

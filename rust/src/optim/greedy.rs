@@ -28,49 +28,68 @@ impl Optimizer for Greedy {
     }
 
     fn run(&self, oracle: &mut dyn Oracle, k: usize) -> SummaryResult {
-        let t0 = Instant::now();
-        let work0 = oracle.work_counter();
-        let n = oracle.n();
-        let mut mindist = initial_mindist(oracle);
-        let mut selected: Vec<usize> = Vec::with_capacity(k);
-        let mut in_set = vec![false; n];
-        let mut traj = Vec::with_capacity(k);
-        let mut calls = 0usize;
+        let all: Vec<usize> = (0..oracle.n()).collect();
+        greedy_over_candidates(oracle, &all, k, self.batch)
+    }
+}
 
-        for _ in 0..k.min(n) {
-            // batched argmax over all remaining candidates
-            let mut best: Option<(usize, f32)> = None;
-            let cands: Vec<usize> = (0..n).filter(|&i| !in_set[i]).collect();
-            for chunk in cands.chunks(self.batch.max(1)) {
-                let gains = oracle.gains(&mindist, chunk);
-                calls += 1;
-                for (&c, &g) in chunk.iter().zip(&gains) {
-                    match best {
-                        Some((_, bg)) if g <= bg => {}
-                        _ => best = Some((c, g)),
-                    }
+/// Batched greedy over an explicit candidate pool (ascending ground
+/// indices, deduplicated): the one selection loop behind both
+/// [`Greedy`] (pool = whole ground set) and the shard subsystem's
+/// second-stage merge ([`crate::shard::merge`], pool = union of shard
+/// exemplars) — sharing it is what makes the sharded P = 1 path
+/// reproduce single-node greedy bit for bit by construction.
+pub fn greedy_over_candidates(
+    oracle: &mut dyn Oracle,
+    candidates: &[usize],
+    k: usize,
+    batch: usize,
+) -> SummaryResult {
+    let t0 = Instant::now();
+    let work0 = oracle.work_counter();
+    debug_assert!(
+        candidates.windows(2).all(|w| w[0] < w[1]),
+        "candidates must be sorted + deduplicated"
+    );
+    let mut mindist = initial_mindist(oracle);
+    let mut selected: Vec<usize> = Vec::with_capacity(k.min(candidates.len()));
+    let mut remaining: Vec<usize> = candidates.to_vec();
+    let mut traj = Vec::with_capacity(k.min(candidates.len()));
+    let mut calls = 0usize;
+
+    for _ in 0..k.min(candidates.len()) {
+        // batched argmax over the remaining candidates; ties go to the
+        // lowest index (ascending scan keeps the first maximum)
+        let mut best: Option<(usize, f32)> = None;
+        for chunk in remaining.chunks(batch.max(1)) {
+            let gains = oracle.gains(&mindist, chunk);
+            calls += 1;
+            for (&c, &g) in chunk.iter().zip(&gains) {
+                match best {
+                    Some((_, bg)) if g <= bg => {}
+                    _ => best = Some((c, g)),
                 }
             }
-            let Some((j, gain)) = best else { break };
-            if gain <= 0.0 && !selected.is_empty() {
-                // no candidate improves f — summary saturated
-                break;
-            }
-            fold_mindist(&mut mindist, &oracle.dist_col(j));
-            in_set[j] = true;
-            selected.push(j);
-            traj.push(f_from_mindist(oracle.vsq(), &mindist));
         }
+        let Some((j, gain)) = best else { break };
+        if gain <= 0.0 && !selected.is_empty() {
+            // no candidate improves f — summary saturated
+            break;
+        }
+        fold_mindist(&mut mindist, &oracle.dist_col(j));
+        remaining.retain(|&c| c != j);
+        selected.push(j);
+        traj.push(f_from_mindist(oracle.vsq(), &mindist));
+    }
 
-        let f_final = traj.last().copied().unwrap_or(0.0);
-        SummaryResult {
-            indices: selected,
-            f_trajectory: traj,
-            f_final,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            oracle_calls: calls,
-            oracle_work: oracle.work_counter() - work0,
-        }
+    let f_final = traj.last().copied().unwrap_or(0.0);
+    SummaryResult {
+        indices: selected,
+        f_trajectory: traj,
+        f_final,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        oracle_calls: calls,
+        oracle_work: oracle.work_counter() - work0,
     }
 }
 

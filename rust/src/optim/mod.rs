@@ -14,7 +14,7 @@ pub mod sieve_streaming_pp;
 pub mod stochastic_greedy;
 pub mod three_sieves;
 
-pub use greedy::Greedy;
+pub use greedy::{greedy_over_candidates, Greedy};
 pub use lazy_greedy::LazyGreedy;
 pub use random::RandomSelection;
 pub use sieve_streaming::SieveStreaming;
@@ -48,10 +48,43 @@ impl SummaryResult {
 }
 
 /// A cardinality-constrained submodular maximizer.
-pub trait Optimizer {
+///
+/// `Sync` is a supertrait so one optimizer instance can drive several
+/// shards concurrently (`run` takes `&self`; every implementor is plain
+/// data) — see [`crate::shard::ShardedSummarizer`].
+pub trait Optimizer: Sync {
     fn name(&self) -> &'static str;
     /// Produce a summary of at most `k` elements.
     fn run(&self, oracle: &mut dyn Oracle, k: usize) -> SummaryResult;
+}
+
+/// Algorithm names accepted by [`build_optimizer`] (and therefore by
+/// `summary.algorithm` in the config schema and the CLI flags).
+pub const ALGORITHMS: &[&str] = &[
+    "greedy",
+    "lazy_greedy",
+    "stochastic_greedy",
+    "sieve_streaming",
+    "sieve_streaming_pp",
+    "three_sieves",
+    "random",
+];
+
+/// Construct an optimizer by name — the single registry shared by the
+/// coordinator, the shard subsystem, the CLI and the bench harness.
+/// `batch` is the candidate-batch size for the batched-greedy family.
+/// Returns `None` for unknown names.
+pub fn build_optimizer(name: &str, batch: usize) -> Option<Box<dyn Optimizer>> {
+    Some(match name {
+        "greedy" => Box::new(Greedy { batch: batch.max(1) }),
+        "lazy_greedy" => Box::new(LazyGreedy::default()),
+        "stochastic_greedy" => Box::new(StochasticGreedy::default()),
+        "sieve_streaming" => Box::new(SieveStreaming::default()),
+        "sieve_streaming_pp" => Box::new(SieveStreamingPp::default()),
+        "three_sieves" => Box::new(ThreeSieves::for_windows()),
+        "random" => Box::new(RandomSelection::default()),
+        _ => return None,
+    })
 }
 
 /// Exhaustive search over all subsets of size <= k — the gold standard
@@ -81,6 +114,15 @@ mod tests {
     use crate::linalg::Matrix;
     use crate::submodular::CpuOracle;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn build_optimizer_registry_complete() {
+        for name in ALGORITHMS {
+            let o = build_optimizer(name, 64).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(o.name(), *name);
+        }
+        assert!(build_optimizer("magic", 64).is_none());
+    }
 
     #[test]
     fn exhaustive_on_separated_clusters() {

@@ -23,6 +23,16 @@ impl Default for ThreeSieves {
     }
 }
 
+impl ThreeSieves {
+    /// Confidence window tuned for coordinator-scale sliding windows
+    /// (hundreds to a few thousand cycles), where the streaming-scale
+    /// default `t = 500` would almost never lower the threshold. The
+    /// [`crate::optim::build_optimizer`] registry uses this variant.
+    pub fn for_windows() -> Self {
+        ThreeSieves { epsilon: 0.1, t: 50 }
+    }
+}
+
 impl Optimizer for ThreeSieves {
     fn name(&self) -> &'static str {
         "three_sieves"

@@ -7,6 +7,7 @@
 
 use crate::runtime::artifact::{ArtifactEntry, Manifest};
 use crate::runtime::executable::LoadedGraph;
+use crate::runtime::xla;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};

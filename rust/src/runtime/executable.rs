@@ -3,6 +3,7 @@
 //! compiled for the CPU PJRT client.
 
 use crate::runtime::artifact::ArtifactEntry;
+use crate::runtime::xla;
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
 

@@ -8,6 +8,10 @@
 pub mod artifact;
 pub mod client;
 pub mod executable;
+// Offline stand-in for the `xla` (PJRT) crate; replace with
+// `pub use ::xla;` when the real bindings are available (see the
+// module docs for the swap recipe).
+pub mod xla;
 
 pub use artifact::{ArtifactEntry, ArtifactKind, Manifest};
 pub use client::Runtime;

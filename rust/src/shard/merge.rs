@@ -1,0 +1,79 @@
+//! Second-stage merge of the two-stage summarizer: batched greedy over
+//! a restricted candidate pool (the union of shard exemplars), with the
+//! objective still evaluated against the **full** ground set, so merged
+//! f-values are directly comparable to a single-node run.
+//!
+//! The selection loop is [`crate::optim::greedy::greedy_over_candidates`]
+//! — the exact code path [`crate::optim::Greedy`] runs on the whole
+//! ground set — so with the candidate pool equal to a greedy run's own
+//! selection (the P = 1 case) the merge reproduces that run's indices,
+//! trajectory and f-value bit for bit *by construction*, not by keeping
+//! two loops in sync.
+
+pub use crate::optim::greedy::greedy_over_candidates as greedy_merge;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::optim::{Greedy, Optimizer};
+    use crate::submodular::CpuOracle;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_candidate_pool_matches_plain_greedy_exactly() {
+        let mut rng = Rng::new(1);
+        let v = Matrix::random_normal(40, 5, &mut rng);
+        let g = Greedy { batch: 16 }.run(&mut CpuOracle::new(v.clone()), 6);
+        let all: Vec<usize> = (0..40).collect();
+        let m = greedy_merge(&mut CpuOracle::new(v), &all, 6, 16);
+        assert_eq!(g.indices, m.indices);
+        assert_eq!(
+            g.f_trajectory.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            m.f_trajectory.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn restricted_pool_only_selects_candidates() {
+        let mut rng = Rng::new(2);
+        let v = Matrix::random_normal(30, 4, &mut rng);
+        let pool = vec![1usize, 7, 12, 19, 22, 28];
+        let m = greedy_merge(&mut CpuOracle::new(v), &pool, 4, 8);
+        assert_eq!(m.k(), 4);
+        assert!(m.indices.iter().all(|i| pool.contains(i)), "{:?}", m.indices);
+        let mut dedup = m.indices.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), m.indices.len());
+    }
+
+    #[test]
+    fn k_exceeding_pool_selects_at_most_pool() {
+        let mut rng = Rng::new(3);
+        let v = Matrix::random_normal(20, 3, &mut rng);
+        let pool = vec![2usize, 9, 15];
+        let m = greedy_merge(&mut CpuOracle::new(v), &pool, 10, 8);
+        assert!(m.k() <= 3);
+    }
+
+    #[test]
+    fn empty_pool_yields_empty_summary() {
+        let mut rng = Rng::new(4);
+        let v = Matrix::random_normal(10, 3, &mut rng);
+        let m = greedy_merge(&mut CpuOracle::new(v), &[], 3, 8);
+        assert!(m.indices.is_empty());
+        assert_eq!(m.f_final, 0.0);
+    }
+
+    #[test]
+    fn trajectory_monotone() {
+        let mut rng = Rng::new(5);
+        let v = Matrix::random_normal(50, 4, &mut rng);
+        let pool: Vec<usize> = (0..50).step_by(3).collect();
+        let m = greedy_merge(&mut CpuOracle::new(v), &pool, 8, 4);
+        for w in m.f_trajectory.windows(2) {
+            assert!(w[1] >= w[0] - 1e-5, "{:?}", m.f_trajectory);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Horizontal scaling: sharded two-stage submodular summarization.
+//!
+//! The paper scales EBC by batching oracle evaluations on *one*
+//! accelerator; fleets of machines need the orthogonal axis — spreading
+//! the ground set over many workers. This module implements the
+//! partition/merge ("two-stage") scheme of Mitrovic et al. 2018 and the
+//! GreeDi line of work, composed from the crate's existing seams:
+//!
+//! ```text
+//!              ┌── shard 0 ── Optimizer ── k exemplars ──┐
+//!   Partitioner├── shard 1 ── Optimizer ── k exemplars ──┤ union ── greedy
+//!   (ground set│      ...        (any crate::optim,      │          merge ── S
+//!    split)    └── shard P-1 ─ each via OracleFactory) ──┘   (full-set f)
+//! ```
+//!
+//! * [`Partitioner`] — pluggable split strategies: [`RoundRobinPartitioner`],
+//!   content-addressed [`HashPartitioner`], and [`LocalityPartitioner`]
+//!   (contiguous chunks along a `reduce::RandomProjection` axis);
+//! * stage 1 runs any [`crate::optim::Optimizer`] per shard, concurrently
+//!   on [`crate::util::threadpool`] workers, each shard getting its own
+//!   oracle through the same factory seam the coordinator uses;
+//! * stage 2 ([`merge::greedy_merge`]) greedily re-selects k exemplars
+//!   from the union of shard picks, scored against the **full** ground
+//!   set, so merged f-values are comparable to single-node runs — and
+//!   with P = 1 the pipeline reproduces single-node greedy bit for bit.
+//!
+//! Inside a shard, `StochasticGreedy` keeps per-shard cost linear
+//! (Mirzasoleiman et al. 2015); across shards this module keeps
+//! wall-clock ~1/P for the dominant first stage. The coordinator wires
+//! this up as the fleet-level summary query (`@fleet`), and `shard-bench`
+//! sweeps P for the scaling story.
+
+pub mod merge;
+pub mod partition;
+pub mod summarizer;
+
+pub use merge::greedy_merge;
+pub use partition::{
+    build_partitioner, validate_partition, HashPartitioner, LocalityPartitioner,
+    Partitioner, RoundRobinPartitioner, PARTITIONERS,
+};
+pub use summarizer::{ShardOracleFactory, ShardRun, ShardedResult, ShardedSummarizer};

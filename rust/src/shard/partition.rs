@@ -1,0 +1,283 @@
+//! Ground-set partitioning strategies for the sharded two-stage
+//! summarizer.
+//!
+//! Contract (checked by the property tests): `partition(data, p)`
+//! returns exactly `p` index lists, each **strictly ascending**, whose
+//! disjoint union is `0..data.rows()`. Ascending order matters: with
+//! `p = 1` every strategy must yield the identity list so the sharded
+//! pipeline reproduces the single-node optimizer bit for bit.
+
+use crate::linalg::Matrix;
+use crate::reduce::{RandomProjection, Reducer};
+
+/// A strategy assigning every ground row to one of `shards` parts.
+pub trait Partitioner: Sync {
+    fn name(&self) -> &'static str;
+    /// Split `0..data.rows()` into `shards` ascending index lists.
+    fn partition(&self, data: &Matrix, shards: usize) -> Vec<Vec<usize>>;
+}
+
+/// Names accepted by [`build_partitioner`].
+pub const PARTITIONERS: &[&str] = &["round_robin", "hash", "locality"];
+
+/// Construct a partitioner by name (the registry the config schema and
+/// the CLI validate against). `seed` drives the hash mix / projection.
+pub fn build_partitioner(name: &str, seed: u64) -> Option<Box<dyn Partitioner>> {
+    Some(match name {
+        "round_robin" => Box::new(RoundRobinPartitioner),
+        "hash" => Box::new(HashPartitioner { seed }),
+        "locality" => Box::new(LocalityPartitioner { seed }),
+        _ => return None,
+    })
+}
+
+/// Row `i` goes to shard `i % p` — perfectly balanced, order-dependent.
+pub struct RoundRobinPartitioner;
+
+impl Partitioner for RoundRobinPartitioner {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn partition(&self, data: &Matrix, shards: usize) -> Vec<Vec<usize>> {
+        let p = shards.max(1);
+        let mut parts: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for i in 0..data.rows() {
+            parts[i % p].push(i);
+        }
+        parts
+    }
+}
+
+/// Content-addressed assignment: FNV-1a over the row's f32 bit
+/// patterns. Identical vectors land on the same shard regardless of
+/// arrival order — the stable choice when the same stream is re-sharded
+/// by independent coordinator replicas.
+pub struct HashPartitioner {
+    pub seed: u64,
+}
+
+/// FNV-1a over the row bits, seed-mixed.
+fn row_hash(row: &[f32], seed: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for &x in row {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    // final avalanche (splitmix-style) so low bits are usable for modulo
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^ (h >> 33)
+}
+
+impl Partitioner for HashPartitioner {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn partition(&self, data: &Matrix, shards: usize) -> Vec<Vec<usize>> {
+        let p = shards.max(1);
+        let mut parts: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for i in 0..data.rows() {
+            let h = row_hash(data.row(i), self.seed);
+            parts[(h % p as u64) as usize].push(i);
+        }
+        parts
+    }
+}
+
+/// Locality-aware assignment: rows are ordered along a 1-D sparse
+/// random projection ([`RandomProjection`], the JL transform of
+/// `reduce`) and cut into `p` contiguous equal-size chunks, so nearby
+/// vectors tend to share a shard — per-shard greedy then sees coherent
+/// neighborhoods, which is where the two-stage merge loses the least
+/// quality. Each chunk is re-sorted ascending (see module contract).
+pub struct LocalityPartitioner {
+    pub seed: u64,
+}
+
+impl LocalityPartitioner {
+    /// The 1-D projection value of every row (exposed so tests can
+    /// verify shard contiguity along the projection axis).
+    pub fn scores(&self, data: &Matrix) -> Vec<f32> {
+        let rp = RandomProjection::new(data.cols(), 1, self.seed);
+        (0..data.rows())
+            .map(|i| rp.transform_row(data.row(i))[0])
+            .collect()
+    }
+}
+
+impl Partitioner for LocalityPartitioner {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn partition(&self, data: &Matrix, shards: usize) -> Vec<Vec<usize>> {
+        let p = shards.max(1);
+        let n = data.rows();
+        if n == 0 {
+            return vec![Vec::new(); p];
+        }
+        let scores = self.scores(data);
+        let mut order: Vec<usize> = (0..n).collect();
+        // total_cmp: NaN scores (bad sensor frames) must not produce an
+        // intransitive comparator, which sort_by panics on
+        order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
+        let chunk = n.div_ceil(p);
+        let mut parts: Vec<Vec<usize>> = Vec::with_capacity(p);
+        for s in 0..p {
+            let lo = (s * chunk).min(n);
+            let hi = ((s + 1) * chunk).min(n);
+            let mut part: Vec<usize> = order[lo..hi].to_vec();
+            part.sort_unstable();
+            parts.push(part);
+        }
+        parts
+    }
+}
+
+/// Check the partition contract; returns an error string on violation
+/// (used by the shard property tests and debug assertions).
+pub fn validate_partition(parts: &[Vec<usize>], n: usize, shards: usize) -> Result<(), String> {
+    if parts.len() != shards.max(1) {
+        return Err(format!("expected {} parts, got {}", shards.max(1), parts.len()));
+    }
+    let mut seen = vec![false; n];
+    for (s, part) in parts.iter().enumerate() {
+        for w in part.windows(2) {
+            if w[1] <= w[0] {
+                return Err(format!("shard {s} not strictly ascending: {w:?}"));
+            }
+        }
+        for &i in part {
+            if i >= n {
+                return Err(format!("shard {s}: index {i} out of range (n={n})"));
+            }
+            if seen[i] {
+                return Err(format!("index {i} assigned twice"));
+            }
+            seen[i] = true;
+        }
+    }
+    if let Some(miss) = seen.iter().position(|&b| !b) {
+        return Err(format!("index {miss} unassigned"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::random_normal(n, d, &mut rng)
+    }
+
+    #[test]
+    fn all_partitioners_cover_the_ground_set() {
+        let m = data(53, 6, 1);
+        for name in PARTITIONERS {
+            let p = build_partitioner(name, 9).unwrap();
+            for shards in [1usize, 2, 3, 8, 60] {
+                let parts = p.partition(&m, shards);
+                validate_partition(&parts, 53, shards)
+                    .unwrap_or_else(|e| panic!("{name}/p={shards}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_is_identity_for_every_strategy() {
+        let m = data(17, 4, 2);
+        let identity: Vec<usize> = (0..17).collect();
+        for name in PARTITIONERS {
+            let p = build_partitioner(name, 5).unwrap();
+            let parts = p.partition(&m, 1);
+            assert_eq!(parts.len(), 1, "{name}");
+            assert_eq!(parts[0], identity, "{name}");
+        }
+    }
+
+    #[test]
+    fn round_robin_balanced() {
+        let m = data(41, 3, 3);
+        let parts = RoundRobinPartitioner.partition(&m, 4);
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 41);
+        assert!(sizes.iter().all(|&s| (10..=11).contains(&s)), "{sizes:?}");
+    }
+
+    #[test]
+    fn hash_is_content_addressed() {
+        // the same vectors in a different row order shard identically
+        let a = data(20, 5, 4);
+        let perm: Vec<usize> = (0..20).rev().collect();
+        let b = a.gather(&perm);
+        let p = HashPartitioner { seed: 11 };
+        let pa = p.partition(&a, 4);
+        let pb = p.partition(&b, 4);
+        for s in 0..4 {
+            let mut rows_a: Vec<Vec<u32>> = pa[s]
+                .iter()
+                .map(|&i| a.row(i).iter().map(|x| x.to_bits()).collect())
+                .collect();
+            let mut rows_b: Vec<Vec<u32>> = pb[s]
+                .iter()
+                .map(|&i| b.row(i).iter().map(|x| x.to_bits()).collect())
+                .collect();
+            rows_a.sort();
+            rows_b.sort();
+            assert_eq!(rows_a, rows_b, "shard {s} differs under permutation");
+        }
+    }
+
+    #[test]
+    fn hash_seed_changes_assignment() {
+        let m = data(64, 4, 5);
+        let a = HashPartitioner { seed: 1 }.partition(&m, 4);
+        let b = HashPartitioner { seed: 2 }.partition(&m, 4);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn locality_shards_are_contiguous_along_the_projection() {
+        let m = data(60, 6, 6);
+        let p = LocalityPartitioner { seed: 3 };
+        let scores = p.scores(&m);
+        let parts = p.partition(&m, 4);
+        validate_partition(&parts, 60, 4).unwrap();
+        // consecutive shards occupy non-overlapping score ranges
+        for w in parts.windows(2) {
+            let hi = w[0].iter().map(|&i| scores[i]).fold(f32::NEG_INFINITY, f32::max);
+            let lo = w[1].iter().map(|&i| scores[i]).fold(f32::INFINITY, f32::min);
+            assert!(hi <= lo, "shard ranges overlap: {hi} > {lo}");
+        }
+    }
+
+    #[test]
+    fn locality_chunks_balanced() {
+        // ceil(101/4) = 26 -> sizes 26, 26, 26, 23
+        let m = data(101, 8, 7);
+        let parts = LocalityPartitioner { seed: 1 }.partition(&m, 4);
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 101);
+        assert!(sizes.iter().all(|&s| (23..=26).contains(&s)), "{sizes:?}");
+    }
+
+    #[test]
+    fn build_partitioner_rejects_unknown() {
+        assert!(build_partitioner("magic", 0).is_none());
+    }
+
+    #[test]
+    fn validate_partition_catches_violations() {
+        assert!(validate_partition(&[vec![0, 1]], 3, 1).is_err()); // missing 2
+        assert!(validate_partition(&[vec![0, 0, 1, 2]], 3, 1).is_err()); // not ascending
+        assert!(validate_partition(&[vec![0, 1], vec![1, 2]], 3, 2).is_err()); // duplicate
+        assert!(validate_partition(&[vec![0, 3]], 3, 1).is_err()); // out of range
+        assert!(validate_partition(&[vec![0, 1, 2]], 3, 2).is_err()); // wrong count
+        assert!(validate_partition(&[vec![0, 2], vec![1]], 3, 2).is_ok());
+    }
+}

@@ -1,0 +1,327 @@
+//! The sharded two-stage summarizer (partition → per-shard optimize →
+//! greedy merge) — see the module docs in [`crate::shard`].
+
+use crate::linalg::Matrix;
+use crate::optim::{Optimizer, SummaryResult};
+use crate::shard::merge::greedy_merge;
+use crate::shard::partition::Partitioner;
+use crate::submodular::Oracle;
+use crate::util::threadpool::{default_threads, par_map};
+use std::time::Instant;
+
+/// Oracle constructor seam shared with the coordinator: `Sync` so the
+/// per-shard stage can call it from pool workers concurrently.
+pub type ShardOracleFactory = dyn Fn(Matrix) -> Box<dyn Oracle> + Sync;
+
+/// Outcome of one shard's first-stage run.
+#[derive(Debug, Clone)]
+pub struct ShardRun {
+    /// Shard id (position in the partitioner's output).
+    pub shard: usize,
+    /// Ground rows assigned to this shard.
+    pub size: usize,
+    /// First-stage result with indices mapped back to the **global**
+    /// ground set. `f_final` is relative to the shard's own ground set.
+    pub result: SummaryResult,
+}
+
+/// Outcome of a sharded summarization.
+#[derive(Debug, Clone)]
+pub struct ShardedResult {
+    /// Second-stage (merge) result over the full ground set: global
+    /// indices, f measured against the complete dataset.
+    pub merged: SummaryResult,
+    /// Per-shard first-stage results (empty shards are skipped).
+    pub per_shard: Vec<ShardRun>,
+    /// Non-empty shards actually run.
+    pub shards_used: usize,
+    /// Partitioner that produced the split.
+    pub partitioner: &'static str,
+    pub partition_seconds: f64,
+    /// Wall-clock of the parallel first stage (all shards).
+    pub shard_seconds: f64,
+    /// Wall-clock of the merge stage.
+    pub merge_seconds: f64,
+    /// Single-node reference run, when requested via
+    /// [`ShardedSummarizer::summarize_with_baseline`].
+    pub baseline: Option<SummaryResult>,
+}
+
+impl ShardedResult {
+    pub fn total_seconds(&self) -> f64 {
+        self.partition_seconds + self.shard_seconds + self.merge_seconds
+    }
+
+    /// merged f / single-node f — the two-stage quality ratio
+    /// (`None` without a baseline; 1.0 when the baseline is degenerate).
+    pub fn quality_ratio(&self) -> Option<f64> {
+        self.baseline.as_ref().map(|b| {
+            if b.f_final <= 0.0 {
+                1.0
+            } else {
+                self.merged.f_final as f64 / b.f_final as f64
+            }
+        })
+    }
+}
+
+/// Two-stage sharded summarization à la GreeDi / Mitrovic et al. 2018:
+/// stage 1 runs `optimizer` on each shard's sub-dataset (concurrently,
+/// on scoped pool workers); stage 2 greedily re-selects `k` exemplars
+/// from the union of shard picks, scored against the full ground set.
+pub struct ShardedSummarizer<'a> {
+    pub partitioner: &'a dyn Partitioner,
+    pub optimizer: &'a dyn Optimizer,
+    /// Number of shards P (>= 1).
+    pub shards: usize,
+    /// Worker threads for the per-shard stage; 0 = `default_threads()`.
+    pub threads: usize,
+    /// Exemplars each shard contributes; 0 = same as the final k.
+    pub per_shard_k: usize,
+    /// Candidate-batch size for the merge stage (and the greedy
+    /// baseline); matches `Greedy::batch` semantics.
+    pub merge_batch: usize,
+}
+
+impl<'a> ShardedSummarizer<'a> {
+    pub fn new(
+        partitioner: &'a dyn Partitioner,
+        optimizer: &'a dyn Optimizer,
+        shards: usize,
+    ) -> ShardedSummarizer<'a> {
+        ShardedSummarizer {
+            partitioner,
+            optimizer,
+            shards: shards.max(1),
+            threads: 0,
+            per_shard_k: 0,
+            merge_batch: 1024,
+        }
+    }
+
+    /// Run the two-stage pipeline. `factory` builds the evaluation
+    /// oracle for each shard's sub-matrix and for the merge stage — the
+    /// same seam the coordinator uses, so shards run on the CPU baseline
+    /// or the XLA engine unchanged.
+    pub fn summarize(&self, data: &Matrix, factory: &ShardOracleFactory, k: usize) -> ShardedResult {
+        self.run(data, factory, k, false)
+    }
+
+    /// Same, plus a single-node reference run of the same optimizer on
+    /// the full dataset for quality-ratio accounting.
+    pub fn summarize_with_baseline(
+        &self,
+        data: &Matrix,
+        factory: &ShardOracleFactory,
+        k: usize,
+    ) -> ShardedResult {
+        self.run(data, factory, k, true)
+    }
+
+    fn run(
+        &self,
+        data: &Matrix,
+        factory: &ShardOracleFactory,
+        k: usize,
+        with_baseline: bool,
+    ) -> ShardedResult {
+        let p = self.shards.max(1);
+
+        let t0 = Instant::now();
+        let parts = self.partitioner.partition(data, p);
+        debug_assert!(
+            crate::shard::partition::validate_partition(&parts, data.rows(), p).is_ok()
+        );
+        // skip empty shards but remember original shard ids
+        let jobs: Vec<(usize, Vec<usize>)> = parts
+            .into_iter()
+            .enumerate()
+            .filter(|(_, part)| !part.is_empty())
+            .collect();
+        let partition_seconds = t0.elapsed().as_secs_f64();
+
+        // ---- stage 1: per-shard optimization on the worker pool ------
+        let t1 = Instant::now();
+        let shard_k = if self.per_shard_k == 0 { k } else { self.per_shard_k };
+        let threads = if self.threads == 0 { default_threads() } else { self.threads };
+        let per_shard: Vec<ShardRun> = par_map(&jobs, threads, |(shard, part)| {
+            let sub = data.gather(part);
+            let mut oracle = factory(sub);
+            let mut res = self.optimizer.run(oracle.as_mut(), shard_k.min(part.len()));
+            // map shard-local indices back to the global ground set
+            for idx in res.indices.iter_mut() {
+                *idx = part[*idx];
+            }
+            ShardRun { shard: *shard, size: part.len(), result: res }
+        });
+        let shard_seconds = t1.elapsed().as_secs_f64();
+
+        // ---- stage 2: greedy merge over the union of shard picks -----
+        let t2 = Instant::now();
+        let mut union: Vec<usize> = per_shard
+            .iter()
+            .flat_map(|s| s.result.indices.iter().copied())
+            .collect();
+        union.sort_unstable();
+        union.dedup();
+        let mut merge_oracle = factory(data.clone());
+        let merged = greedy_merge(merge_oracle.as_mut(), &union, k, self.merge_batch);
+        let merge_seconds = t2.elapsed().as_secs_f64();
+
+        let baseline = with_baseline.then(|| {
+            let mut oracle = factory(data.clone());
+            self.optimizer.run(oracle.as_mut(), k)
+        });
+
+        ShardedResult {
+            merged,
+            shards_used: per_shard.len(),
+            per_shard,
+            partitioner: self.partitioner.name(),
+            partition_seconds,
+            shard_seconds,
+            merge_seconds,
+            baseline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{build_optimizer, exhaustive_best, Greedy, ALGORITHMS};
+    use crate::shard::partition::{build_partitioner, PARTITIONERS};
+    use crate::submodular::CpuOracle;
+    use crate::util::rng::Rng;
+
+    fn cpu_factory() -> impl Fn(Matrix) -> Box<dyn Oracle> + Sync {
+        |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>
+    }
+
+    fn data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::random_normal(n, d, &mut rng)
+    }
+
+    #[test]
+    fn single_shard_reproduces_greedy_bit_for_bit() {
+        let v = data(60, 5, 42);
+        let greedy = Greedy { batch: 1024 };
+        let single = greedy.run(&mut CpuOracle::new(v.clone()), 7);
+        for name in PARTITIONERS {
+            let part = build_partitioner(name, 9).unwrap();
+            let s = ShardedSummarizer::new(part.as_ref(), &greedy, 1);
+            let res = s.summarize(&v, &cpu_factory(), 7);
+            assert_eq!(res.merged.indices, single.indices, "{name}");
+            assert_eq!(
+                res.merged.f_final.to_bits(),
+                single.f_final.to_bits(),
+                "{name}: {} vs {}",
+                res.merged.f_final,
+                single.f_final
+            );
+            assert_eq!(res.shards_used, 1);
+        }
+    }
+
+    #[test]
+    fn runs_every_registered_optimizer_per_shard() {
+        let v = data(48, 4, 7);
+        let part = build_partitioner("round_robin", 0).unwrap();
+        for name in ALGORITHMS {
+            let opt = build_optimizer(name, 64).unwrap();
+            let s = ShardedSummarizer::new(part.as_ref(), opt.as_ref(), 4);
+            let res = s.summarize(&v, &cpu_factory(), 4);
+            assert_eq!(res.shards_used, 4, "{name}");
+            assert!(res.merged.k() <= 4, "{name}");
+            assert!(res.merged.f_final >= 0.0, "{name}");
+            // merged picks come from the union of shard picks
+            let union: Vec<usize> = res
+                .per_shard
+                .iter()
+                .flat_map(|s| s.result.indices.iter().copied())
+                .collect();
+            assert!(
+                res.merged.indices.iter().all(|i| union.contains(i)),
+                "{name}: {:?} not in {union:?}",
+                res.merged.indices
+            );
+        }
+    }
+
+    #[test]
+    fn merged_quality_close_to_single_node_greedy() {
+        let v = data(120, 6, 11);
+        let greedy = Greedy::default();
+        for shards in [2usize, 4, 8] {
+            let part = build_partitioner("round_robin", 0).unwrap();
+            let s = ShardedSummarizer::new(part.as_ref(), &greedy, shards);
+            let res = s.summarize_with_baseline(&v, &cpu_factory(), 6);
+            let ratio = res.quality_ratio().unwrap();
+            assert!(ratio >= 0.8, "P={shards}: quality ratio {ratio}");
+            assert!(ratio <= 1.0 + 1e-6, "P={shards}: ratio {ratio} > 1?");
+        }
+    }
+
+    #[test]
+    fn within_constant_factor_of_exhaustive_on_tiny_instance() {
+        let v = data(12, 3, 3);
+        let (_, opt) = exhaustive_best(&mut CpuOracle::new(v.clone()), 3);
+        let greedy = Greedy::default();
+        for name in PARTITIONERS {
+            for shards in [1usize, 2, 4] {
+                let part = build_partitioner(name, 5).unwrap();
+                let s = ShardedSummarizer::new(part.as_ref(), &greedy, shards);
+                let res = s.summarize(&v, &cpu_factory(), 3);
+                assert!(
+                    res.merged.f_final >= 0.3 * opt,
+                    "{name}/P={shards}: {} < 0.3 * {opt}",
+                    res.merged.f_final
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_rows_skips_empty_shards() {
+        let v = data(3, 2, 8);
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let greedy = Greedy::default();
+        let s = ShardedSummarizer::new(part.as_ref(), &greedy, 8);
+        let res = s.summarize(&v, &cpu_factory(), 2);
+        assert_eq!(res.shards_used, 3);
+        assert!(res.merged.k() <= 2);
+    }
+
+    #[test]
+    fn per_shard_indices_are_global_and_disjoint() {
+        let v = data(40, 4, 13);
+        let part = build_partitioner("hash", 3).unwrap();
+        let greedy = Greedy::default();
+        let s = ShardedSummarizer::new(part.as_ref(), &greedy, 4);
+        let res = s.summarize(&v, &cpu_factory(), 3);
+        let mut all: Vec<usize> = res
+            .per_shard
+            .iter()
+            .flat_map(|s| s.result.indices.iter().copied())
+            .collect();
+        assert!(all.iter().all(|&i| i < 40));
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), before, "shard picks overlap");
+    }
+
+    #[test]
+    fn explicit_per_shard_k_widens_the_union() {
+        let v = data(60, 4, 17);
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let greedy = Greedy::default();
+        let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, 3);
+        s.per_shard_k = 5;
+        let res = s.summarize(&v, &cpu_factory(), 2);
+        let union: usize = res.per_shard.iter().map(|s| s.result.k()).sum();
+        assert!(union > 6, "expected ~15 first-stage picks, got {union}");
+        assert!(res.merged.k() <= 2);
+    }
+}

@@ -27,6 +27,7 @@ fn close(a: f32, b: f32, tol: f32) -> bool {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn gains_match_cpu_f32() {
     let mut rng = Rng::new(1);
     let v = Matrix::random_normal(500, 100, &mut rng);
@@ -50,6 +51,7 @@ fn gains_match_cpu_f32() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn gains_bf16_close_to_f32() {
     let mut rng = Rng::new(2);
     let v = Matrix::random_normal(300, 100, &mut rng);
@@ -68,6 +70,7 @@ fn gains_bf16_close_to_f32() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn update_and_dist_col_match_cpu() {
     let mut rng = Rng::new(3);
     let v = Matrix::random_normal(400, 100, &mut rng);
@@ -94,6 +97,7 @@ fn update_and_dist_col_match_cpu() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn eval_sets_match_cpu_work_matrix() {
     let mut rng = Rng::new(4);
     let v = Matrix::random_normal(700, 100, &mut rng);
@@ -118,6 +122,7 @@ fn eval_sets_match_cpu_work_matrix() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn greedy_on_xla_matches_greedy_on_cpu() {
     let mut rng = Rng::new(5);
     let v = Matrix::random_normal(600, 100, &mut rng);
@@ -129,6 +134,7 @@ fn greedy_on_xla_matches_greedy_on_cpu() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn three_sieves_on_xla_close_to_cpu() {
     let mut rng = Rng::new(6);
     let v = Matrix::random_normal(400, 100, &mut rng);
@@ -141,6 +147,7 @@ fn three_sieves_on_xla_close_to_cpu() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn padded_d_dimension_is_exact() {
     // d=37 pads to the d=128 bucket; zero-padding must not change values
     let mut rng = Rng::new(7);
@@ -158,6 +165,7 @@ fn padded_d_dimension_is_exact() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn oversized_request_errors_without_fallback() {
     let mut rng = Rng::new(8);
     let v = Matrix::random_normal(64, 8, &mut rng);
@@ -170,6 +178,7 @@ fn oversized_request_errors_without_fallback() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn cpu_fallback_handles_oversized() {
     let mut rng = Rng::new(9);
     let v = Matrix::random_normal(64, 8, &mut rng);
@@ -184,6 +193,7 @@ fn cpu_fallback_handles_oversized() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn pallas_and_jnp_impls_agree() {
     use ebc::engine::KernelImpl;
     let mut rng = Rng::new(11);
@@ -223,6 +233,7 @@ fn pallas_and_jnp_impls_agree() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn ground_buffers_cached_across_calls() {
     let mut rng = Rng::new(10);
     let v = Matrix::random_normal(200, 100, &mut rng);

@@ -7,6 +7,7 @@ use ebc::coordinator::{Coordinator, CycleRecord, RouteResult};
 use ebc::config::schema::ServiceConfig;
 use ebc::linalg::Matrix;
 use ebc::optim::{exhaustive_best, Greedy, LazyGreedy, Optimizer, SieveStreaming};
+use ebc::shard::{build_partitioner, validate_partition, ShardedSummarizer, PARTITIONERS};
 use ebc::submodular::{CpuOracle, EbcFunction, Oracle};
 use ebc::util::proptest::{arb_dataset, arb_subset, forall, Config};
 use ebc::util::rng::Rng;
@@ -314,6 +315,112 @@ fn prop_greedy_batch_invariant() {
             } else {
                 Err(format!("{:?} vs {:?}", r1.indices, r2.indices))
             }
+        },
+    );
+}
+
+// --------------------------------------------------- shard subsystem
+
+fn sharded_cpu(
+    v: &Matrix,
+    partitioner: &str,
+    shards: usize,
+    k: usize,
+) -> ebc::shard::ShardedResult {
+    let part = build_partitioner(partitioner, 11).expect("known partitioner");
+    let greedy = Greedy::default();
+    let s = ShardedSummarizer::new(part.as_ref(), &greedy, shards);
+    let factory = |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+    s.summarize(v, &factory, k)
+}
+
+#[test]
+fn prop_partitioners_cover_disjoint_ascending() {
+    forall(
+        "every partitioner: exact disjoint ascending cover of the ground set",
+        &Config { cases: 24, seed: 0x5A4D },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 40, 6, 2.0);
+            let shards = 1 + rng.below(6);
+            (n, d, data, shards)
+        },
+        |(n, d, data, shards)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            for name in PARTITIONERS {
+                let p = build_partitioner(name, 3).expect("known partitioner");
+                let parts = p.partition(&v, *shards);
+                validate_partition(&parts, *n, *shards)
+                    .map_err(|e| format!("{name}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_p1_equals_single_node_greedy() {
+    // satellite invariant: any partitioner at P = 1 reproduces the
+    // single-node greedy selection and value bit for bit
+    forall(
+        "sharded P=1 == single-node greedy (all partitioners)",
+        &Config { cases: 12, seed: 0x51AD },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 30, 5, 2.0);
+            let k = 1 + rng.below(5);
+            (n, d, data, k)
+        },
+        |(n, d, data, k)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            let single = Greedy::default().run(&mut CpuOracle::new(v.clone()), *k);
+            for name in PARTITIONERS {
+                let res = sharded_cpu(&v, name, 1, *k);
+                if res.merged.indices != single.indices {
+                    return Err(format!(
+                        "{name}: {:?} != {:?}",
+                        res.merged.indices, single.indices
+                    ));
+                }
+                if res.merged.f_final.to_bits() != single.f_final.to_bits() {
+                    return Err(format!(
+                        "{name}: f {} != {}",
+                        res.merged.f_final, single.f_final
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_within_constant_factor_of_opt() {
+    // satellite invariant: on tiny instances, any partitioner and
+    // P ∈ {1, 2, 4} stay within a constant factor of the exhaustive
+    // optimum (greedy alone guarantees 1 − 1/e ≈ 0.63; sharding costs a
+    // bounded extra factor — 0.3 leaves deterministic-margin headroom)
+    forall(
+        "sharded merged f >= 0.3 * OPT (P in {1,2,4}, all partitioners)",
+        &Config { cases: 10, seed: 0xC0FA },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 11, 4, 2.0);
+            let k = 1 + rng.below(3);
+            (n, d, data, k)
+        },
+        |(n, d, data, k)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            let (_, opt) = exhaustive_best(&mut CpuOracle::new(v.clone()), *k);
+            for name in PARTITIONERS {
+                for shards in [1usize, 2, 4] {
+                    let res = sharded_cpu(&v, name, shards, *k);
+                    if res.merged.f_final < 0.3 * opt - 1e-6 {
+                        return Err(format!(
+                            "{name}/P={shards}: merged {} < 0.3 * opt {opt}",
+                            res.merged.f_final
+                        ));
+                    }
+                }
+            }
+            Ok(())
         },
     );
 }
