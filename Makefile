@@ -1,6 +1,6 @@
 # Developer entry points. `make verify` is the tier-1 gate CI runs.
 
-.PHONY: verify build test bench artifacts
+.PHONY: verify build test bench bench-kernel lint artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -13,6 +13,13 @@ test:
 
 bench:
 	EBC_BENCH_QUICK=1 cargo bench
+
+# CPU kernel backend sweep on a small preset; emits BENCH_kernel.json.
+bench-kernel:
+	cargo run --release -- kernel-bench --n 4000 --d 32 --c 256 --threads 1,2,4
+
+lint:
+	cargo fmt --check && cargo clippy --all-targets -- -D warnings
 
 # AOT-lower the Pallas/JAX graphs to HLO text + manifest (requires the
 # Python layer; the Rust binary is self-contained afterwards).

@@ -4,9 +4,10 @@
 //!     make artifacts && cargo run --release --example quickstart
 
 use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
-use ebc::linalg::Matrix;
+use ebc::linalg::{CpuKernel, Matrix};
 use ebc::optim::{Greedy, Optimizer};
 use ebc::runtime::Runtime;
+use ebc::submodular::CpuOracle;
 use ebc::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -28,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     // 2. the engine: loads artifacts/, compiles on the PJRT CPU client
     let rt = Runtime::discover()?;
     let engine = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
-    let mut oracle = XlaOracle::new(engine, v);
+    let mut oracle = XlaOracle::new(engine, v.clone());
 
     // 3. greedy summarization, k = 6
     let result = Greedy::default().run(&mut oracle, 6);
@@ -47,5 +48,19 @@ fn main() -> anyhow::Result<()> {
         result.indices.iter().take(3).map(|i| i % 3).collect();
     assert_eq!(blobs.len(), 3, "expected one exemplar per blob");
     println!("OK: one exemplar per blob among the first three picks");
+
+    // 4. same run on the blocked CPU Gram-matrix backend (no artifacts
+    // needed) — selections match the accelerator path's CPU mirror
+    let mut cpu = CpuOracle::with_kernel(
+        v,
+        CpuKernel::Blocked,
+        Precision::F32,
+        ebc::util::threadpool::default_threads(),
+    );
+    let cpu_result = Greedy::default().run(&mut cpu, 6);
+    println!(
+        "blocked CPU kernel: {:?} in {:.3}s",
+        cpu_result.indices, cpu_result.wall_seconds
+    );
     Ok(())
 }

@@ -1,0 +1,43 @@
+//! Kernel-scaling bench: the CPU oracle hot path (`gains` / `dist_col`
+//! / `eval`) across kernel backends (scalar baseline vs the blocked
+//! Gram-matrix backend), precisions (f32 / software-bf16) and thread
+//! counts — the CPU companion to the paper's Table 1 precision axis.
+//! Emits `BENCH_kernel.json` plus `bench_results/kernel_scaling.csv`.
+//!
+//!     cargo bench --bench kernel_scaling
+//!
+//! `EBC_BENCH_QUICK=1` shrinks the workload; `EBC_BENCH_FULL=1` runs
+//! the acceptance-sized N=20k, d=32, C=1024 sweep.
+
+use ebc::bench::kernel_scaling::{kernel_report, save_bench_json};
+use ebc::bench::{full_mode, kernel_scaling_sweep, quick_mode, KernelSweepConfig, Settings};
+
+fn main() -> anyhow::Result<()> {
+    ebc::util::logging::init();
+    let cfg = if full_mode() {
+        KernelSweepConfig::default()
+    } else if quick_mode() {
+        KernelSweepConfig { n: 2_000, d: 32, c: 128, thread_counts: vec![1, 2], seed: 7 }
+    } else {
+        KernelSweepConfig { n: 8_000, d: 32, c: 512, thread_counts: vec![1, 2, 4], seed: 7 }
+    };
+    println!(
+        "kernel sweep: N={} d={} C={} threads={:?}",
+        cfg.n, cfg.d, cfg.c, cfg.thread_counts
+    );
+    let points = kernel_scaling_sweep(&cfg, &Settings::default());
+
+    let rep = kernel_report(
+        "CPU kernel scaling (scalar baseline vs blocked Gram-matrix)",
+        &points,
+    );
+    rep.print();
+
+    let json_path = std::path::Path::new("BENCH_kernel.json");
+    save_bench_json(json_path, &cfg, &points)?;
+    match rep.save_csv("kernel_scaling") {
+        Ok(path) => println!("\nwrote {} and {}", json_path.display(), path.display()),
+        Err(e) => println!("\nwrote {} (csv export failed: {e})", json_path.display()),
+    }
+    Ok(())
+}

@@ -1,0 +1,289 @@
+//! Kernel-scaling harness: measure the CPU oracle hot path (`gains`,
+//! `dist_col`, `eval`) across kernel backends (scalar baseline vs the
+//! blocked Gram-matrix backend of [`crate::linalg::gemm`]), precisions
+//! (f32 / software-bf16) and thread counts, against one synthetic
+//! workload. Shared by the `kernel-bench` CLI subcommand and the
+//! `kernel_scaling` bench target; results go to `BENCH_kernel.json` so
+//! the perf trajectory is measured, not asserted.
+
+use crate::bench::{measure, Settings};
+use crate::linalg::gemm::CpuKernel;
+use crate::linalg::Matrix;
+use crate::runtime::artifact::Precision;
+use crate::submodular::{fold_mindist, EbcFunction};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Sweep settings: one N×d ground set, one C-wide candidate batch.
+#[derive(Debug, Clone)]
+pub struct KernelSweepConfig {
+    pub n: usize,
+    pub d: usize,
+    /// Candidate-batch width for the `gains` op.
+    pub c: usize,
+    /// Thread counts to sweep (1 is always the scalar-ST baseline row).
+    pub thread_counts: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for KernelSweepConfig {
+    fn default() -> Self {
+        // the acceptance workload: N=20k, d=32, C=1024
+        KernelSweepConfig {
+            n: 20_000,
+            d: 32,
+            c: 1024,
+            thread_counts: vec![1, 2, 4, 8],
+            seed: 7,
+        }
+    }
+}
+
+/// One (op, kernel, precision, threads) measurement.
+#[derive(Debug, Clone)]
+pub struct KernelPoint {
+    /// `gains` | `dist_col` | `eval`.
+    pub op: &'static str,
+    pub kernel: &'static str,
+    pub precision: &'static str,
+    pub threads: usize,
+    pub mean_seconds: f64,
+    pub min_seconds: f64,
+    /// scalar-ST mean of the same op / this mean.
+    pub speedup_vs_scalar_st: f64,
+    /// Max absolute deviation of this variant's output from the
+    /// scalar-ST reference output (numerical-drift tripwire).
+    pub max_abs_dev: f64,
+}
+
+fn max_dev(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0, f64::max)
+}
+
+/// Run the sweep. Rows, per op: scalar ST (the baseline), scalar MT
+/// (candidate-parallel, `gains` only — the paper's MT axis), blocked
+/// f32 and blocked bf16 at every thread count.
+pub fn kernel_scaling_sweep(cfg: &KernelSweepConfig, settings: &Settings) -> Vec<KernelPoint> {
+    let mut rng = Rng::new(cfg.seed);
+    let data = Matrix::random_normal(cfg.n, cfg.d, &mut rng);
+    let scalar = EbcFunction::new(data.clone());
+    // resolve 0 = auto up front so report rows record the real width
+    let thread_counts: Vec<usize> = cfg
+        .thread_counts
+        .iter()
+        .map(|&t| if t == 0 { crate::util::threadpool::default_threads() } else { t })
+        .collect();
+
+    // a realistic optimizer state: mindist after four folded selections
+    let mut mindist = scalar.vsq().to_vec();
+    for j in 0..4.min(cfg.n) {
+        fold_mindist(&mut mindist, &scalar.dist_col(j));
+    }
+    let cands = rng.sample_indices(cfg.n, cfg.c.min(cfg.n));
+    let eval_set = rng.sample_indices(cfg.n, 10.min(cfg.n));
+    let probe = cfg.n / 2;
+
+    let ref_gains = scalar.gains(&mindist, &cands);
+    let ref_dcol = scalar.dist_col(probe);
+    let ref_eval = [scalar.eval(&eval_set)];
+
+    let mut out: Vec<KernelPoint> = Vec::new();
+    let mut base: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let push = |op: &'static str,
+                    kernel: &'static str,
+                    precision: &'static str,
+                    threads: usize,
+                    secs: crate::util::stats::Summary,
+                    dev: f64,
+                    out: &mut Vec<KernelPoint>,
+                    base: &mut BTreeMap<&'static str, f64>| {
+        if kernel == "scalar" && threads == 1 {
+            base.insert(op, secs.mean);
+        }
+        let b = base.get(op).copied().unwrap_or(secs.mean);
+        out.push(KernelPoint {
+            op,
+            kernel,
+            precision,
+            threads,
+            mean_seconds: secs.mean,
+            min_seconds: secs.min,
+            speedup_vs_scalar_st: if secs.mean > 0.0 { b / secs.mean } else { 0.0 },
+            max_abs_dev: dev,
+        });
+    };
+
+    // ---- scalar ST baselines ----------------------------------------
+    let s = measure(settings, || {
+        std::hint::black_box(scalar.gains(&mindist, &cands));
+    });
+    push("gains", "scalar", "f32", 1, s, 0.0, &mut out, &mut base);
+    let s = measure(settings, || {
+        std::hint::black_box(scalar.dist_col(probe));
+    });
+    push("dist_col", "scalar", "f32", 1, s, 0.0, &mut out, &mut base);
+    let s = measure(settings, || {
+        std::hint::black_box(scalar.eval(&eval_set));
+    });
+    push("eval", "scalar", "f32", 1, s, 0.0, &mut out, &mut base);
+
+    // ---- scalar MT (the paper's candidate-parallel axis) ------------
+    for &t in thread_counts.iter().filter(|&&t| t > 1) {
+        let dev = max_dev(&scalar.gains_mt(&mindist, &cands, t), &ref_gains);
+        let s = measure(settings, || {
+            std::hint::black_box(scalar.gains_mt(&mindist, &cands, t));
+        });
+        push("gains", "scalar", "f32", t, s, dev, &mut out, &mut base);
+    }
+
+    // ---- blocked kernel, both precisions, ground-parallel -----------
+    for &(precision, pname) in &[(Precision::F32, "f32"), (Precision::Bf16, "bf16")] {
+        for &t in &thread_counts {
+            let f = EbcFunction::with_kernel(data.clone(), CpuKernel::Blocked, precision, t);
+            let dev = max_dev(&f.gains(&mindist, &cands), &ref_gains);
+            let s = measure(settings, || {
+                std::hint::black_box(f.gains(&mindist, &cands));
+            });
+            push("gains", "blocked", pname, t, s, dev, &mut out, &mut base);
+
+            let dev = max_dev(&f.dist_col(probe), &ref_dcol);
+            let s = measure(settings, || {
+                std::hint::black_box(f.dist_col(probe));
+            });
+            push("dist_col", "blocked", pname, t, s, dev, &mut out, &mut base);
+
+            let dev = max_dev(&[f.eval(&eval_set)], &ref_eval);
+            let s = measure(settings, || {
+                std::hint::black_box(f.eval(&eval_set));
+            });
+            push("eval", "blocked", pname, t, s, dev, &mut out, &mut base);
+        }
+    }
+    out
+}
+
+/// Render the sweep as the shared op × kernel × threads console table —
+/// one source of truth for the `kernel-bench` subcommand and the
+/// `kernel_scaling` bench target.
+pub fn kernel_report(title: &str, points: &[KernelPoint]) -> crate::bench::Reporter {
+    let mut rep = crate::bench::Reporter::new(
+        title,
+        &["op", "kernel", "precision", "threads", "mean", "min", "speedup", "max_dev"],
+    );
+    for p in points {
+        rep.row(&[
+            p.op.to_string(),
+            p.kernel.to_string(),
+            p.precision.to_string(),
+            p.threads.to_string(),
+            crate::bench::report::fmt_secs(p.mean_seconds),
+            crate::bench::report::fmt_secs(p.min_seconds),
+            format!("{:.2}x", p.speedup_vs_scalar_st),
+            format!("{:.2e}", p.max_abs_dev),
+        ]);
+    }
+    rep
+}
+
+/// Render the sweep as the `BENCH_kernel.json` document.
+pub fn bench_json(cfg: &KernelSweepConfig, points: &[KernelPoint]) -> Json {
+    let workload = Json::Obj(BTreeMap::from([
+        ("n".to_string(), Json::Num(cfg.n as f64)),
+        ("d".to_string(), Json::Num(cfg.d as f64)),
+        ("c".to_string(), Json::Num(cfg.c as f64)),
+        ("seed".to_string(), Json::Num(cfg.seed as f64)),
+    ]));
+    let pts = points
+        .iter()
+        .map(|p| {
+            Json::Obj(BTreeMap::from([
+                ("op".to_string(), Json::Str(p.op.to_string())),
+                ("kernel".to_string(), Json::Str(p.kernel.to_string())),
+                ("precision".to_string(), Json::Str(p.precision.to_string())),
+                ("threads".to_string(), Json::Num(p.threads as f64)),
+                ("mean_seconds".to_string(), Json::Num(p.mean_seconds)),
+                ("min_seconds".to_string(), Json::Num(p.min_seconds)),
+                (
+                    "speedup_vs_scalar_st".to_string(),
+                    Json::Num(p.speedup_vs_scalar_st),
+                ),
+                ("max_abs_dev".to_string(), Json::Num(p.max_abs_dev)),
+            ]))
+        })
+        .collect();
+    Json::Obj(BTreeMap::from([
+        ("workload".to_string(), workload),
+        ("points".to_string(), Json::Arr(pts)),
+    ]))
+}
+
+/// Write `BENCH_kernel.json` (or another path) for the sweep.
+pub fn save_bench_json(
+    path: &std::path::Path,
+    cfg: &KernelSweepConfig,
+    points: &[KernelPoint],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_json(cfg, points).dump())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> KernelSweepConfig {
+        KernelSweepConfig {
+            n: 60,
+            d: 9,
+            c: 16,
+            thread_counts: vec![1, 2],
+            seed: 3,
+        }
+    }
+
+    fn fast() -> Settings {
+        Settings {
+            warmup: 0,
+            min_iters: 1,
+            min_time: std::time::Duration::from_millis(0),
+            max_iters: 2,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_every_variant() {
+        let cfg = tiny();
+        let pts = kernel_scaling_sweep(&cfg, &fast());
+        // 3 scalar-ST + 1 scalar-MT + 2 precisions × 2 threads × 3 ops
+        assert_eq!(pts.len(), 3 + 1 + 2 * 2 * 3);
+        for p in &pts {
+            assert!(p.mean_seconds >= 0.0 && p.min_seconds >= 0.0, "{p:?}");
+            assert!(p.speedup_vs_scalar_st > 0.0, "{p:?}");
+        }
+        // blocked f32 stays numerically on top of the scalar reference
+        for p in pts.iter().filter(|p| p.kernel == "blocked" && p.precision == "f32") {
+            assert!(p.max_abs_dev <= 1e-3, "{p:?}");
+        }
+        // bf16 drifts, but boundedly (documented looser bound)
+        for p in pts.iter().filter(|p| p.precision == "bf16") {
+            assert!(p.max_abs_dev <= 1.0, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn json_document_shape() {
+        let cfg = tiny();
+        let pts = kernel_scaling_sweep(&cfg, &fast());
+        let doc = bench_json(&cfg, &pts);
+        assert_eq!(doc.get("workload").and_then(|w| w.get("n")).and_then(Json::as_usize), Some(60));
+        let arr = doc.get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), pts.len());
+        assert!(arr[0].get("op").and_then(Json::as_str).is_some());
+        // round-trips through the in-tree parser
+        let re = Json::parse(&doc.dump()).unwrap();
+        assert_eq!(re, doc);
+    }
+}

@@ -4,10 +4,12 @@
 //! prints paper-style tables and saves CSV next to `bench_output.txt`,
 //! and the workload generators for the paper's experiments.
 
+pub mod kernel_scaling;
 pub mod report;
 pub mod shard_scaling;
 pub mod workload;
 
+pub use kernel_scaling::{kernel_scaling_sweep, KernelPoint, KernelSweepConfig};
 pub use report::Reporter;
 pub use shard_scaling::{shard_scaling_sweep, ShardScalingPoint, ShardSweepConfig};
 pub use workload::{fig2_workload, EvalProblem};

@@ -1,6 +1,7 @@
 //! Typed configuration schema over [`super::parse::ConfigDoc`].
 
 use super::parse::{ConfigDoc, Value};
+use crate::linalg::gemm::CpuKernel;
 use crate::runtime::artifact::Precision;
 use anyhow::{bail, Result};
 
@@ -10,11 +11,23 @@ pub struct EngineSection {
     pub precision: Precision,
     pub cpu_fallback: bool,
     pub batch: usize,
+    /// CPU oracle kernel backend: one of [`crate::linalg::CPU_KERNELS`]
+    /// (`scalar` = paper baseline loops, `blocked` = tiled Gram-matrix).
+    pub cpu_kernel: CpuKernel,
+    /// Ground-parallel worker threads for the blocked CPU kernel
+    /// (0 = auto via `default_threads()`).
+    pub cpu_threads: usize,
 }
 
 impl Default for EngineSection {
     fn default() -> Self {
-        EngineSection { precision: Precision::F32, cpu_fallback: true, batch: 1024 }
+        EngineSection {
+            precision: Precision::F32,
+            cpu_fallback: true,
+            batch: 1024,
+            cpu_kernel: CpuKernel::Blocked,
+            cpu_threads: 0,
+        }
     }
 }
 
@@ -115,6 +128,8 @@ impl ServiceConfig {
             "bf16" | "fp16" | "half" => Precision::Bf16,
             other => bail!("engine.precision: unknown '{other}'"),
         };
+        let cpu_kernel = CpuKernel::parse(&doc.str("engine.cpu_kernel", "blocked"))
+            .map_err(|e| e.context("engine.cpu_kernel"))?;
         let algorithm = doc.str("summary.algorithm", "greedy");
         if !crate::optim::ALGORITHMS.contains(&algorithm.as_str()) {
             bail!(
@@ -146,6 +161,8 @@ impl ServiceConfig {
                 precision,
                 cpu_fallback: doc.bool("engine.cpu_fallback", true),
                 batch: pos("engine.batch", 1024)?,
+                cpu_kernel,
+                cpu_threads: pos("engine.cpu_threads", 0)?,
             },
             summary: SummarySection {
                 k: pos("summary.k", 5)?,
@@ -186,6 +203,8 @@ name = "plant-7"
 [engine]
 precision = "bf16"
 batch = 256
+cpu_kernel = "scalar"
+cpu_threads = 4
 [summary]
 k = 10
 algorithm = "three_sieves"
@@ -209,6 +228,8 @@ seed = 99
         assert_eq!(c.name, "plant-7");
         assert_eq!(c.engine.precision, Precision::Bf16);
         assert_eq!(c.engine.batch, 256);
+        assert_eq!(c.engine.cpu_kernel, CpuKernel::Scalar);
+        assert_eq!(c.engine.cpu_threads, 4);
         assert_eq!(c.summary.k, 10);
         assert_eq!(c.summary.algorithm, "three_sieves");
         assert_eq!(c.coordinator.workers, 4);
@@ -225,6 +246,8 @@ seed = 99
         let c = ServiceConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
         assert_eq!(c.summary.k, 5);
         assert_eq!(c.engine.precision, Precision::F32);
+        assert_eq!(c.engine.cpu_kernel, CpuKernel::Blocked);
+        assert_eq!(c.engine.cpu_threads, 0);
         assert_eq!(c.coordinator.workers, 2);
         assert_eq!(c.shard.shards, 2);
         assert_eq!(c.shard.partitioner, "round_robin");
@@ -247,6 +270,12 @@ seed = 99
     #[test]
     fn rejects_unknown_algorithm() {
         let doc = ConfigDoc::parse("[summary]\nalgorithm = \"magic\"\n").unwrap();
+        assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_cpu_kernel() {
+        let doc = ConfigDoc::parse("[engine]\ncpu_kernel = \"quantum\"\n").unwrap();
         assert!(ServiceConfig::from_doc(&doc).is_err());
     }
 

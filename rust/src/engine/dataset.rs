@@ -8,9 +8,11 @@
 //! candidates or packed sets).
 
 use crate::engine::tiling::{mask, pad_matrix, pad_vec};
+use crate::engine::EngineConfig;
 use crate::linalg::{sq_norms, Matrix};
 use crate::runtime::xla;
 use crate::runtime::Runtime;
+use crate::submodular::EbcFunction;
 use anyhow::Result;
 use std::collections::HashMap;
 
@@ -29,6 +31,10 @@ pub struct DeviceDataset {
     v: Matrix,
     vsq: Vec<f32>,
     buffers: HashMap<(usize, usize), GroundBuffers>,
+    /// Lazily-built CPU evaluator for the engine's fallback path —
+    /// cached so repeated fallback calls don't redo the O(n·d) clone /
+    /// norms / bf16-demotion setup.
+    fallback: Option<EbcFunction>,
     pub upload_bytes: u64,
 }
 
@@ -37,7 +43,7 @@ pub const BIG: f32 = 1e30;
 impl DeviceDataset {
     pub fn new(v: Matrix) -> DeviceDataset {
         let vsq = sq_norms(v.data(), v.cols());
-        DeviceDataset { v, vsq, buffers: HashMap::new(), upload_bytes: 0 }
+        DeviceDataset { v, vsq, buffers: HashMap::new(), fallback: None, upload_bytes: 0 }
     }
 
     pub fn n(&self) -> usize {
@@ -79,5 +85,20 @@ impl DeviceDataset {
     /// Number of distinct bucket uploads so far.
     pub fn bucket_count(&self) -> usize {
         self.buffers.len()
+    }
+
+    /// Get (building on first use) the CPU fallback evaluator on the
+    /// engine's configured `cpu_kernel`/`cpu_threads`/precision.
+    pub fn cpu_fallback(&mut self, cfg: &EngineConfig) -> &EbcFunction {
+        if self.fallback.is_none() {
+            let ground = self.v.clone();
+            self.fallback = Some(EbcFunction::with_kernel(
+                ground,
+                cfg.cpu_kernel,
+                cfg.precision,
+                cfg.cpu_threads,
+            ));
+        }
+        self.fallback.as_ref().expect("just built")
     }
 }

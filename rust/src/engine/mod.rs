@@ -15,12 +15,13 @@
 pub mod dataset;
 pub mod tiling;
 
+pub use crate::linalg::gemm::CpuKernel;
 pub use crate::runtime::artifact::{KernelImpl, Precision};
 pub use dataset::DeviceDataset;
 
 use crate::linalg::Matrix;
 use crate::runtime::Runtime;
-use crate::submodular::{EbcFunction, Oracle};
+use crate::submodular::Oracle;
 use crate::util::timer::Profile;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,6 +34,12 @@ pub struct EngineConfig {
     pub precision: Precision,
     /// Fall back to the CPU evaluator when no bucket fits (otherwise error).
     pub cpu_fallback: bool,
+    /// CPU kernel backend the fallback evaluator runs on (the
+    /// `[engine] cpu_kernel` seam; `Blocked` = tiled Gram-matrix).
+    pub cpu_kernel: CpuKernel,
+    /// Ground-parallel threads for the blocked fallback kernel
+    /// (0 = `default_threads()`).
+    pub cpu_threads: usize,
     /// Preferred kernel implementation. `Jnp` (default) is the fused
     /// fast path on the CPU PJRT backend; `Pallas` selects the tiled
     /// TPU-shaped L1 kernels (see EXPERIMENTS.md §Perf). The manifest
@@ -46,6 +53,8 @@ impl Default for EngineConfig {
         EngineConfig {
             precision: Precision::F32,
             cpu_fallback: true,
+            cpu_kernel: CpuKernel::Blocked,
+            cpu_threads: 0,
             kernel: KernelImpl::Jnp,
         }
     }
@@ -195,10 +204,11 @@ impl Engine {
             Some(e) => e.clone(),
             None if self.cfg.cpu_fallback => {
                 log::warn!(
-                    "eval_sets: no bucket fits (l={l}, k={kmax}, n={n}, d={d}); CPU fallback"
+                    "eval_sets: no bucket fits (l={l}, k={kmax}, n={n}, d={d}); CPU fallback \
+                     ({} kernel)",
+                    self.cfg.cpu_kernel.name()
                 );
-                let f = EbcFunction::new(ds.ground().clone());
-                return Ok(f.eval_sets_st(sets));
+                return Ok(ds.cpu_fallback(&self.cfg).eval_sets_st(sets));
             }
             None => return Err(anyhow!("no eval_multi bucket fits (l={l}, k={kmax})")),
         };

@@ -1,0 +1,359 @@
+//! Tiled Gram-matrix (GEMM) kernel backend for the CPU oracle hot path.
+//!
+//! The paper's speedup story (§4, Table 1) comes from recasting EBC
+//! evaluation as dense work-matrix algebra: instead of per-pair
+//! subtract-square-accumulate loops, every distance block is computed as
+//!
+//! ```text
+//! D = vsq_rows · 1ᵀ + 1 · vsq_colsᵀ − 2 · X · Yᵀ
+//! ```
+//!
+//! so the dominant cost is one dense matmul. This module is the CPU
+//! mirror of that formulation: a cache-blocked `X·Yᵀ` ([`gemm_nt`]) with
+//! an [`MR`]×[`NR`] register micro-kernel and a [`KC`]-deep L1 tile over
+//! the feature dimension, the distance expansion on top of it
+//! ([`sq_dist_block`]), and a reduced-precision path ([`bf16_round`] /
+//! [`demote_bf16`]: inputs rounded to bf16-representable values,
+//! accumulation kept in f32 — the software analogue of the paper's FP16
+//! axis that gave up to 452x).
+//!
+//! The scalar row-by-row kernels in [`super::distance`] remain the
+//! paper's ST/MT baselines; [`CpuKernel`] is the backend seam the rest
+//! of the stack (config, CLI, shard workers, coordinator) selects with.
+
+use anyhow::{bail, Result};
+
+/// CPU oracle kernel backend: the paper's scalar ST/MT baseline loops,
+/// or the blocked Gram-matrix formulation of this module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CpuKernel {
+    /// Row-by-row `sq_euclidean` loops ([`super::distance`]) — the
+    /// paper's ST baseline (candidate-/set-parallel when threaded).
+    Scalar,
+    /// Cache-blocked `D = vsq + vsqᵀ − 2XYᵀ` with ground-parallel
+    /// threading — the work-matrix formulation on the CPU.
+    Blocked,
+}
+
+/// Kernel names accepted by [`CpuKernel::parse`] (and therefore by
+/// `engine.cpu_kernel` in the config schema and the CLI flags).
+pub const CPU_KERNELS: &[&str] = &["scalar", "blocked"];
+
+impl CpuKernel {
+    pub fn parse(s: &str) -> Result<CpuKernel> {
+        Ok(match s {
+            "scalar" => CpuKernel::Scalar,
+            "blocked" | "gemm" => CpuKernel::Blocked,
+            other => bail!("unknown cpu kernel '{other}' (expected one of {CPU_KERNELS:?})"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CpuKernel::Scalar => "scalar",
+            CpuKernel::Blocked => "blocked",
+        }
+    }
+}
+
+/// Micro-kernel register-tile height (rows of X per inner tile).
+pub const MR: usize = 8;
+/// Micro-kernel register-tile width (rows of Y per inner tile).
+pub const NR: usize = 8;
+/// L1 tile depth over the feature dimension: KC f32 ≈ 1 KB per row, so
+/// one MR-row X panel + one NR-row Y panel stay L1-resident (~16 KB).
+pub const KC: usize = 256;
+
+/// `out` (m×c, row-major) ← `out + X·Yᵀ` with X (m×d) and Y (c×d) both
+/// row-major — the "NT" Gram product where every entry is a row-row dot.
+/// `out` must be zeroed (or hold a partial product) on entry; f32
+/// accumulation throughout, k blocked by [`KC`], [`MR`]×[`NR`] register
+/// tiles with a scalar edge path for ragged borders.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(x: &[f32], y: &[f32], d: usize, m: usize, c: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * d, "X shape mismatch");
+    assert_eq!(y.len(), c * d, "Y shape mismatch");
+    assert_eq!(out.len(), m * c, "out shape mismatch");
+    let mut k0 = 0;
+    while k0 < d {
+        let kend = (k0 + KC).min(d);
+        let mut i0 = 0;
+        while i0 < m {
+            let iend = (i0 + MR).min(m);
+            let mut j0 = 0;
+            while j0 < c {
+                let jend = (j0 + NR).min(c);
+                if iend - i0 == MR && jend - j0 == NR {
+                    micro_full(x, y, d, c, i0, j0, k0, kend, out);
+                } else {
+                    micro_edge(x, y, d, c, i0, iend, j0, jend, k0, kend, out);
+                }
+                j0 = jend;
+            }
+            i0 = iend;
+        }
+        k0 = kend;
+    }
+}
+
+/// Full MR×NR register tile: rank-1 updates over the k panel; the fixed
+/// NR-wide inner loop lowers to packed SIMD.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_full(
+    x: &[f32],
+    y: &[f32],
+    d: usize,
+    c: usize,
+    i0: usize,
+    j0: usize,
+    k0: usize,
+    kend: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for k in k0..kend {
+        let mut yv = [0f32; NR];
+        for (jj, v) in yv.iter_mut().enumerate() {
+            *v = y[(j0 + jj) * d + k];
+        }
+        for (ii, row) in acc.iter_mut().enumerate() {
+            let a = x[(i0 + ii) * d + k];
+            for (r, &b) in row.iter_mut().zip(&yv) {
+                *r += a * b;
+            }
+        }
+    }
+    for (ii, row) in acc.iter().enumerate() {
+        let base = (i0 + ii) * c + j0;
+        for (jj, &v) in row.iter().enumerate() {
+            out[base + jj] += v;
+        }
+    }
+}
+
+/// Ragged border tile: plain dot products over the k panel.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_edge(
+    x: &[f32],
+    y: &[f32],
+    d: usize,
+    c: usize,
+    i0: usize,
+    iend: usize,
+    j0: usize,
+    jend: usize,
+    k0: usize,
+    kend: usize,
+    out: &mut [f32],
+) {
+    for i in i0..iend {
+        for j in j0..jend {
+            let mut s = 0f32;
+            for k in k0..kend {
+                s += x[i * d + k] * y[j * d + k];
+            }
+            out[i * c + j] += s;
+        }
+    }
+}
+
+/// `out` (m×c) ← max(0, vsq_x[i] + vsq_y[j] − 2·⟨x_i, y_j⟩): the paper's
+/// work-matrix distance expansion over one ground-row block. Clamped at
+/// zero — exact squared distances are non-negative, but the expanded
+/// form can go slightly negative under cancellation (e.g. i == j).
+#[allow(clippy::too_many_arguments)]
+pub fn sq_dist_block(
+    x: &[f32],
+    vsq_x: &[f32],
+    y: &[f32],
+    vsq_y: &[f32],
+    d: usize,
+    m: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(vsq_x.len(), m, "vsq_x length mismatch");
+    assert_eq!(vsq_y.len(), c, "vsq_y length mismatch");
+    out.fill(0.0);
+    gemm_nt(x, y, d, m, c, out);
+    for i in 0..m {
+        let vx = vsq_x[i];
+        let row = &mut out[i * c..(i + 1) * c];
+        for (o, &vy) in row.iter_mut().zip(vsq_y) {
+            let v = vx + vy - 2.0 * *o;
+            *o = if v > 0.0 { v } else { 0.0 };
+        }
+    }
+}
+
+/// Round an f32 to the nearest bf16-representable value (ties to even),
+/// returned as f32 — the input side of the reduced-precision path: the
+/// paper runs FP16 work matrices on the accelerator; on the CPU we
+/// demote inputs and keep f32 accumulation, so the error model matches
+/// the input-quantization component of that axis.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Demote every element to its nearest bf16-representable value.
+pub fn demote_bf16(data: &[f32]) -> Vec<f32> {
+    data.iter().map(|&v| bf16_round(v)).collect()
+}
+
+/// Ground-row tile height for an (h×c) distance block: sized so the
+/// block stays ≈128 KB (L2-resident), floored at [`MR`] and kept a
+/// multiple of it so full micro-tiles dominate.
+pub fn tile_rows(c: usize) -> usize {
+    let target = (128 * 1024) / (4 * c.max(1));
+    (target.clamp(MR, 512) / MR) * MR
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{sq_euclidean, sq_norms};
+    use crate::util::rng::Rng;
+
+    fn naive_nt(x: &[f32], y: &[f32], d: usize, m: usize, c: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * c];
+        for i in 0..m {
+            for j in 0..c {
+                out[i * c + j] = (0..d).map(|k| x[i * d + k] * y[j * d + k]).sum();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_matches_naive_awkward_shapes() {
+        let mut rng = Rng::new(1);
+        // shapes straddling the MR/NR/KC tile borders
+        for &(m, c, d) in &[
+            (0usize, 5usize, 3usize),
+            (5, 0, 3),
+            (1, 1, 1),
+            (7, 9, 5),
+            (8, 8, 8),
+            (9, 17, 31),
+            (16, 16, 257),
+            (13, 5, 300),
+        ] {
+            let x: Vec<f32> = rng.normal_vec(m * d);
+            let y: Vec<f32> = rng.normal_vec(c * d);
+            let mut out = vec![0f32; m * c];
+            gemm_nt(&x, &y, d, m, c, &mut out);
+            let want = naive_nt(&x, &y, d, m, c);
+            for (a, b) in out.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "m={m} c={c} d={d}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_out() {
+        let x = [1.0f32, 2.0];
+        let y = [3.0f32, 4.0];
+        let mut out = [10.0f32];
+        gemm_nt(&x, &y, 2, 1, 1, &mut out);
+        assert_eq!(out[0], 21.0); // 10 + (3 + 8)
+    }
+
+    #[test]
+    fn sq_dist_block_matches_scalar_kernel() {
+        let mut rng = Rng::new(2);
+        for &(m, c, d) in &[(6usize, 4usize, 3usize), (17, 9, 33), (8, 8, 8)] {
+            let x: Vec<f32> = rng.normal_vec(m * d);
+            let y: Vec<f32> = rng.normal_vec(c * d);
+            let vsq_x = sq_norms(&x, d);
+            let vsq_y = sq_norms(&y, d);
+            let mut out = vec![0f32; m * c];
+            sq_dist_block(&x, &vsq_x, &y, &vsq_y, d, m, c, &mut out);
+            for i in 0..m {
+                for j in 0..c {
+                    let want = sq_euclidean(&x[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]);
+                    let got = out[i * c + j];
+                    assert!(
+                        (got - want).abs() <= 1e-3 * (1.0 + want),
+                        "({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq_dist_block_self_distance_clamped_nonnegative() {
+        let mut rng = Rng::new(3);
+        let d = 19;
+        let x: Vec<f32> = rng.normal_vec(5 * d);
+        let vsq = sq_norms(&x, d);
+        let mut out = vec![0f32; 5 * 5];
+        sq_dist_block(&x, &vsq, &x, &vsq, d, 5, 5, &mut out);
+        for (i, row) in out.chunks(5).enumerate() {
+            assert!(row.iter().all(|&v| v >= 0.0), "row {i}: {row:?}");
+            assert!(row[i] <= 1e-3 * (1.0 + vsq[i]), "self-dist {}", row[i]);
+        }
+    }
+
+    #[test]
+    fn bf16_round_properties() {
+        // idempotent, exact on bf16-representable values, signs preserved
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 3.0, 256.0, -0.375, f32::INFINITY] {
+            assert_eq!(bf16_round(v), v, "representable {v}");
+        }
+        let mut rng = Rng::new(4);
+        for _ in 0..1000 {
+            let v = rng.normal() * 100.0;
+            let r = bf16_round(v);
+            assert_eq!(bf16_round(r), r, "not idempotent at {v}");
+            // bf16 keeps 8 significand bits: relative error < 2^-8
+            assert!(
+                (r - v).abs() <= v.abs() / 256.0 + f32::MIN_POSITIVE,
+                "{v} -> {r}"
+            );
+        }
+        assert!(bf16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn demote_is_elementwise() {
+        let data = [1.0f32, 3.14159, -2.71828];
+        let lp = demote_bf16(&data);
+        assert_eq!(lp.len(), 3);
+        for (a, b) in data.iter().zip(&lp) {
+            assert_eq!(bf16_round(*a), *b);
+        }
+    }
+
+    #[test]
+    fn tile_rows_bounds() {
+        assert_eq!(tile_rows(0) % MR, 0);
+        for c in [1usize, 7, 64, 1024, 1 << 20] {
+            let t = tile_rows(c);
+            assert!(t >= MR && t <= 512 && t % MR == 0, "c={c}: {t}");
+        }
+        // large candidate blocks shrink the tile
+        assert!(tile_rows(1 << 20) == MR);
+        assert!(tile_rows(1) > tile_rows(1024));
+    }
+
+    #[test]
+    fn cpu_kernel_parse_roundtrip() {
+        for name in CPU_KERNELS {
+            assert_eq!(CpuKernel::parse(name).unwrap().name(), *name);
+        }
+        assert_eq!(CpuKernel::parse("gemm").unwrap(), CpuKernel::Blocked);
+        assert!(CpuKernel::parse("psychic").is_err());
+    }
+}

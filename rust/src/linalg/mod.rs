@@ -1,8 +1,21 @@
 //! Dense linear-algebra substrate: row-major f32 matrices + the distance
-//! kernels the CPU baselines and the engine's host-side paths use.
+//! kernels the CPU oracles and the engine's host-side paths use.
+//!
+//! Two CPU kernel families live here, selected by [`gemm::CpuKernel`]:
+//!
+//! * [`distance`] — scalar row-by-row squared-Euclidean loops. These are
+//!   the paper's **ST baseline** (Fig. 2 / Table 1, single-threaded
+//!   Algorithm 1), and with the set-/candidate-parallel threading in
+//!   [`crate::submodular::ebc`] the paper's **MT baseline** (§4.1).
+//! * [`gemm`] — the cache-blocked Gram-matrix formulation
+//!   `D = vsq + vsqᵀ − 2XYᵀ` with ground-parallel threading and a
+//!   software bf16 precision axis: the CPU mirror of the work-matrix
+//!   kernels the paper runs on the accelerator.
 
 pub mod distance;
+pub mod gemm;
 pub mod matrix;
 
 pub use distance::{sq_euclidean, sq_euclidean_accum, sq_norms};
+pub use gemm::{CpuKernel, CPU_KERNELS};
 pub use matrix::Matrix;

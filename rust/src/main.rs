@@ -1,20 +1,24 @@
 //! `ebc-summarizer` — the L3 coordinator launcher.
 //!
 //! Subcommands:
-//! * `info`        — runtime + artifact inventory
-//! * `summarize`   — summarize a synthetic dataset (quick demo)
-//! * `casestudy`   — the paper's §6 injection-molding study (Table 2 / Fig. 4)
-//! * `serve`       — run the streaming coordinator over a simulated fleet
-//! * `shard-bench` — sharded two-stage scaling sweep (shards × wall-clock)
-//! * `devices`     — analytical device-model predictions (Table 1 shape)
+//! * `info`         — runtime + artifact inventory
+//! * `summarize`    — summarize a synthetic dataset (quick demo)
+//! * `casestudy`    — the paper's §6 injection-molding study (Table 2 / Fig. 4)
+//! * `serve`        — run the streaming coordinator over a simulated fleet
+//! * `shard-bench`  — sharded two-stage scaling sweep (shards × wall-clock)
+//! * `kernel-bench` — CPU kernel backend sweep (scalar vs blocked × threads)
+//! * `devices`      — analytical device-model predictions (Table 1 shape)
 
 use anyhow::Result;
 use ebc::bench::report::fmt_secs;
-use ebc::bench::{shard_scaling_sweep, Reporter, ShardSweepConfig};
+use ebc::bench::{
+    kernel_scaling_sweep, shard_scaling_sweep, KernelSweepConfig, Reporter, ShardSweepConfig,
+};
 use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
 use ebc::config::schema::ServiceConfig;
 use ebc::coordinator::{Coordinator, OracleFactory, SimulatedFleet, FLEET_QUERY};
 use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::linalg::CpuKernel;
 use ebc::gpumodel::{
     predict_seconds, speedup, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
 };
@@ -49,6 +53,8 @@ fn app() -> AppSpec {
                     opt("seed", "rng seed", "42"),
                     opt("backend", "cpu | xla", "xla"),
                     opt("precision", "f32 | bf16", "f32"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked", "blocked"),
+                    opt("oracle-threads", "cpu oracle worker threads (0 = auto)", "0"),
                     opt("algorithm", "any optim registry name (greedy, lazy_greedy, ...)", "greedy"),
                 ],
             },
@@ -60,6 +66,8 @@ fn app() -> AppSpec {
                     opt("samples", "samples per cycle (paper: 3524)", "3524"),
                     opt("seed", "rng seed", "7"),
                     opt("backend", "cpu | xla", "xla"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked", "scalar"),
+                    opt("oracle-threads", "cpu oracle worker threads (0 = auto)", "1"),
                     flag("table2", "print Table 2"),
                     flag("fig4", "export Fig. 4 regrind curves (plate)"),
                     flag("validate", "check process-knowledge expectations"),
@@ -87,6 +95,24 @@ fn app() -> AppSpec {
                     opt("algorithms", "comma-separated optimizer names", "greedy"),
                     opt("threads", "shard-stage worker threads (0 = auto)", "0"),
                     opt("backend", "cpu | xla", "cpu"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked", "scalar"),
+                    opt(
+                        "oracle-threads",
+                        "per-shard oracle threads (0 = auto; 1 = shard workers own it)",
+                        "1",
+                    ),
+                ],
+            },
+            CommandSpec {
+                name: "kernel-bench",
+                help: "CPU kernel backend sweep: scalar vs blocked Gram-matrix x threads",
+                flags: vec![
+                    opt("n", "ground-set size", "20000"),
+                    opt("d", "dimensionality", "32"),
+                    opt("c", "candidate-batch width", "1024"),
+                    opt("threads", "comma-separated thread counts", "1,2,4,8"),
+                    opt("seed", "rng seed", "7"),
+                    opt("out", "output JSON path", "BENCH_kernel.json"),
                 ],
             },
             CommandSpec {
@@ -120,6 +146,7 @@ fn main() {
         "casestudy" => cmd_casestudy(&m),
         "serve" => cmd_serve(&m),
         "shard-bench" => cmd_shard_bench(&m),
+        "kernel-bench" => cmd_kernel_bench(&m),
         "devices" => cmd_devices(&m),
         _ => unreachable!(),
     };
@@ -129,12 +156,29 @@ fn main() {
     }
 }
 
-fn oracle_factory(backend: &str, precision: Precision) -> Result<OracleFactory> {
+fn oracle_factory(
+    backend: &str,
+    precision: Precision,
+    kernel: CpuKernel,
+    threads: usize,
+) -> Result<OracleFactory> {
     match backend {
-        "cpu" => Ok(Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>)),
+        "cpu" => Ok(Box::new(move |m: Matrix| {
+            // threads == 0 resolves to default_threads() in with_kernel
+            Box::new(CpuOracle::with_kernel(m, kernel, precision, threads)) as Box<dyn Oracle>
+        })),
         "xla" => {
             let rt = Runtime::discover()?;
-            let engine = Engine::new(rt, EngineConfig { precision, cpu_fallback: true, ..Default::default() });
+            let engine = Engine::new(
+                rt,
+                EngineConfig {
+                    precision,
+                    cpu_fallback: true,
+                    cpu_kernel: kernel,
+                    cpu_threads: threads,
+                    ..Default::default()
+                },
+            );
             Ok(Box::new(move |m: Matrix| {
                 Box::new(XlaOracle::new(engine.clone(), m)) as Box<dyn Oracle>
             }))
@@ -188,7 +232,8 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
     let k = m.usize("k")?;
     let seed = m.usize("seed")? as u64;
     let precision = parse_precision(m.str("precision")?)?;
-    let factory = oracle_factory(m.str("backend")?, precision)?;
+    let kernel = CpuKernel::parse(m.str("kernel")?)?;
+    let factory = oracle_factory(m.str("backend")?, precision, kernel, m.usize("oracle-threads")?)?;
     let mut rng = Rng::new(seed);
     let data = Matrix::random_normal(n, d, &mut rng);
 
@@ -218,7 +263,9 @@ fn cmd_casestudy(m: &Matches) -> Result<()> {
     let k = m.usize("k")?;
     let samples = m.usize("samples")?;
     let seed = m.usize("seed")? as u64;
-    let factory = oracle_factory(m.str("backend")?, Precision::F32)?;
+    let kernel = CpuKernel::parse(m.str("kernel")?)?;
+    let factory =
+        oracle_factory(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
     let optimizer = Greedy::default();
 
     log::info!("generating 10 campaigns ({} samples/cycle) + summarizing", samples);
@@ -277,7 +324,12 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         "" => ServiceConfig::default(),
         path => ServiceConfig::load(path)?,
     };
-    let factory = oracle_factory(m.str("backend")?, cfg.engine.precision)?;
+    let factory = oracle_factory(
+        m.str("backend")?,
+        cfg.engine.precision,
+        cfg.engine.cpu_kernel,
+        cfg.engine.cpu_threads,
+    )?;
     let mut coordinator = Coordinator::new(cfg, factory);
     let mut fleet = SimulatedFleet::new(
         &[
@@ -333,7 +385,9 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         anyhow::bail!("flag '--algorithms': empty list");
     }
     let threads = m.usize("threads")?;
-    let factory = oracle_factory(m.str("backend")?, Precision::F32)?;
+    let kernel = CpuKernel::parse(m.str("kernel")?)?;
+    let factory =
+        oracle_factory(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
 
     log::info!("generating IMM dataset (cover/stable, d={samples})");
     let data = ebc::imm::generate_dataset_with(
@@ -390,6 +444,43 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
     match rep.save_csv("shard_scaling") {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => log::warn!("csv export failed: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_kernel_bench(m: &Matches) -> Result<()> {
+    let cfg = KernelSweepConfig {
+        n: m.usize("n")?,
+        d: m.usize("d")?,
+        c: m.usize("c")?,
+        thread_counts: parse_usize_list(m.str("threads")?, "threads")?,
+        seed: m.usize("seed")? as u64,
+    };
+    println!(
+        "kernel sweep: N={} d={} C={} threads={:?} (scalar baseline vs blocked Gram-matrix)",
+        cfg.n, cfg.d, cfg.c, cfg.thread_counts
+    );
+    let points = kernel_scaling_sweep(&cfg, &ebc::bench::Settings::default());
+    let rep = ebc::bench::kernel_scaling::kernel_report(
+        "kernel-bench: CPU oracle hot path by backend",
+        &points,
+    );
+    rep.print();
+
+    let out = std::path::PathBuf::from(m.str("out")?);
+    ebc::bench::kernel_scaling::save_bench_json(&out, &cfg, &points)?;
+    println!("\nwrote {}", out.display());
+
+    // the headline number: best blocked-f32 gains speedup over scalar ST
+    if let Some(best) = points
+        .iter()
+        .filter(|p| p.op == "gains" && p.kernel == "blocked" && p.precision == "f32")
+        .max_by(|a, b| a.speedup_vs_scalar_st.total_cmp(&b.speedup_vs_scalar_st))
+    {
+        println!(
+            "blocked f32 gains: {:.2}x vs scalar ST at {} thread(s)",
+            best.speedup_vs_scalar_st, best.threads
+        );
     }
     Ok(())
 }

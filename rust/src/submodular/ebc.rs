@@ -2,10 +2,20 @@
 //! (single-threaded) and its set-parallel multi-threaded variant (§4.1),
 //! both serving as the baselines of Fig. 2 / Table 1, plus the
 //! mindist-incremental [`CpuOracle`] the optimizers use.
+//!
+//! Every hot entry point (`gains`, `dist_col`, `eval*`) dispatches on a
+//! [`CpuKernel`]: `Scalar` is the paper-faithful baseline; `Blocked`
+//! routes through the tiled Gram-matrix backend in
+//! [`crate::linalg::gemm`], threading **ground-parallel** (over ground
+//! rows, not candidates) so small candidate batches from
+//! `lazy_greedy`/the sieves still saturate every core, with an optional
+//! bf16 input-demotion path selected via [`Precision`].
 
+use crate::linalg::gemm::{self, CpuKernel};
 use crate::linalg::{sq_euclidean, sq_norms, Matrix};
+use crate::runtime::artifact::Precision;
 use crate::submodular::Oracle;
-use crate::util::threadpool::scoped_chunks;
+use crate::util::threadpool::scoped_chunks_mut;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// The EBC function f(S) = L({e0}) − L(S ∪ {e0}) over a fixed ground set
@@ -13,14 +23,49 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct EbcFunction {
     v: Matrix,
     vsq: Vec<f32>,
+    /// bf16-demoted ground copy + its norms — present only on the
+    /// blocked bf16 path (inputs demoted, accumulation stays f32).
+    lp: Option<(Matrix, Vec<f32>)>,
+    kernel: CpuKernel,
+    precision: Precision,
+    /// Ground-parallel worker count for the blocked kernel (>= 1).
+    threads: usize,
     /// scalar distance-evaluation counter (ablation metric)
     work: AtomicU64,
 }
 
 impl EbcFunction {
+    /// Scalar f32 single-threaded function — the paper's Algorithm 1.
     pub fn new(v: Matrix) -> EbcFunction {
+        Self::with_kernel(v, CpuKernel::Scalar, Precision::F32, 1)
+    }
+
+    /// Backend-selectable constructor: `kernel` picks the scalar baseline
+    /// or the blocked Gram-matrix path, `precision` the f32/bf16 axis
+    /// (demotion applies to the blocked kernel only — the scalar path is
+    /// the exact baseline), `threads` the ground-parallel width of the
+    /// blocked kernels (0 = `default_threads()`).
+    pub fn with_kernel(
+        v: Matrix,
+        kernel: CpuKernel,
+        precision: Precision,
+        threads: usize,
+    ) -> EbcFunction {
         let vsq = sq_norms(v.data(), v.cols());
-        EbcFunction { v, vsq, work: AtomicU64::new(0) }
+        let lp = (kernel == CpuKernel::Blocked && precision == Precision::Bf16).then(|| {
+            let m = Matrix::from_vec(v.rows(), v.cols(), gemm::demote_bf16(v.data()));
+            let s = sq_norms(m.data(), m.cols());
+            (m, s)
+        });
+        EbcFunction {
+            v,
+            vsq,
+            lp,
+            kernel,
+            precision,
+            threads: resolve_threads(threads),
+            work: AtomicU64::new(0),
+        }
     }
 
     pub fn ground(&self) -> &Matrix {
@@ -31,85 +76,176 @@ impl EbcFunction {
         &self.vsq
     }
 
+    pub fn kernel(&self) -> CpuKernel {
+        self.kernel
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Effective (ground matrix, norms) the blocked kernels compute
+    /// distances from: the bf16-demoted copy when present, else exact.
+    fn eff(&self) -> (&Matrix, &[f32]) {
+        match &self.lp {
+            Some((m, s)) => (m, s),
+            None => (&self.v, &self.vsq),
+        }
+    }
+
     /// Paper Algorithm 1, verbatim structure: for every v_i take the min
     /// distance over S ∪ {e0}, average, and subtract from L({e0}).
     ///
     /// `set` holds row indices into the ground matrix.
     pub fn eval(&self, set: &[usize]) -> f32 {
-        let n = self.v.rows();
-        let mut acc = 0f64;
-        for i in 0..n {
-            let vi = self.v.row(i);
-            let mut t = self.vsq[i]; // distance to e0
-            for &s in set {
-                let d = sq_euclidean(vi, self.v.row(s));
-                if d < t {
-                    t = d;
-                }
+        match self.kernel {
+            CpuKernel::Scalar => {
+                let rows: Vec<&[f32]> = set.iter().map(|&s| self.v.row(s)).collect();
+                self.eval_scalar(&rows)
             }
-            acc += (self.vsq[i] - t) as f64;
+            CpuKernel::Blocked => {
+                let (vm, vs) = self.eff();
+                let y = vm.gather(set);
+                let vsq_y: Vec<f32> = set.iter().map(|&s| vs[s]).collect();
+                self.eval_blocked(&y, &vsq_y)
+            }
         }
-        self.work
-            .fetch_add((n * set.len()) as u64, Ordering::Relaxed);
-        (acc / n as f64) as f32
     }
 
     /// Evaluate f for sets whose members are *external* vectors (used by
     /// the streaming coordinator where candidates are not ground rows).
     pub fn eval_external(&self, set: &Matrix) -> f32 {
         assert_eq!(set.cols(), self.v.cols());
+        match self.kernel {
+            CpuKernel::Scalar => {
+                let rows: Vec<&[f32]> = (0..set.rows()).map(|s| set.row(s)).collect();
+                self.eval_scalar(&rows)
+            }
+            CpuKernel::Blocked if self.lp.is_some() => {
+                let m = Matrix::from_vec(set.rows(), set.cols(), gemm::demote_bf16(set.data()));
+                let vsq_y = sq_norms(m.data(), m.cols());
+                self.eval_blocked(&m, &vsq_y)
+            }
+            CpuKernel::Blocked => {
+                self.eval_blocked(set, &sq_norms(set.data(), set.cols()))
+            }
+        }
+    }
+
+    /// The one scalar Algorithm-1 inner loop behind both [`Self::eval`]
+    /// (members are ground rows) and [`Self::eval_external`] (members
+    /// are arbitrary vectors): `rows` holds one slice per set member.
+    /// Both entry points therefore count distance work identically.
+    fn eval_scalar(&self, rows: &[&[f32]]) -> f32 {
         let n = self.v.rows();
         let mut acc = 0f64;
         for i in 0..n {
             let vi = self.v.row(i);
-            let mut t = self.vsq[i];
-            for s in 0..set.rows() {
-                let d = sq_euclidean(vi, set.row(s));
+            let mut t = self.vsq[i]; // distance to e0
+            for vs in rows {
+                let d = sq_euclidean(vi, vs);
                 if d < t {
                     t = d;
                 }
             }
             acc += (self.vsq[i] - t) as f64;
         }
+        self.work.fetch_add((n * rows.len()) as u64, Ordering::Relaxed);
         (acc / n as f64) as f32
     }
 
+    /// Blocked evaluation: per ground tile compute the distance block
+    /// against the packed member matrix and min-reduce, ground-parallel
+    /// over disjoint row ranges.
+    fn eval_blocked(&self, y: &Matrix, vsq_y: &[f32]) -> f32 {
+        let n = self.v.rows();
+        let m = y.rows();
+        self.work.fetch_add((n * m) as u64, Ordering::Relaxed);
+        let (vm, vs) = self.eff();
+        let sums = ground_partials(n, 1, self.threads, |r0, r1, part| {
+            let mut acc = 0f64;
+            for_ground_tiles(vm, vs, y.data(), vsq_y, r0, r1, |i, drow| {
+                let mut t = self.vsq[i];
+                for &dv in drow {
+                    if dv < t {
+                        t = dv;
+                    }
+                }
+                acc += (self.vsq[i] - t) as f64;
+            });
+            part[0] += acc;
+        });
+        (sums[0] / n as f64) as f32
+    }
+
     /// Single-threaded multi-set evaluation: Algorithm 1 looped over
-    /// S_multi — the paper's ST baseline for Fig. 2.
+    /// S_multi — with the scalar kernel this is the paper's ST baseline
+    /// for Fig. 2; with the blocked kernel each set goes through the
+    /// Gram-matrix path.
     pub fn eval_sets_st(&self, sets: &[&[usize]]) -> Vec<f32> {
         sets.iter().map(|s| self.eval(s)).collect()
     }
 
-    /// Multi-threaded multi-set evaluation: the outer loop over sets is
-    /// distributed over a thread pool — the paper's MT baseline (§4.1,
-    /// "runs the mentioned algorithm on different sets in parallel").
+    /// Multi-threaded multi-set evaluation: with the scalar kernel the
+    /// outer loop over sets is distributed over scoped threads writing
+    /// disjoint output chunks — the paper's MT baseline (§4.1, "runs
+    /// the mentioned algorithm on different sets in parallel"). The
+    /// blocked kernel is already ground-parallel per set, so it runs
+    /// the sets sequentially instead of nesting thread scopes.
     pub fn eval_sets_mt(&self, sets: &[&[usize]], threads: usize) -> Vec<f32> {
-        let mut out = vec![0f32; sets.len()];
-        {
-            let slots: Vec<std::sync::Mutex<&mut f32>> =
-                out.iter_mut().map(std::sync::Mutex::new).collect();
-            scoped_chunks(sets.len(), threads, |_, start, end| {
-                for j in start..end {
-                    let v = self.eval(sets[j]);
-                    **slots[j].lock().unwrap() = v;
-                }
-            });
+        if self.kernel == CpuKernel::Blocked {
+            return self.eval_sets_st(sets);
         }
+        let mut out = vec![0f32; sets.len()];
+        scoped_chunks_mut(&mut out, threads, |_, start, slice| {
+            for (off, slot) in slice.iter_mut().enumerate() {
+                *slot = self.eval(sets[start + off]);
+            }
+        });
         out
     }
 
     /// d²(v_i, v_j) for all i.
     pub fn dist_col(&self, j: usize) -> Vec<f32> {
-        let vj = self.v.row(j);
-        self.work
-            .fetch_add(self.v.rows() as u64, Ordering::Relaxed);
-        (0..self.v.rows())
-            .map(|i| sq_euclidean(self.v.row(i), vj))
-            .collect()
+        let n = self.v.rows();
+        self.work.fetch_add(n as u64, Ordering::Relaxed);
+        match self.kernel {
+            CpuKernel::Scalar => {
+                let vj = self.v.row(j);
+                (0..n).map(|i| sq_euclidean(self.v.row(i), vj)).collect()
+            }
+            CpuKernel::Blocked => {
+                let (vm, vs) = self.eff();
+                let d = vm.cols();
+                let vj = vm.row(j).to_vec();
+                let vsj = [vs[j]];
+                let mut out = vec![0f32; n];
+                scoped_chunks_mut(&mut out, self.threads, |_, start, slice| {
+                    gemm::sq_dist_block(
+                        &vm.data()[start * d..(start + slice.len()) * d],
+                        &vs[start..start + slice.len()],
+                        &vj,
+                        &vsj,
+                        d,
+                        slice.len(),
+                        1,
+                        slice,
+                    );
+                });
+                out
+            }
+        }
     }
 
     /// Batched marginal gains given the incremental state.
     pub fn gains(&self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
+        match self.kernel {
+            CpuKernel::Scalar => self.gains_scalar(mindist, cands),
+            CpuKernel::Blocked => self.gains_blocked(mindist, cands),
+        }
+    }
+
+    fn gains_scalar(&self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
         let n = self.v.rows() as f32;
         self.work
             .fetch_add((self.v.rows() * cands.len()) as u64, Ordering::Relaxed);
@@ -130,19 +266,49 @@ impl EbcFunction {
             .collect()
     }
 
-    /// Multi-threaded gains (candidate-parallel).
-    pub fn gains_mt(&self, mindist: &[f32], cands: &[usize], threads: usize) -> Vec<f32> {
-        let mut out = vec![0f32; cands.len()];
-        {
-            let slots: Vec<std::sync::Mutex<&mut f32>> =
-                out.iter_mut().map(std::sync::Mutex::new).collect();
-            scoped_chunks(cands.len(), threads, |_, start, end| {
-                let part = self.gains(mindist, &cands[start..end]);
-                for (o, v) in (start..end).zip(part) {
-                    **slots[o].lock().unwrap() = v;
+    /// Blocked gains: one Gram-matrix distance block per ground tile,
+    /// the clamped `mindist − D` reduction accumulated into per-thread
+    /// f64 partials over disjoint ground-row ranges (ground-parallel —
+    /// a C=1 candidate batch still uses every worker).
+    fn gains_blocked(&self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
+        let n = self.v.rows();
+        let c = cands.len();
+        self.work.fetch_add((n * c) as u64, Ordering::Relaxed);
+        if c == 0 {
+            return vec![];
+        }
+        let (vm, vs) = self.eff();
+        let y = vm.gather(cands);
+        let vsq_y: Vec<f32> = cands.iter().map(|&j| vs[j]).collect();
+        let sums = ground_partials(n, c, self.threads, |r0, r1, part| {
+            for_ground_tiles(vm, vs, y.data(), &vsq_y, r0, r1, |i, drow| {
+                let md = mindist[i];
+                for (p, &dv) in part.iter_mut().zip(drow) {
+                    let r = md - dv;
+                    if r > 0.0 {
+                        *p += r as f64;
+                    }
                 }
             });
+        });
+        let nf = n as f64;
+        sums.iter().map(|&s| (s / nf) as f32).collect()
+    }
+
+    /// Multi-threaded **candidate-parallel** gains over the scalar
+    /// kernel — the paper's MT baseline. On a blocked-kernel function
+    /// this delegates to the ground-parallel blocked path (which uses
+    /// the constructor's thread width), so every entry point on one
+    /// object computes with the same kernel and precision.
+    pub fn gains_mt(&self, mindist: &[f32], cands: &[usize], threads: usize) -> Vec<f32> {
+        if self.kernel == CpuKernel::Blocked {
+            return self.gains_blocked(mindist, cands);
         }
+        let mut out = vec![0f32; cands.len()];
+        scoped_chunks_mut(&mut out, threads, |_, start, slice| {
+            let part = self.gains_scalar(mindist, &cands[start..start + slice.len()]);
+            slice.copy_from_slice(&part);
+        });
         out
     }
 
@@ -151,8 +317,102 @@ impl EbcFunction {
     }
 }
 
-/// CPU-backed [`Oracle`]: single-threaded when `threads == 1`, else the
-/// MT baseline.
+/// 0 = auto (`default_threads()`), else at least 1 — the one resolution
+/// every kernel-seam constructor shares.
+fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        crate::util::threadpool::default_threads()
+    } else {
+        threads
+    }
+}
+
+/// The one blocked tile loop behind both the blocked eval (min-reduce)
+/// and gains (sum-reduce): over ground rows [r0, r1), compute the
+/// clamped squared-distance block of each [`gemm::tile_rows`]-high tile
+/// against the packed member matrix `y` and hand each row to
+/// `row_fn(global_row_index, distance_row)`.
+fn for_ground_tiles(
+    vm: &Matrix,
+    vs: &[f32],
+    y: &[f32],
+    vsq_y: &[f32],
+    r0: usize,
+    r1: usize,
+    mut row_fn: impl FnMut(usize, &[f32]),
+) {
+    let d = vm.cols();
+    let c = vsq_y.len();
+    let tile = gemm::tile_rows(c);
+    let mut dbuf = vec![0f32; tile * c];
+    let mut i0 = r0;
+    while i0 < r1 {
+        let i1 = (i0 + tile).min(r1);
+        let rows = i1 - i0;
+        gemm::sq_dist_block(
+            &vm.data()[i0 * d..i1 * d],
+            &vs[i0..i1],
+            y,
+            vsq_y,
+            d,
+            rows,
+            c,
+            &mut dbuf[..rows * c],
+        );
+        for ii in 0..rows {
+            row_fn(i0 + ii, &dbuf[ii * c..(ii + 1) * c]);
+        }
+        i0 = i1;
+    }
+}
+
+/// Run `f(start, end, partial)` over disjoint ground-row ranges on
+/// scoped threads, one zeroed f64 partial buffer (`plen` wide) per
+/// thread — no shared slots, no locks — then sum the partials in thread
+/// order (deterministic for a fixed thread count).
+fn ground_partials(
+    n: usize,
+    plen: usize,
+    threads: usize,
+    f: impl Fn(usize, usize, &mut [f64]) + Sync,
+) -> Vec<f64> {
+    if plen == 0 {
+        return vec![];
+    }
+    let t = threads.max(1).min(n.max(1));
+    if t == 1 {
+        let mut part = vec![0f64; plen];
+        if n > 0 {
+            f(0, n, &mut part);
+        }
+        return part;
+    }
+    let rows = n.div_ceil(t);
+    let mut partials = vec![0f64; t * plen];
+    std::thread::scope(|scope| {
+        for (ti, part) in partials.chunks_mut(plen).enumerate() {
+            let start = ti * rows;
+            let end = ((ti + 1) * rows).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end, part));
+        }
+    });
+    let mut out = vec![0f64; plen];
+    for chunk in partials.chunks(plen) {
+        for (o, p) in out.iter_mut().zip(chunk) {
+            *o += p;
+        }
+    }
+    out
+}
+
+/// CPU-backed [`Oracle`]. With the scalar kernel: single-threaded when
+/// `threads == 1`, else the candidate-/set-parallel MT baseline. With
+/// the blocked kernel: the Gram-matrix backend, ground-parallel over
+/// `threads` workers regardless of batch size.
 pub struct CpuOracle {
     f: EbcFunction,
     threads: usize,
@@ -165,6 +425,19 @@ impl CpuOracle {
 
     pub fn new_mt(v: Matrix, threads: usize) -> CpuOracle {
         CpuOracle { f: EbcFunction::new(v), threads: threads.max(1) }
+    }
+
+    /// The `CpuKernel` backend seam: one constructor the config layer,
+    /// the CLI, the shard workers and the coordinator all build through.
+    /// `threads == 0` resolves to `default_threads()`.
+    pub fn with_kernel(
+        v: Matrix,
+        kernel: CpuKernel,
+        precision: Precision,
+        threads: usize,
+    ) -> CpuOracle {
+        let threads = resolve_threads(threads);
+        CpuOracle { f: EbcFunction::with_kernel(v, kernel, precision, threads), threads }
     }
 
     pub fn function(&self) -> &EbcFunction {
@@ -183,20 +456,18 @@ impl Oracle for CpuOracle {
         self.f.vsq()
     }
     fn gains(&mut self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
-        if self.threads <= 1 {
-            self.f.gains(mindist, cands)
-        } else {
-            self.f.gains_mt(mindist, cands, self.threads)
+        match self.f.kernel() {
+            CpuKernel::Scalar if self.threads > 1 => self.f.gains_mt(mindist, cands, self.threads),
+            _ => self.f.gains(mindist, cands),
         }
     }
     fn dist_col(&mut self, j: usize) -> Vec<f32> {
         self.f.dist_col(j)
     }
     fn eval_sets(&mut self, sets: &[&[usize]]) -> Vec<f32> {
-        if self.threads <= 1 {
-            self.f.eval_sets_st(sets)
-        } else {
-            self.f.eval_sets_mt(sets, self.threads)
+        match self.f.kernel() {
+            CpuKernel::Scalar if self.threads > 1 => self.f.eval_sets_mt(sets, self.threads),
+            _ => self.f.eval_sets_st(sets),
         }
     }
     fn work_counter(&self) -> u64 {
@@ -222,10 +493,16 @@ mod tests {
         ])
     }
 
+    fn blocked(v: Matrix, threads: usize) -> EbcFunction {
+        EbcFunction::with_kernel(v, CpuKernel::Blocked, Precision::F32, threads)
+    }
+
     #[test]
     fn empty_set_value_zero() {
         let f = EbcFunction::new(toy());
         assert_eq!(f.eval(&[]), 0.0);
+        let b = blocked(toy(), 2);
+        assert_eq!(b.eval(&[]), 0.0);
     }
 
     #[test]
@@ -305,6 +582,16 @@ mod tests {
         let f = EbcFunction::new(v.clone());
         let ext = v.gather(&[2, 4]);
         assert!((f.eval_external(&ext) - f.eval(&[2, 4])).abs() < 1e-6);
+        let b = blocked(v.clone(), 2);
+        assert!((b.eval_external(&ext) - b.eval(&[2, 4])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_external_counts_work() {
+        let f = EbcFunction::new(toy());
+        let w0 = f.work_counter();
+        f.eval_external(&toy().gather(&[1, 3]));
+        assert_eq!(f.work_counter() - w0, 2 * 6);
     }
 
     #[test]
@@ -313,5 +600,72 @@ mod tests {
         let w0 = f.work_counter();
         f.eval(&[1, 2]);
         assert!(f.work_counter() > w0);
+    }
+
+    #[test]
+    fn blocked_matches_scalar_all_entry_points() {
+        let mut rng = Rng::new(7);
+        let v = Matrix::random_normal(45, 11, &mut rng); // d not divisible by 8
+        let scalar = EbcFunction::new(v.clone());
+        for threads in [1usize, 3] {
+            let b = blocked(v.clone(), threads);
+            // eval
+            let sets: [&[usize]; 3] = [&[], &[0], &[4, 19, 33]];
+            for set in sets {
+                let (s, g) = (scalar.eval(set), b.eval(set));
+                assert!((s - g).abs() <= 1e-4 * (1.0 + s.abs()), "eval {set:?}: {s} vs {g}");
+            }
+            // dist_col
+            let (ds, db) = (scalar.dist_col(9), b.dist_col(9));
+            for (i, (a, bb)) in ds.iter().zip(&db).enumerate() {
+                assert!((a - bb).abs() <= 1e-3 * (1.0 + a), "dist_col[{i}]: {a} vs {bb}");
+            }
+            // gains on a non-trivial mindist state
+            let mut mind = scalar.vsq().to_vec();
+            fold_mindist(&mut mind, &scalar.dist_col(7));
+            let cands: Vec<usize> = vec![0, 3, 12, 30, 44];
+            let (gs, gb) = (scalar.gains(&mind, &cands), b.gains(&mind, &cands));
+            for (i, (a, bb)) in gs.iter().zip(&gb).enumerate() {
+                assert!((a - bb).abs() <= 1e-4 * (1.0 + a.abs()), "gains[{i}]: {a} vs {bb}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_single_row_ground() {
+        let v = Matrix::from_rows(&[&[1.0, 2.0, 3.0]]);
+        let b = blocked(v.clone(), 4);
+        let s = EbcFunction::new(v);
+        assert!(b.gains(s.vsq(), &[]).is_empty());
+        assert!((b.eval(&[0]) - s.eval(&[0])).abs() < 1e-5);
+        assert!(b.dist_col(0)[0] < 1e-5);
+    }
+
+    #[test]
+    fn bf16_demotes_inputs_but_stays_close() {
+        let mut rng = Rng::new(9);
+        let v = Matrix::random_normal(30, 7, &mut rng);
+        let exact = EbcFunction::new(v.clone());
+        let lp = EbcFunction::with_kernel(v, CpuKernel::Blocked, Precision::Bf16, 2);
+        assert_eq!(lp.precision(), Precision::Bf16);
+        let set = [2usize, 11, 25];
+        let (a, b) = (exact.eval(&set), lp.eval(&set));
+        // documented looser bound: bf16 keeps 8 significand bits, so
+        // distance terms carry ~2^-8 relative input error
+        let vmax = exact.vsq().iter().cloned().fold(0f32, f32::max);
+        assert!((a - b).abs() <= 0.05 * (1.0 + a.abs()) + 0.02 * vmax, "{a} vs {b}");
+    }
+
+    #[test]
+    fn oracle_with_kernel_runs_greedy_path() {
+        let mut rng = Rng::new(12);
+        let v = Matrix::random_normal(25, 4, &mut rng);
+        let mut o = CpuOracle::with_kernel(v, CpuKernel::Blocked, Precision::F32, 2);
+        let mut mind = initial_mindist(&o);
+        let g = o.gains(&mind, &[0, 5, 9]);
+        assert_eq!(g.len(), 3);
+        fold_mindist(&mut mind, &o.dist_col(5));
+        let vals = o.eval_sets(&[&[5], &[]]);
+        assert!(vals[0] >= vals[1]);
     }
 }

@@ -1,13 +1,15 @@
 //! Submodular functions (paper §3–4): the Exemplar-based-clustering
 //! function with its CPU evaluators (Algorithm 1, single- and
-//! multi-threaded — the paper's baselines), the IVM comparator, and the
-//! [`Oracle`] abstraction every optimizer in [`crate::optim`] runs
-//! against. The accelerated implementation of the same trait lives in
-//! [`crate::engine`].
+//! multi-threaded — the paper's baselines, plus the blocked Gram-matrix
+//! backend selected via [`crate::linalg::CpuKernel`]), the IVM
+//! comparator, and the [`Oracle`] abstraction every optimizer in
+//! [`crate::optim`] runs against. The accelerated implementation of the
+//! same trait lives in [`crate::engine`].
 
 pub mod ebc;
 pub mod ivm;
 
+pub use crate::linalg::gemm::CpuKernel;
 pub use ebc::{CpuOracle, EbcFunction};
 
 /// Evaluation interface between datasets and optimizers.

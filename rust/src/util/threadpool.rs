@@ -3,7 +3,8 @@
 //!
 //! Two use sites:
 //! * the **MT CPU baseline** of the paper's §4.1 (set-parallel EBC) —
-//!   [`scoped_chunks`] mirrors the OpenMP `parallel for` over subsets;
+//!   [`scoped_chunks_mut`] mirrors the OpenMP `parallel for` over
+//!   subsets, writing disjoint output chunks;
 //! * the **coordinator**'s worker pool ([`ThreadPool`]) for background
 //!   ingestion and summary refresh jobs.
 
@@ -80,43 +81,44 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Parallel-for over chunked index ranges using scoped threads: calls
-/// `f(chunk_index, start, end)` with [start, end) partitioning [0, n).
-/// The MT-CPU-baseline analog of the paper's OpenMP parallelization.
-pub fn scoped_chunks<F>(n: usize, threads: usize, f: F)
+/// Parallel-for over a mutable output slice: `out` is split into one
+/// disjoint contiguous chunk per thread and `f(chunk_index, start,
+/// chunk)` writes its chunk directly — no per-slot locking, the borrow
+/// split is what proves disjointness.
+pub fn scoped_chunks_mut<T: Send, F>(out: &mut [T], threads: usize, f: F)
 where
-    F: Fn(usize, usize, usize) + Sync,
+    F: Fn(usize, usize, &mut [T]) + Sync,
 {
+    let n = out.len();
     if n == 0 {
         return;
     }
     let threads = threads.max(1).min(n);
     let chunk = n.div_ceil(threads);
+    if threads == 1 {
+        f(0, 0, out);
+        return;
+    }
     thread::scope(|scope| {
-        for t in 0..threads {
-            let start = t * chunk;
-            let end = ((t + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
-            scope.spawn(move || f(t, start, end));
+            scope.spawn(move || f(t, t * chunk, slice));
         }
     });
 }
 
 /// Map `f` over `items` in parallel, preserving order.
-pub fn par_map<T: Sync, R: Send>(items: &[T], threads: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+pub fn par_map<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
-    {
-        let slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
-        scoped_chunks(items.len(), threads, |_, start, end| {
-            for i in start..end {
-                let r = f(&items[i]);
-                **slots[i].lock().unwrap() = Some(r);
-            }
-        });
-    }
+    scoped_chunks_mut(&mut out, threads, |_, start, slice| {
+        for (off, slot) in slice.iter_mut().enumerate() {
+            *slot = Some(f(&items[start + off]));
+        }
+    });
     out.into_iter().map(|x| x.expect("filled")).collect()
 }
 
@@ -152,27 +154,22 @@ mod tests {
     }
 
     #[test]
-    fn scoped_chunks_cover_range() {
-        let seen = Mutex::new(vec![false; 103]);
-        scoped_chunks(103, 4, |_, start, end| {
-            for i in start..end {
-                let mut s = seen.lock().unwrap();
-                assert!(!s[i], "index {i} visited twice");
-                s[i] = true;
+    fn scoped_chunks_mut_fills_disjoint_chunks() {
+        let mut out = vec![0usize; 103];
+        scoped_chunks_mut(&mut out, 4, |_, start, slice| {
+            for (off, slot) in slice.iter_mut().enumerate() {
+                *slot = start + off + 1;
             }
         });
-        assert!(seen.lock().unwrap().iter().all(|&b| b));
-    }
-
-    #[test]
-    fn scoped_chunks_empty_and_single() {
-        scoped_chunks(0, 4, |_, _, _| panic!("should not run"));
-        let hits = AtomicU64::new(0);
-        scoped_chunks(1, 8, |_, s, e| {
-            assert_eq!((s, e), (0, 1));
-            hits.fetch_add(1, Ordering::SeqCst);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i + 1));
+        // empty + single-element edges
+        scoped_chunks_mut(&mut [] as &mut [usize], 4, |_, _, _| panic!("should not run"));
+        let mut one = [0usize];
+        scoped_chunks_mut(&mut one, 8, |t, start, slice| {
+            assert_eq!((t, start, slice.len()), (0, 0, 1));
+            slice[0] = 9;
         });
-        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        assert_eq!(one[0], 9);
     }
 
     #[test]

@@ -202,7 +202,7 @@ fn pallas_and_jnp_impls_agree() {
     let mk = |imp: KernelImpl| {
         Engine::new(
             runtime(),
-            EngineConfig { precision: Precision::F32, cpu_fallback: false, kernel: imp },
+            EngineConfig { precision: Precision::F32, cpu_fallback: false, kernel: imp, ..Default::default() },
         )
     };
     let mindist = f.vsq().to_vec();
