@@ -13,7 +13,6 @@
 use ebc::config::schema::ServiceConfig;
 use ebc::coordinator::{Coordinator, RouteResult, SimulatedFleet, FLEET_QUERY};
 use ebc::imm::{Part, ProcessState};
-use ebc::linalg::Matrix;
 use ebc::submodular::{CpuOracle, Oracle};
 
 fn main() -> anyhow::Result<()> {
@@ -38,7 +37,15 @@ fn main() -> anyhow::Result<()> {
     cfg.shard.shards = shards;
     cfg.shard.partitioner = "locality".into();
 
-    let factory = |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+    let factory = |m: ebc::linalg::SharedMatrix, spec: &ebc::engine::OracleSpec| {
+        // fleet queries arrive with the planner's per-oracle thread split
+        Box::new(CpuOracle::with_kernel_shared(
+            m,
+            ebc::linalg::CpuKernel::Scalar,
+            ebc::engine::Precision::F32,
+            spec.threads_or(1),
+        )) as Box<dyn Oracle>
+    };
     let mut coordinator = Coordinator::new(cfg, Box::new(factory));
 
     let mut fleet = SimulatedFleet::new(

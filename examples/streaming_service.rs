@@ -10,7 +10,6 @@ use ebc::config::schema::ServiceConfig;
 use ebc::coordinator::{snapshot, Coordinator, RouteResult, SimulatedFleet};
 use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
 use ebc::imm::{Part, ProcessState};
-use ebc::linalg::Matrix;
 use ebc::runtime::Runtime;
 use ebc::submodular::Oracle;
 
@@ -33,11 +32,21 @@ fn main() -> anyhow::Result<()> {
     cfg.coordinator.ingest_batch = 32;
 
     let rt = Runtime::discover()?;
-    let engine = Engine::new(rt, EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
-    let factory = move |m: Matrix| -> Box<dyn Oracle> {
-        Box::new(XlaOracle::new(engine.clone(), m))
+    let engine = Engine::new(rt.clone(), EngineConfig { precision: Precision::F32, cpu_fallback: true, ..Default::default() });
+    let factory = move |m: ebc::linalg::SharedMatrix, spec: &ebc::engine::OracleSpec| -> Box<dyn Oracle> {
+        let mut engine = engine.clone();
+        if let Some(plan) = &spec.plan {
+            engine.set_plan(std::sync::Arc::clone(plan));
+        }
+        Box::new(XlaOracle::from_shared(engine, m))
     };
-    let mut coordinator = Coordinator::new(cfg, Box::new(factory));
+    let planner: ebc::engine::PlanSource = {
+        let rt = rt.clone();
+        Box::new(move |req| {
+            std::sync::Arc::new(ebc::engine::ShardPlan::plan(Some(rt.manifest()), req))
+        })
+    };
+    let mut coordinator = Coordinator::new(cfg, Box::new(factory)).with_planner(planner);
 
     let mut fleet = SimulatedFleet::new(
         &[

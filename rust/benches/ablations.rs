@@ -165,7 +165,9 @@ fn ablation_drain() {
         cfg.coordinator.queue_capacity = 512;
         cfg.coordinator.ingest_batch = if adaptive { 16 } else { 16 };
         let factory: ebc::coordinator::OracleFactory =
-            Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+            Box::new(|m: ebc::linalg::SharedMatrix, _spec: &ebc::engine::OracleSpec| {
+                Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+            });
         let mut c = Coordinator::new(cfg, factory);
         let mut rng = Rng::new(7);
         let t0 = std::time::Instant::now();

@@ -9,8 +9,10 @@
 //! `EBC_BENCH_QUICK=1` shrinks the workload; `EBC_BENCH_FULL=1` runs
 //! the acceptance-sized N=20k, d=32, C=1024 sweep.
 
-use ebc::bench::kernel_scaling::{kernel_report, save_bench_json};
-use ebc::bench::{full_mode, kernel_scaling_sweep, quick_mode, KernelSweepConfig, Settings};
+use ebc::bench::kernel_scaling::{kernel_report, save_bench_json, split_report};
+use ebc::bench::{
+    full_mode, kernel_scaling_sweep, quick_mode, shard_split_sweep, KernelSweepConfig, Settings,
+};
 
 fn main() -> anyhow::Result<()> {
     ebc::util::logging::init();
@@ -33,8 +35,12 @@ fn main() -> anyhow::Result<()> {
     );
     rep.print();
 
+    let shard_counts: &[usize] = if quick_mode() { &[2] } else { &[2, 4] };
+    let splits = shard_split_sweep(&cfg, shard_counts, &Settings::default());
+    split_report("planned vs unplanned shard split (blocked f32 gains)", &splits).print();
+
     let json_path = std::path::Path::new("BENCH_kernel.json");
-    save_bench_json(json_path, &cfg, &points)?;
+    save_bench_json(json_path, &cfg, &points, &splits)?;
     match rep.save_csv("kernel_scaling") {
         Ok(path) => println!("\nwrote {} and {}", json_path.display(), path.display()),
         Err(e) => println!("\nwrote {} (csv export failed: {e})", json_path.display()),

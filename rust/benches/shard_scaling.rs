@@ -10,16 +10,28 @@
 //! shard-stage worker pool.
 
 use ebc::bench::report::fmt_secs;
-use ebc::bench::{quick_mode, shard_scaling_sweep, Reporter, ShardSweepConfig};
+use ebc::bench::{quick_mode, shard_scaling_sweep, Reporter, ShardSweepConfig, SweepPlanner};
+use ebc::engine::{OracleSpec, PlanRequest, ShardPlan};
 use ebc::imm::{generate_dataset_with, Part, ProcessState};
+use ebc::linalg::SharedMatrix;
 use ebc::submodular::{CpuOracle, Oracle};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     ebc::util::logging::init();
     let quick = quick_mode();
     let samples = if quick { 128 } else { 512 };
-    let data = generate_dataset_with(Part::Cover, ProcessState::Stable, 7, samples).cycles;
-    let factory = |m: ebc::linalg::Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+    let data: SharedMatrix =
+        Arc::new(generate_dataset_with(Part::Cover, ProcessState::Stable, 7, samples).cycles);
+    let factory = |m: SharedMatrix, spec: &OracleSpec| {
+        Box::new(CpuOracle::with_kernel_shared(
+            m,
+            ebc::linalg::CpuKernel::Scalar,
+            ebc::engine::Precision::F32,
+            spec.threads_or(1),
+        )) as Box<dyn Oracle>
+    };
+    let planner = |req: &PlanRequest| Arc::new(ShardPlan::plan(None, req));
 
     let algorithms: Vec<String> = if quick {
         vec!["greedy".into()]
@@ -35,15 +47,21 @@ fn main() -> anyhow::Result<()> {
             partitioner: partitioner.into(),
             threads: 0,
             seed: 0xEBC,
+            cores: 0,
         };
-        let pts = shard_scaling_sweep(&data, &factory, &cfg)?;
-        points.extend(pts.into_iter().map(|p| (partitioner, p)));
+        // planned (P x T <= cores split) vs the legacy unplanned fan-out
+        for planned in [false, true] {
+            let planner_opt: Option<SweepPlanner> =
+                if planned { Some(&planner) } else { None };
+            let pts = shard_scaling_sweep(&data, &factory, &cfg, planner_opt)?;
+            points.extend(pts.into_iter().map(|p| (partitioner, p)));
+        }
     }
 
     let mut rep = Reporter::new(
         "shard scaling (IMM cover/stable)",
         &[
-            "partitioner", "algorithm", "P", "shard_s", "merge_s", "total_s",
+            "partitioner", "algorithm", "P", "plan", "shard_s", "merge_s", "total_s",
             "speedup", "quality",
         ],
     );
@@ -52,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             partitioner.to_string(),
             p.algorithm.clone(),
             p.shards.to_string(),
+            p.plan.clone(),
             fmt_secs(p.shard_seconds),
             fmt_secs(p.merge_seconds),
             fmt_secs(p.total_seconds),

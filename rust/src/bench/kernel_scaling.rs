@@ -2,11 +2,15 @@
 //! `dist_col`, `eval`) across kernel backends (scalar baseline vs the
 //! blocked Gram-matrix backend of [`crate::linalg::gemm`]), precisions
 //! (f32 / software-bf16) and thread counts, against one synthetic
-//! workload. Shared by the `kernel-bench` CLI subcommand and the
-//! `kernel_scaling` bench target; results go to `BENCH_kernel.json` so
-//! the perf trajectory is measured, not asserted.
+//! workload — plus the planned-vs-unplanned sharded CPU split
+//! ([`shard_split_sweep`]): P concurrent shard workers under the
+//! planner's P×T ≤ cores budget vs today's oversubscribed
+//! `default_threads()`-per-worker default. Shared by the `kernel-bench`
+//! CLI subcommand and the `kernel_scaling` bench target; results go to
+//! `BENCH_kernel.json` so the perf trajectory is measured, not asserted.
 
 use crate::bench::{measure, Settings};
+use crate::engine::plan_cpu_split;
 use crate::linalg::gemm::CpuKernel;
 use crate::linalg::Matrix;
 use crate::runtime::artifact::Precision;
@@ -166,6 +170,120 @@ pub fn kernel_scaling_sweep(cfg: &KernelSweepConfig, settings: &Settings) -> Vec
     out
 }
 
+/// One planned-vs-unplanned shard-split measurement: P concurrent
+/// shard workers, each running blocked-f32 `gains` over its own shard,
+/// once with the planner's split (P·T ≤ cores, [`plan_cpu_split`]) and
+/// once with today's unplanned default (every worker ground-parallel
+/// over all cores — P-fold oversubscription).
+#[derive(Debug, Clone)]
+pub struct SplitPoint {
+    pub shards: usize,
+    pub cores: usize,
+    /// Concurrent workers under the plan (min(P, cores)) — shards
+    /// beyond the cap run in waves, exactly like the summarizer's
+    /// bounded worker pool.
+    pub planned_workers: usize,
+    /// Kernel threads per worker under the plan (cores / workers).
+    pub planned_threads: usize,
+    /// Kernel threads per worker without a plan (`default_threads()`).
+    pub unplanned_threads: usize,
+    pub planned_seconds: f64,
+    pub unplanned_seconds: f64,
+    /// unplanned / planned — the headline planned-vs-unplanned speedup.
+    pub planned_speedup: f64,
+}
+
+/// Measure the sharded CPU split: for each P, run P concurrent
+/// blocked-f32 `gains` workers over disjoint contiguous shards of the
+/// (n, d) ground set, planned (P·T ≤ cores) vs unplanned (P × cores).
+pub fn shard_split_sweep(
+    cfg: &KernelSweepConfig,
+    shard_counts: &[usize],
+    settings: &Settings,
+) -> Vec<SplitPoint> {
+    let mut rng = Rng::new(cfg.seed);
+    let data = Matrix::random_normal(cfg.n, cfg.d, &mut rng);
+    let cores = crate::util::threadpool::default_threads();
+    let mut out = Vec::new();
+    for &p in shard_counts {
+        let p = p.max(1).min(cfg.n.max(1));
+        let rows = cfg.n.div_ceil(p);
+        let shards: Vec<Vec<usize>> = (0..p)
+            .map(|s| (s * rows..((s + 1) * rows).min(cfg.n)).collect())
+            .filter(|part: &Vec<usize>| !part.is_empty())
+            .collect();
+        // one measured pass per split mode; oracles built outside the
+        // timer. `max_workers` caps concurrency like the summarizer's
+        // worker pool — shards beyond the cap run in waves.
+        let run = |threads_per: usize, max_workers: usize| -> f64 {
+            let workers: Vec<(EbcFunction, Vec<usize>)> = shards
+                .iter()
+                .map(|part| {
+                    let f = EbcFunction::with_kernel(
+                        data.gather(part),
+                        CpuKernel::Blocked,
+                        Precision::F32,
+                        threads_per,
+                    );
+                    let cands: Vec<usize> = (0..cfg.c.min(part.len())).collect();
+                    (f, cands)
+                })
+                .collect();
+            measure(settings, || {
+                for wave in workers.chunks(max_workers.max(1)) {
+                    std::thread::scope(|scope| {
+                        for (f, cands) in wave {
+                            scope.spawn(move || {
+                                std::hint::black_box(f.gains(f.vsq(), cands));
+                            });
+                        }
+                    });
+                }
+            })
+            .mean
+        };
+        let (planned_workers, planned_threads) = plan_cpu_split(p, cores);
+        let planned_seconds = run(planned_threads, planned_workers);
+        // legacy unplanned fan-out: all P at once, each cores-wide
+        let unplanned_seconds = run(cores, p);
+        out.push(SplitPoint {
+            shards: p,
+            cores,
+            planned_workers,
+            planned_threads,
+            unplanned_threads: cores,
+            planned_seconds,
+            unplanned_seconds,
+            planned_speedup: if planned_seconds > 0.0 {
+                unplanned_seconds / planned_seconds
+            } else {
+                0.0
+            },
+        });
+    }
+    out
+}
+
+/// Render the shard-split comparison as a console table.
+pub fn split_report(title: &str, points: &[SplitPoint]) -> crate::bench::Reporter {
+    let mut rep = crate::bench::Reporter::new(
+        title,
+        &["P", "cores", "planned", "unplanned", "planned_s", "unplanned_s", "speedup"],
+    );
+    for p in points {
+        rep.row(&[
+            p.shards.to_string(),
+            p.cores.to_string(),
+            format!("{}w x {}t", p.planned_workers, p.planned_threads),
+            format!("{}w x {}t", p.shards, p.unplanned_threads),
+            crate::bench::report::fmt_secs(p.planned_seconds),
+            crate::bench::report::fmt_secs(p.unplanned_seconds),
+            format!("{:.2}x", p.planned_speedup),
+        ]);
+    }
+    rep
+}
+
 /// Render the sweep as the shared op × kernel × threads console table —
 /// one source of truth for the `kernel-bench` subcommand and the
 /// `kernel_scaling` bench target.
@@ -189,8 +307,13 @@ pub fn kernel_report(title: &str, points: &[KernelPoint]) -> crate::bench::Repor
     rep
 }
 
-/// Render the sweep as the `BENCH_kernel.json` document.
-pub fn bench_json(cfg: &KernelSweepConfig, points: &[KernelPoint]) -> Json {
+/// Render the sweep as the `BENCH_kernel.json` document. `splits` adds
+/// the planned-vs-unplanned sharded CPU-split comparison.
+pub fn bench_json(
+    cfg: &KernelSweepConfig,
+    points: &[KernelPoint],
+    splits: &[SplitPoint],
+) -> Json {
     let workload = Json::Obj(BTreeMap::from([
         ("n".to_string(), Json::Num(cfg.n as f64)),
         ("d".to_string(), Json::Num(cfg.d as f64)),
@@ -215,9 +338,28 @@ pub fn bench_json(cfg: &KernelSweepConfig, points: &[KernelPoint]) -> Json {
             ]))
         })
         .collect();
+    let sp = splits
+        .iter()
+        .map(|s| {
+            Json::Obj(BTreeMap::from([
+                ("shards".to_string(), Json::Num(s.shards as f64)),
+                ("cores".to_string(), Json::Num(s.cores as f64)),
+                ("planned_workers".to_string(), Json::Num(s.planned_workers as f64)),
+                ("planned_threads".to_string(), Json::Num(s.planned_threads as f64)),
+                (
+                    "unplanned_threads".to_string(),
+                    Json::Num(s.unplanned_threads as f64),
+                ),
+                ("planned_seconds".to_string(), Json::Num(s.planned_seconds)),
+                ("unplanned_seconds".to_string(), Json::Num(s.unplanned_seconds)),
+                ("planned_speedup".to_string(), Json::Num(s.planned_speedup)),
+            ]))
+        })
+        .collect();
     Json::Obj(BTreeMap::from([
         ("workload".to_string(), workload),
         ("points".to_string(), Json::Arr(pts)),
+        ("shard_split".to_string(), Json::Arr(sp)),
     ]))
 }
 
@@ -226,8 +368,9 @@ pub fn save_bench_json(
     path: &std::path::Path,
     cfg: &KernelSweepConfig,
     points: &[KernelPoint],
+    splits: &[SplitPoint],
 ) -> std::io::Result<()> {
-    std::fs::write(path, bench_json(cfg, points).dump())
+    std::fs::write(path, bench_json(cfg, points, splits).dump())
 }
 
 #[cfg(test)]
@@ -277,13 +420,31 @@ mod tests {
     fn json_document_shape() {
         let cfg = tiny();
         let pts = kernel_scaling_sweep(&cfg, &fast());
-        let doc = bench_json(&cfg, &pts);
+        let splits = shard_split_sweep(&cfg, &[2], &fast());
+        let doc = bench_json(&cfg, &pts, &splits);
         assert_eq!(doc.get("workload").and_then(|w| w.get("n")).and_then(Json::as_usize), Some(60));
         let arr = doc.get("points").and_then(Json::as_arr).unwrap();
         assert_eq!(arr.len(), pts.len());
         assert!(arr[0].get("op").and_then(Json::as_str).is_some());
+        let sp = doc.get("shard_split").and_then(Json::as_arr).unwrap();
+        assert_eq!(sp.len(), 1);
+        assert!(sp[0].get("planned_speedup").and_then(Json::as_f64).is_some());
         // round-trips through the in-tree parser
         let re = Json::parse(&doc.dump()).unwrap();
         assert_eq!(re, doc);
+    }
+
+    #[test]
+    fn shard_split_sweep_respects_core_budget() {
+        let cfg = tiny();
+        let splits = shard_split_sweep(&cfg, &[1, 2, 4], &fast());
+        assert_eq!(splits.len(), 3);
+        for s in &splits {
+            assert!(s.planned_workers >= 1 && s.planned_threads >= 1);
+            // the planned split never oversubscribes the core budget
+            assert!(s.planned_workers * s.planned_threads <= s.cores, "{s:?}");
+            assert!(s.planned_workers <= s.shards, "{s:?}");
+            assert!(s.planned_seconds > 0.0 && s.unplanned_seconds > 0.0, "{s:?}");
+        }
     }
 }

@@ -9,9 +9,13 @@ pub mod report;
 pub mod shard_scaling;
 pub mod workload;
 
-pub use kernel_scaling::{kernel_scaling_sweep, KernelPoint, KernelSweepConfig};
+pub use kernel_scaling::{
+    kernel_scaling_sweep, shard_split_sweep, KernelPoint, KernelSweepConfig, SplitPoint,
+};
 pub use report::Reporter;
-pub use shard_scaling::{shard_scaling_sweep, ShardScalingPoint, ShardSweepConfig};
+pub use shard_scaling::{
+    shard_scaling_sweep, ShardScalingPoint, ShardSweepConfig, SweepPlanner,
+};
 pub use workload::{fig2_workload, EvalProblem};
 
 use crate::util::stats::Summary;

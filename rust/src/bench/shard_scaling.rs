@@ -1,12 +1,20 @@
 //! Scaling harness for the shard subsystem: sweep shard counts ×
 //! optimizers over one dataset and account wall-clock + quality against
-//! the single-node run. Shared by the `shard-bench` CLI subcommand and
-//! the `shard_scaling` bench target.
+//! the single-node run — optionally under a fleet [`ShardPlan`]
+//! (planned worker × kernel-thread split + shared engine buckets).
+//! Shared by the `shard-bench` CLI subcommand and the `shard_scaling`
+//! bench target.
 
-use crate::linalg::Matrix;
+use crate::engine::{PlanRequest, ShardPlan};
+use crate::linalg::SharedMatrix;
 use crate::optim::build_optimizer;
 use crate::shard::{build_partitioner, ShardOracleFactory, ShardedSummarizer};
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Plan-builder seam for the sweep: the XLA backend's variant consults
+/// the artifact manifest, the CPU one plans the thread split only.
+pub type SweepPlanner<'a> = &'a (dyn Fn(&PlanRequest) -> Arc<ShardPlan> + Sync);
 
 /// One (optimizer, shard-count) measurement.
 #[derive(Debug, Clone)]
@@ -27,6 +35,8 @@ pub struct ShardScalingPoint {
     pub quality_ratio: f64,
     /// single_seconds / total_seconds.
     pub speedup: f64,
+    /// Planned worker × thread split label (`-` for unplanned runs).
+    pub plan: String,
 }
 
 /// Sweep settings.
@@ -36,9 +46,12 @@ pub struct ShardSweepConfig {
     pub shard_counts: Vec<usize>,
     pub algorithms: Vec<String>,
     pub partitioner: String,
-    /// Worker threads for the per-shard stage (0 = auto).
+    /// Worker threads for the per-shard stage (0 = auto); ignored for
+    /// planned runs (the plan's split wins).
     pub threads: usize,
     pub seed: u64,
+    /// Core budget handed to the planner (0 = auto).
+    pub cores: usize,
 }
 
 impl Default for ShardSweepConfig {
@@ -50,17 +63,20 @@ impl Default for ShardSweepConfig {
             partitioner: "round_robin".into(),
             threads: 0,
             seed: 0xEBC,
+            cores: 0,
         }
     }
 }
 
 /// Run the sweep. The baseline per algorithm is taken from the P = 1
 /// point's reference run, so every row's `speedup` compares against the
-/// same single-node measurement.
+/// same single-node measurement. With a `planner`, every P gets a fleet
+/// plan (reported per row via `plan`).
 pub fn shard_scaling_sweep(
-    data: &Matrix,
+    data: &SharedMatrix,
     factory: &ShardOracleFactory,
     cfg: &ShardSweepConfig,
+    planner: Option<SweepPlanner>,
 ) -> Result<Vec<ShardScalingPoint>> {
     let partitioner = build_partitioner(&cfg.partitioner, cfg.seed)
         .ok_or_else(|| anyhow!("unknown partitioner '{}'", cfg.partitioner))?;
@@ -72,6 +88,17 @@ pub fn shard_scaling_sweep(
         for &p in &cfg.shard_counts {
             let mut s = ShardedSummarizer::new(partitioner.as_ref(), optimizer.as_ref(), p);
             s.threads = cfg.threads;
+            let plan_label = match planner {
+                Some(build) => {
+                    let mut req = PlanRequest::new(data.rows(), data.cols(), p, cfg.k);
+                    req.cores = cfg.cores;
+                    let plan = build(&req);
+                    let label = plan.split_label();
+                    s.plan = Some(plan);
+                    label
+                }
+                None => "-".to_string(),
+            };
             let res = if single.is_none() {
                 let r = s.summarize_with_baseline(data, factory, cfg.k);
                 let b = r.baseline.as_ref().expect("baseline requested");
@@ -98,6 +125,7 @@ pub fn shard_scaling_sweep(
                     res.merged.f_final as f64 / f_single as f64
                 },
                 speedup: if total > 0.0 { single_seconds / total } else { 0.0 },
+                plan: plan_label,
             });
         }
     }
@@ -107,25 +135,31 @@ pub fn shard_scaling_sweep(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::OracleSpec;
+    use crate::linalg::Matrix;
     use crate::submodular::{CpuOracle, Oracle};
     use crate::util::rng::Rng;
+
+    fn factory() -> impl Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Sync {
+        |m: SharedMatrix, _spec: &OracleSpec| Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+    }
 
     #[test]
     fn sweep_produces_one_point_per_cell() {
         let mut rng = Rng::new(1);
-        let data = Matrix::random_normal(80, 6, &mut rng);
-        let factory = |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+        let data = Arc::new(Matrix::random_normal(80, 6, &mut rng));
         let cfg = ShardSweepConfig {
             k: 4,
             shard_counts: vec![1, 2],
             algorithms: vec!["greedy".into(), "stochastic_greedy".into()],
             ..Default::default()
         };
-        let points = shard_scaling_sweep(&data, &factory, &cfg).unwrap();
+        let points = shard_scaling_sweep(&data, &factory(), &cfg, None).unwrap();
         assert_eq!(points.len(), 4);
         for pt in &points {
             assert!(pt.total_seconds > 0.0);
             assert!(pt.quality_ratio > 0.5, "{pt:?}");
+            assert_eq!(pt.plan, "-");
         }
         // P = 1 greedy is exactly the single-node run
         let p1 = &points[0];
@@ -134,19 +168,39 @@ mod tests {
     }
 
     #[test]
+    fn planned_sweep_matches_unplanned_selection() {
+        let mut rng = Rng::new(5);
+        let data = Arc::new(Matrix::random_normal(60, 5, &mut rng));
+        let cfg = ShardSweepConfig {
+            k: 4,
+            shard_counts: vec![1, 3],
+            cores: 4,
+            ..Default::default()
+        };
+        let unplanned = shard_scaling_sweep(&data, &factory(), &cfg, None).unwrap();
+        let planner = |req: &PlanRequest| Arc::new(ShardPlan::plan(None, req));
+        let planned = shard_scaling_sweep(&data, &factory(), &cfg, Some(&planner)).unwrap();
+        assert_eq!(planned.len(), unplanned.len());
+        for (a, b) in planned.iter().zip(&unplanned) {
+            assert_eq!(a.f_merged.to_bits(), b.f_merged.to_bits(), "P={}", a.shards);
+            assert_ne!(a.plan, "-");
+        }
+        assert_eq!(planned[1].plan, "3w x 1t");
+    }
+
+    #[test]
     fn sweep_rejects_unknown_names() {
         let mut rng = Rng::new(2);
-        let data = Matrix::random_normal(10, 3, &mut rng);
-        let factory = |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+        let data = Arc::new(Matrix::random_normal(10, 3, &mut rng));
         let bad_alg = ShardSweepConfig {
             algorithms: vec!["magic".into()],
             ..Default::default()
         };
-        assert!(shard_scaling_sweep(&data, &factory, &bad_alg).is_err());
+        assert!(shard_scaling_sweep(&data, &factory(), &bad_alg, None).is_err());
         let bad_part = ShardSweepConfig {
             partitioner: "psychic".into(),
             ..Default::default()
         };
-        assert!(shard_scaling_sweep(&data, &factory, &bad_part).is_err());
+        assert!(shard_scaling_sweep(&data, &factory(), &bad_part, None).is_err());
     }
 }

@@ -67,6 +67,12 @@ pub struct ShardSection {
     pub per_shard_k: usize,
     /// Seed for hash mixing / the locality projection.
     pub seed: u64,
+    /// Pre-plan fleet queries (one engine bucket shape + a
+    /// P-worker × T-thread CPU split per window shape —
+    /// [`crate::engine::plan`]). `false` = legacy per-shard planning.
+    pub plan: bool,
+    /// Core budget for planned fleet runs (0 = auto).
+    pub cores: usize,
 }
 
 impl Default for ShardSection {
@@ -77,6 +83,8 @@ impl Default for ShardSection {
             threads: 0,
             per_shard_k: 0,
             seed: 0xEBC,
+            plan: true,
+            cores: 0,
         }
     }
 }
@@ -181,6 +189,8 @@ impl ServiceConfig {
                 threads: pos("shard.threads", 0)?,
                 per_shard_k: pos("shard.per_shard_k", 0)?,
                 seed: pos("shard.seed", 0xEBC)? as u64,
+                plan: doc.bool("shard.plan", true),
+                cores: pos("shard.cores", 0)?,
             },
             machines,
         })
@@ -221,6 +231,8 @@ partitioner = "locality"
 threads = 2
 per_shard_k = 12
 seed = 99
+plan = false
+cores = 6
 "#,
         )
         .unwrap();
@@ -238,6 +250,8 @@ seed = 99
         assert_eq!(c.shard.threads, 2);
         assert_eq!(c.shard.per_shard_k, 12);
         assert_eq!(c.shard.seed, 99);
+        assert!(!c.shard.plan);
+        assert_eq!(c.shard.cores, 6);
         assert_eq!(c.machines, vec!["cover-line", "plate-line"]);
     }
 
@@ -252,6 +266,8 @@ seed = 99
         assert_eq!(c.shard.shards, 2);
         assert_eq!(c.shard.partitioner, "round_robin");
         assert_eq!(c.shard.threads, 0);
+        assert!(c.shard.plan);
+        assert_eq!(c.shard.cores, 0);
     }
 
     #[test]

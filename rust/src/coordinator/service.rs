@@ -6,19 +6,24 @@ use crate::coordinator::batcher::{adaptive_drain, group_by_machine};
 use crate::coordinator::machine::{MachineState, Summary};
 use crate::coordinator::router::{FleetSummary, RouteResult, Router, FLEET_QUERY};
 use crate::coordinator::stream::{CycleRecord, StreamSource};
-use crate::linalg::Matrix;
+use crate::engine::{KernelImpl, OracleSpec, PlanRequest, PlanSource, ShardPlan};
+use crate::linalg::{Matrix, SharedMatrix};
 use crate::optim::{build_optimizer, Optimizer};
 use crate::shard::{build_partitioner, ShardedSummarizer};
 use crate::submodular::Oracle;
 use crate::util::timer::Profile;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Produces an oracle for a window matrix — the seam between the
 /// coordinator and the evaluation backend (CPU baseline or XLA engine).
 /// `Send + Sync` so fleet-level queries can build shard oracles from
-/// pool workers concurrently (see [`crate::shard`]).
-pub type OracleFactory = Box<dyn Fn(Matrix) -> Box<dyn Oracle> + Send + Sync>;
+/// pool workers concurrently (see [`crate::shard`]). The window travels
+/// as a [`SharedMatrix`] (fleet merge + baseline oracles alias one
+/// allocation) and the [`OracleSpec`] carries the fleet-plan handle and
+/// per-oracle thread width of planned runs.
+pub type OracleFactory = Box<dyn Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Send + Sync>;
 
 /// Service-level counters.
 #[derive(Debug, Clone, Default)]
@@ -44,6 +49,13 @@ pub struct Coordinator {
     queue: BoundedQueue<CycleRecord>,
     machines: BTreeMap<String, MachineState>,
     oracle_factory: OracleFactory,
+    /// Backend-aware plan builder (the XLA variant consults the artifact
+    /// manifest); `None` plans the CPU split only.
+    planner: Option<PlanSource>,
+    /// One fleet plan per (window rows, dim, shards) shape — repeated
+    /// fleet queries over a stable fleet reuse the plan (and therefore
+    /// the engine's loaded executables) instead of re-planning.
+    plan_cache: BTreeMap<(usize, usize, usize), Arc<ShardPlan>>,
     pub metrics: CoordinatorMetrics,
     pub profile: Profile,
     version: u64,
@@ -65,10 +77,50 @@ impl Coordinator {
             queue,
             machines,
             oracle_factory,
+            planner: None,
+            plan_cache: BTreeMap::new(),
             metrics: CoordinatorMetrics::default(),
             profile: Profile::new(),
             version: 0,
         }
+    }
+
+    /// Attach a backend-aware plan builder for fleet queries (built by
+    /// the launcher next to the oracle factory, so the coordinator never
+    /// sees manifests or runtimes directly).
+    pub fn with_planner(mut self, planner: PlanSource) -> Coordinator {
+        self.planner = Some(planner);
+        self
+    }
+
+    /// Get (building + caching on first use) the fleet plan for a
+    /// pooled-window shape. `None` when `[shard] plan = false`.
+    fn fleet_plan(&mut self, n: usize, d: usize) -> Option<Arc<ShardPlan>> {
+        if !self.cfg.shard.plan || n == 0 {
+            return None;
+        }
+        let key = (n, d, self.cfg.shard.shards);
+        if let Some(p) = self.plan_cache.get(&key) {
+            return Some(Arc::clone(p));
+        }
+        let req = PlanRequest {
+            n,
+            d,
+            shards: self.cfg.shard.shards,
+            k: self.cfg.summary.k,
+            batch: self.cfg.engine.batch,
+            precision: self.cfg.engine.precision,
+            kernel: KernelImpl::Jnp,
+            cpu_kernel: self.cfg.engine.cpu_kernel,
+            cores: self.cfg.shard.cores,
+        };
+        let plan = match &self.planner {
+            Some(build) => build(&req),
+            None => Arc::new(ShardPlan::plan(None, &req)),
+        };
+        log::info!("fleet plan: {}", plan.describe());
+        self.plan_cache.insert(key, Arc::clone(&plan));
+        Some(plan)
     }
 
     fn build_optimizer(&self) -> Box<dyn Optimizer> {
@@ -141,7 +193,7 @@ impl Coordinator {
         let k = self.cfg.summary.k.min(window.rows());
         let optimizer = self.build_optimizer();
         let t0 = Instant::now();
-        let mut oracle = (self.oracle_factory)(window);
+        let mut oracle = (self.oracle_factory)(Arc::new(window), &OracleSpec::unplanned());
         let res = self
             .profile
             .scope("coord.refresh", || optimizer.run(oracle.as_mut(), k));
@@ -221,7 +273,8 @@ impl Coordinator {
             rows.extend(seqs.into_iter().map(|s| (name.to_string(), s)));
             machines += 1;
         }
-        let fleet_matrix = Matrix::from_vec(total_rows, d, data);
+        let fleet_matrix: SharedMatrix = Arc::new(Matrix::from_vec(total_rows, d, data));
+        let plan = self.fleet_plan(fleet_matrix.rows(), d);
 
         let sc = &self.cfg.shard;
         let partitioner = build_partitioner(&sc.partitioner, sc.seed)
@@ -232,8 +285,10 @@ impl Coordinator {
         sharded.threads = sc.threads;
         sharded.per_shard_k = sc.per_shard_k;
         sharded.merge_batch = self.cfg.engine.batch;
+        sharded.plan = plan;
         let k = self.cfg.summary.k.min(fleet_matrix.rows());
-        let factory = |m: Matrix| (self.oracle_factory)(m);
+        let factory =
+            |m: SharedMatrix, spec: &OracleSpec| (self.oracle_factory)(m, spec);
         let res = self
             .profile
             .scope("coord.fleet", || sharded.summarize(&fleet_matrix, &factory, k));
@@ -304,7 +359,9 @@ mod tests {
     use crate::submodular::CpuOracle;
 
     fn cpu_factory() -> OracleFactory {
-        Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>)
+        Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
+            Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+        })
     }
 
     fn cfg(k: usize, refresh_every: usize, window: usize) -> ServiceConfig {
@@ -437,6 +494,66 @@ mod tests {
         c.query(FLEET_QUERY);
         assert_eq!(c.metrics.fleet_queries, 2);
         assert_eq!(c.metrics.shard_runs, 4);
+    }
+
+    #[test]
+    fn fleet_queries_reuse_one_plan_per_window_shape() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut cfg = cfg(3, 1000, 100);
+        cfg.shard.shards = 2;
+        let planned_oracles = Arc::new(AtomicUsize::new(0));
+        let po = Arc::clone(&planned_oracles);
+        let factory: OracleFactory = Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
+            if spec.plan.is_some() {
+                po.fetch_add(1, Ordering::SeqCst);
+            }
+            Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+        });
+        let plans_built = Arc::new(AtomicUsize::new(0));
+        let pb = Arc::clone(&plans_built);
+        let mut c = Coordinator::new(cfg, factory).with_planner(Box::new(move |req| {
+            pb.fetch_add(1, Ordering::SeqCst);
+            Arc::new(ShardPlan::plan(None, req))
+        }));
+        for m in ["m1", "m2"] {
+            for s in 0..10u64 {
+                c.offer(rec(m, s, s as f32));
+            }
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        assert!(matches!(c.query(FLEET_QUERY), RouteResult::Fleet(_)));
+        assert!(matches!(c.query(FLEET_QUERY), RouteResult::Fleet(_)));
+        // same (n, d, P) window shape twice: the plan is built once...
+        assert_eq!(plans_built.load(Ordering::SeqCst), 1);
+        // ...and every fleet oracle (2 shards + merge, per query) got it
+        assert_eq!(planned_oracles.load(Ordering::SeqCst), 2 * 3);
+    }
+
+    #[test]
+    fn fleet_plan_disabled_keeps_unplanned_specs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut cfg = cfg(2, 1000, 100);
+        cfg.shard.shards = 2;
+        cfg.shard.plan = false;
+        let planned_oracles = Arc::new(AtomicUsize::new(0));
+        let po = Arc::clone(&planned_oracles);
+        let factory: OracleFactory = Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
+            if spec.plan.is_some() || spec.threads.is_some() {
+                po.fetch_add(1, Ordering::SeqCst);
+            }
+            Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+        });
+        let mut c = Coordinator::new(cfg, factory);
+        for s in 0..8u64 {
+            c.offer(rec("m1", s, s as f32));
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        assert!(matches!(c.query(FLEET_QUERY), RouteResult::Fleet(_)));
+        assert_eq!(planned_oracles.load(Ordering::SeqCst), 0);
     }
 
     #[test]

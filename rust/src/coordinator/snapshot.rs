@@ -124,7 +124,8 @@ mod tests {
     use super::*;
     use crate::config::schema::ServiceConfig;
     use crate::coordinator::stream::CycleRecord;
-    use crate::linalg::Matrix;
+    use crate::engine::OracleSpec;
+    use crate::linalg::SharedMatrix;
     use crate::submodular::{CpuOracle, Oracle};
 
     #[test]
@@ -132,7 +133,9 @@ mod tests {
         let mut cfg = ServiceConfig::default();
         cfg.summary.k = 2;
         cfg.summary.refresh_every = 2;
-        let factory = Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+        let factory = Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
+            Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+        });
         let mut c = Coordinator::new(cfg, factory);
         for s in 0..6u64 {
             c.offer(CycleRecord {
@@ -158,7 +161,9 @@ mod tests {
         let mut cfg = ServiceConfig::default();
         cfg.summary.k = 2;
         cfg.summary.refresh_every = 2;
-        let factory = Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+        let factory = Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
+            Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+        });
         let mut c = Coordinator::new(cfg, factory);
         for s in 0..8u64 {
             c.offer(CycleRecord {

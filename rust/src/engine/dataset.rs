@@ -5,16 +5,20 @@
 //! GPU's global memory on algorithm initialization."* — here: the padded
 //! V / vsq / vmask trio is uploaded once per bucket shape and cached;
 //! every subsequent call only transfers the per-call payload (mindist,
-//! candidates or packed sets).
+//! candidates or packed sets). The host copy is a [`SharedMatrix`], so
+//! oracles built from the same dataset (merge stage, baseline, fleet
+//! queries) alias one allocation, and the CPU-fallback evaluator built
+//! from it shares the ground matrix too.
 
 use crate::engine::tiling::{mask, pad_matrix, pad_vec};
 use crate::engine::EngineConfig;
-use crate::linalg::{sq_norms, Matrix};
+use crate::linalg::{sq_norms, Matrix, SharedMatrix};
 use crate::runtime::xla;
 use crate::runtime::Runtime;
-use crate::submodular::EbcFunction;
+use crate::submodular::{f_from_mindist, EbcFunction};
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Ground-set buffers for one (n_pad, d_pad) bucket.
 pub struct GroundBuffers {
@@ -28,12 +32,13 @@ pub struct GroundBuffers {
 /// A dataset registered with the engine: host copy + per-bucket device
 /// buffer cache.
 pub struct DeviceDataset {
-    v: Matrix,
+    v: SharedMatrix,
     vsq: Vec<f32>,
     buffers: HashMap<(usize, usize), GroundBuffers>,
     /// Lazily-built CPU evaluator for the engine's fallback path —
-    /// cached so repeated fallback calls don't redo the O(n·d) clone /
-    /// norms / bf16-demotion setup.
+    /// cached so repeated fallback calls don't redo the O(n·d) norms /
+    /// bf16-demotion setup (the ground matrix itself is aliased, never
+    /// copied).
     fallback: Option<EbcFunction>,
     pub upload_bytes: u64,
 }
@@ -42,6 +47,11 @@ pub const BIG: f32 = 1e30;
 
 impl DeviceDataset {
     pub fn new(v: Matrix) -> DeviceDataset {
+        Self::from_shared(Arc::new(v))
+    }
+
+    /// Build over a shared ground handle (no matrix copy).
+    pub fn from_shared(v: SharedMatrix) -> DeviceDataset {
         let vsq = sq_norms(v.data(), v.cols());
         DeviceDataset { v, vsq, buffers: HashMap::new(), fallback: None, upload_bytes: 0 }
     }
@@ -91,14 +101,55 @@ impl DeviceDataset {
     /// engine's configured `cpu_kernel`/`cpu_threads`/precision.
     pub fn cpu_fallback(&mut self, cfg: &EngineConfig) -> &EbcFunction {
         if self.fallback.is_none() {
-            let ground = self.v.clone();
-            self.fallback = Some(EbcFunction::with_kernel(
-                ground,
+            self.fallback = Some(EbcFunction::with_kernel_shared(
+                Arc::clone(&self.v),
                 cfg.cpu_kernel,
                 cfg.precision,
                 cfg.cpu_threads,
             ));
         }
         self.fallback.as_ref().expect("just built")
+    }
+
+    /// CPU-fallback marginal gains for external candidate rows — the
+    /// host mirror of the engine's `gains` graph, used when no bucket
+    /// fits and `cpu_fallback` is enabled.
+    pub fn fallback_gains(
+        &mut self,
+        cfg: &EngineConfig,
+        mindist: &[f32],
+        cands: &Matrix,
+    ) -> Vec<f32> {
+        self.cpu_fallback(cfg).gains_external(mindist, cands)
+    }
+
+    /// CPU-fallback state update for an external exemplar vector `s`:
+    /// returns (new mindist, new f) exactly like the engine's `update`
+    /// graph — `mindist = None` reproduces the +BIG dist-column case.
+    pub fn fallback_update(
+        &mut self,
+        cfg: &EngineConfig,
+        mindist: Option<&[f32]>,
+        s: &[f32],
+    ) -> (Vec<f32>, f32) {
+        let dcol = self.cpu_fallback(cfg).dist_col_external(s);
+        let nm: Vec<f32> = match mindist {
+            Some(md) => md.iter().zip(&dcol).map(|(&m, &d)| m.min(d)).collect(),
+            None => dcol,
+        };
+        let f = f_from_mindist(&self.vsq, &nm);
+        (nm, f)
+    }
+
+    /// CPU-fallback multi-set evaluation (paper Algorithm 2 on the host).
+    pub fn fallback_eval_sets(&mut self, cfg: &EngineConfig, sets: &[&[usize]]) -> Vec<f32> {
+        self.cpu_fallback(cfg).eval_sets_st(sets)
+    }
+
+    /// Distance work the CPU fallback evaluator has performed (0 if the
+    /// fallback was never built) — folded into the oracle work counter
+    /// so degraded calls still account their evaluations.
+    pub fn cpu_fallback_work(&self) -> u64 {
+        self.fallback.as_ref().map(|f| f.work_counter()).unwrap_or(0)
     }
 }

@@ -7,19 +7,28 @@
 //!   shipped in a single transfer each (paper §4.2 Memory Layout);
 //! * all shapes padded + masked to fixed buckets ([`tiling`]);
 //! * precision selectable per engine: f32 or bf16 (the paper's FP32/FP16
-//!   axis, DESIGN.md §4).
+//!   axis, DESIGN.md §4);
+//! * optionally bucket selection pinned by a fleet [`plan::ShardPlan`],
+//!   so all P shard oracles of a sharded run execute the same loaded
+//!   executables instead of re-picking buckets per shard.
 //!
 //! [`XlaOracle`] adapts the engine to the [`crate::submodular::Oracle`]
 //! trait so every optimizer in [`crate::optim`] runs on it unchanged.
+//! When the engine cannot serve a call (no bucket fits, runtime error),
+//! it degrades to the dataset's cached CPU-fallback evaluator instead of
+//! panicking — a dead PJRT backend must not kill shard pool workers.
 
 pub mod dataset;
+pub mod plan;
 pub mod tiling;
 
 pub use crate::linalg::gemm::CpuKernel;
 pub use crate::runtime::artifact::{KernelImpl, Precision};
 pub use dataset::DeviceDataset;
+pub use plan::{plan_cpu_split, OracleSpec, PlanRequest, PlanSource, ShardPlan};
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SharedMatrix};
+use crate::runtime::artifact::ArtifactEntry;
 use crate::runtime::Runtime;
 use crate::submodular::Oracle;
 use crate::util::timer::Profile;
@@ -65,13 +74,23 @@ impl Default for EngineConfig {
 pub struct Engine {
     rt: Runtime,
     cfg: EngineConfig,
+    /// Fleet plan: when set, bucket selection is pinned to the plan's
+    /// pre-picked entries (falling back to per-call manifest picks only
+    /// for requests the plan does not cover).
+    plan: Option<Arc<ShardPlan>>,
     pub profile: Arc<Profile>,
     work: Arc<AtomicU64>,
 }
 
 impl Engine {
     pub fn new(rt: Runtime, cfg: EngineConfig) -> Engine {
-        Engine { rt, cfg, profile: Arc::new(Profile::new()), work: Arc::new(AtomicU64::new(0)) }
+        Engine {
+            rt,
+            cfg,
+            plan: None,
+            profile: Arc::new(Profile::new()),
+            work: Arc::new(AtomicU64::new(0)),
+        }
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -80,6 +99,21 @@ impl Engine {
 
     pub fn precision(&self) -> Precision {
         self.cfg.precision
+    }
+
+    /// Pin bucket selection to a fleet plan (see [`plan::ShardPlan`]).
+    pub fn set_plan(&mut self, plan: Arc<ShardPlan>) {
+        self.plan = Some(plan);
+    }
+
+    pub fn plan(&self) -> Option<&ShardPlan> {
+        self.plan.as_deref()
+    }
+
+    /// Override the CPU-fallback thread width (the planner's per-oracle
+    /// split — see [`plan_cpu_split`]).
+    pub fn set_cpu_threads(&mut self, threads: usize) {
+        self.cfg.cpu_threads = threads;
     }
 
     /// Batched greedy marginal gains for external candidate vectors.
@@ -95,21 +129,46 @@ impl Engine {
         let (n, d, c) = (ds.n(), ds.d(), cands.rows());
         assert_eq!(mindist.len(), n);
         assert_eq!(cands.cols(), d);
-        let entry = match self
-            .rt
-            .manifest()
-            .pick_gains(n, d, c, self.cfg.precision, self.cfg.kernel)
-        {
-            Some(e) => e.clone(),
+        let planned: Option<ArtifactEntry> = self
+            .plan
+            .as_ref()
+            .and_then(|p| p.gains_entry(n, d, c, self.cfg.precision))
+            .cloned();
+        let entry = match planned.or_else(|| {
+            self.rt
+                .manifest()
+                .pick_gains(n, d, c, self.cfg.precision, self.cfg.kernel)
+                .cloned()
+        }) {
+            Some(e) => e,
             None => {
                 // candidate batch exceeds every C bucket: chunk it over
-                // the largest-C bucket that fits (n, d)
+                // the widest-C bucket that fits (n, d) — the planned one
+                // first, so a planned run never loads extra executables
                 let largest = self
-                    .rt
-                    .manifest()
-                    .pick_gains_largest_c(n, d, self.cfg.precision, self.cfg.kernel)
-                    .ok_or_else(|| anyhow!("no gains bucket fits (n={n}, d={d})"))?
-                    .clone();
+                    .plan
+                    .as_ref()
+                    .and_then(|p| p.gains_chunk_entry(n, d, self.cfg.precision))
+                    .cloned()
+                    .or_else(|| {
+                        self.rt
+                            .manifest()
+                            .pick_gains_largest_c(n, d, self.cfg.precision, self.cfg.kernel)
+                            .cloned()
+                    });
+                // a 0-wide C bucket is malformed and cannot chunk
+                let largest = largest.filter(|e| e.c > 0);
+                let Some(largest) = largest else {
+                    if self.cfg.cpu_fallback {
+                        log::warn!(
+                            "gains: no bucket fits (n={n}, d={d}, c={c}); CPU fallback \
+                             ({} kernel)",
+                            self.cfg.cpu_kernel.name()
+                        );
+                        return Ok(ds.fallback_gains(&self.cfg, mindist, cands));
+                    }
+                    return Err(anyhow!("no gains bucket fits (n={n}, d={d}, c={c})"));
+                };
                 let mut out = Vec::with_capacity(c);
                 let idx: Vec<usize> = (0..c).collect();
                 for chunk in idx.chunks(largest.c) {
@@ -162,12 +221,24 @@ impl Engine {
     ) -> Result<(Vec<f32>, f32)> {
         let (n, d) = (ds.n(), ds.d());
         assert_eq!(s.len(), d);
-        let entry = self
-            .rt
-            .manifest()
-            .pick_update(n, d, self.cfg.precision)
-            .ok_or_else(|| anyhow!("no update bucket fits (n={n}, d={d})"))?
-            .clone();
+        let planned: Option<ArtifactEntry> = self
+            .plan
+            .as_ref()
+            .and_then(|p| p.update_entry(n, d, self.cfg.precision))
+            .cloned();
+        let entry = match planned
+            .or_else(|| self.rt.manifest().pick_update(n, d, self.cfg.precision).cloned())
+        {
+            Some(e) => e,
+            None if self.cfg.cpu_fallback => {
+                log::warn!(
+                    "update: no bucket fits (n={n}, d={d}); CPU fallback ({} kernel)",
+                    self.cfg.cpu_kernel.name()
+                );
+                return Ok(ds.fallback_update(&self.cfg, mindist, s));
+            }
+            None => return Err(anyhow!("no update bucket fits (n={n}, d={d})")),
+        };
         let graph = self.rt.load(&entry)?;
         let gb = ds.buffers(&self.rt, entry.n, entry.d)?;
 
@@ -196,19 +267,25 @@ impl Engine {
         let (n, d) = (ds.n(), ds.d());
         let l = sets.len();
         let kmax = sets.iter().map(|s| s.len()).max().unwrap_or(0).max(1);
-        let entry = match self
-            .rt
-            .manifest()
-            .pick_eval_multi(l, kmax, n, d, self.cfg.precision, self.cfg.kernel)
-        {
-            Some(e) => e.clone(),
+        let planned: Option<ArtifactEntry> = self
+            .plan
+            .as_ref()
+            .and_then(|p| p.eval_multi_entry(l, kmax, n, d, self.cfg.precision))
+            .cloned();
+        let entry = match planned.or_else(|| {
+            self.rt
+                .manifest()
+                .pick_eval_multi(l, kmax, n, d, self.cfg.precision, self.cfg.kernel)
+                .cloned()
+        }) {
+            Some(e) => e,
             None if self.cfg.cpu_fallback => {
                 log::warn!(
                     "eval_sets: no bucket fits (l={l}, k={kmax}, n={n}, d={d}); CPU fallback \
                      ({} kernel)",
                     self.cfg.cpu_kernel.name()
                 );
-                return Ok(ds.cpu_fallback(&self.cfg).eval_sets_st(sets));
+                return Ok(ds.fallback_eval_sets(&self.cfg, sets));
             }
             None => return Err(anyhow!("no eval_multi bucket fits (l={l}, k={kmax})")),
         };
@@ -235,14 +312,25 @@ impl Engine {
 
 /// [`Oracle`] adapter: optimizers drive the engine exactly like the CPU
 /// baselines. Holds the dataset + a CPU mirror for index gathering.
+///
+/// Engine errors degrade this oracle to the dataset's cached CPU
+/// fallback (same kernel/precision config) instead of panicking — a
+/// panicking oracle would kill a shard pool worker mid–fleet query.
 pub struct XlaOracle {
     engine: Engine,
     ds: DeviceDataset,
+    /// Whether the degradation warning has fired for this oracle.
+    degraded: bool,
 }
 
 impl XlaOracle {
     pub fn new(engine: Engine, v: Matrix) -> XlaOracle {
-        XlaOracle { ds: DeviceDataset::new(v), engine }
+        Self::from_shared(engine, Arc::new(v))
+    }
+
+    /// Build over a shared ground handle (no matrix copy).
+    pub fn from_shared(engine: Engine, v: SharedMatrix) -> XlaOracle {
+        XlaOracle { ds: DeviceDataset::from_shared(v), engine, degraded: false }
     }
 
     pub fn engine(&self) -> &Engine {
@@ -251,6 +339,18 @@ impl XlaOracle {
 
     pub fn dataset(&mut self) -> &mut DeviceDataset {
         &mut self.ds
+    }
+
+    fn note_degraded(&mut self, op: &str, e: &anyhow::Error) {
+        if self.degraded {
+            log::debug!("engine {op} failed ({e:#}); serving from the CPU fallback");
+        } else {
+            self.degraded = true;
+            log::warn!(
+                "engine {op} failed ({e:#}); degrading this oracle to the CPU {} fallback",
+                self.engine.cfg.cpu_kernel.name()
+            );
+        }
     }
 }
 
@@ -267,25 +367,37 @@ impl Oracle for XlaOracle {
 
     fn gains(&mut self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
         let cmat = self.ds.ground().gather(cands);
-        self.engine
-            .gains(&mut self.ds, mindist, &cmat)
-            .expect("engine gains")
+        match self.engine.gains(&mut self.ds, mindist, &cmat) {
+            Ok(g) => g,
+            Err(e) => {
+                self.note_degraded("gains", &e);
+                self.ds.cpu_fallback(&self.engine.cfg).gains(mindist, cands)
+            }
+        }
     }
 
     fn dist_col(&mut self, j: usize) -> Vec<f32> {
         let s = self.ds.ground().row(j).to_vec();
-        self.engine
-            .dist_col_vec(&mut self.ds, &s)
-            .expect("engine dist_col")
+        match self.engine.dist_col_vec(&mut self.ds, &s) {
+            Ok(col) => col,
+            Err(e) => {
+                self.note_degraded("dist_col", &e);
+                self.ds.cpu_fallback(&self.engine.cfg).dist_col(j)
+            }
+        }
     }
 
     fn eval_sets(&mut self, sets: &[&[usize]]) -> Vec<f32> {
-        self.engine
-            .eval_sets(&mut self.ds, sets)
-            .expect("engine eval_sets")
+        match self.engine.eval_sets(&mut self.ds, sets) {
+            Ok(v) => v,
+            Err(e) => {
+                self.note_degraded("eval_sets", &e);
+                self.ds.cpu_fallback(&self.engine.cfg).eval_sets_st(sets)
+            }
+        }
     }
 
     fn work_counter(&self) -> u64 {
-        self.engine.work_counter()
+        self.engine.work_counter() + self.ds.cpu_fallback_work()
     }
 }

@@ -1,0 +1,371 @@
+//! Fleet-wide execution planning for the sharded pipeline.
+//!
+//! The paper's memory discipline (§4.2) uploads the ground set once per
+//! padded bucket and reuses compiled work-matrix graphs. A sharded run
+//! used to defeat this: each of the P shard oracles re-picked its own
+//! padding bucket from the manifest and compiled/loaded executables
+//! independently, even though shards are near-equal sized — and on the
+//! CPU side every shard worker span its own `default_threads()`-wide
+//! ground-parallel kernel, oversubscribing the machine P-fold.
+//!
+//! [`ShardPlan`] fixes both axes up front, once per (n, d, P) window
+//! shape:
+//!
+//! * **buckets** — one gains/update/eval_multi bucket each, picked for
+//!   the *maximum* shape any stage requests (the merge stage's full
+//!   (n, d) dominates every shard), so all P shard oracles and the
+//!   merge oracle execute the same compiled graphs
+//!   ([`crate::runtime::Manifest::pick_for_max_shape`]);
+//! * **CPU split** — P shard workers × T ground-parallel kernel threads
+//!   with P·T ≤ cores ([`plan_cpu_split`]), instead of P independent
+//!   `default_threads()`-wide oracles.
+//!
+//! The plan travels through the oracle-factory seam as part of an
+//! [`OracleSpec`]: the factory hands it to engine oracles
+//! ([`crate::engine::Engine::set_plan`]) and resolves the per-oracle
+//! thread width from it, so the summarizer stays backend-agnostic.
+
+use crate::linalg::gemm::CpuKernel;
+use crate::runtime::artifact::{KernelImpl, PlanBuckets, Precision};
+use crate::runtime::Manifest;
+use crate::util::threadpool::default_threads;
+use std::sync::Arc;
+
+/// Inputs to fleet planning: the window shape, the shard count and the
+/// knobs that select executables.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    /// Full ground-set rows (the merge stage's — and therefore the
+    /// maximum — evaluation shape).
+    pub n: usize,
+    /// Feature dimensionality.
+    pub d: usize,
+    /// Shard count P.
+    pub shards: usize,
+    /// Summary cardinality k (sizes the eval_multi bucket).
+    pub k: usize,
+    /// Candidate-batch cap (sizes the gains bucket's C axis).
+    pub batch: usize,
+    pub precision: Precision,
+    pub kernel: KernelImpl,
+    /// CPU kernel backend the fallback/CPU oracles run on.
+    pub cpu_kernel: CpuKernel,
+    /// Core budget for the whole fleet run (0 = `default_threads()`).
+    pub cores: usize,
+}
+
+impl PlanRequest {
+    pub fn new(n: usize, d: usize, shards: usize, k: usize) -> PlanRequest {
+        PlanRequest {
+            n,
+            d,
+            shards,
+            k,
+            batch: 1024,
+            precision: Precision::F32,
+            kernel: KernelImpl::Jnp,
+            cpu_kernel: CpuKernel::Blocked,
+            cores: 0,
+        }
+    }
+}
+
+/// Split a core budget over P shard workers: `(workers, threads)` with
+/// `workers · threads <= cores`, `workers = min(P, cores)` and each
+/// worker's ground-parallel kernel `threads = cores / workers` wide.
+pub fn plan_cpu_split(shards: usize, cores: usize) -> (usize, usize) {
+    let cores = cores.max(1);
+    let workers = shards.max(1).min(cores);
+    (workers, (cores / workers).max(1))
+}
+
+/// The fleet-wide execution plan: one bucket shape + one CPU split,
+/// shared by every shard oracle and the merge stage of a sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub n: usize,
+    pub d: usize,
+    pub shards: usize,
+    pub k: usize,
+    pub precision: Precision,
+    pub kernel: KernelImpl,
+    pub cpu_kernel: CpuKernel,
+    /// Resolved core budget.
+    pub cores: usize,
+    /// Concurrent shard workers in stage 1 (≤ cores).
+    pub shard_workers: usize,
+    /// Ground-parallel kernel threads per shard oracle
+    /// (shard_workers · oracle_threads ≤ cores).
+    pub oracle_threads: usize,
+    /// Kernel threads for the merge/baseline oracle (runs alone, so it
+    /// gets the whole budget).
+    pub merge_threads: usize,
+    /// Pre-picked manifest buckets (empty when planning for a CPU-only
+    /// backend — no manifest to pick from).
+    pub buckets: PlanBuckets,
+}
+
+impl ShardPlan {
+    /// Build the plan. `manifest` is the engine's artifact index when
+    /// the run targets the XLA backend; `None` plans the CPU split only.
+    pub fn plan(manifest: Option<&Manifest>, req: &PlanRequest) -> ShardPlan {
+        let cores = if req.cores == 0 { default_threads() } else { req.cores };
+        let (shard_workers, oracle_threads) = plan_cpu_split(req.shards, cores);
+        // the merge stage evaluates against the full ground set, and the
+        // largest shard holds at most n rows — one (n, d)-fitting shape
+        // therefore serves every stage
+        let c = req.batch.min(req.n).max(1);
+        let buckets = manifest
+            .map(|m| {
+                m.pick_for_max_shape(req.n, req.d, c, 1, req.k.max(1), req.precision, req.kernel)
+            })
+            .unwrap_or_default();
+        ShardPlan {
+            n: req.n,
+            d: req.d,
+            shards: req.shards.max(1),
+            k: req.k,
+            precision: req.precision,
+            kernel: req.kernel,
+            cpu_kernel: req.cpu_kernel,
+            cores,
+            shard_workers,
+            oracle_threads,
+            merge_threads: cores,
+            buckets,
+        }
+    }
+
+    /// Planned gains bucket, if it fits a (n, d, c) request at `p`.
+    pub fn gains_entry(
+        &self,
+        n: usize,
+        d: usize,
+        c: usize,
+        p: Precision,
+    ) -> Option<&crate::runtime::ArtifactEntry> {
+        self.buckets
+            .gains
+            .as_ref()
+            .filter(|e| e.precision == p && e.n >= n && e.d >= d && e.c >= c)
+    }
+
+    /// Planned gains bucket for chunking oversized candidate batches
+    /// (must fit (n, d); the engine slices the batch to its C).
+    pub fn gains_chunk_entry(
+        &self,
+        n: usize,
+        d: usize,
+        p: Precision,
+    ) -> Option<&crate::runtime::ArtifactEntry> {
+        self.buckets
+            .gains
+            .as_ref()
+            .filter(|e| e.precision == p && e.n >= n && e.d >= d)
+    }
+
+    /// Planned update bucket, if it fits (n, d) at `p`.
+    pub fn update_entry(
+        &self,
+        n: usize,
+        d: usize,
+        p: Precision,
+    ) -> Option<&crate::runtime::ArtifactEntry> {
+        self.buckets
+            .update
+            .as_ref()
+            .filter(|e| e.precision == p && e.n >= n && e.d >= d)
+    }
+
+    /// Planned eval_multi bucket, if it fits (l, k, n, d) at `p`.
+    pub fn eval_multi_entry(
+        &self,
+        l: usize,
+        k: usize,
+        n: usize,
+        d: usize,
+        p: Precision,
+    ) -> Option<&crate::runtime::ArtifactEntry> {
+        self.buckets
+            .eval_multi
+            .as_ref()
+            .filter(|e| e.precision == p && e.l >= l && e.k >= k && e.n >= n && e.d >= d)
+    }
+
+    /// One-line human description for `shard-bench --plan` and the
+    /// coordinator log.
+    pub fn describe(&self) -> String {
+        let bucket = |e: &Option<crate::runtime::ArtifactEntry>| -> String {
+            match e {
+                Some(e) => format!("{} ({}x{})", e.name, e.n, e.d),
+                None => "-".to_string(),
+            }
+        };
+        format!(
+            "window {}x{} P={} k={}: split {}w x {}t (merge {}t, cores {}), \
+             buckets gains={} update={} eval_multi={}",
+            self.n,
+            self.d,
+            self.shards,
+            self.k,
+            self.shard_workers,
+            self.oracle_threads,
+            self.merge_threads,
+            self.cores,
+            bucket(&self.buckets.gains),
+            bucket(&self.buckets.update),
+            bucket(&self.buckets.eval_multi),
+        )
+    }
+
+    /// Compact split label for bench tables, e.g. `4w x 2t`.
+    pub fn split_label(&self) -> String {
+        format!("{}w x {}t", self.shard_workers, self.oracle_threads)
+    }
+}
+
+/// Per-oracle build context handed through the oracle-factory seam: the
+/// factory captures the backend (runtime / kernel / precision), the
+/// spec carries what varies per oracle inside one fleet run.
+#[derive(Clone, Default)]
+pub struct OracleSpec {
+    /// Kernel-thread override for this oracle (None = the factory's
+    /// configured default — legacy unplanned behavior).
+    pub threads: Option<usize>,
+    /// Fleet plan: engine oracles adopt its pre-picked buckets so all
+    /// shards execute the same loaded graphs.
+    pub plan: Option<Arc<ShardPlan>>,
+}
+
+impl OracleSpec {
+    /// Legacy behavior: factory defaults, no plan.
+    pub fn unplanned() -> OracleSpec {
+        OracleSpec::default()
+    }
+
+    /// Spec for a stage-1 shard oracle of a planned run.
+    pub fn for_shard(plan: &Arc<ShardPlan>) -> OracleSpec {
+        OracleSpec { threads: Some(plan.oracle_threads), plan: Some(Arc::clone(plan)) }
+    }
+
+    /// Spec for the merge/baseline oracle of a planned run (full-budget
+    /// threads; same shared buckets).
+    pub fn for_merge(plan: &Arc<ShardPlan>) -> OracleSpec {
+        OracleSpec { threads: Some(plan.merge_threads), plan: Some(Arc::clone(plan)) }
+    }
+
+    /// Resolve the thread width against a factory default.
+    pub fn threads_or(&self, default: usize) -> usize {
+        self.threads.unwrap_or(default)
+    }
+}
+
+/// Boxed plan-builder seam: maps a window-shape request to a plan. The
+/// launcher builds one per backend (the XLA variant captures the
+/// runtime's manifest) and hands it to the coordinator, which caches
+/// one plan per (n, d, P) window shape.
+pub type PlanSource = Box<dyn Fn(&PlanRequest) -> Arc<ShardPlan> + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "gains_small", "file": "a.hlo.txt", "kind": "gains",
+         "dtype": "f32", "n": 256, "d": 64, "c": 128, "l": 0, "k": 0,
+         "inputs": ["v","vsq","vmask","mindist","c","cmask"]},
+        {"name": "gains_big", "file": "b.hlo.txt", "kind": "gains",
+         "dtype": "f32", "n": 4096, "d": 128, "c": 1024, "l": 0, "k": 0,
+         "inputs": ["v","vsq","vmask","mindist","c","cmask"]},
+        {"name": "update_big", "file": "c.hlo.txt", "kind": "update",
+         "dtype": "f32", "n": 4096, "d": 128, "c": 0, "l": 0, "k": 0,
+         "inputs": ["v","vsq","vmask","mindist","s"]},
+        {"name": "eval_big", "file": "d.hlo.txt", "kind": "eval_multi",
+         "dtype": "f32", "n": 4096, "d": 128, "c": 0, "l": 64, "k": 16,
+         "inputs": ["v","vsq","vmask","s_flat","smask_flat"]}
+      ]
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(MANIFEST, PathBuf::from("/tmp/plan")).unwrap()
+    }
+
+    #[test]
+    fn cpu_split_never_oversubscribes() {
+        for shards in [1usize, 2, 3, 7, 8, 100] {
+            for cores in [1usize, 2, 4, 7, 8, 64] {
+                let (w, t) = plan_cpu_split(shards, cores);
+                assert!(w >= 1 && t >= 1, "P={shards} cores={cores}");
+                assert!(w * t <= cores, "P={shards} cores={cores}: {w}x{t}");
+                assert_eq!(w, shards.min(cores), "P={shards} cores={cores}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_picks_one_bucket_covering_merge_and_shards() {
+        let m = manifest();
+        let mut req = PlanRequest::new(3000, 100, 8, 10);
+        req.cores = 8;
+        let plan = ShardPlan::plan(Some(&m), &req);
+        // the merge stage (full n) and every shard (n_shard <= n) fit
+        let g = plan.buckets.gains.as_ref().expect("gains bucket");
+        assert_eq!(g.name, "gains_big");
+        assert!(g.n >= req.n && g.d >= req.d);
+        assert_eq!(plan.buckets.update.as_ref().unwrap().name, "update_big");
+        assert_eq!(plan.buckets.eval_multi.as_ref().unwrap().name, "eval_big");
+        // CPU split: 8 workers x 1 thread on an 8-core budget
+        assert_eq!((plan.shard_workers, plan.oracle_threads), (8, 1));
+        assert_eq!(plan.merge_threads, 8);
+        // entry lookups honor fit + precision
+        assert!(plan.gains_entry(3000, 100, 512, Precision::F32).is_some());
+        assert!(plan.gains_entry(3000, 100, 512, Precision::Bf16).is_none());
+        assert!(plan.gains_entry(5000, 100, 512, Precision::F32).is_none());
+        assert!(plan.update_entry(4096, 128, Precision::F32).is_some());
+        assert!(plan.eval_multi_entry(64, 16, 3000, 100, Precision::F32).is_some());
+        assert!(plan.eval_multi_entry(65, 16, 3000, 100, Precision::F32).is_none());
+    }
+
+    #[test]
+    fn plan_without_manifest_is_cpu_split_only() {
+        let mut req = PlanRequest::new(1000, 16, 3, 5);
+        req.cores = 12;
+        let plan = ShardPlan::plan(None, &req);
+        assert!(plan.buckets.gains.is_none());
+        assert!(plan.buckets.update.is_none());
+        assert_eq!((plan.shard_workers, plan.oracle_threads), (3, 4));
+        assert_eq!(plan.merge_threads, 12);
+        assert!(plan.describe().contains("3w x 4t"));
+    }
+
+    #[test]
+    fn oracle_spec_carries_split() {
+        let mut req = PlanRequest::new(100, 4, 2, 3);
+        req.cores = 4;
+        let plan = Arc::new(ShardPlan::plan(None, &req));
+        let shard = OracleSpec::for_shard(&plan);
+        assert_eq!(shard.threads, Some(2));
+        assert!(shard.plan.is_some());
+        let merge = OracleSpec::for_merge(&plan);
+        assert_eq!(merge.threads, Some(4));
+        assert_eq!(OracleSpec::unplanned().threads_or(7), 7);
+        assert_eq!(shard.threads_or(7), 2);
+    }
+
+    #[test]
+    fn oversized_request_falls_back_to_largest_c_for_chunking() {
+        let m = manifest();
+        // batch wider than any C bucket: plan still pins the widest
+        // (n, d)-fitting bucket so the engine chunks over it
+        let mut req = PlanRequest::new(3000, 100, 4, 10);
+        req.batch = 100_000;
+        let plan = ShardPlan::plan(Some(&m), &req);
+        let g = plan.buckets.gains.as_ref().expect("chunk bucket");
+        assert_eq!(g.name, "gains_big");
+        assert!(plan.gains_entry(3000, 100, 100_000, Precision::F32).is_none());
+        assert!(plan.gains_chunk_entry(3000, 100, Precision::F32).is_some());
+    }
+}

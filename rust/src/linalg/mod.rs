@@ -19,3 +19,9 @@ pub mod matrix;
 pub use distance::{sq_euclidean, sq_euclidean_accum, sq_norms};
 pub use gemm::{CpuKernel, CPU_KERNELS};
 pub use matrix::Matrix;
+
+/// Shared, immutable ground-set handle: oracles built from the same
+/// dataset (merge stage, baseline run, cached CPU fallback) clone the
+/// `Arc`, not the matrix — the host-side mirror of the paper's
+/// "upload the ground set once" discipline.
+pub type SharedMatrix = std::sync::Arc<Matrix>;

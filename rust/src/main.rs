@@ -12,12 +12,15 @@
 use anyhow::Result;
 use ebc::bench::report::fmt_secs;
 use ebc::bench::{
-    kernel_scaling_sweep, shard_scaling_sweep, KernelSweepConfig, Reporter, ShardSweepConfig,
+    kernel_scaling_sweep, shard_scaling_sweep, shard_split_sweep, KernelSweepConfig, Reporter,
+    ShardSweepConfig,
 };
 use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
 use ebc::config::schema::ServiceConfig;
 use ebc::coordinator::{Coordinator, OracleFactory, SimulatedFleet, FLEET_QUERY};
-use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::engine::{
+    Engine, EngineConfig, OracleSpec, PlanRequest, PlanSource, Precision, ShardPlan, XlaOracle,
+};
 use ebc::linalg::CpuKernel;
 use ebc::gpumodel::{
     predict_seconds, speedup, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
@@ -26,12 +29,13 @@ use ebc::imm::casestudy::{
     fig4_table, run_table2, table2_text, validate_expectations,
 };
 use ebc::imm::{Part, ProcessState};
-use ebc::linalg::Matrix;
+use ebc::linalg::{Matrix, SharedMatrix};
 use ebc::optim::{Greedy, Optimizer};
 use ebc::runtime::Runtime;
 use ebc::submodular::{CpuOracle, Oracle};
 use ebc::util::logging;
 use ebc::util::rng::Rng;
+use std::sync::Arc;
 
 fn app() -> AppSpec {
     AppSpec {
@@ -101,6 +105,8 @@ fn app() -> AppSpec {
                         "per-shard oracle threads (0 = auto; 1 = shard workers own it)",
                         "1",
                     ),
+                    flag("plan", "pre-plan bucket shape + P x T core split per shard count"),
+                    opt("cores", "core budget for --plan (0 = auto)", "0"),
                 ],
             },
             CommandSpec {
@@ -111,6 +117,7 @@ fn app() -> AppSpec {
                     opt("d", "dimensionality", "32"),
                     opt("c", "candidate-batch width", "1024"),
                     opt("threads", "comma-separated thread counts", "1,2,4,8"),
+                    opt("shards", "shard counts for the planned-vs-unplanned split", "2,4"),
                     opt("seed", "rng seed", "7"),
                     opt("out", "output JSON path", "BENCH_kernel.json"),
                 ],
@@ -156,21 +163,58 @@ fn main() {
     }
 }
 
-fn oracle_factory(
+/// One evaluation backend: the oracle factory plus (for the XLA path)
+/// the runtime handle the fleet planner consults for bucket picks.
+struct Backend {
+    factory: OracleFactory,
+    runtime: Option<Runtime>,
+    precision: Precision,
+    cpu_kernel: CpuKernel,
+}
+
+impl Backend {
+    /// Build the plan-builder seam for this backend: the XLA variant
+    /// pins engine buckets from the manifest, the CPU one plans the
+    /// worker × kernel-thread split only.
+    fn planner(&self) -> PlanSource {
+        let precision = self.precision;
+        let cpu_kernel = self.cpu_kernel;
+        let rt = self.runtime.clone();
+        Box::new(move |req: &PlanRequest| {
+            let mut req = req.clone();
+            req.precision = precision;
+            req.cpu_kernel = cpu_kernel;
+            Arc::new(ShardPlan::plan(rt.as_ref().map(|r| r.manifest()), &req))
+        })
+    }
+
+    /// Adapter for the case-study seam (plain owned matrices, no plan).
+    fn simple(&self) -> impl Fn(Matrix) -> Box<dyn Oracle> + '_ {
+        |m: Matrix| (self.factory)(Arc::new(m), &OracleSpec::unplanned())
+    }
+}
+
+fn oracle_backend(
     backend: &str,
     precision: Precision,
     kernel: CpuKernel,
     threads: usize,
-) -> Result<OracleFactory> {
-    match backend {
-        "cpu" => Ok(Box::new(move |m: Matrix| {
-            // threads == 0 resolves to default_threads() in with_kernel
-            Box::new(CpuOracle::with_kernel(m, kernel, precision, threads)) as Box<dyn Oracle>
-        })),
+) -> Result<Backend> {
+    let (factory, runtime): (OracleFactory, Option<Runtime>) = match backend {
+        "cpu" => (
+            Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
+                // threads == 0 resolves to default_threads() in with_kernel;
+                // a planned spec overrides with its per-oracle split
+                let t = spec.threads_or(threads);
+                Box::new(CpuOracle::with_kernel_shared(m, kernel, precision, t))
+                    as Box<dyn Oracle>
+            }),
+            None,
+        ),
         "xla" => {
             let rt = Runtime::discover()?;
             let engine = Engine::new(
-                rt,
+                rt.clone(),
                 EngineConfig {
                     precision,
                     cpu_fallback: true,
@@ -179,12 +223,23 @@ fn oracle_factory(
                     ..Default::default()
                 },
             );
-            Ok(Box::new(move |m: Matrix| {
-                Box::new(XlaOracle::new(engine.clone(), m)) as Box<dyn Oracle>
-            }))
+            (
+                Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
+                    let mut engine = engine.clone();
+                    if let Some(plan) = &spec.plan {
+                        engine.set_plan(Arc::clone(plan));
+                    }
+                    if let Some(t) = spec.threads {
+                        engine.set_cpu_threads(t);
+                    }
+                    Box::new(XlaOracle::from_shared(engine, m)) as Box<dyn Oracle>
+                }),
+                Some(rt),
+            )
         }
         other => anyhow::bail!("unknown backend '{other}' (cpu | xla)"),
-    }
+    };
+    Ok(Backend { factory, runtime, precision, cpu_kernel: kernel })
 }
 
 fn parse_precision(s: &str) -> Result<Precision> {
@@ -233,7 +288,7 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
     let seed = m.usize("seed")? as u64;
     let precision = parse_precision(m.str("precision")?)?;
     let kernel = CpuKernel::parse(m.str("kernel")?)?;
-    let factory = oracle_factory(m.str("backend")?, precision, kernel, m.usize("oracle-threads")?)?;
+    let be = oracle_backend(m.str("backend")?, precision, kernel, m.usize("oracle-threads")?)?;
     let mut rng = Rng::new(seed);
     let data = Matrix::random_normal(n, d, &mut rng);
 
@@ -242,7 +297,7 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
         .ok_or_else(|| {
             anyhow::anyhow!("unknown algorithm '{name}' (expected one of {:?})", ebc::optim::ALGORITHMS)
         })?;
-    let mut oracle = factory(data);
+    let mut oracle = (be.factory)(Arc::new(data), &OracleSpec::unplanned());
     let res = optimizer.run(oracle.as_mut(), k);
     println!(
         "summary of {n}x{d} ({}, backend={}): k={}",
@@ -264,12 +319,12 @@ fn cmd_casestudy(m: &Matches) -> Result<()> {
     let samples = m.usize("samples")?;
     let seed = m.usize("seed")? as u64;
     let kernel = CpuKernel::parse(m.str("kernel")?)?;
-    let factory =
-        oracle_factory(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
+    let be =
+        oracle_backend(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
     let optimizer = Greedy::default();
 
     log::info!("generating 10 campaigns ({} samples/cycle) + summarizing", samples);
-    let results = run_table2(&optimizer, &|m| factory(m), k, samples, seed);
+    let results = run_table2(&optimizer, &be.simple(), k, samples, seed);
 
     if m.has("table2") || (!m.has("fig4") && !m.has("validate")) {
         println!("{}", table2_text(&results, k));
@@ -324,13 +379,14 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         "" => ServiceConfig::default(),
         path => ServiceConfig::load(path)?,
     };
-    let factory = oracle_factory(
+    let be = oracle_backend(
         m.str("backend")?,
         cfg.engine.precision,
         cfg.engine.cpu_kernel,
         cfg.engine.cpu_threads,
     )?;
-    let mut coordinator = Coordinator::new(cfg, factory);
+    let planner = be.planner();
+    let mut coordinator = Coordinator::new(cfg, be.factory).with_planner(planner);
     let mut fleet = SimulatedFleet::new(
         &[
             ("imm-cover-1", Part::Cover, ProcessState::Stable),
@@ -386,19 +442,17 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
     }
     let threads = m.usize("threads")?;
     let kernel = CpuKernel::parse(m.str("kernel")?)?;
-    let factory =
-        oracle_factory(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
+    let be =
+        oracle_backend(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
+    let planned = m.has("plan");
+    let cores = m.usize("cores")?;
 
     log::info!("generating IMM dataset (cover/stable, d={samples})");
-    let data = ebc::imm::generate_dataset_with(
-        Part::Cover,
-        ProcessState::Stable,
-        seed,
-        samples,
-    )
-    .cycles;
+    let data: SharedMatrix = Arc::new(
+        ebc::imm::generate_dataset_with(Part::Cover, ProcessState::Stable, seed, samples).cycles,
+    );
     println!(
-        "shard scaling sweep: {}x{} IMM cycles, k={k}, partitioner={}, threads={}",
+        "shard scaling sweep: {}x{} IMM cycles, k={k}, partitioner={}, threads={}{}",
         data.rows(),
         data.cols(),
         m.str("partitioner")?,
@@ -406,7 +460,8 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
             ebc::util::threadpool::default_threads()
         } else {
             threads
-        }
+        },
+        if planned { " (planned)" } else { "" }
     );
 
     let cfg = ShardSweepConfig {
@@ -416,20 +471,35 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         partitioner: m.str("partitioner")?.to_string(),
         threads,
         seed,
+        cores,
     };
-    let points = shard_scaling_sweep(&data, &|m| factory(m), &cfg)?;
+    let plan_source = be.planner();
+    if planned {
+        // report the planned bucket shape + core split per shard count
+        for &p in &cfg.shard_counts {
+            let mut req = PlanRequest::new(data.rows(), data.cols(), p, k);
+            req.cores = cores;
+            println!("plan P={p}: {}", plan_source(&req).describe());
+        }
+    }
+    let planner = |req: &PlanRequest| plan_source(req);
+    let planner_opt: Option<ebc::bench::SweepPlanner> =
+        if planned { Some(&planner) } else { None };
+    let factory = |m: SharedMatrix, spec: &OracleSpec| (be.factory)(m, spec);
+    let points = shard_scaling_sweep(&data, &factory, &cfg, planner_opt)?;
 
     let mut rep = Reporter::new(
         "shard-bench: two-stage wall-clock vs single-node",
         &[
-            "algorithm", "P", "shard_s", "merge_s", "total_s", "single_s", "speedup",
-            "f_merged", "f_single", "quality",
+            "algorithm", "P", "plan", "shard_s", "merge_s", "total_s", "single_s",
+            "speedup", "f_merged", "f_single", "quality",
         ],
     );
     for p in &points {
         rep.row(&[
             p.algorithm.clone(),
             p.shards.to_string(),
+            p.plan.clone(),
             fmt_secs(p.shard_seconds),
             fmt_secs(p.merge_seconds),
             fmt_secs(p.total_seconds),
@@ -467,8 +537,17 @@ fn cmd_kernel_bench(m: &Matches) -> Result<()> {
     );
     rep.print();
 
+    // planned-vs-unplanned sharded CPU split (P x T <= cores vs P x cores)
+    let shard_counts = parse_usize_list(m.str("shards")?, "shards")?;
+    let splits = shard_split_sweep(&cfg, &shard_counts, &ebc::bench::Settings::default());
+    ebc::bench::kernel_scaling::split_report(
+        "kernel-bench: planned vs unplanned shard split (blocked f32 gains)",
+        &splits,
+    )
+    .print();
+
     let out = std::path::PathBuf::from(m.str("out")?);
-    ebc::bench::kernel_scaling::save_bench_json(&out, &cfg, &points)?;
+    ebc::bench::kernel_scaling::save_bench_json(&out, &cfg, &points, &splits)?;
     println!("\nwrote {}", out.display());
 
     // the headline number: best blocked-f32 gains speedup over scalar ST

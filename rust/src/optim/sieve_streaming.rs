@@ -19,11 +19,14 @@ pub(crate) struct SieveState {
     pub set: Vec<usize>,
     pub mindist: Vec<f32>,
     pub fval: f32,
+    /// f after each accepted element (same length as `set`) — the
+    /// winning sieve's trajectory becomes the run's `f_trajectory`.
+    pub traj: Vec<f32>,
 }
 
 impl SieveState {
     pub fn new(vsq: &[f32]) -> SieveState {
-        SieveState { set: Vec::new(), mindist: vsq.to_vec(), fval: 0.0 }
+        SieveState { set: Vec::new(), mindist: vsq.to_vec(), fval: 0.0, traj: Vec::new() }
     }
 
     /// Δf(x | S) from the cached distance column.
@@ -47,6 +50,7 @@ impl SieveState {
         }
         self.set.push(x);
         self.fval += gain;
+        self.traj.push(self.fval);
     }
 }
 
@@ -123,16 +127,16 @@ impl Optimizer for SieveStreaming {
             }
         }
 
-        // best sieve wins
+        // best sieve wins; its per-accept trajectory is the run's
         let best = sieves
             .into_values()
             .max_by(|a, b| a.fval.partial_cmp(&b.fval).unwrap());
-        let (indices, f_final) = match best {
-            Some(s) => (s.set, s.fval),
-            None => (vec![], 0.0),
+        let (indices, f_final, traj) = match best {
+            Some(s) => (s.set, s.fval, s.traj),
+            None => (vec![], 0.0, vec![]),
         };
         SummaryResult {
-            f_trajectory: vec![f_final; indices.len().min(1)],
+            f_trajectory: traj,
             indices,
             f_final,
             wall_seconds: t0.elapsed().as_secs_f64(),
@@ -188,6 +192,21 @@ mod tests {
         d.sort_unstable();
         d.dedup();
         assert_eq!(d.len(), s.indices.len());
+    }
+
+    #[test]
+    fn trajectory_tracks_winning_sieve_per_accept() {
+        let mut rng = Rng::new(11);
+        let v = Matrix::random_normal(70, 4, &mut rng);
+        let s = SieveStreaming::default().run(&mut CpuOracle::new(v), 6);
+        assert!(s.indices.len() > 1, "want a multi-accept run, got {:?}", s.indices);
+        // one trajectory point per accepted element, monotone, ending
+        // at the final value — not the old degenerate length-<=1 vector
+        assert_eq!(s.f_trajectory.len(), s.indices.len());
+        for w in s.f_trajectory.windows(2) {
+            assert!(w[1] >= w[0] - 1e-5, "{:?}", s.f_trajectory);
+        }
+        assert_eq!(*s.f_trajectory.last().unwrap(), s.f_final);
     }
 
     #[test]

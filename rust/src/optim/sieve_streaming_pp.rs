@@ -76,12 +76,12 @@ impl Optimizer for SieveStreamingPp {
         let best = sieves
             .into_values()
             .max_by(|a, b| a.fval.partial_cmp(&b.fval).unwrap());
-        let (indices, f_final) = match best {
-            Some(s) => (s.set, s.fval),
-            None => (vec![], 0.0),
+        let (indices, f_final, traj) = match best {
+            Some(s) => (s.set, s.fval, s.traj),
+            None => (vec![], 0.0, vec![]),
         };
         SummaryResult {
-            f_trajectory: vec![f_final; indices.len().min(1)],
+            f_trajectory: traj,
             indices,
             f_final,
             wall_seconds: t0.elapsed().as_secs_f64(),

@@ -112,6 +112,17 @@ pub struct Manifest {
     pub entries: Vec<ArtifactEntry>,
 }
 
+/// The bucket set a fleet plan pins: at most one entry per graph family
+/// (see [`Manifest::pick_for_max_shape`]). Empty fields mean no bucket
+/// of that family fits the planned shape — the engine then falls back
+/// to its per-call manifest pick or the CPU evaluator.
+#[derive(Debug, Clone, Default)]
+pub struct PlanBuckets {
+    pub gains: Option<ArtifactEntry>,
+    pub update: Option<ArtifactEntry>,
+    pub eval_multi: Option<ArtifactEntry>,
+}
+
 impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
@@ -242,6 +253,34 @@ impl Manifest {
             .min_by_key(|e| (e.n as u64) * (e.d as u64))
     }
 
+    /// One bucket per graph family, picked for the **maximum** shape any
+    /// stage of a fleet run requests: the merge stage evaluates against
+    /// the full (n, d) ground set and every shard holds at most n rows,
+    /// so a single (n, d)-fitting pick serves all P shard oracles and
+    /// the merge oracle — one executable compiled and loaded per family
+    /// instead of one per distinct shard shape. A gains request whose
+    /// candidate batch exceeds every C bucket falls back to the widest-C
+    /// (n, d)-fitting bucket so the engine can chunk over it.
+    pub fn pick_for_max_shape(
+        &self,
+        n: usize,
+        d: usize,
+        c: usize,
+        l: usize,
+        k: usize,
+        p: Precision,
+        imp: KernelImpl,
+    ) -> PlanBuckets {
+        PlanBuckets {
+            gains: self
+                .pick_gains(n, d, c, p, imp)
+                .or_else(|| self.pick_gains_largest_c(n, d, p, imp))
+                .cloned(),
+            update: self.pick_update(n, d, p).cloned(),
+            eval_multi: self.pick_eval_multi(l, k, n, d, p, imp).cloned(),
+        }
+    }
+
     /// Smallest-fitting eval_multi bucket for (l, k, n, d).
     pub fn pick_eval_multi(
         &self,
@@ -336,6 +375,21 @@ mod tests {
         assert!(m
             .pick_eval_multi(65, 10, 1000, 128, Precision::Bf16, KernelImpl::Pallas)
             .is_none());
+    }
+
+    #[test]
+    fn pick_for_max_shape_pins_one_bucket_per_family() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let b = m.pick_for_max_shape(2000, 100, 200, 1, 1, Precision::F32, KernelImpl::Pallas);
+        assert_eq!(b.gains.as_ref().unwrap().name, "gains_n4096_d128_c1024_f32");
+        assert!(b.update.is_none(), "no update entries in the sample");
+        assert!(b.eval_multi.is_none(), "sample eval_multi is bf16 only");
+        // candidate batch wider than every C bucket: widest-C fallback
+        let b = m.pick_for_max_shape(1000, 100, 9999, 1, 1, Precision::F32, KernelImpl::Pallas);
+        assert_eq!(b.gains.as_ref().unwrap().name, "gains_n4096_d128_c1024_f32");
+        // nothing fits (n too large): empty plan buckets
+        let b = m.pick_for_max_shape(100_000, 100, 10, 1, 1, Precision::F32, KernelImpl::Pallas);
+        assert!(b.gains.is_none());
     }
 
     #[test]

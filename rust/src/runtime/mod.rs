@@ -13,6 +13,6 @@ pub mod executable;
 // module docs for the swap recipe).
 pub mod xla;
 
-pub use artifact::{ArtifactEntry, ArtifactKind, Manifest};
+pub use artifact::{ArtifactEntry, ArtifactKind, Manifest, PlanBuckets};
 pub use client::Runtime;
 pub use executable::LoadedGraph;

@@ -29,11 +29,18 @@
 //! wall-clock ~1/P for the dominant first stage. The coordinator wires
 //! this up as the fleet-level summary query (`@fleet`), and `shard-bench`
 //! sweeps P for the scaling story.
+//!
+//! A fleet run can carry a [`ShardPlan`] (see [`crate::engine::plan`]):
+//! one pre-picked engine bucket shape shared by every shard oracle and
+//! the merge stage, plus a P-worker × T-kernel-thread CPU split with
+//! P·T ≤ cores — instead of P independently-planned, oversubscribed
+//! engines.
 
 pub mod merge;
 pub mod partition;
 pub mod summarizer;
 
+pub use crate::engine::{plan_cpu_split, OracleSpec, PlanRequest, PlanSource, ShardPlan};
 pub use merge::greedy_merge;
 pub use partition::{
     build_partitioner, validate_partition, HashPartitioner, LocalityPartitioner,

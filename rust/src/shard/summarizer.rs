@@ -1,17 +1,22 @@
 //! The sharded two-stage summarizer (partition → per-shard optimize →
 //! greedy merge) — see the module docs in [`crate::shard`].
 
-use crate::linalg::Matrix;
+use crate::engine::{OracleSpec, ShardPlan};
+use crate::linalg::SharedMatrix;
 use crate::optim::{Optimizer, SummaryResult};
 use crate::shard::merge::greedy_merge;
 use crate::shard::partition::Partitioner;
 use crate::submodular::Oracle;
 use crate::util::threadpool::{default_threads, par_map};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Oracle constructor seam shared with the coordinator: `Sync` so the
-/// per-shard stage can call it from pool workers concurrently.
-pub type ShardOracleFactory = dyn Fn(Matrix) -> Box<dyn Oracle> + Sync;
+/// per-shard stage can call it from pool workers concurrently. The
+/// ground set travels as a [`SharedMatrix`] (the merge and baseline
+/// oracles alias one allocation) and the [`OracleSpec`] carries the
+/// per-oracle plan handle + thread width of a planned fleet run.
+pub type ShardOracleFactory = dyn Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Sync;
 
 /// Outcome of one shard's first-stage run.
 #[derive(Debug, Clone)]
@@ -75,12 +80,19 @@ pub struct ShardedSummarizer<'a> {
     /// Number of shards P (>= 1).
     pub shards: usize,
     /// Worker threads for the per-shard stage; 0 = `default_threads()`.
+    /// Ignored when a [`Self::plan`] is set — the plan's worker split
+    /// wins.
     pub threads: usize,
     /// Exemplars each shard contributes; 0 = same as the final k.
     pub per_shard_k: usize,
     /// Candidate-batch size for the merge stage (and the greedy
     /// baseline); matches `Greedy::batch` semantics.
     pub merge_batch: usize,
+    /// Fleet execution plan: pins the P-worker × T-thread CPU split
+    /// (P·T ≤ cores instead of P oversubscribed `default_threads()`
+    /// oracles) and, for engine oracles, the shared bucket/executable
+    /// set. `None` = legacy unplanned behavior.
+    pub plan: Option<Arc<ShardPlan>>,
 }
 
 impl<'a> ShardedSummarizer<'a> {
@@ -96,6 +108,7 @@ impl<'a> ShardedSummarizer<'a> {
             threads: 0,
             per_shard_k: 0,
             merge_batch: 1024,
+            plan: None,
         }
     }
 
@@ -103,7 +116,12 @@ impl<'a> ShardedSummarizer<'a> {
     /// oracle for each shard's sub-matrix and for the merge stage — the
     /// same seam the coordinator uses, so shards run on the CPU baseline
     /// or the XLA engine unchanged.
-    pub fn summarize(&self, data: &Matrix, factory: &ShardOracleFactory, k: usize) -> ShardedResult {
+    pub fn summarize(
+        &self,
+        data: &SharedMatrix,
+        factory: &ShardOracleFactory,
+        k: usize,
+    ) -> ShardedResult {
         self.run(data, factory, k, false)
     }
 
@@ -111,7 +129,7 @@ impl<'a> ShardedSummarizer<'a> {
     /// the full dataset for quality-ratio accounting.
     pub fn summarize_with_baseline(
         &self,
-        data: &Matrix,
+        data: &SharedMatrix,
         factory: &ShardOracleFactory,
         k: usize,
     ) -> ShardedResult {
@@ -120,7 +138,7 @@ impl<'a> ShardedSummarizer<'a> {
 
     fn run(
         &self,
-        data: &Matrix,
+        data: &SharedMatrix,
         factory: &ShardOracleFactory,
         k: usize,
         with_baseline: bool,
@@ -141,12 +159,21 @@ impl<'a> ShardedSummarizer<'a> {
         let partition_seconds = t0.elapsed().as_secs_f64();
 
         // ---- stage 1: per-shard optimization on the worker pool ------
+        // a plan pins the worker × kernel-thread split; unplanned runs
+        // keep the legacy `threads` semantics (each oracle at factory
+        // defaults)
         let t1 = Instant::now();
         let shard_k = if self.per_shard_k == 0 { k } else { self.per_shard_k };
-        let threads = if self.threads == 0 { default_threads() } else { self.threads };
+        let (threads, shard_spec) = match &self.plan {
+            Some(plan) => (plan.shard_workers, OracleSpec::for_shard(plan)),
+            None => {
+                let t = if self.threads == 0 { default_threads() } else { self.threads };
+                (t, OracleSpec::unplanned())
+            }
+        };
         let per_shard: Vec<ShardRun> = par_map(&jobs, threads, |(shard, part)| {
-            let sub = data.gather(part);
-            let mut oracle = factory(sub);
+            let sub = Arc::new(data.gather(part));
+            let mut oracle = factory(sub, &shard_spec);
             let mut res = self.optimizer.run(oracle.as_mut(), shard_k.min(part.len()));
             // map shard-local indices back to the global ground set
             for idx in res.indices.iter_mut() {
@@ -157,6 +184,8 @@ impl<'a> ShardedSummarizer<'a> {
         let shard_seconds = t1.elapsed().as_secs_f64();
 
         // ---- stage 2: greedy merge over the union of shard picks -----
+        // merge + baseline alias the full dataset through the shared
+        // handle — no ground-matrix copies
         let t2 = Instant::now();
         let mut union: Vec<usize> = per_shard
             .iter()
@@ -164,12 +193,16 @@ impl<'a> ShardedSummarizer<'a> {
             .collect();
         union.sort_unstable();
         union.dedup();
-        let mut merge_oracle = factory(data.clone());
+        let merge_spec = match &self.plan {
+            Some(plan) => OracleSpec::for_merge(plan),
+            None => OracleSpec::unplanned(),
+        };
+        let mut merge_oracle = factory(Arc::clone(data), &merge_spec);
         let merged = greedy_merge(merge_oracle.as_mut(), &union, k, self.merge_batch);
         let merge_seconds = t2.elapsed().as_secs_f64();
 
         let baseline = with_baseline.then(|| {
-            let mut oracle = factory(data.clone());
+            let mut oracle = factory(Arc::clone(data), &merge_spec);
             self.optimizer.run(oracle.as_mut(), k)
         });
 
@@ -189,25 +222,27 @@ impl<'a> ShardedSummarizer<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::PlanRequest;
+    use crate::linalg::Matrix;
     use crate::optim::{build_optimizer, exhaustive_best, Greedy, ALGORITHMS};
     use crate::shard::partition::{build_partitioner, PARTITIONERS};
     use crate::submodular::CpuOracle;
     use crate::util::rng::Rng;
 
-    fn cpu_factory() -> impl Fn(Matrix) -> Box<dyn Oracle> + Sync {
-        |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>
+    fn cpu_factory() -> impl Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Sync {
+        |m: SharedMatrix, _spec: &OracleSpec| Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
     }
 
-    fn data(n: usize, d: usize, seed: u64) -> Matrix {
+    fn data(n: usize, d: usize, seed: u64) -> SharedMatrix {
         let mut rng = Rng::new(seed);
-        Matrix::random_normal(n, d, &mut rng)
+        Arc::new(Matrix::random_normal(n, d, &mut rng))
     }
 
     #[test]
     fn single_shard_reproduces_greedy_bit_for_bit() {
         let v = data(60, 5, 42);
         let greedy = Greedy { batch: 1024 };
-        let single = greedy.run(&mut CpuOracle::new(v.clone()), 7);
+        let single = greedy.run(&mut CpuOracle::new_shared(Arc::clone(&v)), 7);
         for name in PARTITIONERS {
             let part = build_partitioner(name, 9).unwrap();
             let s = ShardedSummarizer::new(part.as_ref(), &greedy, 1);
@@ -266,7 +301,7 @@ mod tests {
     #[test]
     fn within_constant_factor_of_exhaustive_on_tiny_instance() {
         let v = data(12, 3, 3);
-        let (_, opt) = exhaustive_best(&mut CpuOracle::new(v.clone()), 3);
+        let (_, opt) = exhaustive_best(&mut CpuOracle::new_shared(Arc::clone(&v)), 3);
         let greedy = Greedy::default();
         for name in PARTITIONERS {
             for shards in [1usize, 2, 4] {
@@ -323,5 +358,46 @@ mod tests {
         let union: usize = res.per_shard.iter().map(|s| s.result.k()).sum();
         assert!(union > 6, "expected ~15 first-stage picks, got {union}");
         assert!(res.merged.k() <= 2);
+    }
+
+    #[test]
+    fn planned_run_selects_identical_exemplars_and_threads_specs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let v = data(80, 5, 23);
+        let greedy = Greedy::default();
+        let part = build_partitioner("round_robin", 0).unwrap();
+        for shards in [1usize, 3, 5] {
+            let unplanned = ShardedSummarizer::new(part.as_ref(), &greedy, shards)
+                .summarize(&v, &cpu_factory(), 6);
+
+            let mut req = PlanRequest::new(v.rows(), v.cols(), shards, 6);
+            req.cores = 4;
+            let plan = Arc::new(ShardPlan::plan(None, &req));
+            let shard_builds = AtomicUsize::new(0);
+            let planned_factory = |m: SharedMatrix, spec: &OracleSpec| {
+                // the planner's split reaches every oracle build
+                let t = spec.threads.expect("planned spec carries threads");
+                if t == plan.oracle_threads {
+                    shard_builds.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    assert_eq!(t, plan.merge_threads);
+                }
+                assert!(spec.plan.is_some());
+                Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+            };
+            let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, shards);
+            s.plan = Some(Arc::clone(&plan));
+            let planned = s.summarize(&v, &planned_factory, 6);
+
+            assert_eq!(planned.merged.indices, unplanned.merged.indices, "P={shards}");
+            assert_eq!(
+                planned.merged.f_final.to_bits(),
+                unplanned.merged.f_final.to_bits(),
+                "P={shards}"
+            );
+            if plan.oracle_threads != plan.merge_threads {
+                assert_eq!(shard_builds.load(Ordering::SeqCst), shards.min(v.rows()));
+            }
+        }
     }
 }

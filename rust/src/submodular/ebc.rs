@@ -12,16 +12,17 @@
 //! bf16 input-demotion path selected via [`Precision`].
 
 use crate::linalg::gemm::{self, CpuKernel};
-use crate::linalg::{sq_euclidean, sq_norms, Matrix};
+use crate::linalg::{sq_euclidean, sq_norms, Matrix, SharedMatrix};
 use crate::runtime::artifact::Precision;
 use crate::submodular::Oracle;
 use crate::util::threadpool::scoped_chunks_mut;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// The EBC function f(S) = L({e0}) − L(S ∪ {e0}) over a fixed ground set
 /// (paper Definition 5), with e0 = 0 and d = squared Euclidean.
 pub struct EbcFunction {
-    v: Matrix,
+    v: SharedMatrix,
     vsq: Vec<f32>,
     /// bf16-demoted ground copy + its norms — present only on the
     /// blocked bf16 path (inputs demoted, accumulation stays f32).
@@ -47,6 +48,18 @@ impl EbcFunction {
     /// blocked kernels (0 = `default_threads()`).
     pub fn with_kernel(
         v: Matrix,
+        kernel: CpuKernel,
+        precision: Precision,
+        threads: usize,
+    ) -> EbcFunction {
+        Self::with_kernel_shared(Arc::new(v), kernel, precision, threads)
+    }
+
+    /// Like [`Self::with_kernel`] but over a shared ground handle: the
+    /// matrix is never copied, so the merge oracle, the baseline run and
+    /// the engine's cached CPU fallback can all alias one dataset.
+    pub fn with_kernel_shared(
+        v: SharedMatrix,
         kernel: CpuKernel,
         precision: Precision,
         threads: usize,
@@ -216,25 +229,35 @@ impl EbcFunction {
             }
             CpuKernel::Blocked => {
                 let (vm, vs) = self.eff();
-                let d = vm.cols();
                 let vj = vm.row(j).to_vec();
-                let vsj = [vs[j]];
-                let mut out = vec![0f32; n];
-                scoped_chunks_mut(&mut out, self.threads, |_, start, slice| {
-                    gemm::sq_dist_block(
-                        &vm.data()[start * d..(start + slice.len()) * d],
-                        &vs[start..start + slice.len()],
-                        &vj,
-                        &vsj,
-                        d,
-                        slice.len(),
-                        1,
-                        slice,
-                    );
-                });
-                out
+                let vsj = vs[j];
+                self.dist_col_blocked(&vj, vsj)
             }
         }
+    }
+
+    /// The blocked distance-column loop over an already-demoted probe
+    /// vector — shared by [`Self::dist_col`] and
+    /// [`Self::dist_col_external`].
+    fn dist_col_blocked(&self, vj: &[f32], vsj: f32) -> Vec<f32> {
+        let n = self.v.rows();
+        let (vm, vs) = self.eff();
+        let d = vm.cols();
+        let vsj = [vsj];
+        let mut out = vec![0f32; n];
+        scoped_chunks_mut(&mut out, self.threads, |_, start, slice| {
+            gemm::sq_dist_block(
+                &vm.data()[start * d..(start + slice.len()) * d],
+                &vs[start..start + slice.len()],
+                vj,
+                &vsj,
+                d,
+                slice.len(),
+                1,
+                slice,
+            );
+        });
+        out
     }
 
     /// Batched marginal gains given the incremental state.
@@ -271,17 +294,25 @@ impl EbcFunction {
     /// f64 partials over disjoint ground-row ranges (ground-parallel —
     /// a C=1 candidate batch still uses every worker).
     fn gains_blocked(&self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
-        let n = self.v.rows();
         let c = cands.len();
-        self.work.fetch_add((n * c) as u64, Ordering::Relaxed);
+        self.work.fetch_add((self.v.rows() * c) as u64, Ordering::Relaxed);
         if c == 0 {
             return vec![];
         }
         let (vm, vs) = self.eff();
         let y = vm.gather(cands);
         let vsq_y: Vec<f32> = cands.iter().map(|&j| vs[j]).collect();
-        let sums = ground_partials(n, c, self.threads, |r0, r1, part| {
-            for_ground_tiles(vm, vs, y.data(), &vsq_y, r0, r1, |i, drow| {
+        self.gains_blocked_rows(mindist, y.data(), &vsq_y)
+    }
+
+    /// The blocked-gains reduction over an already-packed candidate
+    /// matrix `y` — shared by the index path ([`Self::gains_blocked`])
+    /// and the external-vector path ([`Self::gains_external`]).
+    fn gains_blocked_rows(&self, mindist: &[f32], y: &[f32], vsq_y: &[f32]) -> Vec<f32> {
+        let n = self.v.rows();
+        let (vm, vs) = self.eff();
+        let sums = ground_partials(n, vsq_y.len(), self.threads, |r0, r1, part| {
+            for_ground_tiles(vm, vs, y, vsq_y, r0, r1, |i, drow| {
                 let md = mindist[i];
                 for (p, &dv) in part.iter_mut().zip(drow) {
                     let r = md - dv;
@@ -293,6 +324,63 @@ impl EbcFunction {
         });
         let nf = n as f64;
         sums.iter().map(|&s| (s / nf) as f32).collect()
+    }
+
+    /// Batched marginal gains for **external** candidate vectors (rows of
+    /// `cands` need not be ground rows) — the CPU mirror of the engine's
+    /// `gains` graph, used by its fallback path. Matches [`Self::gains`]
+    /// exactly when the rows are gathered ground rows.
+    pub fn gains_external(&self, mindist: &[f32], cands: &Matrix) -> Vec<f32> {
+        assert_eq!(cands.cols(), self.v.cols());
+        let n = self.v.rows();
+        let c = cands.rows();
+        self.work.fetch_add((n * c) as u64, Ordering::Relaxed);
+        if c == 0 {
+            return vec![];
+        }
+        match self.kernel {
+            CpuKernel::Scalar => {
+                let nf = n as f64;
+                (0..c)
+                    .map(|j| {
+                        let vc = cands.row(j);
+                        let mut acc = 0f64;
+                        for i in 0..n {
+                            let r = mindist[i] - sq_euclidean(self.v.row(i), vc);
+                            if r > 0.0 {
+                                acc += r as f64;
+                            }
+                        }
+                        (acc / nf) as f32
+                    })
+                    .collect()
+            }
+            CpuKernel::Blocked if self.lp.is_some() => {
+                let y = gemm::demote_bf16(cands.data());
+                let vsq_y = sq_norms(&y, cands.cols());
+                self.gains_blocked_rows(mindist, &y, &vsq_y)
+            }
+            CpuKernel::Blocked => {
+                let vsq_y = sq_norms(cands.data(), cands.cols());
+                self.gains_blocked_rows(mindist, cands.data(), &vsq_y)
+            }
+        }
+    }
+
+    /// d²(v_i, s) for an **external** vector `s` — the CPU mirror of the
+    /// engine's dist-column/update graph, used by its fallback path.
+    pub fn dist_col_external(&self, s: &[f32]) -> Vec<f32> {
+        assert_eq!(s.len(), self.v.cols());
+        let n = self.v.rows();
+        self.work.fetch_add(n as u64, Ordering::Relaxed);
+        match self.kernel {
+            CpuKernel::Scalar => (0..n).map(|i| sq_euclidean(self.v.row(i), s)).collect(),
+            CpuKernel::Blocked => {
+                let sv: Vec<f32> = if self.lp.is_some() { gemm::demote_bf16(s) } else { s.to_vec() };
+                let ssq = sq_norms(&sv, sv.len());
+                self.dist_col_blocked(&sv, ssq[0])
+            }
+        }
     }
 
     /// Multi-threaded **candidate-parallel** gains over the scalar
@@ -423,6 +511,12 @@ impl CpuOracle {
         CpuOracle { f: EbcFunction::new(v), threads: 1 }
     }
 
+    /// Scalar single-threaded oracle over a shared ground handle (no
+    /// matrix copy).
+    pub fn new_shared(v: SharedMatrix) -> CpuOracle {
+        Self::with_kernel_shared(v, CpuKernel::Scalar, Precision::F32, 1)
+    }
+
     pub fn new_mt(v: Matrix, threads: usize) -> CpuOracle {
         CpuOracle { f: EbcFunction::new(v), threads: threads.max(1) }
     }
@@ -436,8 +530,18 @@ impl CpuOracle {
         precision: Precision,
         threads: usize,
     ) -> CpuOracle {
+        Self::with_kernel_shared(Arc::new(v), kernel, precision, threads)
+    }
+
+    /// [`Self::with_kernel`] over a shared ground handle.
+    pub fn with_kernel_shared(
+        v: SharedMatrix,
+        kernel: CpuKernel,
+        precision: Precision,
+        threads: usize,
+    ) -> CpuOracle {
         let threads = resolve_threads(threads);
-        CpuOracle { f: EbcFunction::with_kernel(v, kernel, precision, threads), threads }
+        CpuOracle { f: EbcFunction::with_kernel_shared(v, kernel, precision, threads), threads }
     }
 
     pub fn function(&self) -> &EbcFunction {
@@ -654,6 +758,56 @@ mod tests {
         // distance terms carry ~2^-8 relative input error
         let vmax = exact.vsq().iter().cloned().fold(0f32, f32::max);
         assert!((a - b).abs() <= 0.05 * (1.0 + a.abs()) + 0.02 * vmax, "{a} vs {b}");
+    }
+
+    #[test]
+    fn external_gains_and_dist_col_match_index_paths() {
+        let mut rng = Rng::new(21);
+        let v = Matrix::random_normal(35, 9, &mut rng);
+        let cands = [0usize, 4, 17, 34];
+        let gathered = v.gather(&cands);
+        let probe = 11usize;
+        for (kernel, precision, threads) in [
+            (CpuKernel::Scalar, Precision::F32, 1usize),
+            (CpuKernel::Blocked, Precision::F32, 3),
+            (CpuKernel::Blocked, Precision::Bf16, 2),
+        ] {
+            let f = EbcFunction::with_kernel(v.clone(), kernel, precision, threads);
+            let mut mind = f.vsq().to_vec();
+            fold_mindist(&mut mind, &f.dist_col(2));
+            let by_index = f.gains(&mind, &cands);
+            let by_rows = f.gains_external(&mind, &gathered);
+            for (i, (a, b)) in by_index.iter().zip(&by_rows).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 * (1.0 + a.abs()),
+                    "{kernel:?}/{precision:?} gains[{i}]: {a} vs {b}"
+                );
+            }
+            let dc = f.dist_col(probe);
+            let de = f.dist_col_external(v.row(probe));
+            for (i, (a, b)) in dc.iter().zip(&de).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 * (1.0 + a.abs()),
+                    "{kernel:?}/{precision:?} dist_col[{i}]: {a} vs {b}"
+                );
+            }
+            assert!(f.gains_external(&mind, &Matrix::zeros(0, 9)).is_empty());
+        }
+    }
+
+    #[test]
+    fn shared_handle_aliases_one_ground_matrix() {
+        let v = Arc::new(toy());
+        let a = EbcFunction::with_kernel_shared(
+            Arc::clone(&v),
+            CpuKernel::Scalar,
+            Precision::F32,
+            1,
+        );
+        let b = CpuOracle::new_shared(Arc::clone(&v));
+        assert!(std::ptr::eq(a.ground(), v.as_ref()));
+        assert!(std::ptr::eq(b.function().ground(), v.as_ref()));
+        assert_eq!(a.eval(&[2]), b.function().eval(&[2]));
     }
 
     #[test]

@@ -5,7 +5,7 @@ use ebc::cli;
 use ebc::config::parse::ConfigDoc;
 use ebc::config::schema::ServiceConfig;
 use ebc::coordinator::{snapshot, Coordinator, OracleFactory, RouteResult, SimulatedFleet};
-use ebc::engine::{Engine, EngineConfig, Precision, XlaOracle};
+use ebc::engine::{Engine, EngineConfig, OracleSpec, Precision, XlaOracle};
 use ebc::imm::{Part, ProcessState};
 use ebc::linalg::Matrix;
 use ebc::runtime::Runtime;
@@ -15,7 +15,13 @@ use ebc::util::json::Json;
 fn xla_factory(p: Precision) -> OracleFactory {
     let rt = Runtime::discover().expect("make artifacts first");
     let engine = Engine::new(rt, EngineConfig { precision: p, cpu_fallback: true, ..Default::default() });
-    Box::new(move |m: Matrix| Box::new(XlaOracle::new(engine.clone(), m)) as Box<dyn Oracle>)
+    Box::new(move |m: ebc::linalg::SharedMatrix, spec: &OracleSpec| {
+        let mut engine = engine.clone();
+        if let Some(plan) = &spec.plan {
+            engine.set_plan(std::sync::Arc::clone(plan));
+        }
+        Box::new(XlaOracle::from_shared(engine, m)) as Box<dyn Oracle>
+    })
 }
 
 #[test]
@@ -60,8 +66,9 @@ fn xla_and_cpu_coordinators_agree_on_representatives() {
         cfg.coordinator.queue_capacity = 4096;
         cfg
     };
-    let cpu_factory: OracleFactory =
-        Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+    let cpu_factory: OracleFactory = Box::new(|m: ebc::linalg::SharedMatrix, _: &OracleSpec| {
+        Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+    });
 
     let run = |factory: OracleFactory| {
         let mut c = Coordinator::new(mk_cfg(), factory);
@@ -98,8 +105,9 @@ ingest_batch = 8
     )
     .unwrap();
     let cfg = ServiceConfig::from_doc(&doc).unwrap();
-    let factory: OracleFactory =
-        Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+    let factory: OracleFactory = Box::new(|m: ebc::linalg::SharedMatrix, _: &OracleSpec| {
+        Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+    });
     let mut c = Coordinator::new(cfg, factory);
     let mut fleet = SimulatedFleet::new(&[("p", Part::Plate, ProcessState::Stable)], 24, 9);
     c.run_stream(&mut fleet);

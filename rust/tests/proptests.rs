@@ -5,14 +5,18 @@
 use ebc::coordinator::backpressure::BoundedQueue;
 use ebc::coordinator::{Coordinator, CycleRecord, RouteResult};
 use ebc::config::schema::ServiceConfig;
-use ebc::engine::Precision;
+use ebc::engine::{
+    DeviceDataset, EngineConfig, OracleSpec, PlanRequest, Precision, ShardPlan,
+};
 use ebc::linalg::gemm::gemm_nt;
-use ebc::linalg::{CpuKernel, Matrix};
+use ebc::linalg::{CpuKernel, Matrix, SharedMatrix};
 use ebc::optim::{exhaustive_best, Greedy, LazyGreedy, Optimizer, SieveStreaming};
+use ebc::runtime::Manifest;
 use ebc::shard::{build_partitioner, validate_partition, ShardedSummarizer, PARTITIONERS};
-use ebc::submodular::{CpuOracle, EbcFunction, Oracle};
+use ebc::submodular::{fold_mindist, CpuOracle, EbcFunction, Oracle};
 use ebc::util::proptest::{arb_dataset, arb_subset, forall, Config};
 use ebc::util::rng::Rng;
+use std::sync::Arc;
 
 fn cfg() -> Config {
     Config::default()
@@ -240,8 +244,9 @@ fn prop_coordinator_summary_within_window() {
             cfg.summary.k = 3;
             cfg.summary.refresh_every = 4;
             cfg.summary.window = *window;
-            let factory =
-                Box::new(|m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>);
+            let factory = Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
+                Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+            });
             let mut c = Coordinator::new(cfg, factory);
             for s in 0..*total as u64 {
                 let vals: Vec<f32> = (0..*d).map(|_| rng.normal()).collect();
@@ -324,7 +329,7 @@ fn prop_greedy_batch_invariant() {
 // --------------------------------------------------- shard subsystem
 
 fn sharded_cpu(
-    v: &Matrix,
+    v: &SharedMatrix,
     partitioner: &str,
     shards: usize,
     k: usize,
@@ -332,7 +337,8 @@ fn sharded_cpu(
     let part = build_partitioner(partitioner, 11).expect("known partitioner");
     let greedy = Greedy::default();
     let s = ShardedSummarizer::new(part.as_ref(), &greedy, shards);
-    let factory = |m: Matrix| Box::new(CpuOracle::new(m)) as Box<dyn Oracle>;
+    let factory =
+        |m: SharedMatrix, _spec: &OracleSpec| Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>;
     s.summarize(v, &factory, k)
 }
 
@@ -372,8 +378,8 @@ fn prop_sharded_p1_equals_single_node_greedy() {
             (n, d, data, k)
         },
         |(n, d, data, k)| {
-            let v = Matrix::from_vec(*n, *d, data.clone());
-            let single = Greedy::default().run(&mut CpuOracle::new(v.clone()), *k);
+            let v = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let single = Greedy::default().run(&mut CpuOracle::new_shared(Arc::clone(&v)), *k);
             for name in PARTITIONERS {
                 let res = sharded_cpu(&v, name, 1, *k);
                 if res.merged.indices != single.indices {
@@ -409,8 +415,8 @@ fn prop_sharded_within_constant_factor_of_opt() {
             (n, d, data, k)
         },
         |(n, d, data, k)| {
-            let v = Matrix::from_vec(*n, *d, data.clone());
-            let (_, opt) = exhaustive_best(&mut CpuOracle::new(v.clone()), *k);
+            let v = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let (_, opt) = exhaustive_best(&mut CpuOracle::new_shared(Arc::clone(&v)), *k);
             for name in PARTITIONERS {
                 for shards in [1usize, 2, 4] {
                     let res = sharded_cpu(&v, name, shards, *k);
@@ -420,6 +426,209 @@ fn prop_sharded_within_constant_factor_of_opt() {
                             res.merged.f_final
                         ));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------------- fleet planning
+
+const PLAN_MANIFEST: &str = r#"{
+  "version": 1,
+  "entries": [
+    {"name": "gains_s", "file": "a.hlo.txt", "kind": "gains", "dtype": "f32",
+     "n": 64, "d": 16, "c": 32, "l": 0, "k": 0,
+     "inputs": ["v","vsq","vmask","mindist","c","cmask"]},
+    {"name": "gains_m", "file": "b.hlo.txt", "kind": "gains", "dtype": "f32",
+     "n": 256, "d": 32, "c": 128, "l": 0, "k": 0,
+     "inputs": ["v","vsq","vmask","mindist","c","cmask"]},
+    {"name": "gains_l", "file": "c.hlo.txt", "kind": "gains", "dtype": "f32",
+     "n": 1024, "d": 64, "c": 512, "l": 0, "k": 0,
+     "inputs": ["v","vsq","vmask","mindist","c","cmask"]},
+    {"name": "update_l", "file": "d.hlo.txt", "kind": "update", "dtype": "f32",
+     "n": 1024, "d": 64, "c": 0, "l": 0, "k": 0,
+     "inputs": ["v","vsq","vmask","mindist","s"]}
+  ]
+}"#;
+
+#[test]
+fn prop_planned_bucket_fits_every_shard_and_merge() {
+    // satellite invariant: the single planned bucket covers the merge
+    // stage (full n) and every shard any partitioner produces
+    let manifest = Manifest::parse(PLAN_MANIFEST, std::path::PathBuf::from("/tmp/pm")).unwrap();
+    forall(
+        "planned gains/update bucket fits all shards + merge",
+        &Config { cases: 16, seed: 0x91A4 },
+        |rng| {
+            let n = 2 + rng.below(200);
+            let d = 1 + rng.below(32);
+            let shards = 1 + rng.below(8);
+            let k = 1 + rng.below(5);
+            let data: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+            (n, d, shards, k, data)
+        },
+        |(n, d, shards, k, data)| {
+            let mut req = PlanRequest::new(*n, *d, *shards, *k);
+            req.batch = 64;
+            req.cores = 8;
+            let plan = ShardPlan::plan(Some(&manifest), &req);
+            let g = plan
+                .buckets
+                .gains
+                .as_ref()
+                .ok_or("no gains bucket planned for an in-range shape")?;
+            let u = plan
+                .buckets
+                .update
+                .as_ref()
+                .ok_or("no update bucket planned for an in-range shape")?;
+            // merge stage (full n, d) fits
+            if g.n < *n || g.d < *d || u.n < *n || u.d < *d {
+                return Err(format!("merge shape ({n}, {d}) exceeds plan ({g:?})"));
+            }
+            // every shard of every partitioner fits the same bucket
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            for name in PARTITIONERS {
+                let p = build_partitioner(name, 5).expect("known partitioner");
+                for part in p.partition(&v, *shards) {
+                    if part.len() > g.n || part.len() > u.n {
+                        return Err(format!(
+                            "{name}: shard of {} rows exceeds planned bucket n={}",
+                            part.len(),
+                            g.n
+                        ));
+                    }
+                }
+            }
+            // and the CPU split respects the core budget
+            if plan.shard_workers * plan.oracle_threads > plan.cores {
+                return Err(format!(
+                    "split {}x{} exceeds {} cores",
+                    plan.shard_workers, plan.oracle_threads, plan.cores
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planned_equals_unplanned_shard_selection() {
+    // satellite invariant: a plan changes scheduling (workers, threads,
+    // buckets), never selection — planned and unplanned runs pick
+    // identical exemplars with identical f
+    forall(
+        "planned sharded run == unplanned (indices + f bits)",
+        &Config { cases: 10, seed: 0x71A2 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 60, 6, 2.0);
+            let shards = 1 + rng.below(6);
+            let k = 1 + rng.below(5);
+            let cores = 1 + rng.below(8);
+            (n, d, data, shards, k, cores)
+        },
+        |(n, d, data, shards, k, cores)| {
+            let v = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let factory = |m: SharedMatrix, spec: &OracleSpec| {
+                // honor the planned split like the launcher's CPU backend
+                Box::new(CpuOracle::with_kernel_shared(
+                    m,
+                    CpuKernel::Scalar,
+                    Precision::F32,
+                    spec.threads_or(1),
+                )) as Box<dyn Oracle>
+            };
+            let part = build_partitioner("round_robin", 0).expect("known partitioner");
+            let greedy = Greedy::default();
+            let unplanned = ShardedSummarizer::new(part.as_ref(), &greedy, *shards)
+                .summarize(&v, &factory, *k);
+            let mut req = PlanRequest::new(*n, *d, *shards, *k);
+            req.cores = *cores;
+            let mut planned_run = ShardedSummarizer::new(part.as_ref(), &greedy, *shards);
+            planned_run.plan = Some(Arc::new(ShardPlan::plan(None, &req)));
+            let planned = planned_run.summarize(&v, &factory, *k);
+            if planned.merged.indices != unplanned.merged.indices {
+                return Err(format!(
+                    "P={shards} cores={cores}: {:?} != {:?}",
+                    planned.merged.indices, unplanned.merged.indices
+                ));
+            }
+            if planned.merged.f_final.to_bits() != unplanned.merged.f_final.to_bits() {
+                return Err(format!(
+                    "f {} != {}",
+                    planned.merged.f_final, unplanned.merged.f_final
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------ engine CPU fallback
+
+#[test]
+fn prop_engine_cpu_fallback_matches_scalar_oracle() {
+    // satellite invariant: the engine's no-bucket fallback for gains and
+    // update (DeviceDataset::fallback_*) matches the scalar CPU oracle
+    // within kernel tolerance, for both fallback kernel backends
+    forall(
+        "engine gains/update CPU fallback == scalar oracle",
+        &Config { cases: 12, seed: 0xFA11 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 50, 10, 2.0);
+            let cands = arb_subset(rng, n, 6);
+            let probe = rng.below(n);
+            let threads = 1 + rng.below(3);
+            let blocked = rng.below(2) == 1;
+            (n, d, data, cands, probe, threads, blocked)
+        },
+        |(n, d, data, cands, probe, threads, blocked)| {
+            let v = Matrix::from_vec(*n, *d, data.clone());
+            let cfg = EngineConfig {
+                cpu_kernel: if *blocked { CpuKernel::Blocked } else { CpuKernel::Scalar },
+                cpu_threads: *threads,
+                ..Default::default()
+            };
+            let mut ds = DeviceDataset::new(v.clone());
+            let mut scalar = CpuOracle::new(v.clone());
+            let tol = |r: f32| 1e-3 * (1.0 + r.abs());
+
+            // state after one fold, like a mid-run optimizer
+            let mut mind = scalar.vsq().to_vec();
+            fold_mindist(&mut mind, &scalar.dist_col(*probe));
+
+            // gains: engine fallback takes gathered candidate rows
+            let want = scalar.gains(&mind, cands);
+            let got = ds.fallback_gains(&cfg, &mind, &v.gather(cands));
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                if (a - b).abs() > tol(*a) {
+                    return Err(format!("gains[{i}]: {a} vs {b}"));
+                }
+            }
+
+            // update: new mindist folds the probe's distance column; the
+            // f output matches the state-derived value
+            let s_row = v.row(*probe).to_vec();
+            let (nm, f) = ds.fallback_update(&cfg, Some(&mind), &s_row);
+            let dcol = scalar.dist_col(*probe);
+            for i in 0..*n {
+                let want_m = mind[i].min(dcol[i]);
+                if (nm[i] - want_m).abs() > tol(want_m) {
+                    return Err(format!("update mindist[{i}]: {want_m} vs {}", nm[i]));
+                }
+            }
+            let want_f = ebc::submodular::f_from_mindist(scalar.vsq(), &nm);
+            if (f - want_f).abs() > tol(want_f) {
+                return Err(format!("update f: {want_f} vs {f}"));
+            }
+
+            // dist-column case (mindist = None → raw distances)
+            let (raw, _) = ds.fallback_update(&cfg, None, &s_row);
+            for (i, (a, b)) in dcol.iter().zip(&raw).enumerate() {
+                if (a - b).abs() > tol(*a) {
+                    return Err(format!("dist_col[{i}]: {a} vs {b}"));
                 }
             }
             Ok(())
@@ -567,16 +776,21 @@ fn prop_greedy_selections_identical_scalar_vs_blocked() {
             (n, d, data, k, threads)
         },
         |(n, d, data, k, threads)| {
-            let v = Matrix::from_vec(*n, *d, data.clone());
+            let v = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
             let greedy = Greedy::default();
-            let scalar = greedy.run(&mut CpuOracle::new(v.clone()), *k);
-            let blocked_oracle = |m: Matrix| {
-                Box::new(CpuOracle::with_kernel(m, CpuKernel::Blocked, Precision::F32, *threads))
-                    as Box<dyn Oracle>
+            let scalar = greedy.run(&mut CpuOracle::new_shared(Arc::clone(&v)), *k);
+            let blocked_oracle = |m: SharedMatrix, _spec: &OracleSpec| {
+                Box::new(CpuOracle::with_kernel_shared(
+                    m,
+                    CpuKernel::Blocked,
+                    Precision::F32,
+                    *threads,
+                )) as Box<dyn Oracle>
             };
-            let blocked = greedy.run(blocked_oracle(v.clone()).as_mut(), *k);
+            let blocked = greedy
+                .run(blocked_oracle(Arc::clone(&v), &OracleSpec::unplanned()).as_mut(), *k);
             if scalar.indices != blocked.indices {
-                let reference = EbcFunction::new(v.clone());
+                let reference = EbcFunction::new(Matrix::clone(&v));
                 let fa = reference.eval(&scalar.indices);
                 let fb = reference.eval(&blocked.indices);
                 if (fa - fb).abs() > 1e-4 * (1.0 + fa.abs()) {
