@@ -1,6 +1,6 @@
 # Developer entry points. `make verify` is the tier-1 gate CI runs.
 
-.PHONY: verify build test bench bench-kernel lint artifacts
+.PHONY: verify build test bench bench-kernel bench-shard lint artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -17,6 +17,12 @@ bench:
 # CPU kernel backend sweep on a small preset; emits BENCH_kernel.json.
 bench-kernel:
 	cargo run --release -- kernel-bench --n 4000 --d 32 --c 256 --threads 1,2,4
+
+# Shard transport sweep over the loopback replica fleet; emits
+# BENCH_shard.json (the artifact the CI bench job uploads).
+bench-shard:
+	cargo run --release -- shard-bench --transport loopback --replicas 3 \
+		--samples 64 --k 5 --shards 1,2,4 --out BENCH_shard.json
 
 lint:
 	cargo fmt --check && cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,130 @@
+//! Remote-shard-transport demo: fleet queries answered over a replica
+//! fleet instead of the in-process threadpool.
+//!
+//! A simulated injection-molding fleet streams cycles into the
+//! coordinator; `@fleet` queries fan their shards out over loopback
+//! worker replicas through the versioned wire format (`ebc::shard::wire`
+//! — the exact frames a socket transport would carry). The demo then
+//! exercises the failure story: a replica is rigged to die mid-run
+//! (its shards re-queue to the survivors, selection unchanged), and a
+//! drained replica stops receiving work.
+//!
+//! Self-contained on the CPU oracle (no AOT artifacts needed):
+//!
+//!     cargo run --release --example replica_fleet [-- --replicas 4]
+
+use ebc::config::schema::ServiceConfig;
+use ebc::coordinator::{Coordinator, RouteResult, SimulatedFleet, FLEET_QUERY};
+use ebc::imm::{Part, ProcessState};
+use ebc::shard::LoopbackReplicaTransport;
+use ebc::submodular::{CpuOracle, Oracle};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    ebc::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let arg = |flag: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    };
+    let samples = arg("--samples", 128);
+    let replicas = arg("--replicas", 3);
+
+    let mut cfg = ServiceConfig::default();
+    cfg.name = "replica-fleet-demo".into();
+    cfg.summary.k = 4;
+    cfg.summary.refresh_every = 200;
+    cfg.summary.window = 300;
+    cfg.coordinator.queue_capacity = 8192;
+    // `with_transport` below is what routes @fleet over the replica
+    // fleet — the [shard] transport knob stays at its default so the
+    // coordinator doesn't build a throwaway registry first
+    cfg.shard.shards = 2 * replicas; // every replica sees work
+
+    let factory = |m: ebc::linalg::SharedMatrix, spec: &ebc::engine::OracleSpec| {
+        Box::new(CpuOracle::with_kernel_shared(
+            m,
+            ebc::linalg::CpuKernel::Scalar,
+            ebc::engine::Precision::F32,
+            spec.threads_or(1),
+        )) as Box<dyn Oracle>
+    };
+    // keep a handle to the replica fleet so we can drain/kill members
+    let transport = Arc::new(LoopbackReplicaTransport::with_replicas(replicas, 1));
+    let mut coordinator =
+        Coordinator::new(cfg, Box::new(factory)).with_transport(Box::new(Arc::clone(&transport)));
+
+    let mut fleet = SimulatedFleet::new(
+        &[
+            ("imm-cover-1", Part::Cover, ProcessState::Stable),
+            ("imm-cover-2", Part::Cover, ProcessState::StartUp),
+            ("imm-plate-1", Part::Plate, ProcessState::Regrind),
+            ("imm-plate-2", Part::Plate, ProcessState::Downtimes),
+        ],
+        samples,
+        20260729,
+    );
+    let n = coordinator.run_stream(&mut fleet);
+    println!("ingested {n} cycles from 4 machines; {replicas} loopback replica(s) registered\n");
+
+    let fleet_reps = |c: &mut Coordinator| -> Vec<(String, u64)> {
+        match c.query(FLEET_QUERY) {
+            RouteResult::Fleet(f) => {
+                println!(
+                    "  {} shards over {} replica(s): f(S) = {:.4}, stage1 {:.3}s, merge {:.3}s",
+                    f.shards,
+                    c.transport().replica_count(),
+                    f.f_value,
+                    f.shard_seconds,
+                    f.merge_seconds
+                );
+                f.representatives
+            }
+            other => panic!("unexpected fleet route: {other:?}"),
+        }
+    };
+
+    println!("fleet query on the healthy replica fleet:");
+    let healthy = fleet_reps(&mut coordinator);
+    for (machine, seq) in &healthy {
+        println!("    {machine} @ seq {seq}");
+    }
+
+    // rig one replica to die after its first shard of the next run
+    println!("\nfleet query with replica-0 dying mid-run:");
+    transport.fail_after("replica-0", 1);
+    let degraded = fleet_reps(&mut coordinator);
+    assert_eq!(
+        degraded, healthy,
+        "replica failure must not change the selection"
+    );
+    println!(
+        "    selection identical; {} shard(s) re-queued to survivors",
+        coordinator.metrics.shard_retries
+    );
+
+    // drain another: graceful shutdown, no new shards
+    transport.drain("replica-1");
+    println!("\nfleet query with replica-1 drained:");
+    let drained = fleet_reps(&mut coordinator);
+    assert_eq!(drained, healthy);
+    transport.with_registry(|reg| {
+        for r in reg.iter() {
+            println!(
+                "    {:<10} state {:?}, {} shard(s) completed",
+                r.id, r.state, r.jobs_done
+            );
+        }
+    });
+
+    let m = &coordinator.metrics;
+    println!(
+        "\nmetrics: fleet_queries={} shard_runs={} shard_retries={} replica_count={} \
+         wire_bytes_total={}",
+        m.fleet_queries, m.shard_runs, m.shard_retries, m.replica_count, m.wire_bytes_total
+    );
+    Ok(())
+}

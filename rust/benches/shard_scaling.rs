@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             threads: 0,
             seed: 0xEBC,
             cores: 0,
+            ..Default::default()
         };
         // planned (P x T <= cores split) vs the legacy unplanned fan-out
         for planned in [false, true] {

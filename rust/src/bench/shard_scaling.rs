@@ -8,8 +8,10 @@
 use crate::engine::{PlanRequest, ShardPlan};
 use crate::linalg::SharedMatrix;
 use crate::optim::build_optimizer;
-use crate::shard::{build_partitioner, ShardOracleFactory, ShardedSummarizer};
+use crate::shard::{build_partitioner, build_transport, ShardOracleFactory, ShardedSummarizer};
+use crate::util::json::{Json, ObjBuilder};
 use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Plan-builder seam for the sweep: the XLA backend's variant consults
@@ -37,6 +39,12 @@ pub struct ShardScalingPoint {
     pub speedup: f64,
     /// Planned worker × thread split label (`-` for unplanned runs).
     pub plan: String,
+    /// Transport the first stage ran over (`inproc` | `loopback`).
+    pub transport: String,
+    /// Wire bytes this measurement moved (job + result frames).
+    pub wire_bytes: u64,
+    /// Shards re-queued after replica failures during this measurement.
+    pub shard_retries: u64,
 }
 
 /// Sweep settings.
@@ -52,6 +60,10 @@ pub struct ShardSweepConfig {
     pub seed: u64,
     /// Core budget handed to the planner (0 = auto).
     pub cores: usize,
+    /// Shard-stage transport ([`crate::shard::TRANSPORTS`]).
+    pub transport: String,
+    /// Replica count for the `loopback` transport.
+    pub replicas: usize,
 }
 
 impl Default for ShardSweepConfig {
@@ -64,6 +76,8 @@ impl Default for ShardSweepConfig {
             threads: 0,
             seed: 0xEBC,
             cores: 0,
+            transport: "inproc".into(),
+            replicas: 2,
         }
     }
 }
@@ -80,6 +94,13 @@ pub fn shard_scaling_sweep(
 ) -> Result<Vec<ShardScalingPoint>> {
     let partitioner = build_partitioner(&cfg.partitioner, cfg.seed)
         .ok_or_else(|| anyhow!("unknown partitioner '{}'", cfg.partitioner))?;
+    let transport = build_transport(&cfg.transport, cfg.replicas).ok_or_else(|| {
+        anyhow!(
+            "unknown transport '{}' (expected one of {:?})",
+            cfg.transport,
+            crate::shard::TRANSPORTS
+        )
+    })?;
     let mut out = Vec::new();
     for alg in &cfg.algorithms {
         let optimizer = build_optimizer(alg, 1024)
@@ -88,6 +109,7 @@ pub fn shard_scaling_sweep(
         for &p in &cfg.shard_counts {
             let mut s = ShardedSummarizer::new(partitioner.as_ref(), optimizer.as_ref(), p);
             s.threads = cfg.threads;
+            s.transport = Some(transport.as_ref());
             let plan_label = match planner {
                 Some(build) => {
                     let mut req = PlanRequest::new(data.rows(), data.cols(), p, cfg.k);
@@ -126,10 +148,61 @@ pub fn shard_scaling_sweep(
                 },
                 speedup: if total > 0.0 { single_seconds / total } else { 0.0 },
                 plan: plan_label,
+                transport: res.transport.to_string(),
+                wire_bytes: res.wire_bytes,
+                shard_retries: res.shard_retries,
             });
         }
     }
     Ok(out)
+}
+
+/// Persist a sweep as `BENCH_shard.json` (the artifact the CI bench
+/// job uploads): the sweep config + one record per measurement,
+/// including the transport column and its wire-traffic counters.
+pub fn save_shard_json(
+    path: &Path,
+    cfg: &ShardSweepConfig,
+    points: &[ShardScalingPoint],
+) -> Result<PathBuf> {
+    let records: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            ObjBuilder::new()
+                .str("algorithm", p.algorithm.clone())
+                .int("shards", p.shards)
+                .int("shards_used", p.shards_used)
+                .num("shard_seconds", p.shard_seconds)
+                .num("merge_seconds", p.merge_seconds)
+                .num("total_seconds", p.total_seconds)
+                .num("single_seconds", p.single_seconds)
+                .num("f_merged", p.f_merged as f64)
+                .num("f_single", p.f_single as f64)
+                .num("quality_ratio", p.quality_ratio)
+                .num("speedup", p.speedup)
+                .str("plan", p.plan.clone())
+                .str("transport", p.transport.clone())
+                .int("wire_bytes", p.wire_bytes as usize)
+                .int("shard_retries", p.shard_retries as usize)
+                .build()
+        })
+        .collect();
+    let doc = ObjBuilder::new()
+        .str("bench", "shard_scaling")
+        .int("k", cfg.k)
+        .str("partitioner", cfg.partitioner.clone())
+        .str("transport", cfg.transport.clone())
+        .int("replicas", cfg.replicas)
+        .int("seed", cfg.seed as usize)
+        .val("points", Json::Arr(records))
+        .build();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.dump())?;
+    Ok(path.to_path_buf())
 }
 
 #[cfg(test)]
@@ -160,6 +233,9 @@ mod tests {
             assert!(pt.total_seconds > 0.0);
             assert!(pt.quality_ratio > 0.5, "{pt:?}");
             assert_eq!(pt.plan, "-");
+            assert_eq!(pt.transport, "inproc");
+            assert!(pt.wire_bytes > 0);
+            assert_eq!(pt.shard_retries, 0);
         }
         // P = 1 greedy is exactly the single-node run
         let p1 = &points[0];
@@ -189,6 +265,37 @@ mod tests {
     }
 
     #[test]
+    fn loopback_sweep_matches_inproc_and_exports_json() {
+        let mut rng = Rng::new(9);
+        let data = Arc::new(Matrix::random_normal(50, 4, &mut rng));
+        let cfg = ShardSweepConfig {
+            k: 3,
+            shard_counts: vec![1, 3],
+            ..Default::default()
+        };
+        let inproc = shard_scaling_sweep(&data, &factory(), &cfg, None).unwrap();
+        let lb_cfg = ShardSweepConfig {
+            transport: "loopback".into(),
+            replicas: 3,
+            ..cfg.clone()
+        };
+        let lb = shard_scaling_sweep(&data, &factory(), &lb_cfg, None).unwrap();
+        assert_eq!(lb.len(), inproc.len());
+        for (a, b) in lb.iter().zip(&inproc) {
+            assert_eq!(a.f_merged.to_bits(), b.f_merged.to_bits(), "P={}", a.shards);
+            assert_eq!(a.transport, "loopback");
+        }
+        let dir = std::env::temp_dir().join("ebc_shard_bench_test");
+        let path = save_shard_json(&dir.join("BENCH_shard.json"), &lb_cfg, &lb).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(parsed.get("transport").unwrap().as_str(), Some("loopback"));
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts[0].get("wire_bytes").unwrap().as_usize().unwrap() > 0);
+    }
+
+    #[test]
     fn sweep_rejects_unknown_names() {
         let mut rng = Rng::new(2);
         let data = Arc::new(Matrix::random_normal(10, 3, &mut rng));
@@ -202,5 +309,10 @@ mod tests {
             ..Default::default()
         };
         assert!(shard_scaling_sweep(&data, &factory(), &bad_part, None).is_err());
+        let bad_transport = ShardSweepConfig {
+            transport: "telepathy".into(),
+            ..Default::default()
+        };
+        assert!(shard_scaling_sweep(&data, &factory(), &bad_transport, None).is_err());
     }
 }

@@ -73,6 +73,12 @@ pub struct ShardSection {
     pub plan: bool,
     /// Core budget for planned fleet runs (0 = auto).
     pub cores: usize,
+    /// Shard-stage transport: one of [`crate::shard::TRANSPORTS`]
+    /// (`inproc` = threadpool workers, `loopback` = the replica
+    /// registry). Either way shards travel as wire-format frames.
+    pub transport: String,
+    /// Replica count for the `loopback` transport.
+    pub replicas: usize,
 }
 
 impl Default for ShardSection {
@@ -85,6 +91,8 @@ impl Default for ShardSection {
             seed: 0xEBC,
             plan: true,
             cores: 0,
+            transport: "inproc".into(),
+            replicas: 2,
         }
     }
 }
@@ -152,6 +160,13 @@ impl ServiceConfig {
                 crate::shard::PARTITIONERS
             );
         }
+        let transport = doc.str("shard.transport", "inproc");
+        if !crate::shard::TRANSPORTS.contains(&transport.as_str()) {
+            bail!(
+                "shard.transport: unknown '{transport}' (expected one of {:?})",
+                crate::shard::TRANSPORTS
+            );
+        }
         let machines = match doc.get("coordinator.machines") {
             Some(Value::StrArray(a)) => a.clone(),
             _ => vec![],
@@ -191,6 +206,8 @@ impl ServiceConfig {
                 seed: pos("shard.seed", 0xEBC)? as u64,
                 plan: doc.bool("shard.plan", true),
                 cores: pos("shard.cores", 0)?,
+                transport,
+                replicas: pos("shard.replicas", 2)?.max(1),
             },
             machines,
         })
@@ -233,6 +250,8 @@ per_shard_k = 12
 seed = 99
 plan = false
 cores = 6
+transport = "loopback"
+replicas = 5
 "#,
         )
         .unwrap();
@@ -252,6 +271,8 @@ cores = 6
         assert_eq!(c.shard.seed, 99);
         assert!(!c.shard.plan);
         assert_eq!(c.shard.cores, 6);
+        assert_eq!(c.shard.transport, "loopback");
+        assert_eq!(c.shard.replicas, 5);
         assert_eq!(c.machines, vec!["cover-line", "plate-line"]);
     }
 
@@ -268,6 +289,21 @@ cores = 6
         assert_eq!(c.shard.threads, 0);
         assert!(c.shard.plan);
         assert_eq!(c.shard.cores, 0);
+        assert_eq!(c.shard.transport, "inproc");
+        assert_eq!(c.shard.replicas, 2);
+    }
+
+    #[test]
+    fn rejects_unknown_transport() {
+        let doc = ConfigDoc::parse("[shard]\ntransport = \"telepathy\"\n").unwrap();
+        assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn replicas_clamped_to_at_least_one() {
+        let doc = ConfigDoc::parse("[shard]\ntransport = \"loopback\"\nreplicas = 0\n").unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.shard.replicas, 1);
     }
 
     #[test]

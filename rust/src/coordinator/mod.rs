@@ -27,12 +27,14 @@
 pub mod backpressure;
 pub mod batcher;
 pub mod machine;
+pub mod replica;
 pub mod router;
 pub mod service;
 pub mod snapshot;
 pub mod stream;
 
 pub use machine::{MachineState, Summary};
+pub use replica::{Replica, ReplicaRegistry, ReplicaState};
 pub use router::{FleetSummary, RouteResult, Router, FLEET_QUERY};
 pub use service::{Coordinator, CoordinatorMetrics, OracleFactory};
 pub use stream::{CycleRecord, SimulatedFleet, StreamSource};

@@ -1,0 +1,296 @@
+//! Replica registry for remote shard execution: the coordinator-side
+//! bookkeeping of which worker replicas exist, whether they are healthy
+//! (logical-clock heartbeats), whether they accept new shards
+//! (drain state), and how shards are dealt across them (capacity-
+//! weighted, deterministic).
+//!
+//! The registry is transport-agnostic plain state: the loopback
+//! transport ([`crate::shard::transport::LoopbackReplicaTransport`])
+//! drives it in-process today; a future socket transport reuses it
+//! unchanged — register on connect, heartbeat on keepalive, drain on
+//! graceful shutdown, [`ReplicaRegistry::expire`] on missed heartbeats.
+
+use std::collections::BTreeMap;
+
+/// Lifecycle of one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Healthy: accepts new shard assignments.
+    Alive,
+    /// Graceful shutdown: finishes nothing new, receives no new shards.
+    Draining,
+    /// Failed or expired: its in-flight shards are re-queued.
+    Dead,
+}
+
+/// One registered worker replica.
+#[derive(Debug, Clone)]
+pub struct Replica {
+    pub id: String,
+    /// Relative share of the shard deal (≥ 1).
+    pub capacity: usize,
+    pub state: ReplicaState,
+    /// Logical-clock time of the last heartbeat.
+    pub last_heartbeat: u64,
+    /// Shards this replica completed successfully.
+    pub jobs_done: u64,
+    /// Failure injection for tests/chaos runs: the replica dies after
+    /// completing this many further jobs.
+    pub fail_after: Option<u64>,
+}
+
+impl Replica {
+    /// May this replica receive new shards?
+    pub fn assignable(&self) -> bool {
+        self.state == ReplicaState::Alive
+    }
+}
+
+/// Registry of worker replicas keyed by id (sorted, so every walk is
+/// deterministic).
+#[derive(Debug, Default)]
+pub struct ReplicaRegistry {
+    replicas: BTreeMap<String, Replica>,
+    /// Logical clock: advanced by [`Self::tick`], read by heartbeats.
+    clock: u64,
+}
+
+impl ReplicaRegistry {
+    pub fn new() -> ReplicaRegistry {
+        ReplicaRegistry::default()
+    }
+
+    /// Register (or revive) a replica. Re-registering an existing id
+    /// resets it to `Alive` with a fresh heartbeat — the crash-restart
+    /// path — but keeps its completed-job count.
+    pub fn register(&mut self, id: &str, capacity: usize) {
+        let clock = self.clock;
+        self.replicas
+            .entry(id.to_string())
+            .and_modify(|r| {
+                r.capacity = capacity.max(1);
+                r.state = ReplicaState::Alive;
+                r.last_heartbeat = clock;
+                r.fail_after = None;
+            })
+            .or_insert_with(|| Replica {
+                id: id.to_string(),
+                capacity: capacity.max(1),
+                state: ReplicaState::Alive,
+                last_heartbeat: clock,
+                jobs_done: 0,
+                fail_after: None,
+            });
+    }
+
+    /// Advance the logical clock (one scheduler round / keepalive period).
+    pub fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Record a heartbeat. Returns `false` for unknown or dead replicas
+    /// (a dead replica must re-register, not just ping).
+    pub fn heartbeat(&mut self, id: &str) -> bool {
+        let clock = self.clock;
+        match self.replicas.get_mut(id) {
+            Some(r) if r.state != ReplicaState::Dead => {
+                r.last_heartbeat = clock;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Mark every non-dead replica whose last heartbeat is older than
+    /// `max_age` ticks as dead; returns the expired ids.
+    pub fn expire(&mut self, max_age: u64) -> Vec<String> {
+        let clock = self.clock;
+        let mut expired = Vec::new();
+        for r in self.replicas.values_mut() {
+            if r.state != ReplicaState::Dead && clock.saturating_sub(r.last_heartbeat) > max_age {
+                r.state = ReplicaState::Dead;
+                expired.push(r.id.clone());
+            }
+        }
+        expired
+    }
+
+    /// Graceful shutdown: the replica stops receiving new shards.
+    pub fn drain(&mut self, id: &str) -> bool {
+        match self.replicas.get_mut(id) {
+            Some(r) if r.state == ReplicaState::Alive => {
+                r.state = ReplicaState::Draining;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Hard failure: the replica is dead; its shards get re-queued.
+    pub fn kill(&mut self, id: &str) -> bool {
+        match self.replicas.get_mut(id) {
+            Some(r) if r.state != ReplicaState::Dead => {
+                r.state = ReplicaState::Dead;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Forget a replica entirely.
+    pub fn remove(&mut self, id: &str) -> bool {
+        self.replicas.remove(id).is_some()
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Replica> {
+        self.replicas.get(id)
+    }
+
+    pub fn get_mut(&mut self, id: &str) -> Option<&mut Replica> {
+        self.replicas.get_mut(id)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Replica> {
+        self.replicas.values()
+    }
+
+    /// Registered replicas (any state).
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Replicas currently accepting shards.
+    pub fn alive(&self) -> usize {
+        self.replicas.values().filter(|r| r.assignable()).count()
+    }
+
+    /// Deal `items` across the assignable replicas, capacity-weighted
+    /// and deterministic: each replica contributes `capacity` slots
+    /// (sorted by id), items go round-robin over the slot ring. Returns
+    /// `(replica id, its items)` pairs; empty when no replica is
+    /// assignable.
+    pub fn assign<T: Copy>(&self, items: &[T]) -> Vec<(String, Vec<T>)> {
+        let workers: Vec<&Replica> = self.replicas.values().filter(|r| r.assignable()).collect();
+        if workers.is_empty() || items.is_empty() {
+            return Vec::new();
+        }
+        let mut slots: Vec<usize> = Vec::new();
+        for (w, r) in workers.iter().enumerate() {
+            slots.extend(std::iter::repeat_n(w, r.capacity.max(1)));
+        }
+        let mut per_worker: Vec<Vec<T>> = vec![Vec::new(); workers.len()];
+        for (i, &item) in items.iter().enumerate() {
+            per_worker[slots[i % slots.len()]].push(item);
+        }
+        workers
+            .iter()
+            .zip(per_worker)
+            .filter(|(_, items)| !items.is_empty())
+            .map(|(r, items)| (r.id.clone(), items))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry(n: usize) -> ReplicaRegistry {
+        let mut reg = ReplicaRegistry::new();
+        for i in 0..n {
+            reg.register(&format!("replica-{i}"), 1);
+        }
+        reg
+    }
+
+    #[test]
+    fn register_heartbeat_expire_lifecycle() {
+        let mut reg = registry(2);
+        assert_eq!(reg.alive(), 2);
+        // replica-1 keeps pinging, replica-0 goes silent
+        for _ in 0..5 {
+            reg.tick();
+            assert!(reg.heartbeat("replica-1"));
+        }
+        let expired = reg.expire(3);
+        assert_eq!(expired, vec!["replica-0".to_string()]);
+        assert_eq!(reg.alive(), 1);
+        assert_eq!(reg.get("replica-0").unwrap().state, ReplicaState::Dead);
+        // dead replicas cannot heartbeat back to life...
+        assert!(!reg.heartbeat("replica-0"));
+        // ...but can re-register (crash-restart)
+        reg.register("replica-0", 2);
+        assert_eq!(reg.alive(), 2);
+        assert_eq!(reg.get("replica-0").unwrap().capacity, 2);
+        // unknown ids are rejected
+        assert!(!reg.heartbeat("ghost"));
+    }
+
+    #[test]
+    fn drain_excludes_from_assignment_but_is_not_dead() {
+        let mut reg = registry(3);
+        assert!(reg.drain("replica-1"));
+        assert_eq!(reg.alive(), 2);
+        assert_eq!(reg.get("replica-1").unwrap().state, ReplicaState::Draining);
+        let jobs: Vec<usize> = (0..6).collect();
+        for (id, _) in reg.assign(&jobs) {
+            assert_ne!(id, "replica-1");
+        }
+        // draining twice is a no-op; draining a dead replica fails
+        assert!(!reg.drain("replica-1"));
+        reg.kill("replica-2");
+        assert!(!reg.drain("replica-2"));
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_capacity_weighted() {
+        let mut reg = ReplicaRegistry::new();
+        reg.register("big", 3);
+        reg.register("small", 1);
+        let jobs: Vec<usize> = (0..8).collect();
+        let a = reg.assign(&jobs);
+        assert_eq!(a, reg.assign(&jobs), "same state must deal identically");
+        let total: usize = a.iter().map(|(_, j)| j.len()).sum();
+        assert_eq!(total, 8);
+        let big = a.iter().find(|(id, _)| id == "big").unwrap().1.len();
+        let small = a.iter().find(|(id, _)| id == "small").unwrap().1.len();
+        assert_eq!(big, 6);
+        assert_eq!(small, 2);
+        // all jobs accounted for exactly once
+        let mut seen: Vec<usize> = a.iter().flat_map(|(_, j)| j.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, jobs);
+    }
+
+    #[test]
+    fn assign_with_no_replicas_is_empty() {
+        let reg = ReplicaRegistry::new();
+        assert!(reg.assign(&[1usize, 2]).is_empty());
+        let mut reg = registry(1);
+        reg.kill("replica-0");
+        assert!(reg.assign(&[1usize]).is_empty());
+        assert!(reg.assign::<usize>(&[]).is_empty());
+    }
+
+    #[test]
+    fn kill_then_assign_skips_dead() {
+        let mut reg = registry(3);
+        assert!(reg.kill("replica-0"));
+        assert!(!reg.kill("replica-0"), "double kill is a no-op");
+        let jobs: Vec<usize> = (0..4).collect();
+        let a = reg.assign(&jobs);
+        assert!(a.iter().all(|(id, _)| id != "replica-0"));
+        assert_eq!(a.iter().map(|(_, j)| j.len()).sum::<usize>(), 4);
+        assert!(reg.remove("replica-0"));
+        assert_eq!(reg.len(), 2);
+    }
+}

@@ -9,7 +9,7 @@ use crate::coordinator::stream::{CycleRecord, StreamSource};
 use crate::engine::{KernelImpl, OracleSpec, PlanRequest, PlanSource, ShardPlan};
 use crate::linalg::{Matrix, SharedMatrix};
 use crate::optim::{build_optimizer, Optimizer};
-use crate::shard::{build_partitioner, ShardedSummarizer};
+use crate::shard::{build_partitioner, ShardTransport, ShardedSummarizer};
 use crate::submodular::Oracle;
 use crate::util::timer::Profile;
 use std::collections::BTreeMap;
@@ -41,6 +41,13 @@ pub struct CoordinatorMetrics {
     pub shard_runs: u64,
     /// Cumulative wall-clock of fleet-query merge stages.
     pub shard_merge_seconds_total: f64,
+    /// Worker replicas currently accepting shards (0 for the in-process
+    /// transport; refreshed on every fleet query).
+    pub replica_count: u64,
+    /// Shards re-queued after replica failures (cumulative).
+    pub shard_retries: u64,
+    /// Bytes moved over the shard transport (job + result frames).
+    pub wire_bytes_total: u64,
 }
 
 /// The streaming summarization coordinator.
@@ -56,6 +63,10 @@ pub struct Coordinator {
     /// fleet queries over a stable fleet reuse the plan (and therefore
     /// the engine's loaded executables) instead of re-planning.
     plan_cache: BTreeMap<(usize, usize, usize), Arc<ShardPlan>>,
+    /// Shard transport fleet queries dispatch stage 1 over (built from
+    /// `[shard] transport`, swappable via [`Self::with_transport`]).
+    /// Persistent across queries so replica state survives.
+    transport: Box<dyn ShardTransport>,
     pub metrics: CoordinatorMetrics,
     pub profile: Profile,
     version: u64,
@@ -72,6 +83,10 @@ impl Coordinator {
             }
             machines.insert(name.clone(), MachineState::new(name, cfg.summary.window.max(1)));
         }
+        let transport = crate::shard::build_transport(&cfg.shard.transport, cfg.shard.replicas)
+            .unwrap_or_else(|| {
+                unreachable!("schema validated transport '{}'", cfg.shard.transport)
+            });
         Coordinator {
             cfg,
             queue,
@@ -79,6 +94,7 @@ impl Coordinator {
             oracle_factory,
             planner: None,
             plan_cache: BTreeMap::new(),
+            transport,
             metrics: CoordinatorMetrics::default(),
             profile: Profile::new(),
             version: 0,
@@ -91,6 +107,18 @@ impl Coordinator {
     pub fn with_planner(mut self, planner: PlanSource) -> Coordinator {
         self.planner = Some(planner);
         self
+    }
+
+    /// Replace the shard transport (e.g. a pre-populated replica fleet
+    /// the caller keeps a handle to — see `examples/replica_fleet.rs`).
+    pub fn with_transport(mut self, transport: Box<dyn ShardTransport>) -> Coordinator {
+        self.transport = transport;
+        self
+    }
+
+    /// The shard transport fleet queries run over.
+    pub fn transport(&self) -> &dyn ShardTransport {
+        self.transport.as_ref()
     }
 
     /// Get (building + caching on first use) the fleet plan for a
@@ -286,6 +314,7 @@ impl Coordinator {
         sharded.per_shard_k = sc.per_shard_k;
         sharded.merge_batch = self.cfg.engine.batch;
         sharded.plan = plan;
+        sharded.transport = Some(self.transport.as_ref());
         let k = self.cfg.summary.k.min(fleet_matrix.rows());
         let factory =
             |m: SharedMatrix, spec: &OracleSpec| (self.oracle_factory)(m, spec);
@@ -295,6 +324,9 @@ impl Coordinator {
 
         self.metrics.shard_runs += res.shards_used as u64;
         self.metrics.shard_merge_seconds_total += res.merge_seconds;
+        self.metrics.shard_retries += res.shard_retries;
+        self.metrics.wire_bytes_total += res.wire_bytes;
+        self.metrics.replica_count = self.transport.replica_count() as u64;
 
         RouteResult::Fleet(FleetSummary {
             representatives: res
@@ -491,9 +523,65 @@ mod tests {
         assert_eq!(c.metrics.shard_runs, 2);
         assert!(c.metrics.shard_merge_seconds_total > 0.0);
         assert_eq!(c.metrics.queries, 1); // fleet queries count as queries too
+        assert!(c.metrics.wire_bytes_total > 0, "fleet query moved no wire bytes");
+        assert_eq!(c.metrics.shard_retries, 0);
+        assert_eq!(c.metrics.replica_count, 0, "inproc transport has no replicas");
+        let bytes_after_one = c.metrics.wire_bytes_total;
         c.query(FLEET_QUERY);
         assert_eq!(c.metrics.fleet_queries, 2);
         assert_eq!(c.metrics.shard_runs, 4);
+        assert_eq!(c.metrics.wire_bytes_total, 2 * bytes_after_one);
+    }
+
+    #[test]
+    fn loopback_fleet_query_survives_replica_failure_with_identical_reps() {
+        use crate::shard::LoopbackReplicaTransport;
+        use std::sync::Arc as StdArc;
+        let mk = |transport: Option<Box<dyn ShardTransport>>| {
+            let mut cfg = cfg(3, 1000, 100);
+            cfg.shard.shards = 4;
+            let mut c = Coordinator::new(cfg, cpu_factory());
+            if let Some(t) = transport {
+                c = c.with_transport(t);
+            }
+            for m in ["m1", "m2", "m3"] {
+                for s in 0..10u64 {
+                    c.offer(rec(m, s, (s as f32) * 1.7 + m.len() as f32));
+                }
+            }
+            while c.queue_len() > 0 {
+                c.tick();
+            }
+            c
+        };
+        let reps_of = |c: &mut Coordinator| match c.query(FLEET_QUERY) {
+            RouteResult::Fleet(f) => f.representatives,
+            other => panic!("{other:?}"),
+        };
+
+        let mut healthy = mk(None);
+        let want = reps_of(&mut healthy);
+
+        let chaos = StdArc::new(LoopbackReplicaTransport::with_replicas(3, 1));
+        chaos.fail_after("replica-0", 1); // dies after its first shard
+        let mut degraded = mk(Some(Box::new(StdArc::clone(&chaos))));
+        let got = reps_of(&mut degraded);
+        assert_eq!(got, want, "replica failure changed the selection");
+        assert!(degraded.metrics.shard_retries >= 1, "no retry counted");
+        assert_eq!(degraded.metrics.replica_count, 2, "dead replica still counted");
+        assert!(degraded.metrics.wire_bytes_total > 0);
+
+        // a drained replica receives no new shards on the next query
+        let done_before = chaos.with_registry(|r| r.get("replica-2").unwrap().jobs_done);
+        chaos.drain("replica-2");
+        let again = reps_of(&mut degraded);
+        assert_eq!(again, want);
+        assert_eq!(
+            chaos.with_registry(|r| r.get("replica-2").unwrap().jobs_done),
+            done_before,
+            "drained replica still received shards"
+        );
+        assert_eq!(degraded.metrics.replica_count, 1);
     }
 
     #[test]

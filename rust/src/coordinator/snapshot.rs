@@ -44,6 +44,9 @@ pub fn snapshot(c: &Coordinator) -> Json {
                 .int("fleet_queries", m.fleet_queries as usize)
                 .int("shard_runs", m.shard_runs as usize)
                 .num("shard_merge_seconds_total", m.shard_merge_seconds_total)
+                .int("replica_count", m.replica_count as usize)
+                .int("shard_retries", m.shard_retries as usize)
+                .int("wire_bytes_total", m.wire_bytes_total as usize)
                 .build(),
         )
         .val("machines", Json::Arr(machines))

@@ -107,6 +107,9 @@ fn app() -> AppSpec {
                     ),
                     flag("plan", "pre-plan bucket shape + P x T core split per shard count"),
                     opt("cores", "core budget for --plan (0 = auto)", "0"),
+                    opt("transport", "shard-stage transport: inproc | loopback", "inproc"),
+                    opt("replicas", "replica count for --transport loopback", "2"),
+                    opt("out", "output JSON path", "BENCH_shard.json"),
                 ],
             },
             CommandSpec {
@@ -446,13 +449,18 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         oracle_backend(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
     let planned = m.has("plan");
     let cores = m.usize("cores")?;
+    // validated by shard_scaling_sweep's build_transport (one registry,
+    // one check — mirrors how --partitioner is handled)
+    let transport = m.str("transport")?.to_string();
+    let replicas = m.usize("replicas")?.max(1);
 
     log::info!("generating IMM dataset (cover/stable, d={samples})");
     let data: SharedMatrix = Arc::new(
         ebc::imm::generate_dataset_with(Part::Cover, ProcessState::Stable, seed, samples).cycles,
     );
     println!(
-        "shard scaling sweep: {}x{} IMM cycles, k={k}, partitioner={}, threads={}{}",
+        "shard scaling sweep: {}x{} IMM cycles, k={k}, partitioner={}, threads={}, \
+         transport={transport}{}{}",
         data.rows(),
         data.cols(),
         m.str("partitioner")?,
@@ -460,6 +468,11 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
             ebc::util::threadpool::default_threads()
         } else {
             threads
+        },
+        if transport == "loopback" {
+            format!(" ({replicas} replicas)")
+        } else {
+            String::new()
         },
         if planned { " (planned)" } else { "" }
     );
@@ -472,6 +485,8 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         threads,
         seed,
         cores,
+        transport,
+        replicas,
     };
     let plan_source = be.planner();
     if planned {
@@ -491,8 +506,8 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
     let mut rep = Reporter::new(
         "shard-bench: two-stage wall-clock vs single-node",
         &[
-            "algorithm", "P", "plan", "shard_s", "merge_s", "total_s", "single_s",
-            "speedup", "f_merged", "f_single", "quality",
+            "algorithm", "P", "plan", "transport", "wire_kB", "retries", "shard_s",
+            "merge_s", "total_s", "single_s", "speedup", "f_merged", "f_single", "quality",
         ],
     );
     for p in &points {
@@ -500,6 +515,9 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
             p.algorithm.clone(),
             p.shards.to_string(),
             p.plan.clone(),
+            p.transport.clone(),
+            format!("{:.1}", p.wire_bytes as f64 / 1e3),
+            p.shard_retries.to_string(),
             fmt_secs(p.shard_seconds),
             fmt_secs(p.merge_seconds),
             fmt_secs(p.total_seconds),
@@ -515,6 +533,9 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => log::warn!("csv export failed: {e}"),
     }
+    let out = std::path::PathBuf::from(m.str("out")?);
+    let path = ebc::bench::save_shard_json(&out, &cfg, &points)?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

@@ -35,10 +35,21 @@
 //! the merge stage, plus a P-worker × T-kernel-thread CPU split with
 //! P·T ≤ cores — instead of P independently-planned, oversubscribed
 //! engines.
+//!
+//! Stage 1 is dispatched through the [`transport`] seam: jobs and
+//! results travel as [`wire`]-format frames (versioned, checksummed)
+//! whether the executor is the local threadpool
+//! ([`InProcessTransport`]) or a registered worker replica
+//! ([`LoopbackReplicaTransport`] today; a socket transport is the
+//! remaining step to true multi-node fleets). Every sharded run
+//! round-trips its shards through encode/decode, so the wire contract
+//! is continuously exercised.
 
 pub mod merge;
 pub mod partition;
 pub mod summarizer;
+pub mod transport;
+pub mod wire;
 
 pub use crate::engine::{plan_cpu_split, OracleSpec, PlanRequest, PlanSource, ShardPlan};
 pub use merge::greedy_merge;
@@ -47,3 +58,8 @@ pub use partition::{
     Partitioner, RoundRobinPartitioner, PARTITIONERS,
 };
 pub use summarizer::{ShardOracleFactory, ShardRun, ShardedResult, ShardedSummarizer};
+pub use transport::{
+    build_transport, ExecCtx, InProcessTransport, LoopbackReplicaTransport, ShardTransport,
+    TransportError, TransportSnapshot, TRANSPORTS,
+};
+pub use wire::{ShardJobMsg, ShardResultMsg, WireError, WirePlan};

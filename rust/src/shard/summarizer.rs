@@ -1,13 +1,16 @@
 //! The sharded two-stage summarizer (partition → per-shard optimize →
 //! greedy merge) — see the module docs in [`crate::shard`].
 
-use crate::engine::{OracleSpec, ShardPlan};
+use crate::engine::{KernelImpl, OracleSpec, Precision, ShardPlan};
+use crate::linalg::gemm::CpuKernel;
 use crate::linalg::SharedMatrix;
 use crate::optim::{Optimizer, SummaryResult};
 use crate::shard::merge::greedy_merge;
 use crate::shard::partition::Partitioner;
+use crate::shard::transport::{ExecCtx, InProcessTransport, ShardTransport};
+use crate::shard::wire::{ShardJobMsg, ShardResultMsg, WirePlan};
 use crate::submodular::Oracle;
-use crate::util::threadpool::{default_threads, par_map};
+use crate::util::threadpool::default_threads;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -30,6 +33,24 @@ pub struct ShardRun {
     pub result: SummaryResult,
 }
 
+impl ShardRun {
+    /// Lift a wire result message into the in-process representation.
+    fn from_msg(msg: &ShardResultMsg) -> ShardRun {
+        ShardRun {
+            shard: msg.shard as usize,
+            size: msg.size as usize,
+            result: SummaryResult {
+                indices: msg.indices.iter().map(|&i| i as usize).collect(),
+                f_trajectory: msg.f_trajectory.clone(),
+                f_final: msg.f_final,
+                wall_seconds: msg.wall_seconds,
+                oracle_calls: msg.oracle_calls as usize,
+                oracle_work: msg.oracle_work,
+            },
+        }
+    }
+}
+
 /// Outcome of a sharded summarization.
 #[derive(Debug, Clone)]
 pub struct ShardedResult {
@@ -50,6 +71,12 @@ pub struct ShardedResult {
     /// Single-node reference run, when requested via
     /// [`ShardedSummarizer::summarize_with_baseline`].
     pub baseline: Option<SummaryResult>,
+    /// Transport the first stage ran over.
+    pub transport: &'static str,
+    /// Wire bytes this run moved (job + result frames, both legs).
+    pub wire_bytes: u64,
+    /// Shards re-queued after replica failures during this run.
+    pub shard_retries: u64,
 }
 
 impl ShardedResult {
@@ -93,6 +120,11 @@ pub struct ShardedSummarizer<'a> {
     /// oracles) and, for engine oracles, the shared bucket/executable
     /// set. `None` = legacy unplanned behavior.
     pub plan: Option<Arc<ShardPlan>>,
+    /// First-stage transport. `None` = a run-local
+    /// [`InProcessTransport`]; either way every shard round-trips
+    /// through the [`crate::shard::wire`] encode/decode — there is no
+    /// direct-call path.
+    pub transport: Option<&'a dyn ShardTransport>,
 }
 
 impl<'a> ShardedSummarizer<'a> {
@@ -109,6 +141,7 @@ impl<'a> ShardedSummarizer<'a> {
             per_shard_k: 0,
             merge_batch: 1024,
             plan: None,
+            transport: None,
         }
     }
 
@@ -158,10 +191,12 @@ impl<'a> ShardedSummarizer<'a> {
             .collect();
         let partition_seconds = t0.elapsed().as_secs_f64();
 
-        // ---- stage 1: per-shard optimization on the worker pool ------
+        // ---- stage 1: per-shard optimization through the transport ---
         // a plan pins the worker × kernel-thread split; unplanned runs
         // keep the legacy `threads` semantics (each oracle at factory
-        // defaults)
+        // defaults). Every shard travels as a wire-format job frame and
+        // comes back as a result frame — the in-process transport runs
+        // the same encode/decode round trip a remote replica would.
         let t1 = Instant::now();
         let shard_k = if self.per_shard_k == 0 { k } else { self.per_shard_k };
         let (threads, shard_spec) = match &self.plan {
@@ -171,16 +206,48 @@ impl<'a> ShardedSummarizer<'a> {
                 (t, OracleSpec::unplanned())
             }
         };
-        let per_shard: Vec<ShardRun> = par_map(&jobs, threads, |(shard, part)| {
-            let sub = Arc::new(data.gather(part));
-            let mut oracle = factory(sub, &shard_spec);
-            let mut res = self.optimizer.run(oracle.as_mut(), shard_k.min(part.len()));
-            // map shard-local indices back to the global ground set
-            for idx in res.indices.iter_mut() {
-                *idx = part[*idx];
+        // NOTE: materializing every job up front holds one full copy of
+        // the ground matrix (the gathered sub-matrices) for the whole
+        // stage — the price of re-queueable, transport-agnostic jobs.
+        // The ROADMAP's memory-budgeting item covers streaming/dropping
+        // job payloads per completed shard for edge-sized deployments.
+        let msgs: Vec<ShardJobMsg> = jobs
+            .iter()
+            .map(|(shard, part)| self.job_for(*shard, part, data, shard_k, &shard_spec))
+            .collect();
+        let ctx = ExecCtx::local(factory, self.optimizer, shard_spec.plan.clone(), threads);
+        let local = InProcessTransport::default();
+        // `transport` aliases `local` when no external transport is set
+        let external = self.transport.is_some();
+        let transport: &dyn ShardTransport = self.transport.unwrap_or(&local);
+        let stats_before = transport.stats();
+        let mut transport_name = transport.name();
+        let mut fell_back = false;
+        let results: Vec<ShardResultMsg> = match transport.run_jobs(&msgs, &ctx) {
+            Ok(r) => r,
+            Err(e) => {
+                // a dead replica fleet must not kill the query: degrade
+                // to the in-process transport (still wire-routed)
+                log::error!(
+                    "shard transport '{}' failed ({e}); re-running on the in-process transport",
+                    transport.name()
+                );
+                fell_back = true;
+                transport_name = local.name();
+                local
+                    .run_jobs(&msgs, &ctx)
+                    .unwrap_or_else(|e| panic!("in-process shard transport failed: {e}"))
             }
-            ShardRun { shard: *shard, size: part.len(), result: res }
-        });
+        };
+        let mut stats = transport.stats().since(stats_before);
+        // when `transport` IS `local`, its counters already cover every
+        // attempt — only an external transport's fallback adds traffic
+        if fell_back && external {
+            let extra = local.stats();
+            stats.wire_bytes += extra.wire_bytes;
+            stats.shard_retries += extra.shard_retries;
+        }
+        let per_shard: Vec<ShardRun> = results.iter().map(ShardRun::from_msg).collect();
         let shard_seconds = t1.elapsed().as_secs_f64();
 
         // ---- stage 2: greedy merge over the union of shard picks -----
@@ -215,6 +282,42 @@ impl<'a> ShardedSummarizer<'a> {
             shard_seconds,
             merge_seconds,
             baseline,
+            transport: transport_name,
+            wire_bytes: stats.wire_bytes,
+            shard_retries: stats.shard_retries,
+        }
+    }
+
+    /// Build one shard's wire job: the gathered sub-matrix, its global
+    /// ground ids, the optimizer id + budget, and the oracle knobs
+    /// (from the plan when the run is planned, engine defaults
+    /// otherwise — local factories carry their own backend config; the
+    /// knobs matter to true remote workers).
+    fn job_for(
+        &self,
+        shard: usize,
+        part: &[usize],
+        data: &SharedMatrix,
+        shard_k: usize,
+        spec: &OracleSpec,
+    ) -> ShardJobMsg {
+        let (precision, cpu_kernel, kernel) = match &self.plan {
+            Some(p) => (p.precision, p.cpu_kernel, p.kernel),
+            None => (Precision::F32, CpuKernel::Blocked, KernelImpl::Jnp),
+        };
+        ShardJobMsg {
+            shard: shard as u32,
+            k: shard_k.min(part.len()) as u32,
+            batch: self.merge_batch.max(1) as u32,
+            optimizer: self.optimizer.name().to_string(),
+            payload: Precision::F32,
+            precision,
+            cpu_kernel,
+            kernel,
+            threads: spec.threads.map(|t| t as u32),
+            plan: self.plan.as_ref().map(|p| WirePlan::of(p)),
+            ground_ids: part.iter().map(|&i| i as u64).collect(),
+            data: data.gather(part),
         }
     }
 }
@@ -315,6 +418,29 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn every_run_reports_wire_traffic_and_transport() {
+        use crate::shard::transport::LoopbackReplicaTransport;
+        let v = data(30, 4, 5);
+        let greedy = Greedy::default();
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let s = ShardedSummarizer::new(part.as_ref(), &greedy, 3);
+        // default transport: in-process, but still wire-routed
+        let res = s.summarize(&v, &cpu_factory(), 3);
+        assert_eq!(res.transport, "inproc");
+        assert!(res.wire_bytes > 0, "no bytes crossed the wire");
+        assert_eq!(res.shard_retries, 0);
+        // explicit loopback transport selects identically
+        let lb = LoopbackReplicaTransport::with_replicas(2, 1);
+        let mut s2 = ShardedSummarizer::new(part.as_ref(), &greedy, 3);
+        s2.transport = Some(&lb);
+        let res2 = s2.summarize(&v, &cpu_factory(), 3);
+        assert_eq!(res2.transport, "loopback");
+        assert_eq!(res2.merged.indices, res.merged.indices);
+        assert_eq!(res2.merged.f_final.to_bits(), res.merged.f_final.to_bits());
+        assert_eq!(res2.wire_bytes, res.wire_bytes, "same jobs, same frames");
     }
 
     #[test]

@@ -1,0 +1,692 @@
+//! The shard transport seam: how first-stage shard jobs reach their
+//! executors.
+//!
+//! Every transport speaks the [`crate::shard::wire`] format on **both**
+//! legs — jobs are encoded and re-decoded before execution, results are
+//! encoded and re-decoded before they return — so the wire contract is
+//! exercised on every sharded run, not just on remote ones, and a
+//! remote implementation cannot drift from the local semantics without
+//! a test catching it.
+//!
+//! Two implementations:
+//!
+//! * [`InProcessTransport`] — the threadpool path: jobs fan out over
+//!   [`par_map`] workers in this process. The default.
+//! * [`LoopbackReplicaTransport`] — the replica path: jobs are dealt
+//!   across registered worker replicas
+//!   ([`crate::coordinator::replica::ReplicaRegistry`]) by capacity;
+//!   a replica failing mid-run gets its unfinished shards re-queued to
+//!   the survivors (counted as `shard_retries`), and a drained replica
+//!   receives no new shards. Replicas execute in-process here — the
+//!   registry/assignment/retry machinery is exactly what a socket
+//!   transport reuses, with the loopback call replaced by a connection.
+//!
+//! Execution itself ([`execute_job`]) is a pure function of the decoded
+//! job: build the oracle through the factory seam, run the optimizer,
+//! map the selection back to ground ids. Local transports pass the live
+//! optimizer and plan through [`ExecCtx`]; a true remote worker
+//! reconstructs both from the job alone ([`ExecCtx::remote`] — the
+//! registry optimizer by id, the plan from its serialized scalar core).
+
+use crate::engine::{OracleSpec, ShardPlan};
+use crate::optim::{build_optimizer, Optimizer};
+use crate::shard::summarizer::ShardOracleFactory;
+use crate::shard::wire::{
+    decode_job, decode_result, encode_job, encode_result, ShardJobMsg, ShardResultMsg, WireError,
+};
+use crate::util::threadpool::par_map;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use crate::coordinator::replica::{Replica, ReplicaRegistry, ReplicaState};
+
+/// Transport names accepted by [`build_transport`] (and therefore by
+/// `shard.transport` in the config schema and the CLI flag).
+pub const TRANSPORTS: &[&str] = &["inproc", "loopback"];
+
+/// Why a transport could not complete a job set.
+#[derive(Debug)]
+pub enum TransportError {
+    /// A frame failed to decode (corruption on a real link; a bug in a
+    /// loopback one).
+    Wire(WireError),
+    /// The job names an optimizer the executor's registry lacks.
+    UnknownOptimizer(String),
+    /// No assignable replica remains while shards are still unassigned.
+    NoReplicas { unassigned: usize },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Wire(e) => write!(f, "wire error: {e}"),
+            TransportError::UnknownOptimizer(name) => {
+                write!(f, "job optimizer '{name}' is not in the registry")
+            }
+            TransportError::NoReplicas { unassigned } => {
+                write!(f, "no assignable replica left ({unassigned} shard(s) unassigned)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> TransportError {
+        TransportError::Wire(e)
+    }
+}
+
+/// Cumulative transport counters (monotone; read via
+/// [`ShardTransport::stats`], diffed per run by the summarizer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TransportSnapshot {
+    /// Bytes that crossed the wire (job + result frames, both legs).
+    pub wire_bytes: u64,
+    /// Shards re-queued after a replica failure.
+    pub shard_retries: u64,
+}
+
+impl TransportSnapshot {
+    /// Counter deltas since `earlier`.
+    pub fn since(&self, earlier: TransportSnapshot) -> TransportSnapshot {
+        TransportSnapshot {
+            wire_bytes: self.wire_bytes.saturating_sub(earlier.wire_bytes),
+            shard_retries: self.shard_retries.saturating_sub(earlier.shard_retries),
+        }
+    }
+}
+
+#[derive(Default)]
+struct TransportStats {
+    wire_bytes: AtomicU64,
+    shard_retries: AtomicU64,
+}
+
+impl TransportStats {
+    fn add_bytes(&self, n: usize) {
+        self.wire_bytes.fetch_add(n as u64, Ordering::Relaxed);
+    }
+    fn add_retries(&self, n: usize) {
+        self.shard_retries.fetch_add(n as u64, Ordering::Relaxed);
+    }
+    fn snapshot(&self) -> TransportSnapshot {
+        TransportSnapshot {
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            shard_retries: self.shard_retries.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Host-side execution context a transport hands [`execute_job`].
+pub struct ExecCtx<'a> {
+    /// Oracle constructor seam (same as the summarizer's).
+    pub factory: &'a ShardOracleFactory,
+    /// Live optimizer instance; `None` makes the executor rebuild it
+    /// from the registry via the job's `optimizer`/`batch` fields — the
+    /// remote-worker path.
+    pub optimizer: Option<&'a dyn Optimizer>,
+    /// Live fleet-plan handle (with engine buckets); `None` makes the
+    /// executor rebuild the bucket-less plan from the job's serialized
+    /// core — the remote-worker path.
+    pub plan: Option<Arc<ShardPlan>>,
+    /// Worker width for transports that fan out on the local pool.
+    pub workers: usize,
+}
+
+impl<'a> ExecCtx<'a> {
+    /// Context for local transports: live optimizer + live plan.
+    pub fn local(
+        factory: &'a ShardOracleFactory,
+        optimizer: &'a dyn Optimizer,
+        plan: Option<Arc<ShardPlan>>,
+        workers: usize,
+    ) -> ExecCtx<'a> {
+        ExecCtx { factory, optimizer: Some(optimizer), plan, workers }
+    }
+
+    /// Context a remote worker would run with: everything except the
+    /// oracle factory reconstructed from the job itself. Execution
+    /// matches the local path for registry-configured optimizers (see
+    /// the remote-rebuild contract on [`ShardJobMsg::optimizer`]); the
+    /// plan is rebuilt bucket-less from its serialized core, with
+    /// buckets re-picked from the worker's own manifest.
+    pub fn remote(factory: &'a ShardOracleFactory, workers: usize) -> ExecCtx<'a> {
+        ExecCtx { factory, optimizer: None, plan: None, workers }
+    }
+}
+
+/// Run one decoded shard job to completion: build the oracle for the
+/// sub-matrix, run the optimizer at the job's budget, map the selection
+/// back to global ground ids. Deterministic in the job for any
+/// deterministic optimizer — which replica executes it cannot change
+/// the outcome.
+pub fn execute_job(job: ShardJobMsg, ctx: &ExecCtx) -> Result<ShardResultMsg, TransportError> {
+    let plan = ctx
+        .plan
+        .clone()
+        .or_else(|| job.plan.as_ref().map(|w| Arc::new(w.to_plan())));
+    let spec = OracleSpec { threads: job.threads.map(|t| t as usize), plan };
+    let built;
+    let optimizer: &dyn Optimizer = match ctx.optimizer {
+        Some(o) => o,
+        None => {
+            built = build_optimizer(&job.optimizer, (job.batch as usize).max(1))
+                .ok_or_else(|| TransportError::UnknownOptimizer(job.optimizer.clone()))?;
+            built.as_ref()
+        }
+    };
+    let ShardJobMsg { shard, k, ground_ids, data, .. } = job;
+    let size = data.rows();
+    let mut oracle = (ctx.factory)(Arc::new(data), &spec);
+    let res = optimizer.run(oracle.as_mut(), (k as usize).min(size));
+    Ok(ShardResultMsg {
+        shard,
+        size: size as u32,
+        // decode_job guarantees ground_ids.len() == rows, and any
+        // optimizer selection is a set of row indices < rows
+        indices: res.indices.iter().map(|&i| ground_ids[i]).collect(),
+        f_trajectory: res.f_trajectory,
+        f_final: res.f_final,
+        wall_seconds: res.wall_seconds,
+        oracle_calls: res.oracle_calls as u64,
+        oracle_work: res.oracle_work,
+    })
+}
+
+/// Encode → decode → execute → encode → decode: the full double wire
+/// round trip every transport runs per shard.
+fn run_one(
+    job: &ShardJobMsg,
+    ctx: &ExecCtx,
+    stats: &TransportStats,
+) -> Result<ShardResultMsg, TransportError> {
+    let job_frame = encode_job(job);
+    stats.add_bytes(job_frame.len());
+    let decoded = decode_job(&job_frame)?;
+    let result = execute_job(decoded, ctx)?;
+    let result_frame = encode_result(&result);
+    stats.add_bytes(result_frame.len());
+    let returned = decode_result(&result_frame)?;
+    Ok(returned)
+}
+
+/// How shard jobs reach their executors. Implementations must return
+/// one result per job, in job order, and route every job through the
+/// wire encode/decode round trip.
+pub trait ShardTransport: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Execute all jobs; `results[i]` answers `jobs[i]`.
+    fn run_jobs(
+        &self,
+        jobs: &[ShardJobMsg],
+        ctx: &ExecCtx,
+    ) -> Result<Vec<ShardResultMsg>, TransportError>;
+
+    /// Cumulative counters since construction.
+    fn stats(&self) -> TransportSnapshot;
+
+    /// Replicas currently accepting shards (0 for replica-less
+    /// transports).
+    fn replica_count(&self) -> usize {
+        0
+    }
+}
+
+impl<T: ShardTransport> ShardTransport for Arc<T> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn run_jobs(
+        &self,
+        jobs: &[ShardJobMsg],
+        ctx: &ExecCtx,
+    ) -> Result<Vec<ShardResultMsg>, TransportError> {
+        (**self).run_jobs(jobs, ctx)
+    }
+    fn stats(&self) -> TransportSnapshot {
+        (**self).stats()
+    }
+    fn replica_count(&self) -> usize {
+        (**self).replica_count()
+    }
+}
+
+/// Build a transport by registry name: `inproc` | `loopback` (the
+/// loopback variant starts with `replicas` unit-capacity replicas).
+/// `None` for unknown names.
+pub fn build_transport(name: &str, replicas: usize) -> Option<Box<dyn ShardTransport>> {
+    match name {
+        "inproc" => Some(Box::new(InProcessTransport::default())),
+        "loopback" => Some(Box::new(LoopbackReplicaTransport::with_replicas(replicas.max(1), 1))),
+        _ => None,
+    }
+}
+
+// ----------------------------------------------------------- in-process
+
+/// Today's threadpool path, routed through the wire format: jobs fan
+/// out over `ctx.workers` pool workers in this process.
+#[derive(Default)]
+pub struct InProcessTransport {
+    stats: TransportStats,
+}
+
+impl ShardTransport for InProcessTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn run_jobs(
+        &self,
+        jobs: &[ShardJobMsg],
+        ctx: &ExecCtx,
+    ) -> Result<Vec<ShardResultMsg>, TransportError> {
+        par_map(jobs, ctx.workers.max(1), |job| run_one(job, ctx, &self.stats))
+            .into_iter()
+            .collect()
+    }
+
+    fn stats(&self) -> TransportSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+// ------------------------------------------------------------- loopback
+
+/// One replica's work order for one scheduling round.
+struct RoundAssignment {
+    id: String,
+    /// Jobs this replica completes before its injected failure (if
+    /// any) trips; the rest of its assignment fails and is re-queued.
+    allowed: u64,
+    job_idx: Vec<usize>,
+}
+
+/// Replica-registry-backed transport: shards are dealt across
+/// registered replicas by capacity and executed loopback (in this
+/// process). Failure semantics are real — a replica dying mid-round
+/// loses its unfinished shards to a re-queue on the survivors — only
+/// the link is simulated.
+pub struct LoopbackReplicaTransport {
+    registry: Mutex<ReplicaRegistry>,
+    stats: TransportStats,
+}
+
+impl Default for LoopbackReplicaTransport {
+    fn default() -> Self {
+        LoopbackReplicaTransport::new()
+    }
+}
+
+impl LoopbackReplicaTransport {
+    /// An empty fleet — register replicas before running jobs.
+    pub fn new() -> LoopbackReplicaTransport {
+        LoopbackReplicaTransport {
+            registry: Mutex::new(ReplicaRegistry::new()),
+            stats: TransportStats::default(),
+        }
+    }
+
+    /// `n` replicas named `replica-0..n-1`, each with `capacity`.
+    pub fn with_replicas(n: usize, capacity: usize) -> LoopbackReplicaTransport {
+        let t = LoopbackReplicaTransport::new();
+        {
+            let mut reg = t.registry.lock().unwrap();
+            for i in 0..n.max(1) {
+                reg.register(&format!("replica-{i}"), capacity);
+            }
+        }
+        t
+    }
+
+    /// Run `f` under the registry lock — register/heartbeat/drain/kill
+    /// and inspection all go through here.
+    pub fn with_registry<T>(&self, f: impl FnOnce(&mut ReplicaRegistry) -> T) -> T {
+        f(&mut self.registry.lock().unwrap())
+    }
+
+    pub fn register(&self, id: &str, capacity: usize) {
+        self.with_registry(|r| r.register(id, capacity));
+    }
+
+    pub fn heartbeat(&self, id: &str) -> bool {
+        self.with_registry(|r| r.heartbeat(id))
+    }
+
+    pub fn drain(&self, id: &str) -> bool {
+        self.with_registry(|r| r.drain(id))
+    }
+
+    pub fn kill(&self, id: &str) -> bool {
+        self.with_registry(|r| r.kill(id))
+    }
+
+    /// Failure injection: `id` dies after completing `jobs` more shards.
+    pub fn fail_after(&self, id: &str, jobs: u64) -> bool {
+        self.with_registry(|r| match r.get_mut(id) {
+            Some(rep) => {
+                rep.fail_after = Some(jobs);
+                true
+            }
+            None => false,
+        })
+    }
+}
+
+impl ShardTransport for LoopbackReplicaTransport {
+    fn name(&self) -> &'static str {
+        "loopback"
+    }
+
+    fn run_jobs(
+        &self,
+        jobs: &[ShardJobMsg],
+        ctx: &ExecCtx,
+    ) -> Result<Vec<ShardResultMsg>, TransportError> {
+        let mut results: Vec<Option<ShardResultMsg>> = (0..jobs.len()).map(|_| None).collect();
+        let mut pending: Vec<usize> = (0..jobs.len()).collect();
+        while !pending.is_empty() {
+            // deal the pending shards across assignable replicas
+            let round: Vec<RoundAssignment> = self.with_registry(|reg| {
+                reg.tick();
+                reg.assign(&pending)
+                    .into_iter()
+                    .map(|(id, job_idx)| {
+                        let allowed = reg
+                            .get(&id)
+                            .and_then(|r| r.fail_after)
+                            .unwrap_or(u64::MAX);
+                        RoundAssignment { id, allowed, job_idx }
+                    })
+                    .collect()
+            });
+            if round.is_empty() {
+                return Err(TransportError::NoReplicas { unassigned: pending.len() });
+            }
+            // all replicas of the round run concurrently, each working
+            // its own assignment sequentially; partial progress and a
+            // possible job-level error travel back side by side so the
+            // registry bookkeeping below never gets skipped
+            type RoundOutcome = (Vec<(usize, ShardResultMsg)>, Option<TransportError>);
+            let outcomes: Vec<RoundOutcome> = par_map(&round, round.len(), |a| {
+                let mut done = Vec::with_capacity(a.job_idx.len());
+                for (nth, &ji) in a.job_idx.iter().enumerate() {
+                    if (nth as u64) >= a.allowed {
+                        break; // the replica died; the rest re-queues
+                    }
+                    match run_one(&jobs[ji], ctx, &self.stats) {
+                        Ok(res) => done.push((ji, res)),
+                        // a job-level error (bad frame, unknown
+                        // optimizer) is deterministic — retrying it on
+                        // another replica cannot help
+                        Err(e) => return (done, Some(e)),
+                    }
+                }
+                (done, None)
+            });
+            // (replica id, shards completed, died mid-assignment)
+            let mut completed_per_replica: Vec<(String, u64, bool)> = Vec::new();
+            let mut next_pending: Vec<usize> = Vec::new();
+            let mut round_error: Option<TransportError> = None;
+            for (a, (done, err)) in round.iter().zip(outcomes) {
+                // a replica that hit a job error is healthy — only an
+                // exhausted failure budget counts as death
+                let died = err.is_none() && done.len() < a.job_idx.len();
+                completed_per_replica.push((a.id.clone(), done.len() as u64, died));
+                if died {
+                    next_pending.extend_from_slice(&a.job_idx[done.len()..]);
+                }
+                for (ji, res) in done {
+                    results[ji] = Some(res);
+                }
+                if round_error.is_none() {
+                    round_error = err;
+                }
+            }
+            // book-keep: completed counts, injected deaths become real
+            self.with_registry(|reg| {
+                for (id, completed, died) in &completed_per_replica {
+                    if let Some(rep) = reg.get_mut(id) {
+                        rep.jobs_done += *completed;
+                        if let Some(left) = rep.fail_after.as_mut() {
+                            *left = left.saturating_sub(*completed);
+                        }
+                    }
+                    if *died {
+                        reg.kill(id);
+                    } else {
+                        reg.heartbeat(id);
+                    }
+                }
+            });
+            if let Some(e) = round_error {
+                return Err(e); // bookkeeping applied; the error is final
+            }
+            next_pending.sort_unstable();
+            self.stats.add_retries(next_pending.len());
+            pending = next_pending;
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("loop exits only when every job has a result"))
+            .collect())
+    }
+
+    fn stats(&self) -> TransportSnapshot {
+        self.stats.snapshot()
+    }
+
+    fn replica_count(&self) -> usize {
+        self.with_registry(|r| r.alive())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Precision;
+    use crate::linalg::gemm::CpuKernel;
+    use crate::linalg::{Matrix, SharedMatrix};
+    use crate::optim::Greedy;
+    use crate::runtime::artifact::KernelImpl;
+    use crate::submodular::{CpuOracle, Oracle};
+    use crate::util::rng::Rng;
+
+    fn factory() -> impl Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Sync {
+        |m: SharedMatrix, _spec: &OracleSpec| Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+    }
+
+    /// Equality modulo `wall_seconds` (timing differs between runs).
+    fn same_outcome(a: &[ShardResultMsg], b: &[ShardResultMsg]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.shard == y.shard
+                    && x.size == y.size
+                    && x.indices == y.indices
+                    && x.f_trajectory.iter().map(|f| f.to_bits()).eq(
+                        y.f_trajectory.iter().map(|f| f.to_bits()),
+                    )
+                    && x.f_final.to_bits() == y.f_final.to_bits()
+                    && x.oracle_calls == y.oracle_calls
+                    && x.oracle_work == y.oracle_work
+            })
+    }
+
+    fn jobs(n_jobs: usize, rows: usize, seed: u64) -> Vec<ShardJobMsg> {
+        let mut rng = Rng::new(seed);
+        (0..n_jobs)
+            .map(|s| ShardJobMsg {
+                shard: s as u32,
+                k: 3,
+                batch: 64,
+                optimizer: "greedy".into(),
+                payload: Precision::F32,
+                precision: Precision::F32,
+                cpu_kernel: CpuKernel::Scalar,
+                kernel: KernelImpl::Jnp,
+                threads: None,
+                plan: None,
+                ground_ids: (0..rows as u64).map(|i| i + 100 * s as u64).collect(),
+                data: Matrix::random_normal(rows, 4, &mut rng),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn inproc_executes_all_jobs_in_order_and_counts_bytes() {
+        let t = InProcessTransport::default();
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 2);
+        let js = jobs(5, 12, 3);
+        let out = t.run_jobs(&js, &ctx).unwrap();
+        assert_eq!(out.len(), 5);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.shard, i as u32);
+            assert_eq!(r.size, 12);
+            assert_eq!(r.indices.len(), 3);
+            // indices mapped into this shard's ground-id space
+            for &g in &r.indices {
+                assert!((100 * i as u64..100 * i as u64 + 12).contains(&g), "{g}");
+            }
+        }
+        let s = t.stats();
+        assert!(s.wire_bytes > 0);
+        assert_eq!(s.shard_retries, 0);
+        assert_eq!(t.replica_count(), 0);
+    }
+
+    #[test]
+    fn remote_ctx_rebuilds_optimizer_and_matches_local() {
+        let t = InProcessTransport::default();
+        let f = factory();
+        let greedy = Greedy { batch: 64 };
+        let js = jobs(3, 15, 9);
+        let local = t.run_jobs(&js, &ExecCtx::local(&f, &greedy, None, 1)).unwrap();
+        let remote = t.run_jobs(&js, &ExecCtx::remote(&f, 1)).unwrap();
+        assert!(same_outcome(&local, &remote));
+        // unknown optimizer ids are a typed error
+        let mut bad = jobs(1, 5, 1);
+        bad[0].optimizer = "psychic".into();
+        match t.run_jobs(&bad, &ExecCtx::remote(&f, 1)) {
+            Err(TransportError::UnknownOptimizer(name)) => assert_eq!(name, "psychic"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn loopback_matches_inproc_exactly() {
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 2);
+        let js = jobs(7, 10, 11);
+        let inproc = InProcessTransport::default().run_jobs(&js, &ctx).unwrap();
+        for replicas in [1usize, 2, 5] {
+            let lb = LoopbackReplicaTransport::with_replicas(replicas, 2);
+            assert_eq!(lb.replica_count(), replicas);
+            let out = lb.run_jobs(&js, &ctx).unwrap();
+            assert!(same_outcome(&out, &inproc), "replicas={replicas}");
+            assert_eq!(lb.stats().shard_retries, 0);
+        }
+    }
+
+    #[test]
+    fn replica_death_requeues_to_survivors() {
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 2);
+        let js = jobs(6, 8, 21);
+        let healthy = LoopbackReplicaTransport::with_replicas(2, 1);
+        let want = healthy.run_jobs(&js, &ctx).unwrap();
+
+        let chaotic = LoopbackReplicaTransport::with_replicas(2, 1);
+        chaotic.fail_after("replica-0", 1); // dies after its first shard
+        let got = chaotic.run_jobs(&js, &ctx).unwrap();
+        assert!(
+            same_outcome(&got, &want),
+            "selection must not depend on which replica ran a shard"
+        );
+        let s = chaotic.stats();
+        assert!(s.shard_retries >= 2, "retries {}", s.shard_retries);
+        // the dead replica is really dead; the survivor did the rest
+        chaotic.with_registry(|reg| {
+            assert_eq!(reg.get("replica-0").unwrap().state, ReplicaState::Dead);
+            assert_eq!(reg.get("replica-0").unwrap().jobs_done, 1);
+            assert_eq!(reg.get("replica-1").unwrap().jobs_done, 5);
+        });
+        assert_eq!(chaotic.replica_count(), 1);
+    }
+
+    #[test]
+    fn job_level_error_keeps_replicas_alive_and_books_progress() {
+        let f = factory();
+        let mut js = jobs(4, 6, 55);
+        js[3].optimizer = "psychic".into(); // deterministic poison job
+        let t = LoopbackReplicaTransport::with_replicas(2, 1);
+        // ExecCtx::remote forces the registry rebuild, so job 3 errors
+        match t.run_jobs(&js, &ExecCtx::remote(&f, 2)) {
+            Err(TransportError::UnknownOptimizer(name)) => assert_eq!(name, "psychic"),
+            other => panic!("{other:?}"),
+        }
+        t.with_registry(|reg| {
+            // a job-level error is not a replica death...
+            assert_eq!(reg.alive(), 2);
+            // ...and the work replicas completed that round is recorded
+            // (deal: replica-0 ← jobs 0,2; replica-1 ← jobs 1, then 3 errors)
+            assert_eq!(reg.get("replica-0").unwrap().jobs_done, 2);
+            assert_eq!(reg.get("replica-1").unwrap().jobs_done, 1);
+        });
+        assert_eq!(t.stats().shard_retries, 0, "poison jobs are not retried");
+    }
+
+    #[test]
+    fn all_replicas_dead_is_a_typed_error() {
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 1);
+        let js = jobs(3, 6, 5);
+        let t = LoopbackReplicaTransport::with_replicas(1, 1);
+        t.kill("replica-0");
+        match t.run_jobs(&js, &ctx) {
+            Err(TransportError::NoReplicas { unassigned: 3 }) => {}
+            other => panic!("{other:?}"),
+        }
+        // empty job sets succeed trivially even with no replicas
+        assert_eq!(t.run_jobs(&[], &ctx).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn drained_replica_receives_no_new_shards() {
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 2);
+        let js = jobs(6, 8, 33);
+        let t = LoopbackReplicaTransport::with_replicas(3, 1);
+        t.run_jobs(&js, &ctx).unwrap();
+        let before = t.with_registry(|reg| reg.get("replica-1").unwrap().jobs_done);
+        assert!(before > 0);
+        assert!(t.drain("replica-1"));
+        t.run_jobs(&js, &ctx).unwrap();
+        t.with_registry(|reg| {
+            assert_eq!(reg.get("replica-1").unwrap().jobs_done, before);
+            assert_eq!(reg.get("replica-1").unwrap().state, ReplicaState::Draining);
+        });
+        assert_eq!(t.replica_count(), 2);
+    }
+
+    #[test]
+    fn build_transport_registry() {
+        assert_eq!(build_transport("inproc", 0).unwrap().name(), "inproc");
+        let lb = build_transport("loopback", 3).unwrap();
+        assert_eq!(lb.name(), "loopback");
+        assert_eq!(lb.replica_count(), 3);
+        assert!(build_transport("carrier-pigeon", 1).is_none());
+        for name in TRANSPORTS {
+            assert!(build_transport(name, 1).is_some(), "{name}");
+        }
+    }
+}

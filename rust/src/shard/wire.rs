@@ -1,0 +1,909 @@
+//! Versioned, self-describing binary wire format for remote shard
+//! execution — the transport seam's on-the-wire contract.
+//!
+//! A shard job carries everything a remote coordinator replica needs to
+//! reproduce local execution: the shard's sub-matrix rows, the global
+//! ground ids they map back to, the optimizer id + budget, and the
+//! oracle knobs (precision / kernel / thread split) including the
+//! serialized scalar core of a fleet [`ShardPlan`]. A shard result
+//! carries the selection mapped back to ground ids, the per-accept
+//! f-trajectory and the timing/work counters.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//!   offset  size  field
+//!   ------  ----  ----------------------------------------------
+//!        0     4  magic  "EBCW"  (45 42 43 57)
+//!        4     2  version        (u16, currently 1)
+//!        6     1  kind           (1 = job, 2 = result)
+//!        7     1  reserved       (0)
+//!        8     4  payload_len    (u32)
+//!       12     N  payload        (kind-specific, see below)
+//!     12+N     4  crc32          (IEEE/zlib CRC-32 of bytes [0, 12+N))
+//! ```
+//!
+//! Job payload v1:
+//!
+//! ```text
+//!   u32 shard · u32 k · u32 batch · str optimizer
+//!   u8 payload_precision · u8 precision · u8 cpu_kernel · u8 kernel_impl
+//!   u8 has_threads · u32 threads
+//!   u8 has_plan · [u32 n · u32 d · u32 shards · u32 k · u8 precision ·
+//!                  u8 kernel_impl · u8 cpu_kernel · u32 cores ·
+//!                  u32 shard_workers · u32 oracle_threads · u32 merge_threads]
+//!   u32 id_count · id_count × u64 ground ids
+//!   u32 rows · u32 cols · rows·cols × (f32 | bf16-as-u16) sub-matrix
+//! ```
+//!
+//! Result payload v1:
+//!
+//! ```text
+//!   u32 shard · u32 size
+//!   u32 idx_count  · idx_count  × u64 exemplar ground ids (selection order)
+//!   u32 traj_count · traj_count × f32 f-trajectory
+//!   f32 f_final · f64 wall_seconds · u64 oracle_calls · u64 oracle_work
+//! ```
+//!
+//! Strings are `u32 len + UTF-8 bytes`. A `bf16` payload ships each
+//! value as the upper 16 bits of its [`bf16_round`]-ed f32 (2 bytes per
+//! scalar — the edge-link option); decoding widens back losslessly, so
+//! `decode(encode(x)) == x` exactly for payloads that are already
+//! bf16-representable, and equals `demote_bf16(x)` otherwise.
+//!
+//! The format is frozen per version: the golden conformance suite
+//! (`rust/tests/wire_golden.rs`) pins the exact bytes, so any layout
+//! change must bump [`WIRE_VERSION`] consciously. Decoding is total —
+//! truncated, bit-flipped or unknown-version frames yield a typed
+//! [`WireError`], never a panic.
+//!
+//! The plan section serializes only the scalar core of a
+//! [`ShardPlan`]; pre-picked engine buckets are host-local handles, so
+//! a remote worker re-picks them from **its** artifact manifest for the
+//! plan's (n, d, P) shape — the local transports instead reuse the live
+//! plan handle (see [`crate::shard::transport::ExecCtx`]).
+
+use crate::engine::{KernelImpl, Precision, ShardPlan};
+use crate::linalg::gemm::{bf16_round, CpuKernel};
+use crate::linalg::Matrix;
+use crate::runtime::artifact::PlanBuckets;
+use std::fmt;
+
+/// Frame magic: "EBCW".
+pub const WIRE_MAGIC: [u8; 4] = *b"EBCW";
+/// Current (and only) wire format version.
+pub const WIRE_VERSION: u16 = 1;
+/// Fixed frame header size (magic + version + kind + reserved + len).
+pub const HEADER_LEN: usize = 12;
+/// Trailing checksum size.
+pub const TRAILER_LEN: usize = 4;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Job,
+    Result,
+}
+
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Job => 1,
+            FrameKind::Result => 2,
+        }
+    }
+}
+
+/// Typed decode failure. Every variant is reachable from corrupted or
+/// foreign input; none of them panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than a field (or the fixed header) needs.
+    TooShort { need: usize, have: usize },
+    /// First four bytes are not [`WIRE_MAGIC`].
+    BadMagic { found: [u8; 4] },
+    /// Version field is newer/older than this decoder speaks.
+    UnsupportedVersion { found: u16, supported: u16 },
+    /// Kind byte is none of the known frame kinds.
+    UnknownKind(u8),
+    /// Declared payload length disagrees with the frame size.
+    LengthMismatch { declared: usize, available: usize },
+    /// CRC-32 trailer does not match the received bytes.
+    ChecksumMismatch { stored: u32, computed: u32 },
+    /// A payload field failed validation (bad enum byte, bad UTF-8,
+    /// inconsistent counts, trailing bytes, ...).
+    Malformed { field: &'static str, detail: String },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::TooShort { need, have } => {
+                write!(f, "frame too short: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic { found } => write!(f, "bad magic {found:02x?}"),
+            WireError::UnsupportedVersion { found, supported } => {
+                write!(f, "unsupported wire version {found} (decoder speaks {supported})")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::LengthMismatch { declared, available } => {
+                write!(f, "payload length {declared} disagrees with frame ({available} available)")
+            }
+            WireError::ChecksumMismatch { stored, computed } => {
+                write!(f, "checksum mismatch: stored {stored:#010x}, computed {computed:#010x}")
+            }
+            WireError::Malformed { field, detail } => write!(f, "malformed {field}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Byte-indexed CRC-32 lookup table, built at compile time. Job frames
+/// embed whole sub-matrices and every sharded run checksums each frame
+/// on both legs, so the checksum must run at table speed, not
+/// bit-at-a-time speed.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            j += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) — bit-identical to
+/// `zlib.crc32`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// The serialized scalar core of a fleet [`ShardPlan`] — everything a
+/// remote worker needs to rebuild the plan (bucket handles are
+/// host-local; the worker re-picks them from its own manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WirePlan {
+    pub n: u32,
+    pub d: u32,
+    pub shards: u32,
+    pub k: u32,
+    pub precision: Precision,
+    pub kernel: KernelImpl,
+    pub cpu_kernel: CpuKernel,
+    pub cores: u32,
+    pub shard_workers: u32,
+    pub oracle_threads: u32,
+    pub merge_threads: u32,
+}
+
+impl WirePlan {
+    /// Capture the wire-transportable core of a live plan.
+    pub fn of(plan: &ShardPlan) -> WirePlan {
+        WirePlan {
+            n: plan.n as u32,
+            d: plan.d as u32,
+            shards: plan.shards as u32,
+            k: plan.k as u32,
+            precision: plan.precision,
+            kernel: plan.kernel,
+            cpu_kernel: plan.cpu_kernel,
+            cores: plan.cores as u32,
+            shard_workers: plan.shard_workers as u32,
+            oracle_threads: plan.oracle_threads as u32,
+            merge_threads: plan.merge_threads as u32,
+        }
+    }
+
+    /// Rebuild a [`ShardPlan`] with empty bucket handles (a remote
+    /// worker re-picks buckets for this shape from its own manifest).
+    pub fn to_plan(&self) -> ShardPlan {
+        ShardPlan {
+            n: self.n as usize,
+            d: self.d as usize,
+            shards: self.shards as usize,
+            k: self.k as usize,
+            precision: self.precision,
+            kernel: self.kernel,
+            cpu_kernel: self.cpu_kernel,
+            cores: self.cores as usize,
+            shard_workers: self.shard_workers as usize,
+            oracle_threads: self.oracle_threads as usize,
+            merge_threads: self.merge_threads as usize,
+            buckets: PlanBuckets::default(),
+        }
+    }
+}
+
+/// One shard's first-stage work order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardJobMsg {
+    /// Shard id (position in the partitioner's output).
+    pub shard: u32,
+    /// Selection budget for this shard (already clamped to its size).
+    pub k: u32,
+    /// Candidate-batch width a remote worker hands
+    /// [`crate::optim::build_optimizer`] (the summarizer fills in its
+    /// merge/candidate batch).
+    pub batch: u32,
+    /// Optimizer registry id ([`crate::optim::ALGORITHMS`]).
+    ///
+    /// **Remote-rebuild contract**: a worker without the live optimizer
+    /// instance reconstructs `build_optimizer(optimizer, batch)` — the
+    /// registry configuration at this batch width. Non-registry
+    /// parameterizations (a custom `SieveStreaming { epsilon }`, say)
+    /// do not survive the wire; local transports always execute with
+    /// the live instance, so this only bounds the future socket leg,
+    /// where the launcher must restrict fleet runs to registry
+    /// optimizers (greedy-family selection is batch-invariant —
+    /// `prop_greedy_batch_invariant` — so `batch` only shifts
+    /// counters).
+    pub optimizer: String,
+    /// How the sub-matrix travels: `F32` (lossless, 4 B/scalar) or
+    /// `Bf16` (demoted at encode, 2 B/scalar — the edge-link option).
+    pub payload: Precision,
+    /// Oracle compute precision.
+    ///
+    /// This and the two kernel knobs below configure the **worker-side
+    /// oracle factory**: a remote worker builds its factory from them
+    /// before handing jobs to `execute_job` (factory construction is
+    /// backend-specific, so it lives outside the executor). Local
+    /// transports run the caller's live factory, which already carries
+    /// its backend config and ignores these fields.
+    pub precision: Precision,
+    /// CPU kernel backend for CPU/fallback oracles (see `precision`).
+    pub cpu_kernel: CpuKernel,
+    /// Preferred accelerator kernel implementation (see `precision`).
+    pub kernel: KernelImpl,
+    /// Per-oracle kernel-thread override (a planned run's split).
+    pub threads: Option<u32>,
+    /// Serialized fleet-plan core, when the run is planned.
+    pub plan: Option<WirePlan>,
+    /// Global ground ids of the sub-matrix rows (`len == data.rows()`).
+    pub ground_ids: Vec<u64>,
+    /// The shard's sub-matrix.
+    pub data: Matrix,
+}
+
+/// One shard's first-stage outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardResultMsg {
+    /// Shard id (copied from the job).
+    pub shard: u32,
+    /// Ground rows the shard held.
+    pub size: u32,
+    /// Selected exemplars as **global** ground ids, in selection order.
+    pub indices: Vec<u64>,
+    /// f(S) after each selection (shard-local objective).
+    pub f_trajectory: Vec<f32>,
+    pub f_final: f32,
+    pub wall_seconds: f64,
+    pub oracle_calls: u64,
+    pub oracle_work: u64,
+}
+
+// ------------------------------------------------------------ encoding
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn precision_code(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 0,
+        Precision::Bf16 => 1,
+    }
+}
+fn cpu_kernel_code(k: CpuKernel) -> u8 {
+    match k {
+        CpuKernel::Scalar => 0,
+        CpuKernel::Blocked => 1,
+    }
+}
+fn kernel_impl_code(k: KernelImpl) -> u8 {
+    match k {
+        KernelImpl::Pallas => 0,
+        KernelImpl::Jnp => 1,
+    }
+}
+
+/// Wrap a payload in the versioned header + CRC trailer.
+///
+/// The v1 length field is u32, capping payloads at 4 GiB. That is far
+/// beyond any shard this system ships (a shard's sub-matrix is a
+/// fraction of a window that must fit device memory), so an oversized
+/// payload is a caller bug — assert loudly here rather than truncate
+/// silently and fail as a confusing checksum error at decode.
+fn seal_frame(kind: FrameKind, payload: Vec<u8>) -> Vec<u8> {
+    assert!(
+        payload.len() <= u32::MAX as usize,
+        "wire v1 frames cap payloads at u32::MAX bytes, got {}",
+        payload.len()
+    );
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    frame.extend_from_slice(&WIRE_MAGIC);
+    put_u16(&mut frame, WIRE_VERSION);
+    frame.push(kind.code());
+    frame.push(0); // reserved
+    put_u32(&mut frame, payload.len() as u32);
+    frame.extend_from_slice(&payload);
+    let crc = crc32(&frame);
+    put_u32(&mut frame, crc);
+    frame
+}
+
+/// Encode a job message into one sealed frame.
+pub fn encode_job(job: &ShardJobMsg) -> Vec<u8> {
+    let mut p = Vec::with_capacity(64 + job.ground_ids.len() * 8 + job.data.data().len() * 4);
+    put_u32(&mut p, job.shard);
+    put_u32(&mut p, job.k);
+    put_u32(&mut p, job.batch);
+    put_str(&mut p, &job.optimizer);
+    p.push(precision_code(job.payload));
+    p.push(precision_code(job.precision));
+    p.push(cpu_kernel_code(job.cpu_kernel));
+    p.push(kernel_impl_code(job.kernel));
+    match job.threads {
+        Some(t) => {
+            p.push(1);
+            put_u32(&mut p, t);
+        }
+        None => {
+            p.push(0);
+            put_u32(&mut p, 0);
+        }
+    }
+    match &job.plan {
+        Some(w) => {
+            p.push(1);
+            put_u32(&mut p, w.n);
+            put_u32(&mut p, w.d);
+            put_u32(&mut p, w.shards);
+            put_u32(&mut p, w.k);
+            p.push(precision_code(w.precision));
+            p.push(kernel_impl_code(w.kernel));
+            p.push(cpu_kernel_code(w.cpu_kernel));
+            put_u32(&mut p, w.cores);
+            put_u32(&mut p, w.shard_workers);
+            put_u32(&mut p, w.oracle_threads);
+            put_u32(&mut p, w.merge_threads);
+        }
+        None => p.push(0),
+    }
+    put_u32(&mut p, job.ground_ids.len() as u32);
+    for &id in &job.ground_ids {
+        put_u64(&mut p, id);
+    }
+    put_u32(&mut p, job.data.rows() as u32);
+    put_u32(&mut p, job.data.cols() as u32);
+    match job.payload {
+        Precision::F32 => {
+            for &v in job.data.data() {
+                put_f32(&mut p, v);
+            }
+        }
+        Precision::Bf16 => {
+            for &v in job.data.data() {
+                let hi = (bf16_round(v).to_bits() >> 16) as u16;
+                put_u16(&mut p, hi);
+            }
+        }
+    }
+    seal_frame(FrameKind::Job, p)
+}
+
+/// Encode a result message into one sealed frame.
+pub fn encode_result(res: &ShardResultMsg) -> Vec<u8> {
+    let mut p = Vec::with_capacity(48 + res.indices.len() * 8 + res.f_trajectory.len() * 4);
+    put_u32(&mut p, res.shard);
+    put_u32(&mut p, res.size);
+    put_u32(&mut p, res.indices.len() as u32);
+    for &i in &res.indices {
+        put_u64(&mut p, i);
+    }
+    put_u32(&mut p, res.f_trajectory.len() as u32);
+    for &f in &res.f_trajectory {
+        put_f32(&mut p, f);
+    }
+    put_f32(&mut p, res.f_final);
+    put_f64(&mut p, res.wall_seconds);
+    put_u64(&mut p, res.oracle_calls);
+    put_u64(&mut p, res.oracle_work);
+    seal_frame(FrameKind::Result, p)
+}
+
+// ------------------------------------------------------------ decoding
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.i.checked_add(n).ok_or_else(|| WireError::TooShort {
+            need: usize::MAX,
+            have: self.b.len(),
+        })?;
+        if end > self.b.len() {
+            return Err(WireError::TooShort { need: end, have: self.b.len() });
+        }
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self, field: &'static str) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| WireError::Malformed {
+            field,
+            detail: format!("invalid utf-8: {e}"),
+        })
+    }
+
+    fn precision(&mut self, field: &'static str) -> Result<Precision, WireError> {
+        match self.u8()? {
+            0 => Ok(Precision::F32),
+            1 => Ok(Precision::Bf16),
+            other => Err(WireError::Malformed {
+                field,
+                detail: format!("unknown precision code {other}"),
+            }),
+        }
+    }
+
+    fn cpu_kernel(&mut self, field: &'static str) -> Result<CpuKernel, WireError> {
+        match self.u8()? {
+            0 => Ok(CpuKernel::Scalar),
+            1 => Ok(CpuKernel::Blocked),
+            other => Err(WireError::Malformed {
+                field,
+                detail: format!("unknown cpu kernel code {other}"),
+            }),
+        }
+    }
+
+    fn kernel_impl(&mut self, field: &'static str) -> Result<KernelImpl, WireError> {
+        match self.u8()? {
+            0 => Ok(KernelImpl::Pallas),
+            1 => Ok(KernelImpl::Jnp),
+            other => Err(WireError::Malformed {
+                field,
+                detail: format!("unknown kernel impl code {other}"),
+            }),
+        }
+    }
+
+    fn flag(&mut self, field: &'static str) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(WireError::Malformed {
+                field,
+                detail: format!("flag byte must be 0 or 1, got {other}"),
+            }),
+        }
+    }
+
+    /// A declared element count must fit the bytes that remain —
+    /// checked before any allocation so a hostile count cannot OOM.
+    fn count(&mut self, elem_size: usize, field: &'static str) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(elem_size).ok_or_else(|| WireError::Malformed {
+            field,
+            detail: format!("count {n} overflows"),
+        })?;
+        if need > self.remaining() {
+            return Err(WireError::TooShort {
+                need: self.i + need,
+                have: self.b.len(),
+            });
+        }
+        Ok(n)
+    }
+}
+
+/// Validate the header + checksum of a frame and classify its kind.
+pub fn frame_kind(frame: &[u8]) -> Result<FrameKind, WireError> {
+    let min = HEADER_LEN + TRAILER_LEN;
+    if frame.len() < min {
+        return Err(WireError::TooShort { need: min, have: frame.len() });
+    }
+    let magic: [u8; 4] = frame[0..4].try_into().unwrap();
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic { found: magic });
+    }
+    let version = u16::from_le_bytes(frame[4..6].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(WireError::UnsupportedVersion { found: version, supported: WIRE_VERSION });
+    }
+    let kind = match frame[6] {
+        1 => FrameKind::Job,
+        2 => FrameKind::Result,
+        other => return Err(WireError::UnknownKind(other)),
+    };
+    let declared = u32::from_le_bytes(frame[8..12].try_into().unwrap()) as usize;
+    let available = frame.len() - min;
+    if declared != available {
+        return Err(WireError::LengthMismatch { declared, available });
+    }
+    let body = &frame[..frame.len() - TRAILER_LEN];
+    let stored = u32::from_le_bytes(frame[frame.len() - TRAILER_LEN..].try_into().unwrap());
+    let computed = crc32(body);
+    if stored != computed {
+        return Err(WireError::ChecksumMismatch { stored, computed });
+    }
+    Ok(kind)
+}
+
+fn open_frame(frame: &[u8], want: FrameKind) -> Result<&[u8], WireError> {
+    let kind = frame_kind(frame)?;
+    if kind != want {
+        return Err(WireError::Malformed {
+            field: "kind",
+            detail: format!("expected {want:?} frame, got {kind:?}"),
+        });
+    }
+    Ok(&frame[HEADER_LEN..frame.len() - TRAILER_LEN])
+}
+
+/// Decode a job frame. Total: corrupted input yields a [`WireError`].
+pub fn decode_job(frame: &[u8]) -> Result<ShardJobMsg, WireError> {
+    let mut r = Reader::new(open_frame(frame, FrameKind::Job)?);
+    let shard = r.u32()?;
+    let k = r.u32()?;
+    let batch = r.u32()?;
+    let optimizer = r.str("optimizer")?;
+    let payload = r.precision("payload_precision")?;
+    let precision = r.precision("precision")?;
+    let cpu_kernel = r.cpu_kernel("cpu_kernel")?;
+    let kernel = r.kernel_impl("kernel_impl")?;
+    let has_threads = r.flag("has_threads")?;
+    let threads_raw = r.u32()?;
+    let threads = has_threads.then_some(threads_raw);
+    let plan = if r.flag("has_plan")? {
+        Some(WirePlan {
+            n: r.u32()?,
+            d: r.u32()?,
+            shards: r.u32()?,
+            k: r.u32()?,
+            precision: r.precision("plan.precision")?,
+            kernel: r.kernel_impl("plan.kernel")?,
+            cpu_kernel: r.cpu_kernel("plan.cpu_kernel")?,
+            cores: r.u32()?,
+            shard_workers: r.u32()?,
+            oracle_threads: r.u32()?,
+            merge_threads: r.u32()?,
+        })
+    } else {
+        None
+    };
+    let id_count = r.count(8, "ground_ids")?;
+    let mut ground_ids = Vec::with_capacity(id_count);
+    for _ in 0..id_count {
+        ground_ids.push(r.u64()?);
+    }
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    if rows != ground_ids.len() {
+        return Err(WireError::Malformed {
+            field: "rows",
+            detail: format!("{rows} rows but {} ground ids", ground_ids.len()),
+        });
+    }
+    let elems = rows.checked_mul(cols).ok_or_else(|| WireError::Malformed {
+        field: "rows",
+        detail: format!("{rows}x{cols} overflows"),
+    })?;
+    let elem_size = match payload {
+        Precision::F32 => 4,
+        Precision::Bf16 => 2,
+    };
+    let need = elems.checked_mul(elem_size).ok_or_else(|| WireError::Malformed {
+        field: "data",
+        detail: format!("{elems} elements overflow"),
+    })?;
+    if need != r.remaining() {
+        return Err(WireError::Malformed {
+            field: "data",
+            detail: format!("expected {need} data bytes, have {}", r.remaining()),
+        });
+    }
+    let mut data = Vec::with_capacity(elems);
+    match payload {
+        Precision::F32 => {
+            for _ in 0..elems {
+                data.push(r.f32()?);
+            }
+        }
+        Precision::Bf16 => {
+            for _ in 0..elems {
+                data.push(f32::from_bits((r.u16()? as u32) << 16));
+            }
+        }
+    }
+    Ok(ShardJobMsg {
+        shard,
+        k,
+        batch,
+        optimizer,
+        payload,
+        precision,
+        cpu_kernel,
+        kernel,
+        threads,
+        plan,
+        ground_ids,
+        data: Matrix::from_vec(rows, cols, data),
+    })
+}
+
+/// Decode a result frame. Total: corrupted input yields a [`WireError`].
+pub fn decode_result(frame: &[u8]) -> Result<ShardResultMsg, WireError> {
+    let mut r = Reader::new(open_frame(frame, FrameKind::Result)?);
+    let shard = r.u32()?;
+    let size = r.u32()?;
+    let idx_count = r.count(8, "indices")?;
+    let mut indices = Vec::with_capacity(idx_count);
+    for _ in 0..idx_count {
+        indices.push(r.u64()?);
+    }
+    let traj_count = r.count(4, "f_trajectory")?;
+    let mut f_trajectory = Vec::with_capacity(traj_count);
+    for _ in 0..traj_count {
+        f_trajectory.push(r.f32()?);
+    }
+    let f_final = r.f32()?;
+    let wall_seconds = r.f64()?;
+    let oracle_calls = r.u64()?;
+    let oracle_work = r.u64()?;
+    if r.remaining() != 0 {
+        return Err(WireError::Malformed {
+            field: "payload",
+            detail: format!("{} trailing bytes", r.remaining()),
+        });
+    }
+    Ok(ShardResultMsg {
+        shard,
+        size,
+        indices,
+        f_trajectory,
+        f_final,
+        wall_seconds,
+        oracle_calls,
+        oracle_work,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::PlanRequest;
+    use crate::util::rng::Rng;
+
+    fn job(payload: Precision, with_plan: bool) -> ShardJobMsg {
+        let mut rng = Rng::new(7);
+        let plan = with_plan.then(|| {
+            let mut req = PlanRequest::new(40, 3, 4, 5);
+            req.cores = 8;
+            WirePlan::of(&ShardPlan::plan(None, &req))
+        });
+        ShardJobMsg {
+            shard: 2,
+            k: 5,
+            batch: 256,
+            optimizer: "greedy".into(),
+            payload,
+            precision: Precision::F32,
+            cpu_kernel: CpuKernel::Blocked,
+            kernel: KernelImpl::Jnp,
+            threads: Some(3),
+            plan,
+            ground_ids: (0..10).map(|i| i * 4 + 1).collect(),
+            data: Matrix::random_normal(10, 3, &mut rng),
+        }
+    }
+
+    fn result() -> ShardResultMsg {
+        ShardResultMsg {
+            shard: 1,
+            size: 25,
+            indices: vec![17, 3, 88],
+            f_trajectory: vec![0.5, 0.9, 1.25],
+            f_final: 1.25,
+            wall_seconds: 0.031,
+            oracle_calls: 12,
+            oracle_work: 99_000,
+        }
+    }
+
+    #[test]
+    fn crc32_matches_zlib_check_value() {
+        // the standard CRC-32 check: crc32("123456789") == 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn job_roundtrip_f32_is_lossless() {
+        for with_plan in [false, true] {
+            let j = job(Precision::F32, with_plan);
+            let frame = encode_job(&j);
+            assert_eq!(frame_kind(&frame).unwrap(), FrameKind::Job);
+            let back = decode_job(&frame).unwrap();
+            assert_eq!(back, j);
+        }
+    }
+
+    #[test]
+    fn job_roundtrip_bf16_equals_demoted() {
+        let j = job(Precision::Bf16, true);
+        let frame = encode_job(&j);
+        let back = decode_job(&frame).unwrap();
+        // data came back demoted; everything else identical
+        let want: Vec<f32> = j.data.data().iter().map(|&v| bf16_round(v)).collect();
+        assert_eq!(back.data.data(), &want[..]);
+        let mut j_demoted = j.clone();
+        j_demoted.data = Matrix::from_vec(10, 3, want);
+        assert_eq!(back, j_demoted);
+        // re-encoding the decoded message is byte-stable
+        assert_eq!(encode_job(&back), frame);
+    }
+
+    #[test]
+    fn result_roundtrip_is_lossless() {
+        let m = result();
+        let frame = encode_result(&m);
+        assert_eq!(frame_kind(&frame).unwrap(), FrameKind::Result);
+        assert_eq!(decode_result(&frame).unwrap(), m);
+    }
+
+    #[test]
+    fn kind_confusion_is_malformed() {
+        let jf = encode_job(&job(Precision::F32, false));
+        let rf = encode_result(&result());
+        assert!(matches!(decode_result(&jf), Err(WireError::Malformed { field: "kind", .. })));
+        assert!(matches!(decode_job(&rf), Err(WireError::Malformed { field: "kind", .. })));
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_typed_error_not_a_panic() {
+        let frame = encode_job(&job(Precision::F32, true));
+        for len in 0..frame.len() {
+            let err = decode_job(&frame[..len]).unwrap_err();
+            match err {
+                WireError::TooShort { .. } | WireError::LengthMismatch { .. } => {}
+                other => panic!("truncated to {len}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        // the header fields fail their own checks; everything else the CRC
+        let frame = encode_result(&result());
+        for byte in 0..frame.len() {
+            for bit in 0..8 {
+                let mut bad = frame.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    decode_result(&bad).is_err(),
+                    "flip at byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_typed() {
+        let mut frame = encode_job(&job(Precision::F32, false));
+        frame[4] = 9; // version 9
+        assert_eq!(
+            decode_job(&frame).unwrap_err(),
+            WireError::UnsupportedVersion { found: 9, supported: WIRE_VERSION }
+        );
+    }
+
+    #[test]
+    fn hostile_counts_cannot_allocate() {
+        // a job frame whose id_count claims 2^31 entries but carries none
+        let j = job(Precision::F32, false);
+        let mut frame = encode_job(&j);
+        // find the id-count field: it sits right after the fixed-size knobs
+        // (shard/k/batch = 12, str "greedy" = 4 + 6, 4 enum bytes,
+        // has_threads + threads = 5, has_plan = 1) at payload offset 32
+        let off = HEADER_LEN + 32;
+        assert_eq!(
+            u32::from_le_bytes(frame[off..off + 4].try_into().unwrap()),
+            j.ground_ids.len() as u32
+        );
+        frame[off..off + 4].copy_from_slice(&0x8000_0000u32.to_le_bytes());
+        // fix the checksum so the count check itself is what trips
+        let body_len = frame.len() - TRAILER_LEN;
+        let crc = crc32(&frame[..body_len]);
+        frame[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_job(&frame), Err(WireError::TooShort { .. })));
+    }
+
+    #[test]
+    fn wire_plan_roundtrips_through_shard_plan() {
+        let mut req = PlanRequest::new(512, 32, 6, 8);
+        req.cores = 12;
+        let plan = ShardPlan::plan(None, &req);
+        let w = WirePlan::of(&plan);
+        let back = w.to_plan();
+        assert_eq!(back.n, plan.n);
+        assert_eq!(back.shards, plan.shards);
+        assert_eq!(back.shard_workers, plan.shard_workers);
+        assert_eq!(back.oracle_threads, plan.oracle_threads);
+        assert_eq!(back.merge_threads, plan.merge_threads);
+        assert_eq!(WirePlan::of(&back), w);
+        assert!(back.buckets.gains.is_none());
+    }
+
+    #[test]
+    fn garbage_never_panics() {
+        let mut rng = Rng::new(0xBAD);
+        for _ in 0..500 {
+            let len = rng.below(200);
+            let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = decode_job(&bytes);
+            let _ = decode_result(&bytes);
+            let _ = frame_kind(&bytes);
+        }
+    }
+}

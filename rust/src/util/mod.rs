@@ -11,6 +11,7 @@ pub mod logging;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod testing;
 pub mod threadpool;
 pub mod timer;
 

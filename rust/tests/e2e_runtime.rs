@@ -2,9 +2,14 @@
 //! reproduce the CPU reference implementation bit-for-bit-ish (f32
 //! tolerance) across the whole Oracle surface, for both precisions.
 //!
-//! Requires `make artifacts` (panics with a message otherwise).
+//! **Gate: `RUN_E2E=1`.** These tests need the real `xla` crate and the
+//! AOT artifacts (`make artifacts`); the offline stub build cannot run
+//! the XLA backend. Without the gate each test prints a skip line and
+//! returns green, so CI output shows *why* nothing executed. With the
+//! gate but without artifacts, `runtime()` panics with the remedy.
 
 use ebc::engine::{DeviceDataset, Engine, EngineConfig, Precision, XlaOracle};
+use ebc::util::testing::e2e_enabled;
 use ebc::linalg::Matrix;
 use ebc::optim::{Greedy, Optimizer, ThreeSieves};
 use ebc::runtime::Runtime;
@@ -27,8 +32,10 @@ fn close(a: f32, b: f32, tol: f32) -> bool {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn gains_match_cpu_f32() {
+    if !e2e_enabled("gains_match_cpu_f32") {
+        return;
+    }
     let mut rng = Rng::new(1);
     let v = Matrix::random_normal(500, 100, &mut rng);
     let f = EbcFunction::new(v.clone());
@@ -51,8 +58,10 @@ fn gains_match_cpu_f32() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn gains_bf16_close_to_f32() {
+    if !e2e_enabled("gains_bf16_close_to_f32") {
+        return;
+    }
     let mut rng = Rng::new(2);
     let v = Matrix::random_normal(300, 100, &mut rng);
     let f = EbcFunction::new(v.clone());
@@ -70,8 +79,10 @@ fn gains_bf16_close_to_f32() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn update_and_dist_col_match_cpu() {
+    if !e2e_enabled("update_and_dist_col_match_cpu") {
+        return;
+    }
     let mut rng = Rng::new(3);
     let v = Matrix::random_normal(400, 100, &mut rng);
     let f = EbcFunction::new(v.clone());
@@ -97,8 +108,10 @@ fn update_and_dist_col_match_cpu() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn eval_sets_match_cpu_work_matrix() {
+    if !e2e_enabled("eval_sets_match_cpu_work_matrix") {
+        return;
+    }
     let mut rng = Rng::new(4);
     let v = Matrix::random_normal(700, 100, &mut rng);
     let f = EbcFunction::new(v.clone());
@@ -122,8 +135,10 @@ fn eval_sets_match_cpu_work_matrix() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn greedy_on_xla_matches_greedy_on_cpu() {
+    if !e2e_enabled("greedy_on_xla_matches_greedy_on_cpu") {
+        return;
+    }
     let mut rng = Rng::new(5);
     let v = Matrix::random_normal(600, 100, &mut rng);
     let g_cpu = Greedy { batch: 256 }.run(&mut CpuOracle::new(v.clone()), 8);
@@ -134,8 +149,10 @@ fn greedy_on_xla_matches_greedy_on_cpu() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn three_sieves_on_xla_close_to_cpu() {
+    if !e2e_enabled("three_sieves_on_xla_close_to_cpu") {
+        return;
+    }
     let mut rng = Rng::new(6);
     let v = Matrix::random_normal(400, 100, &mut rng);
     let ts = ThreeSieves { epsilon: 0.1, t: 20 };
@@ -147,8 +164,10 @@ fn three_sieves_on_xla_close_to_cpu() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn padded_d_dimension_is_exact() {
+    if !e2e_enabled("padded_d_dimension_is_exact") {
+        return;
+    }
     // d=37 pads to the d=128 bucket; zero-padding must not change values
     let mut rng = Rng::new(7);
     let v = Matrix::random_normal(100, 37, &mut rng);
@@ -165,8 +184,10 @@ fn padded_d_dimension_is_exact() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn oversized_request_errors_without_fallback() {
+    if !e2e_enabled("oversized_request_errors_without_fallback") {
+        return;
+    }
     let mut rng = Rng::new(8);
     let v = Matrix::random_normal(64, 8, &mut rng);
     let eng = engine(Precision::F32);
@@ -178,8 +199,10 @@ fn oversized_request_errors_without_fallback() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn cpu_fallback_handles_oversized() {
+    if !e2e_enabled("cpu_fallback_handles_oversized") {
+        return;
+    }
     let mut rng = Rng::new(9);
     let v = Matrix::random_normal(64, 8, &mut rng);
     let f = EbcFunction::new(v.clone());
@@ -193,8 +216,10 @@ fn cpu_fallback_handles_oversized() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn pallas_and_jnp_impls_agree() {
+    if !e2e_enabled("pallas_and_jnp_impls_agree") {
+        return;
+    }
     use ebc::engine::KernelImpl;
     let mut rng = Rng::new(11);
     let v = Matrix::random_normal(600, 100, &mut rng);
@@ -233,8 +258,10 @@ fn pallas_and_jnp_impls_agree() {
 }
 
 #[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla crate; offline stub build cannot run the XLA backend"]
 fn ground_buffers_cached_across_calls() {
+    if !e2e_enabled("ground_buffers_cached_across_calls") {
+        return;
+    }
     let mut rng = Rng::new(10);
     let v = Matrix::random_normal(200, 100, &mut rng);
     let eng = engine(Precision::F32);

@@ -6,13 +6,18 @@ use ebc::coordinator::backpressure::BoundedQueue;
 use ebc::coordinator::{Coordinator, CycleRecord, RouteResult};
 use ebc::config::schema::ServiceConfig;
 use ebc::engine::{
-    DeviceDataset, EngineConfig, OracleSpec, PlanRequest, Precision, ShardPlan,
+    DeviceDataset, EngineConfig, KernelImpl, OracleSpec, PlanRequest, Precision, ShardPlan,
 };
 use ebc::linalg::gemm::gemm_nt;
 use ebc::linalg::{CpuKernel, Matrix, SharedMatrix};
 use ebc::optim::{exhaustive_best, Greedy, LazyGreedy, Optimizer, SieveStreaming};
+use ebc::optim::greedy_over_candidates;
 use ebc::runtime::Manifest;
-use ebc::shard::{build_partitioner, validate_partition, ShardedSummarizer, PARTITIONERS};
+use ebc::shard::wire::{decode_job, decode_result, encode_job, encode_result};
+use ebc::shard::{
+    build_partitioner, validate_partition, LoopbackReplicaTransport, Partitioner, ShardJobMsg,
+    ShardResultMsg, ShardTransport, ShardedSummarizer, WirePlan, PARTITIONERS,
+};
 use ebc::submodular::{fold_mindist, CpuOracle, EbcFunction, Oracle};
 use ebc::util::proptest::{arb_dataset, arb_subset, forall, Config};
 use ebc::util::rng::Rng;
@@ -433,7 +438,246 @@ fn prop_sharded_within_constant_factor_of_opt() {
     );
 }
 
-// --------------------------------------------------- fleet planning
+// --------------------------------------------------- shard transport
+
+/// The pre-PR direct path: partition → per-shard greedy (no wire, no
+/// transport, plain function calls) → merge. The transported pipeline
+/// must reproduce this exactly.
+fn direct_two_stage(
+    v: &SharedMatrix,
+    partitioner: &dyn Partitioner,
+    shards: usize,
+    k: usize,
+) -> (Vec<usize>, f32) {
+    let parts: Vec<Vec<usize>> = partitioner
+        .partition(v, shards)
+        .into_iter()
+        .filter(|p| !p.is_empty())
+        .collect();
+    let greedy = Greedy::default();
+    let mut union: Vec<usize> = Vec::new();
+    for part in &parts {
+        let sub = Arc::new(v.gather(part));
+        let mut res = greedy.run(&mut CpuOracle::new_shared(sub), k.min(part.len()));
+        for idx in res.indices.iter_mut() {
+            *idx = part[*idx];
+        }
+        union.extend(res.indices);
+    }
+    union.sort_unstable();
+    union.dedup();
+    let merged =
+        greedy_over_candidates(&mut CpuOracle::new_shared(Arc::clone(v)), &union, k, 1024);
+    (merged.indices, merged.f_final)
+}
+
+#[test]
+fn prop_transport_identity_inproc_loopback_direct() {
+    // tentpole invariant: for random matrices and every partitioner,
+    // the inproc transport, the loopback transport and the pre-PR
+    // direct path select identical exemplars with identical f bits
+    forall(
+        "inproc == loopback == direct (indices + f bits, all partitioners)",
+        &Config { cases: 8, seed: 0x7149 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 40, 5, 2.0);
+            let shards = 1 + rng.below(5);
+            let k = 1 + rng.below(4);
+            let replicas = 1 + rng.below(4);
+            (n, d, data, shards, k, replicas)
+        },
+        |(n, d, data, shards, k, replicas)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let factory = |m: SharedMatrix, _spec: &OracleSpec| {
+                Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+            };
+            let greedy = Greedy::default();
+            for name in PARTITIONERS {
+                let part = build_partitioner(name, 11).expect("known partitioner");
+                let (want_idx, want_f) = direct_two_stage(&v, part.as_ref(), *shards, *k);
+                let lb = LoopbackReplicaTransport::with_replicas(*replicas, 1);
+                let transports: [(&str, Option<&dyn ShardTransport>); 2] =
+                    [("inproc default", None), ("loopback", Some(&lb))];
+                for (label, transport) in transports {
+                    let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, *shards);
+                    s.transport = transport;
+                    let res = s.summarize(&v, &factory, *k);
+                    if res.merged.indices != want_idx {
+                        return Err(format!(
+                            "{name}/{label}: {:?} != direct {want_idx:?}",
+                            res.merged.indices
+                        ));
+                    }
+                    if res.merged.f_final.to_bits() != want_f.to_bits() {
+                        return Err(format!(
+                            "{name}/{label}: f {} != direct {want_f}",
+                            res.merged.f_final
+                        ));
+                    }
+                    if res.wire_bytes == 0 {
+                        return Err(format!("{name}/{label}: no wire traffic recorded"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn arb_job(rng: &mut ebc::util::rng::Rng, payload: Precision) -> ShardJobMsg {
+    let rows = 1 + rng.below(12);
+    let cols = 1 + rng.below(6);
+    let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 3.0).collect();
+    let plan = (rng.below(2) == 1).then(|| {
+        let mut req = PlanRequest::new(1 + rng.below(100), cols, 1 + rng.below(8), 3);
+        req.cores = 1 + rng.below(16);
+        WirePlan::of(&ShardPlan::plan(None, &req))
+    });
+    ShardJobMsg {
+        shard: rng.below(1000) as u32,
+        k: (1 + rng.below(6)) as u32,
+        batch: (1 + rng.below(2048)) as u32,
+        optimizer: ["greedy", "lazy_greedy", "stochastic_greedy"][rng.below(3)].into(),
+        payload,
+        precision: if rng.below(2) == 1 { Precision::Bf16 } else { Precision::F32 },
+        cpu_kernel: if rng.below(2) == 1 { CpuKernel::Blocked } else { CpuKernel::Scalar },
+        kernel: if rng.below(2) == 1 { KernelImpl::Jnp } else { KernelImpl::Pallas },
+        threads: (rng.below(2) == 1).then(|| rng.below(16) as u32),
+        plan,
+        ground_ids: (0..rows).map(|_| rng.next_u64() >> 16).collect(),
+        data: Matrix::from_vec(rows, cols, data),
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_lossless_f32_and_bf16() {
+    // satellite invariant: encode → decode is lossless for f32 payloads
+    // and value-preserving (== the demoted matrix, byte-stable on
+    // re-encode) for bf16 payloads; result frames are always lossless
+    forall(
+        "wire encode/decode round trip (f32 lossless, bf16 demoted-lossless)",
+        &Config { cases: 32, seed: 0x311E },
+        |rng| {
+            let f32_job = arb_job(rng, Precision::F32);
+            let bf16_job = arb_job(rng, Precision::Bf16);
+            let k = 1 + rng.below(5);
+            let result = ShardResultMsg {
+                shard: rng.below(100) as u32,
+                size: (k + rng.below(50)) as u32,
+                indices: (0..k).map(|_| rng.next_u64() >> 8).collect(),
+                f_trajectory: (0..k).map(|_| rng.f32() * 10.0).collect(),
+                f_final: rng.f32() * 10.0,
+                wall_seconds: rng.f32() as f64,
+                oracle_calls: rng.next_u64() >> 32,
+                oracle_work: rng.next_u64() >> 16,
+            };
+            (f32_job, bf16_job, result)
+        },
+        |(f32_job, bf16_job, result)| {
+            let frame = encode_job(f32_job);
+            let back = decode_job(&frame).map_err(|e| e.to_string())?;
+            if &back != f32_job {
+                return Err(format!("f32 job round trip drifted: {back:?}"));
+            }
+            if encode_job(&back) != frame {
+                return Err("f32 re-encode not byte-stable".into());
+            }
+
+            let frame = encode_job(bf16_job);
+            let back = decode_job(&frame).map_err(|e| e.to_string())?;
+            let want: Vec<f32> = bf16_job
+                .data
+                .data()
+                .iter()
+                .map(|&v| ebc::linalg::gemm::bf16_round(v))
+                .collect();
+            if back.data.data() != &want[..] {
+                return Err("bf16 payload != demoted matrix".into());
+            }
+            if back.ground_ids != bf16_job.ground_ids || back.optimizer != bf16_job.optimizer {
+                return Err("bf16 job metadata drifted".into());
+            }
+            // demotion is idempotent, so the second trip is lossless
+            if encode_job(&back) != frame {
+                return Err("bf16 re-encode not byte-stable".into());
+            }
+
+            let frame = encode_result(result);
+            let back = decode_result(&frame).map_err(|e| e.to_string())?;
+            if &back != result {
+                return Err(format!("result round trip drifted: {back:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replica_failure_preserves_selection_and_counts_retries() {
+    // satellite invariant: killing a replica mid-run re-queues its
+    // shards to survivors with an unchanged merged selection, and the
+    // transport counts every re-queued shard
+    forall(
+        "replica death mid-run: selection identical, retries counted",
+        &Config { cases: 8, seed: 0xDEAD },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 50, 5, 2.0);
+            let shards = 3 + rng.below(5);
+            let k = 1 + rng.below(4);
+            let replicas = 2 + rng.below(3);
+            let survive = rng.below(2); // jobs the victim finishes first
+            (n, d, data, shards, k, replicas, survive)
+        },
+        |(n, d, data, shards, k, replicas, survive)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let factory = |m: SharedMatrix, _spec: &OracleSpec| {
+                Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+            };
+            let greedy = Greedy::default();
+            let part = build_partitioner("round_robin", 0).expect("known partitioner");
+
+            let healthy = LoopbackReplicaTransport::with_replicas(*replicas, 1);
+            let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, *shards);
+            s.transport = Some(&healthy);
+            let want = s.summarize(&v, &factory, *k);
+
+            let chaotic = LoopbackReplicaTransport::with_replicas(*replicas, 1);
+            chaotic.fail_after("replica-0", *survive as u64);
+            let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, *shards);
+            s.transport = Some(&chaotic);
+            let got = s.summarize(&v, &factory, *k);
+
+            if got.merged.indices != want.merged.indices {
+                return Err(format!(
+                    "selection changed: {:?} != {:?}",
+                    got.merged.indices, want.merged.indices
+                ));
+            }
+            if got.merged.f_final.to_bits() != want.merged.f_final.to_bits() {
+                return Err(format!("f changed: {} != {}", got.merged.f_final, want.merged.f_final));
+            }
+            // the victim never outlives its failure budget...
+            let done = chaotic
+                .with_registry(|reg| reg.get("replica-0").map(|r| r.jobs_done).unwrap_or(0));
+            if done > *survive as u64 {
+                return Err(format!("victim completed {done} > budget {survive}"));
+            }
+            // ...and every shard it was dealt but could not finish is a
+            // counted retry: the capacity-weighted deal hands replica-0
+            // ceil(jobs / replicas) shards in round 1
+            let first_deal = got.shards_used.div_ceil(*replicas);
+            let lost = first_deal.saturating_sub(*survive) as u64;
+            if got.shard_retries != lost {
+                return Err(format!(
+                    "expected {lost} retried shard(s) (dealt {first_deal}, budget {survive}), \
+                     transport counted {}",
+                    got.shard_retries
+                ));
+            }
+            Ok(())
+        },
+    );
+}
 
 const PLAN_MANIFEST: &str = r#"{
   "version": 1,

@@ -1,0 +1,265 @@
+//! Golden conformance suite for the shard wire format
+//! (`ebc::shard::wire`).
+//!
+//! The hex frames below are **frozen**: `encode(struct)` must reproduce
+//! them byte for byte and `decode(golden)` must reproduce the structs,
+//! so any layout change breaks this suite and forces a conscious
+//! `WIRE_VERSION` bump (plus regenerated goldens). The corruption half
+//! proves decoding is total: truncated, bit-flipped, resized and
+//! unknown-version frames yield typed [`WireError`]s, never panics.
+
+use ebc::engine::{KernelImpl, Precision};
+use ebc::linalg::{CpuKernel, Matrix};
+use ebc::shard::wire::{
+    crc32, decode_job, decode_result, encode_job, encode_result, frame_kind, FrameKind,
+    ShardJobMsg, ShardResultMsg, WireError, WirePlan, HEADER_LEN, TRAILER_LEN, WIRE_VERSION,
+};
+
+fn unhex(parts: &[&str]) -> Vec<u8> {
+    let joined: String = parts.concat();
+    assert!(joined.len() % 2 == 0);
+    (0..joined.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&joined[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+/// Golden 1: an f32-payload job of an unplanned run (threads pinned).
+const JOB_F32: &[&str] = &[
+    "45424357010001005c0000000100000002000000100000000600000067726565",
+    "6479000001010102000000000300000003000000000000000500000000000000",
+    "080000000000000003000000020000000000803f000000c00000003f00005040",
+    "000040bf000080403154c62f",
+];
+
+fn job_f32() -> ShardJobMsg {
+    ShardJobMsg {
+        shard: 1,
+        k: 2,
+        batch: 16,
+        optimizer: "greedy".into(),
+        payload: Precision::F32,
+        precision: Precision::F32,
+        cpu_kernel: CpuKernel::Blocked,
+        kernel: KernelImpl::Jnp,
+        threads: Some(2),
+        plan: None,
+        ground_ids: vec![3, 5, 8],
+        data: Matrix::from_vec(3, 2, vec![1.0, -2.0, 0.5, 3.25, -0.75, 4.0]),
+    }
+}
+
+/// Golden 2: a bf16-payload job of a planned run (serialized plan core).
+const JOB_BF16_PLANNED: &[&str] = &[
+    "45424357010001006c0000000000000001000000080000000b0000006c617a79",
+    "5f67726565647901010000000000000001400000000800000004000000030000",
+    "0001010108000000040000000200000008000000020000000000000000000000",
+    "02000000000000000200000002000000803f00c0203e404034caea42",
+];
+
+fn job_bf16_planned() -> ShardJobMsg {
+    ShardJobMsg {
+        shard: 0,
+        k: 1,
+        batch: 8,
+        optimizer: "lazy_greedy".into(),
+        payload: Precision::Bf16,
+        precision: Precision::Bf16,
+        cpu_kernel: CpuKernel::Scalar,
+        kernel: KernelImpl::Pallas,
+        threads: None,
+        plan: Some(WirePlan {
+            n: 64,
+            d: 8,
+            shards: 4,
+            k: 3,
+            precision: Precision::Bf16,
+            kernel: KernelImpl::Jnp,
+            cpu_kernel: CpuKernel::Blocked,
+            cores: 8,
+            shard_workers: 4,
+            oracle_threads: 2,
+            merge_threads: 8,
+        }),
+        ground_ids: vec![0, 2],
+        // every value is bf16-representable, so the frame is lossless
+        data: Matrix::from_vec(2, 2, vec![1.0, -2.0, 0.15625, 3.0]),
+    }
+}
+
+/// Golden 3: a result frame.
+const RESULT: &[&str] = &[
+    "454243570100020050000000020000000a000000030000000700000000000000",
+    "03000000000000000900000000000000030000000000003f0000403f0000803f",
+    "0000803f000000000000d03f2a00000000000000d2040000000000005ced0156",
+];
+
+fn result_msg() -> ShardResultMsg {
+    ShardResultMsg {
+        shard: 2,
+        size: 10,
+        indices: vec![7, 3, 9],
+        f_trajectory: vec![0.5, 0.75, 1.0],
+        f_final: 1.0,
+        wall_seconds: 0.25,
+        oracle_calls: 42,
+        oracle_work: 1234,
+    }
+}
+
+// ----------------------------------------------------------- conformance
+
+#[test]
+fn encode_reproduces_goldens_byte_for_byte() {
+    assert_eq!(
+        encode_job(&job_f32()),
+        unhex(JOB_F32),
+        "f32 job frame drifted — bump WIRE_VERSION and regenerate goldens"
+    );
+    assert_eq!(
+        encode_job(&job_bf16_planned()),
+        unhex(JOB_BF16_PLANNED),
+        "bf16/planned job frame drifted — bump WIRE_VERSION and regenerate goldens"
+    );
+    assert_eq!(
+        encode_result(&result_msg()),
+        unhex(RESULT),
+        "result frame drifted — bump WIRE_VERSION and regenerate goldens"
+    );
+}
+
+#[test]
+fn decode_reproduces_the_expected_structs() {
+    assert_eq!(decode_job(&unhex(JOB_F32)).unwrap(), job_f32());
+    assert_eq!(decode_job(&unhex(JOB_BF16_PLANNED)).unwrap(), job_bf16_planned());
+    assert_eq!(decode_result(&unhex(RESULT)).unwrap(), result_msg());
+}
+
+#[test]
+fn frame_kind_classifies_goldens() {
+    assert_eq!(frame_kind(&unhex(JOB_F32)).unwrap(), FrameKind::Job);
+    assert_eq!(frame_kind(&unhex(JOB_BF16_PLANNED)).unwrap(), FrameKind::Job);
+    assert_eq!(frame_kind(&unhex(RESULT)).unwrap(), FrameKind::Result);
+}
+
+#[test]
+fn golden_checksums_verify_independently() {
+    // the last four bytes of every golden are the CRC-32 of the rest
+    for golden in [&unhex(JOB_F32), &unhex(JOB_BF16_PLANNED), &unhex(RESULT)] {
+        let body = &golden[..golden.len() - TRAILER_LEN];
+        let stored = u32::from_le_bytes(golden[golden.len() - TRAILER_LEN..].try_into().unwrap());
+        assert_eq!(crc32(body), stored);
+    }
+}
+
+// ------------------------------------------------------------ corruption
+
+#[test]
+fn truncated_frames_are_typed_errors_never_panics() {
+    let golden = unhex(JOB_BF16_PLANNED);
+    for len in 0..golden.len() {
+        match decode_job(&golden[..len]) {
+            Err(WireError::TooShort { .. }) | Err(WireError::LengthMismatch { .. }) => {}
+            other => panic!("truncated to {len}: {other:?}"),
+        }
+    }
+    // dropping the trailer alone is a length mismatch, not a crash
+    let no_trailer = &golden[..golden.len() - TRAILER_LEN];
+    assert!(matches!(
+        decode_job(no_trailer),
+        Err(WireError::TooShort { .. }) | Err(WireError::LengthMismatch { .. })
+    ));
+}
+
+#[test]
+fn every_bit_flip_in_every_golden_is_detected() {
+    for (golden, is_job) in [(unhex(JOB_F32), true), (unhex(RESULT), false)] {
+        for byte in 0..golden.len() {
+            for bit in 0..8 {
+                let mut bad = golden.clone();
+                bad[byte] ^= 1 << bit;
+                let err = if is_job {
+                    decode_job(&bad).err()
+                } else {
+                    decode_result(&bad).err()
+                };
+                assert!(err.is_some(), "flip byte {byte} bit {bit} went undetected");
+            }
+        }
+    }
+}
+
+#[test]
+fn unknown_version_frames_are_rejected_up_front() {
+    // a frame from a hypothetical v2 encoder: version bytes patched,
+    // checksum re-sealed so *only* the version check can reject it
+    let mut future = unhex(JOB_F32);
+    future[4..6].copy_from_slice(&2u16.to_le_bytes());
+    let body_len = future.len() - TRAILER_LEN;
+    let crc = crc32(&future[..body_len]);
+    future[body_len..].copy_from_slice(&crc.to_le_bytes());
+    assert_eq!(
+        decode_job(&future).unwrap_err(),
+        WireError::UnsupportedVersion { found: 2, supported: WIRE_VERSION }
+    );
+}
+
+#[test]
+fn unknown_kind_and_kind_confusion_are_typed() {
+    let mut alien = unhex(RESULT);
+    alien[6] = 9;
+    let body_len = alien.len() - TRAILER_LEN;
+    let crc = crc32(&alien[..body_len]);
+    alien[body_len..].copy_from_slice(&crc.to_le_bytes());
+    assert_eq!(decode_result(&alien).unwrap_err(), WireError::UnknownKind(9));
+    // a valid job frame handed to the result decoder (and vice versa)
+    assert!(matches!(
+        decode_result(&unhex(JOB_F32)),
+        Err(WireError::Malformed { field: "kind", .. })
+    ));
+    assert!(matches!(
+        decode_job(&unhex(RESULT)),
+        Err(WireError::Malformed { field: "kind", .. })
+    ));
+}
+
+#[test]
+fn bad_magic_is_typed() {
+    let mut bad = unhex(JOB_F32);
+    bad[0] = b'X';
+    assert!(matches!(decode_job(&bad), Err(WireError::BadMagic { .. })));
+}
+
+#[test]
+fn appended_garbage_is_a_length_mismatch() {
+    let mut frame = unhex(RESULT);
+    let declared = frame.len() - HEADER_LEN - TRAILER_LEN;
+    frame.extend_from_slice(&[0xAB; 7]);
+    assert_eq!(
+        decode_result(&frame).unwrap_err(),
+        WireError::LengthMismatch { declared, available: declared + 7 }
+    );
+}
+
+#[test]
+fn corrupt_enum_bytes_inside_a_resealed_payload_are_malformed() {
+    // corrupt the cpu_kernel byte (payload offset 24: 12 fixed + 10 str
+    // + payload_precision + precision) and re-seal the checksum so the
+    // field validator itself must catch it
+    let mut bad = unhex(JOB_F32);
+    bad[HEADER_LEN + 24] = 7;
+    let body_len = bad.len() - TRAILER_LEN;
+    let crc = crc32(&bad[..body_len]);
+    bad[body_len..].copy_from_slice(&crc.to_le_bytes());
+    assert!(matches!(
+        decode_job(&bad),
+        Err(WireError::Malformed { field: "cpu_kernel", .. })
+    ));
+}
+
+#[test]
+fn wire_version_is_one_until_consciously_bumped() {
+    // the goldens above encode version 1; this pin makes a version bump
+    // show up here too, next to the regeneration instructions
+    assert_eq!(WIRE_VERSION, 1);
+}
