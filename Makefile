@@ -1,6 +1,6 @@
 # Developer entry points. `make verify` is the tier-1 gate CI runs.
 
-.PHONY: verify build test bench bench-kernel bench-shard lint artifacts
+.PHONY: verify build test bench bench-kernel bench-shard lint doc artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -26,6 +26,10 @@ bench-shard:
 
 lint:
 	cargo fmt --check && cargo clippy --all-targets -- -D warnings
+
+# rustdoc with warnings denied — CI runs the same (docs job)
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # AOT-lower the Pallas/JAX graphs to HLO text + manifest (requires the
 # Python layer; the Rust binary is self-contained afterwards).

@@ -10,10 +10,10 @@
 //!
 //!     cargo run --release --example fleet_summary [-- --shards 4]
 
+use ebc::api::Service;
 use ebc::config::schema::ServiceConfig;
-use ebc::coordinator::{Coordinator, RouteResult, SimulatedFleet, FLEET_QUERY};
+use ebc::coordinator::{RouteResult, SimulatedFleet, FLEET_QUERY};
 use ebc::imm::{Part, ProcessState};
-use ebc::submodular::{CpuOracle, Oracle};
 
 fn main() -> anyhow::Result<()> {
     ebc::util::logging::init();
@@ -34,19 +34,13 @@ fn main() -> anyhow::Result<()> {
     cfg.summary.refresh_every = 200;
     cfg.summary.window = 400;
     cfg.coordinator.queue_capacity = 8192;
+    cfg.engine.cpu_kernel = ebc::linalg::CpuKernel::Scalar;
+    cfg.engine.cpu_threads = 1; // fleet plans override per oracle
     cfg.shard.shards = shards;
     cfg.shard.partitioner = "locality".into();
 
-    let factory = |m: ebc::linalg::SharedMatrix, spec: &ebc::engine::OracleSpec| {
-        // fleet queries arrive with the planner's per-oracle thread split
-        Box::new(CpuOracle::with_kernel_shared(
-            m,
-            ebc::linalg::CpuKernel::Scalar,
-            ebc::engine::Precision::F32,
-            spec.threads_or(1),
-        )) as Box<dyn Oracle>
-    };
-    let mut coordinator = Coordinator::new(cfg, Box::new(factory));
+    // the api façade wires the oracle factory + fleet planner from cfg
+    let mut coordinator = Service::cpu().coordinator(cfg);
 
     let mut fleet = SimulatedFleet::new(
         &[

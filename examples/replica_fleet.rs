@@ -13,11 +13,11 @@
 //!
 //!     cargo run --release --example replica_fleet [-- --replicas 4]
 
+use ebc::api::Service;
 use ebc::config::schema::ServiceConfig;
 use ebc::coordinator::{Coordinator, RouteResult, SimulatedFleet, FLEET_QUERY};
 use ebc::imm::{Part, ProcessState};
 use ebc::shard::LoopbackReplicaTransport;
-use ebc::submodular::{CpuOracle, Oracle};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -43,19 +43,14 @@ fn main() -> anyhow::Result<()> {
     // fleet — the [shard] transport knob stays at its default so the
     // coordinator doesn't build a throwaway registry first
     cfg.shard.shards = 2 * replicas; // every replica sees work
+    cfg.engine.cpu_kernel = ebc::linalg::CpuKernel::Scalar;
+    cfg.engine.cpu_threads = 1; // fleet plans override per oracle
 
-    let factory = |m: ebc::linalg::SharedMatrix, spec: &ebc::engine::OracleSpec| {
-        Box::new(CpuOracle::with_kernel_shared(
-            m,
-            ebc::linalg::CpuKernel::Scalar,
-            ebc::engine::Precision::F32,
-            spec.threads_or(1),
-        )) as Box<dyn Oracle>
-    };
+    // the api façade wires the oracle factory + fleet planner from cfg;
     // keep a handle to the replica fleet so we can drain/kill members
     let transport = Arc::new(LoopbackReplicaTransport::with_replicas(replicas, 1));
     let mut coordinator =
-        Coordinator::new(cfg, Box::new(factory)).with_transport(Box::new(Arc::clone(&transport)));
+        Service::cpu().coordinator(cfg).with_transport(Box::new(Arc::clone(&transport)));
 
     let mut fleet = SimulatedFleet::new(
         &[

@@ -9,6 +9,7 @@
 //! `EBC_BENCH_QUICK=1` shrinks the workload; `EBC_BENCH_FULL=1` runs
 //! the acceptance-sized N=20k, d=32, C=1024 sweep.
 
+use ebc::api::{DatasetRef, SummarizeRequest};
 use ebc::bench::kernel_scaling::{kernel_report, save_bench_json, split_report};
 use ebc::bench::{
     full_mode, kernel_scaling_sweep, quick_mode, shard_split_sweep, KernelSweepConfig, Settings,
@@ -16,13 +17,17 @@ use ebc::bench::{
 
 fn main() -> anyhow::Result<()> {
     ebc::util::logging::init();
-    let cfg = if full_mode() {
-        KernelSweepConfig::default()
+    // the workload travels as an api request (same façade as the CLI);
+    // the sweep derives its shape from the validated request
+    let (n, c, threads): (usize, usize, Vec<usize>) = if full_mode() {
+        (20_000, 1024, vec![1, 2, 4, 8])
     } else if quick_mode() {
-        KernelSweepConfig { n: 2_000, d: 32, c: 128, thread_counts: vec![1, 2], seed: 7 }
+        (2_000, 128, vec![1, 2])
     } else {
-        KernelSweepConfig { n: 8_000, d: 32, c: 512, thread_counts: vec![1, 2, 4], seed: 7 }
+        (8_000, 512, vec![1, 2, 4])
     };
+    let base = SummarizeRequest::new(DatasetRef::synthetic(n, 32, 7), 1).batch(c);
+    let cfg = KernelSweepConfig::from_request(&base, threads)?;
     println!(
         "kernel sweep: N={} d={} C={} threads={:?}",
         cfg.n, cfg.d, cfg.c, cfg.thread_counts

@@ -1,7 +1,8 @@
 //! Shard-scaling bench: two-stage sharded summarization wall-clock and
 //! quality as a function of the shard count P and the per-shard
 //! optimizer, on a generated IMM campaign — the horizontal companion to
-//! the paper's vertical (accelerator) scaling figures. Emits
+//! the paper's vertical (accelerator) scaling figures. Every
+//! measurement routes through the `ebc::api` façade. Emits
 //! `bench_results/shard_scaling_bench.csv`.
 //!
 //!     cargo bench --bench shard_scaling
@@ -9,29 +10,20 @@
 //! `EBC_BENCH_QUICK=1` shrinks the sweep; `EBC_THREADS` caps the
 //! shard-stage worker pool.
 
+use ebc::api::{DatasetRef, Service};
 use ebc::bench::report::fmt_secs;
-use ebc::bench::{quick_mode, shard_scaling_sweep, Reporter, ShardSweepConfig, SweepPlanner};
-use ebc::engine::{OracleSpec, PlanRequest, ShardPlan};
-use ebc::imm::{generate_dataset_with, Part, ProcessState};
-use ebc::linalg::SharedMatrix;
-use ebc::submodular::{CpuOracle, Oracle};
-use std::sync::Arc;
+use ebc::bench::{quick_mode, shard_scaling_sweep, Reporter, ShardSweepConfig};
+use ebc::imm::{Part, ProcessState};
 
 fn main() -> anyhow::Result<()> {
     ebc::util::logging::init();
     let quick = quick_mode();
     let samples = if quick { 128 } else { 512 };
-    let data: SharedMatrix =
-        Arc::new(generate_dataset_with(Part::Cover, ProcessState::Stable, 7, samples).cycles);
-    let factory = |m: SharedMatrix, spec: &OracleSpec| {
-        Box::new(CpuOracle::with_kernel_shared(
-            m,
-            ebc::linalg::CpuKernel::Scalar,
-            ebc::engine::Precision::F32,
-            spec.threads_or(1),
-        )) as Box<dyn Oracle>
-    };
-    let planner = |req: &PlanRequest| Arc::new(ShardPlan::plan(None, req));
+    let service = Service::cpu();
+    // materialize the campaign once; every sweep cell aliases it
+    let data =
+        DatasetRef::imm(Part::Cover, ProcessState::Stable, samples, 7).materialize()?;
+    let dataset = DatasetRef::Inline(data);
 
     let algorithms: Vec<String> = if quick {
         vec!["greedy".into()]
@@ -40,21 +32,17 @@ fn main() -> anyhow::Result<()> {
     };
     let mut points = Vec::new();
     for partitioner in ["round_robin", "hash", "locality"] {
-        let cfg = ShardSweepConfig {
-            k: 10,
-            shard_counts: vec![1, 2, 4, 8],
-            algorithms: algorithms.clone(),
-            partitioner: partitioner.into(),
-            threads: 0,
-            seed: 0xEBC,
-            cores: 0,
-            ..Default::default()
-        };
         // planned (P x T <= cores split) vs the legacy unplanned fan-out
         for planned in [false, true] {
-            let planner_opt: Option<SweepPlanner> =
-                if planned { Some(&planner) } else { None };
-            let pts = shard_scaling_sweep(&data, &factory, &cfg, planner_opt)?;
+            let cfg = ShardSweepConfig {
+                k: 10,
+                shard_counts: vec![1, 2, 4, 8],
+                algorithms: algorithms.clone(),
+                partitioner: partitioner.into(),
+                planned,
+                ..Default::default()
+            };
+            let pts = shard_scaling_sweep(&service, &dataset, &cfg)?;
             points.extend(pts.into_iter().map(|p| (partitioner, p)));
         }
     }

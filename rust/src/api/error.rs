@@ -1,0 +1,72 @@
+//! Typed failure modes of the api façade.
+
+use crate::shard::wire::WireError;
+use std::fmt;
+
+/// Why a request could not be validated or executed. Every variant is
+/// reachable from user input — `.expect()`/panics are reserved for
+/// internal invariants, never for request content.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// A field failed a structural check (k = 0, k > n, empty dataset,
+    /// zero batch, ...).
+    Invalid { field: &'static str, detail: String },
+    /// A name field did not resolve against its registry (optimizer /
+    /// partitioner / transport / backend).
+    UnknownName { field: &'static str, name: String, expected: Vec<String> },
+    /// A non-registry (custom live instance) optimizer was combined
+    /// with a transport that cannot rebuild it remotely — the
+    /// remote-rebuild contract on
+    /// [`crate::shard::wire::ShardJobMsg::optimizer`].
+    NonRegistryOptimizer { transport: String },
+    /// The evaluation backend failed (runtime discovery, oracle build).
+    Backend { detail: String },
+    /// The shard transport failed irrecoverably.
+    Transport { detail: String },
+    /// A wire frame failed to encode/decode.
+    Wire(WireError),
+}
+
+impl ApiError {
+    /// Helper for registry misses: captures the expected name set.
+    pub fn unknown(field: &'static str, name: &str, expected: &[&str]) -> ApiError {
+        ApiError::UnknownName {
+            field,
+            name: name.to_string(),
+            expected: expected.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Helper for structural failures.
+    pub fn invalid(field: &'static str, detail: impl Into<String>) -> ApiError {
+        ApiError::Invalid { field, detail: detail.into() }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::Invalid { field, detail } => write!(f, "invalid request: {field}: {detail}"),
+            ApiError::UnknownName { field, name, expected } => {
+                write!(f, "unknown {field} '{name}' (expected one of {expected:?})")
+            }
+            ApiError::NonRegistryOptimizer { transport } => write!(
+                f,
+                "non-registry optimizer cannot run over transport '{transport}': only \
+                 registry optimizers reproduce local selection remotely (use 'inproc' or a \
+                 registry optimizer id)"
+            ),
+            ApiError::Backend { detail } => write!(f, "backend error: {detail}"),
+            ApiError::Transport { detail } => write!(f, "transport error: {detail}"),
+            ApiError::Wire(e) => write!(f, "wire error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<WireError> for ApiError {
+    fn from(e: WireError) -> ApiError {
+        ApiError::Wire(e)
+    }
+}

@@ -1,0 +1,50 @@
+//! The unified typed request/response façade — the **only** way work
+//! enters the system.
+//!
+//! Every entrypoint (CLI subcommands, the coordinator's `@fleet` route,
+//! benches, examples, and the future socket listener) describes a run
+//! as one [`SummarizeRequest`] — dataset + k + optimizer + precision /
+//! kernel knobs + optional [`ShardSpec`] — and receives one
+//! [`SummarizeResponse`] — exemplars as ground ids, the f-trajectory,
+//! stage timings and a [`Provenance`] record of what actually executed
+//! (backend, plan, transport, wire traffic, retries). Failures are
+//! typed [`ApiError`]s; no user-input path panics.
+//!
+//! ```text
+//!   CLI flags ──┐
+//!   config ─────┤→ SummarizeRequest ──→ api::Service ──→ SummarizeResponse
+//!   coordinator ┤      (validate)        (execute)         (provenance)
+//!   WireRequest ┘
+//! ```
+//!
+//! The same request serializes to a byte-frozen
+//! [`crate::shard::wire::WireRequest`] frame (golden-pinned in
+//! `tests/wire_golden.rs`), so "what to run" survives the wire
+//! unchanged — the socket leg in ROADMAP becomes a transport drop-in
+//! rather than another round of bespoke plumbing. Because only registry
+//! optimizers can be rebuilt remotely (the remote-rebuild contract on
+//! [`crate::shard::wire::ShardJobMsg::optimizer`]),
+//! [`SummarizeRequest::validate`] rejects non-registry optimizers
+//! whenever the shard transport is not `inproc`.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use ebc::api::{DatasetRef, Service, SummarizeRequest};
+//!
+//! let service = Service::cpu();
+//! let req = SummarizeRequest::new(DatasetRef::synthetic(1000, 32, 42), 5)
+//!     .optimizer("greedy");
+//! let res = service.summarize(&req).expect("valid request");
+//! println!("exemplars: {:?}  f(S) = {}", res.exemplars, res.f_final);
+//! ```
+
+pub mod error;
+pub mod request;
+pub mod response;
+pub mod service;
+
+pub use error::ApiError;
+pub use request::{DatasetRef, OptimizerSel, ShardSpec, SummarizeRequest};
+pub use response::{BaselineRun, Provenance, StageTimings, SummarizeResponse};
+pub use service::{execute, ExecEnv, PlanBuild, Service, BACKENDS};

@@ -1,0 +1,557 @@
+//! The typed, validated "what to run" description.
+
+use crate::api::error::ApiError;
+use crate::engine::Precision;
+use crate::imm::{generate_dataset_with, Part, ProcessState};
+use crate::linalg::{CpuKernel, Matrix, SharedMatrix};
+use crate::optim::{Optimizer, ALGORITHMS};
+use crate::shard::wire::{WireDataset, WireRequest, WireShardSpec};
+use crate::shard::{PARTITIONERS, TRANSPORTS};
+use crate::util::rng::Rng;
+use std::fmt;
+use std::sync::Arc;
+
+/// What to summarize: an inline matrix or a generatable reference.
+/// References keep request frames small — the executor materializes
+/// them deterministically from the embedded seed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetRef {
+    /// The ground matrix itself (shared, so requests built from live
+    /// data alias the caller's allocation).
+    Inline(SharedMatrix),
+    /// A standard-normal synthetic matrix (the `summarize` demo shape).
+    Synthetic { n: usize, d: usize, seed: u64 },
+    /// A generated injection-molding campaign (the case-study/bench
+    /// substrate): one dataset of `samples`-dimensional cycle rows.
+    Imm { part: Part, state: ProcessState, samples: usize, seed: u64 },
+}
+
+impl DatasetRef {
+    /// Inline matrix from a shared handle.
+    pub fn inline(m: SharedMatrix) -> DatasetRef {
+        DatasetRef::Inline(m)
+    }
+
+    /// Standard-normal synthetic matrix reference.
+    pub fn synthetic(n: usize, d: usize, seed: u64) -> DatasetRef {
+        DatasetRef::Synthetic { n, d, seed }
+    }
+
+    /// Injection-molding campaign reference.
+    pub fn imm(part: Part, state: ProcessState, samples: usize, seed: u64) -> DatasetRef {
+        DatasetRef::Imm { part, state, samples, seed }
+    }
+
+    /// Ground-set size, when it is knowable without materializing
+    /// (IMM campaigns derive their row count during generation).
+    pub fn rows_hint(&self) -> Option<usize> {
+        match self {
+            DatasetRef::Inline(m) => Some(m.rows()),
+            DatasetRef::Synthetic { n, .. } => Some(*n),
+            DatasetRef::Imm { .. } => None,
+        }
+    }
+
+    /// Produce the ground matrix. Inline datasets alias the caller's
+    /// allocation; references generate deterministically.
+    pub fn materialize(&self) -> Result<SharedMatrix, ApiError> {
+        match self {
+            DatasetRef::Inline(m) => Ok(Arc::clone(m)),
+            DatasetRef::Synthetic { n, d, seed } => {
+                let mut rng = Rng::new(*seed);
+                Ok(Arc::new(Matrix::random_normal(*n, *d, &mut rng)))
+            }
+            DatasetRef::Imm { part, state, samples, seed } => {
+                Ok(Arc::new(generate_dataset_with(*part, *state, *seed, *samples).cycles))
+            }
+        }
+    }
+}
+
+/// Which optimizer runs: a registry id (serializable, remotely
+/// rebuildable) or a custom live instance (local transports only — see
+/// [`SummarizeRequest::validate`]).
+#[derive(Clone)]
+pub enum OptimizerSel {
+    /// One of [`crate::optim::ALGORITHMS`], built at the request's
+    /// batch width via [`crate::optim::build_optimizer`].
+    Registry(String),
+    /// A caller-owned live instance (e.g. a custom
+    /// `SieveStreaming { epsilon }`). Cannot cross the wire.
+    Custom(Arc<dyn Optimizer>),
+}
+
+impl fmt::Debug for OptimizerSel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptimizerSel::Registry(name) => write!(f, "Registry({name:?})"),
+            OptimizerSel::Custom(o) => write!(f, "Custom({})", o.name()),
+        }
+    }
+}
+
+impl PartialEq for OptimizerSel {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (OptimizerSel::Registry(a), OptimizerSel::Registry(b)) => a == b,
+            (OptimizerSel::Custom(a), OptimizerSel::Custom(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+/// Sharded (two-stage) execution configuration — request-side mirror of
+/// the `[shard]` config section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSpec {
+    /// Shard count P (≥ 1).
+    pub partitions: usize,
+    /// Partition strategy: one of [`crate::shard::PARTITIONERS`].
+    pub partitioner: String,
+    /// Exemplars each shard contributes in stage 1 (0 = final k).
+    pub per_shard_k: usize,
+    /// Stage-1 worker threads (0 = auto; a plan's split wins).
+    pub threads: usize,
+    /// Stage-1 transport: one of [`crate::shard::TRANSPORTS`].
+    pub transport: String,
+    /// Replica count for replica transports.
+    pub replicas: usize,
+    /// Pre-plan the run (shared bucket shape + P·T ≤ cores split).
+    pub plan: bool,
+    /// Core budget for planned runs (0 = auto).
+    pub cores: usize,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec {
+            partitions: 2,
+            partitioner: "round_robin".into(),
+            per_shard_k: 0,
+            threads: 0,
+            transport: "inproc".into(),
+            replicas: 2,
+            plan: false,
+            cores: 0,
+        }
+    }
+}
+
+impl ShardSpec {
+    /// `partitions` shards, everything else at defaults.
+    pub fn new(partitions: usize) -> ShardSpec {
+        ShardSpec { partitions, ..ShardSpec::default() }
+    }
+
+    pub fn partitioner(mut self, name: &str) -> ShardSpec {
+        self.partitioner = name.to_string();
+        self
+    }
+
+    pub fn per_shard_k(mut self, k: usize) -> ShardSpec {
+        self.per_shard_k = k;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> ShardSpec {
+        self.threads = threads;
+        self
+    }
+
+    pub fn transport(mut self, name: &str) -> ShardSpec {
+        self.transport = name.to_string();
+        self
+    }
+
+    pub fn replicas(mut self, n: usize) -> ShardSpec {
+        self.replicas = n;
+        self
+    }
+
+    pub fn plan(mut self, plan: bool) -> ShardSpec {
+        self.plan = plan;
+        self
+    }
+
+    pub fn cores(mut self, cores: usize) -> ShardSpec {
+        self.cores = cores;
+        self
+    }
+}
+
+/// One summarization work order — the single typed description every
+/// entrypoint produces and every executor consumes. Build with the
+/// chainable setters, then hand to [`crate::api::Service::summarize`]
+/// (which validates first) or check explicitly with [`Self::validate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SummarizeRequest {
+    /// What to summarize.
+    pub dataset: DatasetRef,
+    /// Summary cardinality (1 ≤ k ≤ n).
+    pub k: usize,
+    /// Which optimizer runs.
+    pub optimizer: OptimizerSel,
+    /// Candidate-batch width for the batched-greedy family (≥ 1).
+    pub batch: usize,
+    /// Oracle compute precision (the paper's FP32/FP16 axis).
+    pub precision: Precision,
+    /// CPU kernel backend for CPU/fallback oracles.
+    pub cpu_kernel: CpuKernel,
+    /// Oracle kernel threads (0 = auto; a plan's split wins).
+    pub threads: usize,
+    /// Sharded two-stage execution; `None` = single-node.
+    pub shard: Option<ShardSpec>,
+    /// Seed for partitioners (hash mixing / locality projection).
+    pub seed: u64,
+    /// Also run a single-node reference pass of the same optimizer for
+    /// quality/speedup accounting (sharded runs only).
+    pub with_baseline: bool,
+}
+
+impl SummarizeRequest {
+    /// A greedy f32 single-node request over `dataset` at budget `k`.
+    pub fn new(dataset: DatasetRef, k: usize) -> SummarizeRequest {
+        SummarizeRequest {
+            dataset,
+            k,
+            optimizer: OptimizerSel::Registry("greedy".into()),
+            batch: 1024,
+            precision: Precision::F32,
+            cpu_kernel: CpuKernel::Blocked,
+            threads: 0,
+            shard: None,
+            seed: 0xEBC,
+            with_baseline: false,
+        }
+    }
+
+    /// Select a registry optimizer by id.
+    pub fn optimizer(mut self, name: &str) -> SummarizeRequest {
+        self.optimizer = OptimizerSel::Registry(name.to_string());
+        self
+    }
+
+    /// Run a caller-owned optimizer instance (local transports only).
+    pub fn custom_optimizer(mut self, optimizer: Arc<dyn Optimizer>) -> SummarizeRequest {
+        self.optimizer = OptimizerSel::Custom(optimizer);
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> SummarizeRequest {
+        self.batch = batch;
+        self
+    }
+
+    pub fn precision(mut self, precision: Precision) -> SummarizeRequest {
+        self.precision = precision;
+        self
+    }
+
+    pub fn cpu_kernel(mut self, kernel: CpuKernel) -> SummarizeRequest {
+        self.cpu_kernel = kernel;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> SummarizeRequest {
+        self.threads = threads;
+        self
+    }
+
+    /// Run the sharded two-stage pipeline instead of single-node.
+    pub fn sharded(mut self, spec: ShardSpec) -> SummarizeRequest {
+        self.shard = Some(spec);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> SummarizeRequest {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_baseline(mut self, with_baseline: bool) -> SummarizeRequest {
+        self.with_baseline = with_baseline;
+        self
+    }
+
+    /// The registry id of the selected optimizer, if it has one.
+    pub fn optimizer_name(&self) -> &str {
+        match &self.optimizer {
+            OptimizerSel::Registry(name) => name,
+            OptimizerSel::Custom(o) => o.name(),
+        }
+    }
+
+    /// Check every field against its registry and structural bounds.
+    /// Cheap (nothing is materialized); `k > n` for datasets whose size
+    /// is only known after generation is re-checked by the executor.
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.k == 0 {
+            return Err(ApiError::invalid("k", "summary cardinality must be >= 1"));
+        }
+        if self.batch == 0 {
+            return Err(ApiError::invalid("batch", "candidate batch must be >= 1"));
+        }
+        match &self.dataset {
+            DatasetRef::Inline(m) => {
+                if m.rows() == 0 || m.cols() == 0 {
+                    return Err(ApiError::invalid(
+                        "dataset",
+                        format!("inline matrix is degenerate ({}x{})", m.rows(), m.cols()),
+                    ));
+                }
+            }
+            DatasetRef::Synthetic { n, d, .. } => {
+                if *n == 0 || *d == 0 {
+                    return Err(ApiError::invalid(
+                        "dataset",
+                        format!("synthetic shape is degenerate ({n}x{d})"),
+                    ));
+                }
+            }
+            DatasetRef::Imm { samples, .. } => {
+                if *samples == 0 {
+                    return Err(ApiError::invalid("dataset", "imm samples must be >= 1"));
+                }
+            }
+        }
+        if let Some(n) = self.dataset.rows_hint() {
+            if self.k > n {
+                return Err(ApiError::invalid(
+                    "k",
+                    format!("k = {} exceeds the ground-set size n = {n}", self.k),
+                ));
+            }
+        }
+        let remote_transport = self
+            .shard
+            .as_ref()
+            .map(|s| s.transport.as_str())
+            .filter(|t| *t != "inproc");
+        match &self.optimizer {
+            OptimizerSel::Registry(name) => {
+                if !ALGORITHMS.contains(&name.as_str()) {
+                    return Err(ApiError::unknown("optimizer", name, ALGORITHMS));
+                }
+            }
+            OptimizerSel::Custom(_) => {
+                // the remote-rebuild contract: only registry optimizers
+                // reproduce local selection on the other side of a wire
+                if let Some(t) = remote_transport {
+                    return Err(ApiError::NonRegistryOptimizer { transport: t.to_string() });
+                }
+            }
+        }
+        if let Some(spec) = &self.shard {
+            if spec.partitions == 0 {
+                return Err(ApiError::invalid("shard.partitions", "shard count must be >= 1"));
+            }
+            if !PARTITIONERS.contains(&spec.partitioner.as_str()) {
+                return Err(ApiError::unknown(
+                    "shard.partitioner",
+                    &spec.partitioner,
+                    PARTITIONERS,
+                ));
+            }
+            if !TRANSPORTS.contains(&spec.transport.as_str()) {
+                return Err(ApiError::unknown("shard.transport", &spec.transport, TRANSPORTS));
+            }
+            if spec.transport != "inproc" && spec.replicas == 0 {
+                return Err(ApiError::invalid(
+                    "shard.replicas",
+                    "replica transports need at least one replica",
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize into the wire form (v2 request frame payload).
+    /// `payload` selects how an inline dataset ships (f32 lossless,
+    /// bf16 halved — the edge-link option); reference datasets ignore
+    /// it. Fails for custom optimizers — only registry ids survive the
+    /// wire (the same contract [`Self::validate`] enforces for remote
+    /// transports).
+    pub fn to_wire(&self, payload: Precision) -> Result<WireRequest, ApiError> {
+        let optimizer = match &self.optimizer {
+            OptimizerSel::Registry(name) => name.clone(),
+            OptimizerSel::Custom(_) => {
+                return Err(ApiError::NonRegistryOptimizer { transport: "wire".into() })
+            }
+        };
+        Ok(WireRequest {
+            k: self.k as u32,
+            batch: self.batch as u32,
+            optimizer,
+            precision: self.precision,
+            cpu_kernel: self.cpu_kernel,
+            threads: self.threads as u32,
+            seed: self.seed,
+            with_baseline: self.with_baseline,
+            shard: self.shard.as_ref().map(|s| WireShardSpec {
+                partitions: s.partitions as u32,
+                partitioner: s.partitioner.clone(),
+                per_shard_k: s.per_shard_k as u32,
+                threads: s.threads as u32,
+                transport: s.transport.clone(),
+                replicas: s.replicas as u32,
+                plan: s.plan,
+                cores: s.cores as u32,
+            }),
+            dataset: match &self.dataset {
+                DatasetRef::Inline(m) => {
+                    WireDataset::Inline { payload, data: (**m).clone() }
+                }
+                DatasetRef::Synthetic { n, d, seed } => WireDataset::Synthetic {
+                    n: *n as u32,
+                    d: *d as u32,
+                    seed: *seed,
+                },
+                DatasetRef::Imm { part, state, samples, seed } => WireDataset::Imm {
+                    part: *part,
+                    state: *state,
+                    samples: *samples as u32,
+                    seed: *seed,
+                },
+            },
+        })
+    }
+
+    /// Rebuild a request from its wire form (the executor side of the
+    /// codec). Purely structural — run [`Self::validate`] on the result
+    /// before executing.
+    pub fn from_wire(w: &WireRequest) -> SummarizeRequest {
+        SummarizeRequest {
+            dataset: match &w.dataset {
+                WireDataset::Inline { data, .. } => DatasetRef::Inline(Arc::new(data.clone())),
+                WireDataset::Synthetic { n, d, seed } => DatasetRef::Synthetic {
+                    n: *n as usize,
+                    d: *d as usize,
+                    seed: *seed,
+                },
+                WireDataset::Imm { part, state, samples, seed } => DatasetRef::Imm {
+                    part: *part,
+                    state: *state,
+                    samples: *samples as usize,
+                    seed: *seed,
+                },
+            },
+            k: w.k as usize,
+            optimizer: OptimizerSel::Registry(w.optimizer.clone()),
+            batch: w.batch as usize,
+            precision: w.precision,
+            cpu_kernel: w.cpu_kernel,
+            threads: w.threads as usize,
+            shard: w.shard.as_ref().map(|s| ShardSpec {
+                partitions: s.partitions as usize,
+                partitioner: s.partitioner.clone(),
+                per_shard_k: s.per_shard_k as usize,
+                threads: s.threads as usize,
+                transport: s.transport.clone(),
+                replicas: s.replicas as usize,
+                plan: s.plan,
+                cores: s.cores as usize,
+            }),
+            seed: w.seed,
+            with_baseline: w.with_baseline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::SieveStreaming;
+    use crate::shard::wire::{decode_request, encode_request};
+
+    fn inline(n: usize, d: usize, seed: u64) -> DatasetRef {
+        let mut rng = Rng::new(seed);
+        DatasetRef::Inline(Arc::new(Matrix::random_normal(n, d, &mut rng)))
+    }
+
+    #[test]
+    fn builder_defaults_validate() {
+        let req = SummarizeRequest::new(inline(20, 4, 1), 5);
+        assert!(req.validate().is_ok());
+        assert_eq!(req.optimizer_name(), "greedy");
+    }
+
+    #[test]
+    fn structural_failures_are_typed() {
+        let base = SummarizeRequest::new(inline(20, 4, 1), 5);
+        assert!(matches!(
+            base.clone().batch(0).validate(),
+            Err(ApiError::Invalid { field: "batch", .. })
+        ));
+        let mut k0 = base.clone();
+        k0.k = 0;
+        assert!(matches!(k0.validate(), Err(ApiError::Invalid { field: "k", .. })));
+        let mut big = base.clone();
+        big.k = 21;
+        assert!(matches!(big.validate(), Err(ApiError::Invalid { field: "k", .. })));
+        assert!(matches!(
+            SummarizeRequest::new(DatasetRef::synthetic(0, 3, 1), 1).validate(),
+            Err(ApiError::Invalid { field: "dataset", .. })
+        ));
+    }
+
+    #[test]
+    fn registry_misses_are_typed() {
+        let base = SummarizeRequest::new(inline(20, 4, 1), 5);
+        assert!(matches!(
+            base.clone().optimizer("psychic").validate(),
+            Err(ApiError::UnknownName { field: "optimizer", .. })
+        ));
+        assert!(matches!(
+            base.clone().sharded(ShardSpec::new(2).partitioner("magic")).validate(),
+            Err(ApiError::UnknownName { field: "shard.partitioner", .. })
+        ));
+        assert!(matches!(
+            base.clone().sharded(ShardSpec::new(2).transport("telepathy")).validate(),
+            Err(ApiError::UnknownName { field: "shard.transport", .. })
+        ));
+        assert!(matches!(
+            base.sharded(ShardSpec::new(0)).validate(),
+            Err(ApiError::Invalid { field: "shard.partitions", .. })
+        ));
+    }
+
+    #[test]
+    fn custom_optimizer_ok_locally_rejected_remotely() {
+        let custom: Arc<dyn Optimizer> = Arc::new(SieveStreaming::default());
+        let base = SummarizeRequest::new(inline(20, 4, 1), 3)
+            .custom_optimizer(Arc::clone(&custom));
+        assert!(base.clone().validate().is_ok());
+        assert!(base.clone().sharded(ShardSpec::new(2)).validate().is_ok());
+        match base
+            .clone()
+            .sharded(ShardSpec::new(2).transport("loopback"))
+            .validate()
+        {
+            Err(ApiError::NonRegistryOptimizer { transport }) => {
+                assert_eq!(transport, "loopback");
+            }
+            other => panic!("{other:?}"),
+        }
+        // ...and custom instances never serialize
+        assert!(matches!(
+            base.to_wire(Precision::F32),
+            Err(ApiError::NonRegistryOptimizer { .. })
+        ));
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_the_request() {
+        let req = SummarizeRequest::new(inline(6, 3, 9), 2)
+            .optimizer("lazy_greedy")
+            .batch(256)
+            .precision(Precision::Bf16)
+            .cpu_kernel(CpuKernel::Scalar)
+            .threads(3)
+            .seed(77)
+            .with_baseline(true)
+            .sharded(ShardSpec::new(3).partitioner("hash").transport("loopback").replicas(2));
+        let frame = encode_request(&req.to_wire(Precision::F32).unwrap());
+        let back = SummarizeRequest::from_wire(&decode_request(&frame).unwrap());
+        assert_eq!(back, req);
+    }
+}

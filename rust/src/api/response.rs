@@ -1,0 +1,114 @@
+//! The typed outcome of a summarize request.
+
+use crate::engine::Precision;
+use crate::linalg::CpuKernel;
+
+/// Wall-clock accounting per pipeline stage. Single-node runs report
+/// only `wall_seconds`; sharded runs split it into partition / shard /
+/// merge legs (`wall_seconds` is their sum).
+#[derive(Debug, Clone, Default)]
+pub struct StageTimings {
+    /// Partitioning the ground set (sharded runs).
+    pub partition_seconds: f64,
+    /// The parallel per-shard first stage (sharded runs).
+    pub shard_seconds: f64,
+    /// The greedy merge over the union of shard picks (sharded runs).
+    pub merge_seconds: f64,
+    /// End-to-end optimization wall-clock.
+    pub wall_seconds: f64,
+}
+
+/// What actually executed — the audit trail a response carries so
+/// callers never have to re-derive it from config.
+#[derive(Debug, Clone)]
+pub struct Provenance {
+    /// Evaluation backend (`cpu` | `xla` | a caller-supplied label).
+    pub backend: String,
+    /// Optimizer that ran (registry id or the custom instance's name).
+    pub optimizer: String,
+    /// Oracle compute precision.
+    pub precision: Precision,
+    /// CPU kernel backend CPU/fallback oracles ran on.
+    pub cpu_kernel: CpuKernel,
+    /// Partitioner of a sharded run.
+    pub partitioner: Option<&'static str>,
+    /// Fleet-plan description of a planned run — the worker × thread
+    /// split and the pinned engine bucket picks
+    /// ([`crate::engine::ShardPlan::describe`]).
+    pub plan: Option<String>,
+    /// Compact `Pw x Tt` split label of a planned run (bench tables).
+    pub plan_split: Option<String>,
+    /// Transport stage 1 actually ran over (after any fallback).
+    pub transport: Option<&'static str>,
+    /// Bytes moved as wire frames (job + result, both legs).
+    pub wire_bytes: u64,
+    /// Shards re-queued after replica failures.
+    pub shard_retries: u64,
+    /// Non-empty shards executed (0 for single-node runs).
+    pub shards_used: usize,
+    /// Most stage-1 job payloads alive at once (bounded by transport
+    /// concurrency — see [`crate::shard::JobSource`]).
+    pub peak_jobs_held: usize,
+}
+
+/// The single-node reference run of a `with_baseline` request.
+#[derive(Debug, Clone)]
+pub struct BaselineRun {
+    /// Exemplars the single-node run selected (ground ids).
+    pub exemplars: Vec<u64>,
+    /// Its final f(S).
+    pub f_final: f32,
+    /// Its wall-clock.
+    pub wall_seconds: f64,
+}
+
+/// Outcome of one [`crate::api::SummarizeRequest`].
+#[derive(Debug, Clone)]
+pub struct SummarizeResponse {
+    /// Selected exemplars as **ground ids** (row indices of the
+    /// materialized dataset), in selection order.
+    pub exemplars: Vec<u64>,
+    /// f(S) after each selection (same length as `exemplars`).
+    pub f_trajectory: Vec<f32>,
+    /// Final function value (sharded runs: measured against the full
+    /// ground set, so values are comparable to single-node runs).
+    pub f_final: f32,
+    /// Oracle gain/eval calls issued.
+    pub oracle_calls: u64,
+    /// Oracle-reported scalar-distance work.
+    pub oracle_work: u64,
+    /// Per-stage wall-clock.
+    pub timings: StageTimings,
+    /// What actually executed.
+    pub provenance: Provenance,
+    /// Reference run, when the request asked for one.
+    pub baseline: Option<BaselineRun>,
+}
+
+impl SummarizeResponse {
+    /// Number of exemplars selected.
+    pub fn k(&self) -> usize {
+        self.exemplars.len()
+    }
+
+    /// merged f / baseline f — the two-stage quality ratio (`None`
+    /// without a baseline; 1.0 when the baseline is degenerate).
+    pub fn quality_ratio(&self) -> Option<f64> {
+        self.baseline.as_ref().map(|b| {
+            if b.f_final <= 0.0 {
+                1.0
+            } else {
+                self.f_final as f64 / b.f_final as f64
+            }
+        })
+    }
+
+    /// baseline wall / this run's wall — the sharded speedup (`None`
+    /// without a baseline or with a zero-duration run).
+    pub fn speedup(&self) -> Option<f64> {
+        self.baseline.as_ref().and_then(|b| {
+            (self.timings.wall_seconds > 0.0)
+                .then(|| b.wall_seconds / self.timings.wall_seconds)
+        })
+    }
+}

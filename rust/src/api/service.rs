@@ -1,0 +1,433 @@
+//! The façade's executor: one [`Service`] per evaluation backend, one
+//! [`execute`] core shared by every entrypoint (CLI, coordinator,
+//! benches, examples — and, via [`crate::shard::wire::WireRequest`],
+//! the future socket listener).
+
+use crate::api::error::ApiError;
+use crate::api::request::{OptimizerSel, SummarizeRequest};
+use crate::api::response::{BaselineRun, Provenance, StageTimings, SummarizeResponse};
+use crate::config::schema::ServiceConfig;
+use crate::coordinator::{Coordinator, OracleFactory};
+use crate::engine::{
+    Engine, EngineConfig, OracleSpec, PlanRequest, PlanSource, Precision, ShardPlan, XlaOracle,
+};
+use crate::linalg::{CpuKernel, Matrix, SharedMatrix};
+use crate::optim::{build_optimizer, Optimizer, ALGORITHMS};
+use crate::runtime::Runtime;
+use crate::shard::{
+    build_partitioner, build_transport, ShardOracleFactory, ShardTransport, ShardedSummarizer,
+    PARTITIONERS, TRANSPORTS,
+};
+use crate::submodular::{CpuOracle, Oracle};
+use std::sync::Arc;
+
+/// Backend names accepted by [`Service::from_backend`] (and therefore
+/// by every `--backend` CLI flag).
+pub const BACKENDS: &[&str] = &["cpu", "xla"];
+
+enum BackendKind {
+    /// The CPU oracle (scalar or blocked Gram-matrix kernel).
+    Cpu,
+    /// The batched accelerator engine over PJRT, with CPU fallback.
+    Xla(Runtime),
+}
+
+/// One evaluation backend, ready to execute [`SummarizeRequest`]s.
+/// Collapses the per-subcommand factory/runtime wiring the launcher
+/// used to rebuild by hand: construct once, summarize many times.
+pub struct Service {
+    backend: BackendKind,
+}
+
+impl Service {
+    /// The CPU backend (no artifacts needed — benches, examples, tests).
+    pub fn cpu() -> Service {
+        Service { backend: BackendKind::Cpu }
+    }
+
+    /// Build by backend name (`cpu` | `xla`). The XLA variant discovers
+    /// the PJRT runtime + artifact manifest up front, so a broken
+    /// install fails here with a typed error instead of mid-run.
+    pub fn from_backend(name: &str) -> Result<Service, ApiError> {
+        match name {
+            "cpu" => Ok(Service::cpu()),
+            "xla" => {
+                let rt = Runtime::discover()
+                    .map_err(|e| ApiError::Backend { detail: format!("{e:#}") })?;
+                Ok(Service { backend: BackendKind::Xla(rt) })
+            }
+            other => Err(ApiError::unknown("backend", other, BACKENDS)),
+        }
+    }
+
+    /// This service's backend name.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            BackendKind::Cpu => "cpu",
+            BackendKind::Xla(_) => "xla",
+        }
+    }
+
+    /// The runtime handle of an XLA service (artifact inventory etc.).
+    pub fn runtime(&self) -> Option<&Runtime> {
+        match &self.backend {
+            BackendKind::Cpu => None,
+            BackendKind::Xla(rt) => Some(rt),
+        }
+    }
+
+    /// Build the oracle-factory seam for the given knobs — the same
+    /// closure shape the coordinator and the shard subsystem consume.
+    pub fn oracle_factory(
+        &self,
+        precision: Precision,
+        cpu_kernel: CpuKernel,
+        threads: usize,
+    ) -> OracleFactory {
+        match &self.backend {
+            BackendKind::Cpu => Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
+                // threads == 0 resolves to default_threads() downstream;
+                // a planned spec overrides with its per-oracle split
+                let t = spec.threads_or(threads);
+                Box::new(CpuOracle::with_kernel_shared(m, cpu_kernel, precision, t))
+                    as Box<dyn Oracle>
+            }),
+            BackendKind::Xla(rt) => {
+                let engine = Engine::new(
+                    rt.clone(),
+                    EngineConfig {
+                        precision,
+                        cpu_fallback: true,
+                        cpu_kernel,
+                        cpu_threads: threads,
+                        ..Default::default()
+                    },
+                );
+                Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
+                    let mut engine = engine.clone();
+                    if let Some(plan) = &spec.plan {
+                        engine.set_plan(Arc::clone(plan));
+                    }
+                    if let Some(t) = spec.threads {
+                        engine.set_cpu_threads(t);
+                    }
+                    Box::new(XlaOracle::from_shared(engine, m)) as Box<dyn Oracle>
+                })
+            }
+        }
+    }
+
+    /// Plan-builder closure for this backend: the XLA variant pins
+    /// engine buckets from its artifact manifest, the CPU one plans the
+    /// worker × kernel-thread split only.
+    fn plan_fn(
+        &self,
+        precision: Precision,
+        cpu_kernel: CpuKernel,
+    ) -> impl Fn(&PlanRequest) -> Arc<ShardPlan> + Send + Sync + 'static {
+        let rt = match &self.backend {
+            BackendKind::Cpu => None,
+            BackendKind::Xla(rt) => Some(rt.clone()),
+        };
+        move |req: &PlanRequest| {
+            let mut req = req.clone();
+            req.precision = precision;
+            req.cpu_kernel = cpu_kernel;
+            Arc::new(ShardPlan::plan(rt.as_ref().map(|r| r.manifest()), &req))
+        }
+    }
+
+    /// The boxed plan-builder seam ([`PlanSource`]) the coordinator
+    /// caches fleet plans through.
+    pub fn plan_source(&self, precision: Precision, cpu_kernel: CpuKernel) -> PlanSource {
+        Box::new(self.plan_fn(precision, cpu_kernel))
+    }
+
+    /// Owned-matrix oracle factory for the case-study seam
+    /// ([`crate::imm::casestudy::run_table2`]): the request supplies
+    /// the precision / kernel / thread knobs.
+    pub fn case_factory(
+        &self,
+        req: &SummarizeRequest,
+    ) -> impl Fn(Matrix) -> Box<dyn Oracle> + 'static {
+        let factory = self.oracle_factory(req.precision, req.cpu_kernel, req.threads);
+        move |m: Matrix| factory(Arc::new(m), &OracleSpec::unplanned())
+    }
+
+    /// Validate and execute one request end to end.
+    pub fn summarize(&self, req: &SummarizeRequest) -> Result<SummarizeResponse, ApiError> {
+        req.validate()?;
+        let data = req.dataset.materialize()?;
+        let factory = self.oracle_factory(req.precision, req.cpu_kernel, req.threads);
+        let f = |m: SharedMatrix, spec: &OracleSpec| factory(m, spec);
+        let planner = self.plan_fn(req.precision, req.cpu_kernel);
+        let env = ExecEnv {
+            factory: &f,
+            backend: self.backend_name(),
+            plan: None,
+            planner: Some(&planner),
+            transport: None,
+        };
+        execute(req, &data, &env)
+    }
+
+    /// Wire a streaming [`Coordinator`] to this backend: oracle factory
+    /// and fleet planner built from the `[engine]` config section, the
+    /// shard transport from `[shard]` (inside `Coordinator::new`).
+    pub fn coordinator(&self, cfg: ServiceConfig) -> Coordinator {
+        let factory =
+            self.oracle_factory(cfg.engine.precision, cfg.engine.cpu_kernel, cfg.engine.cpu_threads);
+        let planner = self.plan_source(cfg.engine.precision, cfg.engine.cpu_kernel);
+        Coordinator::new(cfg, factory)
+            .with_planner(planner)
+            .with_backend_label(self.backend_name())
+    }
+}
+
+/// Plan-builder seam [`execute`] consults for planned runs the
+/// environment has not already planned.
+pub type PlanBuild = dyn Fn(&PlanRequest) -> Arc<ShardPlan>;
+
+/// Execution environment: what varies between the [`Service`] path
+/// (owned factory, fresh transport) and the coordinator path (its
+/// long-lived factory, cached plan, persistent replica transport).
+pub struct ExecEnv<'a> {
+    /// Oracle constructor seam.
+    pub factory: &'a ShardOracleFactory,
+    /// Backend label for [`Provenance`].
+    pub backend: &'a str,
+    /// Pre-resolved plan (the coordinator's per-shape cache); `None`
+    /// lets [`execute`] build one when the request asks for planning.
+    pub plan: Option<Arc<ShardPlan>>,
+    /// Plan builder for unresolved planned runs; `None` falls back to a
+    /// manifest-less CPU-split plan.
+    pub planner: Option<&'a PlanBuild>,
+    /// Persistent transport override; `None` builds one from the
+    /// request's [`crate::api::ShardSpec`] (`inproc` stays the
+    /// summarizer's run-local default).
+    pub transport: Option<&'a dyn ShardTransport>,
+}
+
+/// The façade's execution core: validate, then run `req` over `data`
+/// in `env`. Single entry for both the single-node and the sharded
+/// pipeline — every response carries full [`Provenance`].
+pub fn execute(
+    req: &SummarizeRequest,
+    data: &SharedMatrix,
+    env: &ExecEnv,
+) -> Result<SummarizeResponse, ApiError> {
+    req.validate()?;
+    let n = data.rows();
+    if n == 0 || data.cols() == 0 {
+        return Err(ApiError::invalid(
+            "dataset",
+            format!("materialized matrix is degenerate ({n}x{})", data.cols()),
+        ));
+    }
+    if req.k > n {
+        return Err(ApiError::invalid(
+            "k",
+            format!("k = {} exceeds the ground-set size n = {n}", req.k),
+        ));
+    }
+    let built;
+    let optimizer: &dyn Optimizer = match &req.optimizer {
+        OptimizerSel::Registry(name) => {
+            built = build_optimizer(name, req.batch.max(1))
+                .ok_or_else(|| ApiError::unknown("optimizer", name, ALGORITHMS))?;
+            built.as_ref()
+        }
+        OptimizerSel::Custom(o) => o.as_ref(),
+    };
+
+    let Some(spec) = &req.shard else {
+        // ---------------- single-node path ----------------
+        let mut oracle = (env.factory)(Arc::clone(data), &OracleSpec::unplanned());
+        let res = optimizer.run(oracle.as_mut(), req.k);
+        return Ok(SummarizeResponse {
+            exemplars: res.indices.iter().map(|&i| i as u64).collect(),
+            f_trajectory: res.f_trajectory,
+            f_final: res.f_final,
+            oracle_calls: res.oracle_calls as u64,
+            oracle_work: res.oracle_work,
+            timings: StageTimings { wall_seconds: res.wall_seconds, ..Default::default() },
+            provenance: Provenance {
+                backend: env.backend.to_string(),
+                optimizer: optimizer.name().to_string(),
+                precision: req.precision,
+                cpu_kernel: req.cpu_kernel,
+                partitioner: None,
+                plan: None,
+                plan_split: None,
+                transport: None,
+                wire_bytes: 0,
+                shard_retries: 0,
+                shards_used: 0,
+                peak_jobs_held: 0,
+            },
+            baseline: None,
+        });
+    };
+
+    // ------------------- sharded path -------------------
+    let partitioner = build_partitioner(&spec.partitioner, req.seed)
+        .ok_or_else(|| ApiError::unknown("shard.partitioner", &spec.partitioner, PARTITIONERS))?;
+    let owned_transport: Option<Box<dyn ShardTransport>> =
+        match (env.transport.is_some(), spec.transport.as_str()) {
+            // a persistent transport (coordinator) always wins; the
+            // summarizer's run-local inproc default needs no handle
+            (true, _) | (false, "inproc") => None,
+            (false, name) => Some(
+                build_transport(name, spec.replicas.max(1))
+                    .ok_or_else(|| ApiError::unknown("shard.transport", name, TRANSPORTS))?,
+            ),
+        };
+    let transport: Option<&dyn ShardTransport> = env.transport.or(owned_transport.as_deref());
+    let plan: Option<Arc<ShardPlan>> = match (&env.plan, spec.plan) {
+        (Some(p), _) => Some(Arc::clone(p)),
+        (None, true) => {
+            let mut preq = PlanRequest::new(n, data.cols(), spec.partitions, req.k);
+            preq.batch = req.batch;
+            preq.precision = req.precision;
+            preq.cpu_kernel = req.cpu_kernel;
+            preq.cores = spec.cores;
+            Some(match env.planner {
+                Some(build) => build(&preq),
+                None => Arc::new(ShardPlan::plan(None, &preq)),
+            })
+        }
+        (None, false) => None,
+    };
+
+    let mut sharded = ShardedSummarizer::from_request(req, partitioner.as_ref(), optimizer);
+    sharded.plan = plan.clone();
+    sharded.transport = transport;
+    let res = if req.with_baseline {
+        sharded.summarize_with_baseline(data, env.factory, req.k)
+    } else {
+        sharded.summarize(data, env.factory, req.k)
+    };
+
+    let stage1_calls: u64 = res.per_shard.iter().map(|s| s.result.oracle_calls as u64).sum();
+    let stage1_work: u64 = res.per_shard.iter().map(|s| s.result.oracle_work).sum();
+    Ok(SummarizeResponse {
+        exemplars: res.merged.indices.iter().map(|&i| i as u64).collect(),
+        f_trajectory: res.merged.f_trajectory.clone(),
+        f_final: res.merged.f_final,
+        oracle_calls: res.merged.oracle_calls as u64 + stage1_calls,
+        oracle_work: res.merged.oracle_work + stage1_work,
+        timings: StageTimings {
+            partition_seconds: res.partition_seconds,
+            shard_seconds: res.shard_seconds,
+            merge_seconds: res.merge_seconds,
+            wall_seconds: res.total_seconds(),
+        },
+        provenance: Provenance {
+            backend: env.backend.to_string(),
+            optimizer: optimizer.name().to_string(),
+            precision: req.precision,
+            cpu_kernel: req.cpu_kernel,
+            partitioner: Some(res.partitioner),
+            plan: plan.as_ref().map(|p| p.describe()),
+            plan_split: plan.as_ref().map(|p| p.split_label()),
+            transport: Some(res.transport),
+            wire_bytes: res.wire_bytes,
+            shard_retries: res.shard_retries,
+            shards_used: res.shards_used,
+            peak_jobs_held: res.peak_jobs_held,
+        },
+        baseline: res.baseline.map(|b| BaselineRun {
+            exemplars: b.indices.iter().map(|&i| i as u64).collect(),
+            f_final: b.f_final,
+            wall_seconds: b.wall_seconds,
+        }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::request::{DatasetRef, ShardSpec};
+    use crate::optim::Greedy;
+    use crate::util::rng::Rng;
+
+    fn inline(n: usize, d: usize, seed: u64) -> (SharedMatrix, DatasetRef) {
+        let mut rng = Rng::new(seed);
+        let m: SharedMatrix = Arc::new(Matrix::random_normal(n, d, &mut rng));
+        (Arc::clone(&m), DatasetRef::Inline(m))
+    }
+
+    #[test]
+    fn single_node_matches_direct_greedy_bit_for_bit() {
+        let (m, ds) = inline(50, 5, 3);
+        let service = Service::cpu();
+        let res = service
+            .summarize(&SummarizeRequest::new(ds, 6).cpu_kernel(CpuKernel::Scalar).threads(1))
+            .unwrap();
+        let direct = Greedy { batch: 1024 }.run(
+            &mut CpuOracle::with_kernel_shared(m, CpuKernel::Scalar, Precision::F32, 1),
+            6,
+        );
+        let want: Vec<u64> = direct.indices.iter().map(|&i| i as u64).collect();
+        assert_eq!(res.exemplars, want);
+        assert_eq!(res.f_final.to_bits(), direct.f_final.to_bits());
+        assert_eq!(res.provenance.backend, "cpu");
+        assert!(res.provenance.transport.is_none());
+        assert_eq!(res.provenance.wire_bytes, 0);
+        assert!(res.baseline.is_none());
+    }
+
+    #[test]
+    fn sharded_response_carries_full_provenance() {
+        let (_, ds) = inline(60, 4, 7);
+        let service = Service::cpu();
+        let req = SummarizeRequest::new(ds, 5)
+            .with_baseline(true)
+            .sharded(ShardSpec::new(3).transport("loopback").replicas(2).plan(true).cores(4));
+        let res = service.summarize(&req).unwrap();
+        assert_eq!(res.k(), 5);
+        let p = &res.provenance;
+        assert_eq!(p.transport, Some("loopback"));
+        assert_eq!(p.partitioner, Some("round_robin"));
+        assert_eq!(p.shards_used, 3);
+        assert!(p.wire_bytes > 0);
+        assert_eq!(p.shard_retries, 0);
+        assert!(p.plan.as_deref().unwrap().contains("P=3"));
+        assert!(p.plan_split.is_some());
+        assert!(p.peak_jobs_held >= 1);
+        assert!(res.baseline.is_some());
+        let q = res.quality_ratio().unwrap();
+        assert!(q > 0.5 && q <= 1.0 + 1e-6, "quality {q}");
+        assert!(res.timings.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn invalid_requests_never_reach_execution() {
+        let (_, ds) = inline(10, 3, 1);
+        let service = Service::cpu();
+        let err = service
+            .summarize(&SummarizeRequest::new(ds, 11))
+            .unwrap_err();
+        assert!(matches!(err, ApiError::Invalid { field: "k", .. }));
+        assert!(matches!(
+            Service::from_backend("quantum"),
+            Err(ApiError::UnknownName { field: "backend", .. })
+        ));
+    }
+
+    #[test]
+    fn imm_dataset_k_overflow_is_checked_after_generation() {
+        use crate::imm::{Part, ProcessState};
+        let service = Service::cpu();
+        // 1000 cycles per campaign; k beyond that must be a typed error
+        let req = SummarizeRequest::new(
+            DatasetRef::imm(Part::Cover, ProcessState::Stable, 8, 5),
+            100_000,
+        );
+        assert!(req.validate().is_ok(), "size unknowable before generation");
+        assert!(matches!(
+            service.summarize(&req),
+            Err(ApiError::Invalid { field: "k", .. })
+        ));
+    }
+}

@@ -44,6 +44,35 @@ impl Default for KernelSweepConfig {
     }
 }
 
+impl KernelSweepConfig {
+    /// Derive the micro-bench workload from a validated
+    /// [`crate::api::SummarizeRequest`]: the ground shape from the
+    /// request's dataset reference, the candidate width from its batch
+    /// — so `kernel-bench` describes its workload the same way every
+    /// other entrypoint does. Inline/IMM datasets are rejected (the
+    /// sweep generates its own standard-normal ground set).
+    pub fn from_request(
+        req: &crate::api::SummarizeRequest,
+        thread_counts: Vec<usize>,
+    ) -> Result<KernelSweepConfig, crate::api::ApiError> {
+        req.validate()?;
+        match req.dataset {
+            crate::api::DatasetRef::Synthetic { n, d, seed } => Ok(KernelSweepConfig {
+                n,
+                d,
+                c: req.batch,
+                thread_counts,
+                seed,
+            }),
+            _ => Err(crate::api::ApiError::invalid(
+                "dataset",
+                "kernel sweeps run on synthetic datasets (the workload is regenerated \
+                 per measurement)",
+            )),
+        }
+    }
+}
+
 /// One (op, kernel, precision, threads) measurement.
 #[derive(Debug, Clone)]
 pub struct KernelPoint {

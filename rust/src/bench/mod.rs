@@ -14,7 +14,7 @@ pub use kernel_scaling::{
 };
 pub use report::Reporter;
 pub use shard_scaling::{
-    save_shard_json, shard_scaling_sweep, ShardScalingPoint, ShardSweepConfig, SweepPlanner,
+    save_shard_json, shard_scaling_sweep, ShardScalingPoint, ShardSweepConfig,
 };
 pub use workload::{fig2_workload, EvalProblem};
 

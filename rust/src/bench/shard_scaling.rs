@@ -1,22 +1,15 @@
 //! Scaling harness for the shard subsystem: sweep shard counts ×
 //! optimizers over one dataset and account wall-clock + quality against
-//! the single-node run — optionally under a fleet [`ShardPlan`]
-//! (planned worker × kernel-thread split + shared engine buckets).
-//! Shared by the `shard-bench` CLI subcommand and the `shard_scaling`
-//! bench target.
+//! the single-node run. Every measurement routes through the
+//! [`crate::api`] façade — the sweep builds one [`SummarizeRequest`]
+//! per (optimizer, P) cell and reads timings, wire traffic and plan
+//! labels from the response's [`crate::api::Provenance`]. Shared by the
+//! `shard-bench` CLI subcommand and the `shard_scaling` bench target.
 
-use crate::engine::{PlanRequest, ShardPlan};
-use crate::linalg::SharedMatrix;
-use crate::optim::build_optimizer;
-use crate::shard::{build_partitioner, build_transport, ShardOracleFactory, ShardedSummarizer};
+use crate::api::{ApiError, DatasetRef, Service, ShardSpec, SummarizeRequest};
+use crate::linalg::CpuKernel;
 use crate::util::json::{Json, ObjBuilder};
-use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
-
-/// Plan-builder seam for the sweep: the XLA backend's variant consults
-/// the artifact manifest, the CPU one plans the thread split only.
-pub type SweepPlanner<'a> = &'a (dyn Fn(&PlanRequest) -> Arc<ShardPlan> + Sync);
 
 /// One (optimizer, shard-count) measurement.
 #[derive(Debug, Clone)]
@@ -47,7 +40,8 @@ pub struct ShardScalingPoint {
     pub shard_retries: u64,
 }
 
-/// Sweep settings.
+/// Sweep settings — everything needed to derive the per-cell
+/// [`SummarizeRequest`]s.
 #[derive(Debug, Clone)]
 pub struct ShardSweepConfig {
     pub k: usize,
@@ -58,12 +52,18 @@ pub struct ShardSweepConfig {
     /// planned runs (the plan's split wins).
     pub threads: usize,
     pub seed: u64,
+    /// Pre-plan every P (shared bucket shape + P·T ≤ cores split).
+    pub planned: bool,
     /// Core budget handed to the planner (0 = auto).
     pub cores: usize,
     /// Shard-stage transport ([`crate::shard::TRANSPORTS`]).
     pub transport: String,
     /// Replica count for the `loopback` transport.
     pub replicas: usize,
+    /// CPU kernel backend the oracles run on.
+    pub cpu_kernel: CpuKernel,
+    /// Per-oracle kernel threads (0 = auto).
+    pub oracle_threads: usize,
 }
 
 impl Default for ShardSweepConfig {
@@ -75,82 +75,91 @@ impl Default for ShardSweepConfig {
             partitioner: "round_robin".into(),
             threads: 0,
             seed: 0xEBC,
+            planned: false,
             cores: 0,
             transport: "inproc".into(),
             replicas: 2,
+            cpu_kernel: CpuKernel::Scalar,
+            oracle_threads: 1,
         }
     }
 }
 
-/// Run the sweep. The baseline per algorithm is taken from the P = 1
-/// point's reference run, so every row's `speedup` compares against the
-/// same single-node measurement. With a `planner`, every P gets a fleet
-/// plan (reported per row via `plan`).
+impl ShardSweepConfig {
+    /// The api request for one (algorithm, P) sweep cell.
+    /// `with_baseline` is set on the first cell of each algorithm so
+    /// every row compares against the same single-node measurement.
+    pub fn request(
+        &self,
+        dataset: &DatasetRef,
+        algorithm: &str,
+        shards: usize,
+        with_baseline: bool,
+    ) -> SummarizeRequest {
+        SummarizeRequest::new(dataset.clone(), self.k)
+            .optimizer(algorithm)
+            .cpu_kernel(self.cpu_kernel)
+            .threads(self.oracle_threads)
+            .seed(self.seed)
+            .with_baseline(with_baseline)
+            .sharded(
+                ShardSpec::new(shards)
+                    .partitioner(&self.partitioner)
+                    .threads(self.threads)
+                    .transport(&self.transport)
+                    .replicas(self.replicas)
+                    .plan(self.planned)
+                    .cores(self.cores),
+            )
+    }
+}
+
+/// Run the sweep through the façade. The baseline per algorithm is
+/// taken from the P = first point's reference run, so every row's
+/// `speedup` compares against the same single-node measurement.
+/// Invalid names (algorithm / partitioner / transport) surface as
+/// typed [`ApiError`]s from request validation.
 pub fn shard_scaling_sweep(
-    data: &SharedMatrix,
-    factory: &ShardOracleFactory,
+    service: &Service,
+    dataset: &DatasetRef,
     cfg: &ShardSweepConfig,
-    planner: Option<SweepPlanner>,
-) -> Result<Vec<ShardScalingPoint>> {
-    let partitioner = build_partitioner(&cfg.partitioner, cfg.seed)
-        .ok_or_else(|| anyhow!("unknown partitioner '{}'", cfg.partitioner))?;
-    let transport = build_transport(&cfg.transport, cfg.replicas).ok_or_else(|| {
-        anyhow!(
-            "unknown transport '{}' (expected one of {:?})",
-            cfg.transport,
-            crate::shard::TRANSPORTS
-        )
-    })?;
+) -> Result<Vec<ShardScalingPoint>, ApiError> {
     let mut out = Vec::new();
     for alg in &cfg.algorithms {
-        let optimizer = build_optimizer(alg, 1024)
-            .ok_or_else(|| anyhow!("unknown algorithm '{alg}'"))?;
         let mut single: Option<(f64, f32)> = None; // (seconds, f)
         for &p in &cfg.shard_counts {
-            let mut s = ShardedSummarizer::new(partitioner.as_ref(), optimizer.as_ref(), p);
-            s.threads = cfg.threads;
-            s.transport = Some(transport.as_ref());
-            let plan_label = match planner {
-                Some(build) => {
-                    let mut req = PlanRequest::new(data.rows(), data.cols(), p, cfg.k);
-                    req.cores = cfg.cores;
-                    let plan = build(&req);
-                    let label = plan.split_label();
-                    s.plan = Some(plan);
-                    label
-                }
-                None => "-".to_string(),
-            };
-            let res = if single.is_none() {
-                let r = s.summarize_with_baseline(data, factory, cfg.k);
-                let b = r.baseline.as_ref().expect("baseline requested");
+            let req = cfg.request(dataset, alg, p, single.is_none());
+            let resp = service.summarize(&req)?;
+            if let Some(b) = &resp.baseline {
                 single = Some((b.wall_seconds, b.f_final));
-                r
-            } else {
-                s.summarize(data, factory, cfg.k)
-            };
-            let (single_seconds, f_single) = single.expect("baseline set");
-            let total = res.total_seconds();
+            }
+            let (single_seconds, f_single) =
+                single.expect("first cell runs with_baseline");
+            let total = resp.timings.wall_seconds;
             out.push(ShardScalingPoint {
                 algorithm: alg.clone(),
                 shards: p,
-                shards_used: res.shards_used,
-                shard_seconds: res.shard_seconds,
-                merge_seconds: res.merge_seconds,
+                shards_used: resp.provenance.shards_used,
+                shard_seconds: resp.timings.shard_seconds,
+                merge_seconds: resp.timings.merge_seconds,
                 total_seconds: total,
                 single_seconds,
-                f_merged: res.merged.f_final,
+                f_merged: resp.f_final,
                 f_single,
                 quality_ratio: if f_single <= 0.0 {
                     1.0
                 } else {
-                    res.merged.f_final as f64 / f_single as f64
+                    resp.f_final as f64 / f_single as f64
                 },
                 speedup: if total > 0.0 { single_seconds / total } else { 0.0 },
-                plan: plan_label,
-                transport: res.transport.to_string(),
-                wire_bytes: res.wire_bytes,
-                shard_retries: res.shard_retries,
+                plan: resp.provenance.plan_split.clone().unwrap_or_else(|| "-".into()),
+                transport: resp
+                    .provenance
+                    .transport
+                    .map(str::to_string)
+                    .unwrap_or_else(|| "-".into()),
+                wire_bytes: resp.provenance.wire_bytes,
+                shard_retries: resp.provenance.shard_retries,
             });
         }
     }
@@ -164,7 +173,7 @@ pub fn save_shard_json(
     path: &Path,
     cfg: &ShardSweepConfig,
     points: &[ShardScalingPoint],
-) -> Result<PathBuf> {
+) -> crate::Result<PathBuf> {
     let records: Vec<Json> = points
         .iter()
         .map(|p| {
@@ -208,26 +217,25 @@ pub fn save_shard_json(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::OracleSpec;
     use crate::linalg::Matrix;
-    use crate::submodular::{CpuOracle, Oracle};
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
-    fn factory() -> impl Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Sync {
-        |m: SharedMatrix, _spec: &OracleSpec| Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+    fn dataset(n: usize, d: usize, seed: u64) -> DatasetRef {
+        let mut rng = Rng::new(seed);
+        DatasetRef::Inline(Arc::new(Matrix::random_normal(n, d, &mut rng)))
     }
 
     #[test]
     fn sweep_produces_one_point_per_cell() {
-        let mut rng = Rng::new(1);
-        let data = Arc::new(Matrix::random_normal(80, 6, &mut rng));
+        let ds = dataset(80, 6, 1);
         let cfg = ShardSweepConfig {
             k: 4,
             shard_counts: vec![1, 2],
             algorithms: vec!["greedy".into(), "stochastic_greedy".into()],
             ..Default::default()
         };
-        let points = shard_scaling_sweep(&data, &factory(), &cfg, None).unwrap();
+        let points = shard_scaling_sweep(&Service::cpu(), &ds, &cfg).unwrap();
         assert_eq!(points.len(), 4);
         for pt in &points {
             assert!(pt.total_seconds > 0.0);
@@ -245,17 +253,17 @@ mod tests {
 
     #[test]
     fn planned_sweep_matches_unplanned_selection() {
-        let mut rng = Rng::new(5);
-        let data = Arc::new(Matrix::random_normal(60, 5, &mut rng));
+        let ds = dataset(60, 5, 5);
         let cfg = ShardSweepConfig {
             k: 4,
             shard_counts: vec![1, 3],
             cores: 4,
             ..Default::default()
         };
-        let unplanned = shard_scaling_sweep(&data, &factory(), &cfg, None).unwrap();
-        let planner = |req: &PlanRequest| Arc::new(ShardPlan::plan(None, req));
-        let planned = shard_scaling_sweep(&data, &factory(), &cfg, Some(&planner)).unwrap();
+        let service = Service::cpu();
+        let unplanned = shard_scaling_sweep(&service, &ds, &cfg).unwrap();
+        let planned_cfg = ShardSweepConfig { planned: true, ..cfg };
+        let planned = shard_scaling_sweep(&service, &ds, &planned_cfg).unwrap();
         assert_eq!(planned.len(), unplanned.len());
         for (a, b) in planned.iter().zip(&unplanned) {
             assert_eq!(a.f_merged.to_bits(), b.f_merged.to_bits(), "P={}", a.shards);
@@ -266,20 +274,20 @@ mod tests {
 
     #[test]
     fn loopback_sweep_matches_inproc_and_exports_json() {
-        let mut rng = Rng::new(9);
-        let data = Arc::new(Matrix::random_normal(50, 4, &mut rng));
+        let ds = dataset(50, 4, 9);
         let cfg = ShardSweepConfig {
             k: 3,
             shard_counts: vec![1, 3],
             ..Default::default()
         };
-        let inproc = shard_scaling_sweep(&data, &factory(), &cfg, None).unwrap();
+        let service = Service::cpu();
+        let inproc = shard_scaling_sweep(&service, &ds, &cfg).unwrap();
         let lb_cfg = ShardSweepConfig {
             transport: "loopback".into(),
             replicas: 3,
             ..cfg.clone()
         };
-        let lb = shard_scaling_sweep(&data, &factory(), &lb_cfg, None).unwrap();
+        let lb = shard_scaling_sweep(&service, &ds, &lb_cfg).unwrap();
         assert_eq!(lb.len(), inproc.len());
         for (a, b) in lb.iter().zip(&inproc) {
             assert_eq!(a.f_merged.to_bits(), b.f_merged.to_bits(), "P={}", a.shards);
@@ -296,23 +304,32 @@ mod tests {
     }
 
     #[test]
-    fn sweep_rejects_unknown_names() {
-        let mut rng = Rng::new(2);
-        let data = Arc::new(Matrix::random_normal(10, 3, &mut rng));
+    fn sweep_rejects_unknown_names_with_typed_errors() {
+        let ds = dataset(10, 3, 2);
+        let service = Service::cpu();
         let bad_alg = ShardSweepConfig {
             algorithms: vec!["magic".into()],
             ..Default::default()
         };
-        assert!(shard_scaling_sweep(&data, &factory(), &bad_alg, None).is_err());
+        assert!(matches!(
+            shard_scaling_sweep(&service, &ds, &bad_alg),
+            Err(ApiError::UnknownName { field: "optimizer", .. })
+        ));
         let bad_part = ShardSweepConfig {
             partitioner: "psychic".into(),
             ..Default::default()
         };
-        assert!(shard_scaling_sweep(&data, &factory(), &bad_part, None).is_err());
+        assert!(matches!(
+            shard_scaling_sweep(&service, &ds, &bad_part),
+            Err(ApiError::UnknownName { field: "shard.partitioner", .. })
+        ));
         let bad_transport = ShardSweepConfig {
             transport: "telepathy".into(),
             ..Default::default()
         };
-        assert!(shard_scaling_sweep(&data, &factory(), &bad_transport, None).is_err());
+        assert!(matches!(
+            shard_scaling_sweep(&service, &ds, &bad_transport),
+            Err(ApiError::UnknownName { field: "shard.transport", .. })
+        ));
     }
 }

@@ -1,5 +1,6 @@
 //! The coordinator service: ties queue → batcher → machines → optimizer.
 
+use crate::api::{self, ApiError, DatasetRef, ShardSpec, SummarizeRequest, SummarizeResponse};
 use crate::config::schema::ServiceConfig;
 use crate::coordinator::backpressure::{Admission, BoundedQueue};
 use crate::coordinator::batcher::{adaptive_drain, group_by_machine};
@@ -9,7 +10,7 @@ use crate::coordinator::stream::{CycleRecord, StreamSource};
 use crate::engine::{KernelImpl, OracleSpec, PlanRequest, PlanSource, ShardPlan};
 use crate::linalg::{Matrix, SharedMatrix};
 use crate::optim::{build_optimizer, Optimizer};
-use crate::shard::{build_partitioner, ShardTransport, ShardedSummarizer};
+use crate::shard::ShardTransport;
 use crate::submodular::Oracle;
 use crate::util::timer::Profile;
 use std::collections::BTreeMap;
@@ -59,14 +60,20 @@ pub struct Coordinator {
     /// Backend-aware plan builder (the XLA variant consults the artifact
     /// manifest); `None` plans the CPU split only.
     planner: Option<PlanSource>,
-    /// One fleet plan per (window rows, dim, shards) shape — repeated
-    /// fleet queries over a stable fleet reuse the plan (and therefore
-    /// the engine's loaded executables) instead of re-planning.
-    plan_cache: BTreeMap<(usize, usize, usize), Arc<ShardPlan>>,
+    /// One fleet plan per (window rows, dim, shards, k, batch, cores)
+    /// request shape — repeated fleet queries over a stable fleet reuse
+    /// the plan (and therefore the engine's loaded executables) instead
+    /// of re-planning. Precision/kernel need no key slot: requests that
+    /// disagree with the config's engine knobs are rejected up front
+    /// (see [`Self::summarize`]).
+    plan_cache: BTreeMap<(usize, usize, usize, usize, usize, usize), Arc<ShardPlan>>,
     /// Shard transport fleet queries dispatch stage 1 over (built from
     /// `[shard] transport`, swappable via [`Self::with_transport`]).
     /// Persistent across queries so replica state survives.
     transport: Box<dyn ShardTransport>,
+    /// Backend label for response provenance (set by
+    /// [`crate::api::Service::coordinator`]).
+    backend_label: String,
     pub metrics: CoordinatorMetrics,
     pub profile: Profile,
     version: u64,
@@ -95,10 +102,18 @@ impl Coordinator {
             planner: None,
             plan_cache: BTreeMap::new(),
             transport,
+            backend_label: "custom".into(),
             metrics: CoordinatorMetrics::default(),
             profile: Profile::new(),
             version: 0,
         }
+    }
+
+    /// Label the evaluation backend for response provenance
+    /// (`cpu` | `xla` when wired through [`crate::api::Service`]).
+    pub fn with_backend_label(mut self, label: &str) -> Coordinator {
+        self.backend_label = label.to_string();
+        self
     }
 
     /// Attach a backend-aware plan builder for fleet queries (built by
@@ -122,33 +137,122 @@ impl Coordinator {
     }
 
     /// Get (building + caching on first use) the fleet plan for a
-    /// pooled-window shape. `None` when `[shard] plan = false`.
-    fn fleet_plan(&mut self, n: usize, d: usize) -> Option<Arc<ShardPlan>> {
-        if !self.cfg.shard.plan || n == 0 {
+    /// request's window shape. `None` for unsharded or unplanned
+    /// requests.
+    fn fleet_plan(&mut self, n: usize, d: usize, req: &SummarizeRequest) -> Option<Arc<ShardPlan>> {
+        let spec = req.shard.as_ref()?;
+        if !spec.plan || n == 0 {
             return None;
         }
-        let key = (n, d, self.cfg.shard.shards);
+        let key = (n, d, spec.partitions, req.k, req.batch, spec.cores);
         if let Some(p) = self.plan_cache.get(&key) {
             return Some(Arc::clone(p));
         }
-        let req = PlanRequest {
+        let preq = PlanRequest {
             n,
             d,
-            shards: self.cfg.shard.shards,
-            k: self.cfg.summary.k,
-            batch: self.cfg.engine.batch,
-            precision: self.cfg.engine.precision,
+            shards: spec.partitions,
+            k: req.k,
+            batch: req.batch,
+            precision: req.precision,
             kernel: KernelImpl::Jnp,
-            cpu_kernel: self.cfg.engine.cpu_kernel,
-            cores: self.cfg.shard.cores,
+            cpu_kernel: req.cpu_kernel,
+            cores: spec.cores,
         };
         let plan = match &self.planner {
-            Some(build) => build(&req),
-            None => Arc::new(ShardPlan::plan(None, &req)),
+            Some(build) => build(&preq),
+            None => Arc::new(ShardPlan::plan(None, &preq)),
         };
         log::info!("fleet plan: {}", plan.describe());
         self.plan_cache.insert(key, Arc::clone(&plan));
         Some(plan)
+    }
+
+    /// Answer one api request over this coordinator's backend: its
+    /// long-lived oracle factory, its per-shape fleet-plan cache and
+    /// its persistent shard transport (which always wins over the
+    /// request's transport field — replica state must survive across
+    /// queries). This is the api-typed entry the `@fleet` route goes
+    /// through; external callers can hand it arbitrary requests, but
+    /// the engine knobs (precision / cpu_kernel / threads) must match
+    /// the coordinator's `[engine]` config — the factory is baked at
+    /// construction, so mismatched knobs are rejected rather than
+    /// silently substituted (use [`crate::api::Service`] for
+    /// per-request knobs).
+    pub fn summarize(&mut self, req: &SummarizeRequest) -> Result<SummarizeResponse, ApiError> {
+        req.validate()?;
+        // the coordinator's oracle factory is baked from `[engine]` at
+        // construction; a request asking for different engine knobs
+        // cannot be honored here (and must not be misreported in
+        // provenance) — reject it instead of silently substituting
+        let eng = &self.cfg.engine;
+        if req.precision != eng.precision {
+            return Err(ApiError::invalid(
+                "precision",
+                format!(
+                    "coordinator backend runs {} (request asked for {}); \
+                     use api::Service for per-request knobs",
+                    eng.precision.as_str(),
+                    req.precision.as_str()
+                ),
+            ));
+        }
+        if req.cpu_kernel != eng.cpu_kernel {
+            return Err(ApiError::invalid(
+                "cpu_kernel",
+                format!(
+                    "coordinator backend runs the {} kernel (request asked for {}); \
+                     use api::Service for per-request knobs",
+                    eng.cpu_kernel.name(),
+                    req.cpu_kernel.name()
+                ),
+            ));
+        }
+        if req.threads != 0 && req.threads != eng.cpu_threads {
+            return Err(ApiError::invalid(
+                "threads",
+                format!(
+                    "coordinator backend runs {} oracle thread(s) (request asked for {}); \
+                     use api::Service for per-request knobs",
+                    eng.cpu_threads, req.threads
+                ),
+            ));
+        }
+        let data = req.dataset.materialize()?;
+        let plan = self.fleet_plan(data.rows(), data.cols(), req);
+        let factory =
+            |m: SharedMatrix, spec: &OracleSpec| (self.oracle_factory)(m, spec);
+        let env = api::ExecEnv {
+            factory: &factory,
+            backend: &self.backend_label,
+            plan,
+            planner: None,
+            transport: Some(self.transport.as_ref()),
+        };
+        api::execute(req, &data, &env)
+    }
+
+    /// The api request a fleet query executes: pooled window as an
+    /// inline dataset, everything else from the `[summary]` / `[engine]`
+    /// / `[shard]` config sections.
+    fn fleet_request(&self, fleet_matrix: SharedMatrix, k: usize) -> SummarizeRequest {
+        let sc = &self.cfg.shard;
+        SummarizeRequest::new(DatasetRef::Inline(fleet_matrix), k)
+            .optimizer(&self.cfg.summary.algorithm)
+            .batch(self.cfg.engine.batch)
+            .precision(self.cfg.engine.precision)
+            .cpu_kernel(self.cfg.engine.cpu_kernel)
+            .seed(sc.seed)
+            .sharded(
+                ShardSpec::new(sc.shards)
+                    .partitioner(&sc.partitioner)
+                    .per_shard_k(sc.per_shard_k)
+                    .threads(sc.threads)
+                    .transport(&sc.transport)
+                    .replicas(sc.replicas)
+                    .plan(sc.plan)
+                    .cores(sc.cores),
+            )
     }
 
     fn build_optimizer(&self) -> Box<dyn Optimizer> {
@@ -302,46 +406,55 @@ impl Coordinator {
             machines += 1;
         }
         let fleet_matrix: SharedMatrix = Arc::new(Matrix::from_vec(total_rows, d, data));
-        let plan = self.fleet_plan(fleet_matrix.rows(), d);
-
-        let sc = &self.cfg.shard;
-        let partitioner = build_partitioner(&sc.partitioner, sc.seed)
-            .unwrap_or_else(|| unreachable!("schema validated partitioner '{}'", sc.partitioner));
-        let optimizer = self.build_optimizer();
-        let mut sharded =
-            ShardedSummarizer::new(partitioner.as_ref(), optimizer.as_ref(), sc.shards);
-        sharded.threads = sc.threads;
-        sharded.per_shard_k = sc.per_shard_k;
-        sharded.merge_batch = self.cfg.engine.batch;
-        sharded.plan = plan;
-        sharded.transport = Some(self.transport.as_ref());
         let k = self.cfg.summary.k.min(fleet_matrix.rows());
-        let factory =
-            |m: SharedMatrix, spec: &OracleSpec| (self.oracle_factory)(m, spec);
-        let res = self
-            .profile
-            .scope("coord.fleet", || sharded.summarize(&fleet_matrix, &factory, k));
+        if k == 0 {
+            // a k = 0 config asks for an empty summary — not an error
+            return RouteResult::Fleet(FleetSummary {
+                representatives: vec![],
+                f_value: 0.0,
+                window_total: rows.len(),
+                machines,
+                machines_skipped: skipped,
+                shards: 0,
+                shard_seconds: 0.0,
+                merge_seconds: 0.0,
+            });
+        }
 
-        self.metrics.shard_runs += res.shards_used as u64;
-        self.metrics.shard_merge_seconds_total += res.merge_seconds;
-        self.metrics.shard_retries += res.shard_retries;
-        self.metrics.wire_bytes_total += res.wire_bytes;
+        let req = self.fleet_request(fleet_matrix, k);
+        let t0 = Instant::now();
+        let resp = match self.summarize(&req) {
+            Ok(resp) => resp,
+            // the config was schema-validated, so a failure here is an
+            // execution-time one (backend death); answer NotReady
+            // rather than killing the operator's query path
+            Err(e) => {
+                log::error!("fleet query failed: {e}");
+                let total: u64 = self.machines.values().map(|m| m.total_ingested).sum();
+                return RouteResult::NotReady { ingested: total };
+            }
+        };
+        self.profile.record("coord.fleet", t0.elapsed());
+
+        self.metrics.shard_runs += resp.provenance.shards_used as u64;
+        self.metrics.shard_merge_seconds_total += resp.timings.merge_seconds;
+        self.metrics.shard_retries += resp.provenance.shard_retries;
+        self.metrics.wire_bytes_total += resp.provenance.wire_bytes;
         self.metrics.replica_count = self.transport.replica_count() as u64;
 
         RouteResult::Fleet(FleetSummary {
-            representatives: res
-                .merged
-                .indices
+            representatives: resp
+                .exemplars
                 .iter()
-                .map(|&i| rows[i].clone())
+                .map(|&i| rows[i as usize].clone())
                 .collect(),
-            f_value: res.merged.f_final,
+            f_value: resp.f_final,
             window_total: rows.len(),
             machines,
             machines_skipped: skipped,
-            shards: res.shards_used,
-            shard_seconds: res.shard_seconds,
-            merge_seconds: res.merge_seconds,
+            shards: resp.provenance.shards_used,
+            shard_seconds: resp.timings.shard_seconds,
+            merge_seconds: resp.timings.merge_seconds,
         })
     }
 
@@ -642,6 +755,35 @@ mod tests {
         }
         assert!(matches!(c.query(FLEET_QUERY), RouteResult::Fleet(_)));
         assert_eq!(planned_oracles.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn summarize_rejects_engine_knobs_the_factory_cannot_honor() {
+        use crate::api::{DatasetRef, SummarizeRequest};
+        use crate::engine::Precision;
+        use crate::linalg::CpuKernel;
+        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        let mut rng = crate::util::rng::Rng::new(4);
+        let ds = DatasetRef::Inline(Arc::new(Matrix::random_normal(20, 3, &mut rng)));
+        // matching knobs run fine (engine defaults: f32 / blocked / 0)
+        let ok = SummarizeRequest::new(ds.clone(), 3);
+        assert!(c.summarize(&ok).is_ok());
+        // mismatched knobs are typed errors, not silent substitutions
+        let bf16 = SummarizeRequest::new(ds.clone(), 3).precision(Precision::Bf16);
+        assert!(matches!(
+            c.summarize(&bf16),
+            Err(crate::api::ApiError::Invalid { field: "precision", .. })
+        ));
+        let scalar = SummarizeRequest::new(ds.clone(), 3).cpu_kernel(CpuKernel::Scalar);
+        assert!(matches!(
+            c.summarize(&scalar),
+            Err(crate::api::ApiError::Invalid { field: "cpu_kernel", .. })
+        ));
+        let threads = SummarizeRequest::new(ds, 3).threads(7);
+        assert!(matches!(
+            c.summarize(&threads),
+            Err(crate::api::ApiError::Invalid { field: "threads", .. })
+        ));
     }
 
     #[test]

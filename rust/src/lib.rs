@@ -19,6 +19,7 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`api`] | the typed request/response façade — the only way work enters |
 //! | [`util`] | std-only infra: PRNG, stats, JSON, CSV, thread pool, timers |
 //! | [`linalg`] | dense row-major matrices + squared-Euclidean distances |
 //! | [`submodular`] | EBC (ST/MT CPU baselines, paper Alg. 1) + IVM |
@@ -34,6 +35,7 @@
 //! | [`config`] | TOML-subset config system |
 //! | [`cli`] | argument parsing for the launcher binary |
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod config;

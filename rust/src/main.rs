@@ -1,5 +1,10 @@
 //! `ebc-summarizer` — the L3 coordinator launcher.
 //!
+//! Every subcommand parses its flags into one
+//! [`ebc::api::SummarizeRequest`] and executes it through one
+//! [`ebc::api::Service`] — the typed façade is the only way work enters
+//! the system (no per-subcommand backend wiring).
+//!
 //! Subcommands:
 //! * `info`         — runtime + artifact inventory
 //! * `summarize`    — summarize a synthetic dataset (quick demo)
@@ -10,6 +15,7 @@
 //! * `devices`      — analytical device-model predictions (Table 1 shape)
 
 use anyhow::Result;
+use ebc::api::{DatasetRef, Service, SummarizeRequest};
 use ebc::bench::report::fmt_secs;
 use ebc::bench::{
     kernel_scaling_sweep, shard_scaling_sweep, shard_split_sweep, KernelSweepConfig, Reporter,
@@ -17,24 +23,17 @@ use ebc::bench::{
 };
 use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
 use ebc::config::schema::ServiceConfig;
-use ebc::coordinator::{Coordinator, OracleFactory, SimulatedFleet, FLEET_QUERY};
-use ebc::engine::{
-    Engine, EngineConfig, OracleSpec, PlanRequest, PlanSource, Precision, ShardPlan, XlaOracle,
-};
-use ebc::linalg::CpuKernel;
+use ebc::coordinator::{SimulatedFleet, FLEET_QUERY};
+use ebc::engine::{PlanRequest, Precision};
 use ebc::gpumodel::{
     predict_seconds, speedup, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
 };
-use ebc::imm::casestudy::{
-    fig4_table, run_table2, table2_text, validate_expectations,
-};
+use ebc::imm::casestudy::{fig4_table, run_table2, table2_text, validate_expectations};
 use ebc::imm::{Part, ProcessState};
-use ebc::linalg::{Matrix, SharedMatrix};
-use ebc::optim::{Greedy, Optimizer};
+use ebc::linalg::CpuKernel;
+use ebc::optim::Greedy;
 use ebc::runtime::Runtime;
-use ebc::submodular::{CpuOracle, Oracle};
 use ebc::util::logging;
-use ebc::util::rng::Rng;
 use std::sync::Arc;
 
 fn app() -> AppSpec {
@@ -166,85 +165,6 @@ fn main() {
     }
 }
 
-/// One evaluation backend: the oracle factory plus (for the XLA path)
-/// the runtime handle the fleet planner consults for bucket picks.
-struct Backend {
-    factory: OracleFactory,
-    runtime: Option<Runtime>,
-    precision: Precision,
-    cpu_kernel: CpuKernel,
-}
-
-impl Backend {
-    /// Build the plan-builder seam for this backend: the XLA variant
-    /// pins engine buckets from the manifest, the CPU one plans the
-    /// worker × kernel-thread split only.
-    fn planner(&self) -> PlanSource {
-        let precision = self.precision;
-        let cpu_kernel = self.cpu_kernel;
-        let rt = self.runtime.clone();
-        Box::new(move |req: &PlanRequest| {
-            let mut req = req.clone();
-            req.precision = precision;
-            req.cpu_kernel = cpu_kernel;
-            Arc::new(ShardPlan::plan(rt.as_ref().map(|r| r.manifest()), &req))
-        })
-    }
-
-    /// Adapter for the case-study seam (plain owned matrices, no plan).
-    fn simple(&self) -> impl Fn(Matrix) -> Box<dyn Oracle> + '_ {
-        |m: Matrix| (self.factory)(Arc::new(m), &OracleSpec::unplanned())
-    }
-}
-
-fn oracle_backend(
-    backend: &str,
-    precision: Precision,
-    kernel: CpuKernel,
-    threads: usize,
-) -> Result<Backend> {
-    let (factory, runtime): (OracleFactory, Option<Runtime>) = match backend {
-        "cpu" => (
-            Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
-                // threads == 0 resolves to default_threads() in with_kernel;
-                // a planned spec overrides with its per-oracle split
-                let t = spec.threads_or(threads);
-                Box::new(CpuOracle::with_kernel_shared(m, kernel, precision, t))
-                    as Box<dyn Oracle>
-            }),
-            None,
-        ),
-        "xla" => {
-            let rt = Runtime::discover()?;
-            let engine = Engine::new(
-                rt.clone(),
-                EngineConfig {
-                    precision,
-                    cpu_fallback: true,
-                    cpu_kernel: kernel,
-                    cpu_threads: threads,
-                    ..Default::default()
-                },
-            );
-            (
-                Box::new(move |m: SharedMatrix, spec: &OracleSpec| {
-                    let mut engine = engine.clone();
-                    if let Some(plan) = &spec.plan {
-                        engine.set_plan(Arc::clone(plan));
-                    }
-                    if let Some(t) = spec.threads {
-                        engine.set_cpu_threads(t);
-                    }
-                    Box::new(XlaOracle::from_shared(engine, m)) as Box<dyn Oracle>
-                }),
-                Some(rt),
-            )
-        }
-        other => anyhow::bail!("unknown backend '{other}' (cpu | xla)"),
-    };
-    Ok(Backend { factory, runtime, precision, cpu_kernel: kernel })
-}
-
 fn parse_precision(s: &str) -> Result<Precision> {
     match s {
         "f32" => Ok(Precision::F32),
@@ -287,32 +207,27 @@ fn cmd_info() -> Result<()> {
 fn cmd_summarize(m: &Matches) -> Result<()> {
     let n = m.usize("n")?;
     let d = m.usize("d")?;
-    let k = m.usize("k")?;
-    let seed = m.usize("seed")? as u64;
-    let precision = parse_precision(m.str("precision")?)?;
-    let kernel = CpuKernel::parse(m.str("kernel")?)?;
-    let be = oracle_backend(m.str("backend")?, precision, kernel, m.usize("oracle-threads")?)?;
-    let mut rng = Rng::new(seed);
-    let data = Matrix::random_normal(n, d, &mut rng);
-
-    let name = m.str("algorithm")?;
-    let optimizer: Box<dyn Optimizer> = ebc::optim::build_optimizer(name, 1024)
-        .ok_or_else(|| {
-            anyhow::anyhow!("unknown algorithm '{name}' (expected one of {:?})", ebc::optim::ALGORITHMS)
-        })?;
-    let mut oracle = (be.factory)(Arc::new(data), &OracleSpec::unplanned());
-    let res = optimizer.run(oracle.as_mut(), k);
+    let service = Service::from_backend(m.str("backend")?)?;
+    let req = SummarizeRequest::new(
+        DatasetRef::synthetic(n, d, m.usize("seed")? as u64),
+        m.usize("k")?,
+    )
+    .optimizer(m.str("algorithm")?)
+    .precision(parse_precision(m.str("precision")?)?)
+    .cpu_kernel(CpuKernel::parse(m.str("kernel")?)?)
+    .threads(m.usize("oracle-threads")?);
+    let res = service.summarize(&req)?;
     println!(
         "summary of {n}x{d} ({}, backend={}): k={}",
-        optimizer.name(),
-        m.str("backend")?,
+        res.provenance.optimizer,
+        res.provenance.backend,
         res.k()
     );
-    println!("representatives: {:?}", res.indices);
+    println!("representatives: {:?}", res.exemplars);
     println!("f(S) = {:.6}", res.f_final);
     println!(
         "wall: {:.3}s, oracle calls: {}, distance work: {:.2e}",
-        res.wall_seconds, res.oracle_calls, res.oracle_work as f64
+        res.timings.wall_seconds, res.oracle_calls, res.oracle_work as f64
     );
     Ok(())
 }
@@ -321,13 +236,20 @@ fn cmd_casestudy(m: &Matches) -> Result<()> {
     let k = m.usize("k")?;
     let samples = m.usize("samples")?;
     let seed = m.usize("seed")? as u64;
-    let kernel = CpuKernel::parse(m.str("kernel")?)?;
-    let be =
-        oracle_backend(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
+    let service = Service::from_backend(m.str("backend")?)?;
+    // the base request the per-campaign oracles are built from (each
+    // campaign dataset is generated inside run_table2)
+    let base = SummarizeRequest::new(
+        DatasetRef::imm(Part::Cover, ProcessState::Stable, samples, seed),
+        k,
+    )
+    .cpu_kernel(CpuKernel::parse(m.str("kernel")?)?)
+    .threads(m.usize("oracle-threads")?);
+    base.validate()?;
     let optimizer = Greedy::default();
 
     log::info!("generating 10 campaigns ({} samples/cycle) + summarizing", samples);
-    let results = run_table2(&optimizer, &be.simple(), k, samples, seed);
+    let results = run_table2(&optimizer, &service.case_factory(&base), k, samples, seed);
 
     if m.has("table2") || (!m.has("fig4") && !m.has("validate")) {
         println!("{}", table2_text(&results, k));
@@ -357,12 +279,6 @@ fn cmd_casestudy(m: &Matches) -> Result<()> {
         }
     }
     if m.has("fig4") {
-        let plate_regrind = results
-            .iter()
-            .find(|r| r.part == Part::Cover && r.state == ProcessState::Regrind)
-            .map(|_| ())
-            .and(Some(()));
-        let _ = plate_regrind;
         let r = results
             .iter()
             .find(|r| r.part == Part::Plate && r.state == ProcessState::Regrind)
@@ -382,14 +298,8 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         "" => ServiceConfig::default(),
         path => ServiceConfig::load(path)?,
     };
-    let be = oracle_backend(
-        m.str("backend")?,
-        cfg.engine.precision,
-        cfg.engine.cpu_kernel,
-        cfg.engine.cpu_threads,
-    )?;
-    let planner = be.planner();
-    let mut coordinator = Coordinator::new(cfg, be.factory).with_planner(planner);
+    let service = Service::from_backend(m.str("backend")?)?;
+    let mut coordinator = service.coordinator(cfg);
     let mut fleet = SimulatedFleet::new(
         &[
             ("imm-cover-1", Part::Cover, ProcessState::Stable),
@@ -433,7 +343,6 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
     let samples = m.usize("samples")?;
     let k = m.usize("k")?;
     let seed = m.usize("seed")? as u64;
-    let shard_counts = parse_usize_list(m.str("shards")?, "shards")?;
     let algorithms: Vec<String> = m
         .str("algorithms")?
         .split(',')
@@ -443,65 +352,56 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
     if algorithms.is_empty() {
         anyhow::bail!("flag '--algorithms': empty list");
     }
-    let threads = m.usize("threads")?;
-    let kernel = CpuKernel::parse(m.str("kernel")?)?;
-    let be =
-        oracle_backend(m.str("backend")?, Precision::F32, kernel, m.usize("oracle-threads")?)?;
-    let planned = m.has("plan");
-    let cores = m.usize("cores")?;
-    // validated by shard_scaling_sweep's build_transport (one registry,
-    // one check — mirrors how --partitioner is handled)
-    let transport = m.str("transport")?.to_string();
-    let replicas = m.usize("replicas")?.max(1);
+    let service = Service::from_backend(m.str("backend")?)?;
+    let cfg = ShardSweepConfig {
+        k,
+        shard_counts: parse_usize_list(m.str("shards")?, "shards")?,
+        algorithms,
+        partitioner: m.str("partitioner")?.to_string(),
+        threads: m.usize("threads")?,
+        seed,
+        planned: m.has("plan"),
+        cores: m.usize("cores")?,
+        transport: m.str("transport")?.to_string(),
+        replicas: m.usize("replicas")?.max(1),
+        cpu_kernel: CpuKernel::parse(m.str("kernel")?)?,
+        oracle_threads: m.usize("oracle-threads")?,
+    };
 
     log::info!("generating IMM dataset (cover/stable, d={samples})");
-    let data: SharedMatrix = Arc::new(
-        ebc::imm::generate_dataset_with(Part::Cover, ProcessState::Stable, seed, samples).cycles,
-    );
+    // materialize once, then share: every sweep cell aliases one matrix
+    let data = DatasetRef::imm(Part::Cover, ProcessState::Stable, samples, seed).materialize()?;
+    let dataset = DatasetRef::Inline(Arc::clone(&data));
     println!(
         "shard scaling sweep: {}x{} IMM cycles, k={k}, partitioner={}, threads={}, \
-         transport={transport}{}{}",
+         transport={}{}{}",
         data.rows(),
         data.cols(),
-        m.str("partitioner")?,
-        if threads == 0 {
+        cfg.partitioner,
+        if cfg.threads == 0 {
             ebc::util::threadpool::default_threads()
         } else {
-            threads
+            cfg.threads
         },
-        if transport == "loopback" {
-            format!(" ({replicas} replicas)")
+        cfg.transport,
+        if cfg.transport == "loopback" {
+            format!(" ({} replicas)", cfg.replicas)
         } else {
             String::new()
         },
-        if planned { " (planned)" } else { "" }
+        if cfg.planned { " (planned)" } else { "" }
     );
 
-    let cfg = ShardSweepConfig {
-        k,
-        shard_counts,
-        algorithms,
-        partitioner: m.str("partitioner")?.to_string(),
-        threads,
-        seed,
-        cores,
-        transport,
-        replicas,
-    };
-    let plan_source = be.planner();
-    if planned {
+    if cfg.planned {
         // report the planned bucket shape + core split per shard count
+        let plan_source = service.plan_source(Precision::F32, cfg.cpu_kernel);
         for &p in &cfg.shard_counts {
             let mut req = PlanRequest::new(data.rows(), data.cols(), p, k);
-            req.cores = cores;
+            req.cores = cfg.cores;
             println!("plan P={p}: {}", plan_source(&req).describe());
         }
     }
-    let planner = |req: &PlanRequest| plan_source(req);
-    let planner_opt: Option<ebc::bench::SweepPlanner> =
-        if planned { Some(&planner) } else { None };
-    let factory = |m: SharedMatrix, spec: &OracleSpec| (be.factory)(m, spec);
-    let points = shard_scaling_sweep(&data, &factory, &cfg, planner_opt)?;
+    let points = shard_scaling_sweep(&service, &dataset, &cfg)?;
 
     let mut rep = Reporter::new(
         "shard-bench: two-stage wall-clock vs single-node",
@@ -540,13 +440,15 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
 }
 
 fn cmd_kernel_bench(m: &Matches) -> Result<()> {
-    let cfg = KernelSweepConfig {
-        n: m.usize("n")?,
-        d: m.usize("d")?,
-        c: m.usize("c")?,
-        thread_counts: parse_usize_list(m.str("threads")?, "threads")?,
-        seed: m.usize("seed")? as u64,
-    };
+    // the workload travels as an api request like everywhere else; the
+    // sweep derives its shape from the validated request
+    let base = SummarizeRequest::new(
+        DatasetRef::synthetic(m.usize("n")?, m.usize("d")?, m.usize("seed")? as u64),
+        1,
+    )
+    .batch(m.usize("c")?);
+    let cfg =
+        KernelSweepConfig::from_request(&base, parse_usize_list(m.str("threads")?, "threads")?)?;
     println!(
         "kernel sweep: N={} d={} C={} threads={:?} (scalar baseline vs blocked Gram-matrix)",
         cfg.n, cfg.d, cfg.c, cfg.thread_counts

@@ -59,7 +59,9 @@ pub use partition::{
 };
 pub use summarizer::{ShardOracleFactory, ShardRun, ShardedResult, ShardedSummarizer};
 pub use transport::{
-    build_transport, ExecCtx, InProcessTransport, LoopbackReplicaTransport, ShardTransport,
-    TransportError, TransportSnapshot, TRANSPORTS,
+    build_transport, ExecCtx, InProcessTransport, JobSource, LoopbackReplicaTransport,
+    ShardTransport, TransportError, TransportSnapshot, TRANSPORTS,
 };
-pub use wire::{ShardJobMsg, ShardResultMsg, WireError, WirePlan};
+pub use wire::{
+    ShardJobMsg, ShardResultMsg, WireDataset, WireError, WirePlan, WireRequest, WireShardSpec,
+};

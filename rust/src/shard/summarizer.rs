@@ -7,10 +7,11 @@ use crate::linalg::SharedMatrix;
 use crate::optim::{Optimizer, SummaryResult};
 use crate::shard::merge::greedy_merge;
 use crate::shard::partition::Partitioner;
-use crate::shard::transport::{ExecCtx, InProcessTransport, ShardTransport};
+use crate::shard::transport::{ExecCtx, InProcessTransport, JobSource, ShardTransport};
 use crate::shard::wire::{ShardJobMsg, ShardResultMsg, WirePlan};
 use crate::submodular::Oracle;
 use crate::util::threadpool::default_threads;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -77,6 +78,10 @@ pub struct ShardedResult {
     pub wire_bytes: u64,
     /// Shards re-queued after replica failures during this run.
     pub shard_retries: u64,
+    /// Most job payloads (gathered sub-matrices) alive at once during
+    /// stage 1 — bounded by the transport's concurrency, not by the
+    /// shard count, because jobs are built per dispatch.
+    pub peak_jobs_held: usize,
 }
 
 impl ShardedResult {
@@ -145,6 +150,30 @@ impl<'a> ShardedSummarizer<'a> {
         }
     }
 
+    /// Configure a summarizer from a validated
+    /// [`crate::api::SummarizeRequest`] — the api façade's entry path.
+    /// Shard count, stage-1 workers, per-shard k and the
+    /// merge/candidate batch come from the request; the
+    /// partitioner/optimizer (and any plan/transport handles) stay
+    /// caller-owned borrows.
+    ///
+    /// # Panics
+    /// If the request carries no [`crate::api::ShardSpec`] — single-node
+    /// requests never reach the sharded pipeline
+    /// (see [`crate::api::execute`]).
+    pub fn from_request(
+        req: &crate::api::SummarizeRequest,
+        partitioner: &'a dyn Partitioner,
+        optimizer: &'a dyn Optimizer,
+    ) -> ShardedSummarizer<'a> {
+        let spec = req.shard.as_ref().expect("from_request needs a sharded request");
+        let mut s = ShardedSummarizer::new(partitioner, optimizer, spec.partitions);
+        s.threads = spec.threads;
+        s.per_shard_k = spec.per_shard_k;
+        s.merge_batch = req.batch.max(1);
+        s
+    }
+
     /// Run the two-stage pipeline. `factory` builds the evaluation
     /// oracle for each shard's sub-matrix and for the merge stage — the
     /// same seam the coordinator uses, so shards run on the CPU baseline
@@ -206,15 +235,30 @@ impl<'a> ShardedSummarizer<'a> {
                 (t, OracleSpec::unplanned())
             }
         };
-        // NOTE: materializing every job up front holds one full copy of
-        // the ground matrix (the gathered sub-matrices) for the whole
-        // stage — the price of re-queueable, transport-agnostic jobs.
-        // The ROADMAP's memory-budgeting item covers streaming/dropping
-        // job payloads per completed shard for edge-sized deployments.
-        let msgs: Vec<ShardJobMsg> = jobs
-            .iter()
-            .map(|(shard, part)| self.job_for(*shard, part, data, shard_k, &shard_spec))
-            .collect();
+        // jobs are NOT materialized up front: the source gathers each
+        // shard's sub-matrix at dispatch time and a re-queued shard
+        // rebuilds its payload, so peak payload residency is bounded by
+        // the transport's concurrency instead of holding a full extra
+        // ground-matrix copy for the whole stage (`peak_jobs_held`
+        // reports the observed bound).
+        let (precision, cpu_kernel, kernel) = match &self.plan {
+            Some(p) => (p.precision, p.cpu_kernel, p.kernel),
+            None => (Precision::F32, CpuKernel::Blocked, KernelImpl::Jnp),
+        };
+        let source = StageJobs {
+            parts: jobs,
+            data,
+            shard_k,
+            batch: self.merge_batch,
+            optimizer: self.optimizer.name().to_string(),
+            threads: shard_spec.threads,
+            plan: self.plan.clone(),
+            precision,
+            cpu_kernel,
+            kernel,
+            alive: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        };
         let ctx = ExecCtx::local(factory, self.optimizer, shard_spec.plan.clone(), threads);
         let local = InProcessTransport::default();
         // `transport` aliases `local` when no external transport is set
@@ -223,7 +267,7 @@ impl<'a> ShardedSummarizer<'a> {
         let stats_before = transport.stats();
         let mut transport_name = transport.name();
         let mut fell_back = false;
-        let results: Vec<ShardResultMsg> = match transport.run_jobs(&msgs, &ctx) {
+        let results: Vec<ShardResultMsg> = match transport.run_jobs(&source, &ctx) {
             Ok(r) => r,
             Err(e) => {
                 // a dead replica fleet must not kill the query: degrade
@@ -235,7 +279,7 @@ impl<'a> ShardedSummarizer<'a> {
                 fell_back = true;
                 transport_name = local.name();
                 local
-                    .run_jobs(&msgs, &ctx)
+                    .run_jobs(&source, &ctx)
                     .unwrap_or_else(|e| panic!("in-process shard transport failed: {e}"))
             }
         };
@@ -285,40 +329,62 @@ impl<'a> ShardedSummarizer<'a> {
             transport: transport_name,
             wire_bytes: stats.wire_bytes,
             shard_retries: stats.shard_retries,
+            peak_jobs_held: source.peak.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Stage-1 job source: builds each shard's wire job — the gathered
+/// sub-matrix, its global ground ids, the optimizer id + budget, and
+/// the oracle knobs (from the plan when the run is planned, engine
+/// defaults otherwise; local factories carry their own backend config,
+/// the knobs matter to true remote workers) — **at dispatch time**, so
+/// only in-flight shards hold payloads and a re-queued shard rebuilds
+/// its job deterministically.
+struct StageJobs<'a> {
+    /// Non-empty shards as (original shard id, ground rows).
+    parts: Vec<(usize, Vec<usize>)>,
+    data: &'a SharedMatrix,
+    shard_k: usize,
+    batch: usize,
+    optimizer: String,
+    /// Per-oracle kernel-thread override of a planned run.
+    threads: Option<usize>,
+    plan: Option<Arc<ShardPlan>>,
+    precision: Precision,
+    cpu_kernel: CpuKernel,
+    kernel: KernelImpl,
+    alive: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl JobSource for StageJobs<'_> {
+    fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    fn job(&self, i: usize) -> ShardJobMsg {
+        let alive = self.alive.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(alive, Ordering::SeqCst);
+        let (shard, part) = &self.parts[i];
+        ShardJobMsg {
+            shard: *shard as u32,
+            k: self.shard_k.min(part.len()) as u32,
+            batch: self.batch.max(1) as u32,
+            optimizer: self.optimizer.clone(),
+            payload: Precision::F32,
+            precision: self.precision,
+            cpu_kernel: self.cpu_kernel,
+            kernel: self.kernel,
+            threads: self.threads.map(|t| t as u32),
+            plan: self.plan.as_ref().map(|p| WirePlan::of(p)),
+            ground_ids: part.iter().map(|&r| r as u64).collect(),
+            data: self.data.gather(part),
         }
     }
 
-    /// Build one shard's wire job: the gathered sub-matrix, its global
-    /// ground ids, the optimizer id + budget, and the oracle knobs
-    /// (from the plan when the run is planned, engine defaults
-    /// otherwise — local factories carry their own backend config; the
-    /// knobs matter to true remote workers).
-    fn job_for(
-        &self,
-        shard: usize,
-        part: &[usize],
-        data: &SharedMatrix,
-        shard_k: usize,
-        spec: &OracleSpec,
-    ) -> ShardJobMsg {
-        let (precision, cpu_kernel, kernel) = match &self.plan {
-            Some(p) => (p.precision, p.cpu_kernel, p.kernel),
-            None => (Precision::F32, CpuKernel::Blocked, KernelImpl::Jnp),
-        };
-        ShardJobMsg {
-            shard: shard as u32,
-            k: shard_k.min(part.len()) as u32,
-            batch: self.merge_batch.max(1) as u32,
-            optimizer: self.optimizer.name().to_string(),
-            payload: Precision::F32,
-            precision,
-            cpu_kernel,
-            kernel,
-            threads: spec.threads.map(|t| t as u32),
-            plan: self.plan.as_ref().map(|p| WirePlan::of(p)),
-            ground_ids: part.iter().map(|&i| i as u64).collect(),
-            data: data.gather(part),
-        }
+    fn complete(&self, _i: usize) {
+        self.alive.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -441,6 +507,26 @@ mod tests {
         assert_eq!(res2.merged.indices, res.merged.indices);
         assert_eq!(res2.merged.f_final.to_bits(), res.merged.f_final.to_bits());
         assert_eq!(res2.wire_bytes, res.wire_bytes, "same jobs, same frames");
+    }
+
+    #[test]
+    fn stage1_streams_payloads_peak_bounded_by_workers() {
+        // 8 shards over 2 stage-1 workers: at most 2 job payloads may
+        // be alive at once (the pre-streaming code held all 8 for the
+        // whole stage)
+        let v = data(64, 4, 29);
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let greedy = Greedy::default();
+        let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, 8);
+        s.threads = 2;
+        let res = s.summarize(&v, &cpu_factory(), 4);
+        assert_eq!(res.shards_used, 8);
+        assert!(res.peak_jobs_held >= 1, "peak never recorded");
+        assert!(
+            res.peak_jobs_held <= 2,
+            "peak {} payloads held with 2 workers",
+            res.peak_jobs_held
+        );
     }
 
     #[test]

@@ -158,6 +158,45 @@ impl<'a> ExecCtx<'a> {
     }
 }
 
+/// Lazily builds shard jobs for a transport run.
+///
+/// Transports call [`JobSource::job`] at **dispatch time** — one job
+/// frame (and its sub-matrix payload) only exists while its shard is in
+/// flight, and [`JobSource::complete`] marks it released. A re-queued
+/// shard (replica failure) simply rebuilds its job from the source, so
+/// nothing needs to hold payloads for the whole stage: peak payload
+/// residency is bounded by the transport's concurrency, not by the
+/// shard count (the ROADMAP "host-side twin" memory item).
+///
+/// `job(i)` must be deterministic in `i` — a rebuild after a replica
+/// failure must produce the identical job.
+pub trait JobSource: Sync {
+    /// Number of jobs.
+    fn len(&self) -> usize;
+
+    /// True when there is nothing to run.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Build (or rebuild) the `i`-th job.
+    fn job(&self, i: usize) -> ShardJobMsg;
+
+    /// The `i`-th job's payload has been released (executed or failed).
+    fn complete(&self, _i: usize) {}
+}
+
+/// Pre-materialized jobs (tests, callers that already hold frames).
+impl JobSource for Vec<ShardJobMsg> {
+    fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    fn job(&self, i: usize) -> ShardJobMsg {
+        self[i].clone()
+    }
+}
+
 /// Run one decoded shard job to completion: build the oracle for the
 /// sub-matrix, run the optimizer at the job's budget, map the selection
 /// back to global ground ids. Deterministic in the job for any
@@ -196,33 +235,43 @@ pub fn execute_job(job: ShardJobMsg, ctx: &ExecCtx) -> Result<ShardResultMsg, Tr
     })
 }
 
-/// Encode → decode → execute → encode → decode: the full double wire
-/// round trip every transport runs per shard.
+/// Build → encode → decode → execute → encode → decode: the full
+/// double wire round trip every transport runs per shard. The job is
+/// built here (at dispatch) and every intermediate copy is dropped as
+/// soon as the next leg owns the data, so a shard's payload lives only
+/// while that shard executes.
 fn run_one(
-    job: &ShardJobMsg,
+    jobs: &dyn JobSource,
+    i: usize,
     ctx: &ExecCtx,
     stats: &TransportStats,
 ) -> Result<ShardResultMsg, TransportError> {
-    let job_frame = encode_job(job);
-    stats.add_bytes(job_frame.len());
-    let decoded = decode_job(&job_frame)?;
-    let result = execute_job(decoded, ctx)?;
-    let result_frame = encode_result(&result);
-    stats.add_bytes(result_frame.len());
-    let returned = decode_result(&result_frame)?;
-    Ok(returned)
+    let out: Result<ShardResultMsg, TransportError> = (|| {
+        let job_frame = encode_job(&jobs.job(i));
+        stats.add_bytes(job_frame.len());
+        let decoded = decode_job(&job_frame)?;
+        drop(job_frame);
+        let result = execute_job(decoded, ctx)?;
+        let result_frame = encode_result(&result);
+        stats.add_bytes(result_frame.len());
+        let returned = decode_result(&result_frame)?;
+        Ok(returned)
+    })();
+    jobs.complete(i);
+    out
 }
 
 /// How shard jobs reach their executors. Implementations must return
-/// one result per job, in job order, and route every job through the
-/// wire encode/decode round trip.
+/// one result per job, in job order, route every job through the wire
+/// encode/decode round trip, and build jobs lazily through the
+/// [`JobSource`] (never materialize the whole job set).
 pub trait ShardTransport: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Execute all jobs; `results[i]` answers `jobs[i]`.
+    /// Execute all jobs; `results[i]` answers `jobs.job(i)`.
     fn run_jobs(
         &self,
-        jobs: &[ShardJobMsg],
+        jobs: &dyn JobSource,
         ctx: &ExecCtx,
     ) -> Result<Vec<ShardResultMsg>, TransportError>;
 
@@ -242,7 +291,7 @@ impl<T: ShardTransport> ShardTransport for Arc<T> {
     }
     fn run_jobs(
         &self,
-        jobs: &[ShardJobMsg],
+        jobs: &dyn JobSource,
         ctx: &ExecCtx,
     ) -> Result<Vec<ShardResultMsg>, TransportError> {
         (**self).run_jobs(jobs, ctx)
@@ -282,10 +331,14 @@ impl ShardTransport for InProcessTransport {
 
     fn run_jobs(
         &self,
-        jobs: &[ShardJobMsg],
+        jobs: &dyn JobSource,
         ctx: &ExecCtx,
     ) -> Result<Vec<ShardResultMsg>, TransportError> {
-        par_map(jobs, ctx.workers.max(1), |job| run_one(job, ctx, &self.stats))
+        // dispatch indices, not jobs: each worker builds its shard's
+        // payload right before executing it and drops it right after,
+        // so at most `workers` payloads are alive at once
+        let idx: Vec<usize> = (0..jobs.len()).collect();
+        par_map(&idx, ctx.workers.max(1), |&i| run_one(jobs, i, ctx, &self.stats))
             .into_iter()
             .collect()
     }
@@ -384,7 +437,7 @@ impl ShardTransport for LoopbackReplicaTransport {
 
     fn run_jobs(
         &self,
-        jobs: &[ShardJobMsg],
+        jobs: &dyn JobSource,
         ctx: &ExecCtx,
     ) -> Result<Vec<ShardResultMsg>, TransportError> {
         let mut results: Vec<Option<ShardResultMsg>> = (0..jobs.len()).map(|_| None).collect();
@@ -418,7 +471,7 @@ impl ShardTransport for LoopbackReplicaTransport {
                     if (nth as u64) >= a.allowed {
                         break; // the replica died; the rest re-queues
                     }
-                    match run_one(&jobs[ji], ctx, &self.stats) {
+                    match run_one(jobs, ji, ctx, &self.stats) {
                         Ok(res) => done.push((ji, res)),
                         // a job-level error (bad frame, unknown
                         // optimizer) is deterministic — retrying it on
@@ -656,7 +709,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // empty job sets succeed trivially even with no replicas
-        assert_eq!(t.run_jobs(&[], &ctx).unwrap(), vec![]);
+        assert_eq!(t.run_jobs(&Vec::new(), &ctx).unwrap(), vec![]);
     }
 
     #[test]
@@ -676,6 +729,49 @@ mod tests {
             assert_eq!(reg.get("replica-1").unwrap().state, ReplicaState::Draining);
         });
         assert_eq!(t.replica_count(), 2);
+    }
+
+    #[test]
+    fn payloads_are_built_per_dispatch_and_bounded_by_workers() {
+        use std::sync::atomic::AtomicUsize;
+        struct Tracked {
+            inner: Vec<ShardJobMsg>,
+            alive: AtomicUsize,
+            peak: AtomicUsize,
+            builds: AtomicUsize,
+        }
+        impl JobSource for Tracked {
+            fn len(&self) -> usize {
+                self.inner.as_slice().len()
+            }
+            fn job(&self, i: usize) -> ShardJobMsg {
+                self.builds.fetch_add(1, Ordering::SeqCst);
+                let alive = self.alive.fetch_add(1, Ordering::SeqCst) + 1;
+                self.peak.fetch_max(alive, Ordering::SeqCst);
+                self.inner[i].clone()
+            }
+            fn complete(&self, _i: usize) {
+                self.alive.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        let src = Tracked {
+            inner: jobs(6, 8, 77),
+            alive: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            builds: AtomicUsize::new(0),
+        };
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 2);
+        let t = InProcessTransport::default();
+        let out = t.run_jobs(&src, &ctx).unwrap();
+        assert_eq!(out.len(), 6);
+        // every job was built exactly once, at dispatch time...
+        assert_eq!(src.builds.load(Ordering::SeqCst), 6);
+        // ...and never more payloads alive than concurrent workers
+        let peak = src.peak.load(Ordering::SeqCst);
+        assert!(peak <= 2, "peak {peak} payloads held with 2 workers");
+        assert_eq!(src.alive.load(Ordering::SeqCst), 0, "payload leaked");
     }
 
     #[test]

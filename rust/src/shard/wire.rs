@@ -15,15 +15,15 @@
 //!   offset  size  field
 //!   ------  ----  ----------------------------------------------
 //!        0     4  magic  "EBCW"  (45 42 43 57)
-//!        4     2  version        (u16, currently 1)
-//!        6     1  kind           (1 = job, 2 = result)
+//!        4     2  version        (u16, currently 2)
+//!        6     1  kind           (1 = job, 2 = result, 3 = request)
 //!        7     1  reserved       (0)
 //!        8     4  payload_len    (u32)
 //!       12     N  payload        (kind-specific, see below)
 //!     12+N     4  crc32          (IEEE/zlib CRC-32 of bytes [0, 12+N))
 //! ```
 //!
-//! Job payload v1:
+//! Job payload v2 (layout unchanged from v1):
 //!
 //! ```text
 //!   u32 shard · u32 k · u32 batch · str optimizer
@@ -36,13 +36,31 @@
 //!   u32 rows · u32 cols · rows·cols × (f32 | bf16-as-u16) sub-matrix
 //! ```
 //!
-//! Result payload v1:
+//! Result payload v2 (layout unchanged from v1):
 //!
 //! ```text
 //!   u32 shard · u32 size
 //!   u32 idx_count  · idx_count  × u64 exemplar ground ids (selection order)
 //!   u32 traj_count · traj_count × f32 f-trajectory
 //!   f32 f_final · f64 wall_seconds · u64 oracle_calls · u64 oracle_work
+//! ```
+//!
+//! Request payload v2 (new in v2 — the serialized form of a full
+//! [`crate::api::SummarizeRequest`], the frame a client hands the
+//! future TCP listener to start a run):
+//!
+//! ```text
+//!   u32 k · u32 batch · str optimizer (registry id)
+//!   u8 precision · u8 cpu_kernel · u32 threads (0 = auto)
+//!   u64 seed · u8 with_baseline
+//!   u8 has_shard · [u32 partitions · str partitioner · u32 per_shard_k ·
+//!                   u32 threads · str transport · u32 replicas ·
+//!                   u8 plan · u32 cores]
+//!   u8 dataset_kind:
+//!     0 inline:    u8 payload · u32 rows · u32 cols ·
+//!                  rows·cols × (f32 | bf16-as-u16)
+//!     1 synthetic: u32 n · u32 d · u64 seed
+//!     2 imm:       u8 part · u8 state · u32 samples · u64 seed
 //! ```
 //!
 //! Strings are `u32 len + UTF-8 bytes`. A `bf16` payload ships each
@@ -64,6 +82,7 @@
 //! plan handle (see [`crate::shard::transport::ExecCtx`]).
 
 use crate::engine::{KernelImpl, Precision, ShardPlan};
+use crate::imm::{Part, ProcessState};
 use crate::linalg::gemm::{bf16_round, CpuKernel};
 use crate::linalg::Matrix;
 use crate::runtime::artifact::PlanBuckets;
@@ -71,8 +90,10 @@ use std::fmt;
 
 /// Frame magic: "EBCW".
 pub const WIRE_MAGIC: [u8; 4] = *b"EBCW";
-/// Current (and only) wire format version.
-pub const WIRE_VERSION: u16 = 1;
+/// Current wire format version. v2 added the request frame kind
+/// (job/result payload layouts are unchanged from v1, but v1 decoders
+/// reject v2 frames by version, so the bump is a conscious break).
+pub const WIRE_VERSION: u16 = 2;
 /// Fixed frame header size (magic + version + kind + reserved + len).
 pub const HEADER_LEN: usize = 12;
 /// Trailing checksum size.
@@ -83,6 +104,9 @@ pub const TRAILER_LEN: usize = 4;
 pub enum FrameKind {
     Job,
     Result,
+    /// A full summarize request (v2) — what a client sends the socket
+    /// leg's listener to start a run.
+    Request,
 }
 
 impl FrameKind {
@@ -90,6 +114,7 @@ impl FrameKind {
         match self {
             FrameKind::Job => 1,
             FrameKind::Result => 2,
+            FrameKind::Request => 3,
         }
     }
 }
@@ -292,6 +317,89 @@ pub struct ShardResultMsg {
     pub oracle_work: u64,
 }
 
+/// Serialized shard configuration of a [`WireRequest`] — mirrors
+/// [`crate::api::ShardSpec`] field for field.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireShardSpec {
+    /// Shard count P.
+    pub partitions: u32,
+    /// Partitioner registry id ([`crate::shard::PARTITIONERS`]).
+    pub partitioner: String,
+    /// Exemplars per shard in stage 1 (0 = final k).
+    pub per_shard_k: u32,
+    /// Stage-1 worker threads (0 = auto).
+    pub threads: u32,
+    /// Transport registry id ([`crate::shard::TRANSPORTS`]).
+    pub transport: String,
+    /// Replica count for replica transports.
+    pub replicas: u32,
+    /// Whether to pre-plan the run (bucket shape + core split).
+    pub plan: bool,
+    /// Core budget for planned runs (0 = auto).
+    pub cores: u32,
+}
+
+/// Serialized dataset reference of a [`WireRequest`] — mirrors
+/// [`crate::api::DatasetRef`]. Inline matrices ship at the declared
+/// payload precision exactly like job sub-matrices do.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireDataset {
+    /// The ground matrix itself, shipped in the frame.
+    Inline { payload: Precision, data: Matrix },
+    /// A standard-normal synthetic matrix the executor generates.
+    Synthetic { n: u32, d: u32, seed: u64 },
+    /// An injection-molding campaign the executor generates.
+    Imm { part: Part, state: ProcessState, samples: u32, seed: u64 },
+}
+
+/// The wire form of a full [`crate::api::SummarizeRequest`] (v2,
+/// kind 3): everything an executor — today's loopback leg, tomorrow's
+/// TCP listener — needs to reproduce a local run. Only **registry**
+/// optimizers serialize (the remote-rebuild contract on
+/// [`ShardJobMsg::optimizer`] applies to whole requests too), which is
+/// why [`crate::api::SummarizeRequest::validate`] rejects non-registry
+/// optimizers whenever the transport is not `inproc`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    /// Summary cardinality.
+    pub k: u32,
+    /// Candidate-batch width for the batched-greedy family.
+    pub batch: u32,
+    /// Optimizer registry id ([`crate::optim::ALGORITHMS`]).
+    pub optimizer: String,
+    /// Oracle compute precision.
+    pub precision: Precision,
+    /// CPU kernel backend for CPU/fallback oracles.
+    pub cpu_kernel: CpuKernel,
+    /// Oracle kernel threads (0 = auto).
+    pub threads: u32,
+    /// Seed for partitioners / synthetic data.
+    pub seed: u64,
+    /// Run a single-node reference pass for quality accounting.
+    pub with_baseline: bool,
+    /// Sharding configuration; `None` = single-node run.
+    pub shard: Option<WireShardSpec>,
+    /// What to summarize.
+    pub dataset: WireDataset,
+}
+
+fn part_code(p: Part) -> u8 {
+    match p {
+        Part::Cover => 0,
+        Part::Plate => 1,
+    }
+}
+
+fn state_code(s: ProcessState) -> u8 {
+    match s {
+        ProcessState::StartUp => 0,
+        ProcessState::Stable => 1,
+        ProcessState::Downtimes => 2,
+        ProcessState::Regrind => 3,
+        ProcessState::Doe => 4,
+    }
+}
+
 // ------------------------------------------------------------ encoding
 
 fn put_u16(buf: &mut Vec<u8>, v: u16) {
@@ -400,22 +508,28 @@ pub fn encode_job(job: &ShardJobMsg) -> Vec<u8> {
     for &id in &job.ground_ids {
         put_u64(&mut p, id);
     }
-    put_u32(&mut p, job.data.rows() as u32);
-    put_u32(&mut p, job.data.cols() as u32);
-    match job.payload {
+    put_matrix(&mut p, job.payload, &job.data);
+    seal_frame(FrameKind::Job, p)
+}
+
+/// `u32 rows · u32 cols · rows·cols × (f32 | bf16)` — shared by job and
+/// request frames.
+fn put_matrix(p: &mut Vec<u8>, payload: Precision, m: &Matrix) {
+    put_u32(p, m.rows() as u32);
+    put_u32(p, m.cols() as u32);
+    match payload {
         Precision::F32 => {
-            for &v in job.data.data() {
-                put_f32(&mut p, v);
+            for &v in m.data() {
+                put_f32(p, v);
             }
         }
         Precision::Bf16 => {
-            for &v in job.data.data() {
+            for &v in m.data() {
                 let hi = (bf16_round(v).to_bits() >> 16) as u16;
-                put_u16(&mut p, hi);
+                put_u16(p, hi);
             }
         }
     }
-    seal_frame(FrameKind::Job, p)
 }
 
 /// Encode a result message into one sealed frame.
@@ -436,6 +550,54 @@ pub fn encode_result(res: &ShardResultMsg) -> Vec<u8> {
     put_u64(&mut p, res.oracle_calls);
     put_u64(&mut p, res.oracle_work);
     seal_frame(FrameKind::Result, p)
+}
+
+/// Encode a request message into one sealed frame.
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let mut p = Vec::with_capacity(96);
+    put_u32(&mut p, req.k);
+    put_u32(&mut p, req.batch);
+    put_str(&mut p, &req.optimizer);
+    p.push(precision_code(req.precision));
+    p.push(cpu_kernel_code(req.cpu_kernel));
+    put_u32(&mut p, req.threads);
+    put_u64(&mut p, req.seed);
+    p.push(req.with_baseline as u8);
+    match &req.shard {
+        Some(s) => {
+            p.push(1);
+            put_u32(&mut p, s.partitions);
+            put_str(&mut p, &s.partitioner);
+            put_u32(&mut p, s.per_shard_k);
+            put_u32(&mut p, s.threads);
+            put_str(&mut p, &s.transport);
+            put_u32(&mut p, s.replicas);
+            p.push(s.plan as u8);
+            put_u32(&mut p, s.cores);
+        }
+        None => p.push(0),
+    }
+    match &req.dataset {
+        WireDataset::Inline { payload, data } => {
+            p.push(0);
+            p.push(precision_code(*payload));
+            put_matrix(&mut p, *payload, data);
+        }
+        WireDataset::Synthetic { n, d, seed } => {
+            p.push(1);
+            put_u32(&mut p, *n);
+            put_u32(&mut p, *d);
+            put_u64(&mut p, *seed);
+        }
+        WireDataset::Imm { part, state, samples, seed } => {
+            p.push(2);
+            p.push(part_code(*part));
+            p.push(state_code(*state));
+            put_u32(&mut p, *samples);
+            put_u64(&mut p, *seed);
+        }
+    }
+    seal_frame(FrameKind::Request, p)
 }
 
 // ------------------------------------------------------------ decoding
@@ -528,6 +690,31 @@ impl<'a> Reader<'a> {
         }
     }
 
+    fn part(&mut self, field: &'static str) -> Result<Part, WireError> {
+        match self.u8()? {
+            0 => Ok(Part::Cover),
+            1 => Ok(Part::Plate),
+            other => Err(WireError::Malformed {
+                field,
+                detail: format!("unknown part code {other}"),
+            }),
+        }
+    }
+
+    fn state(&mut self, field: &'static str) -> Result<ProcessState, WireError> {
+        match self.u8()? {
+            0 => Ok(ProcessState::StartUp),
+            1 => Ok(ProcessState::Stable),
+            2 => Ok(ProcessState::Downtimes),
+            3 => Ok(ProcessState::Regrind),
+            4 => Ok(ProcessState::Doe),
+            other => Err(WireError::Malformed {
+                field,
+                detail: format!("unknown process state code {other}"),
+            }),
+        }
+    }
+
     fn flag(&mut self, field: &'static str) -> Result<bool, WireError> {
         match self.u8()? {
             0 => Ok(false),
@@ -574,6 +761,7 @@ pub fn frame_kind(frame: &[u8]) -> Result<FrameKind, WireError> {
     let kind = match frame[6] {
         1 => FrameKind::Job,
         2 => FrameKind::Result,
+        3 => FrameKind::Request,
         other => return Err(WireError::UnknownKind(other)),
     };
     let declared = u32::from_le_bytes(frame[8..12].try_into().unwrap()) as usize;
@@ -726,6 +914,106 @@ pub fn decode_result(frame: &[u8]) -> Result<ShardResultMsg, WireError> {
         wall_seconds,
         oracle_calls,
         oracle_work,
+    })
+}
+
+/// Decode a request frame. Total: corrupted input yields a
+/// [`WireError`]. Decoding is purely syntactic — semantic checks
+/// (registry membership, k ≤ n, ...) belong to
+/// [`crate::api::SummarizeRequest::validate`].
+pub fn decode_request(frame: &[u8]) -> Result<WireRequest, WireError> {
+    let mut r = Reader::new(open_frame(frame, FrameKind::Request)?);
+    let k = r.u32()?;
+    let batch = r.u32()?;
+    let optimizer = r.str("optimizer")?;
+    let precision = r.precision("precision")?;
+    let cpu_kernel = r.cpu_kernel("cpu_kernel")?;
+    let threads = r.u32()?;
+    let seed = r.u64()?;
+    let with_baseline = r.flag("with_baseline")?;
+    let shard = if r.flag("has_shard")? {
+        Some(WireShardSpec {
+            partitions: r.u32()?,
+            partitioner: r.str("shard.partitioner")?,
+            per_shard_k: r.u32()?,
+            threads: r.u32()?,
+            transport: r.str("shard.transport")?,
+            replicas: r.u32()?,
+            plan: r.flag("shard.plan")?,
+            cores: r.u32()?,
+        })
+    } else {
+        None
+    };
+    let dataset = match r.u8()? {
+        0 => {
+            let payload = r.precision("dataset.payload")?;
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            let elems = rows.checked_mul(cols).ok_or_else(|| WireError::Malformed {
+                field: "dataset.rows",
+                detail: format!("{rows}x{cols} overflows"),
+            })?;
+            let elem_size = match payload {
+                Precision::F32 => 4,
+                Precision::Bf16 => 2,
+            };
+            let need = elems.checked_mul(elem_size).ok_or_else(|| WireError::Malformed {
+                field: "dataset.data",
+                detail: format!("{elems} elements overflow"),
+            })?;
+            if need != r.remaining() {
+                return Err(WireError::Malformed {
+                    field: "dataset.data",
+                    detail: format!("expected {need} data bytes, have {}", r.remaining()),
+                });
+            }
+            let mut data = Vec::with_capacity(elems);
+            match payload {
+                Precision::F32 => {
+                    for _ in 0..elems {
+                        data.push(r.f32()?);
+                    }
+                }
+                Precision::Bf16 => {
+                    for _ in 0..elems {
+                        data.push(f32::from_bits((r.u16()? as u32) << 16));
+                    }
+                }
+            }
+            WireDataset::Inline { payload, data: Matrix::from_vec(rows, cols, data) }
+        }
+        1 => WireDataset::Synthetic { n: r.u32()?, d: r.u32()?, seed: r.u64()? },
+        2 => WireDataset::Imm {
+            part: r.part("dataset.part")?,
+            state: r.state("dataset.state")?,
+            samples: r.u32()?,
+            seed: r.u64()?,
+        },
+        other => {
+            return Err(WireError::Malformed {
+                field: "dataset_kind",
+                detail: format!("unknown dataset kind {other}"),
+            })
+        }
+    };
+    if r.remaining() != 0 {
+        return Err(WireError::Malformed {
+            field: "payload",
+            detail: format!("{} trailing bytes", r.remaining()),
+        });
+    }
+    Ok(WireRequest {
+        k,
+        batch,
+        optimizer,
+        precision,
+        cpu_kernel,
+        threads,
+        seed,
+        with_baseline,
+        shard,
+        dataset,
     })
 }
 
@@ -903,7 +1191,95 @@ mod tests {
             let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
             let _ = decode_job(&bytes);
             let _ = decode_result(&bytes);
+            let _ = decode_request(&bytes);
             let _ = frame_kind(&bytes);
+        }
+    }
+
+    fn request(dataset: WireDataset) -> WireRequest {
+        WireRequest {
+            k: 5,
+            batch: 512,
+            optimizer: "greedy".into(),
+            precision: Precision::F32,
+            cpu_kernel: CpuKernel::Blocked,
+            threads: 2,
+            seed: 0xEBC,
+            with_baseline: true,
+            shard: Some(WireShardSpec {
+                partitions: 4,
+                partitioner: "locality".into(),
+                per_shard_k: 0,
+                threads: 0,
+                transport: "loopback".into(),
+                replicas: 3,
+                plan: true,
+                cores: 8,
+            }),
+            dataset,
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_every_dataset_kind() {
+        use crate::imm::{Part, ProcessState};
+        let mut rng = Rng::new(11);
+        let datasets = [
+            WireDataset::Inline {
+                payload: Precision::F32,
+                data: Matrix::random_normal(6, 3, &mut rng),
+            },
+            WireDataset::Synthetic { n: 500, d: 32, seed: 7 },
+            WireDataset::Imm {
+                part: Part::Plate,
+                state: ProcessState::Regrind,
+                samples: 256,
+                seed: 9,
+            },
+        ];
+        for dataset in datasets {
+            let mut req = request(dataset);
+            let frame = encode_request(&req);
+            assert_eq!(frame_kind(&frame).unwrap(), FrameKind::Request);
+            assert_eq!(decode_request(&frame).unwrap(), req);
+            // single-node requests round-trip too
+            req.shard = None;
+            let frame = encode_request(&req);
+            assert_eq!(decode_request(&frame).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn request_bf16_inline_dataset_equals_demoted() {
+        let mut rng = Rng::new(13);
+        let m = Matrix::random_normal(4, 3, &mut rng);
+        let req = request(WireDataset::Inline {
+            payload: Precision::Bf16,
+            data: m.clone(),
+        });
+        let frame = encode_request(&req);
+        let back = decode_request(&frame).unwrap();
+        let want: Vec<f32> = m.data().iter().map(|&v| bf16_round(v)).collect();
+        match &back.dataset {
+            WireDataset::Inline { payload: Precision::Bf16, data } => {
+                assert_eq!(data.data(), &want[..]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // demotion is idempotent: the re-encode is byte-stable
+        assert_eq!(encode_request(&back), frame);
+    }
+
+    #[test]
+    fn request_kind_confusion_and_truncation_are_typed() {
+        let rf = encode_request(&request(WireDataset::Synthetic { n: 10, d: 2, seed: 1 }));
+        assert!(matches!(decode_job(&rf), Err(WireError::Malformed { field: "kind", .. })));
+        assert!(matches!(decode_result(&rf), Err(WireError::Malformed { field: "kind", .. })));
+        for len in 0..rf.len() {
+            match decode_request(&rf[..len]) {
+                Err(WireError::TooShort { .. }) | Err(WireError::LengthMismatch { .. }) => {}
+                other => panic!("truncated to {len}: {other:?}"),
+            }
         }
     }
 }

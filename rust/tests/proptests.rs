@@ -524,6 +524,218 @@ fn prop_transport_identity_inproc_loopback_direct() {
     );
 }
 
+// ------------------------------------------------------ api façade
+
+#[test]
+fn prop_api_request_roundtrips_wire_losslessly() {
+    // satellite invariant: any builder-made registry request survives
+    // the WireRequest codec — f32 inline payloads byte-stable on
+    // re-encode, bf16 payloads equal to the demoted matrix
+    use ebc::api::{DatasetRef, ShardSpec, SummarizeRequest};
+    use ebc::shard::wire::{decode_request, encode_request};
+    forall(
+        "api request -> WireRequest -> api request is lossless",
+        &Config { cases: 24, seed: 0xA4B1 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 20, 5, 2.0);
+            let k = 1 + rng.below(n.min(5));
+            let alg = ["greedy", "lazy_greedy", "three_sieves"][rng.below(3)];
+            let partitioner = PARTITIONERS[rng.below(PARTITIONERS.len())];
+            let sharded = rng.below(2) == 1;
+            let shards = 1 + rng.below(5);
+            let bf16 = rng.below(2) == 1;
+            (n, d, data, k, alg, partitioner, sharded, shards, bf16)
+        },
+        |(n, d, data, k, alg, partitioner, sharded, shards, bf16)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let mut req = SummarizeRequest::new(DatasetRef::Inline(Arc::clone(&v)), *k)
+                .optimizer(alg)
+                .batch(64)
+                .seed(9)
+                .with_baseline(*sharded);
+            if *sharded {
+                req = req.sharded(
+                    ShardSpec::new(*shards).partitioner(partitioner).transport("loopback"),
+                );
+            }
+            req.validate().map_err(|e| format!("validate: {e}"))?;
+
+            // f32 payload: lossless and byte-stable
+            let wire = req.to_wire(Precision::F32).map_err(|e| e.to_string())?;
+            let frame = encode_request(&wire);
+            let back = decode_request(&frame).map_err(|e| e.to_string())?;
+            let rebuilt = SummarizeRequest::from_wire(&back);
+            if rebuilt != req {
+                return Err(format!("f32 round trip drifted: {rebuilt:?}"));
+            }
+            if encode_request(&back) != frame {
+                return Err("f32 re-encode not byte-stable".into());
+            }
+
+            if *bf16 {
+                // bf16 payload: the rebuilt dataset equals the demoted one
+                let wire = req.to_wire(Precision::Bf16).map_err(|e| e.to_string())?;
+                let frame = encode_request(&wire);
+                let back = decode_request(&frame).map_err(|e| e.to_string())?;
+                let rebuilt = SummarizeRequest::from_wire(&back);
+                let got = match &rebuilt.dataset {
+                    DatasetRef::Inline(m) => m.data().to_vec(),
+                    other => return Err(format!("dataset kind drifted: {other:?}")),
+                };
+                let want: Vec<f32> = v
+                    .data()
+                    .iter()
+                    .map(|&x| ebc::linalg::gemm::bf16_round(x))
+                    .collect();
+                if got != want {
+                    return Err("bf16 payload != demoted matrix".into());
+                }
+                if encode_request(&back) != frame {
+                    return Err("bf16 re-encode not byte-stable".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_api_path_selection_identical_to_direct_path() {
+    // tentpole invariant: a request executed through api::Service
+    // selects the identical exemplars (and f bits) as the directly
+    // constructed ShardedSummarizer, for every partitioner and both
+    // transports
+    use ebc::api::{DatasetRef, Service, ShardSpec, SummarizeRequest};
+    forall(
+        "api::Service::summarize == direct ShardedSummarizer (all partitioners)",
+        &Config { cases: 6, seed: 0xFACA },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 40, 5, 2.0);
+            let shards = 1 + rng.below(5);
+            let k = 1 + rng.below(4);
+            (n, d, data, shards, k)
+        },
+        |(n, d, data, shards, k)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let service = Service::cpu();
+            // the direct path mirrors the service's cpu factory knobs
+            let factory = |m: SharedMatrix, spec: &OracleSpec| {
+                Box::new(ebc::submodular::CpuOracle::with_kernel_shared(
+                    m,
+                    CpuKernel::Scalar,
+                    Precision::F32,
+                    spec.threads_or(1),
+                )) as Box<dyn Oracle>
+            };
+            let greedy = Greedy { batch: 1024 };
+            for name in PARTITIONERS {
+                for transport in ["inproc", "loopback"] {
+                    let part = build_partitioner(name, 21).expect("known partitioner");
+                    let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, *shards);
+                    let lb;
+                    if transport == "loopback" {
+                        lb = LoopbackReplicaTransport::with_replicas(2, 1);
+                        s.transport = Some(&lb);
+                    }
+                    let direct = s.summarize(&v, &factory, *k);
+
+                    let req = SummarizeRequest::new(DatasetRef::Inline(Arc::clone(&v)), *k)
+                        .cpu_kernel(CpuKernel::Scalar)
+                        .threads(1)
+                        .seed(21)
+                        .sharded(
+                            ShardSpec::new(*shards)
+                                .partitioner(name)
+                                .transport(transport)
+                                .replicas(2),
+                        );
+                    let resp = service.summarize(&req).map_err(|e| e.to_string())?;
+
+                    let want: Vec<u64> =
+                        direct.merged.indices.iter().map(|&i| i as u64).collect();
+                    if resp.exemplars != want {
+                        return Err(format!(
+                            "{name}/{transport}: api {:?} != direct {want:?}",
+                            resp.exemplars
+                        ));
+                    }
+                    if resp.f_final.to_bits() != direct.merged.f_final.to_bits() {
+                        return Err(format!(
+                            "{name}/{transport}: f {} != {}",
+                            resp.f_final, direct.merged.f_final
+                        ));
+                    }
+                    if resp.provenance.transport != Some(transport) {
+                        return Err(format!(
+                            "{name}: provenance says {:?}",
+                            resp.provenance.transport
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_invalid_requests_yield_typed_errors_never_panics() {
+    // satellite invariant: malformed requests come back as ApiError —
+    // k = 0, k > n, unknown optimizer, and the remote-rebuild contract
+    // (custom optimizer over a non-inproc transport)
+    use ebc::api::{ApiError, DatasetRef, Service, ShardSpec, SummarizeRequest};
+    forall(
+        "invalid requests -> typed ApiError",
+        &Config { cases: 16, seed: 0xBAD1 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 20, 4, 2.0);
+            let shards = 1 + rng.below(4);
+            (n, d, data, shards)
+        },
+        |(n, d, data, shards)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let service = Service::cpu();
+            let ds = DatasetRef::Inline(Arc::clone(&v));
+
+            let mut zero_k = SummarizeRequest::new(ds.clone(), 1);
+            zero_k.k = 0;
+            match service.summarize(&zero_k) {
+                Err(ApiError::Invalid { field: "k", .. }) => {}
+                other => return Err(format!("k=0: {other:?}")),
+            }
+            match service.summarize(&SummarizeRequest::new(ds.clone(), n + 1)) {
+                Err(ApiError::Invalid { field: "k", .. }) => {}
+                other => return Err(format!("k>n: {other:?}")),
+            }
+            match service.summarize(&SummarizeRequest::new(ds.clone(), 1).optimizer("psychic")) {
+                Err(ApiError::UnknownName { field: "optimizer", .. }) => {}
+                other => return Err(format!("unknown optimizer: {other:?}")),
+            }
+            let custom: Arc<dyn ebc::optim::Optimizer> =
+                Arc::new(SieveStreaming::default());
+            let remote_custom = SummarizeRequest::new(ds.clone(), 1)
+                .custom_optimizer(Arc::clone(&custom))
+                .sharded(ShardSpec::new(*shards).transport("loopback"));
+            match service.summarize(&remote_custom) {
+                Err(ApiError::NonRegistryOptimizer { transport }) => {
+                    if transport != "loopback" {
+                        return Err(format!("wrong transport in error: {transport}"));
+                    }
+                }
+                other => return Err(format!("custom+loopback: {other:?}")),
+            }
+            // ...while the same custom optimizer runs fine in-process
+            let local_custom = SummarizeRequest::new(ds.clone(), 1)
+                .custom_optimizer(custom)
+                .sharded(ShardSpec::new(*shards));
+            service
+                .summarize(&local_custom)
+                .map_err(|e| format!("custom+inproc should run: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
 fn arb_job(rng: &mut ebc::util::rng::Rng, payload: Precision) -> ShardJobMsg {
     let rows = 1 + rng.below(12);
     let cols = 1 + rng.below(6);

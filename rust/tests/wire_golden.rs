@@ -9,10 +9,12 @@
 //! unknown-version frames yield typed [`WireError`]s, never panics.
 
 use ebc::engine::{KernelImpl, Precision};
+use ebc::imm::{Part, ProcessState};
 use ebc::linalg::{CpuKernel, Matrix};
 use ebc::shard::wire::{
-    crc32, decode_job, decode_result, encode_job, encode_result, frame_kind, FrameKind,
-    ShardJobMsg, ShardResultMsg, WireError, WirePlan, HEADER_LEN, TRAILER_LEN, WIRE_VERSION,
+    crc32, decode_job, decode_request, decode_result, encode_job, encode_request, encode_result,
+    frame_kind, FrameKind, ShardJobMsg, ShardResultMsg, WireDataset, WireError, WirePlan,
+    WireRequest, WireShardSpec, HEADER_LEN, TRAILER_LEN, WIRE_VERSION,
 };
 
 fn unhex(parts: &[&str]) -> Vec<u8> {
@@ -26,10 +28,10 @@ fn unhex(parts: &[&str]) -> Vec<u8> {
 
 /// Golden 1: an f32-payload job of an unplanned run (threads pinned).
 const JOB_F32: &[&str] = &[
-    "45424357010001005c0000000100000002000000100000000600000067726565",
+    "45424357020001005c0000000100000002000000100000000600000067726565",
     "6479000001010102000000000300000003000000000000000500000000000000",
     "080000000000000003000000020000000000803f000000c00000003f00005040",
-    "000040bf000080403154c62f",
+    "000040bf00008040961f66b1",
 ];
 
 fn job_f32() -> ShardJobMsg {
@@ -51,10 +53,10 @@ fn job_f32() -> ShardJobMsg {
 
 /// Golden 2: a bf16-payload job of a planned run (serialized plan core).
 const JOB_BF16_PLANNED: &[&str] = &[
-    "45424357010001006c0000000000000001000000080000000b0000006c617a79",
+    "45424357020001006c0000000000000001000000080000000b0000006c617a79",
     "5f67726565647901010000000000000001400000000800000004000000030000",
     "0001010108000000040000000200000008000000020000000000000000000000",
-    "02000000000000000200000002000000803f00c0203e404034caea42",
+    "02000000000000000200000002000000803f00c0203e40400c614240",
 ];
 
 fn job_bf16_planned() -> ShardJobMsg {
@@ -89,9 +91,9 @@ fn job_bf16_planned() -> ShardJobMsg {
 
 /// Golden 3: a result frame.
 const RESULT: &[&str] = &[
-    "454243570100020050000000020000000a000000030000000700000000000000",
+    "454243570200020050000000020000000a000000030000000700000000000000",
     "03000000000000000900000000000000030000000000003f0000403f0000803f",
-    "0000803f000000000000d03f2a00000000000000d2040000000000005ced0156",
+    "0000803f000000000000d03f2a00000000000000d20400000000000077354eae",
 ];
 
 fn result_msg() -> ShardResultMsg {
@@ -104,6 +106,65 @@ fn result_msg() -> ShardResultMsg {
         wall_seconds: 0.25,
         oracle_calls: 42,
         oracle_work: 1234,
+    }
+}
+
+/// Golden 4 (v2): a planned, sharded request over a synthetic dataset
+/// reference — the frame a client hands the future TCP listener.
+const REQUEST_SYNTHETIC: &[&str] = &[
+    "4542435702000300600000000500000000020000060000006772656564790001",
+    "02000000bc0e000000000000010104000000080000006c6f63616c6974790000",
+    "000000000000080000006c6f6f706261636b03000000010800000001e8030000",
+    "200000002a00000000000000a904221e",
+];
+
+fn request_synthetic() -> WireRequest {
+    WireRequest {
+        k: 5,
+        batch: 512,
+        optimizer: "greedy".into(),
+        precision: Precision::F32,
+        cpu_kernel: CpuKernel::Blocked,
+        threads: 2,
+        seed: 0xEBC,
+        with_baseline: true,
+        shard: Some(WireShardSpec {
+            partitions: 4,
+            partitioner: "locality".into(),
+            per_shard_k: 0,
+            threads: 0,
+            transport: "loopback".into(),
+            replicas: 3,
+            plan: true,
+            cores: 8,
+        }),
+        dataset: WireDataset::Synthetic { n: 1000, d: 32, seed: 42 },
+    }
+}
+
+/// Golden 5 (v2): a single-node request with an inline bf16 dataset
+/// (every value bf16-representable, so the frame is lossless).
+const REQUEST_INLINE_BF16: &[&str] = &[
+    "45424357020003004100000002000000400000000f00000073696576655f7374",
+    "7265616d696e6701000000000007000000000000000000000102000000030000",
+    "00803f00c0203e4040003f80be4e1bb1c1",
+];
+
+fn request_inline_bf16() -> WireRequest {
+    WireRequest {
+        k: 2,
+        batch: 64,
+        optimizer: "sieve_streaming".into(),
+        precision: Precision::Bf16,
+        cpu_kernel: CpuKernel::Scalar,
+        threads: 0,
+        seed: 7,
+        with_baseline: false,
+        shard: None,
+        dataset: WireDataset::Inline {
+            payload: Precision::Bf16,
+            data: Matrix::from_vec(2, 3, vec![1.0, -2.0, 0.15625, 3.0, 0.5, -0.25]),
+        },
     }
 }
 
@@ -126,6 +187,16 @@ fn encode_reproduces_goldens_byte_for_byte() {
         unhex(RESULT),
         "result frame drifted — bump WIRE_VERSION and regenerate goldens"
     );
+    assert_eq!(
+        encode_request(&request_synthetic()),
+        unhex(REQUEST_SYNTHETIC),
+        "synthetic request frame drifted — bump WIRE_VERSION and regenerate goldens"
+    );
+    assert_eq!(
+        encode_request(&request_inline_bf16()),
+        unhex(REQUEST_INLINE_BF16),
+        "inline-bf16 request frame drifted — bump WIRE_VERSION and regenerate goldens"
+    );
 }
 
 #[test]
@@ -133,6 +204,11 @@ fn decode_reproduces_the_expected_structs() {
     assert_eq!(decode_job(&unhex(JOB_F32)).unwrap(), job_f32());
     assert_eq!(decode_job(&unhex(JOB_BF16_PLANNED)).unwrap(), job_bf16_planned());
     assert_eq!(decode_result(&unhex(RESULT)).unwrap(), result_msg());
+    assert_eq!(decode_request(&unhex(REQUEST_SYNTHETIC)).unwrap(), request_synthetic());
+    assert_eq!(
+        decode_request(&unhex(REQUEST_INLINE_BF16)).unwrap(),
+        request_inline_bf16()
+    );
 }
 
 #[test]
@@ -140,16 +216,41 @@ fn frame_kind_classifies_goldens() {
     assert_eq!(frame_kind(&unhex(JOB_F32)).unwrap(), FrameKind::Job);
     assert_eq!(frame_kind(&unhex(JOB_BF16_PLANNED)).unwrap(), FrameKind::Job);
     assert_eq!(frame_kind(&unhex(RESULT)).unwrap(), FrameKind::Result);
+    assert_eq!(frame_kind(&unhex(REQUEST_SYNTHETIC)).unwrap(), FrameKind::Request);
+    assert_eq!(frame_kind(&unhex(REQUEST_INLINE_BF16)).unwrap(), FrameKind::Request);
 }
 
 #[test]
 fn golden_checksums_verify_independently() {
     // the last four bytes of every golden are the CRC-32 of the rest
-    for golden in [&unhex(JOB_F32), &unhex(JOB_BF16_PLANNED), &unhex(RESULT)] {
+    for golden in [
+        &unhex(JOB_F32),
+        &unhex(JOB_BF16_PLANNED),
+        &unhex(RESULT),
+        &unhex(REQUEST_SYNTHETIC),
+        &unhex(REQUEST_INLINE_BF16),
+    ] {
         let body = &golden[..golden.len() - TRAILER_LEN];
         let stored = u32::from_le_bytes(golden[golden.len() - TRAILER_LEN..].try_into().unwrap());
         assert_eq!(crc32(body), stored);
     }
+}
+
+#[test]
+fn imm_dataset_requests_roundtrip() {
+    // not golden-pinned (the shape is covered by the goldens above) but
+    // the part/state enum codes must survive the trip
+    let req = WireRequest {
+        dataset: WireDataset::Imm {
+            part: Part::Plate,
+            state: ProcessState::Downtimes,
+            samples: 3524,
+            seed: 7,
+        },
+        ..request_synthetic()
+    };
+    let frame = encode_request(&req);
+    assert_eq!(decode_request(&frame).unwrap(), req);
 }
 
 // ------------------------------------------------------------ corruption
@@ -173,15 +274,24 @@ fn truncated_frames_are_typed_errors_never_panics() {
 
 #[test]
 fn every_bit_flip_in_every_golden_is_detected() {
-    for (golden, is_job) in [(unhex(JOB_F32), true), (unhex(RESULT), false)] {
+    enum Kind {
+        Job,
+        Result,
+        Request,
+    }
+    for (golden, kind) in [
+        (unhex(JOB_F32), Kind::Job),
+        (unhex(RESULT), Kind::Result),
+        (unhex(REQUEST_SYNTHETIC), Kind::Request),
+    ] {
         for byte in 0..golden.len() {
             for bit in 0..8 {
                 let mut bad = golden.clone();
                 bad[byte] ^= 1 << bit;
-                let err = if is_job {
-                    decode_job(&bad).err()
-                } else {
-                    decode_result(&bad).err()
+                let err = match kind {
+                    Kind::Job => decode_job(&bad).err(),
+                    Kind::Result => decode_result(&bad).err(),
+                    Kind::Request => decode_request(&bad).err(),
                 };
                 assert!(err.is_some(), "flip byte {byte} bit {bit} went undetected");
             }
@@ -191,17 +301,20 @@ fn every_bit_flip_in_every_golden_is_detected() {
 
 #[test]
 fn unknown_version_frames_are_rejected_up_front() {
-    // a frame from a hypothetical v2 encoder: version bytes patched,
-    // checksum re-sealed so *only* the version check can reject it
-    let mut future = unhex(JOB_F32);
-    future[4..6].copy_from_slice(&2u16.to_le_bytes());
-    let body_len = future.len() - TRAILER_LEN;
-    let crc = crc32(&future[..body_len]);
-    future[body_len..].copy_from_slice(&crc.to_le_bytes());
-    assert_eq!(
-        decode_job(&future).unwrap_err(),
-        WireError::UnsupportedVersion { found: 2, supported: WIRE_VERSION }
-    );
+    // frames from a hypothetical v3 encoder AND from the retired v1:
+    // version bytes patched, checksum re-sealed so *only* the version
+    // check can reject them
+    for found in [1u16, 3] {
+        let mut other = unhex(JOB_F32);
+        other[4..6].copy_from_slice(&found.to_le_bytes());
+        let body_len = other.len() - TRAILER_LEN;
+        let crc = crc32(&other[..body_len]);
+        other[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(
+            decode_job(&other).unwrap_err(),
+            WireError::UnsupportedVersion { found, supported: WIRE_VERSION }
+        );
+    }
 }
 
 #[test]
@@ -258,8 +371,9 @@ fn corrupt_enum_bytes_inside_a_resealed_payload_are_malformed() {
 }
 
 #[test]
-fn wire_version_is_one_until_consciously_bumped() {
-    // the goldens above encode version 1; this pin makes a version bump
-    // show up here too, next to the regeneration instructions
-    assert_eq!(WIRE_VERSION, 1);
+fn wire_version_is_two_until_consciously_bumped() {
+    // the goldens above encode version 2 (v1 + the request frame kind);
+    // this pin makes a version bump show up here too, next to the
+    // regeneration instructions
+    assert_eq!(WIRE_VERSION, 2);
 }
