@@ -193,7 +193,7 @@ fn ablation_drain() {
         while c.queue_len() > 0 {
             c.tick();
         }
-        (t0.elapsed().as_secs_f64(), c.metrics.evicted)
+        (t0.elapsed().as_secs_f64(), c.metrics.evicted.get())
     };
     let (t_a, ev_a) = run(true);
     let (t_f, ev_f) = run(false);

@@ -206,6 +206,11 @@ pub struct SummarizeRequest {
     /// Also run a single-node reference pass of the same optimizer for
     /// quality/speedup accounting (sharded runs only).
     pub with_baseline: bool,
+    /// Attach the request's span tree to the response provenance
+    /// (see [`crate::obs`]). Local-only: the flag never crosses the
+    /// wire — remote executors keep their own flight recorders, and
+    /// the v2 request frame layout stays frozen.
+    pub trace: bool,
 }
 
 impl SummarizeRequest {
@@ -222,6 +227,7 @@ impl SummarizeRequest {
             shard: None,
             seed: 0xEBC,
             with_baseline: false,
+            trace: false,
         }
     }
 
@@ -270,6 +276,13 @@ impl SummarizeRequest {
 
     pub fn with_baseline(mut self, with_baseline: bool) -> SummarizeRequest {
         self.with_baseline = with_baseline;
+        self
+    }
+
+    /// Ask for the span tree in the response provenance (local-only;
+    /// see the [`Self::trace`] field).
+    pub fn trace(mut self, trace: bool) -> SummarizeRequest {
+        self.trace = trace;
         self
     }
 
@@ -453,6 +466,9 @@ impl SummarizeRequest {
             }),
             seed: w.seed,
             with_baseline: w.with_baseline,
+            // local-only knob: a remote executor's spans stay in its
+            // own flight recorder rather than shipping back
+            trace: false,
         }
     }
 }

@@ -49,6 +49,11 @@ pub struct Provenance {
     /// Most stage-1 job payloads alive at once (bounded by transport
     /// concurrency — see [`crate::shard::JobSource`]).
     pub peak_jobs_held: usize,
+    /// The request's span tree (children after parents is not
+    /// guaranteed; sort key is start time). Populated only when the
+    /// request set its `trace` knob and span recording is enabled —
+    /// see [`crate::obs`].
+    pub trace: Option<Vec<crate::obs::SpanRecord>>,
 }
 
 /// The single-node reference run of a `with_baseline` request.

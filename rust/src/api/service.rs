@@ -12,6 +12,7 @@ use crate::engine::{
     Engine, EngineConfig, OracleSpec, PlanRequest, PlanSource, Precision, ShardPlan, XlaOracle,
 };
 use crate::linalg::{CpuKernel, Matrix, SharedMatrix};
+use crate::obs;
 use crate::optim::{build_optimizer, Optimizer, ALGORITHMS};
 use crate::runtime::Runtime;
 use crate::shard::{
@@ -19,7 +20,7 @@ use crate::shard::{
     PARTITIONERS, TRANSPORTS,
 };
 use crate::submodular::{CpuOracle, Oracle};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Backend names accepted by [`Service::from_backend`] (and therefore
 /// by every `--backend` CLI flag).
@@ -173,8 +174,10 @@ impl Service {
 
     /// Wire a streaming [`Coordinator`] to this backend: oracle factory
     /// and fleet planner built from the `[engine]` config section, the
-    /// shard transport from `[shard]` (inside `Coordinator::new`).
+    /// shard transport from `[shard]` (inside `Coordinator::new`), and
+    /// the process-wide observability layer from `[obs]`.
     pub fn coordinator(&self, cfg: ServiceConfig) -> Coordinator {
+        obs::configure(&cfg.obs.obs_config());
         let factory =
             self.oracle_factory(cfg.engine.precision, cfg.engine.cpu_kernel, cfg.engine.cpu_threads);
         let planner = self.plan_source(cfg.engine.precision, cfg.engine.cpu_kernel);
@@ -208,10 +211,47 @@ pub struct ExecEnv<'a> {
     pub transport: Option<&'a dyn ShardTransport>,
 }
 
+fn requests_total() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| {
+        obs::counter(obs::REQUESTS_TOTAL, "summarize requests executed through api::execute")
+    })
+}
+
 /// The façade's execution core: validate, then run `req` over `data`
 /// in `env`. Single entry for both the single-node and the sharded
 /// pipeline — every response carries full [`Provenance`].
+///
+/// Opens an `api.execute` span — a root when called directly, a child
+/// when a caller (e.g. a fleet query) already holds one — and, when
+/// the request's `trace` knob is set, attaches the completed span tree
+/// to the response provenance.
 pub fn execute(
+    req: &SummarizeRequest,
+    data: &SharedMatrix,
+    env: &ExecEnv,
+) -> Result<SummarizeResponse, ApiError> {
+    requests_total().inc();
+    let span = if obs::current_span() == 0 {
+        obs::root_span("api.execute")
+    } else {
+        obs::span("api.execute")
+    };
+    let span_id = span.id();
+    let result = execute_inner(req, data, env);
+    drop(span); // record before extracting: the tree is whole only now
+    match result {
+        Ok(mut resp) => {
+            if req.trace && span_id != 0 {
+                resp.provenance.trace = Some(obs::global().recorder.trace(span_id));
+            }
+            Ok(resp)
+        }
+        err => err,
+    }
+}
+
+fn execute_inner(
     req: &SummarizeRequest,
     data: &SharedMatrix,
     env: &ExecEnv,
@@ -264,6 +304,7 @@ pub fn execute(
                 shard_retries: 0,
                 shards_used: 0,
                 peak_jobs_held: 0,
+                trace: None,
             },
             baseline: None,
         });
@@ -335,6 +376,7 @@ pub fn execute(
             shard_retries: res.shard_retries,
             shards_used: res.shards_used,
             peak_jobs_held: res.peak_jobs_held,
+            trace: None,
         },
         baseline: res.baseline.map(|b| BaselineRun {
             exemplars: b.indices.iter().map(|&i| i as u64).collect(),

@@ -389,6 +389,12 @@ pub fn bench_json(
         ("workload".to_string(), workload),
         ("points".to_string(), Json::Arr(pts)),
         ("shard_split".to_string(), Json::Arr(sp)),
+        // process-wide latency histograms accumulated during the sweep
+        // (gains / gemm / engine families with p50/p90/p99)
+        (
+            "obs".to_string(),
+            crate::obs::expo::render_json(&crate::obs::global().registry.snapshot()),
+        ),
     ]))
 }
 

@@ -204,6 +204,12 @@ pub fn save_shard_json(
         .int("replicas", cfg.replicas)
         .int("seed", cfg.seed as usize)
         .val("points", Json::Arr(records))
+        // process-wide latency histograms accumulated during the sweep
+        // (merge / wire encode+decode / kernel families with p50/p99)
+        .val(
+            "obs",
+            crate::obs::expo::render_json(&crate::obs::global().registry.snapshot()),
+        )
         .build();
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {

@@ -113,6 +113,42 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// `[obs]` section: the process-wide observability layer
+/// ([`crate::obs`]): span recording + global registry shape.
+#[derive(Debug, Clone)]
+pub struct ObsSection {
+    /// Record spans into the flight recorder (metrics are unaffected).
+    pub enabled: bool,
+    /// Flight-recorder ring capacity (completed spans held before the
+    /// oldest is evicted). Applied only on the first global touch.
+    pub recorder_capacity: usize,
+    /// Log-spaced latency buckets per global-registry histogram.
+    /// Applied only on the first global touch.
+    pub hist_buckets: usize,
+}
+
+impl Default for ObsSection {
+    fn default() -> Self {
+        let d = crate::obs::ObsConfig::default();
+        ObsSection {
+            enabled: d.enabled,
+            recorder_capacity: d.recorder_capacity,
+            hist_buckets: d.hist_buckets,
+        }
+    }
+}
+
+impl ObsSection {
+    /// The [`crate::obs::configure`] argument this section describes.
+    pub fn obs_config(&self) -> crate::obs::ObsConfig {
+        crate::obs::ObsConfig {
+            enabled: self.enabled,
+            recorder_capacity: self.recorder_capacity,
+            hist_buckets: self.hist_buckets,
+        }
+    }
+}
+
 /// Full service config.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -121,6 +157,7 @@ pub struct ServiceConfig {
     pub summary: SummarySection,
     pub coordinator: CoordinatorConfig,
     pub shard: ShardSection,
+    pub obs: ObsSection,
     pub machines: Vec<String>,
 }
 
@@ -132,6 +169,7 @@ impl Default for ServiceConfig {
             summary: SummarySection::default(),
             coordinator: CoordinatorConfig::default(),
             shard: ShardSection::default(),
+            obs: ObsSection::default(),
             machines: vec![],
         }
     }
@@ -209,6 +247,11 @@ impl ServiceConfig {
                 transport,
                 replicas: pos("shard.replicas", 2)?.max(1),
             },
+            obs: ObsSection {
+                enabled: doc.bool("obs.enabled", true),
+                recorder_capacity: pos("obs.recorder_capacity", 4096)?.max(1),
+                hist_buckets: pos("obs.hist_buckets", 40)?.max(1),
+            },
             machines,
         })
     }
@@ -252,6 +295,10 @@ plan = false
 cores = 6
 transport = "loopback"
 replicas = 5
+[obs]
+enabled = false
+recorder_capacity = 512
+hist_buckets = 24
 "#,
         )
         .unwrap();
@@ -273,6 +320,9 @@ replicas = 5
         assert_eq!(c.shard.cores, 6);
         assert_eq!(c.shard.transport, "loopback");
         assert_eq!(c.shard.replicas, 5);
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.recorder_capacity, 512);
+        assert_eq!(c.obs.hist_buckets, 24);
         assert_eq!(c.machines, vec!["cover-line", "plate-line"]);
     }
 
@@ -291,6 +341,20 @@ replicas = 5
         assert_eq!(c.shard.cores, 0);
         assert_eq!(c.shard.transport, "inproc");
         assert_eq!(c.shard.replicas, 2);
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.recorder_capacity, 4096);
+        assert_eq!(c.obs.hist_buckets, 40);
+    }
+
+    #[test]
+    fn obs_section_converts_and_clamps() {
+        let doc = ConfigDoc::parse("[obs]\nrecorder_capacity = 0\nhist_buckets = 0\n").unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.obs.recorder_capacity, 1);
+        assert_eq!(c.obs.hist_buckets, 1);
+        let oc = c.obs.obs_config();
+        assert!(oc.enabled);
+        assert_eq!(oc.recorder_capacity, 1);
     }
 
     #[test]

@@ -9,10 +9,10 @@ use crate::coordinator::router::{FleetSummary, RouteResult, Router, FLEET_QUERY}
 use crate::coordinator::stream::{CycleRecord, StreamSource};
 use crate::engine::{KernelImpl, OracleSpec, PlanRequest, PlanSource, ShardPlan};
 use crate::linalg::{Matrix, SharedMatrix};
+use crate::obs;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::shard::ShardTransport;
 use crate::submodular::Oracle;
-use crate::util::timer::Profile;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -26,29 +26,107 @@ use std::time::Instant;
 /// per-oracle thread width of planned runs.
 pub type OracleFactory = Box<dyn Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Send + Sync>;
 
-/// Service-level counters.
-#[derive(Debug, Clone, Default)]
+/// Service-level counters, backed by a per-coordinator
+/// [`obs::Registry`] so each instance counts independently (tests
+/// assert exact values; a process-global registry would bleed across
+/// coordinators). The handles are cheap clones of shared atomics —
+/// read with `.get()`, bump with `.inc()`/`.add()`. The snapshot JSON
+/// shape is unchanged (see [`crate::coordinator::snapshot`]); the full
+/// registry — including latency histograms — is additionally exposed
+/// via [`CoordinatorMetrics::registry`] for Prometheus-style
+/// exposition.
 pub struct CoordinatorMetrics {
-    pub ingested: u64,
-    pub malformed: u64,
-    pub evicted: u64,
-    pub throttle_signals: u64,
-    pub refreshes: u64,
-    pub refresh_seconds_total: f64,
-    pub queries: u64,
+    registry: obs::Registry,
+    pub ingested: obs::Counter,
+    pub malformed: obs::Counter,
+    pub evicted: obs::Counter,
+    pub throttle_signals: obs::Counter,
+    pub refreshes: obs::Counter,
+    pub refresh_seconds_total: obs::FCounter,
+    pub queries: obs::Counter,
     /// Fleet-wide (`@fleet`) summary queries served.
-    pub fleet_queries: u64,
+    pub fleet_queries: obs::Counter,
     /// Non-empty shards executed by fleet queries (first stage).
-    pub shard_runs: u64,
+    pub shard_runs: obs::Counter,
     /// Cumulative wall-clock of fleet-query merge stages.
-    pub shard_merge_seconds_total: f64,
+    pub shard_merge_seconds_total: obs::FCounter,
     /// Worker replicas currently accepting shards (0 for the in-process
     /// transport; refreshed on every fleet query).
-    pub replica_count: u64,
+    pub replica_count: obs::Gauge,
     /// Shards re-queued after replica failures (cumulative).
-    pub shard_retries: u64,
+    pub shard_retries: obs::Counter,
     /// Bytes moved over the shard transport (job + result frames).
-    pub wire_bytes_total: u64,
+    pub wire_bytes_total: obs::Counter,
+    /// Latency distribution of summary refreshes (optimizer runs).
+    pub refresh_latency: obs::Histogram,
+    /// Latency distribution of ingest-batch grouping.
+    pub batch_latency: obs::Histogram,
+    /// End-to-end latency distribution of fleet queries.
+    pub fleet_latency: obs::Histogram,
+}
+
+impl Default for CoordinatorMetrics {
+    fn default() -> CoordinatorMetrics {
+        let r = obs::Registry::new();
+        CoordinatorMetrics {
+            ingested: r.counter("coord_ingested_total", "records folded into machine windows"),
+            malformed: r.counter("coord_malformed_total", "records rejected at ingest"),
+            evicted: r.counter("coord_evicted_total", "queue evictions under backpressure"),
+            throttle_signals: r
+                .counter("coord_throttle_signals_total", "throttle advisories issued"),
+            refreshes: r.counter("coord_refreshes_total", "per-machine summary refreshes"),
+            refresh_seconds_total: r
+                .fcounter("coord_refresh_seconds_total", "cumulative refresh wall-clock"),
+            queries: r.counter("coord_queries_total", "operator queries served"),
+            fleet_queries: r.counter("coord_fleet_queries_total", "fleet-wide queries served"),
+            shard_runs: r
+                .counter("coord_shard_runs_total", "non-empty shards executed by fleet queries"),
+            shard_merge_seconds_total: r.fcounter(
+                "coord_shard_merge_seconds_total",
+                "cumulative fleet-query merge wall-clock",
+            ),
+            replica_count: r
+                .gauge("coord_replica_count", "worker replicas currently accepting shards"),
+            shard_retries: r
+                .counter("coord_shard_retries_total", "shards re-queued after replica failures"),
+            wire_bytes_total: r
+                .counter("coord_wire_bytes_total", "bytes moved over the shard transport"),
+            refresh_latency: r
+                .histogram("coord_refresh_seconds", "summary refresh latency (seconds)"),
+            batch_latency: r
+                .histogram("coord_batch_seconds", "ingest-batch grouping latency (seconds)"),
+            fleet_latency: r
+                .histogram("coord_fleet_seconds", "fleet-query end-to-end latency (seconds)"),
+            registry: r,
+        }
+    }
+}
+
+impl CoordinatorMetrics {
+    /// The backing registry (for exposition / snapshots).
+    pub fn registry(&self) -> &obs::Registry {
+        &self.registry
+    }
+}
+
+impl std::fmt::Debug for CoordinatorMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CoordinatorMetrics")
+            .field("ingested", &self.ingested.get())
+            .field("malformed", &self.malformed.get())
+            .field("evicted", &self.evicted.get())
+            .field("throttle_signals", &self.throttle_signals.get())
+            .field("refreshes", &self.refreshes.get())
+            .field("refresh_seconds_total", &self.refresh_seconds_total.get())
+            .field("queries", &self.queries.get())
+            .field("fleet_queries", &self.fleet_queries.get())
+            .field("shard_runs", &self.shard_runs.get())
+            .field("shard_merge_seconds_total", &self.shard_merge_seconds_total.get())
+            .field("replica_count", &self.replica_count.get())
+            .field("shard_retries", &self.shard_retries.get())
+            .field("wire_bytes_total", &self.wire_bytes_total.get())
+            .finish()
+    }
 }
 
 /// The streaming summarization coordinator.
@@ -75,7 +153,6 @@ pub struct Coordinator {
     /// [`crate::api::Service::coordinator`]).
     backend_label: String,
     pub metrics: CoordinatorMetrics,
-    pub profile: Profile,
     version: u64,
 }
 
@@ -104,7 +181,6 @@ impl Coordinator {
             transport,
             backend_label: "custom".into(),
             metrics: CoordinatorMetrics::default(),
-            profile: Profile::new(),
             version: 0,
         }
     }
@@ -266,8 +342,8 @@ impl Coordinator {
     pub fn offer(&mut self, rec: CycleRecord) -> Admission {
         let adm = self.queue.push(rec);
         match adm {
-            Admission::AcceptedEvicted => self.metrics.evicted += 1,
-            Admission::AcceptedThrottle => self.metrics.throttle_signals += 1,
+            Admission::AcceptedEvicted => self.metrics.evicted.inc(),
+            Admission::AcceptedThrottle => self.metrics.throttle_signals.inc(),
             Admission::Accepted => {}
         }
         adm
@@ -283,13 +359,13 @@ impl Coordinator {
         );
         let records = self.queue.drain(drain);
         let count = records.len();
-        let grouped = self.profile.scope("coord.batch", || group_by_machine(records));
+        let grouped = self.metrics.batch_latency.time(|| group_by_machine(records));
         for (name, recs) in grouped {
             if name.starts_with('@') {
                 // '@' prefixes are reserved for query routes (FLEET_QUERY);
                 // a machine by such a name would be unqueryable
                 log::warn!("dropping {} frame(s) from reserved name '{name}'", recs.len());
-                self.metrics.malformed += recs.len() as u64;
+                self.metrics.malformed.add(recs.len() as u64);
                 continue;
             }
             let window_cap = self.cfg.summary.window.max(1);
@@ -299,9 +375,9 @@ impl Coordinator {
                 .or_insert_with(|| MachineState::new(&name, window_cap));
             for r in &recs {
                 if m.ingest(r) {
-                    self.metrics.ingested += 1;
+                    self.metrics.ingested.inc();
                 } else {
-                    self.metrics.malformed += 1;
+                    self.metrics.malformed.inc();
                 }
             }
         }
@@ -326,9 +402,10 @@ impl Coordinator {
         let optimizer = self.build_optimizer();
         let t0 = Instant::now();
         let mut oracle = (self.oracle_factory)(Arc::new(window), &OracleSpec::unplanned());
-        let res = self
-            .profile
-            .scope("coord.refresh", || optimizer.run(oracle.as_mut(), k));
+        let res = {
+            let _span = obs::span("coord.refresh");
+            self.metrics.refresh_latency.time(|| optimizer.run(oracle.as_mut(), k))
+        };
         let dt = t0.elapsed().as_secs_f64();
         self.version += 1;
         let summary = Summary {
@@ -339,8 +416,8 @@ impl Coordinator {
             refresh_seconds: dt,
             version: self.version,
         };
-        self.metrics.refreshes += 1;
-        self.metrics.refresh_seconds_total += dt;
+        self.metrics.refreshes.inc();
+        self.metrics.refresh_seconds_total.add(dt);
         if let Some(m) = self.machines.get_mut(name) {
             m.set_summary(summary);
         }
@@ -349,7 +426,7 @@ impl Coordinator {
     /// Operator query: cached summary for `machine`, or — for the
     /// reserved [`FLEET_QUERY`] name — an on-demand fleet-wide summary.
     pub fn query(&mut self, machine: &str) -> RouteResult {
-        self.metrics.queries += 1;
+        self.metrics.queries.inc();
         if machine == FLEET_QUERY {
             return self.fleet_summary();
         }
@@ -363,7 +440,11 @@ impl Coordinator {
     /// fleet majority (the dimension carrying the most pooled rows)
     /// are skipped.
     pub fn fleet_summary(&mut self) -> RouteResult {
-        self.metrics.fleet_queries += 1;
+        self.metrics.fleet_queries.inc();
+        // root of the fleet trace: api/shard/transport/wire/kernel spans
+        // opened below (api::execute nests under the current span) hang
+        // off this guard, so `obs-dump` shows one tree per fleet query
+        let _fleet_span = obs::root_span("coord.fleet");
 
         // pool windows; rows[i] = (machine, seq) for fleet matrix row i.
         // Collect everything first: the fleet dimensionality is the one
@@ -434,13 +515,13 @@ impl Coordinator {
                 return RouteResult::NotReady { ingested: total };
             }
         };
-        self.profile.record("coord.fleet", t0.elapsed());
+        self.metrics.fleet_latency.observe(t0.elapsed().as_secs_f64());
 
-        self.metrics.shard_runs += resp.provenance.shards_used as u64;
-        self.metrics.shard_merge_seconds_total += resp.timings.merge_seconds;
-        self.metrics.shard_retries += resp.provenance.shard_retries;
-        self.metrics.wire_bytes_total += resp.provenance.wire_bytes;
-        self.metrics.replica_count = self.transport.replica_count() as u64;
+        self.metrics.shard_runs.add(resp.provenance.shards_used as u64);
+        self.metrics.shard_merge_seconds_total.add(resp.timings.merge_seconds);
+        self.metrics.shard_retries.add(resp.provenance.shard_retries);
+        self.metrics.wire_bytes_total.add(resp.provenance.wire_bytes);
+        self.metrics.replica_count.set(self.transport.replica_count() as i64);
 
         RouteResult::Fleet(FleetSummary {
             representatives: resp
@@ -532,8 +613,8 @@ mod tests {
         while c.queue_len() > 0 {
             c.tick();
         }
-        assert_eq!(c.metrics.ingested, 20);
-        assert!(c.metrics.refreshes >= 1);
+        assert_eq!(c.metrics.ingested.get(), 20);
+        assert!(c.metrics.refreshes.get() >= 1);
         match c.query("m1") {
             RouteResult::Summary(s) => {
                 assert!(s.representative_seqs.len() <= 2);
@@ -568,8 +649,9 @@ mod tests {
         while c.queue_len() > 0 {
             c.tick();
         }
-        assert_eq!(c.metrics.ingested, 1);
-        assert_eq!(c.metrics.malformed, 1);
+        assert_eq!(c.metrics.ingested.get(), 1);
+        assert_eq!(c.metrics.malformed.get(), 1);
+        assert!(c.metrics.refresh_latency.snapshot().count == c.metrics.refreshes.get());
     }
 
     #[test]
@@ -593,7 +675,7 @@ mod tests {
         for s in 0..100u64 {
             c.offer(rec("m", s, s as f32));
         }
-        assert!(c.metrics.evicted > 0);
+        assert!(c.metrics.evicted.get() > 0);
         while c.queue_len() > 0 {
             c.tick();
         }
@@ -632,18 +714,19 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // the new counters moved
-        assert_eq!(c.metrics.fleet_queries, 1);
-        assert_eq!(c.metrics.shard_runs, 2);
-        assert!(c.metrics.shard_merge_seconds_total > 0.0);
-        assert_eq!(c.metrics.queries, 1); // fleet queries count as queries too
-        assert!(c.metrics.wire_bytes_total > 0, "fleet query moved no wire bytes");
-        assert_eq!(c.metrics.shard_retries, 0);
-        assert_eq!(c.metrics.replica_count, 0, "inproc transport has no replicas");
-        let bytes_after_one = c.metrics.wire_bytes_total;
+        assert_eq!(c.metrics.fleet_queries.get(), 1);
+        assert_eq!(c.metrics.shard_runs.get(), 2);
+        assert!(c.metrics.shard_merge_seconds_total.get() > 0.0);
+        assert_eq!(c.metrics.queries.get(), 1); // fleet queries count as queries too
+        assert!(c.metrics.wire_bytes_total.get() > 0, "fleet query moved no wire bytes");
+        assert_eq!(c.metrics.shard_retries.get(), 0);
+        assert_eq!(c.metrics.replica_count.get(), 0, "inproc transport has no replicas");
+        assert_eq!(c.metrics.fleet_latency.snapshot().count, 1);
+        let bytes_after_one = c.metrics.wire_bytes_total.get();
         c.query(FLEET_QUERY);
-        assert_eq!(c.metrics.fleet_queries, 2);
-        assert_eq!(c.metrics.shard_runs, 4);
-        assert_eq!(c.metrics.wire_bytes_total, 2 * bytes_after_one);
+        assert_eq!(c.metrics.fleet_queries.get(), 2);
+        assert_eq!(c.metrics.shard_runs.get(), 4);
+        assert_eq!(c.metrics.wire_bytes_total.get(), 2 * bytes_after_one);
     }
 
     #[test]
@@ -680,9 +763,9 @@ mod tests {
         let mut degraded = mk(Some(Box::new(StdArc::clone(&chaos))));
         let got = reps_of(&mut degraded);
         assert_eq!(got, want, "replica failure changed the selection");
-        assert!(degraded.metrics.shard_retries >= 1, "no retry counted");
-        assert_eq!(degraded.metrics.replica_count, 2, "dead replica still counted");
-        assert!(degraded.metrics.wire_bytes_total > 0);
+        assert!(degraded.metrics.shard_retries.get() >= 1, "no retry counted");
+        assert_eq!(degraded.metrics.replica_count.get(), 2, "dead replica still counted");
+        assert!(degraded.metrics.wire_bytes_total.get() > 0);
 
         // a drained replica receives no new shards on the next query
         let done_before = chaos.with_registry(|r| r.get("replica-2").unwrap().jobs_done);
@@ -694,7 +777,7 @@ mod tests {
             done_before,
             "drained replica still received shards"
         );
-        assert_eq!(degraded.metrics.replica_count, 1);
+        assert_eq!(degraded.metrics.replica_count.get(), 1);
     }
 
     #[test]
@@ -817,8 +900,8 @@ mod tests {
         while c.queue_len() > 0 {
             c.tick();
         }
-        assert_eq!(c.metrics.ingested, 1);
-        assert_eq!(c.metrics.malformed, 1);
+        assert_eq!(c.metrics.ingested.get(), 1);
+        assert_eq!(c.metrics.malformed.get(), 1);
         assert!(!c.machines().contains_key("@fleet"));
         // the route still answers as a fleet query
         assert!(matches!(c.query(FLEET_QUERY), RouteResult::Fleet(_)));
@@ -831,8 +914,8 @@ mod tests {
             RouteResult::NotReady { ingested: 0 } => {}
             other => panic!("{other:?}"),
         }
-        assert_eq!(c.metrics.fleet_queries, 1);
-        assert_eq!(c.metrics.shard_runs, 0);
+        assert_eq!(c.metrics.fleet_queries.get(), 1);
+        assert_eq!(c.metrics.shard_runs.get(), 0);
     }
 
     #[test]

@@ -1,9 +1,17 @@
 //! JSON snapshots of coordinator state (operator dashboards / CLI).
 
 use crate::coordinator::service::Coordinator;
+use crate::obs;
 use crate::util::json::{Json, ObjBuilder};
 
 /// Serialize service state (metrics + per-machine summary heads).
+///
+/// The `metrics` object keeps its original 13 keys and value shapes —
+/// dashboards parsing old snapshots keep working — while two additive
+/// sections carry the new observability surface: `obs` (the
+/// coordinator registry's full JSON exposition, histograms included)
+/// and `trace` (the most recent root span tree in the global flight
+/// recorder, empty when span recording is off or nothing ran).
 pub fn snapshot(c: &Coordinator) -> Json {
     let m = &c.metrics;
     let mut machines = Vec::new();
@@ -34,23 +42,36 @@ pub fn snapshot(c: &Coordinator) -> Json {
         .val(
             "metrics",
             ObjBuilder::new()
-                .int("ingested", m.ingested as usize)
-                .int("malformed", m.malformed as usize)
-                .int("evicted", m.evicted as usize)
-                .int("throttle_signals", m.throttle_signals as usize)
-                .int("refreshes", m.refreshes as usize)
-                .num("refresh_seconds_total", m.refresh_seconds_total)
-                .int("queries", m.queries as usize)
-                .int("fleet_queries", m.fleet_queries as usize)
-                .int("shard_runs", m.shard_runs as usize)
-                .num("shard_merge_seconds_total", m.shard_merge_seconds_total)
-                .int("replica_count", m.replica_count as usize)
-                .int("shard_retries", m.shard_retries as usize)
-                .int("wire_bytes_total", m.wire_bytes_total as usize)
+                .int("ingested", m.ingested.get() as usize)
+                .int("malformed", m.malformed.get() as usize)
+                .int("evicted", m.evicted.get() as usize)
+                .int("throttle_signals", m.throttle_signals.get() as usize)
+                .int("refreshes", m.refreshes.get() as usize)
+                .num("refresh_seconds_total", m.refresh_seconds_total.get())
+                .int("queries", m.queries.get() as usize)
+                .int("fleet_queries", m.fleet_queries.get() as usize)
+                .int("shard_runs", m.shard_runs.get() as usize)
+                .num("shard_merge_seconds_total", m.shard_merge_seconds_total.get())
+                .int("replica_count", m.replica_count.get() as usize)
+                .int("shard_retries", m.shard_retries.get() as usize)
+                .int("wire_bytes_total", m.wire_bytes_total.get() as usize)
                 .build(),
         )
+        .val("obs", obs::expo::render_json(&m.registry().snapshot()))
+        .val("trace", recent_trace())
         .val("machines", Json::Arr(machines))
         .build()
+}
+
+/// The most recent root span's tree from the global flight recorder,
+/// as an array of span objects (empty when nothing was recorded).
+fn recent_trace() -> Json {
+    let rec = &obs::global().recorder;
+    let spans = rec.snapshot();
+    match spans.iter().rev().find(|r| r.parent == 0) {
+        Some(root) => obs::expo::trace_json(&rec.trace(root.id)),
+        None => Json::Arr(vec![]),
+    }
 }
 
 /// Persist a snapshot to disk (atomic: write + rename).
@@ -158,6 +179,36 @@ mod tests {
         assert_eq!(machines.len(), 1);
         assert_eq!(machines[0].get("name").unwrap().as_str(), Some("mx"));
         assert!(machines[0].get("representatives").is_some());
+        // frozen metrics shape: all 13 legacy keys present
+        let metrics = parsed.get("metrics").unwrap();
+        for key in [
+            "ingested",
+            "malformed",
+            "evicted",
+            "throttle_signals",
+            "refreshes",
+            "refresh_seconds_total",
+            "queries",
+            "fleet_queries",
+            "shard_runs",
+            "shard_merge_seconds_total",
+            "replica_count",
+            "shard_retries",
+            "wire_bytes_total",
+        ] {
+            assert!(metrics.get(key).is_some(), "metrics key {key} missing");
+        }
+        assert_eq!(metrics.get("ingested").unwrap().as_usize(), Some(6));
+        // additive obs section carries the registry exposition
+        let obs_sec = parsed.get("obs").unwrap();
+        let ing = obs_sec.get("coord_ingested_total").unwrap();
+        assert_eq!(ing.get("type").unwrap().as_str(), Some("counter"));
+        assert_eq!(ing.get("value").unwrap().as_usize(), Some(6));
+        assert_eq!(
+            obs_sec.get("coord_refresh_seconds").unwrap().get("type").unwrap().as_str(),
+            Some("histogram")
+        );
+        assert!(parsed.get("trace").unwrap().as_arr().is_some());
     }
 
     fn demo_coordinator() -> Coordinator {

@@ -28,14 +28,41 @@ pub use dataset::DeviceDataset;
 pub use plan::{plan_cpu_split, OracleSpec, PlanRequest, PlanSource, ShardPlan};
 
 use crate::linalg::{Matrix, SharedMatrix};
+use crate::obs;
 use crate::runtime::artifact::ArtifactEntry;
 use crate::runtime::Runtime;
 use crate::submodular::Oracle;
-use crate::util::timer::Profile;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use tiling::{mask, pad_matrix, pad_vec, pack_sets};
+
+fn gains_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(obs::ENGINE_GAINS_SECONDS, "engine gains graph execution latency (seconds)")
+    })
+}
+
+fn update_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(
+            obs::ENGINE_UPDATE_SECONDS,
+            "engine update graph execution latency (seconds)",
+        )
+    })
+}
+
+fn eval_sets_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(
+            obs::ENGINE_EVAL_SETS_SECONDS,
+            "engine eval_sets graph execution latency (seconds)",
+        )
+    })
+}
 
 /// Engine configuration.
 #[derive(Clone, Debug)]
@@ -78,19 +105,12 @@ pub struct Engine {
     /// pre-picked entries (falling back to per-call manifest picks only
     /// for requests the plan does not cover).
     plan: Option<Arc<ShardPlan>>,
-    pub profile: Arc<Profile>,
     work: Arc<AtomicU64>,
 }
 
 impl Engine {
     pub fn new(rt: Runtime, cfg: EngineConfig) -> Engine {
-        Engine {
-            rt,
-            cfg,
-            plan: None,
-            profile: Arc::new(Profile::new()),
-            work: Arc::new(AtomicU64::new(0)),
-        }
+        Engine { rt, cfg, plan: None, work: Arc::new(AtomicU64::new(0)) }
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -181,7 +201,8 @@ impl Engine {
         let graph = self.rt.load(&entry)?;
         let gb = ds.buffers(&self.rt, entry.n, entry.d)?;
 
-        let out = self.profile.scope("engine.gains", || -> Result<_> {
+        let _span = obs::span("engine.gains");
+        let out = gains_hist().time(|| -> Result<_> {
             let mind_b = self.rt.upload(&pad_vec(mindist, entry.n, 0.0), &[entry.n])?;
             let c_b = self
                 .rt
@@ -242,7 +263,8 @@ impl Engine {
         let graph = self.rt.load(&entry)?;
         let gb = ds.buffers(&self.rt, entry.n, entry.d)?;
 
-        let (nm, f) = self.profile.scope("engine.update", || -> Result<_> {
+        let _span = obs::span("engine.update");
+        let (nm, f) = update_hist().time(|| -> Result<_> {
             let s_b = self.rt.upload(&pad_vec(s, entry.d, 0.0), &[entry.d])?;
             let outs = match mindist {
                 Some(md) => {
@@ -294,7 +316,8 @@ impl Engine {
         let (s_flat, smask) = pack_sets(ds.ground(), sets, entry.l, entry.k, entry.d);
         let gb = ds.buffers(&self.rt, entry.n, entry.d)?;
 
-        let out = self.profile.scope("engine.eval_sets", || -> Result<_> {
+        let _span = obs::span("engine.eval_sets");
+        let out = eval_sets_hist().time(|| -> Result<_> {
             let s_b = self.rt.upload(&s_flat, &[entry.l * entry.k, entry.d])?;
             let smask_b = self.rt.upload(&smask, &[entry.l * entry.k])?;
             let outs = graph.execute_buffers(&[&gb.v, &gb.vsq, &gb.vmask, &s_b, &smask_b])?;

@@ -31,6 +31,7 @@
 //! | [`imm`] | injection-molding process simulator (case-study substrate) |
 //! | [`shard`] | sharded two-stage summarization (partition → optimize → merge) |
 //! | [`coordinator`] | streaming summarization service + router + fleet queries |
+//! | [`obs`] | observability: metrics registry, spans + flight recorder, exposition |
 //! | [`bench`] | bench harness (criterion unavailable offline) |
 //! | [`config`] | TOML-subset config system |
 //! | [`cli`] | argument parsing for the launcher binary |
@@ -44,6 +45,7 @@ pub mod engine;
 pub mod gpumodel;
 pub mod imm;
 pub mod linalg;
+pub mod obs;
 pub mod optim;
 pub mod reduce;
 pub mod runtime;

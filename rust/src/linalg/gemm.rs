@@ -21,7 +21,16 @@
 //! paper's ST/MT baselines; [`CpuKernel`] is the backend seam the rest
 //! of the stack (config, CLI, shard workers, coordinator) selects with.
 
+use crate::obs;
 use anyhow::{bail, Result};
+use std::sync::OnceLock;
+
+fn gemm_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(obs::GEMM_SECONDS, "blocked Gram-matrix (gemm_nt) call latency (seconds)")
+    })
+}
 
 /// CPU oracle kernel backend: the paper's scalar ST/MT baseline loops,
 /// or the blocked Gram-matrix formulation of this module.
@@ -74,26 +83,28 @@ pub fn gemm_nt(x: &[f32], y: &[f32], d: usize, m: usize, c: usize, out: &mut [f3
     assert_eq!(x.len(), m * d, "X shape mismatch");
     assert_eq!(y.len(), c * d, "Y shape mismatch");
     assert_eq!(out.len(), m * c, "out shape mismatch");
-    let mut k0 = 0;
-    while k0 < d {
-        let kend = (k0 + KC).min(d);
-        let mut i0 = 0;
-        while i0 < m {
-            let iend = (i0 + MR).min(m);
-            let mut j0 = 0;
-            while j0 < c {
-                let jend = (j0 + NR).min(c);
-                if iend - i0 == MR && jend - j0 == NR {
-                    micro_full(x, y, d, c, i0, j0, k0, kend, out);
-                } else {
-                    micro_edge(x, y, d, c, i0, iend, j0, jend, k0, kend, out);
+    gemm_hist().time(|| {
+        let mut k0 = 0;
+        while k0 < d {
+            let kend = (k0 + KC).min(d);
+            let mut i0 = 0;
+            while i0 < m {
+                let iend = (i0 + MR).min(m);
+                let mut j0 = 0;
+                while j0 < c {
+                    let jend = (j0 + NR).min(c);
+                    if iend - i0 == MR && jend - j0 == NR {
+                        micro_full(x, y, d, c, i0, j0, k0, kend, out);
+                    } else {
+                        micro_edge(x, y, d, c, i0, iend, j0, jend, k0, kend, out);
+                    }
+                    j0 = jend;
                 }
-                j0 = jend;
+                i0 = iend;
             }
-            i0 = iend;
+            k0 = kend;
         }
-        k0 = kend;
-    }
+    })
 }
 
 /// Full MR×NR register tile: rank-1 updates over the k panel; the fixed

@@ -13,9 +13,10 @@
 //! * `shard-bench`  — sharded two-stage scaling sweep (shards × wall-clock)
 //! * `kernel-bench` — CPU kernel backend sweep (scalar vs blocked × threads)
 //! * `devices`      — analytical device-model predictions (Table 1 shape)
+//! * `obs-dump`     — run a traced synthetic request, dump metrics + span tree
 
 use anyhow::Result;
-use ebc::api::{DatasetRef, Service, SummarizeRequest};
+use ebc::api::{DatasetRef, Service, ShardSpec, SummarizeRequest};
 use ebc::bench::report::fmt_secs;
 use ebc::bench::{
     kernel_scaling_sweep, shard_scaling_sweep, shard_split_sweep, KernelSweepConfig, Reporter,
@@ -31,6 +32,7 @@ use ebc::gpumodel::{
 use ebc::imm::casestudy::{fig4_table, run_table2, table2_text, validate_expectations};
 use ebc::imm::{Part, ProcessState};
 use ebc::linalg::CpuKernel;
+use ebc::obs;
 use ebc::optim::Greedy;
 use ebc::runtime::Runtime;
 use ebc::util::logging;
@@ -59,6 +61,7 @@ fn app() -> AppSpec {
                     opt("kernel", "cpu kernel backend: scalar | blocked", "blocked"),
                     opt("oracle-threads", "cpu oracle worker threads (0 = auto)", "0"),
                     opt("algorithm", "any optim registry name (greedy, lazy_greedy, ...)", "greedy"),
+                    flag("trace", "record this request's span tree and print it"),
                 ],
             },
             CommandSpec {
@@ -125,6 +128,18 @@ fn app() -> AppSpec {
                 ],
             },
             CommandSpec {
+                name: "obs-dump",
+                help: "run a traced synthetic sharded request, dump metrics + span tree",
+                flags: vec![
+                    opt("n", "ground-set size", "400"),
+                    opt("d", "dimensionality", "16"),
+                    opt("k", "summary size", "4"),
+                    opt("seed", "rng seed", "42"),
+                    opt("shards", "shard count for the traced request", "2"),
+                    opt("backend", "cpu | xla", "cpu"),
+                ],
+            },
+            CommandSpec {
                 name: "devices",
                 help: "analytical device model: paper Table 1 predictions",
                 flags: vec![
@@ -156,6 +171,7 @@ fn main() {
         "serve" => cmd_serve(&m),
         "shard-bench" => cmd_shard_bench(&m),
         "kernel-bench" => cmd_kernel_bench(&m),
+        "obs-dump" => cmd_obs_dump(&m),
         "devices" => cmd_devices(&m),
         _ => unreachable!(),
     };
@@ -215,7 +231,8 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
     .optimizer(m.str("algorithm")?)
     .precision(parse_precision(m.str("precision")?)?)
     .cpu_kernel(CpuKernel::parse(m.str("kernel")?)?)
-    .threads(m.usize("oracle-threads")?);
+    .threads(m.usize("oracle-threads")?)
+    .trace(m.has("trace"));
     let res = service.summarize(&req)?;
     println!(
         "summary of {n}x{d} ({}, backend={}): k={}",
@@ -229,6 +246,12 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
         "wall: {:.3}s, oracle calls: {}, distance work: {:.2e}",
         res.timings.wall_seconds, res.oracle_calls, res.oracle_work as f64
     );
+    if m.has("trace") {
+        match &res.provenance.trace {
+            Some(spans) => print!("\ntrace ({} spans):\n{}", spans.len(), obs::expo::render_trace(spans)),
+            None => println!("\ntrace: (span recording disabled)"),
+        }
+    }
     Ok(())
 }
 
@@ -321,7 +344,7 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     println!(
         "\nmetrics: {:?}\n\n{}",
         coordinator.metrics,
-        coordinator.profile.report()
+        obs::expo::render_text(&coordinator.metrics.registry().snapshot())
     );
     Ok(())
 }
@@ -484,6 +507,34 @@ fn cmd_kernel_bench(m: &Matches) -> Result<()> {
             best.speedup_vs_scalar_st, best.threads
         );
     }
+    Ok(())
+}
+
+fn cmd_obs_dump(m: &Matches) -> Result<()> {
+    let n = m.usize("n")?;
+    let d = m.usize("d")?;
+    let service = Service::from_backend(m.str("backend")?)?;
+    // a sharded loopback request walks the whole instrumented path:
+    // api -> shard stages -> transport jobs -> wire frames -> kernel
+    let req = SummarizeRequest::new(
+        DatasetRef::synthetic(n, d, m.usize("seed")? as u64),
+        m.usize("k")?,
+    )
+    .sharded(ShardSpec::new(m.usize("shards")?).transport("loopback"))
+    .trace(true);
+    let res = service.summarize(&req)?;
+    println!(
+        "obs-dump: traced {n}x{d} k={} sharded summarize, f(S) = {:.6}",
+        res.k(),
+        res.f_final
+    );
+    match &res.provenance.trace {
+        Some(spans) => print!("\ntrace ({} spans):\n{}", spans.len(), obs::expo::render_trace(spans)),
+        None => println!("\ntrace: (span recording disabled)"),
+    }
+    let snap = obs::global().registry.snapshot();
+    print!("\nmetrics (Prometheus text):\n{}", obs::expo::render_text(&snap));
+    println!("\nmetrics (JSON):\n{}", obs::expo::render_json(&snap).dump());
     Ok(())
 }
 

@@ -1,0 +1,285 @@
+//! Exposition: render registry snapshots as Prometheus-style text or
+//! JSON, and span traces as an indented tree.
+
+use crate::obs::registry::{MetricValue, RegistrySnapshot};
+use crate::obs::span::SpanRecord;
+use crate::util::json::{Json, ObjBuilder};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+fn fmt_f64(v: f64) -> String {
+    // shortest round-trip repr; deterministic across platforms
+    format!("{v}")
+}
+
+/// Prometheus-style text exposition. Histogram buckets are cumulative
+/// (`le` semantics) with a terminal `+Inf` bucket, followed by `_sum`
+/// and `_count` — the classic scrape format, minus labels.
+pub fn render_text(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+    for m in &snap.metrics {
+        let _ = writeln!(out, "# HELP {} {}", m.name, m.help);
+        match &m.value {
+            MetricValue::Counter(v) => {
+                let _ = writeln!(out, "# TYPE {} counter", m.name);
+                let _ = writeln!(out, "{} {}", m.name, v);
+            }
+            MetricValue::FCounter(v) => {
+                let _ = writeln!(out, "# TYPE {} counter", m.name);
+                let _ = writeln!(out, "{} {}", m.name, fmt_f64(*v));
+            }
+            MetricValue::Gauge(v) => {
+                let _ = writeln!(out, "# TYPE {} gauge", m.name);
+                let _ = writeln!(out, "{} {}", m.name, v);
+            }
+            MetricValue::Histogram(h) => {
+                let _ = writeln!(out, "# TYPE {} histogram", m.name);
+                let mut cum = 0u64;
+                for (i, &bound) in h.bounds.iter().enumerate() {
+                    cum += h.counts[i];
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{{le=\"{}\"}} {}",
+                        m.name,
+                        fmt_f64(bound),
+                        cum
+                    );
+                }
+                let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", m.name, h.count);
+                let _ = writeln!(out, "{}_sum {}", m.name, fmt_f64(h.sum));
+                let _ = writeln!(out, "{}_count {}", m.name, h.count);
+            }
+        }
+    }
+    out
+}
+
+/// JSON exposition: one object per family keyed by name, with
+/// histograms carrying count/sum/mean + interpolated p50/p90/p99 and
+/// their raw (non-cumulative) buckets as `[upper_bound, count]` pairs.
+pub fn render_json(snap: &RegistrySnapshot) -> Json {
+    let mut b = ObjBuilder::new();
+    for m in &snap.metrics {
+        let entry = match &m.value {
+            MetricValue::Counter(v) => ObjBuilder::new()
+                .str("type", "counter")
+                .str("help", m.help.clone())
+                .num("value", *v as f64)
+                .build(),
+            MetricValue::FCounter(v) => ObjBuilder::new()
+                .str("type", "counter")
+                .str("help", m.help.clone())
+                .num("value", *v)
+                .build(),
+            MetricValue::Gauge(v) => ObjBuilder::new()
+                .str("type", "gauge")
+                .str("help", m.help.clone())
+                .num("value", *v as f64)
+                .build(),
+            MetricValue::Histogram(h) => {
+                let buckets: Vec<Json> = h
+                    .bounds
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &bound)| {
+                        Json::Arr(vec![Json::Num(bound), Json::Num(h.counts[i] as f64)])
+                    })
+                    .chain(std::iter::once(Json::Arr(vec![
+                        Json::Null,
+                        Json::Num(*h.counts.last().unwrap_or(&0) as f64),
+                    ])))
+                    .collect();
+                ObjBuilder::new()
+                    .str("type", "histogram")
+                    .str("help", m.help.clone())
+                    .int("count", h.count as usize)
+                    .num("sum", h.sum)
+                    .num("mean", h.mean())
+                    .num("p50", h.p50())
+                    .num("p90", h.p90())
+                    .num("p99", h.p99())
+                    .val("buckets", Json::Arr(buckets))
+                    .build()
+            }
+        };
+        b = b.val(&m.name, entry);
+    }
+    b.build()
+}
+
+/// JSON form of a trace: one `{name, id, parent, start_ns, dur_ns}`
+/// object per span (parent 0 = root), in the order given.
+pub fn trace_json(spans: &[SpanRecord]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|r| {
+                ObjBuilder::new()
+                    .str("name", r.name)
+                    .int("id", r.id as usize)
+                    .int("parent", r.parent as usize)
+                    .int("start_ns", r.start_ns as usize)
+                    .int("dur_ns", r.dur_ns as usize)
+                    .build()
+            })
+            .collect(),
+    )
+}
+
+fn fmt_ns(ns: u64) -> String {
+    let s = ns as f64 / 1e9;
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Render a trace (as returned by `FlightRecorder::trace`) as an
+/// indented tree, one span per line with its wall-clock duration and
+/// start offset inside the trace.
+pub fn render_trace(spans: &[SpanRecord]) -> String {
+    if spans.is_empty() {
+        return "(no spans recorded)\n".to_string();
+    }
+    let mut depth: BTreeMap<u64, usize> = BTreeMap::new();
+    let t0 = spans.iter().map(|r| r.start_ns).min().unwrap_or(0);
+    let mut out = String::new();
+    for r in spans {
+        let d = depth.get(&r.parent).map(|d| d + 1).unwrap_or(0);
+        depth.insert(r.id, d);
+        let _ = writeln!(
+            out,
+            "{:indent$}{:<32} {:>10}  (+{})",
+            "",
+            r.name,
+            fmt_ns(r.dur_ns),
+            fmt_ns(r.start_ns - t0),
+            indent = 2 * d
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+    use crate::obs::span::FlightRecorder;
+
+    use crate::obs::registry::{HistogramSnapshot, MetricSnapshot};
+
+    /// Hand-built snapshot: every rendered number comes from a literal,
+    /// so the golden text is exact by construction (a computed float
+    /// sum's shortest-round-trip repr would be brittle to predict).
+    fn golden_snapshot() -> RegistrySnapshot {
+        RegistrySnapshot {
+            metrics: vec![
+                MetricSnapshot {
+                    name: "demo_requests_total".into(),
+                    help: "requests seen".into(),
+                    value: MetricValue::Counter(3),
+                },
+                MetricSnapshot {
+                    name: "lat_seconds".into(),
+                    help: "op latency".into(),
+                    value: MetricValue::Histogram(HistogramSnapshot {
+                        bounds: vec![0.001, 0.01, 0.1, 1.0],
+                        counts: vec![0, 1, 1, 0, 1],
+                        count: 3,
+                        sum: 0.75,
+                    }),
+                },
+                MetricSnapshot {
+                    name: "queue_len".into(),
+                    help: "queue depth".into(),
+                    value: MetricValue::Gauge(-2),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn text_exposition_matches_golden() {
+        let got = render_text(&golden_snapshot());
+        let want = "\
+# HELP demo_requests_total requests seen
+# TYPE demo_requests_total counter
+demo_requests_total 3
+# HELP lat_seconds op latency
+# TYPE lat_seconds histogram
+lat_seconds_bucket{le=\"0.001\"} 0
+lat_seconds_bucket{le=\"0.01\"} 1
+lat_seconds_bucket{le=\"0.1\"} 2
+lat_seconds_bucket{le=\"1\"} 2
+lat_seconds_bucket{le=\"+Inf\"} 3
+lat_seconds_sum 0.75
+lat_seconds_count 3
+# HELP queue_len queue depth
+# TYPE queue_len gauge
+queue_len -2
+";
+        assert_eq!(got, want);
+    }
+
+    fn demo_registry() -> Registry {
+        // 4 log buckets: 1e-6, 2e-6, 4e-6, 8e-6
+        let r = Registry::with_buckets(4);
+        r.counter("demo_requests_total", "requests seen").add(3);
+        let h = r.histogram("lat_seconds", "op latency");
+        h.observe(1.5e-6);
+        h.observe(1e-2);
+        r.gauge("queue_len", "queue depth").set(-2);
+        r
+    }
+
+    #[test]
+    fn text_exposition_of_live_registry_has_cumulative_buckets() {
+        let got = render_text(&demo_registry().snapshot());
+        // 1.5e-6 lands in the le=2e-6 bucket, 1e-2 overflows
+        assert!(got.contains("lat_seconds_bucket{le=\"0.000002\"} 1"), "{got}");
+        assert!(got.contains("lat_seconds_bucket{le=\"0.000008\"} 1"), "{got}");
+        assert!(got.contains("lat_seconds_bucket{le=\"+Inf\"} 2"), "{got}");
+        assert!(got.contains("lat_seconds_count 2"), "{got}");
+        assert!(got.contains("demo_requests_total 3"), "{got}");
+    }
+
+    #[test]
+    fn json_exposition_parses_and_carries_quantiles() {
+        let j = render_json(&demo_registry().snapshot());
+        let text = j.dump();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("demo_requests_total").unwrap().get("value").unwrap().as_usize(),
+            Some(3)
+        );
+        let h = back.get("lat_seconds").unwrap();
+        assert_eq!(h.get("type").unwrap().as_str(), Some("histogram"));
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(2));
+        assert!(h.get("p50").unwrap().as_f64().unwrap() > 0.0);
+        assert!(h.get("p99").unwrap().as_f64().unwrap() > 0.0);
+        // 4 finite buckets + overflow
+        assert_eq!(h.get("buckets").unwrap().as_arr().unwrap().len(), 5);
+        let gauge = back.get("queue_len").unwrap();
+        assert_eq!(gauge.get("value").unwrap().as_f64(), Some(-2.0));
+    }
+
+    #[test]
+    fn trace_tree_indents_children() {
+        let fr = FlightRecorder::new(16);
+        let root_id;
+        {
+            let root = fr.root("demo.root");
+            root_id = root.id();
+            let _child = fr.child("demo.child");
+        }
+        let text = render_trace(&fr.trace(root_id));
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("demo.root"));
+        assert!(lines[1].starts_with("  demo.child"));
+        assert_eq!(render_trace(&[]), "(no spans recorded)\n");
+    }
+}

@@ -1,0 +1,178 @@
+//! Unified observability: metrics, hierarchical spans and exposition.
+//!
+//! One substrate replaces the previous four ad-hoc timing mechanisms
+//! (`util::timer::Profile`, hand-rolled `CoordinatorMetrics` counter
+//! fields, bench-local JSON, `StageTimings`-only provenance):
+//!
+//! * [`registry`] — typed counters, gauges, float counters and
+//!   log-bucketed latency histograms (p50/p90/p99, mergeable across
+//!   shard workers) behind cheap atomic handles;
+//! * [`span`] — hierarchical spans with explicit parent handles and
+//!   per-thread scoping, recorded into a bounded in-memory flight
+//!   recorder ring buffer;
+//! * [`expo`] — Prometheus-style text and JSON renderers plus a span
+//!   tree formatter.
+//!
+//! The crate keeps one process-global [`Obs`] (histograms for kernel /
+//! wire / merge latencies, the flight recorder) reachable through
+//! [`global`], while stateful components such as the coordinator own
+//! private [`Registry`] instances so tests never observe each other's
+//! counts.
+//!
+//! Span recording is *opt-in by ancestry*: child spans ([`span`]
+//! function) record only while the calling thread is inside an active
+//! span, so unit tests hammering kernel code do not flood the recorder.
+//! Roots are opened at request entry points ([`root_span`]) — e.g.
+//! `api::execute` — and every instrumented stage below them nests
+//! automatically, across threads via explicit parent handles.
+
+pub mod expo;
+pub mod registry;
+pub mod span;
+
+pub use registry::{
+    Counter, FCounter, Gauge, Histogram, HistogramSnapshot, MetricSnapshot, MetricValue, Registry,
+    RegistrySnapshot,
+};
+pub use span::{FlightRecorder, SpanGuard, SpanRecord};
+
+use std::sync::OnceLock;
+
+/// Histogram of per-call CPU-oracle `gains` latency (seconds).
+pub const GAINS_SECONDS: &str = "ebc_gains_seconds";
+/// Histogram of stage-2 greedy-merge latency per sharded run (seconds).
+pub const MERGE_SECONDS: &str = "ebc_merge_seconds";
+/// Histogram of wire frame encode latency (job + result frames).
+pub const WIRE_ENCODE_SECONDS: &str = "ebc_wire_encode_seconds";
+/// Histogram of wire frame decode latency (job + result frames).
+pub const WIRE_DECODE_SECONDS: &str = "ebc_wire_decode_seconds";
+/// Histogram of blocked Gram-matrix (`gemm_nt`) call latency.
+pub const GEMM_SECONDS: &str = "ebc_gemm_seconds";
+/// Histogram of engine `gains` graph execution latency.
+pub const ENGINE_GAINS_SECONDS: &str = "ebc_engine_gains_seconds";
+/// Histogram of engine `update` graph execution latency.
+pub const ENGINE_UPDATE_SECONDS: &str = "ebc_engine_update_seconds";
+/// Histogram of engine `eval_sets` graph execution latency.
+pub const ENGINE_EVAL_SETS_SECONDS: &str = "ebc_engine_eval_sets_seconds";
+/// Counter of summarize requests executed through `api::execute`.
+pub const REQUESTS_TOTAL: &str = "ebc_requests_total";
+
+/// Tunables for the process-global observability state — the `[obs]`
+/// config section. `enabled` gates only span recording; metric handles
+/// always count (they are load-bearing for snapshots and tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Record spans into the flight recorder (metrics are unaffected).
+    pub enabled: bool,
+    /// Flight-recorder ring capacity (completed spans held before the
+    /// oldest is evicted).
+    pub recorder_capacity: usize,
+    /// Log-spaced latency buckets per histogram on the global registry.
+    pub hist_buckets: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: true, recorder_capacity: 4096, hist_buckets: 40 }
+    }
+}
+
+/// A metrics registry paired with a span flight recorder.
+pub struct Obs {
+    /// Metric families (counters / gauges / histograms).
+    pub registry: Registry,
+    /// Bounded ring of completed spans.
+    pub recorder: FlightRecorder,
+}
+
+impl Obs {
+    /// Build a fresh instance from a config (tests use private ones).
+    pub fn new(cfg: &ObsConfig) -> Obs {
+        let recorder = FlightRecorder::new(cfg.recorder_capacity);
+        recorder.set_enabled(cfg.enabled);
+        Obs { registry: Registry::with_buckets(cfg.hist_buckets), recorder }
+    }
+}
+
+static GLOBAL: OnceLock<Obs> = OnceLock::new();
+
+/// The process-global observability state (lazily built with
+/// [`ObsConfig::default`] on first touch).
+pub fn global() -> &'static Obs {
+    GLOBAL.get_or_init(|| Obs::new(&ObsConfig::default()))
+}
+
+/// Apply a config to the global state. The span on/off switch always
+/// applies; `recorder_capacity` / `hist_buckets` only take effect when
+/// this call is the first touch of the global state (ring capacity and
+/// bucket layout are fixed at construction so snapshots stay mergeable).
+pub fn configure(cfg: &ObsConfig) {
+    let obs = GLOBAL.get_or_init(|| Obs::new(cfg));
+    obs.recorder.set_enabled(cfg.enabled);
+}
+
+/// Open a root span on the global recorder (records when enabled).
+pub fn root_span(name: &'static str) -> SpanGuard<'static> {
+    global().recorder.root(name)
+}
+
+/// Open a child span under the calling thread's current span. No-op
+/// (and free) outside an active span — see the module docs.
+pub fn span(name: &'static str) -> SpanGuard<'static> {
+    global().recorder.child(name)
+}
+
+/// Open a child span under an explicit parent handle (for crossing
+/// threads). No-op when `parent` is 0.
+pub fn span_under(name: &'static str, parent: u64) -> SpanGuard<'static> {
+    global().recorder.child_of(name, parent)
+}
+
+/// The calling thread's current span handle (0 outside any span).
+pub fn current_span() -> u64 {
+    FlightRecorder::current()
+}
+
+/// Get-or-register a histogram on the global registry.
+pub fn histogram(name: &str, help: &str) -> Histogram {
+    global().registry.histogram(name, help)
+}
+
+/// Get-or-register a counter on the global registry.
+pub fn counter(name: &str, help: &str) -> Counter {
+    global().registry.counter(name, help)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_handles_are_shared() {
+        let a = counter("ebc_obs_mod_test_total", "test counter");
+        let b = counter("ebc_obs_mod_test_total", "test counter");
+        let before = a.get();
+        b.inc();
+        assert_eq!(a.get(), before + 1);
+    }
+
+    #[test]
+    fn configure_toggles_span_recording() {
+        // only the enabled switch is asserted — capacity is first-touch
+        configure(&ObsConfig { enabled: false, ..ObsConfig::default() });
+        assert!(!global().recorder.enabled());
+        {
+            let g = root_span("obs.mod.disabled");
+            assert_eq!(g.id(), 0);
+        }
+        configure(&ObsConfig::default());
+        assert!(global().recorder.enabled());
+    }
+
+    #[test]
+    fn child_span_outside_root_is_noop() {
+        configure(&ObsConfig::default());
+        let g = span("obs.mod.orphan");
+        assert_eq!(g.id(), 0);
+    }
+}

@@ -1,0 +1,561 @@
+//! Typed metrics registry: counters, gauges, float counters and
+//! log-bucketed latency histograms.
+//!
+//! Handles are `Arc`-backed and lock-free on the hot path (relaxed
+//! atomics); the registry itself is only locked to register or
+//! snapshot. Histogram snapshots are mergeable across shard workers
+//! (identical bucket layout → element-wise sum), which is how the
+//! fleet aggregates per-replica latency distributions.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotonic `u64` counter handle (clone = same underlying cell).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Monotonic `f64` counter handle (seconds totals etc.), implemented
+/// as bit-CAS over an `AtomicU64` — std has no `AtomicF64`.
+#[derive(Clone, Debug, Default)]
+pub struct FCounter(Arc<AtomicU64>);
+
+impl FCounter {
+    /// Add `v` (CAS loop; contention here is negligible).
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Settable `i64` gauge handle (queue depths, replica counts).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    /// Add `delta` (may be negative).
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-spaced ascending upper bounds: `first * growth^i` for
+/// `i in 0..buckets`. The default latency layout (`first` 1 µs,
+/// `growth` 2, 40 buckets) spans ~1 µs to ~9 min.
+pub fn log_bounds(first: f64, growth: f64, buckets: usize) -> Vec<f64> {
+    assert!(first > 0.0 && growth > 1.0 && buckets > 0);
+    let mut out = Vec::with_capacity(buckets);
+    let mut b = first;
+    for _ in 0..buckets {
+        out.push(b);
+        b *= growth;
+    }
+    out
+}
+
+/// Default latency bucket layout used by [`Registry::new`].
+pub fn default_latency_bounds(buckets: usize) -> Vec<f64> {
+    log_bounds(1e-6, 2.0, buckets.max(1))
+}
+
+struct HistCore {
+    bounds: Vec<f64>,
+    /// One cell per bound + a final overflow cell.
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// `f64` bits of the running sum (see [`FCounter`]).
+    sum: AtomicU64,
+}
+
+/// Log-bucketed histogram handle (clone = same underlying cells).
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistCore>,
+}
+
+impl Histogram {
+    /// Build with explicit ascending bucket upper bounds.
+    pub fn with_bounds(bounds: Vec<f64>) -> Histogram {
+        assert!(!bounds.is_empty());
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            core: Arc::new(HistCore {
+                bounds,
+                counts,
+                count: AtomicU64::new(0),
+                sum: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let i = self.core.bounds.partition_point(|&b| b < v);
+        self.core.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.core.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.core.sum.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.core.sum.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Time a closure and record its wall-clock seconds.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Point-in-time copy of the cells.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.core.bounds.clone(),
+            counts: self.core.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.core.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.core.sum.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(f, "Histogram(count={}, sum={}, buckets={})", s.count, s.sum, s.bounds.len())
+    }
+}
+
+/// Immutable histogram state: mergeable, quantile-queryable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Ascending bucket upper bounds.
+    pub bounds: Vec<f64>,
+    /// Per-bucket counts; last cell counts observations above every bound.
+    pub counts: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observations.
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Mean observation (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Estimated quantile `q in [0, 1]` by linear interpolation inside
+    /// the covering bucket. Empty histograms report 0.0; observations in
+    /// the overflow bucket report the top bound (no upper edge to
+    /// interpolate toward).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c as f64;
+            if next >= target {
+                let Some(&hi) = self.bounds.get(i) else {
+                    // overflow bucket: clamp to the top finite bound
+                    return *self.bounds.last().expect("bounds non-empty");
+                };
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let frac = ((target - cum) / c as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+            cum = next;
+        }
+        *self.bounds.last().expect("bounds non-empty")
+    }
+
+    /// Median shorthand.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    /// 90th-percentile shorthand.
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+    /// 99th-percentile shorthand.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another snapshot in (shard-worker aggregation).
+    ///
+    /// # Panics
+    /// When the bucket layouts differ — merging histograms with
+    /// different bounds is a programming error, not a runtime state.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        assert_eq!(self.bounds, other.bounds, "histogram bucket layouts differ");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+/// One registered metric at snapshot time.
+#[derive(Debug, Clone)]
+pub struct MetricSnapshot {
+    /// Registered family name (e.g. `ebc_gains_seconds`).
+    pub name: String,
+    /// Registered help text.
+    pub help: String,
+    /// Kind + value.
+    pub value: MetricValue,
+}
+
+/// Snapshot value of one metric family.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    /// Monotonic integer counter.
+    Counter(u64),
+    /// Monotonic float counter.
+    FCounter(f64),
+    /// Point-in-time gauge.
+    Gauge(i64),
+    /// Latency distribution.
+    Histogram(HistogramSnapshot),
+}
+
+/// Ordered (by name) collection of metric snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    /// The families, ascending by name.
+    pub metrics: Vec<MetricSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Look a family up by name.
+    pub fn get(&self, name: &str) -> Option<&MetricSnapshot> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// Histogram family accessor (None when absent or not a histogram).
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        match self.get(name)?.value {
+            MetricValue::Histogram(ref h) => Some(h),
+            _ => None,
+        }
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    FCounter(FCounter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// A named family of metric handles. Registration is get-or-create:
+/// asking twice for the same name returns the same underlying cells.
+pub struct Registry {
+    hist_bounds: Vec<f64>,
+    inner: Mutex<BTreeMap<String, (String, Metric)>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    /// Registry with the default 40-bucket latency layout.
+    pub fn new() -> Registry {
+        Registry::with_buckets(40)
+    }
+
+    /// Registry whose histograms get `buckets` log-spaced latency
+    /// buckets (1 µs first bound, ×2 growth).
+    pub fn with_buckets(buckets: usize) -> Registry {
+        Registry {
+            hist_bounds: default_latency_bounds(buckets),
+            inner: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Get-or-register a counter.
+    ///
+    /// # Panics
+    /// When `name` is already registered as a different kind.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        let mut m = self.inner.lock().unwrap();
+        let (_, metric) = m
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Metric::Counter(Counter::default())));
+        match metric {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-register a float counter.
+    ///
+    /// # Panics
+    /// When `name` is already registered as a different kind.
+    pub fn fcounter(&self, name: &str, help: &str) -> FCounter {
+        let mut m = self.inner.lock().unwrap();
+        let (_, metric) = m
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Metric::FCounter(FCounter::default())));
+        match metric {
+            Metric::FCounter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-register a gauge.
+    ///
+    /// # Panics
+    /// When `name` is already registered as a different kind.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        let mut m = self.inner.lock().unwrap();
+        let (_, metric) = m
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Metric::Gauge(Gauge::default())));
+        match metric {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-register a histogram with the registry's bucket layout.
+    ///
+    /// # Panics
+    /// When `name` is already registered as a different kind.
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        let mut m = self.inner.lock().unwrap();
+        let (_, metric) = m.entry(name.to_string()).or_insert_with(|| {
+            (help.to_string(), Metric::Histogram(Histogram::with_bounds(self.hist_bounds.clone())))
+        });
+        match metric {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Point-in-time copy of every family, ascending by name.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let m = self.inner.lock().unwrap();
+        let metrics = m
+            .iter()
+            .map(|(name, (help, metric))| MetricSnapshot {
+                name: name.clone(),
+                help: help.clone(),
+                value: match metric {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::FCounter(c) => MetricValue::FCounter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+                },
+            })
+            .collect();
+        RegistrySnapshot { metrics }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_fcounter_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("c_total", "a counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(r.counter("c_total", "a counter").get(), 5, "get-or-register shares cells");
+
+        let g = r.gauge("g", "a gauge");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+
+        let f = r.fcounter("f_seconds_total", "a float counter");
+        f.add(0.25);
+        f.add(0.5);
+        assert!((f.get() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("x", "c");
+        r.gauge("x", "g");
+    }
+
+    #[test]
+    fn log_bounds_shape() {
+        let b = log_bounds(1e-6, 2.0, 4);
+        assert_eq!(b.len(), 4);
+        assert!((b[0] - 1e-6).abs() < 1e-18);
+        assert!((b[3] - 8e-6).abs() < 1e-18);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn histogram_empty_quantiles_are_zero() {
+        let h = Histogram::with_bounds(log_bounds(1e-6, 2.0, 10));
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_sample_lands_in_its_bucket() {
+        let h = Histogram::with_bounds(log_bounds(1e-6, 2.0, 30));
+        h.observe(3e-3);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        // every quantile of a single sample lies inside the covering
+        // bucket, i.e. within a ×2 band of the observation
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let v = s.quantile(q);
+            assert!(v <= 4.096e-3 + 1e-12 && v >= 0.0, "q={q}: {v}");
+        }
+        assert!(s.quantile(1.0) >= 3e-3 / 2.0, "upper quantile below the bucket floor");
+        assert!((s.mean() - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        // uniform mass in one bucket (1.0, 2.0]: quantiles interpolate
+        let h = Histogram::with_bounds(vec![1.0, 2.0, 4.0]);
+        for _ in 0..100 {
+            h.observe(1.5);
+        }
+        let s = h.snapshot();
+        assert!((s.p50() - 1.5).abs() < 0.02, "{}", s.p50());
+        assert!((s.quantile(0.25) - 1.25).abs() < 0.02);
+        assert!((s.p99() - 1.99).abs() < 0.02);
+    }
+
+    #[test]
+    fn histogram_overflow_clamps_to_top_bound() {
+        let h = Histogram::with_bounds(vec![1.0, 2.0]);
+        h.observe(100.0);
+        let s = h.snapshot();
+        assert_eq!(s.counts[2], 1);
+        assert_eq!(s.p50(), 2.0);
+        assert_eq!(s.p99(), 2.0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_stream() {
+        let bounds = log_bounds(1e-6, 2.0, 24);
+        let a = Histogram::with_bounds(bounds.clone());
+        let b = Histogram::with_bounds(bounds.clone());
+        let all = Histogram::with_bounds(bounds);
+        for i in 0..50 {
+            let v = 1e-5 * (1.0 + i as f64);
+            a.observe(v);
+            all.observe(v);
+        }
+        for i in 0..80 {
+            let v = 3e-4 * (1.0 + i as f64);
+            b.observe(v);
+            all.observe(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let want = all.snapshot();
+        assert_eq!(merged.counts, want.counts);
+        assert_eq!(merged.count, want.count);
+        assert!((merged.sum - want.sum).abs() < 1e-9 * want.sum.abs());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(merged.quantile(q), want.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket layouts differ")]
+    fn histogram_merge_rejects_mismatched_bounds() {
+        let mut a = Histogram::with_bounds(vec![1.0, 2.0]).snapshot();
+        let b = Histogram::with_bounds(vec![1.0, 3.0]).snapshot();
+        a.merge(&b);
+    }
+
+    #[test]
+    fn histogram_time_records() {
+        let h = Histogram::with_bounds(log_bounds(1e-6, 2.0, 30));
+        let out = h.time(|| 41 + 1);
+        assert_eq!(out, 42);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert!(s.sum >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_sorted_and_typed() {
+        let r = Registry::with_buckets(8);
+        r.gauge("zz", "last");
+        r.counter("aa_total", "first");
+        r.histogram("mm_seconds", "middle").observe(1e-3);
+        let s = r.snapshot();
+        let names: Vec<&str> = s.metrics.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["aa_total", "mm_seconds", "zz"]);
+        assert!(matches!(s.get("aa_total").unwrap().value, MetricValue::Counter(0)));
+        assert_eq!(s.histogram("mm_seconds").unwrap().count, 1);
+        assert!(s.histogram("aa_total").is_none());
+    }
+}

@@ -1,0 +1,336 @@
+//! Hierarchical spans + the bounded in-memory flight recorder.
+//!
+//! A span is opened as a guard and recorded into the ring buffer when
+//! the guard drops (children therefore appear before their parents in
+//! ring order). Per-thread scoping is implicit: opening a span makes it
+//! the calling thread's *current* span, so nested instrumentation
+//! points parent themselves automatically; crossing a thread boundary
+//! is explicit via [`FlightRecorder::child_of`] with a captured parent
+//! handle.
+//!
+//! Child spans are recorded **only when they have a parent** — an
+//! active current span on the thread or an explicit non-zero handle.
+//! Roots are opened at request entry points; everything outside a
+//! request records nothing and costs one thread-local read.
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A completed span, as held by the flight recorder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Non-zero span handle, unique within the recorder.
+    pub id: u64,
+    /// Parent handle (0 for roots).
+    pub parent: u64,
+    /// Static instrumentation-point name (e.g. `api.execute`).
+    pub name: &'static str,
+    /// Start offset from the recorder's epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Wall-clock duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+thread_local! {
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Bounded ring buffer of completed spans (oldest evicted first).
+pub struct FlightRecorder {
+    epoch: Instant,
+    next_id: AtomicU64,
+    enabled: AtomicBool,
+    capacity: usize,
+    evicted: AtomicU64,
+    ring: Mutex<VecDeque<SpanRecord>>,
+}
+
+impl FlightRecorder {
+    /// Recorder holding at most `capacity` completed spans.
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            enabled: AtomicBool::new(true),
+            capacity: capacity.max(1),
+            evicted: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Toggle recording (open guards still restore scoping correctly).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether spans are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// The calling thread's current span handle (0 outside any span).
+    pub fn current() -> u64 {
+        CURRENT.get()
+    }
+
+    /// Open a root span (parent 0). Records whenever the recorder is
+    /// enabled — roots belong at request entry points only.
+    pub fn root(&self, name: &'static str) -> SpanGuard<'_> {
+        if !self.enabled() {
+            return SpanGuard::noop(self);
+        }
+        self.open(name, 0)
+    }
+
+    /// Open a child under the calling thread's current span. No-op
+    /// when the thread is outside any span.
+    pub fn child(&self, name: &'static str) -> SpanGuard<'_> {
+        self.child_of(name, Self::current())
+    }
+
+    /// Open a child under an explicit parent handle (the cross-thread
+    /// form). No-op when `parent` is 0.
+    pub fn child_of(&self, name: &'static str, parent: u64) -> SpanGuard<'_> {
+        if parent == 0 || !self.enabled() {
+            return SpanGuard::noop(self);
+        }
+        self.open(name, parent)
+    }
+
+    fn open(&self, name: &'static str, parent: u64) -> SpanGuard<'_> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let prev = CURRENT.replace(id);
+        SpanGuard { recorder: self, id, parent, prev, name, start: Instant::now() }
+    }
+
+    fn record(&self, rec: SpanRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(rec);
+    }
+
+    /// Completed spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Spans evicted so far (ring overflow).
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Drop all completed spans (eviction counter is kept).
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+    }
+
+    /// Extract the tree rooted at `root`: the root's record plus every
+    /// recorded descendant, sorted by start time. Call after the root
+    /// guard has dropped — children complete before their parents, so
+    /// the tree is whole by then. Foreign spans interleaved in the ring
+    /// (other threads, other requests) are excluded by ancestry.
+    pub fn trace(&self, root: u64) -> Vec<SpanRecord> {
+        let snap = self.snapshot();
+        let parents: BTreeMap<u64, u64> = snap.iter().map(|r| (r.id, r.parent)).collect();
+        let mut out: Vec<SpanRecord> = snap
+            .into_iter()
+            .filter(|r| {
+                let mut cur = r.id;
+                loop {
+                    if cur == root {
+                        return true;
+                    }
+                    match parents.get(&cur) {
+                        Some(&p) if p != 0 => cur = p,
+                        _ => return false,
+                    }
+                }
+            })
+            .collect();
+        out.sort_by_key(|r| (r.start_ns, r.id));
+        out
+    }
+}
+
+/// RAII span handle: scopes the thread's current span while alive and
+/// records a [`SpanRecord`] on drop. A no-op guard (disabled recorder
+/// or parentless child) has `id() == 0` and records nothing.
+pub struct SpanGuard<'a> {
+    recorder: &'a FlightRecorder,
+    id: u64,
+    parent: u64,
+    prev: u64,
+    name: &'static str,
+    start: Instant,
+}
+
+impl SpanGuard<'_> {
+    fn noop(recorder: &FlightRecorder) -> SpanGuard<'_> {
+        SpanGuard { recorder, id: 0, parent: 0, prev: 0, name: "", start: Instant::now() }
+    }
+
+    /// This span's handle — pass to [`FlightRecorder::child_of`] to
+    /// parent work on another thread, or to [`FlightRecorder::trace`]
+    /// after the guard drops. 0 for no-op guards.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if self.id == 0 {
+            return;
+        }
+        CURRENT.set(self.prev);
+        self.recorder.record(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            start_ns: self.start.duration_since(self.recorder.epoch).as_nanos() as u64,
+            dur_ns: self.start.elapsed().as_nanos() as u64,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nesting_parents_and_scoping() {
+        let fr = FlightRecorder::new(64);
+        assert_eq!(FlightRecorder::current(), 0);
+        let (root_id, child_id, grandchild_id);
+        {
+            let root = fr.root("t.root");
+            root_id = root.id();
+            assert_ne!(root_id, 0);
+            assert_eq!(FlightRecorder::current(), root_id);
+            {
+                let child = fr.child("t.child");
+                child_id = child.id();
+                assert_eq!(FlightRecorder::current(), child_id);
+                {
+                    let g = fr.child("t.grandchild");
+                    grandchild_id = g.id();
+                }
+                assert_eq!(FlightRecorder::current(), child_id, "scope restored after drop");
+            }
+            assert_eq!(FlightRecorder::current(), root_id);
+        }
+        assert_eq!(FlightRecorder::current(), 0);
+
+        let trace = fr.trace(root_id);
+        assert_eq!(trace.len(), 3);
+        assert_eq!(trace[0].name, "t.root");
+        assert_eq!(trace[0].parent, 0);
+        let child = trace.iter().find(|r| r.id == child_id).unwrap();
+        assert_eq!(child.parent, root_id);
+        let g = trace.iter().find(|r| r.id == grandchild_id).unwrap();
+        assert_eq!(g.parent, child_id);
+        // children are contained in the parent window
+        assert!(child.start_ns >= trace[0].start_ns);
+        assert!(child.dur_ns <= trace[0].dur_ns);
+    }
+
+    #[test]
+    fn trace_excludes_foreign_roots() {
+        let fr = FlightRecorder::new(64);
+        let a_id;
+        {
+            let a = fr.root("t.a");
+            a_id = a.id();
+            let _inner = fr.child("t.a.inner");
+        }
+        {
+            let _b = fr.root("t.b");
+            let _inner = fr.child("t.b.inner");
+        }
+        let trace = fr.trace(a_id);
+        assert_eq!(trace.len(), 2);
+        assert!(trace.iter().all(|r| r.name.starts_with("t.a")));
+    }
+
+    #[test]
+    fn child_without_parent_is_noop() {
+        let fr = FlightRecorder::new(8);
+        {
+            let g = fr.child("t.orphan");
+            assert_eq!(g.id(), 0);
+        }
+        assert!(fr.snapshot().is_empty());
+        {
+            let g = fr.child_of("t.explicit-orphan", 0);
+            assert_eq!(g.id(), 0);
+        }
+        assert!(fr.snapshot().is_empty());
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let fr = FlightRecorder::new(8);
+        fr.set_enabled(false);
+        {
+            let g = fr.root("t.off");
+            assert_eq!(g.id(), 0);
+        }
+        assert!(fr.snapshot().is_empty());
+        fr.set_enabled(true);
+        {
+            let _g = fr.root("t.on");
+        }
+        assert_eq!(fr.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let fr = FlightRecorder::new(4);
+        let mut ids = Vec::new();
+        for _ in 0..6 {
+            let g = fr.root("t.evict");
+            ids.push(g.id());
+        }
+        let snap = fr.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert_eq!(fr.evicted(), 2);
+        let kept: Vec<u64> = snap.iter().map(|r| r.id).collect();
+        assert_eq!(kept, ids[2..].to_vec(), "oldest two evicted, order preserved");
+        fr.clear();
+        assert!(fr.snapshot().is_empty());
+        assert_eq!(fr.evicted(), 2);
+    }
+
+    #[test]
+    fn cross_thread_parenting_via_explicit_handle() {
+        use std::sync::Arc;
+        let fr = Arc::new(FlightRecorder::new(64));
+        let root_id;
+        {
+            let root = fr.root("t.xthread.root");
+            root_id = root.id();
+            let fr2 = Arc::clone(&fr);
+            std::thread::spawn(move || {
+                // worker thread: no implicit current span
+                assert_eq!(FlightRecorder::current(), 0);
+                let child = fr2.child_of("t.xthread.worker", root_id);
+                assert_ne!(child.id(), 0);
+                let _nested = fr2.child("t.xthread.nested");
+            })
+            .join()
+            .unwrap();
+        }
+        let trace = fr.trace(root_id);
+        assert_eq!(trace.len(), 3);
+        let worker = trace.iter().find(|r| r.name == "t.xthread.worker").unwrap();
+        assert_eq!(worker.parent, root_id);
+        let nested = trace.iter().find(|r| r.name == "t.xthread.nested").unwrap();
+        assert_eq!(nested.parent, worker.id);
+    }
+}

@@ -4,6 +4,7 @@
 use crate::engine::{KernelImpl, OracleSpec, Precision, ShardPlan};
 use crate::linalg::gemm::CpuKernel;
 use crate::linalg::SharedMatrix;
+use crate::obs;
 use crate::optim::{Optimizer, SummaryResult};
 use crate::shard::merge::greedy_merge;
 use crate::shard::partition::Partitioner;
@@ -12,8 +13,15 @@ use crate::shard::wire::{ShardJobMsg, ShardResultMsg, WirePlan};
 use crate::submodular::Oracle;
 use crate::util::threadpool::default_threads;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
+
+fn merge_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(obs::MERGE_SECONDS, "stage-2 greedy-merge latency per sharded run (seconds)")
+    })
+}
 
 /// Oracle constructor seam shared with the coordinator: `Sync` so the
 /// per-shard stage can call it from pool workers concurrently. The
@@ -208,7 +216,10 @@ impl<'a> ShardedSummarizer<'a> {
         let p = self.shards.max(1);
 
         let t0 = Instant::now();
-        let parts = self.partitioner.partition(data, p);
+        let parts = {
+            let _span = obs::span("shard.partition");
+            self.partitioner.partition(data, p)
+        };
         debug_assert!(
             crate::shard::partition::validate_partition(&parts, data.rows(), p).is_ok()
         );
@@ -259,6 +270,10 @@ impl<'a> ShardedSummarizer<'a> {
             alive: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
         };
+        // opened before the ExecCtx so worker threads parent their
+        // transport.job spans under this stage (the ctx captures the
+        // constructing thread's current span)
+        let stage1_span = obs::span("shard.stage1");
         let ctx = ExecCtx::local(factory, self.optimizer, shard_spec.plan.clone(), threads);
         let local = InProcessTransport::default();
         // `transport` aliases `local` when no external transport is set
@@ -291,6 +306,7 @@ impl<'a> ShardedSummarizer<'a> {
             stats.wire_bytes += extra.wire_bytes;
             stats.shard_retries += extra.shard_retries;
         }
+        drop(stage1_span);
         let per_shard: Vec<ShardRun> = results.iter().map(ShardRun::from_msg).collect();
         let shard_seconds = t1.elapsed().as_secs_f64();
 
@@ -309,10 +325,14 @@ impl<'a> ShardedSummarizer<'a> {
             None => OracleSpec::unplanned(),
         };
         let mut merge_oracle = factory(Arc::clone(data), &merge_spec);
-        let merged = greedy_merge(merge_oracle.as_mut(), &union, k, self.merge_batch);
+        let merged = {
+            let _span = obs::span("shard.merge");
+            merge_hist().time(|| greedy_merge(merge_oracle.as_mut(), &union, k, self.merge_batch))
+        };
         let merge_seconds = t2.elapsed().as_secs_f64();
 
         let baseline = with_baseline.then(|| {
+            let _span = obs::span("shard.baseline");
             let mut oracle = factory(Arc::clone(data), &merge_spec);
             self.optimizer.run(oracle.as_mut(), k)
         });

@@ -29,6 +29,7 @@
 //! registry optimizer by id, the plan from its serialized scalar core).
 
 use crate::engine::{OracleSpec, ShardPlan};
+use crate::obs;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::shard::summarizer::ShardOracleFactory;
 use crate::shard::wire::{
@@ -37,7 +38,21 @@ use crate::shard::wire::{
 use crate::util::threadpool::par_map;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+fn wire_encode_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(obs::WIRE_ENCODE_SECONDS, "wire frame encode latency (seconds)")
+    })
+}
+
+fn wire_decode_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(obs::WIRE_DECODE_SECONDS, "wire frame decode latency (seconds)")
+    })
+}
 
 pub use crate::coordinator::replica::{Replica, ReplicaRegistry, ReplicaState};
 
@@ -134,6 +149,11 @@ pub struct ExecCtx<'a> {
     pub plan: Option<Arc<ShardPlan>>,
     /// Worker width for transports that fan out on the local pool.
     pub workers: usize,
+    /// Span handle of the dispatching stage, captured at construction
+    /// (0 = not inside a traced request). Worker threads have no
+    /// implicit current span, so per-shard `transport.job` spans parent
+    /// here explicitly — see [`crate::obs`].
+    pub span: u64,
 }
 
 impl<'a> ExecCtx<'a> {
@@ -144,7 +164,13 @@ impl<'a> ExecCtx<'a> {
         plan: Option<Arc<ShardPlan>>,
         workers: usize,
     ) -> ExecCtx<'a> {
-        ExecCtx { factory, optimizer: Some(optimizer), plan, workers }
+        ExecCtx {
+            factory,
+            optimizer: Some(optimizer),
+            plan,
+            workers,
+            span: obs::current_span(),
+        }
     }
 
     /// Context a remote worker would run with: everything except the
@@ -154,7 +180,7 @@ impl<'a> ExecCtx<'a> {
     /// plan is rebuilt bucket-less from its serialized core, with
     /// buckets re-picked from the worker's own manifest.
     pub fn remote(factory: &'a ShardOracleFactory, workers: usize) -> ExecCtx<'a> {
-        ExecCtx { factory, optimizer: None, plan: None, workers }
+        ExecCtx { factory, optimizer: None, plan: None, workers, span: obs::current_span() }
     }
 }
 
@@ -246,15 +272,32 @@ fn run_one(
     ctx: &ExecCtx,
     stats: &TransportStats,
 ) -> Result<ShardResultMsg, TransportError> {
+    // explicit-parent span: this usually runs on a pool worker with no
+    // implicit current span (no-op when the dispatch wasn't traced)
+    let _span = obs::span_under("transport.job", ctx.span);
     let out: Result<ShardResultMsg, TransportError> = (|| {
-        let job_frame = encode_job(&jobs.job(i));
+        let job = jobs.job(i);
+        let job_frame = {
+            let _s = obs::span("wire.encode");
+            wire_encode_hist().time(|| encode_job(&job))
+        };
+        drop(job);
         stats.add_bytes(job_frame.len());
-        let decoded = decode_job(&job_frame)?;
+        let decoded = {
+            let _s = obs::span("wire.decode");
+            wire_decode_hist().time(|| decode_job(&job_frame))
+        }?;
         drop(job_frame);
         let result = execute_job(decoded, ctx)?;
-        let result_frame = encode_result(&result);
+        let result_frame = {
+            let _s = obs::span("wire.encode");
+            wire_encode_hist().time(|| encode_result(&result))
+        };
         stats.add_bytes(result_frame.len());
-        let returned = decode_result(&result_frame)?;
+        let returned = {
+            let _s = obs::span("wire.decode");
+            wire_decode_hist().time(|| decode_result(&result_frame))
+        }?;
         Ok(returned)
     })();
     jobs.complete(i);

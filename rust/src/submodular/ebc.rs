@@ -13,11 +13,19 @@
 
 use crate::linalg::gemm::{self, CpuKernel};
 use crate::linalg::{sq_euclidean, sq_norms, Matrix, SharedMatrix};
+use crate::obs;
 use crate::runtime::artifact::Precision;
 use crate::submodular::Oracle;
 use crate::util::threadpool::scoped_chunks_mut;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+fn gains_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::histogram(obs::GAINS_SECONDS, "per-call CPU-oracle gains latency (seconds)")
+    })
+}
 
 /// The EBC function f(S) = L({e0}) − L(S ∪ {e0}) over a fixed ground set
 /// (paper Definition 5), with e0 = 0 and d = squared Euclidean.
@@ -560,10 +568,11 @@ impl Oracle for CpuOracle {
         self.f.vsq()
     }
     fn gains(&mut self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
-        match self.f.kernel() {
+        let _span = obs::span("kernel.gains");
+        gains_hist().time(|| match self.f.kernel() {
             CpuKernel::Scalar if self.threads > 1 => self.f.gains_mt(mindist, cands, self.threads),
             _ => self.f.gains(mindist, cands),
-        }
+        })
     }
     fn dist_col(&mut self, j: usize) -> Vec<f32> {
         self.f.dist_col(j)

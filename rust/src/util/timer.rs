@@ -1,9 +1,8 @@
-//! Wall-clock timing helpers + a lightweight hierarchical profile
-//! recorder used by the perf pass (perf(1)/flamegraph are unavailable in
-//! the container; the bench harness relies on these scoped timers).
+//! Wall-clock timing helpers for the bench harness (perf(1)/flamegraph
+//! are unavailable in the container). Scoped/accumulating profiling
+//! lives in [`crate::obs`] — histograms + spans replaced the old
+//! `Profile` recorder.
 
-use std::collections::BTreeMap;
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Time a closure, returning (result, seconds).
@@ -30,61 +29,6 @@ pub fn sample(mut f: impl FnMut(), min_iters: usize, min_time: Duration) -> Vec<
     samples
 }
 
-/// Accumulating profile: named counters of (calls, total seconds).
-/// Cheap enough to leave enabled on the hot path of the coordinator.
-#[derive(Default)]
-pub struct Profile {
-    inner: Mutex<BTreeMap<String, (u64, Duration)>>,
-}
-
-impl Profile {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn record(&self, name: &str, d: Duration) {
-        let mut m = self.inner.lock().unwrap();
-        let e = m.entry(name.to_string()).or_insert((0, Duration::ZERO));
-        e.0 += 1;
-        e.1 += d;
-    }
-
-    /// Time a closure under `name`.
-    pub fn scope<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
-        let out = f();
-        self.record(name, t0.elapsed());
-        out
-    }
-
-    pub fn snapshot(&self) -> Vec<(String, u64, f64)> {
-        let m = self.inner.lock().unwrap();
-        m.iter()
-            .map(|(k, (n, d))| (k.clone(), *n, d.as_secs_f64()))
-            .collect()
-    }
-
-    pub fn report(&self) -> String {
-        let mut rows = self.snapshot();
-        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
-        let mut out = format!("{:<40} {:>10} {:>12} {:>12}\n", "scope", "calls", "total_s", "per_call_us");
-        for (name, calls, secs) in rows {
-            out.push_str(&format!(
-                "{:<40} {:>10} {:>12.4} {:>12.2}\n",
-                name,
-                calls,
-                secs,
-                secs / calls.max(1) as f64 * 1e6
-            ));
-        }
-        out
-    }
-
-    pub fn reset(&self) {
-        self.inner.lock().unwrap().clear();
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,19 +50,4 @@ mod tests {
         assert!(s.iter().all(|&x| x >= 0.0));
     }
 
-    #[test]
-    fn profile_accumulates() {
-        let p = Profile::new();
-        p.scope("a", || std::thread::sleep(Duration::from_millis(2)));
-        p.scope("a", || {});
-        p.scope("b", || {});
-        let snap = p.snapshot();
-        assert_eq!(snap.len(), 2);
-        let a = snap.iter().find(|(n, _, _)| n == "a").unwrap();
-        assert_eq!(a.1, 2);
-        assert!(a.2 > 0.001);
-        assert!(p.report().contains("per_call_us"));
-        p.reset();
-        assert!(p.snapshot().is_empty());
-    }
 }

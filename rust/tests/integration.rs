@@ -59,7 +59,7 @@ fn coordinator_over_xla_engine_summarizes_fleet() {
             other => panic!("{m}: {other:?}"),
         }
     }
-    assert!(c.metrics.refreshes >= 2);
+    assert!(c.metrics.refreshes.get() >= 2);
 }
 
 #[test]
@@ -128,6 +128,42 @@ ingest_batch = 8
     let snap = snapshot::snapshot(&c);
     let parsed = Json::parse(&snap.dump()).unwrap();
     assert_eq!(parsed.get("service").unwrap().as_str(), Some("plant-x"));
+}
+
+#[test]
+fn traced_sharded_request_spans_every_layer() {
+    use ebc::api::{DatasetRef, Service, ShardSpec, SummarizeRequest};
+    let service = Service::from_backend("cpu").unwrap();
+    let req = SummarizeRequest::new(DatasetRef::synthetic(240, 12, 11), 4)
+        .sharded(ShardSpec::new(2).transport("loopback"))
+        .trace(true);
+    let res = service.summarize(&req).unwrap();
+    let spans = res.provenance.trace.as_ref().expect("trace requested");
+    let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+    // one tree covering api -> shard -> transport -> wire -> kernel
+    for want in [
+        "api.execute",
+        "shard.partition",
+        "shard.stage1",
+        "shard.merge",
+        "transport.job",
+        "wire.encode",
+        "wire.decode",
+        "kernel.gains",
+    ] {
+        assert!(names.contains(&want), "missing span '{want}' in {names:?}");
+    }
+    // the root is api.execute and every other span descends from it
+    let root = spans.iter().find(|s| s.name == "api.execute").unwrap();
+    let ids: std::collections::HashSet<u64> = spans.iter().map(|s| s.id).collect();
+    for s in spans.iter() {
+        if s.id != root.id {
+            assert!(ids.contains(&s.parent), "span {} detached from tree", s.name);
+        }
+    }
+    // an untraced request leaves provenance.trace empty
+    let quiet = SummarizeRequest::new(DatasetRef::synthetic(240, 12, 11), 4);
+    assert!(service.summarize(&quiet).unwrap().provenance.trace.is_none());
 }
 
 #[test]

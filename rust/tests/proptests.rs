@@ -1274,6 +1274,77 @@ fn prop_greedy_selections_identical_scalar_vs_blocked() {
     );
 }
 
+// ------------------------------------------------- observability layer
+
+#[test]
+fn prop_registry_backed_metrics_snapshot_matches_field_mirror() {
+    // satellite invariant: the registry-backed CoordinatorMetrics
+    // produce byte-identical snapshot JSON to the pre-refactor
+    // field-based builder fed the same values — the 13-key `metrics`
+    // contract is frozen
+    use ebc::coordinator::snapshot;
+    use ebc::util::json::ObjBuilder;
+    forall(
+        "registry-backed metrics JSON == pre-refactor field-based shape",
+        &Config { cases: 24, seed: 0x0B5E },
+        |rng| {
+            let vals: Vec<u64> = (0..11).map(|_| rng.next_u64() >> 40).collect();
+            let secs = (rng.f32() as f64, rng.f32() as f64);
+            (vals, secs)
+        },
+        |(vals, secs)| {
+            let factory = Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
+                Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+            });
+            let c = Coordinator::new(ServiceConfig::default(), factory);
+            let m = &c.metrics;
+            m.ingested.add(vals[0]);
+            m.malformed.add(vals[1]);
+            m.evicted.add(vals[2]);
+            m.throttle_signals.add(vals[3]);
+            m.refreshes.add(vals[4]);
+            m.queries.add(vals[5]);
+            m.fleet_queries.add(vals[6]);
+            m.shard_runs.add(vals[7]);
+            m.shard_retries.add(vals[8]);
+            m.wire_bytes_total.add(vals[9]);
+            m.replica_count.set(vals[10] as i64);
+            m.refresh_seconds_total.add(secs.0);
+            m.shard_merge_seconds_total.add(secs.1);
+
+            // the pre-refactor builder, fed the same values in the same
+            // key order
+            let want = ObjBuilder::new()
+                .int("ingested", vals[0] as usize)
+                .int("malformed", vals[1] as usize)
+                .int("evicted", vals[2] as usize)
+                .int("throttle_signals", vals[3] as usize)
+                .int("refreshes", vals[4] as usize)
+                .num("refresh_seconds_total", secs.0)
+                .int("queries", vals[5] as usize)
+                .int("fleet_queries", vals[6] as usize)
+                .int("shard_runs", vals[7] as usize)
+                .num("shard_merge_seconds_total", secs.1)
+                .int("replica_count", vals[10] as usize)
+                .int("shard_retries", vals[8] as usize)
+                .int("wire_bytes_total", vals[9] as usize)
+                .build();
+            let snap = snapshot::snapshot(&c);
+            let got = snap
+                .get("metrics")
+                .ok_or_else(|| "metrics section missing".to_string())?;
+            if got.dump() != want.dump() {
+                return Err(format!(
+                    "metrics drifted:\n got {}\nwant {}",
+                    got.dump(),
+                    want.dump()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 // ------------------------------------------------------- rng sanity
 
 #[test]
