@@ -1,0 +1,27 @@
+//! Coverage-guided fuzzing of every wire decoder.
+//!
+//! The contract (same one `tests/wire_torture.rs` checks with seeded
+//! mutations): an arbitrary byte string is classified or rejected with
+//! a typed `WireError` — decoders never panic, never overflow, and
+//! never allocate from a hostile length field. libFuzzer supplies the
+//! bytes; any panic or sanitizer fault is a finding.
+
+#![no_main]
+
+use ebc::shard::wire::{
+    decode_goodbye, decode_heartbeat, decode_hello, decode_job, decode_request, decode_result,
+    frame_kind,
+};
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    // classification first: whatever it says, every decoder must still
+    // hold the no-panic contract on the raw bytes
+    let _ = frame_kind(data);
+    let _ = decode_job(data);
+    let _ = decode_result(data);
+    let _ = decode_request(data);
+    let _ = decode_hello(data);
+    let _ = decode_heartbeat(data);
+    let _ = decode_goodbye(data);
+});

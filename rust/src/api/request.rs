@@ -6,7 +6,7 @@ use crate::imm::{generate_dataset_with, Part, ProcessState};
 use crate::linalg::{CpuKernel, Matrix, SharedMatrix};
 use crate::optim::{Optimizer, ALGORITHMS};
 use crate::shard::wire::{WireDataset, WireRequest, WireShardSpec};
-use crate::shard::{PARTITIONERS, TRANSPORTS};
+use crate::shard::{NetOptions, PARTITIONERS, TRANSPORTS};
 use crate::util::rng::Rng;
 use std::fmt;
 use std::sync::Arc;
@@ -120,6 +120,11 @@ pub struct ShardSpec {
     pub plan: bool,
     /// Core budget for planned runs (0 = auto).
     pub cores: usize,
+    /// Network knobs for the `tcp` transport: replica endpoints,
+    /// deadlines, retry budget, chaos seed. Local-only — the knobs
+    /// never cross the wire (a remote executor fans out with its own
+    /// fleet configuration), so the v2 request frame stays frozen.
+    pub net: NetOptions,
 }
 
 impl Default for ShardSpec {
@@ -133,6 +138,7 @@ impl Default for ShardSpec {
             replicas: 2,
             plan: false,
             cores: 0,
+            net: NetOptions::default(),
         }
     }
 }
@@ -175,6 +181,13 @@ impl ShardSpec {
 
     pub fn cores(mut self, cores: usize) -> ShardSpec {
         self.cores = cores;
+        self
+    }
+
+    /// Network knobs for the `tcp` transport (endpoints, deadlines,
+    /// retry budget, chaos seed).
+    pub fn net(mut self, net: NetOptions) -> ShardSpec {
+        self.net = net;
         self
     }
 }
@@ -374,6 +387,12 @@ impl SummarizeRequest {
                     "replica transports need at least one replica",
                 ));
             }
+            if spec.transport == "tcp" && spec.net.addrs.is_empty() {
+                return Err(ApiError::invalid(
+                    "shard.net.addrs",
+                    "the tcp transport needs at least one replica endpoint",
+                ));
+            }
         }
         Ok(())
     }
@@ -463,6 +482,9 @@ impl SummarizeRequest {
                 replicas: s.replicas as usize,
                 plan: s.plan,
                 cores: s.cores as usize,
+                // local-only knob: remote executors keep their own
+                // fleet configuration
+                net: NetOptions::default(),
             }),
             seed: w.seed,
             with_baseline: w.with_baseline,
@@ -529,6 +551,23 @@ mod tests {
             base.sharded(ShardSpec::new(0)).validate(),
             Err(ApiError::Invalid { field: "shard.partitions", .. })
         ));
+    }
+
+    #[test]
+    fn tcp_transport_requires_endpoints() {
+        let base = SummarizeRequest::new(inline(20, 4, 1), 5);
+        assert!(matches!(
+            base.clone().sharded(ShardSpec::new(2).transport("tcp")).validate(),
+            Err(ApiError::Invalid { field: "shard.net.addrs", .. })
+        ));
+        let net = NetOptions {
+            addrs: vec!["127.0.0.1:7700".into()],
+            ..NetOptions::default()
+        };
+        assert!(base
+            .sharded(ShardSpec::new(2).transport("tcp").net(net))
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -49,6 +49,11 @@ pub struct Provenance {
     /// Most stage-1 job payloads alive at once (bounded by transport
     /// concurrency — see [`crate::shard::JobSource`]).
     pub peak_jobs_held: usize,
+    /// The configured shard transport failed outright (e.g. every
+    /// remote replica dead) and stage 1 degraded to the in-process
+    /// fallback. The exemplars are still correct; the fleet did not
+    /// produce them. Always `false` for single-node runs.
+    pub degraded: bool,
     /// The request's span tree (children after parents is not
     /// guaranteed; sort key is start time). Populated only when the
     /// request set its `trace` knob and span recording is enabled —

@@ -1,7 +1,7 @@
 //! The façade's executor: one [`Service`] per evaluation backend, one
 //! [`execute`] core shared by every entrypoint (CLI, coordinator,
-//! benches, examples — and, via [`crate::shard::wire::WireRequest`],
-//! the future socket listener).
+//! benches, examples — and, via [`crate::shard::wire`] frames, the TCP
+//! replica servers of [`crate::shard::net`]).
 
 use crate::api::error::ApiError;
 use crate::api::request::{OptimizerSel, SummarizeRequest};
@@ -16,8 +16,8 @@ use crate::obs;
 use crate::optim::{build_optimizer, Optimizer, ALGORITHMS};
 use crate::runtime::Runtime;
 use crate::shard::{
-    build_partitioner, build_transport, ShardOracleFactory, ShardTransport, ShardedSummarizer,
-    PARTITIONERS, TRANSPORTS,
+    build_partitioner, build_transport_with, ShardOracleFactory, ShardTransport,
+    ShardedSummarizer, PARTITIONERS, TRANSPORTS,
 };
 use crate::submodular::{CpuOracle, Oracle};
 use std::sync::{Arc, OnceLock};
@@ -304,6 +304,7 @@ fn execute_inner(
                 shard_retries: 0,
                 shards_used: 0,
                 peak_jobs_held: 0,
+                degraded: false,
                 trace: None,
             },
             baseline: None,
@@ -319,7 +320,7 @@ fn execute_inner(
             // summarizer's run-local inproc default needs no handle
             (true, _) | (false, "inproc") => None,
             (false, name) => Some(
-                build_transport(name, spec.replicas.max(1))
+                build_transport_with(name, spec.replicas.max(1), &spec.net)
                     .ok_or_else(|| ApiError::unknown("shard.transport", name, TRANSPORTS))?,
             ),
         };
@@ -376,6 +377,7 @@ fn execute_inner(
             shard_retries: res.shard_retries,
             shards_used: res.shards_used,
             peak_jobs_held: res.peak_jobs_held,
+            degraded: res.degraded,
             trace: None,
         },
         baseline: res.baseline.map(|b| BaselineRun {
@@ -434,6 +436,7 @@ mod tests {
         assert_eq!(p.shards_used, 3);
         assert!(p.wire_bytes > 0);
         assert_eq!(p.shard_retries, 0);
+        assert!(!p.degraded, "healthy loopback fleet reported degraded");
         assert!(p.plan.as_deref().unwrap().contains("P=3"));
         assert!(p.plan_split.is_some());
         assert!(p.peak_jobs_held >= 1);

@@ -60,6 +60,9 @@ pub struct ShardSweepConfig {
     pub transport: String,
     /// Replica count for the `loopback` transport.
     pub replicas: usize,
+    /// Endpoints/deadlines/retry knobs for the `tcp` transport
+    /// (ignored by the in-process transports).
+    pub net: crate::shard::NetOptions,
     /// CPU kernel backend the oracles run on.
     pub cpu_kernel: CpuKernel,
     /// Per-oracle kernel threads (0 = auto).
@@ -79,6 +82,7 @@ impl Default for ShardSweepConfig {
             cores: 0,
             transport: "inproc".into(),
             replicas: 2,
+            net: crate::shard::NetOptions::default(),
             cpu_kernel: CpuKernel::Scalar,
             oracle_threads: 1,
         }
@@ -108,6 +112,7 @@ impl ShardSweepConfig {
                     .threads(self.threads)
                     .transport(&self.transport)
                     .replicas(self.replicas)
+                    .net(self.net.clone())
                     .plan(self.planned)
                     .cores(self.cores),
             )

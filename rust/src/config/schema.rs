@@ -75,14 +75,52 @@ pub struct ShardSection {
     pub cores: usize,
     /// Shard-stage transport: one of [`crate::shard::TRANSPORTS`]
     /// (`inproc` = threadpool workers, `loopback` = the replica
-    /// registry). Either way shards travel as wire-format frames.
+    /// registry, `tcp` = a real replica fleet over sockets). Either way
+    /// shards travel as wire-format frames.
     pub transport: String,
     /// Replica count for the `loopback` transport.
     pub replicas: usize,
+    /// Replica endpoints (`host:port`) for the `tcp` transport —
+    /// required (non-empty) when `transport = "tcp"`.
+    pub addrs: Vec<String>,
+    /// TCP connect deadline per attempt (ms).
+    pub connect_timeout_ms: u64,
+    /// Socket read/write deadline per operation (ms); must cover one
+    /// shard's execution on the replica.
+    pub io_timeout_ms: u64,
+    /// Transient-failure retries per replica before it is declared dead
+    /// and its shards re-queue.
+    pub retries: u64,
+    /// Base retry backoff (ms), doubled per attempt with jitter.
+    pub backoff_ms: u64,
+    /// Largest frame accepted off the wire (MiB).
+    pub max_frame_mb: u64,
+    /// Heartbeat age (rounds) past which a silent replica expires.
+    pub heartbeat_max_age: u64,
+    /// Fault-injection seed for chaos testing (0 = off) — see
+    /// [`crate::shard::fault`].
+    pub chaos: u64,
+}
+
+impl ShardSection {
+    /// The [`crate::shard::NetOptions`] this section describes.
+    pub fn net_options(&self) -> crate::shard::NetOptions {
+        crate::shard::NetOptions {
+            addrs: self.addrs.clone(),
+            connect_timeout_ms: self.connect_timeout_ms,
+            io_timeout_ms: self.io_timeout_ms,
+            retries: self.retries as u32,
+            backoff_ms: self.backoff_ms,
+            max_frame_mb: self.max_frame_mb as u32,
+            heartbeat_max_age: self.heartbeat_max_age,
+            chaos: self.chaos,
+        }
+    }
 }
 
 impl Default for ShardSection {
     fn default() -> Self {
+        let net = crate::shard::NetOptions::default();
         ShardSection {
             shards: 2,
             partitioner: "round_robin".into(),
@@ -93,6 +131,14 @@ impl Default for ShardSection {
             cores: 0,
             transport: "inproc".into(),
             replicas: 2,
+            addrs: net.addrs,
+            connect_timeout_ms: net.connect_timeout_ms,
+            io_timeout_ms: net.io_timeout_ms,
+            retries: net.retries as u64,
+            backoff_ms: net.backoff_ms,
+            max_frame_mb: net.max_frame_mb as u64,
+            heartbeat_max_age: net.heartbeat_max_age,
+            chaos: net.chaos,
         }
     }
 }
@@ -205,6 +251,13 @@ impl ServiceConfig {
                 crate::shard::TRANSPORTS
             );
         }
+        let addrs = match doc.get("shard.addrs") {
+            Some(Value::StrArray(a)) => a.clone(),
+            _ => vec![],
+        };
+        if transport == "tcp" && addrs.is_empty() {
+            bail!("shard.addrs: transport = \"tcp\" needs at least one replica endpoint");
+        }
         let machines = match doc.get("coordinator.machines") {
             Some(Value::StrArray(a)) => a.clone(),
             _ => vec![],
@@ -246,6 +299,14 @@ impl ServiceConfig {
                 cores: pos("shard.cores", 0)?,
                 transport,
                 replicas: pos("shard.replicas", 2)?.max(1),
+                addrs,
+                connect_timeout_ms: pos("shard.connect_timeout_ms", 1000)?.max(1) as u64,
+                io_timeout_ms: pos("shard.io_timeout_ms", 5000)?.max(1) as u64,
+                retries: pos("shard.retries", 2)? as u64,
+                backoff_ms: pos("shard.backoff_ms", 50)?.max(1) as u64,
+                max_frame_mb: pos("shard.max_frame_mb", 64)?.max(1) as u64,
+                heartbeat_max_age: pos("shard.heartbeat_max_age", 3)?.max(1) as u64,
+                chaos: pos("shard.chaos", 0)? as u64,
             },
             obs: ObsSection {
                 enabled: doc.bool("obs.enabled", true),
@@ -361,6 +422,54 @@ hist_buckets = 24
     fn rejects_unknown_transport() {
         let doc = ConfigDoc::parse("[shard]\ntransport = \"telepathy\"\n").unwrap();
         assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn tcp_transport_requires_addrs() {
+        let doc = ConfigDoc::parse("[shard]\ntransport = \"tcp\"\n").unwrap();
+        assert!(ServiceConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse(
+            "[shard]\ntransport = \"tcp\"\naddrs = [\"10.0.0.7:7700\", \"10.0.0.8:7700\"]\n",
+        )
+        .unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.shard.transport, "tcp");
+        assert_eq!(c.shard.addrs, vec!["10.0.0.7:7700", "10.0.0.8:7700"]);
+    }
+
+    #[test]
+    fn net_knobs_parse_and_convert() {
+        let doc = ConfigDoc::parse(
+            r#"
+[shard]
+transport = "tcp"
+addrs = ["127.0.0.1:7700"]
+connect_timeout_ms = 250
+io_timeout_ms = 9000
+retries = 4
+backoff_ms = 10
+max_frame_mb = 8
+heartbeat_max_age = 5
+chaos = 77
+"#,
+        )
+        .unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        let net = c.shard.net_options();
+        assert_eq!(net.addrs, vec!["127.0.0.1:7700"]);
+        assert_eq!(net.connect_timeout_ms, 250);
+        assert_eq!(net.io_timeout_ms, 9000);
+        assert_eq!(net.retries, 4);
+        assert_eq!(net.backoff_ms, 10);
+        assert_eq!(net.max_frame_mb, 8);
+        assert_eq!(net.heartbeat_max_age, 5);
+        assert_eq!(net.chaos, 77);
+    }
+
+    #[test]
+    fn net_defaults_match_net_options() {
+        let c = ServiceConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert_eq!(c.shard.net_options(), crate::shard::NetOptions::default());
     }
 
     #[test]

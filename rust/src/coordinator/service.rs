@@ -55,6 +55,10 @@ pub struct CoordinatorMetrics {
     pub replica_count: obs::Gauge,
     /// Shards re-queued after replica failures (cumulative).
     pub shard_retries: obs::Counter,
+    /// Fleet queries whose shard transport failed outright and degraded
+    /// to the in-process fallback (the answer was computed locally, not
+    /// by the fleet).
+    pub fleet_degraded: obs::Counter,
     /// Bytes moved over the shard transport (job + result frames).
     pub wire_bytes_total: obs::Counter,
     /// Latency distribution of summary refreshes (optimizer runs).
@@ -89,6 +93,10 @@ impl Default for CoordinatorMetrics {
                 .gauge("coord_replica_count", "worker replicas currently accepting shards"),
             shard_retries: r
                 .counter("coord_shard_retries_total", "shards re-queued after replica failures"),
+            fleet_degraded: r.counter(
+                "coord_fleet_degraded_total",
+                "fleet queries degraded to the in-process transport",
+            ),
             wire_bytes_total: r
                 .counter("coord_wire_bytes_total", "bytes moved over the shard transport"),
             refresh_latency: r
@@ -124,6 +132,7 @@ impl std::fmt::Debug for CoordinatorMetrics {
             .field("shard_merge_seconds_total", &self.shard_merge_seconds_total.get())
             .field("replica_count", &self.replica_count.get())
             .field("shard_retries", &self.shard_retries.get())
+            .field("fleet_degraded", &self.fleet_degraded.get())
             .field("wire_bytes_total", &self.wire_bytes_total.get())
             .finish()
     }
@@ -167,10 +176,12 @@ impl Coordinator {
             }
             machines.insert(name.clone(), MachineState::new(name, cfg.summary.window.max(1)));
         }
-        let transport = crate::shard::build_transport(&cfg.shard.transport, cfg.shard.replicas)
-            .unwrap_or_else(|| {
-                unreachable!("schema validated transport '{}'", cfg.shard.transport)
-            });
+        let transport = crate::shard::build_transport_with(
+            &cfg.shard.transport,
+            cfg.shard.replicas,
+            &cfg.shard.net_options(),
+        )
+        .unwrap_or_else(|| unreachable!("schema validated transport '{}'", cfg.shard.transport));
         Coordinator {
             cfg,
             queue,
@@ -522,6 +533,9 @@ impl Coordinator {
         self.metrics.shard_retries.add(resp.provenance.shard_retries);
         self.metrics.wire_bytes_total.add(resp.provenance.wire_bytes);
         self.metrics.replica_count.set(self.transport.replica_count() as i64);
+        if resp.provenance.degraded {
+            self.metrics.fleet_degraded.inc();
+        }
 
         RouteResult::Fleet(FleetSummary {
             representatives: resp
@@ -720,6 +734,7 @@ mod tests {
         assert_eq!(c.metrics.queries.get(), 1); // fleet queries count as queries too
         assert!(c.metrics.wire_bytes_total.get() > 0, "fleet query moved no wire bytes");
         assert_eq!(c.metrics.shard_retries.get(), 0);
+        assert_eq!(c.metrics.fleet_degraded.get(), 0, "healthy fleet reported degraded");
         assert_eq!(c.metrics.replica_count.get(), 0, "inproc transport has no replicas");
         assert_eq!(c.metrics.fleet_latency.snapshot().count, 1);
         let bytes_after_one = c.metrics.wire_bytes_total.get();

@@ -10,6 +10,7 @@
 //! * `summarize`    — summarize a synthetic dataset (quick demo)
 //! * `casestudy`    — the paper's §6 injection-molding study (Table 2 / Fig. 4)
 //! * `serve`        — run the streaming coordinator over a simulated fleet
+//! * `serve-replica` — run one TCP worker replica (the `tcp` transport's far end)
 //! * `shard-bench`  — sharded two-stage scaling sweep (shards × wall-clock)
 //! * `kernel-bench` — CPU kernel backend sweep (scalar vs blocked × threads)
 //! * `devices`      — analytical device-model predictions (Table 1 shape)
@@ -25,14 +26,15 @@ use ebc::bench::{
 use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
 use ebc::config::schema::ServiceConfig;
 use ebc::coordinator::{SimulatedFleet, FLEET_QUERY};
-use ebc::engine::{PlanRequest, Precision};
+use ebc::engine::{OracleSpec, PlanRequest, Precision};
 use ebc::gpumodel::{
     predict_seconds, speedup, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
 };
 use ebc::imm::casestudy::{fig4_table, run_table2, table2_text, validate_expectations};
 use ebc::imm::{Part, ProcessState};
-use ebc::linalg::CpuKernel;
+use ebc::linalg::{CpuKernel, SharedMatrix};
 use ebc::obs;
+use ebc::shard::{NetOptions, ReplicaServer};
 use ebc::optim::Greedy;
 use ebc::runtime::Runtime;
 use ebc::util::logging;
@@ -90,6 +92,21 @@ fn app() -> AppSpec {
                 ],
             },
             CommandSpec {
+                name: "serve-replica",
+                help: "run one TCP worker replica serving shard jobs to a coordinator",
+                flags: vec![
+                    opt("addr", "listen address (port 0 = ephemeral)", "127.0.0.1:7700"),
+                    opt("id", "replica name sent in hello/heartbeat frames", "replica-1"),
+                    opt("capacity", "relative share of the shard deal (>= 1)", "1"),
+                    opt("workers", "job execution worker threads (>= 1)", "1"),
+                    opt("backend", "cpu | xla", "cpu"),
+                    opt("precision", "f32 | bf16", "f32"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked", "blocked"),
+                    opt("max-frame-mb", "largest accepted frame (MiB)", "64"),
+                    opt("io-timeout-ms", "per-socket-op read/write deadline", "5000"),
+                ],
+            },
+            CommandSpec {
                 name: "shard-bench",
                 help: "sharded two-stage summarization scaling sweep on a generated IMM dataset",
                 flags: vec![
@@ -109,8 +126,14 @@ fn app() -> AppSpec {
                     ),
                     flag("plan", "pre-plan bucket shape + P x T core split per shard count"),
                     opt("cores", "core budget for --plan (0 = auto)", "0"),
-                    opt("transport", "shard-stage transport: inproc | loopback", "inproc"),
+                    opt("transport", "shard-stage transport: inproc | loopback | tcp", "inproc"),
                     opt("replicas", "replica count for --transport loopback", "2"),
+                    opt(
+                        "replica-addrs",
+                        "comma-separated host:port endpoints for --transport tcp",
+                        "",
+                    ),
+                    opt("chaos", "fault-injection seed, 0 = off (see shard::fault)", "0"),
                     opt("out", "output JSON path", "BENCH_shard.json"),
                 ],
             },
@@ -169,6 +192,7 @@ fn main() {
         "summarize" => cmd_summarize(&m),
         "casestudy" => cmd_casestudy(&m),
         "serve" => cmd_serve(&m),
+        "serve-replica" => cmd_serve_replica(&m),
         "shard-bench" => cmd_shard_bench(&m),
         "kernel-bench" => cmd_kernel_bench(&m),
         "obs-dump" => cmd_obs_dump(&m),
@@ -349,6 +373,42 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_replica(m: &Matches) -> Result<()> {
+    use std::sync::atomic::AtomicBool;
+    let addr = m.str("addr")?;
+    let id = m.str("id")?;
+    let service = Service::from_backend(m.str("backend")?)?;
+    let factory = service.oracle_factory(
+        parse_precision(m.str("precision")?)?,
+        CpuKernel::parse(m.str("kernel")?)?,
+        0,
+    );
+    let f = |mat: SharedMatrix, spec: &OracleSpec| factory(mat, spec);
+    let opts = NetOptions {
+        io_timeout_ms: m.usize("io-timeout-ms")?.max(1) as u64,
+        max_frame_mb: m.usize("max-frame-mb")?.max(1) as u32,
+        ..NetOptions::default()
+    };
+    let server = ReplicaServer::bind(
+        addr,
+        id,
+        m.usize("capacity")?.max(1) as u32,
+        m.usize("workers")?,
+        &opts,
+    )?;
+    println!(
+        "replica '{id}' listening on {} (backend={}, stop with ctrl-c)",
+        server.local_addr()?,
+        service.backend_name()
+    );
+    // serve until the process is killed; the stop flag exists for
+    // embedders (tests flip it through ServerHandle)
+    let stop = AtomicBool::new(false);
+    let served = server.serve(&f, &stop)?;
+    println!("replica '{id}' served {served} job(s)");
+    Ok(())
+}
+
 fn parse_usize_list(raw: &str, flag: &str) -> Result<Vec<usize>> {
     let out: Vec<usize> = raw
         .split(',')
@@ -387,6 +447,16 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         cores: m.usize("cores")?,
         transport: m.str("transport")?.to_string(),
         replicas: m.usize("replicas")?.max(1),
+        net: NetOptions {
+            addrs: m
+                .str("replica-addrs")?
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+            chaos: m.usize("chaos")? as u64,
+            ..NetOptions::default()
+        },
         cpu_kernel: CpuKernel::parse(m.str("kernel")?)?,
         oracle_threads: m.usize("oracle-threads")?,
     };
@@ -407,10 +477,10 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
             cfg.threads
         },
         cfg.transport,
-        if cfg.transport == "loopback" {
-            format!(" ({} replicas)", cfg.replicas)
-        } else {
-            String::new()
+        match cfg.transport.as_str() {
+            "loopback" => format!(" ({} replicas)", cfg.replicas),
+            "tcp" => format!(" ({} endpoint(s))", cfg.net.addrs.len()),
+            _ => String::new(),
         },
         if cfg.planned { " (planned)" } else { "" }
     );

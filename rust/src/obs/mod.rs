@@ -56,6 +56,18 @@ pub const ENGINE_UPDATE_SECONDS: &str = "ebc_engine_update_seconds";
 pub const ENGINE_EVAL_SETS_SECONDS: &str = "ebc_engine_eval_sets_seconds";
 /// Counter of summarize requests executed through `api::execute`.
 pub const REQUESTS_TOTAL: &str = "ebc_requests_total";
+/// Counter of TCP connections the coordinator established to replicas.
+pub const NET_CONNECTS: &str = "ebc_net_connects";
+/// Counter of socket operations that hit their read/write/connect deadline.
+pub const NET_TIMEOUTS: &str = "ebc_net_timeouts";
+/// Counter of job attempts retried after a transient network failure.
+pub const NET_RETRIES: &str = "ebc_net_retries";
+/// Counter of bytes that crossed a real socket (both legs, as seen by
+/// the coordinator).
+pub const NET_BYTES: &str = "ebc_net_bytes";
+/// Gauge of heartbeat lag: registry ticks since the freshest live
+/// replica heartbeat at the end of the last scheduling round.
+pub const NET_HEARTBEAT_LAG: &str = "ebc_net_heartbeat_lag";
 
 /// Tunables for the process-global observability state — the `[obs]`
 /// config section. `enabled` gates only span recording; metric handles
@@ -141,6 +153,11 @@ pub fn histogram(name: &str, help: &str) -> Histogram {
 /// Get-or-register a counter on the global registry.
 pub fn counter(name: &str, help: &str) -> Counter {
     global().registry.counter(name, help)
+}
+
+/// Get-or-register a gauge on the global registry.
+pub fn gauge(name: &str, help: &str) -> Gauge {
+    global().registry.gauge(name, help)
 }
 
 #[cfg(test)]

@@ -1,0 +1,500 @@
+//! Deterministic fault injection for hostile-network testing.
+//!
+//! Everything here is seeded ([`crate::util::rng::Rng`]) so a failing
+//! chaos run reproduces byte-for-byte from its seed. Two layers:
+//!
+//! * [`ChaosStream`] — wraps any `Read`/`Write` stream (a `TcpStream`
+//!   on the coordinator's side of the socket leg) and injects the
+//!   faults a hostile network produces: bit flips, truncating short
+//!   reads, mid-frame disconnects, duplicate frame writes and delays.
+//!   The peer sees corrupt bytes; the wire decoders must answer with a
+//!   typed [`WireError`], never a panic.
+//! * [`FaultyTransport`] — a frame-level chaos variant of the in-process
+//!   transport: every job/result frame passes through a seeded
+//!   [`FrameMangler`] before it is decoded, and a corrupted frame is
+//!   retried (bounded) exactly like a real transport would retransmit.
+//!
+//! Both are live behind the `[shard] chaos = <seed>` config knob (see
+//! [`crate::shard::transport::build_transport_with`]): `tcp` wraps its
+//! client streams in [`ChaosStream`], `inproc` swaps in
+//! [`FaultyTransport`]. A seed of 0 means no chaos.
+
+use crate::shard::transport::{
+    execute_job, ExecCtx, JobSource, ShardTransport, TransportError, TransportSnapshot,
+    TransportStats,
+};
+use crate::shard::wire::{decode_job, decode_result, encode_job, encode_result, ShardResultMsg};
+use crate::util::rng::Rng;
+use std::io::{self, Read, Write};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fault mix for one chaos source. Each rate is the probability (per
+/// frame for [`FrameMangler`], per read/write call for [`ChaosStream`])
+/// of that fault firing; at most one fault fires per event, checked in
+/// field order, so the schedule is a pure function of the seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Seed for the fault schedule (0 is still a valid, fixed schedule —
+    /// gate chaos off at the call site, not here).
+    pub seed: u64,
+    /// Flip one random bit.
+    pub flip: f64,
+    /// Drop trailing bytes (short read / truncated frame).
+    pub truncate: f64,
+    /// Repeat bytes (duplicate frame on a stream, doubled tail in a
+    /// mangled frame).
+    pub duplicate: f64,
+    /// Pretend the peer vanished: EOF on read, reset after a partial
+    /// write.
+    pub disconnect: f64,
+    /// Stall for [`ChaosConfig::delay_ms`] before the operation.
+    pub delay: f64,
+    /// Injected stall length (kept tiny so chaos tests stay fast while
+    /// still exercising the deadline handling).
+    pub delay_ms: u64,
+}
+
+impl ChaosConfig {
+    /// The standard test mix: every fault class enabled at 5%, 1 ms
+    /// delays.
+    pub fn from_seed(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            flip: 0.05,
+            truncate: 0.05,
+            duplicate: 0.05,
+            disconnect: 0.05,
+            delay: 0.05,
+            delay_ms: 1,
+        }
+    }
+
+    /// All rates zero — a chaos source that never fires (useful as a
+    /// control in tests).
+    pub fn silent(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            flip: 0.0,
+            truncate: 0.0,
+            duplicate: 0.0,
+            disconnect: 0.0,
+            delay: 0.0,
+            delay_ms: 0,
+        }
+    }
+}
+
+/// Seeded whole-frame corruption: [`FrameMangler::mangle`] applies at
+/// most one fault (flip / truncate / duplicate-tail) per frame and
+/// counts it, so a test can reconcile observed retries against the
+/// injected schedule.
+#[derive(Debug)]
+pub struct FrameMangler {
+    rng: Rng,
+    cfg: ChaosConfig,
+    faults: u64,
+}
+
+impl FrameMangler {
+    pub fn new(cfg: ChaosConfig) -> FrameMangler {
+        FrameMangler { rng: Rng::new(cfg.seed), cfg, faults: 0 }
+    }
+
+    /// Faults injected so far.
+    pub fn faults(&self) -> u64 {
+        self.faults
+    }
+
+    /// Pass one frame through the chaos schedule.
+    pub fn mangle(&mut self, mut frame: Vec<u8>) -> Vec<u8> {
+        let roll = self.rng.f64();
+        let mut edge = self.cfg.flip;
+        if roll < edge && !frame.is_empty() {
+            let i = self.rng.below(frame.len());
+            frame[i] ^= 1 << self.rng.below(8);
+            self.faults += 1;
+            return frame;
+        }
+        edge += self.cfg.truncate;
+        if roll < edge && !frame.is_empty() {
+            frame.truncate(self.rng.below(frame.len()));
+            self.faults += 1;
+            return frame;
+        }
+        edge += self.cfg.duplicate;
+        if roll < edge && !frame.is_empty() {
+            let tail = self.rng.below(frame.len()) + 1;
+            frame.extend_from_within(frame.len() - tail..);
+            self.faults += 1;
+        }
+        frame
+    }
+}
+
+/// A `Read`/`Write` stream with deterministic network hostility layered
+/// on top. Wrap the coordinator's side of a socket and the replica sees
+/// exactly what a lossy, corrupting network would deliver.
+///
+/// Faults per call, in precedence order (one per call): delay, then
+/// disconnect (reads answer EOF; writes land half the buffer and fail
+/// with `ConnectionReset`), then bit flip, then truncation on reads /
+/// frame duplication on writes.
+pub struct ChaosStream<S> {
+    inner: S,
+    rng: Rng,
+    cfg: ChaosConfig,
+    faults: u64,
+}
+
+impl<S> ChaosStream<S> {
+    pub fn new(inner: S, cfg: ChaosConfig) -> ChaosStream<S> {
+        ChaosStream { inner, rng: Rng::new(cfg.seed), cfg, faults: 0 }
+    }
+
+    /// Faults injected so far (both directions).
+    pub fn faults(&self) -> u64 {
+        self.faults
+    }
+
+    /// Unwrap the underlying stream.
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let roll = self.rng.f64();
+        let c = self.cfg.clone();
+        if roll < c.delay {
+            std::thread::sleep(Duration::from_millis(c.delay_ms));
+            return self.inner.read(buf);
+        }
+        let mut edge = c.delay + c.disconnect;
+        if roll < edge {
+            // mid-frame disconnect: a clean EOF while the reader still
+            // expects bytes
+            self.faults += 1;
+            return Ok(0);
+        }
+        let n = self.inner.read(buf)?;
+        edge += c.flip;
+        if roll < edge && n > 0 {
+            let i = self.rng.below(n);
+            buf[i] ^= 1 << self.rng.below(8);
+            self.faults += 1;
+            return Ok(n);
+        }
+        edge += c.truncate;
+        if roll < edge && n > 1 {
+            // short read that *loses* the tail: the stream desyncs and
+            // the next frame header is garbage — exactly what a
+            // truncating middlebox does
+            self.faults += 1;
+            return Ok(n / 2);
+        }
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let roll = self.rng.f64();
+        let c = self.cfg.clone();
+        if roll < c.delay {
+            std::thread::sleep(Duration::from_millis(c.delay_ms));
+            return self.inner.write(buf);
+        }
+        let mut edge = c.delay + c.disconnect;
+        if roll < edge && !buf.is_empty() {
+            // land half the frame, then die: the peer sees a mid-frame
+            // disconnect
+            self.faults += 1;
+            let _ = self.inner.write(&buf[..buf.len() / 2]);
+            let _ = self.inner.flush();
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "chaos: injected disconnect",
+            ));
+        }
+        edge += c.flip;
+        if roll < edge && !buf.is_empty() {
+            let mut bad = buf.to_vec();
+            let i = self.rng.below(bad.len());
+            bad[i] ^= 1 << self.rng.below(8);
+            self.faults += 1;
+            self.inner.write_all(&bad)?;
+            return Ok(buf.len());
+        }
+        edge += c.duplicate;
+        if roll < edge && !buf.is_empty() {
+            // the whole buffer lands twice — with whole-frame writes
+            // this is a duplicated frame on the stream
+            self.faults += 1;
+            self.inner.write_all(buf)?;
+            self.inner.write_all(buf)?;
+            return Ok(buf.len());
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Frame-level chaos transport: the in-process execution path with
+/// every job and result frame passed through a seeded [`FrameMangler`]
+/// before decoding. A corrupted frame is a typed [`WireError`] and the
+/// job is retransmitted (rebuilt from the [`JobSource`]) up to
+/// [`FaultyTransport::MAX_ATTEMPTS`] times — mirroring how the socket
+/// transport retries a corrupt link — after which the last wire error
+/// is returned. Retransmissions count as `shard_retries`.
+///
+/// Jobs run sequentially so the fault schedule is a pure function of
+/// the seed.
+pub struct FaultyTransport {
+    mangler: Mutex<FrameMangler>,
+    stats: TransportStats,
+}
+
+impl FaultyTransport {
+    /// Attempts per job before the last wire error becomes final.
+    pub const MAX_ATTEMPTS: u32 = 8;
+
+    pub fn new(cfg: ChaosConfig) -> FaultyTransport {
+        FaultyTransport { mangler: Mutex::new(FrameMangler::new(cfg)), stats: TransportStats::default() }
+    }
+
+    /// Faults injected so far.
+    pub fn faults(&self) -> u64 {
+        self.mangler.lock().unwrap().faults()
+    }
+}
+
+impl ShardTransport for FaultyTransport {
+    fn name(&self) -> &'static str {
+        "inproc+chaos"
+    }
+
+    fn run_jobs(
+        &self,
+        jobs: &dyn JobSource,
+        ctx: &ExecCtx,
+    ) -> Result<Vec<ShardResultMsg>, TransportError> {
+        let mut results = Vec::with_capacity(jobs.len());
+        for i in 0..jobs.len() {
+            let mut last = None;
+            let mut ok = None;
+            for attempt in 0..Self::MAX_ATTEMPTS {
+                if attempt > 0 {
+                    self.stats.add_retries(1);
+                }
+                let job = jobs.job(i);
+                let frame = encode_job(&job);
+                drop(job);
+                let frame = self.mangler.lock().unwrap().mangle(frame);
+                self.stats.add_bytes(frame.len());
+                let decoded = match decode_job(&frame) {
+                    Ok(j) => j,
+                    Err(e) => {
+                        jobs.complete(i);
+                        last = Some(e);
+                        continue;
+                    }
+                };
+                drop(frame);
+                // a job-level error (unknown optimizer) is deterministic:
+                // retransmitting the frame cannot help
+                let result = match execute_job(decoded, ctx) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        jobs.complete(i);
+                        return Err(e);
+                    }
+                };
+                jobs.complete(i);
+                let rframe = self.mangler.lock().unwrap().mangle(encode_result(&result));
+                self.stats.add_bytes(rframe.len());
+                match decode_result(&rframe) {
+                    Ok(r) => {
+                        ok = Some(r);
+                        break;
+                    }
+                    Err(e) => last = Some(e),
+                }
+            }
+            match ok {
+                Some(r) => results.push(r),
+                None => {
+                    return Err(TransportError::Wire(
+                        last.expect("no success implies a recorded wire error"),
+                    ))
+                }
+            }
+        }
+        Ok(results)
+    }
+
+    fn stats(&self) -> TransportSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{OracleSpec, Precision};
+    use crate::linalg::gemm::CpuKernel;
+    use crate::linalg::{Matrix, SharedMatrix};
+    use crate::optim::Greedy;
+    use crate::runtime::artifact::KernelImpl;
+    use crate::shard::transport::InProcessTransport;
+    use crate::shard::wire::ShardJobMsg;
+    use crate::submodular::{CpuOracle, Oracle};
+    use std::io::Cursor;
+
+    fn factory() -> impl Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Sync {
+        |m: SharedMatrix, _spec: &OracleSpec| Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+    }
+
+    fn jobs(n_jobs: usize, rows: usize, seed: u64) -> Vec<ShardJobMsg> {
+        let mut rng = Rng::new(seed);
+        (0..n_jobs)
+            .map(|s| ShardJobMsg {
+                shard: s as u32,
+                k: 3,
+                batch: 64,
+                optimizer: "greedy".into(),
+                payload: Precision::F32,
+                precision: Precision::F32,
+                cpu_kernel: CpuKernel::Scalar,
+                kernel: KernelImpl::Jnp,
+                threads: None,
+                plan: None,
+                ground_ids: (0..rows as u64).map(|i| i + 100 * s as u64).collect(),
+                data: Matrix::random_normal(rows, 4, &mut rng),
+            })
+            .collect()
+    }
+
+    fn same_outcome(a: &[ShardResultMsg], b: &[ShardResultMsg]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.shard == y.shard
+                    && x.indices == y.indices
+                    && x.f_final.to_bits() == y.f_final.to_bits()
+            })
+    }
+
+    #[test]
+    fn mangler_is_deterministic_in_its_seed() {
+        let frame: Vec<u8> = (0..200u16).map(|i| i as u8).collect();
+        let mut a = FrameMangler::new(ChaosConfig::from_seed(7));
+        let mut b = FrameMangler::new(ChaosConfig::from_seed(7));
+        for _ in 0..100 {
+            assert_eq!(a.mangle(frame.clone()), b.mangle(frame.clone()));
+        }
+        assert_eq!(a.faults(), b.faults());
+        assert!(a.faults() > 0, "15% fault mix over 100 frames never fired");
+    }
+
+    #[test]
+    fn silent_config_never_mutates() {
+        let frame: Vec<u8> = (0..64u8).collect();
+        let mut m = FrameMangler::new(ChaosConfig::silent(9));
+        for _ in 0..50 {
+            assert_eq!(m.mangle(frame.clone()), frame);
+        }
+        assert_eq!(m.faults(), 0);
+    }
+
+    #[test]
+    fn chaos_stream_write_side_corrupts_deterministically() {
+        let frame: Vec<u8> = (0..100u8).collect();
+        let run = |seed| {
+            let mut s = ChaosStream::new(Vec::new(), ChaosConfig::from_seed(seed));
+            let mut wrote_err = 0u32;
+            for _ in 0..200 {
+                if s.write_all(&frame).is_err() {
+                    wrote_err += 1;
+                }
+            }
+            let faults = s.faults();
+            (s.into_inner(), faults, wrote_err)
+        };
+        let (a, fa, ea) = run(0xFEED);
+        let (b, fb, eb) = run(0xFEED);
+        assert_eq!(a, b);
+        assert_eq!((fa, ea), (fb, eb));
+        assert!(fa > 0, "20% fault mix over 200 writes never fired");
+        // the sink holds something other than 200 clean copies
+        assert_ne!(a, frame.repeat(200));
+    }
+
+    #[test]
+    fn chaos_stream_read_side_corrupts_deterministically() {
+        let data: Vec<u8> = (0..255u8).collect::<Vec<u8>>().repeat(20);
+        let run = |seed| {
+            let mut s = ChaosStream::new(Cursor::new(data.clone()), ChaosConfig::from_seed(seed));
+            let mut out = Vec::new();
+            let mut buf = [0u8; 64];
+            loop {
+                match s.read(&mut buf) {
+                    Ok(0) => break, // injected or real EOF
+                    Ok(n) => out.extend_from_slice(&buf[..n]),
+                    Err(_) => break,
+                }
+            }
+            let faults = s.faults();
+            (out, faults)
+        };
+        let (a, fa) = run(3);
+        let (b, fb) = run(3);
+        assert_eq!(a, b);
+        assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn faulty_transport_matches_clean_inproc_or_errors_typed() {
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 2);
+        let js = jobs(5, 10, 17);
+        let clean = InProcessTransport::default().run_jobs(&js, &ctx).unwrap();
+        for seed in 1..20u64 {
+            let t = FaultyTransport::new(ChaosConfig::from_seed(seed));
+            match t.run_jobs(&js, &ctx) {
+                // bounded retransmits almost always get the frames
+                // through — and then the answer must be bit-identical
+                Ok(out) => assert!(same_outcome(&out, &clean), "seed {seed}"),
+                // or the corruption won 8 rounds in a row: typed error
+                Err(TransportError::Wire(_)) => {}
+                Err(other) => panic!("seed {seed}: {other:?}"),
+            }
+            // every retransmission traces back to an injected fault
+            let s = t.stats();
+            assert!(
+                s.shard_retries <= t.faults(),
+                "retries {} cannot exceed injected faults {}",
+                s.shard_retries,
+                t.faults()
+            );
+        }
+    }
+
+    #[test]
+    fn faulty_transport_with_silent_chaos_is_plain_inproc() {
+        let f = factory();
+        let greedy = Greedy::default();
+        let ctx = ExecCtx::local(&f, &greedy, None, 1);
+        let js = jobs(3, 8, 5);
+        let clean = InProcessTransport::default().run_jobs(&js, &ctx).unwrap();
+        let t = FaultyTransport::new(ChaosConfig::silent(1));
+        let out = t.run_jobs(&js, &ctx).unwrap();
+        assert!(same_outcome(&out, &clean));
+        assert_eq!(t.stats().shard_retries, 0);
+        assert_eq!(t.faults(), 0);
+    }
+}

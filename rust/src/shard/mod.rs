@@ -39,13 +39,16 @@
 //! Stage 1 is dispatched through the [`transport`] seam: jobs and
 //! results travel as [`wire`]-format frames (versioned, checksummed)
 //! whether the executor is the local threadpool
-//! ([`InProcessTransport`]) or a registered worker replica
-//! ([`LoopbackReplicaTransport`] today; a socket transport is the
-//! remaining step to true multi-node fleets). Every sharded run
-//! round-trips its shards through encode/decode, so the wire contract
-//! is continuously exercised.
+//! ([`InProcessTransport`]), a registered worker replica
+//! ([`LoopbackReplicaTransport`]), or a real TCP replica fleet
+//! ([`net::TcpReplicaTransport`] talking to [`net::ReplicaServer`]
+//! processes, hardened with deadlines, retries and the [`fault`] chaos
+//! layer). Every sharded run round-trips its shards through
+//! encode/decode, so the wire contract is continuously exercised.
 
+pub mod fault;
 pub mod merge;
+pub mod net;
 pub mod partition;
 pub mod summarizer;
 pub mod transport;
@@ -57,11 +60,17 @@ pub use partition::{
     build_partitioner, validate_partition, HashPartitioner, LocalityPartitioner,
     Partitioner, RoundRobinPartitioner, PARTITIONERS,
 };
+pub use fault::{ChaosConfig, ChaosStream, FaultyTransport, FrameMangler};
+pub use net::{
+    read_frame, spawn_replica, write_frame, NetError, NetOptions, ReplicaServer, ServerHandle,
+    TcpReplicaTransport,
+};
 pub use summarizer::{ShardOracleFactory, ShardRun, ShardedResult, ShardedSummarizer};
 pub use transport::{
-    build_transport, ExecCtx, InProcessTransport, JobSource, LoopbackReplicaTransport,
-    ShardTransport, TransportError, TransportSnapshot, TRANSPORTS,
+    build_transport, build_transport_with, ExecCtx, InProcessTransport, JobSource,
+    LoopbackReplicaTransport, ShardTransport, TransportError, TransportSnapshot, TRANSPORTS,
 };
 pub use wire::{
-    ShardJobMsg, ShardResultMsg, WireDataset, WireError, WirePlan, WireRequest, WireShardSpec,
+    ShardJobMsg, ShardResultMsg, WireDataset, WireError, WireGoodbye, WireHeartbeat, WireHello,
+    WirePlan, WireRequest, WireShardSpec,
 };

@@ -1,0 +1,904 @@
+//! The socket leg: a TCP replica server and the coordinator-side
+//! transport that drives a fleet of them.
+//!
+//! # Protocol
+//!
+//! Every message is one length-framed [`crate::shard::wire`] frame.
+//! On accept, the replica introduces itself with a `hello` frame
+//! (id + capacity) followed by `heartbeat` seq 0. The coordinator then
+//! writes `job` frames one at a time; for each job the replica answers
+//! a fresh `heartbeat` (seq = jobs completed on this connection) and
+//! the `result` frame. A deterministic job failure (unknown optimizer,
+//! bad frame contents) is answered with `goodbye(drain = false,
+//! detail)` and the connection closes — the coordinator turns that into
+//! a final [`TransportError::Replica`], because retrying a
+//! deterministic failure elsewhere cannot help. The coordinator closes
+//! a finished connection with `goodbye(drain = true)`.
+//!
+//! # Failure semantics
+//!
+//! | failure | classification | coordinator behaviour |
+//! |---|---|---|
+//! | connect refused / timed out | transient | jittered backoff, reconnect, up to `retries` attempts |
+//! | read/write deadline hit | transient (`ebc_net_timeouts`) | drop connection, backoff, retry |
+//! | corrupt / truncated / oversized frame | transient | drop connection, backoff, retry |
+//! | duplicate or stale result frame | transient | drop connection, backoff, retry |
+//! | retry budget exhausted | replica death | kill in the registry, re-queue its shards to survivors (`shard_retries`) |
+//! | `goodbye(drain = true)` | graceful drain | no new shards; unfinished shards re-queue |
+//! | `goodbye(drain = false)` | deterministic job failure | final typed [`TransportError::Replica`] |
+//! | every replica dead | fleet loss | typed [`TransportError::NoReplicas`] (the summarizer degrades to in-process and flags it) |
+//!
+//! Every socket operation is deadline-bounded
+//! ([`NetOptions::connect_timeout_ms`] / [`NetOptions::io_timeout_ms`])
+//! and every read is length-capped *before* allocating
+//! ([`read_frame`]), so a hostile peer can neither hang the
+//! coordinator nor make it allocate unbounded memory.
+//!
+//! # Chaos
+//!
+//! A nonzero [`NetOptions::chaos`] seed wraps each client-side stream
+//! in a [`ChaosStream`] (per-connection forked seed), injecting
+//! bit-flips, truncations, delays, duplicate frames and mid-frame
+//! disconnects. The replica sees corrupt bytes and drops the
+//! connection; the coordinator's retry machinery recovers — the chaos
+//! soak test asserts that the final exemplars are identical to the
+//! in-process path or that the error is typed, never a panic or hang.
+
+use crate::engine::OracleSpec;
+use crate::obs;
+use crate::shard::fault::{ChaosConfig, ChaosStream};
+use crate::shard::summarizer::ShardOracleFactory;
+use crate::shard::transport::{
+    execute_job, ExecCtx, JobSource, ReplicaRegistry, ShardTransport, TransportError,
+    TransportSnapshot, TransportStats,
+};
+use crate::shard::wire::{
+    decode_goodbye, decode_heartbeat, decode_hello, decode_job, decode_result, encode_goodbye,
+    encode_heartbeat, encode_hello, encode_job, encode_result, frame_kind, FrameKind,
+    ShardResultMsg, WireError, WireGoodbye, WireHeartbeat, WireHello, HEADER_LEN, TRAILER_LEN,
+};
+use crate::submodular::Oracle;
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
+use crate::linalg::SharedMatrix;
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+fn net_connects() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::counter(obs::NET_CONNECTS, "TCP connections established to replicas"))
+}
+
+fn net_timeouts() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| {
+        obs::counter(obs::NET_TIMEOUTS, "socket operations that hit their deadline")
+    })
+}
+
+fn net_retries() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| {
+        obs::counter(obs::NET_RETRIES, "job attempts retried after transient network failures")
+    })
+}
+
+fn net_bytes() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::counter(obs::NET_BYTES, "bytes across replica sockets (both legs)"))
+}
+
+fn net_heartbeat_lag() -> &'static obs::Gauge {
+    static G: OnceLock<obs::Gauge> = OnceLock::new();
+    G.get_or_init(|| {
+        obs::gauge(obs::NET_HEARTBEAT_LAG, "ticks since the freshest live replica heartbeat")
+    })
+}
+
+/// Knobs for the socket leg, threaded from `[shard]` config through
+/// [`crate::api::ShardSpec`] down to the transport. Additive and
+/// local-only: these never cross the wire (a remote replica has its own
+/// config).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetOptions {
+    /// Replica endpoints (`host:port`). Empty means the tcp transport
+    /// has no fleet and every run fails with
+    /// [`TransportError::NoReplicas`].
+    pub addrs: Vec<String>,
+    /// TCP connect deadline per attempt (milliseconds).
+    pub connect_timeout_ms: u64,
+    /// Read/write deadline per socket operation (milliseconds). Must
+    /// cover one shard's execution time on the replica.
+    pub io_timeout_ms: u64,
+    /// Transient-failure retries per replica assignment before the
+    /// replica is declared dead and its shards re-queue.
+    pub retries: u32,
+    /// Base backoff between retries (milliseconds); attempt `a` sleeps
+    /// `backoff_ms * 2^a`, jittered uniformly in [0.5, 1.5).
+    pub backoff_ms: u64,
+    /// Largest frame accepted off the wire (MiB) — checked against the
+    /// declared length *before* allocating, so hostile lengths cannot
+    /// balloon memory.
+    pub max_frame_mb: u32,
+    /// Heartbeat age (scheduler rounds) past which a silent replica is
+    /// expired via [`ReplicaRegistry::expire`].
+    pub heartbeat_max_age: u64,
+    /// Fault-injection seed (0 = off). See [`crate::shard::fault`].
+    pub chaos: u64,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            addrs: Vec::new(),
+            connect_timeout_ms: 1000,
+            io_timeout_ms: 5000,
+            retries: 2,
+            backoff_ms: 50,
+            max_frame_mb: 64,
+            heartbeat_max_age: 3,
+            chaos: 0,
+        }
+    }
+}
+
+impl NetOptions {
+    /// The frame cap in bytes.
+    pub fn max_frame_len(&self) -> usize {
+        (self.max_frame_mb as usize).max(1) * 1024 * 1024
+    }
+}
+
+/// What can go wrong on the socket leg (one level above
+/// [`WireError`]: transport framing and I/O).
+#[derive(Debug)]
+pub enum NetError {
+    /// Socket-level failure (includes deadline hits).
+    Io(io::Error),
+    /// The bytes arrived but are not a valid frame.
+    Wire(WireError),
+    /// The frame header declares a length beyond the configured cap —
+    /// rejected before any allocation.
+    FrameTooLarge { declared: u64, cap: u64 },
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "io: {e}"),
+            NetError::Wire(e) => write!(f, "wire: {e}"),
+            NetError::FrameTooLarge { declared, cap } => {
+                write!(f, "frame declares {declared} bytes, cap is {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> NetError {
+        NetError::Io(e)
+    }
+}
+
+impl From<WireError> for NetError {
+    fn from(e: WireError) -> NetError {
+        NetError::Wire(e)
+    }
+}
+
+/// Read one length-framed wire frame. The header is read first and its
+/// declared payload length validated against `max_frame_len` **before**
+/// the payload buffer is allocated — a hostile length is a typed
+/// [`NetError::FrameTooLarge`], not an allocation.
+pub fn read_frame(r: &mut impl Read, max_frame_len: usize) -> Result<Vec<u8>, NetError> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    // payload length lives at header bytes 8..12 (see the wire layout)
+    let payload_len = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+    let total = HEADER_LEN + payload_len + TRAILER_LEN;
+    if total > max_frame_len {
+        return Err(NetError::FrameTooLarge { declared: total as u64, cap: max_frame_len as u64 });
+    }
+    let mut frame = vec![0u8; total];
+    frame[..HEADER_LEN].copy_from_slice(&header);
+    r.read_exact(&mut frame[HEADER_LEN..])?;
+    Ok(frame)
+}
+
+/// Write one frame and flush it (frames are written whole, so a chaos
+/// duplicate-write duplicates a complete frame).
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// A boxed bidirectional stream (plain [`TcpStream`] or a
+/// chaos-wrapped one).
+trait NetStream: Read + Write + Send {}
+impl<T: Read + Write + Send> NetStream for T {}
+
+// ------------------------------------------------------------- replica
+
+/// The replica side of the socket leg: a TCP listener that executes job
+/// frames through [`ExecCtx::remote`] — exactly the reconstruction path
+/// a loopback replica proves — and answers heartbeat + result frames.
+/// Stood up by the `serve-replica` CLI subcommand.
+pub struct ReplicaServer {
+    listener: TcpListener,
+    id: String,
+    capacity: u32,
+    workers: usize,
+    max_frame_len: usize,
+    io_timeout: Duration,
+}
+
+impl ReplicaServer {
+    /// Bind `addr` (use port 0 for an ephemeral test port). `id` is the
+    /// name sent in hello/heartbeat frames; `capacity` is the replica's
+    /// relative share of the shard deal; `workers` is the local oracle
+    /// thread width.
+    pub fn bind(
+        addr: &str,
+        id: &str,
+        capacity: u32,
+        workers: usize,
+        opts: &NetOptions,
+    ) -> io::Result<ReplicaServer> {
+        let listener = TcpListener::bind(addr)?;
+        // nonblocking accept so `serve` can poll its stop flag
+        listener.set_nonblocking(true)?;
+        Ok(ReplicaServer {
+            listener,
+            id: id.to_string(),
+            capacity: capacity.max(1),
+            workers: workers.max(1),
+            max_frame_len: opts.max_frame_len(),
+            io_timeout: Duration::from_millis(opts.io_timeout_ms.max(1)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept and serve connections until `stop` is set; returns the
+    /// number of jobs executed. Each connection runs on its own scoped
+    /// thread; corrupt frames or deadline hits drop that connection
+    /// (the coordinator's retry machinery owns recovery).
+    pub fn serve(&self, factory: &ShardOracleFactory, stop: &AtomicBool) -> io::Result<u64> {
+        let served = AtomicU64::new(0);
+        let accept_result: io::Result<()> = std::thread::scope(|s| {
+            while !stop.load(Ordering::Relaxed) {
+                match self.listener.accept() {
+                    Ok((stream, peer)) => {
+                        let served = &served;
+                        s.spawn(move || {
+                            if let Err(e) = self.handle(stream, factory, served, stop) {
+                                log::warn!(
+                                    "replica {}: connection from {peer} dropped: {e}",
+                                    self.id
+                                );
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(())
+        });
+        accept_result?;
+        Ok(served.load(Ordering::Relaxed))
+    }
+
+    fn handle(
+        &self,
+        stream: TcpStream,
+        factory: &ShardOracleFactory,
+        served: &AtomicU64,
+        stop: &AtomicBool,
+    ) -> Result<(), NetError> {
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(self.io_timeout))?;
+        stream.set_write_timeout(Some(self.io_timeout))?;
+        let mut stream = stream;
+        let mut seq: u64 = 0;
+        write_frame(
+            &mut stream,
+            &encode_hello(&WireHello { id: self.id.clone(), capacity: self.capacity }),
+        )?;
+        write_frame(&mut stream, &encode_heartbeat(&WireHeartbeat { id: self.id.clone(), seq }))?;
+        while !stop.load(Ordering::Relaxed) {
+            let frame = match read_frame(&mut stream, self.max_frame_len) {
+                Ok(f) => f,
+                // the coordinator closing the connection is a clean end
+                Err(NetError::Io(e)) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+                Err(e) => return Err(e),
+            };
+            match frame_kind(&frame)? {
+                FrameKind::Job => {
+                    let job = decode_job(&frame)?;
+                    drop(frame);
+                    match execute_job(job, &ExecCtx::remote(factory, self.workers)) {
+                        Ok(result) => {
+                            seq += 1;
+                            served.fetch_add(1, Ordering::Relaxed);
+                            write_frame(
+                                &mut stream,
+                                &encode_heartbeat(&WireHeartbeat { id: self.id.clone(), seq }),
+                            )?;
+                            write_frame(&mut stream, &encode_result(&result))?;
+                        }
+                        Err(e) => {
+                            // deterministic job failure: tell the
+                            // coordinator why, then close — retrying on
+                            // another replica cannot help
+                            let bye = encode_goodbye(&WireGoodbye {
+                                id: self.id.clone(),
+                                drain: false,
+                                detail: e.to_string(),
+                            });
+                            let _ = write_frame(&mut stream, &bye);
+                            return Ok(());
+                        }
+                    }
+                }
+                FrameKind::Goodbye => return Ok(()),
+                other => {
+                    return Err(NetError::Wire(WireError::Malformed {
+                        field: "kind",
+                        detail: format!("unexpected {other:?} frame on a replica connection"),
+                    }))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A running [`ReplicaServer`] on a background thread (tests, examples,
+/// benches). Stopping — explicitly or on drop — signals the serve loop
+/// and joins it.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<io::Result<u64>>>,
+}
+
+impl ServerHandle {
+    /// The server's `host:port` (ephemeral ports resolved).
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Signal stop, join, and return the number of jobs the server
+    /// executed (0 if the serve loop itself failed).
+    pub fn stop(mut self) -> u64 {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.join.take().map(|j| j.join()) {
+            Some(Ok(Ok(n))) => n,
+            _ => 0,
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Bind and serve a replica on a background thread. `factory` must be
+/// owned (`Send + 'static`) because it moves to the server thread.
+pub fn spawn_replica<F>(
+    addr: &str,
+    id: &str,
+    capacity: u32,
+    workers: usize,
+    opts: &NetOptions,
+    factory: F,
+) -> io::Result<ServerHandle>
+where
+    F: Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Send + Sync + 'static,
+{
+    let server = ReplicaServer::bind(addr, id, capacity, workers, opts)?;
+    let sock = server.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread_stop = stop.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("replica-{id}"))
+        .spawn(move || server.serve(&factory, &thread_stop))?;
+    Ok(ServerHandle { addr: sock, stop, join: Some(join) })
+}
+
+// --------------------------------------------------------- coordinator
+
+/// How one job attempt on one connection ended.
+enum JobFailure {
+    /// Network trouble — worth a backoff and a reconnect.
+    Transient(String),
+    /// The replica announced a graceful drain; its remaining shards
+    /// re-queue elsewhere.
+    Drained,
+    /// Deterministic failure — final for the whole run.
+    Fatal(TransportError),
+}
+
+/// One live coordinator→replica connection (hello already consumed).
+struct Connection {
+    stream: Box<dyn NetStream>,
+}
+
+/// The coordinator side of the socket leg: [`ShardTransport`] over real
+/// TCP connections to [`ReplicaServer`] fleets, reusing the
+/// [`ReplicaRegistry`] deal/retry machinery the loopback transport
+/// proved. See the module docs for the protocol and the failure
+/// semantics table.
+pub struct TcpReplicaTransport {
+    opts: NetOptions,
+    registry: Mutex<ReplicaRegistry>,
+    stats: TransportStats,
+    /// Backoff jitter stream (seeded so chaos runs reproduce).
+    rng: Mutex<Rng>,
+    /// Connections opened — also forks the per-connection chaos seed.
+    connects: AtomicU64,
+}
+
+impl TcpReplicaTransport {
+    /// One registry entry per endpoint in `opts.addrs` (the endpoint
+    /// string is the registry id; the replica's hello refines its
+    /// capacity on first contact).
+    pub fn new(opts: NetOptions) -> TcpReplicaTransport {
+        let mut registry = ReplicaRegistry::new();
+        for addr in &opts.addrs {
+            registry.register(addr, 1);
+        }
+        let seed = 0xEBC0_0000 ^ opts.chaos;
+        TcpReplicaTransport {
+            opts,
+            registry: Mutex::new(registry),
+            stats: TransportStats::default(),
+            rng: Mutex::new(Rng::new(seed)),
+            connects: AtomicU64::new(0),
+        }
+    }
+
+    /// Run `f` under the registry lock (inspection, manual
+    /// register/drain/kill).
+    pub fn with_registry<T>(&self, f: impl FnOnce(&mut ReplicaRegistry) -> T) -> T {
+        f(&mut self.registry.lock().unwrap())
+    }
+
+    fn max_frame_len(&self) -> usize {
+        self.opts.max_frame_len()
+    }
+
+    fn count_bytes(&self, n: usize) {
+        self.stats.add_bytes(n);
+        net_bytes().add(n as u64);
+    }
+
+    /// Sleep `backoff_ms * 2^attempt`, jittered uniformly in [0.5, 1.5).
+    fn backoff(&self, attempt: u32) {
+        let base = self.opts.backoff_ms.max(1);
+        let exp = base.saturating_mul(1u64 << attempt.min(10));
+        let jitter = 0.5 + self.rng.lock().unwrap().f64();
+        std::thread::sleep(Duration::from_millis(((exp as f64) * jitter) as u64));
+    }
+
+    fn transient_io(&self, op: &str, addr: &str, e: io::Error) -> JobFailure {
+        if matches!(e.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock) {
+            net_timeouts().inc();
+        }
+        JobFailure::Transient(format!("{op} {addr}: {e}"))
+    }
+
+    fn transient_net(&self, op: &str, addr: &str, e: NetError) -> JobFailure {
+        match e {
+            NetError::Io(e) => self.transient_io(op, addr, e),
+            other => JobFailure::Transient(format!("{op} {addr}: {other}")),
+        }
+    }
+
+    /// Open a deadline-bounded connection and consume the replica's
+    /// hello (its heartbeat(0) stays buffered for the job read loop).
+    fn connect(&self, addr: &str, ctx: &ExecCtx) -> Result<Connection, NetError> {
+        let _span = obs::span_under("net.connect", ctx.span);
+        let timeout = Duration::from_millis(self.opts.connect_timeout_ms.max(1));
+        let mut last: Option<io::Error> = None;
+        let mut stream: Option<TcpStream> = None;
+        for sa in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        let s = stream.ok_or_else(|| {
+            NetError::Io(last.unwrap_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::AddrNotAvailable,
+                    format!("{addr}: resolves to no socket address"),
+                )
+            }))
+        })?;
+        s.set_nodelay(true).ok();
+        let io_timeout = Duration::from_millis(self.opts.io_timeout_ms.max(1));
+        s.set_read_timeout(Some(io_timeout))?;
+        s.set_write_timeout(Some(io_timeout))?;
+        let nth = self.connects.fetch_add(1, Ordering::Relaxed);
+        net_connects().inc();
+        let mut leg: Box<dyn NetStream> = if self.opts.chaos != 0 {
+            // fork the chaos seed per connection so retries see fresh
+            // (but still reproducible) fault schedules
+            let seed = self.opts.chaos ^ nth.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            Box::new(ChaosStream::new(s, ChaosConfig::from_seed(seed)))
+        } else {
+            Box::new(s)
+        };
+        let frame = read_frame(&mut leg, self.max_frame_len())?;
+        self.count_bytes(frame.len());
+        let hello = decode_hello(&frame)?;
+        self.with_registry(|r| {
+            if let Some(rep) = r.get_mut(addr) {
+                rep.capacity = (hello.capacity as usize).max(1);
+            }
+            r.heartbeat(addr);
+        });
+        Ok(Connection { stream: leg })
+    }
+
+    /// Send one job and read frames until its result (heartbeats and
+    /// goodbyes interleave).
+    fn run_job_on(
+        &self,
+        c: &mut Connection,
+        addr: &str,
+        jobs: &dyn JobSource,
+        ji: usize,
+        ctx: &ExecCtx,
+    ) -> Result<ShardResultMsg, JobFailure> {
+        let _span = obs::span_under("net.job", ctx.span);
+        let job = jobs.job(ji);
+        let shard = job.shard;
+        let frame = {
+            let _s = obs::span("wire.encode");
+            encode_job(&job)
+        };
+        drop(job);
+        jobs.complete(ji);
+        self.count_bytes(frame.len());
+        write_frame(&mut c.stream, &frame).map_err(|e| self.transient_io("write", addr, e))?;
+        drop(frame);
+        loop {
+            let reply = read_frame(&mut c.stream, self.max_frame_len())
+                .map_err(|e| self.transient_net("read", addr, e))?;
+            self.count_bytes(reply.len());
+            let decoded = {
+                let _s = obs::span("wire.decode");
+                frame_kind(&reply).and_then(|kind| match kind {
+                    FrameKind::Heartbeat => decode_heartbeat(&reply).map(Frame::Heartbeat),
+                    FrameKind::Result => decode_result(&reply).map(Frame::Result),
+                    FrameKind::Goodbye => decode_goodbye(&reply).map(Frame::Goodbye),
+                    other => Err(WireError::Malformed {
+                        field: "kind",
+                        detail: format!("unexpected {other:?} frame on a coordinator connection"),
+                    }),
+                })
+            };
+            match decoded.map_err(|e| JobFailure::Transient(format!("read {addr}: {e}")))? {
+                Frame::Heartbeat(_hb) => {
+                    self.with_registry(|r| r.heartbeat(addr));
+                }
+                Frame::Result(res) => {
+                    if res.shard != shard {
+                        // a duplicated or stale frame desynced the
+                        // stream — reconnect and retransmit
+                        return Err(JobFailure::Transient(format!(
+                            "{addr}: result for shard {} while waiting on shard {shard} \
+                             (duplicate or stale frame)",
+                            res.shard
+                        )));
+                    }
+                    return Ok(res);
+                }
+                Frame::Goodbye(g) => {
+                    if g.drain {
+                        return Err(JobFailure::Drained);
+                    }
+                    return Err(JobFailure::Fatal(TransportError::Replica {
+                        id: g.id,
+                        detail: g.detail,
+                    }));
+                }
+            }
+        }
+    }
+
+    /// Work one replica's assignment for the round, reconnecting with
+    /// backoff across transient failures. Returns (completed, re-queued
+    /// shard indices, fatal error).
+    fn run_assignment(
+        &self,
+        addr: &str,
+        job_idx: &[usize],
+        jobs: &dyn JobSource,
+        ctx: &ExecCtx,
+    ) -> (Vec<(usize, ShardResultMsg)>, Vec<usize>, Option<TransportError>) {
+        let mut done: Vec<(usize, ShardResultMsg)> = Vec::with_capacity(job_idx.len());
+        let mut conn: Option<Connection> = None;
+        let mut attempt: u32 = 0;
+        let mut i = 0;
+        while i < job_idx.len() {
+            let step = (|| -> Result<ShardResultMsg, JobFailure> {
+                if conn.is_none() {
+                    let c = self.connect(addr, ctx).map_err(|e| {
+                        if let NetError::Io(ioe) = &e {
+                            if matches!(
+                                ioe.kind(),
+                                io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock
+                            ) {
+                                net_timeouts().inc();
+                            }
+                        }
+                        JobFailure::Transient(format!("connect {addr}: {e}"))
+                    })?;
+                    conn = Some(c);
+                }
+                self.run_job_on(conn.as_mut().unwrap(), addr, jobs, job_idx[i], ctx)
+            })();
+            match step {
+                Ok(res) => {
+                    done.push((job_idx[i], res));
+                    i += 1;
+                    attempt = 0;
+                }
+                Err(JobFailure::Transient(why)) => {
+                    conn = None; // the stream is suspect — drop it
+                    net_retries().inc();
+                    attempt += 1;
+                    if attempt > self.opts.retries {
+                        log::warn!(
+                            "tcp transport: replica {addr} exhausted {attempt} attempt(s) \
+                             ({why}); killing it and re-queuing {} shard(s)",
+                            job_idx.len() - i
+                        );
+                        self.with_registry(|r| r.kill(addr));
+                        return (done, job_idx[i..].to_vec(), None);
+                    }
+                    log::debug!("tcp transport: transient failure on {addr} ({why}); retrying");
+                    self.backoff(attempt);
+                }
+                Err(JobFailure::Drained) => {
+                    conn = None;
+                    log::info!("tcp transport: replica {addr} draining; re-queuing its shards");
+                    self.with_registry(|r| r.drain(addr));
+                    return (done, job_idx[i..].to_vec(), None);
+                }
+                Err(JobFailure::Fatal(e)) => {
+                    return (done, Vec::new(), Some(e));
+                }
+            }
+        }
+        // graceful close: tell the replica we are done with it
+        if let Some(mut c) = conn.take() {
+            let bye = encode_goodbye(&WireGoodbye {
+                id: "coordinator".into(),
+                drain: true,
+                detail: String::new(),
+            });
+            self.count_bytes(bye.len());
+            let _ = write_frame(&mut c.stream, &bye);
+        }
+        (done, Vec::new(), None)
+    }
+}
+
+/// A decoded coordinator-side reply frame.
+enum Frame {
+    Heartbeat(WireHeartbeat),
+    Result(ShardResultMsg),
+    Goodbye(WireGoodbye),
+}
+
+impl ShardTransport for TcpReplicaTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn run_jobs(
+        &self,
+        jobs: &dyn JobSource,
+        ctx: &ExecCtx,
+    ) -> Result<Vec<ShardResultMsg>, TransportError> {
+        let mut results: Vec<Option<ShardResultMsg>> = (0..jobs.len()).map(|_| None).collect();
+        let mut pending: Vec<usize> = (0..jobs.len()).collect();
+        while !pending.is_empty() {
+            let round = self.with_registry(|reg| {
+                reg.tick();
+                for id in reg.expire(self.opts.heartbeat_max_age) {
+                    log::warn!("tcp transport: replica {id} missed heartbeats and expired");
+                }
+                reg.assign(&pending)
+            });
+            if round.is_empty() {
+                return Err(TransportError::NoReplicas { unassigned: pending.len() });
+            }
+            // all replicas of the round run concurrently, each working
+            // its own assignment sequentially over one connection
+            let outcomes = par_map(&round, round.len(), |(addr, job_idx)| {
+                self.run_assignment(addr, job_idx, jobs, ctx)
+            });
+            let mut next_pending: Vec<usize> = Vec::new();
+            let mut round_error: Option<TransportError> = None;
+            for ((addr, _), (done, requeued, err)) in round.iter().zip(outcomes) {
+                self.with_registry(|reg| {
+                    if let Some(rep) = reg.get_mut(addr) {
+                        rep.jobs_done += done.len() as u64;
+                    }
+                });
+                for (ji, res) in done {
+                    results[ji] = Some(res);
+                }
+                next_pending.extend(requeued);
+                if round_error.is_none() {
+                    round_error = err;
+                }
+            }
+            // heartbeat lag over the replicas still in the deal
+            let lag = self.with_registry(|reg| {
+                let clock = reg.clock();
+                reg.iter()
+                    .filter(|r| r.assignable())
+                    .map(|r| clock.saturating_sub(r.last_heartbeat))
+                    .min()
+            });
+            if let Some(lag) = lag {
+                net_heartbeat_lag().set(lag as i64);
+            }
+            if let Some(e) = round_error {
+                return Err(e); // deterministic failure: final
+            }
+            next_pending.sort_unstable();
+            self.stats.add_retries(next_pending.len());
+            pending = next_pending;
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("loop exits only when every job has a result"))
+            .collect())
+    }
+
+    fn stats(&self) -> TransportSnapshot {
+        self.stats.snapshot()
+    }
+
+    fn replica_count(&self) -> usize {
+        self.with_registry(|r| r.alive())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::wire::WIRE_MAGIC;
+    use std::io::Cursor;
+
+    fn result_msg() -> ShardResultMsg {
+        ShardResultMsg {
+            shard: 3,
+            size: 10,
+            indices: vec![1, 2],
+            f_trajectory: vec![0.1, 0.2],
+            f_final: 0.2,
+            wall_seconds: 0.0,
+            oracle_calls: 2,
+            oracle_work: 20,
+        }
+    }
+
+    #[test]
+    fn frame_roundtrips_through_a_stream() {
+        let frame = encode_result(&result_msg());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut r = Cursor::new(buf);
+        for _ in 0..2 {
+            let got = read_frame(&mut r, 1 << 20).unwrap();
+            assert_eq!(got, frame);
+            assert_eq!(decode_result(&got).unwrap(), result_msg());
+        }
+        // stream exhausted: the next header read is UnexpectedEof
+        match read_frame(&mut r, 1 << 20) {
+            Err(NetError::Io(e)) => assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_length_is_rejected_before_allocation() {
+        // a header declaring a u32::MAX payload over a tiny cap
+        let mut header = Vec::new();
+        header.extend_from_slice(&WIRE_MAGIC);
+        header.extend_from_slice(&2u16.to_le_bytes());
+        header.push(1); // kind: job
+        header.push(0); // reserved
+        header.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = Cursor::new(header);
+        match read_frame(&mut r, 1 << 20) {
+            Err(NetError::FrameTooLarge { declared, cap }) => {
+                assert!(declared > cap);
+                assert_eq!(cap, 1 << 20);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_stream_is_a_typed_io_error() {
+        let frame = encode_result(&result_msg());
+        for cut in [1, HEADER_LEN - 1, HEADER_LEN + 3, frame.len() - 1] {
+            let mut r = Cursor::new(frame[..cut].to_vec());
+            match read_frame(&mut r, 1 << 20) {
+                Err(NetError::Io(e)) => assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof),
+                other => panic!("cut at {cut}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn net_options_defaults_are_sane() {
+        let o = NetOptions::default();
+        assert!(o.addrs.is_empty());
+        assert_eq!(o.max_frame_len(), 64 * 1024 * 1024);
+        assert_eq!(o.chaos, 0);
+        assert!(o.retries > 0 && o.io_timeout_ms > 0 && o.connect_timeout_ms > 0);
+    }
+
+    #[test]
+    fn tcp_transport_without_endpoints_is_a_typed_error() {
+        let t = TcpReplicaTransport::new(NetOptions::default());
+        assert_eq!(t.name(), "tcp");
+        assert_eq!(t.replica_count(), 0);
+        let f = |m: SharedMatrix, _spec: &OracleSpec| {
+            Box::new(crate::submodular::CpuOracle::new_shared(m)) as Box<dyn Oracle>
+        };
+        let ctx = ExecCtx::remote(&f, 1);
+        // empty job sets succeed trivially
+        assert!(t.run_jobs(&Vec::new(), &ctx).unwrap().is_empty());
+        // anything else has nowhere to go
+        let jobs = vec![crate::shard::wire::ShardJobMsg {
+            shard: 0,
+            k: 1,
+            batch: 8,
+            optimizer: "greedy".into(),
+            payload: crate::engine::Precision::F32,
+            precision: crate::engine::Precision::F32,
+            cpu_kernel: crate::linalg::gemm::CpuKernel::Scalar,
+            kernel: crate::runtime::artifact::KernelImpl::Jnp,
+            threads: None,
+            plan: None,
+            ground_ids: vec![0, 1, 2],
+            data: crate::linalg::Matrix::random_normal(3, 2, &mut Rng::new(1)),
+        }];
+        match t.run_jobs(&jobs, &ctx) {
+            Err(TransportError::NoReplicas { unassigned: 1 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -90,6 +90,10 @@ pub struct ShardedResult {
     /// stage 1 — bounded by the transport's concurrency, not by the
     /// shard count, because jobs are built per dispatch.
     pub peak_jobs_held: usize,
+    /// The configured transport failed outright (e.g. every TCP
+    /// replica dead) and stage 1 re-ran on the in-process fallback.
+    /// The answer is still correct — but the fleet did not produce it.
+    pub degraded: bool,
 }
 
 impl ShardedResult {
@@ -350,6 +354,7 @@ impl<'a> ShardedSummarizer<'a> {
             wire_bytes: stats.wire_bytes,
             shard_retries: stats.shard_retries,
             peak_jobs_held: source.peak.load(Ordering::SeqCst),
+            degraded: fell_back,
         }
     }
 }
@@ -518,6 +523,7 @@ mod tests {
         assert_eq!(res.transport, "inproc");
         assert!(res.wire_bytes > 0, "no bytes crossed the wire");
         assert_eq!(res.shard_retries, 0);
+        assert!(!res.degraded);
         // explicit loopback transport selects identically
         let lb = LoopbackReplicaTransport::with_replicas(2, 1);
         let mut s2 = ShardedSummarizer::new(part.as_ref(), &greedy, 3);

@@ -8,7 +8,7 @@
 //! remote implementation cannot drift from the local semantics without
 //! a test catching it.
 //!
-//! Two implementations:
+//! Three implementations:
 //!
 //! * [`InProcessTransport`] — the threadpool path: jobs fan out over
 //!   [`par_map`] workers in this process. The default.
@@ -18,8 +18,13 @@
 //!   a replica failing mid-run gets its unfinished shards re-queued to
 //!   the survivors (counted as `shard_retries`), and a drained replica
 //!   receives no new shards. Replicas execute in-process here — the
-//!   registry/assignment/retry machinery is exactly what a socket
+//!   registry/assignment/retry machinery is exactly what the socket
 //!   transport reuses, with the loopback call replaced by a connection.
+//! * [`crate::shard::net::TcpReplicaTransport`] — the socket path: the
+//!   same registry machinery over real TCP connections to
+//!   [`crate::shard::net::ReplicaServer`] processes, with deadlines,
+//!   jittered-backoff retries and optional deterministic fault
+//!   injection ([`crate::shard::fault`]).
 //!
 //! Execution itself ([`execute_job`]) is a pure function of the decoded
 //! job: build the oracle through the factory seam, run the optimizer,
@@ -58,7 +63,7 @@ pub use crate::coordinator::replica::{Replica, ReplicaRegistry, ReplicaState};
 
 /// Transport names accepted by [`build_transport`] (and therefore by
 /// `shard.transport` in the config schema and the CLI flag).
-pub const TRANSPORTS: &[&str] = &["inproc", "loopback"];
+pub const TRANSPORTS: &[&str] = &["inproc", "loopback", "tcp"];
 
 /// Why a transport could not complete a job set.
 #[derive(Debug)]
@@ -70,6 +75,9 @@ pub enum TransportError {
     UnknownOptimizer(String),
     /// No assignable replica remains while shards are still unassigned.
     NoReplicas { unassigned: usize },
+    /// A remote replica reported a deterministic job failure (goodbye
+    /// frame with `drain = false`) — retrying elsewhere cannot help.
+    Replica { id: String, detail: String },
 }
 
 impl fmt::Display for TransportError {
@@ -81,6 +89,9 @@ impl fmt::Display for TransportError {
             }
             TransportError::NoReplicas { unassigned } => {
                 write!(f, "no assignable replica left ({unassigned} shard(s) unassigned)")
+            }
+            TransportError::Replica { id, detail } => {
+                write!(f, "replica '{id}' failed the job: {detail}")
             }
         }
     }
@@ -115,19 +126,19 @@ impl TransportSnapshot {
 }
 
 #[derive(Default)]
-struct TransportStats {
+pub(crate) struct TransportStats {
     wire_bytes: AtomicU64,
     shard_retries: AtomicU64,
 }
 
 impl TransportStats {
-    fn add_bytes(&self, n: usize) {
+    pub(crate) fn add_bytes(&self, n: usize) {
         self.wire_bytes.fetch_add(n as u64, Ordering::Relaxed);
     }
-    fn add_retries(&self, n: usize) {
+    pub(crate) fn add_retries(&self, n: usize) {
         self.shard_retries.fetch_add(n as u64, Ordering::Relaxed);
     }
-    fn snapshot(&self) -> TransportSnapshot {
+    pub(crate) fn snapshot(&self) -> TransportSnapshot {
         TransportSnapshot {
             wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
             shard_retries: self.shard_retries.load(Ordering::Relaxed),
@@ -347,13 +358,32 @@ impl<T: ShardTransport> ShardTransport for Arc<T> {
     }
 }
 
-/// Build a transport by registry name: `inproc` | `loopback` (the
-/// loopback variant starts with `replicas` unit-capacity replicas).
-/// `None` for unknown names.
+/// Build a transport by registry name: `inproc` | `loopback` | `tcp`
+/// (the loopback variant starts with `replicas` unit-capacity replicas;
+/// the tcp variant gets default [`NetOptions`](crate::shard::net::NetOptions)
+/// with no endpoints — use [`build_transport_with`] to point it at a
+/// fleet). `None` for unknown names.
 pub fn build_transport(name: &str, replicas: usize) -> Option<Box<dyn ShardTransport>> {
+    build_transport_with(name, replicas, &crate::shard::net::NetOptions::default())
+}
+
+/// [`build_transport`] with explicit network options: `tcp` connects to
+/// `net.addrs` under `net`'s deadlines/backoff, and a nonzero
+/// `net.chaos` seed wraps the built transport in deterministic fault
+/// injection (`tcp` corrupts its client-side streams, `inproc` swaps in
+/// the frame-mangling [`FaultyTransport`](crate::shard::fault::FaultyTransport)).
+pub fn build_transport_with(
+    name: &str,
+    replicas: usize,
+    net: &crate::shard::net::NetOptions,
+) -> Option<Box<dyn ShardTransport>> {
     match name {
+        "inproc" if net.chaos != 0 => Some(Box::new(crate::shard::fault::FaultyTransport::new(
+            crate::shard::fault::ChaosConfig::from_seed(net.chaos),
+        ))),
         "inproc" => Some(Box::new(InProcessTransport::default())),
         "loopback" => Some(Box::new(LoopbackReplicaTransport::with_replicas(replicas.max(1), 1))),
+        "tcp" => Some(Box::new(crate::shard::net::TcpReplicaTransport::new(net.clone()))),
         _ => None,
     }
 }
@@ -823,9 +853,16 @@ mod tests {
         let lb = build_transport("loopback", 3).unwrap();
         assert_eq!(lb.name(), "loopback");
         assert_eq!(lb.replica_count(), 3);
+        // tcp builds with no endpoints (fails at run time, not build time)
+        let tcp = build_transport("tcp", 0).unwrap();
+        assert_eq!(tcp.name(), "tcp");
+        assert_eq!(tcp.replica_count(), 0);
         assert!(build_transport("carrier-pigeon", 1).is_none());
         for name in TRANSPORTS {
             assert!(build_transport(name, 1).is_some(), "{name}");
         }
+        // a nonzero chaos seed swaps inproc for the frame mangler
+        let net = crate::shard::net::NetOptions { chaos: 0xC4A05, ..Default::default() };
+        assert_eq!(build_transport_with("inproc", 0, &net).unwrap().name(), "inproc+chaos");
     }
 }

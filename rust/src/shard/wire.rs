@@ -15,8 +15,9 @@
 //!   offset  size  field
 //!   ------  ----  ----------------------------------------------
 //!        0     4  magic  "EBCW"  (45 42 43 57)
-//!        4     2  version        (u16, currently 2)
-//!        6     1  kind           (1 = job, 2 = result, 3 = request)
+//!        4     2  version        (u16: 2 for data kinds, 3 for control kinds)
+//!        6     1  kind           (1 = job, 2 = result, 3 = request,
+//!                                 4 = hello, 5 = heartbeat, 6 = goodbye)
 //!        7     1  reserved       (0)
 //!        8     4  payload_len    (u32)
 //!       12     N  payload        (kind-specific, see below)
@@ -63,6 +64,18 @@
 //!     2 imm:       u8 part · u8 state · u32 samples · u64 seed
 //! ```
 //!
+//! Control payloads (v3, new with the TCP socket leg — see
+//! [`crate::shard::net`]). Data-frame layouts above are **unchanged**:
+//! kinds 1–3 still seal at version 2 byte-identically, so every v2
+//! golden stays valid and v2-only decoders keep rejecting control
+//! frames up front by version:
+//!
+//! ```text
+//!   hello (4):     str id · u32 capacity
+//!   heartbeat (5): str id · u64 seq
+//!   goodbye (6):   str id · u8 drain · str detail
+//! ```
+//!
 //! Strings are `u32 len + UTF-8 bytes`. A `bf16` payload ships each
 //! value as the upper 16 bits of its [`bf16_round`]-ed f32 (2 bytes per
 //! scalar — the edge-link option); decoding widens back losslessly, so
@@ -90,10 +103,18 @@ use std::fmt;
 
 /// Frame magic: "EBCW".
 pub const WIRE_MAGIC: [u8; 4] = *b"EBCW";
-/// Current wire format version. v2 added the request frame kind
-/// (job/result payload layouts are unchanged from v1, but v1 decoders
-/// reject v2 frames by version, so the bump is a conscious break).
+/// Current wire format version for **data** frames (job / result /
+/// request). v2 added the request frame kind (job/result payload
+/// layouts are unchanged from v1, but v1 decoders reject v2 frames by
+/// version, so the bump is a conscious break). The socket leg's
+/// control frames carry [`WIRE_CONTROL_VERSION`] instead — data-frame
+/// layouts (and their goldens) are untouched by that bump.
 pub const WIRE_VERSION: u16 = 2;
+/// Wire format version for **control** frames (hello / heartbeat /
+/// goodbye, new with the TCP socket leg). The decoder enforces the
+/// (version, kind) pairing: a v3 job frame or a v2 hello frame is
+/// [`WireError::UnsupportedVersion`].
+pub const WIRE_CONTROL_VERSION: u16 = 3;
 /// Fixed frame header size (magic + version + kind + reserved + len).
 pub const HEADER_LEN: usize = 12;
 /// Trailing checksum size.
@@ -107,6 +128,14 @@ pub enum FrameKind {
     /// A full summarize request (v2) — what a client sends the socket
     /// leg's listener to start a run.
     Request,
+    /// A replica announcing itself on connect (v3, control).
+    Hello,
+    /// A replica liveness ping (v3, control) — feeds
+    /// [`crate::coordinator::ReplicaRegistry::expire`].
+    Heartbeat,
+    /// A replica leaving — graceful drain or a job-level failure
+    /// report (v3, control).
+    Goodbye,
 }
 
 impl FrameKind {
@@ -115,6 +144,18 @@ impl FrameKind {
             FrameKind::Job => 1,
             FrameKind::Result => 2,
             FrameKind::Request => 3,
+            FrameKind::Hello => 4,
+            FrameKind::Heartbeat => 5,
+            FrameKind::Goodbye => 6,
+        }
+    }
+
+    /// The wire version this kind seals at: data kinds are frozen at
+    /// [`WIRE_VERSION`], control kinds at [`WIRE_CONTROL_VERSION`].
+    pub fn version(self) -> u16 {
+        match self {
+            FrameKind::Job | FrameKind::Result | FrameKind::Request => WIRE_VERSION,
+            FrameKind::Hello | FrameKind::Heartbeat | FrameKind::Goodbye => WIRE_CONTROL_VERSION,
         }
     }
 }
@@ -383,6 +424,44 @@ pub struct WireRequest {
     pub dataset: WireDataset,
 }
 
+/// A replica announcing itself on connect (control frame, kind 4).
+/// The capacity feeds the coordinator's
+/// [`crate::coordinator::ReplicaRegistry`] weighting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireHello {
+    /// Replica-chosen id (informational — the coordinator keys its
+    /// registry by endpoint address).
+    pub id: String,
+    /// Relative shard capacity (assignment weight, ≥ 1).
+    pub capacity: u32,
+}
+
+/// A replica liveness ping (control frame, kind 5). The coordinator
+/// refreshes the sender's registry heartbeat on every one it reads,
+/// so a replica that keeps a connection alive never expires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireHeartbeat {
+    /// Replica-chosen id (informational).
+    pub id: String,
+    /// Monotone per-connection sequence number.
+    pub seq: u64,
+}
+
+/// A replica leaving (control frame, kind 6): `drain == true` is a
+/// graceful hand-back (finish nothing new, re-queue elsewhere);
+/// `drain == false` reports a deterministic job-level failure in
+/// `detail` — the coordinator surfaces it as a typed error instead of
+/// retrying it forever.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireGoodbye {
+    /// Replica-chosen id (informational).
+    pub id: String,
+    /// Graceful drain (true) vs deterministic failure report (false).
+    pub drain: bool,
+    /// Failure description; empty on graceful drains.
+    pub detail: String,
+}
+
 fn part_code(p: Part) -> u8 {
     match p {
         Part::Cover => 0,
@@ -456,7 +535,7 @@ fn seal_frame(kind: FrameKind, payload: Vec<u8>) -> Vec<u8> {
     );
     let mut frame = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
     frame.extend_from_slice(&WIRE_MAGIC);
-    put_u16(&mut frame, WIRE_VERSION);
+    put_u16(&mut frame, kind.version());
     frame.push(kind.code());
     frame.push(0); // reserved
     put_u32(&mut frame, payload.len() as u32);
@@ -598,6 +677,31 @@ pub fn encode_request(req: &WireRequest) -> Vec<u8> {
         }
     }
     seal_frame(FrameKind::Request, p)
+}
+
+/// Encode a hello control frame (v3).
+pub fn encode_hello(h: &WireHello) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + h.id.len());
+    put_str(&mut p, &h.id);
+    put_u32(&mut p, h.capacity);
+    seal_frame(FrameKind::Hello, p)
+}
+
+/// Encode a heartbeat control frame (v3).
+pub fn encode_heartbeat(h: &WireHeartbeat) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12 + h.id.len());
+    put_str(&mut p, &h.id);
+    put_u64(&mut p, h.seq);
+    seal_frame(FrameKind::Heartbeat, p)
+}
+
+/// Encode a goodbye control frame (v3).
+pub fn encode_goodbye(g: &WireGoodbye) -> Vec<u8> {
+    let mut p = Vec::with_capacity(9 + g.id.len() + g.detail.len());
+    put_str(&mut p, &g.id);
+    p.push(g.drain as u8);
+    put_str(&mut p, &g.detail);
+    seal_frame(FrameKind::Goodbye, p)
 }
 
 // ------------------------------------------------------------ decoding
@@ -755,15 +859,27 @@ pub fn frame_kind(frame: &[u8]) -> Result<FrameKind, WireError> {
         return Err(WireError::BadMagic { found: magic });
     }
     let version = u16::from_le_bytes(frame[4..6].try_into().unwrap());
-    if version != WIRE_VERSION {
+    // versions this decoder has ever spoken: anything else is rejected
+    // before the kind byte is even interpreted (a v9 frame may use kind
+    // codes we have never assigned)
+    if version != WIRE_VERSION && version != WIRE_CONTROL_VERSION {
         return Err(WireError::UnsupportedVersion { found: version, supported: WIRE_VERSION });
     }
     let kind = match frame[6] {
         1 => FrameKind::Job,
         2 => FrameKind::Result,
         3 => FrameKind::Request,
+        4 => FrameKind::Hello,
+        5 => FrameKind::Heartbeat,
+        6 => FrameKind::Goodbye,
         other => return Err(WireError::UnknownKind(other)),
     };
+    // data kinds are sealed at v2, control kinds at v3 — a mismatched
+    // pairing (v3 job, v2 hello) is a version error, keeping every v2
+    // data layout byte-frozen across the control-frame addition
+    if version != kind.version() {
+        return Err(WireError::UnsupportedVersion { found: version, supported: kind.version() });
+    }
     let declared = u32::from_le_bytes(frame[8..12].try_into().unwrap()) as usize;
     let available = frame.len() - min;
     if declared != available {
@@ -1017,6 +1133,47 @@ pub fn decode_request(frame: &[u8]) -> Result<WireRequest, WireError> {
     })
 }
 
+fn end_of_payload(r: &Reader<'_>) -> Result<(), WireError> {
+    if r.remaining() != 0 {
+        return Err(WireError::Malformed {
+            field: "payload",
+            detail: format!("{} trailing bytes", r.remaining()),
+        });
+    }
+    Ok(())
+}
+
+/// Decode a hello control frame. Total: corrupted input yields a
+/// [`WireError`].
+pub fn decode_hello(frame: &[u8]) -> Result<WireHello, WireError> {
+    let mut r = Reader::new(open_frame(frame, FrameKind::Hello)?);
+    let id = r.str("hello.id")?;
+    let capacity = r.u32()?;
+    end_of_payload(&r)?;
+    Ok(WireHello { id, capacity })
+}
+
+/// Decode a heartbeat control frame. Total: corrupted input yields a
+/// [`WireError`].
+pub fn decode_heartbeat(frame: &[u8]) -> Result<WireHeartbeat, WireError> {
+    let mut r = Reader::new(open_frame(frame, FrameKind::Heartbeat)?);
+    let id = r.str("heartbeat.id")?;
+    let seq = r.u64()?;
+    end_of_payload(&r)?;
+    Ok(WireHeartbeat { id, seq })
+}
+
+/// Decode a goodbye control frame. Total: corrupted input yields a
+/// [`WireError`].
+pub fn decode_goodbye(frame: &[u8]) -> Result<WireGoodbye, WireError> {
+    let mut r = Reader::new(open_frame(frame, FrameKind::Goodbye)?);
+    let id = r.str("goodbye.id")?;
+    let drain = r.flag("goodbye.drain")?;
+    let detail = r.str("goodbye.detail")?;
+    end_of_payload(&r)?;
+    Ok(WireGoodbye { id, drain, detail })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1192,8 +1349,131 @@ mod tests {
             let _ = decode_job(&bytes);
             let _ = decode_result(&bytes);
             let _ = decode_request(&bytes);
+            let _ = decode_hello(&bytes);
+            let _ = decode_heartbeat(&bytes);
+            let _ = decode_goodbye(&bytes);
             let _ = frame_kind(&bytes);
         }
+    }
+
+    fn reseal(frame: &mut [u8]) {
+        let body_len = frame.len() - TRAILER_LEN;
+        let crc = crc32(&frame[..body_len]);
+        frame[body_len..].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    #[test]
+    fn control_roundtrips_are_lossless() {
+        let h = WireHello { id: "replica-7".into(), capacity: 4 };
+        let frame = encode_hello(&h);
+        assert_eq!(frame_kind(&frame).unwrap(), FrameKind::Hello);
+        assert_eq!(decode_hello(&frame).unwrap(), h);
+
+        let b = WireHeartbeat { id: "replica-7".into(), seq: u64::MAX - 1 };
+        let frame = encode_heartbeat(&b);
+        assert_eq!(frame_kind(&frame).unwrap(), FrameKind::Heartbeat);
+        assert_eq!(decode_heartbeat(&frame).unwrap(), b);
+
+        for drain in [false, true] {
+            let g = WireGoodbye {
+                id: "replica-7".into(),
+                drain,
+                detail: if drain { String::new() } else { "oracle: unknown optimizer".into() },
+            };
+            let frame = encode_goodbye(&g);
+            assert_eq!(frame_kind(&frame).unwrap(), FrameKind::Goodbye);
+            assert_eq!(decode_goodbye(&frame).unwrap(), g);
+        }
+    }
+
+    #[test]
+    fn control_frames_seal_at_the_control_version() {
+        // data kinds stay at v2 byte-for-byte; control kinds seal at v3
+        let data = encode_result(&result());
+        assert_eq!(u16::from_le_bytes([data[4], data[5]]), WIRE_VERSION);
+        let ctrl = encode_heartbeat(&WireHeartbeat { id: "r".into(), seq: 0 });
+        assert_eq!(u16::from_le_bytes([ctrl[4], ctrl[5]]), WIRE_CONTROL_VERSION);
+    }
+
+    #[test]
+    fn cross_version_pairing_is_rejected() {
+        // a control kind claiming the data version (and vice versa) is a
+        // typed version error naming the version that kind actually wants,
+        // even with a fixed-up checksum
+        let mut ctrl = encode_hello(&WireHello { id: "r".into(), capacity: 1 });
+        ctrl[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+        reseal(&mut ctrl);
+        assert_eq!(
+            decode_hello(&ctrl).unwrap_err(),
+            WireError::UnsupportedVersion {
+                found: WIRE_VERSION,
+                supported: WIRE_CONTROL_VERSION
+            }
+        );
+        let mut data = encode_result(&result());
+        data[4..6].copy_from_slice(&WIRE_CONTROL_VERSION.to_le_bytes());
+        reseal(&mut data);
+        assert_eq!(
+            decode_result(&data).unwrap_err(),
+            WireError::UnsupportedVersion {
+                found: WIRE_CONTROL_VERSION,
+                supported: WIRE_VERSION
+            }
+        );
+    }
+
+    #[test]
+    fn control_kind_confusion_is_malformed() {
+        let hello = encode_hello(&WireHello { id: "r".into(), capacity: 1 });
+        let beat = encode_heartbeat(&WireHeartbeat { id: "r".into(), seq: 3 });
+        assert!(matches!(
+            decode_heartbeat(&hello),
+            Err(WireError::Malformed { field: "kind", .. })
+        ));
+        assert!(matches!(decode_goodbye(&beat), Err(WireError::Malformed { field: "kind", .. })));
+        // and control/data confusion in both directions
+        let jf = encode_job(&job(Precision::F32, false));
+        assert!(matches!(decode_hello(&jf), Err(WireError::Malformed { field: "kind", .. })));
+        assert!(matches!(decode_job(&hello), Err(WireError::Malformed { field: "kind", .. })));
+    }
+
+    #[test]
+    fn control_truncation_and_bit_flips_are_typed() {
+        let frame = encode_goodbye(&WireGoodbye {
+            id: "replica-3".into(),
+            drain: false,
+            detail: "connection reset mid-job".into(),
+        });
+        for len in 0..frame.len() {
+            match decode_goodbye(&frame[..len]) {
+                Err(WireError::TooShort { .. }) | Err(WireError::LengthMismatch { .. }) => {}
+                other => panic!("truncated to {len}: {other:?}"),
+            }
+        }
+        for byte in 0..frame.len() {
+            for bit in 0..8 {
+                let mut bad = frame.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    decode_goodbye(&bad).is_err(),
+                    "flip at byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn control_trailing_bytes_are_malformed() {
+        // a resealed hello payload with one stray byte after the fields
+        let mut p = Vec::new();
+        put_str(&mut p, "r1");
+        put_u32(&mut p, 4);
+        p.push(0);
+        let frame = seal_frame(FrameKind::Hello, p);
+        assert!(matches!(
+            decode_hello(&frame),
+            Err(WireError::Malformed { field: "payload", .. })
+        ));
     }
 
     fn request(dataset: WireDataset) -> WireRequest {

@@ -1,0 +1,232 @@
+//! End-to-end smoke tests for the socket leg: a real localhost replica
+//! fleet behind [`TcpReplicaTransport`], exercised through the sharded
+//! summarizer and directly through `run_jobs`.
+//!
+//! The soak test is the PR's acceptance criterion: under seeded chaos
+//! the run must finish with exemplars bit-identical to the in-process
+//! path (directly, or via the flagged degraded fallback) or a typed
+//! error — never a panic, never an unbounded hang.
+
+use ebc::engine::{KernelImpl, OracleSpec, Precision};
+use ebc::linalg::{CpuKernel, Matrix, SharedMatrix};
+use ebc::optim::Greedy;
+use ebc::shard::{
+    build_partitioner, spawn_replica, ExecCtx, NetOptions, ServerHandle, ShardJobMsg,
+    ShardTransport, ShardedResult, ShardedSummarizer, TcpReplicaTransport, TransportError,
+};
+use ebc::submodular::{CpuOracle, Oracle};
+use ebc::util::rng::Rng;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+fn oracle_factory(m: SharedMatrix, _spec: &OracleSpec) -> Box<dyn Oracle> {
+    Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+}
+
+fn replica(id: &str, capacity: u32) -> ServerHandle {
+    spawn_replica("127.0.0.1:0", id, capacity, 1, &NetOptions::default(), oracle_factory)
+        .expect("bind an ephemeral-port replica")
+}
+
+/// Fast-failing knobs so dead-endpoint tests spend milliseconds, not
+/// the production deadlines.
+fn fast_opts(addrs: Vec<String>) -> NetOptions {
+    NetOptions {
+        addrs,
+        connect_timeout_ms: 300,
+        io_timeout_ms: 2000,
+        retries: 1,
+        backoff_ms: 1,
+        ..NetOptions::default()
+    }
+}
+
+/// An address nothing listens on: bind an ephemeral port, then drop the
+/// listener.
+fn dead_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("bind a throwaway port");
+    let addr = l.local_addr().expect("resolve the throwaway port").to_string();
+    drop(l);
+    addr
+}
+
+fn dataset(n: usize, d: usize, seed: u64) -> SharedMatrix {
+    Arc::new(Matrix::random_normal(n, d, &mut Rng::new(seed)))
+}
+
+/// Run the two-stage pipeline over `transport` (None = in-process).
+fn summarize(
+    v: &SharedMatrix,
+    transport: Option<&dyn ShardTransport>,
+    shards: usize,
+    k: usize,
+) -> ShardedResult {
+    let part = build_partitioner("hash", 11).expect("hash partitioner");
+    let greedy = Greedy::default();
+    let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, shards);
+    s.transport = transport;
+    s.summarize(v, &oracle_factory, k)
+}
+
+fn assert_same_selection(got: &ShardedResult, want: &ShardedResult, label: &str) {
+    assert_eq!(got.merged.indices, want.merged.indices, "{label}: exemplar indices diverged");
+    assert_eq!(
+        got.merged.f_final.to_bits(),
+        want.merged.f_final.to_bits(),
+        "{label}: f bits diverged"
+    );
+}
+
+fn raw_jobs(n_jobs: usize, rows: usize, seed: u64) -> Vec<ShardJobMsg> {
+    let mut rng = Rng::new(seed);
+    (0..n_jobs)
+        .map(|s| ShardJobMsg {
+            shard: s as u32,
+            k: 2,
+            batch: 64,
+            optimizer: "greedy".into(),
+            payload: Precision::F32,
+            precision: Precision::F32,
+            cpu_kernel: CpuKernel::Scalar,
+            kernel: KernelImpl::Jnp,
+            threads: None,
+            plan: None,
+            ground_ids: (0..rows as u64).map(|i| i + 100 * s as u64).collect(),
+            data: Matrix::random_normal(rows, 3, &mut rng),
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_fleet_reproduces_the_inproc_selection() {
+    let v = dataset(36, 4, 0xA11CE);
+    let want = summarize(&v, None, 4, 3);
+
+    let servers = vec![replica("smoke-a", 1), replica("smoke-b", 2), replica("smoke-c", 1)];
+    let tcp = TcpReplicaTransport::new(NetOptions {
+        addrs: servers.iter().map(|s| s.addr()).collect(),
+        ..NetOptions::default()
+    });
+    let res = summarize(&v, Some(&tcp), 4, 3);
+
+    assert_same_selection(&res, &want, "healthy fleet");
+    assert_eq!(res.transport, "tcp");
+    assert!(!res.degraded, "a healthy fleet must not report degradation");
+    assert!(res.wire_bytes > 0, "tcp traffic went unaccounted");
+    assert_eq!(res.shard_retries, 0, "a healthy fleet re-queued shards");
+
+    // the hello frames refined the registry: smoke-b advertised
+    // capacity 2, and the fleet as a whole did all the stage-1 work
+    let b_addr = servers[1].addr();
+    tcp.with_registry(|r| {
+        assert_eq!(r.get_mut(&b_addr).expect("smoke-b registered").capacity, 2);
+        let done: u64 = r.iter().map(|rep| rep.jobs_done).sum();
+        assert_eq!(done, res.shards_used as u64);
+    });
+
+    let served: u64 = servers.into_iter().map(|s| s.stop()).sum();
+    assert_eq!(served, res.shards_used as u64, "replica job counters disagree with the run");
+}
+
+#[test]
+fn dead_endpoint_requeues_to_the_survivor() {
+    let v = dataset(30, 3, 0xBEEF);
+    let want = summarize(&v, None, 4, 2);
+
+    let survivor = replica("smoke-survivor", 1);
+    let tcp = TcpReplicaTransport::new(fast_opts(vec![dead_addr(), survivor.addr()]));
+    let res = summarize(&v, Some(&tcp), 4, 2);
+
+    assert_same_selection(&res, &want, "one-dead-endpoint fleet");
+    assert!(!res.degraded, "one survivor is a working fleet, not a degraded one");
+    assert_eq!(res.transport, "tcp");
+    tcp.with_registry(|r| assert_eq!(r.alive(), 1, "the dead endpoint was not killed"));
+    survivor.stop();
+}
+
+#[test]
+fn unreachable_fleet_degrades_but_still_answers() {
+    let v = dataset(24, 3, 0xD00D);
+    let want = summarize(&v, None, 3, 2);
+
+    let tcp = TcpReplicaTransport::new(fast_opts(vec![dead_addr(), dead_addr()]));
+
+    // the raw transport reports the typed fleet-loss error…
+    let jobs = raw_jobs(2, 8, 9);
+    let ctx = ExecCtx::remote(&oracle_factory, 1);
+    match tcp.run_jobs(&jobs, &ctx) {
+        Err(TransportError::NoReplicas { unassigned }) => assert!(unassigned > 0),
+        other => panic!("expected NoReplicas, got {other:?}"),
+    }
+
+    // …and the summarizer turns it into a flagged in-process fallback
+    // with the same answer (fresh transport: the first run killed the
+    // fleet in the registry)
+    let tcp = TcpReplicaTransport::new(fast_opts(vec![dead_addr(), dead_addr()]));
+    let res = summarize(&v, Some(&tcp), 3, 2);
+    assert!(res.degraded, "an unreachable fleet must flag the degradation");
+    assert_eq!(res.transport, "inproc", "the fallback transport name leaks");
+    assert_same_selection(&res, &want, "degraded fallback");
+}
+
+#[test]
+fn poison_job_is_a_final_typed_replica_error() {
+    let server = replica("smoke-poison", 1);
+    let tcp = TcpReplicaTransport::new(fast_opts(vec![server.addr()]));
+    let mut jobs = raw_jobs(1, 8, 3);
+    jobs[0].optimizer = "no-such-optimizer".into();
+    let ctx = ExecCtx::remote(&oracle_factory, 1);
+    match tcp.run_jobs(&jobs, &ctx) {
+        Err(TransportError::Replica { id, detail }) => {
+            assert_eq!(id, "smoke-poison");
+            assert!(
+                detail.contains("no-such-optimizer"),
+                "goodbye detail lost the cause: {detail}"
+            );
+        }
+        other => panic!("expected a Replica error, got {other:?}"),
+    }
+    // deterministic failure: the replica is not killed, the job is not
+    // retried elsewhere
+    tcp.with_registry(|r| assert_eq!(r.alive(), 1));
+    server.stop();
+}
+
+#[test]
+fn chaos_soak_identity_or_typed_error_never_panic() {
+    let v = dataset(24, 3, 0x50AC);
+    let want = summarize(&v, None, 3, 2);
+
+    let servers = vec![replica("soak-a", 1), replica("soak-b", 1)];
+    let addrs: Vec<String> = servers.iter().map(|s| s.addr()).collect();
+
+    // control: chaos 0 is the plain socket leg — no retries, no
+    // degradation, identical selection
+    let clean = TcpReplicaTransport::new(fast_opts(addrs.clone()));
+    let res = summarize(&v, Some(&clean), 3, 2);
+    assert_same_selection(&res, &want, "chaos control");
+    assert!(!res.degraded && res.shard_retries == 0, "chaos-free control run saw faults");
+
+    for seed in 1..=4u64 {
+        // fresh transport per seed: a seed that kills the whole fleet
+        // must not poison the next seed's registry
+        let opts = NetOptions { chaos: seed, ..fast_opts(addrs.clone()) };
+        let tcp = TcpReplicaTransport::new(opts);
+        let res = summarize(&v, Some(&tcp), 3, 2);
+        // whatever the fault schedule did — retries, re-queues, a full
+        // fleet loss absorbed by the flagged fallback — the selection is
+        // bit-identical and the run terminated inside its deadlines
+        assert_same_selection(&res, &want, &format!("chaos seed {seed}"));
+        if res.degraded {
+            // fleet loss: every endpoint must actually be dead
+            tcp.with_registry(|r| {
+                assert_eq!(r.alive(), 0, "seed {seed}: degraded with live replicas")
+            });
+        }
+    }
+
+    // the servers survived every fault schedule thrown at them
+    for s in servers {
+        let _ = s.stop();
+    }
+}

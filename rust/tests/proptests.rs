@@ -15,8 +15,9 @@ use ebc::optim::greedy_over_candidates;
 use ebc::runtime::Manifest;
 use ebc::shard::wire::{decode_job, decode_result, encode_job, encode_result};
 use ebc::shard::{
-    build_partitioner, validate_partition, LoopbackReplicaTransport, Partitioner, ShardJobMsg,
-    ShardResultMsg, ShardTransport, ShardedSummarizer, WirePlan, PARTITIONERS,
+    build_partitioner, spawn_replica, validate_partition, LoopbackReplicaTransport, NetOptions,
+    Partitioner, ShardJobMsg, ShardResultMsg, ShardTransport, ShardedSummarizer,
+    TcpReplicaTransport, WirePlan, PARTITIONERS,
 };
 use ebc::submodular::{fold_mindist, CpuOracle, EbcFunction, Oracle};
 use ebc::util::proptest::{arb_dataset, arb_subset, forall, Config};
@@ -518,6 +519,79 @@ fn prop_transport_identity_inproc_loopback_direct() {
                         return Err(format!("{name}/{label}: no wire traffic recorded"));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transport_identity_tcp_direct() {
+    // tentpole invariant: the socket leg is selection-invisible — a
+    // real localhost replica fleet selects identical exemplars (and f
+    // bits) to the pre-PR direct path, for every partitioner
+    forall(
+        "tcp == direct (indices + f bits, all partitioners)",
+        &Config { cases: 4, seed: 0x7C9 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 30, 4, 2.0);
+            let shards = 1 + rng.below(4);
+            let k = 1 + rng.below(3);
+            let replicas = 1 + rng.below(2);
+            (n, d, data, shards, k, replicas)
+        },
+        |(n, d, data, shards, k, replicas)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let factory = |m: SharedMatrix, _spec: &OracleSpec| {
+                Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+            };
+            let servers = (0..*replicas)
+                .map(|i| {
+                    spawn_replica(
+                        "127.0.0.1:0",
+                        &format!("prop-replica-{i}"),
+                        1,
+                        1,
+                        &NetOptions::default(),
+                        |m: SharedMatrix, _spec: &OracleSpec| {
+                            Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
+                        },
+                    )
+                    .map_err(|e| format!("spawn: {e}"))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            let tcp = TcpReplicaTransport::new(NetOptions {
+                addrs: servers.iter().map(|s| s.addr()).collect(),
+                ..NetOptions::default()
+            });
+            let greedy = Greedy::default();
+            for name in PARTITIONERS {
+                let part = build_partitioner(name, 11).expect("known partitioner");
+                let (want_idx, want_f) = direct_two_stage(&v, part.as_ref(), *shards, *k);
+                let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, *shards);
+                s.transport = Some(&tcp);
+                let res = s.summarize(&v, &factory, *k);
+                if res.degraded {
+                    return Err(format!("{name}: tcp run degraded to inproc"));
+                }
+                if res.merged.indices != want_idx {
+                    return Err(format!(
+                        "{name}: {:?} != direct {want_idx:?}",
+                        res.merged.indices
+                    ));
+                }
+                if res.merged.f_final.to_bits() != want_f.to_bits() {
+                    return Err(format!(
+                        "{name}: f {} != direct {want_f}",
+                        res.merged.f_final
+                    ));
+                }
+                if res.wire_bytes == 0 {
+                    return Err(format!("{name}: no wire traffic recorded"));
+                }
+            }
+            for s in servers {
+                s.stop();
             }
             Ok(())
         },

@@ -12,9 +12,11 @@ use ebc::engine::{KernelImpl, Precision};
 use ebc::imm::{Part, ProcessState};
 use ebc::linalg::{CpuKernel, Matrix};
 use ebc::shard::wire::{
-    crc32, decode_job, decode_request, decode_result, encode_job, encode_request, encode_result,
-    frame_kind, FrameKind, ShardJobMsg, ShardResultMsg, WireDataset, WireError, WirePlan,
-    WireRequest, WireShardSpec, HEADER_LEN, TRAILER_LEN, WIRE_VERSION,
+    crc32, decode_goodbye, decode_heartbeat, decode_hello, decode_job, decode_request,
+    decode_result, encode_goodbye, encode_heartbeat, encode_hello, encode_job, encode_request,
+    encode_result, frame_kind, FrameKind, ShardJobMsg, ShardResultMsg, WireDataset, WireError,
+    WireGoodbye, WireHeartbeat, WireHello, WirePlan, WireRequest, WireShardSpec, HEADER_LEN,
+    TRAILER_LEN, WIRE_CONTROL_VERSION, WIRE_VERSION,
 };
 
 fn unhex(parts: &[&str]) -> Vec<u8> {
@@ -168,6 +170,44 @@ fn request_inline_bf16() -> WireRequest {
     }
 }
 
+/// Golden 6 (v3): the hello a replica sends on accept.
+const HELLO: &[&str] = &[
+    "454243570300040011000000090000007265706c6963612d3704000000bf6849",
+    "fb",
+];
+
+fn hello_msg() -> WireHello {
+    WireHello { id: "replica-7".into(), capacity: 4 }
+}
+
+/// Golden 7 (v3): a liveness heartbeat.
+const HEARTBEAT: &[&str] = &[
+    "454243570300050015000000090000007265706c6963612d372a000000000000",
+    "004ee58850",
+];
+
+fn heartbeat_msg() -> WireHeartbeat {
+    WireHeartbeat { id: "replica-7".into(), seq: 42 }
+}
+
+/// Golden 8 (v3): a draining goodbye.
+const GOODBYE: &[&str] = &[
+    "454243570300060024000000090000007265706c6963612d3701120000006d61",
+    "696e74656e616e63652077696e646f77518c5fc3",
+];
+
+fn goodbye_msg() -> WireGoodbye {
+    WireGoodbye { id: "replica-7".into(), drain: true, detail: "maintenance window".into() }
+}
+
+/// Recompute a frame's CRC trailer after patching its body, so tests
+/// reach the check they target instead of tripping the checksum.
+fn reseal(frame: &mut [u8]) {
+    let body_len = frame.len() - TRAILER_LEN;
+    let crc = crc32(&frame[..body_len]);
+    frame[body_len..].copy_from_slice(&crc.to_le_bytes());
+}
+
 // ----------------------------------------------------------- conformance
 
 #[test]
@@ -221,6 +261,39 @@ fn frame_kind_classifies_goldens() {
 }
 
 #[test]
+fn control_encode_reproduces_goldens_byte_for_byte() {
+    assert_eq!(
+        encode_hello(&hello_msg()),
+        unhex(HELLO),
+        "hello frame drifted — bump WIRE_CONTROL_VERSION and regenerate goldens"
+    );
+    assert_eq!(
+        encode_heartbeat(&heartbeat_msg()),
+        unhex(HEARTBEAT),
+        "heartbeat frame drifted — bump WIRE_CONTROL_VERSION and regenerate goldens"
+    );
+    assert_eq!(
+        encode_goodbye(&goodbye_msg()),
+        unhex(GOODBYE),
+        "goodbye frame drifted — bump WIRE_CONTROL_VERSION and regenerate goldens"
+    );
+}
+
+#[test]
+fn control_decode_reproduces_the_expected_structs() {
+    assert_eq!(decode_hello(&unhex(HELLO)).unwrap(), hello_msg());
+    assert_eq!(decode_heartbeat(&unhex(HEARTBEAT)).unwrap(), heartbeat_msg());
+    assert_eq!(decode_goodbye(&unhex(GOODBYE)).unwrap(), goodbye_msg());
+}
+
+#[test]
+fn control_frame_kind_classifies_goldens() {
+    assert_eq!(frame_kind(&unhex(HELLO)).unwrap(), FrameKind::Hello);
+    assert_eq!(frame_kind(&unhex(HEARTBEAT)).unwrap(), FrameKind::Heartbeat);
+    assert_eq!(frame_kind(&unhex(GOODBYE)).unwrap(), FrameKind::Goodbye);
+}
+
+#[test]
 fn golden_checksums_verify_independently() {
     // the last four bytes of every golden are the CRC-32 of the rest
     for golden in [
@@ -229,6 +302,9 @@ fn golden_checksums_verify_independently() {
         &unhex(RESULT),
         &unhex(REQUEST_SYNTHETIC),
         &unhex(REQUEST_INLINE_BF16),
+        &unhex(HELLO),
+        &unhex(HEARTBEAT),
+        &unhex(GOODBYE),
     ] {
         let body = &golden[..golden.len() - TRAILER_LEN];
         let stored = u32::from_le_bytes(golden[golden.len() - TRAILER_LEN..].try_into().unwrap());
@@ -368,6 +444,99 @@ fn corrupt_enum_bytes_inside_a_resealed_payload_are_malformed() {
         decode_job(&bad),
         Err(WireError::Malformed { field: "cpu_kernel", .. })
     ));
+}
+
+#[test]
+fn truncated_control_frames_are_typed_errors_never_panics() {
+    let golden = unhex(GOODBYE);
+    for len in 0..golden.len() {
+        match decode_goodbye(&golden[..len]) {
+            Err(WireError::TooShort { .. }) | Err(WireError::LengthMismatch { .. }) => {}
+            other => panic!("truncated to {len}: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn every_bit_flip_in_every_control_golden_is_detected() {
+    enum Kind {
+        Hello,
+        Heartbeat,
+        Goodbye,
+    }
+    for (golden, kind) in [
+        (unhex(HELLO), Kind::Hello),
+        (unhex(HEARTBEAT), Kind::Heartbeat),
+        (unhex(GOODBYE), Kind::Goodbye),
+    ] {
+        for byte in 0..golden.len() {
+            for bit in 0..8 {
+                let mut bad = golden.clone();
+                bad[byte] ^= 1 << bit;
+                let err = match kind {
+                    Kind::Hello => decode_hello(&bad).err(),
+                    Kind::Heartbeat => decode_heartbeat(&bad).err(),
+                    Kind::Goodbye => decode_goodbye(&bad).err(),
+                };
+                assert!(err.is_some(), "flip byte {byte} bit {bit} went undetected");
+            }
+        }
+    }
+}
+
+#[test]
+fn control_and_data_versions_never_cross_pair() {
+    // a hello claiming the data version (resealed so only the pairing
+    // check can reject it)...
+    let mut hello_v2 = unhex(HELLO);
+    hello_v2[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    reseal(&mut hello_v2);
+    assert_eq!(
+        decode_hello(&hello_v2).unwrap_err(),
+        WireError::UnsupportedVersion { found: WIRE_VERSION, supported: WIRE_CONTROL_VERSION }
+    );
+    // ...and a result claiming the control version
+    let mut result_v3 = unhex(RESULT);
+    result_v3[4..6].copy_from_slice(&WIRE_CONTROL_VERSION.to_le_bytes());
+    reseal(&mut result_v3);
+    assert_eq!(
+        decode_result(&result_v3).unwrap_err(),
+        WireError::UnsupportedVersion { found: WIRE_CONTROL_VERSION, supported: WIRE_VERSION }
+    );
+}
+
+#[test]
+fn control_kind_confusion_is_typed() {
+    // valid control frames handed to the wrong control decoder, and a
+    // data frame handed to a control decoder
+    assert!(matches!(
+        decode_heartbeat(&unhex(HELLO)),
+        Err(WireError::Malformed { field: "kind", .. })
+    ));
+    assert!(matches!(
+        decode_goodbye(&unhex(HEARTBEAT)),
+        Err(WireError::Malformed { field: "kind", .. })
+    ));
+    assert!(matches!(
+        decode_hello(&unhex(JOB_F32)),
+        Err(WireError::Malformed { field: "kind", .. })
+    ));
+    assert!(matches!(
+        decode_job(&unhex(HELLO)),
+        Err(WireError::Malformed { field: "kind", .. })
+    ));
+}
+
+#[test]
+fn control_version_is_three_until_consciously_bumped() {
+    assert_eq!(WIRE_CONTROL_VERSION, 3);
+    // every control golden carries it in its version bytes
+    for golden in [&unhex(HELLO), &unhex(HEARTBEAT), &unhex(GOODBYE)] {
+        assert_eq!(
+            u16::from_le_bytes(golden[4..6].try_into().unwrap()),
+            WIRE_CONTROL_VERSION
+        );
+    }
 }
 
 #[test]

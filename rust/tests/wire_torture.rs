@@ -1,0 +1,262 @@
+//! Decoder torture: seeded mutational fuzzing of the wire format,
+//! in-tree so it runs under plain `cargo test` on every CI pass.
+//!
+//! The deeper harness is the cargo-fuzz target in `fuzz/` (coverage
+//! guided, unbounded corpus); this file is its deterministic little
+//! sibling — a few thousand seeded mutations of valid frames plus raw
+//! garbage, pushed through every decoder under `catch_unwind`. The
+//! contract under test: **a hostile byte string is always a typed
+//! [`WireError`], never a panic** — and a mutation that slips through
+//! to `Ok` is fine only because the decoders promise typed rejection,
+//! not bit-exact detection (CRC-resealed mutations are legal frames).
+//!
+//! Every failure message carries the case seed, so a red run
+//! reproduces exactly.
+
+use ebc::engine::{KernelImpl, Precision};
+use ebc::linalg::{CpuKernel, Matrix};
+use ebc::shard::wire::{
+    crc32, decode_goodbye, decode_heartbeat, decode_hello, decode_job, decode_request,
+    decode_result, encode_goodbye, encode_heartbeat, encode_hello, encode_job, encode_request,
+    encode_result, frame_kind, HEADER_LEN, TRAILER_LEN,
+};
+use ebc::shard::{
+    ShardJobMsg, ShardResultMsg, WireDataset, WireGoodbye, WireHeartbeat, WireHello, WireRequest,
+    WireShardSpec,
+};
+use ebc::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// One valid frame of every kind — the mutation corpus.
+fn corpus() -> Vec<(&'static str, Vec<u8>)> {
+    let mut rng = Rng::new(0x70A7);
+    let job = ShardJobMsg {
+        shard: 1,
+        k: 2,
+        batch: 32,
+        optimizer: "greedy".into(),
+        payload: Precision::F32,
+        precision: Precision::F32,
+        cpu_kernel: CpuKernel::Scalar,
+        kernel: KernelImpl::Jnp,
+        threads: Some(2),
+        plan: None,
+        ground_ids: vec![3, 1, 4, 1, 5],
+        data: Matrix::random_normal(5, 3, &mut rng),
+    };
+    let result = ShardResultMsg {
+        shard: 1,
+        size: 5,
+        indices: vec![4, 0],
+        f_trajectory: vec![0.5, 0.9],
+        f_final: 0.9,
+        wall_seconds: 0.01,
+        oracle_calls: 10,
+        oracle_work: 50,
+    };
+    let request = WireRequest {
+        k: 3,
+        batch: 64,
+        optimizer: "greedy".into(),
+        precision: Precision::F32,
+        cpu_kernel: CpuKernel::Blocked,
+        threads: 0,
+        seed: 7,
+        with_baseline: false,
+        shard: Some(WireShardSpec {
+            partitions: 4,
+            partitioner: "hash".into(),
+            per_shard_k: 0,
+            threads: 0,
+            transport: "inproc".into(),
+            replicas: 1,
+            plan: false,
+            cores: 0,
+        }),
+        dataset: WireDataset::Synthetic { n: 16, d: 4, seed: 11 },
+    };
+    vec![
+        ("job", encode_job(&job)),
+        ("result", encode_result(&result)),
+        ("request", encode_request(&request)),
+        ("hello", encode_hello(&WireHello { id: "torture".into(), capacity: 3 })),
+        ("heartbeat", encode_heartbeat(&WireHeartbeat { id: "torture".into(), seq: 99 })),
+        (
+            "goodbye",
+            encode_goodbye(&WireGoodbye {
+                id: "torture".into(),
+                drain: false,
+                detail: "injected".into(),
+            }),
+        ),
+    ]
+}
+
+/// Run every decoder over `frame`; the only acceptable outcomes are
+/// `Ok` and a typed `WireError` — a panic fails the whole battery.
+fn battery(frame: &[u8], what: &str) {
+    let checks: [(&str, &dyn Fn(&[u8])); 7] = [
+        ("frame_kind", &|f| {
+            let _ = frame_kind(f);
+        }),
+        ("decode_job", &|f| {
+            let _ = decode_job(f);
+        }),
+        ("decode_result", &|f| {
+            let _ = decode_result(f);
+        }),
+        ("decode_request", &|f| {
+            let _ = decode_request(f);
+        }),
+        ("decode_hello", &|f| {
+            let _ = decode_hello(f);
+        }),
+        ("decode_heartbeat", &|f| {
+            let _ = decode_heartbeat(f);
+        }),
+        ("decode_goodbye", &|f| {
+            let _ = decode_goodbye(f);
+        }),
+    ];
+    for (name, run) in checks {
+        let outcome = catch_unwind(AssertUnwindSafe(|| run(frame)));
+        assert!(outcome.is_ok(), "{name} panicked on {what} ({} bytes)", frame.len());
+    }
+}
+
+/// Recompute the trailer CRC so only post-checksum validation can
+/// reject the frame.
+fn reseal(frame: &mut Vec<u8>) {
+    if frame.len() < TRAILER_LEN {
+        return;
+    }
+    let body = frame.len() - TRAILER_LEN;
+    let crc = crc32(&frame[..body]);
+    frame[body..].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Apply one seeded mutation; returns a label for failure reports.
+fn mutate(rng: &mut Rng, frame: &mut Vec<u8>, donor: &[u8]) -> &'static str {
+    match rng.below(8) {
+        0 => {
+            if !frame.is_empty() {
+                let i = rng.below(frame.len());
+                frame[i] ^= 1 << rng.below(8);
+            }
+            "bit flip"
+        }
+        1 => {
+            if !frame.is_empty() {
+                let i = rng.below(frame.len());
+                frame[i] = rng.below(256) as u8;
+            }
+            "byte overwrite"
+        }
+        2 => {
+            frame.truncate(rng.below(frame.len() + 1));
+            "truncate"
+        }
+        3 => {
+            let extra = rng.below(32) + 1;
+            for _ in 0..extra {
+                frame.push(rng.below(256) as u8);
+            }
+            "append garbage"
+        }
+        4 => {
+            // splice: head of this frame, tail of a donor frame
+            let cut = rng.below(frame.len() + 1);
+            let graft = rng.below(donor.len() + 1);
+            frame.truncate(cut);
+            frame.extend_from_slice(&donor[graft..]);
+            "splice"
+        }
+        5 => {
+            // hostile declared length (header bytes 8..12)
+            if frame.len() >= HEADER_LEN {
+                let lie = (rng.below(u32::MAX as usize)) as u32;
+                frame[8..12].copy_from_slice(&lie.to_le_bytes());
+            }
+            "length tamper"
+        }
+        6 => {
+            // flip a payload bit, then make the CRC agree: the decoder
+            // must survive on structural validation alone
+            if frame.len() > HEADER_LEN + TRAILER_LEN {
+                let span = frame.len() - HEADER_LEN - TRAILER_LEN;
+                let i = HEADER_LEN + rng.below(span);
+                frame[i] ^= 1 << rng.below(8);
+                reseal(frame);
+            }
+            "resealed payload flip"
+        }
+        _ => {
+            // length tamper with an agreeing CRC
+            if frame.len() >= HEADER_LEN + TRAILER_LEN {
+                let lie = (rng.below(1 << 20)) as u32;
+                frame[8..12].copy_from_slice(&lie.to_le_bytes());
+                reseal(frame);
+            }
+            "resealed length tamper"
+        }
+    }
+}
+
+#[test]
+fn pristine_corpus_decodes_cleanly() {
+    for (kind, frame) in corpus() {
+        assert!(frame_kind(&frame).is_ok(), "{kind}: pristine frame rejected");
+        battery(&frame, kind);
+    }
+}
+
+#[test]
+fn seeded_mutations_never_panic_any_decoder() {
+    const CASES_PER_FRAME: usize = 600;
+    let corpus = corpus();
+    for (ci, (kind, frame)) in corpus.iter().enumerate() {
+        let donor = &corpus[(ci + 1) % corpus.len()].1;
+        for case in 0..CASES_PER_FRAME {
+            let seed = 0xC0FFEE ^ ((ci as u64) << 32) ^ case as u64;
+            let mut rng = Rng::new(seed);
+            let mut mutant = frame.clone();
+            // one to three stacked mutations per case
+            let stack = 1 + rng.below(3);
+            let mut last = "";
+            for _ in 0..stack {
+                last = mutate(&mut rng, &mut mutant, donor);
+            }
+            battery(&mutant, &format!("{kind} seed {seed:#x} last mutation '{last}'"));
+        }
+    }
+}
+
+#[test]
+fn raw_garbage_never_panics_any_decoder() {
+    let mut rng = Rng::new(0xBAD5EED);
+    for case in 0..800 {
+        let len = rng.below(192);
+        let mut buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        battery(&buf, &format!("garbage case {case}"));
+        // garbage behind a valid magic header prefix digs deeper
+        if buf.len() >= 4 {
+            buf[..4].copy_from_slice(b"EBCW");
+            battery(&buf, &format!("magic-prefixed garbage case {case}"));
+        }
+    }
+}
+
+#[test]
+fn every_truncation_of_every_frame_is_typed() {
+    for (kind, frame) in corpus() {
+        for cut in 0..frame.len() {
+            let slice = &frame[..cut];
+            battery(slice, &format!("{kind} truncated to {cut}"));
+            assert!(
+                frame_kind(slice).is_err(),
+                "{kind}: truncation to {cut} of {} still classified",
+                frame.len()
+            );
+        }
+    }
+}
