@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     cfg.shard.partitioner = "locality".into();
 
     // the api façade wires the oracle factory + fleet planner from cfg
-    let mut coordinator = Service::cpu().coordinator(cfg);
+    let coordinator = Service::cpu().coordinator(cfg);
 
     let mut fleet = SimulatedFleet::new(
         &[
@@ -62,8 +62,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("per-machine summaries (cached):");
-    let names: Vec<String> = coordinator.machines().keys().cloned().collect();
-    for name in names {
+    for name in coordinator.machine_names() {
         println!("  {name}: {}", coordinator.query(&name).describe());
     }
 
@@ -90,9 +89,9 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "\nmetrics: fleet_queries={} shard_runs={} merge_total={:.3}s",
-        coordinator.metrics.fleet_queries,
-        coordinator.metrics.shard_runs,
-        coordinator.metrics.shard_merge_seconds_total
+        coordinator.metrics.fleet_queries.get(),
+        coordinator.metrics.shard_runs.get(),
+        coordinator.metrics.shard_merge_seconds_total.get()
     );
     Ok(())
 }

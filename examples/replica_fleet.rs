@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     // the api façade wires the oracle factory + fleet planner from cfg;
     // keep a handle to the replica fleet so we can drain/kill members
     let transport = Arc::new(LoopbackReplicaTransport::with_replicas(replicas, 1));
-    let mut coordinator =
+    let coordinator =
         Service::cpu().coordinator(cfg).with_transport(Box::new(Arc::clone(&transport)));
 
     let mut fleet = SimulatedFleet::new(
@@ -65,13 +65,13 @@ fn main() -> anyhow::Result<()> {
     let n = coordinator.run_stream(&mut fleet);
     println!("ingested {n} cycles from 4 machines; {replicas} loopback replica(s) registered\n");
 
-    let fleet_reps = |c: &mut Coordinator| -> Vec<(String, u64)> {
+    let fleet_reps = |c: &Coordinator| -> Vec<(String, u64)> {
         match c.query(FLEET_QUERY) {
             RouteResult::Fleet(f) => {
                 println!(
                     "  {} shards over {} replica(s): f(S) = {:.4}, stage1 {:.3}s, merge {:.3}s",
                     f.shards,
-                    c.transport().replica_count(),
+                    c.transport_replica_count(),
                     f.f_value,
                     f.shard_seconds,
                     f.merge_seconds
@@ -83,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("fleet query on the healthy replica fleet:");
-    let healthy = fleet_reps(&mut coordinator);
+    let healthy = fleet_reps(&coordinator);
     for (machine, seq) in &healthy {
         println!("    {machine} @ seq {seq}");
     }
@@ -91,20 +91,20 @@ fn main() -> anyhow::Result<()> {
     // rig one replica to die after its first shard of the next run
     println!("\nfleet query with replica-0 dying mid-run:");
     transport.fail_after("replica-0", 1);
-    let degraded = fleet_reps(&mut coordinator);
+    let degraded = fleet_reps(&coordinator);
     assert_eq!(
         degraded, healthy,
         "replica failure must not change the selection"
     );
     println!(
         "    selection identical; {} shard(s) re-queued to survivors",
-        coordinator.metrics.shard_retries
+        coordinator.metrics.shard_retries.get()
     );
 
     // drain another: graceful shutdown, no new shards
     transport.drain("replica-1");
     println!("\nfleet query with replica-1 drained:");
-    let drained = fleet_reps(&mut coordinator);
+    let drained = fleet_reps(&coordinator);
     assert_eq!(drained, healthy);
     transport.with_registry(|reg| {
         for r in reg.iter() {
@@ -119,7 +119,11 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nmetrics: fleet_queries={} shard_runs={} shard_retries={} replica_count={} \
          wire_bytes_total={}",
-        m.fleet_queries, m.shard_runs, m.shard_retries, m.replica_count, m.wire_bytes_total
+        m.fleet_queries.get(),
+        m.shard_runs.get(),
+        m.shard_retries.get(),
+        m.replica_count.get(),
+        m.wire_bytes_total.get()
     );
     Ok(())
 }

@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             std::sync::Arc::new(ebc::engine::ShardPlan::plan(Some(rt.manifest()), req))
         })
     };
-    let mut coordinator = Coordinator::new(cfg, Box::new(factory)).with_planner(planner);
+    let coordinator = Coordinator::new(cfg, Box::new(factory)).with_planner(planner);
 
     let mut fleet = SimulatedFleet::new(
         &[
@@ -71,11 +71,11 @@ fn main() -> anyhow::Result<()> {
     let m = &coordinator.metrics;
     println!(
         "metrics: ingested={} evicted={} throttle={} refreshes={} (avg refresh {:.3}s)",
-        m.ingested,
-        m.evicted,
-        m.throttle_signals,
-        m.refreshes,
-        m.refresh_seconds_total / m.refreshes.max(1) as f64
+        m.ingested.get(),
+        m.evicted.get(),
+        m.throttle_signals.get(),
+        m.refreshes.get(),
+        m.refresh_seconds_total.get() / m.refreshes.get().max(1) as f64
     );
 
     println!("\noperator queries:");
@@ -87,7 +87,10 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\nprofile:\n{}", coordinator.profile.report());
+    print!(
+        "\nmetrics (Prometheus text):\n{}",
+        ebc::obs::expo::render_text(&coordinator.metrics.registry().snapshot())
+    );
     let snap = snapshot::snapshot(&coordinator);
     let path = std::path::Path::new("bench_results").join("service_snapshot.json");
     std::fs::create_dir_all("bench_results")?;

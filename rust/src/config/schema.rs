@@ -6,7 +6,7 @@ use crate::runtime::artifact::Precision;
 use anyhow::{bail, Result};
 
 /// `[engine]` section.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EngineSection {
     pub precision: Precision,
     pub cpu_fallback: bool,
@@ -32,7 +32,7 @@ impl Default for EngineSection {
 }
 
 /// `[summary]` section: what the coordinator maintains per machine.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SummarySection {
     pub k: usize,
     pub algorithm: String,
@@ -55,7 +55,7 @@ impl Default for SummarySection {
 
 /// `[shard]` section: the sharded two-stage summarizer used by
 /// fleet-level queries (and tunable for `shard-bench`).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardSection {
     /// Number of shards P the ground set is split into.
     pub shards: usize,
@@ -144,7 +144,7 @@ impl Default for ShardSection {
 }
 
 /// `[coordinator]` section: service-level knobs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CoordinatorConfig {
     pub workers: usize,
     /// Ingestion queue capacity per machine before backpressure engages.
@@ -161,7 +161,7 @@ impl Default for CoordinatorConfig {
 
 /// `[obs]` section: the process-wide observability layer
 /// ([`crate::obs`]): span recording + global registry shape.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ObsSection {
     /// Record spans into the flight recorder (metrics are unaffected).
     pub enabled: bool,
@@ -195,8 +195,56 @@ impl ObsSection {
     }
 }
 
+/// `[daemon]` section: the production daemon ([`crate::daemon`]) built
+/// over the coordinator — worker pool, scheduler cadence, retry policy,
+/// status endpoint and drain behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DaemonSection {
+    /// Job worker threads executing refresh / fleet / ingest jobs.
+    pub workers: usize,
+    /// Pending-job queue capacity before new jobs are shed.
+    pub job_capacity: usize,
+    /// Scheduler tick period (ms) — the daemon's heartbeat.
+    pub tick_ms: u64,
+    /// Enqueue due summary refreshes every this many ticks.
+    pub refresh_ticks: u64,
+    /// Recompute the cached `@fleet` summary every this many ticks
+    /// (0 = only on demand via [`crate::coordinator::FLEET_QUERY`]).
+    pub fleet_ticks: u64,
+    /// `host:port` for the HTTP status endpoint ("" = disabled).
+    pub status_addr: String,
+    /// Graceful-drain deadline (ms): how long shutdown waits for queued
+    /// records and in-flight jobs before giving up.
+    pub drain_timeout_ms: u64,
+    /// Failed-job retries before the failure is surfaced.
+    pub retries: u32,
+    /// Base retry backoff (ms), doubled per attempt with jitter
+    /// (the PR 7 net shape: `backoff_ms * 2^attempt * U[0.5, 1.5)`).
+    pub backoff_ms: u64,
+    /// Write a final coordinator snapshot here on graceful shutdown
+    /// ("" = disabled).
+    pub snapshot_path: String,
+}
+
+impl Default for DaemonSection {
+    fn default() -> Self {
+        DaemonSection {
+            workers: 2,
+            job_capacity: 64,
+            tick_ms: 20,
+            refresh_ticks: 25,
+            fleet_ticks: 100,
+            status_addr: String::new(),
+            drain_timeout_ms: 5000,
+            retries: 2,
+            backoff_ms: 50,
+            snapshot_path: String::new(),
+        }
+    }
+}
+
 /// Full service config.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServiceConfig {
     pub name: String,
     pub engine: EngineSection,
@@ -204,6 +252,7 @@ pub struct ServiceConfig {
     pub coordinator: CoordinatorConfig,
     pub shard: ShardSection,
     pub obs: ObsSection,
+    pub daemon: DaemonSection,
     pub machines: Vec<String>,
 }
 
@@ -216,6 +265,7 @@ impl Default for ServiceConfig {
             coordinator: CoordinatorConfig::default(),
             shard: ShardSection::default(),
             obs: ObsSection::default(),
+            daemon: DaemonSection::default(),
             machines: vec![],
         }
     }
@@ -312,6 +362,18 @@ impl ServiceConfig {
                 enabled: doc.bool("obs.enabled", true),
                 recorder_capacity: pos("obs.recorder_capacity", 4096)?.max(1),
                 hist_buckets: pos("obs.hist_buckets", 40)?.max(1),
+            },
+            daemon: DaemonSection {
+                workers: pos("daemon.workers", 2)?.max(1),
+                job_capacity: pos("daemon.job_capacity", 64)?.max(1),
+                tick_ms: pos("daemon.tick_ms", 20)?.max(1) as u64,
+                refresh_ticks: pos("daemon.refresh_ticks", 25)?.max(1) as u64,
+                fleet_ticks: pos("daemon.fleet_ticks", 100)? as u64,
+                status_addr: doc.str("daemon.status_addr", ""),
+                drain_timeout_ms: pos("daemon.drain_timeout_ms", 5000)?.max(1) as u64,
+                retries: pos("daemon.retries", 2)? as u32,
+                backoff_ms: pos("daemon.backoff_ms", 50)?.max(1) as u64,
+                snapshot_path: doc.str("daemon.snapshot_path", ""),
             },
             machines,
         })
@@ -416,6 +478,61 @@ hist_buckets = 24
         let oc = c.obs.obs_config();
         assert!(oc.enabled);
         assert_eq!(oc.recorder_capacity, 1);
+    }
+
+    #[test]
+    fn daemon_section_parses_and_defaults() {
+        let doc = ConfigDoc::parse(
+            r#"
+[daemon]
+workers = 6
+job_capacity = 32
+tick_ms = 5
+refresh_ticks = 10
+fleet_ticks = 0
+status_addr = "127.0.0.1:9180"
+drain_timeout_ms = 750
+retries = 4
+backoff_ms = 25
+snapshot_path = "/tmp/ebc-final.json"
+"#,
+        )
+        .unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.daemon.workers, 6);
+        assert_eq!(c.daemon.job_capacity, 32);
+        assert_eq!(c.daemon.tick_ms, 5);
+        assert_eq!(c.daemon.refresh_ticks, 10);
+        assert_eq!(c.daemon.fleet_ticks, 0); // 0 = on-demand only
+        assert_eq!(c.daemon.status_addr, "127.0.0.1:9180");
+        assert_eq!(c.daemon.drain_timeout_ms, 750);
+        assert_eq!(c.daemon.retries, 4);
+        assert_eq!(c.daemon.backoff_ms, 25);
+        assert_eq!(c.daemon.snapshot_path, "/tmp/ebc-final.json");
+
+        let d = ServiceConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert_eq!(d.daemon, DaemonSection::default());
+        assert_eq!(d.daemon.workers, 2);
+        assert!(d.daemon.status_addr.is_empty());
+    }
+
+    #[test]
+    fn daemon_knobs_clamp_to_sane_floors() {
+        let doc =
+            ConfigDoc::parse("[daemon]\nworkers = 0\ntick_ms = 0\njob_capacity = 0\n").unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.daemon.workers, 1);
+        assert_eq!(c.daemon.tick_ms, 1);
+        assert_eq!(c.daemon.job_capacity, 1);
+    }
+
+    #[test]
+    fn service_config_equality_detects_section_changes() {
+        let a = ServiceConfig::default();
+        let mut b = a.clone();
+        assert_eq!(a, b);
+        b.daemon.workers = 9;
+        assert_ne!(a, b);
     }
 
     #[test]

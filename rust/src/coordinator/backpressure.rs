@@ -17,6 +17,25 @@ pub enum Admission {
     AcceptedEvicted,
 }
 
+/// Point-in-time view of a [`BoundedQueue`] — what the daemon exports
+/// as `ebc_daemon_ingest_*` gauges/counters so load-shedding is
+/// observable instead of silent (the `evicted`/`accepted` fields used
+/// to be dark: public but exported nowhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Records currently queued.
+    pub len: usize,
+    /// Capacity before the oldest record is evicted.
+    pub capacity: usize,
+    /// Is the queue past its high watermark (producers advised to
+    /// throttle)?
+    pub above_watermark: bool,
+    /// Records accepted since construction (monotone).
+    pub accepted: u64,
+    /// Records evicted under backpressure since construction (monotone).
+    pub evicted: u64,
+}
+
 /// Bounded FIFO with watermarks.
 pub struct BoundedQueue<T> {
     q: VecDeque<T>,
@@ -36,6 +55,30 @@ impl<T> BoundedQueue<T> {
             evicted: 0,
             accepted: 0,
         }
+    }
+
+    /// Snapshot the observable state (depth, watermark, counters).
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            len: self.q.len(),
+            capacity: self.capacity,
+            above_watermark: self.above_watermark(),
+            accepted: self.accepted,
+            evicted: self.evicted,
+        }
+    }
+
+    /// Live-resize the queue (config reload). Shrinking below the
+    /// current depth evicts the oldest records (counted as evictions);
+    /// queued records otherwise survive.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        let capacity = capacity.max(1);
+        while self.q.len() > capacity {
+            self.q.pop_front();
+            self.evicted += 1;
+        }
+        self.capacity = capacity;
+        self.high_watermark = (capacity * 3) / 4;
     }
 
     pub fn push(&mut self, item: T) -> Admission {
@@ -113,5 +156,41 @@ mod tests {
     #[should_panic]
     fn zero_capacity_rejected() {
         BoundedQueue::<u8>::new(0);
+    }
+
+    #[test]
+    fn stats_reflect_counters_and_watermark() {
+        let mut q = BoundedQueue::new(4); // watermark 3
+        for i in 0..5 {
+            q.push(i);
+        }
+        let s = q.stats();
+        assert_eq!(s.len, 4);
+        assert_eq!(s.capacity, 4);
+        assert!(s.above_watermark);
+        assert_eq!(s.accepted, 5);
+        assert_eq!(s.evicted, 1);
+    }
+
+    #[test]
+    fn set_capacity_resizes_and_counts_evictions() {
+        let mut q = BoundedQueue::new(8);
+        for i in 0..6 {
+            q.push(i);
+        }
+        q.set_capacity(3); // drops 0, 1, 2
+        let s = q.stats();
+        assert_eq!(s.len, 3);
+        assert_eq!(s.capacity, 3);
+        assert_eq!(s.evicted, 3);
+        assert_eq!(q.pop(), Some(3));
+        // growing preserves contents
+        q.set_capacity(10);
+        assert_eq!(q.stats().capacity, 10);
+        assert_eq!(q.len(), 2);
+        // zero clamps to one instead of panicking mid-reload
+        q.set_capacity(0);
+        assert_eq!(q.stats().capacity, 1);
+        assert_eq!(q.len(), 1);
     }
 }

@@ -82,6 +82,17 @@ impl MachineState {
         self.window.len()
     }
 
+    /// Live-resize the sliding window (config reload). Shrinking trims
+    /// the **oldest** cycles in place; the freshest data always
+    /// survives a reload.
+    pub fn set_window_cap(&mut self, cap: usize) {
+        let cap = cap.max(1);
+        while self.window.len() > cap {
+            self.window.pop_front();
+        }
+        self.window_cap = cap;
+    }
+
     pub fn dim(&self) -> Option<usize> {
         self.dim
     }
@@ -169,6 +180,25 @@ mod tests {
         assert!(!m.needs_refresh(5)); // 4 < 5
         m.ingest(&rec(5, &[5.0]));
         assert!(m.needs_refresh(5));
+    }
+
+    #[test]
+    fn set_window_cap_trims_oldest() {
+        let mut m = MachineState::new("m", 8);
+        for s in 0..6u64 {
+            m.ingest(&rec(s, &[s as f32]));
+        }
+        m.set_window_cap(3);
+        let (_, seqs) = m.window_matrix().unwrap();
+        assert_eq!(seqs, vec![3, 4, 5]);
+        // growing keeps contents and raises the cap
+        m.set_window_cap(5);
+        m.ingest(&rec(6, &[6.0]));
+        m.ingest(&rec(7, &[7.0]));
+        assert_eq!(m.window_len(), 5);
+        // zero clamps to one instead of emptying the window
+        m.set_window_cap(0);
+        assert_eq!(m.window_len(), 1);
     }
 
     #[test]

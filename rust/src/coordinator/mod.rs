@@ -23,6 +23,13 @@
 //! pool every machine's window and answer through the sharded
 //! two-stage summarizer ([`crate::shard`]), so "summarize the whole
 //! fleet" scales with worker threads instead of fleet size.
+//!
+//! The [`Coordinator`] is a passive, shareable state core: every method
+//! takes `&self` behind fine-grained locks, so it can be driven
+//! single-threaded (tests, batch replay via [`Coordinator::tick`]) or
+//! wrapped in the production runtime at [`crate::daemon`], which moves
+//! folds, refreshes and fleet merges onto worker threads so ingest is
+//! never blocked by summarization.
 
 pub mod backpressure;
 pub mod batcher;
@@ -33,6 +40,7 @@ pub mod service;
 pub mod snapshot;
 pub mod stream;
 
+pub use backpressure::{Admission, QueueStats};
 pub use machine::{MachineState, Summary};
 pub use replica::{Replica, ReplicaRegistry, ReplicaState};
 pub use router::{FleetSummary, RouteResult, Router, FLEET_QUERY};

@@ -1,8 +1,27 @@
 //! The coordinator service: ties queue → batcher → machines → optimizer.
+//!
+//! Since the daemon refactor the coordinator is a **shareable state
+//! core**: every method takes `&self` behind fine-grained interior
+//! locks, so the actor-style workers of [`crate::daemon`] (ingest
+//! folding, summary refreshes, fleet merges) operate on one
+//! `Arc<Coordinator>` concurrently. The locking discipline keeps the
+//! admission path independent of summarization:
+//!
+//! * [`Coordinator::offer`] takes only the ingest-queue mutex — never
+//!   blocked by a refresh or fleet merge;
+//! * [`Coordinator::refresh`] / [`Coordinator::fleet_summary`] copy
+//!   window matrices out under a short machines lock and run the
+//!   optimizer with **no lock held**;
+//! * the shard transport has its own mutex, so fleet merges serialize
+//!   against each other (replica state is shared) but against nothing
+//!   else.
+//!
+//! Lock order (outer → inner, never reversed): config → ingest queue →
+//! machines → plan cache → transport.
 
 use crate::api::{self, ApiError, DatasetRef, ShardSpec, SummarizeRequest, SummarizeResponse};
 use crate::config::schema::ServiceConfig;
-use crate::coordinator::backpressure::{Admission, BoundedQueue};
+use crate::coordinator::backpressure::{Admission, BoundedQueue, QueueStats};
 use crate::coordinator::batcher::{adaptive_drain, group_by_machine};
 use crate::coordinator::machine::{MachineState, Summary};
 use crate::coordinator::router::{FleetSummary, RouteResult, Router, FLEET_QUERY};
@@ -14,7 +33,8 @@ use crate::optim::{build_optimizer, Optimizer};
 use crate::shard::ShardTransport;
 use crate::submodular::Oracle;
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 /// Produces an oracle for a window matrix — the seam between the
@@ -138,11 +158,12 @@ impl std::fmt::Debug for CoordinatorMetrics {
     }
 }
 
-/// The streaming summarization coordinator.
+/// The streaming summarization coordinator (shareable state core —
+/// see the module docs for the locking discipline).
 pub struct Coordinator {
-    cfg: ServiceConfig,
-    queue: BoundedQueue<CycleRecord>,
-    machines: BTreeMap<String, MachineState>,
+    cfg: RwLock<ServiceConfig>,
+    queue: Mutex<BoundedQueue<CycleRecord>>,
+    machines: RwLock<BTreeMap<String, MachineState>>,
     oracle_factory: OracleFactory,
     /// Backend-aware plan builder (the XLA variant consults the artifact
     /// manifest); `None` plans the CPU split only.
@@ -153,16 +174,18 @@ pub struct Coordinator {
     /// of re-planning. Precision/kernel need no key slot: requests that
     /// disagree with the config's engine knobs are rejected up front
     /// (see [`Self::summarize`]).
-    plan_cache: BTreeMap<(usize, usize, usize, usize, usize, usize), Arc<ShardPlan>>,
+    #[allow(clippy::type_complexity)]
+    plan_cache: Mutex<BTreeMap<(usize, usize, usize, usize, usize, usize), Arc<ShardPlan>>>,
     /// Shard transport fleet queries dispatch stage 1 over (built from
     /// `[shard] transport`, swappable via [`Self::with_transport`]).
-    /// Persistent across queries so replica state survives.
-    transport: Box<dyn ShardTransport>,
+    /// Persistent across queries so replica state survives; its mutex
+    /// serializes concurrent fleet merges.
+    transport: Mutex<Box<dyn ShardTransport>>,
     /// Backend label for response provenance (set by
     /// [`crate::api::Service::coordinator`]).
     backend_label: String,
     pub metrics: CoordinatorMetrics,
-    version: u64,
+    version: AtomicU64,
 }
 
 impl Coordinator {
@@ -183,16 +206,16 @@ impl Coordinator {
         )
         .unwrap_or_else(|| unreachable!("schema validated transport '{}'", cfg.shard.transport));
         Coordinator {
-            cfg,
-            queue,
-            machines,
+            cfg: RwLock::new(cfg),
+            queue: Mutex::new(queue),
+            machines: RwLock::new(machines),
             oracle_factory,
             planner: None,
-            plan_cache: BTreeMap::new(),
-            transport,
+            plan_cache: Mutex::new(BTreeMap::new()),
+            transport: Mutex::new(transport),
             backend_label: "custom".into(),
             metrics: CoordinatorMetrics::default(),
-            version: 0,
+            version: AtomicU64::new(0),
         }
     }
 
@@ -214,25 +237,32 @@ impl Coordinator {
     /// Replace the shard transport (e.g. a pre-populated replica fleet
     /// the caller keeps a handle to — see `examples/replica_fleet.rs`).
     pub fn with_transport(mut self, transport: Box<dyn ShardTransport>) -> Coordinator {
-        self.transport = transport;
+        self.transport = Mutex::new(transport);
         self
     }
 
-    /// The shard transport fleet queries run over.
-    pub fn transport(&self) -> &dyn ShardTransport {
-        self.transport.as_ref()
+    /// Run `f` against the shard transport fleet queries run over
+    /// (holds the transport mutex for the duration of `f`).
+    pub fn with_transport_ref<R>(&self, f: impl FnOnce(&dyn ShardTransport) -> R) -> R {
+        f(self.transport.lock().unwrap().as_ref())
+    }
+
+    /// Replicas currently accepting shards on the fleet transport.
+    pub fn transport_replica_count(&self) -> usize {
+        self.transport.lock().unwrap().replica_count()
     }
 
     /// Get (building + caching on first use) the fleet plan for a
     /// request's window shape. `None` for unsharded or unplanned
     /// requests.
-    fn fleet_plan(&mut self, n: usize, d: usize, req: &SummarizeRequest) -> Option<Arc<ShardPlan>> {
+    fn fleet_plan(&self, n: usize, d: usize, req: &SummarizeRequest) -> Option<Arc<ShardPlan>> {
         let spec = req.shard.as_ref()?;
         if !spec.plan || n == 0 {
             return None;
         }
         let key = (n, d, spec.partitions, req.k, req.batch, spec.cores);
-        if let Some(p) = self.plan_cache.get(&key) {
+        let mut cache = self.plan_cache.lock().unwrap();
+        if let Some(p) = cache.get(&key) {
             return Some(Arc::clone(p));
         }
         let preq = PlanRequest {
@@ -251,7 +281,7 @@ impl Coordinator {
             None => Arc::new(ShardPlan::plan(None, &preq)),
         };
         log::info!("fleet plan: {}", plan.describe());
-        self.plan_cache.insert(key, Arc::clone(&plan));
+        cache.insert(key, Arc::clone(&plan));
         Some(plan)
     }
 
@@ -266,13 +296,13 @@ impl Coordinator {
     /// construction, so mismatched knobs are rejected rather than
     /// silently substituted (use [`crate::api::Service`] for
     /// per-request knobs).
-    pub fn summarize(&mut self, req: &SummarizeRequest) -> Result<SummarizeResponse, ApiError> {
+    pub fn summarize(&self, req: &SummarizeRequest) -> Result<SummarizeResponse, ApiError> {
         req.validate()?;
         // the coordinator's oracle factory is baked from `[engine]` at
         // construction; a request asking for different engine knobs
         // cannot be honored here (and must not be misreported in
         // provenance) — reject it instead of silently substituting
-        let eng = &self.cfg.engine;
+        let eng = self.cfg.read().unwrap().engine.clone();
         if req.precision != eng.precision {
             return Err(ApiError::invalid(
                 "precision",
@@ -307,14 +337,20 @@ impl Coordinator {
         }
         let data = req.dataset.materialize()?;
         let plan = self.fleet_plan(data.rows(), data.cols(), req);
-        let factory =
-            |m: SharedMatrix, spec: &OracleSpec| (self.oracle_factory)(m, spec);
+        let factory = |m: SharedMatrix, spec: &OracleSpec| (self.oracle_factory)(m, spec);
+        // unsharded requests never touch the transport — don't serialize
+        // them behind a fleet merge that may be mid-flight
+        let guard = if req.shard.is_some() {
+            Some(self.transport.lock().unwrap())
+        } else {
+            None
+        };
         let env = api::ExecEnv {
             factory: &factory,
             backend: &self.backend_label,
             plan,
             planner: None,
-            transport: Some(self.transport.as_ref()),
+            transport: guard.as_deref().map(|b| b.as_ref()),
         };
         api::execute(req, &data, &env)
     }
@@ -323,12 +359,13 @@ impl Coordinator {
     /// inline dataset, everything else from the `[summary]` / `[engine]`
     /// / `[shard]` config sections.
     fn fleet_request(&self, fleet_matrix: SharedMatrix, k: usize) -> SummarizeRequest {
-        let sc = &self.cfg.shard;
+        let cfg = self.cfg.read().unwrap();
+        let sc = &cfg.shard;
         SummarizeRequest::new(DatasetRef::Inline(fleet_matrix), k)
-            .optimizer(&self.cfg.summary.algorithm)
-            .batch(self.cfg.engine.batch)
-            .precision(self.cfg.engine.precision)
-            .cpu_kernel(self.cfg.engine.cpu_kernel)
+            .optimizer(&cfg.summary.algorithm)
+            .batch(cfg.engine.batch)
+            .precision(cfg.engine.precision)
+            .cpu_kernel(cfg.engine.cpu_kernel)
             .seed(sc.seed)
             .sharded(
                 ShardSpec::new(sc.shards)
@@ -343,15 +380,19 @@ impl Coordinator {
     }
 
     fn build_optimizer(&self) -> Box<dyn Optimizer> {
-        build_optimizer(&self.cfg.summary.algorithm, self.cfg.engine.batch)
-            .unwrap_or_else(|| {
-                unreachable!("schema validated algorithm '{}'", self.cfg.summary.algorithm)
-            })
+        let (algorithm, batch) = {
+            let cfg = self.cfg.read().unwrap();
+            (cfg.summary.algorithm.clone(), cfg.engine.batch)
+        };
+        build_optimizer(&algorithm, batch)
+            .unwrap_or_else(|| unreachable!("schema validated algorithm '{algorithm}'"))
     }
 
-    /// Offer one record (sensor push path). Returns the admission advice.
-    pub fn offer(&mut self, rec: CycleRecord) -> Admission {
-        let adm = self.queue.push(rec);
+    /// Offer one record (sensor push path). Returns the admission
+    /// advice. Takes only the ingest-queue mutex — admission is never
+    /// blocked by a refresh or fleet merge in flight.
+    pub fn offer(&self, rec: CycleRecord) -> Admission {
+        let adm = self.queue.lock().unwrap().push(rec);
         match adm {
             Admission::AcceptedEvicted => self.metrics.evicted.inc(),
             Admission::AcceptedThrottle => self.metrics.throttle_signals.inc(),
@@ -362,15 +403,40 @@ impl Coordinator {
 
     /// One event-loop tick: drain a batch, fold into machines, refresh
     /// summaries that are due. Returns the number of records processed.
-    pub fn tick(&mut self) -> usize {
-        let drain = adaptive_drain(
-            self.queue.len(),
-            self.cfg.coordinator.ingest_batch,
-            self.queue.capacity(),
-        );
-        let records = self.queue.drain(drain);
+    ///
+    /// This is the *synchronous* path (`run_stream`, tests, examples);
+    /// the daemon splits it into [`Self::fold`] + queued refresh jobs so
+    /// summarization runs off the ingest path.
+    pub fn tick(&self) -> usize {
+        let (count, due) = self.fold();
+        for name in due {
+            self.refresh(&name);
+        }
+        count
+    }
+
+    /// Drain one adaptive batch from the ingest queue and fold it into
+    /// the machine windows *without* refreshing any summary. Returns
+    /// the number of records folded and the machines whose refresh
+    /// policy now triggers (for the caller to refresh inline — see
+    /// [`Self::tick`] — or to enqueue as daemon jobs).
+    ///
+    /// Callers that fold concurrently must serialize their calls per
+    /// ingest stream (the daemon runs ingest jobs single-flight) —
+    /// otherwise batches can interleave out of arrival order.
+    pub fn fold(&self) -> (usize, Vec<String>) {
+        let (ingest_batch, window_cap, refresh_every) = {
+            let cfg = self.cfg.read().unwrap();
+            (cfg.coordinator.ingest_batch, cfg.summary.window.max(1), cfg.summary.refresh_every)
+        };
+        let records = {
+            let mut q = self.queue.lock().unwrap();
+            let drain = adaptive_drain(q.len(), ingest_batch, q.capacity());
+            q.drain(drain)
+        };
         let count = records.len();
         let grouped = self.metrics.batch_latency.time(|| group_by_machine(records));
+        let mut machines = self.machines.write().unwrap();
         for (name, recs) in grouped {
             if name.starts_with('@') {
                 // '@' prefixes are reserved for query routes (FLEET_QUERY);
@@ -379,9 +445,7 @@ impl Coordinator {
                 self.metrics.malformed.add(recs.len() as u64);
                 continue;
             }
-            let window_cap = self.cfg.summary.window.max(1);
-            let m = self
-                .machines
+            let m = machines
                 .entry(name.clone())
                 .or_insert_with(|| MachineState::new(&name, window_cap));
             for r in &recs {
@@ -392,24 +456,28 @@ impl Coordinator {
                 }
             }
         }
-        // refresh pass
-        let due: Vec<String> = self
-            .machines
+        let due: Vec<String> = machines
             .iter()
-            .filter(|(_, m)| m.needs_refresh(self.cfg.summary.refresh_every))
+            .filter(|(_, m)| m.needs_refresh(refresh_every))
             .map(|(n, _)| n.clone())
             .collect();
-        for name in due {
-            self.refresh(&name);
-        }
-        count
+        (count, due)
     }
 
-    /// Recompute the summary of one machine now.
-    pub fn refresh(&mut self, name: &str) {
-        let Some(m) = self.machines.get(name) else { return };
-        let Some((window, seqs)) = m.window_matrix() else { return };
-        let k = self.cfg.summary.k.min(window.rows());
+    /// Recompute the summary of one machine now. The optimizer runs
+    /// with no lock held (the window is copied out under a short read
+    /// lock). Returns false when the machine is unknown or its window
+    /// is empty.
+    pub fn refresh(&self, name: &str) -> bool {
+        let window = {
+            let machines = self.machines.read().unwrap();
+            match machines.get(name) {
+                Some(m) => m.window_matrix(),
+                None => return false,
+            }
+        };
+        let Some((window, seqs)) = window else { return false };
+        let k = { self.cfg.read().unwrap().summary.k }.min(window.rows());
         let optimizer = self.build_optimizer();
         let t0 = Instant::now();
         let mut oracle = (self.oracle_factory)(Arc::new(window), &OracleSpec::unplanned());
@@ -418,30 +486,41 @@ impl Coordinator {
             self.metrics.refresh_latency.time(|| optimizer.run(oracle.as_mut(), k))
         };
         let dt = t0.elapsed().as_secs_f64();
-        self.version += 1;
+        let version = self.version.fetch_add(1, Ordering::SeqCst) + 1;
         let summary = Summary {
             representative_seqs: res.indices.iter().map(|&i| seqs[i]).collect(),
             representative_idx: res.indices.clone(),
             f_value: res.f_final,
             window_len: seqs.len(),
             refresh_seconds: dt,
-            version: self.version,
+            version,
         };
         self.metrics.refreshes.inc();
         self.metrics.refresh_seconds_total.add(dt);
-        if let Some(m) = self.machines.get_mut(name) {
+        if let Some(m) = self.machines.write().unwrap().get_mut(name) {
             m.set_summary(summary);
         }
+        true
     }
 
     /// Operator query: cached summary for `machine`, or — for the
     /// reserved [`FLEET_QUERY`] name — an on-demand fleet-wide summary.
-    pub fn query(&mut self, machine: &str) -> RouteResult {
+    pub fn query(&self, machine: &str) -> RouteResult {
         self.metrics.queries.inc();
         if machine == FLEET_QUERY {
             return self.fleet_summary();
         }
-        Router::query(&self.machines, machine)
+        Router::query(&self.machines.read().unwrap(), machine)
+    }
+
+    /// Cached-state-only query: per-machine summaries from the router,
+    /// never computing anything inline. The daemon serves operator
+    /// queries through this (its scheduler refreshes the fleet summary
+    /// as a background job, so [`FLEET_QUERY`] never runs a merge on
+    /// the query path).
+    pub fn query_cached(&self, machine: &str) -> RouteResult {
+        self.metrics.queries.inc();
+        Router::query(&self.machines.read().unwrap(), machine)
     }
 
     /// Answer "summarize the whole fleet": pool every machine's current
@@ -450,26 +529,37 @@ impl Coordinator {
     /// window is empty or whose sensor dimensionality differs from the
     /// fleet majority (the dimension carrying the most pooled rows)
     /// are skipped.
-    pub fn fleet_summary(&mut self) -> RouteResult {
+    pub fn fleet_summary(&self) -> RouteResult {
         self.metrics.fleet_queries.inc();
         // root of the fleet trace: api/shard/transport/wire/kernel spans
         // opened below (api::execute nests under the current span) hang
-        // off this guard, so `obs-dump` shows one tree per fleet query
-        let _fleet_span = obs::root_span("coord.fleet");
+        // off this guard, so `obs-dump` shows one tree per fleet query.
+        // Under the daemon this nests below the worker's daemon.job root.
+        let _fleet_span = if obs::current_span() == 0 {
+            obs::root_span("coord.fleet")
+        } else {
+            obs::span("coord.fleet")
+        };
 
         // pool windows; rows[i] = (machine, seq) for fleet matrix row i.
-        // Collect everything first: the fleet dimensionality is the one
-        // carrying the most pooled rows (a lone rogue sensor must not
-        // hijack the fleet), and one up-front allocation avoids the
-        // quadratic cost of repeated vstack.
-        let mut windows: Vec<(&str, Matrix, Vec<u64>)> = Vec::new();
-        let mut skipped = 0usize;
-        for (name, m) in &self.machines {
-            match m.window_matrix() {
-                Some((window, seqs)) => windows.push((name.as_str(), window, seqs)),
-                None => skipped += 1,
+        // Collect everything under a short read lock: the fleet
+        // dimensionality is the one carrying the most pooled rows (a
+        // lone rogue sensor must not hijack the fleet), and one up-front
+        // allocation avoids the quadratic cost of repeated vstack.
+        let (windows, skipped_empty, total_ingested) = {
+            let machines = self.machines.read().unwrap();
+            let mut windows: Vec<(String, Matrix, Vec<u64>)> = Vec::new();
+            let mut skipped = 0usize;
+            for (name, m) in machines.iter() {
+                match m.window_matrix() {
+                    Some((window, seqs)) => windows.push((name.clone(), window, seqs)),
+                    None => skipped += 1,
+                }
             }
-        }
+            let total: u64 = machines.values().map(|m| m.total_ingested).sum();
+            (windows, skipped, total)
+        };
+        let mut skipped = skipped_empty;
         // majority dimension by pooled row count (ties: larger dim)
         let mut rows_per_dim: BTreeMap<usize, usize> = BTreeMap::new();
         for (_, w, _) in &windows {
@@ -477,10 +567,9 @@ impl Coordinator {
         }
         let Some((&d, _)) = rows_per_dim.iter().max_by_key(|(_, &r)| r) else {
             // nothing to pool yet: report aggregate ingestion progress
-            let total: u64 = self.machines.values().map(|m| m.total_ingested).sum();
-            return RouteResult::NotReady { ingested: total };
+            return RouteResult::NotReady { ingested: total_ingested };
         };
-        let mut machines = 0usize;
+        let mut machines_used = 0usize;
         let total_rows = rows_per_dim[&d];
         let mut data = Vec::with_capacity(total_rows * d);
         let mut rows: Vec<(String, u64)> = Vec::with_capacity(total_rows);
@@ -494,18 +583,18 @@ impl Coordinator {
                 continue;
             }
             data.extend_from_slice(window.data());
-            rows.extend(seqs.into_iter().map(|s| (name.to_string(), s)));
-            machines += 1;
+            rows.extend(seqs.into_iter().map(|s| (name.clone(), s)));
+            machines_used += 1;
         }
         let fleet_matrix: SharedMatrix = Arc::new(Matrix::from_vec(total_rows, d, data));
-        let k = self.cfg.summary.k.min(fleet_matrix.rows());
+        let k = { self.cfg.read().unwrap().summary.k }.min(fleet_matrix.rows());
         if k == 0 {
             // a k = 0 config asks for an empty summary — not an error
             return RouteResult::Fleet(FleetSummary {
                 representatives: vec![],
                 f_value: 0.0,
                 window_total: rows.len(),
-                machines,
+                machines: machines_used,
                 machines_skipped: skipped,
                 shards: 0,
                 shard_seconds: 0.0,
@@ -522,8 +611,7 @@ impl Coordinator {
             // rather than killing the operator's query path
             Err(e) => {
                 log::error!("fleet query failed: {e}");
-                let total: u64 = self.machines.values().map(|m| m.total_ingested).sum();
-                return RouteResult::NotReady { ingested: total };
+                return RouteResult::NotReady { ingested: total_ingested };
             }
         };
         self.metrics.fleet_latency.observe(t0.elapsed().as_secs_f64());
@@ -532,7 +620,7 @@ impl Coordinator {
         self.metrics.shard_merge_seconds_total.add(resp.timings.merge_seconds);
         self.metrics.shard_retries.add(resp.provenance.shard_retries);
         self.metrics.wire_bytes_total.add(resp.provenance.wire_bytes);
-        self.metrics.replica_count.set(self.transport.replica_count() as i64);
+        self.metrics.replica_count.set(self.transport_replica_count() as i64);
         if resp.provenance.degraded {
             self.metrics.fleet_degraded.inc();
         }
@@ -545,7 +633,7 @@ impl Coordinator {
                 .collect(),
             f_value: resp.f_final,
             window_total: rows.len(),
-            machines,
+            machines: machines_used,
             machines_skipped: skipped,
             shards: resp.provenance.shards_used,
             shard_seconds: resp.timings.shard_seconds,
@@ -554,12 +642,13 @@ impl Coordinator {
     }
 
     /// Drive a whole stream to exhaustion (utility for examples/tests).
-    pub fn run_stream(&mut self, source: &mut dyn StreamSource) -> usize {
+    pub fn run_stream(&self, source: &mut dyn StreamSource) -> usize {
+        let ingest_batch = self.cfg.read().unwrap().coordinator.ingest_batch;
         let mut total = 0;
         loop {
             let mut pushed = 0;
             // fill up to the ingest batch, then tick
-            for _ in 0..self.cfg.coordinator.ingest_batch {
+            for _ in 0..ingest_batch {
                 match source.next_record() {
                     Some(rec) => {
                         self.offer(rec);
@@ -568,28 +657,126 @@ impl Coordinator {
                     None => break,
                 }
             }
-            if pushed == 0 && self.queue.is_empty() {
+            if pushed == 0 && self.queue_len() == 0 {
                 break;
             }
             total += self.tick();
         }
         // final flush
-        while !self.queue.is_empty() {
+        while self.queue_len() > 0 {
             total += self.tick();
         }
         total
     }
 
-    pub fn machines(&self) -> &BTreeMap<String, MachineState> {
-        &self.machines
+    /// Run `f` over the per-machine state map (holds the machines read
+    /// lock for the duration of `f` — keep it short).
+    pub fn with_machines<R>(&self, f: impl FnOnce(&BTreeMap<String, MachineState>) -> R) -> R {
+        f(&self.machines.read().unwrap())
+    }
+
+    /// Names of all machines currently tracked.
+    pub fn machine_names(&self) -> Vec<String> {
+        self.machines.read().unwrap().keys().cloned().collect()
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.queue.lock().unwrap().len()
     }
 
-    pub fn config(&self) -> &ServiceConfig {
-        &self.cfg
+    /// Observable state of the ingest queue (depth, watermark, the
+    /// once-dark accepted/evicted counters) — what the daemon exports
+    /// as `ebc_daemon_ingest_*` metrics.
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.lock().unwrap().stats()
+    }
+
+    /// A clone of the current service config (live-reloadable — see
+    /// [`Self::apply_config`]).
+    pub fn config(&self) -> ServiceConfig {
+        self.cfg.read().unwrap().clone()
+    }
+
+    /// Live config reload: swap every runtime-tunable section without
+    /// dropping machine windows or queued records. Returns the list of
+    /// sections that changed. The `[engine]` section is baked into the
+    /// oracle factory at construction and cannot be swapped here —
+    /// a changed engine section is a typed error (restart required).
+    ///
+    /// Applied live: `[summary]` (k / algorithm / refresh cadence;
+    /// window resize trims or grows per-machine windows in place),
+    /// `[coordinator]` (queue capacity resizes preserving queued
+    /// records, ingest batch), `[shard]` (plan cache is dropped; the
+    /// transport is rebuilt only when its knobs changed — replica
+    /// registries otherwise survive), `machines` (new names are added;
+    /// existing windows are never dropped), `[obs]` (span switch).
+    pub fn apply_config(&self, new: ServiceConfig) -> Result<Vec<&'static str>, String> {
+        let old = self.cfg.read().unwrap().clone();
+        if new.engine != old.engine {
+            return Err(
+                "the [engine] section is baked into the oracle factory at startup and cannot \
+                 be live-reloaded (restart the daemon to change precision/kernel/threads)"
+                    .into(),
+            );
+        }
+        let mut applied = Vec::new();
+        if new.summary != old.summary {
+            applied.push("summary");
+            if new.summary.window != old.summary.window {
+                let cap = new.summary.window.max(1);
+                for m in self.machines.write().unwrap().values_mut() {
+                    m.set_window_cap(cap);
+                }
+            }
+        }
+        if new.coordinator != old.coordinator {
+            applied.push("coordinator");
+            if new.coordinator.queue_capacity != old.coordinator.queue_capacity {
+                self.queue.lock().unwrap().set_capacity(new.coordinator.queue_capacity);
+            }
+        }
+        if new.shard != old.shard {
+            applied.push("shard");
+            self.plan_cache.lock().unwrap().clear();
+            // only rebuild the transport when its own knobs moved —
+            // a replica registry's accumulated state survives plain
+            // shard-count / partitioner changes
+            if new.shard.transport != old.shard.transport
+                || new.shard.replicas != old.shard.replicas
+                || new.shard.net_options() != old.shard.net_options()
+            {
+                let t = crate::shard::build_transport_with(
+                    &new.shard.transport,
+                    new.shard.replicas,
+                    &new.shard.net_options(),
+                )
+                .ok_or_else(|| format!("unknown shard transport '{}'", new.shard.transport))?;
+                *self.transport.lock().unwrap() = t;
+            }
+        }
+        if new.machines != old.machines {
+            applied.push("machines");
+            let cap = new.summary.window.max(1);
+            let mut machines = self.machines.write().unwrap();
+            for name in &new.machines {
+                if name.starts_with('@') {
+                    log::warn!("ignoring machine '{name}': '@' names are reserved for routes");
+                    continue;
+                }
+                machines
+                    .entry(name.clone())
+                    .or_insert_with(|| MachineState::new(name, cap));
+            }
+        }
+        if new.obs != old.obs {
+            applied.push("obs");
+            obs::configure(&new.obs.obs_config());
+        }
+        if new.name != old.name {
+            applied.push("name");
+        }
+        *self.cfg.write().unwrap() = new;
+        Ok(applied)
     }
 }
 
@@ -620,7 +807,7 @@ mod tests {
 
     #[test]
     fn ingests_and_refreshes() {
-        let mut c = Coordinator::new(cfg(2, 5, 100), cpu_factory());
+        let c = Coordinator::new(cfg(2, 5, 100), cpu_factory());
         for s in 0..20u64 {
             c.offer(rec("m1", s, s as f32));
         }
@@ -639,9 +826,56 @@ mod tests {
     }
 
     #[test]
+    fn coordinator_is_shareable_across_threads() {
+        // the daemon contract: Arc<Coordinator> + &self methods
+        let c = Arc::new(Coordinator::new(cfg(2, 5, 100), cpu_factory()));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for s in 0..25u64 {
+                    c.offer(rec(&format!("m{t}"), s, (s + t) as f32));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        assert_eq!(c.metrics.ingested.get(), 100);
+        for t in 0..4 {
+            assert!(matches!(c.query(&format!("m{t}")), RouteResult::Summary(_)));
+        }
+    }
+
+    #[test]
+    fn fold_defers_refreshes_to_caller() {
+        let c = Coordinator::new(cfg(2, 5, 100), cpu_factory());
+        for s in 0..20u64 {
+            c.offer(rec("m1", s, s as f32));
+        }
+        let mut due_seen = false;
+        while c.queue_len() > 0 {
+            let (_, due) = c.fold();
+            if !due.is_empty() {
+                assert_eq!(due, vec!["m1".to_string()]);
+                due_seen = true;
+            }
+        }
+        // fold alone never refreshed anything
+        assert!(due_seen);
+        assert_eq!(c.metrics.refreshes.get(), 0);
+        assert!(c.refresh("m1"));
+        assert_eq!(c.metrics.refreshes.get(), 1);
+        assert!(!c.refresh("no-such-machine"));
+    }
+
+    #[test]
     fn summary_seqs_track_window() {
         // window of 10: after 30 records the reps must be from seq >= 20
-        let mut c = Coordinator::new(cfg(3, 5, 10), cpu_factory());
+        let c = Coordinator::new(cfg(3, 5, 10), cpu_factory());
         for s in 0..30u64 {
             c.offer(rec("m1", s, (s % 7) as f32));
             c.tick();
@@ -657,7 +891,7 @@ mod tests {
 
     #[test]
     fn malformed_frames_counted() {
-        let mut c = Coordinator::new(cfg(2, 100, 50), cpu_factory());
+        let c = Coordinator::new(cfg(2, 100, 50), cpu_factory());
         c.offer(rec("m1", 0, 1.0));
         c.offer(CycleRecord { machine: "m1".into(), seq: 1, values: vec![1.0] }); // wrong dim
         while c.queue_len() > 0 {
@@ -670,7 +904,7 @@ mod tests {
 
     #[test]
     fn unknown_machine_routes() {
-        let mut c = Coordinator::new(cfg(2, 5, 10), cpu_factory());
+        let c = Coordinator::new(cfg(2, 5, 10), cpu_factory());
         c.offer(rec("alpha", 0, 1.0));
         c.tick();
         match c.query("alhpa") {
@@ -685,25 +919,30 @@ mod tests {
     fn backpressure_evicts_under_burst() {
         let mut small = cfg(2, 1000, 10);
         small.coordinator.queue_capacity = 16;
-        let mut c = Coordinator::new(small, cpu_factory());
+        let c = Coordinator::new(small, cpu_factory());
         for s in 0..100u64 {
             c.offer(rec("m", s, s as f32));
         }
         assert!(c.metrics.evicted.get() > 0);
+        let stats = c.queue_stats();
+        assert_eq!(stats.accepted, 100);
+        assert_eq!(stats.evicted, c.metrics.evicted.get());
+        assert!(stats.above_watermark);
         while c.queue_len() > 0 {
             c.tick();
         }
         // freshest records survived
-        let m = &c.machines()["m"];
-        let (_, seqs) = m.window_matrix().unwrap();
-        assert_eq!(*seqs.last().unwrap(), 99);
+        c.with_machines(|ms| {
+            let (_, seqs) = ms["m"].window_matrix().unwrap();
+            assert_eq!(*seqs.last().unwrap(), 99);
+        });
     }
 
     #[test]
     fn fleet_query_shards_merges_and_counts() {
         let mut cfg = cfg(3, 1000, 100);
         cfg.shard.shards = 2;
-        let mut c = Coordinator::new(cfg, cpu_factory());
+        let c = Coordinator::new(cfg, cpu_factory());
         for m in ["m1", "m2", "m3"] {
             for s in 0..12u64 {
                 c.offer(rec(m, s, (s as f32) + m.len() as f32));
@@ -765,18 +1004,18 @@ mod tests {
             }
             c
         };
-        let reps_of = |c: &mut Coordinator| match c.query(FLEET_QUERY) {
+        let reps_of = |c: &Coordinator| match c.query(FLEET_QUERY) {
             RouteResult::Fleet(f) => f.representatives,
             other => panic!("{other:?}"),
         };
 
-        let mut healthy = mk(None);
-        let want = reps_of(&mut healthy);
+        let healthy = mk(None);
+        let want = reps_of(&healthy);
 
         let chaos = StdArc::new(LoopbackReplicaTransport::with_replicas(3, 1));
         chaos.fail_after("replica-0", 1); // dies after its first shard
-        let mut degraded = mk(Some(Box::new(StdArc::clone(&chaos))));
-        let got = reps_of(&mut degraded);
+        let degraded = mk(Some(Box::new(StdArc::clone(&chaos))));
+        let got = reps_of(&degraded);
         assert_eq!(got, want, "replica failure changed the selection");
         assert!(degraded.metrics.shard_retries.get() >= 1, "no retry counted");
         assert_eq!(degraded.metrics.replica_count.get(), 2, "dead replica still counted");
@@ -785,7 +1024,7 @@ mod tests {
         // a drained replica receives no new shards on the next query
         let done_before = chaos.with_registry(|r| r.get("replica-2").unwrap().jobs_done);
         chaos.drain("replica-2");
-        let again = reps_of(&mut degraded);
+        let again = reps_of(&degraded);
         assert_eq!(again, want);
         assert_eq!(
             chaos.with_registry(|r| r.get("replica-2").unwrap().jobs_done),
@@ -810,7 +1049,7 @@ mod tests {
         });
         let plans_built = Arc::new(AtomicUsize::new(0));
         let pb = Arc::clone(&plans_built);
-        let mut c = Coordinator::new(cfg, factory).with_planner(Box::new(move |req| {
+        let c = Coordinator::new(cfg, factory).with_planner(Box::new(move |req| {
             pb.fetch_add(1, Ordering::SeqCst);
             Arc::new(ShardPlan::plan(None, req))
         }));
@@ -844,7 +1083,7 @@ mod tests {
             }
             Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
         });
-        let mut c = Coordinator::new(cfg, factory);
+        let c = Coordinator::new(cfg, factory);
         for s in 0..8u64 {
             c.offer(rec("m1", s, s as f32));
         }
@@ -860,7 +1099,7 @@ mod tests {
         use crate::api::{DatasetRef, SummarizeRequest};
         use crate::engine::Precision;
         use crate::linalg::CpuKernel;
-        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        let c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
         let mut rng = crate::util::rng::Rng::new(4);
         let ds = DatasetRef::Inline(Arc::new(Matrix::random_normal(20, 3, &mut rng)));
         // matching knobs run fine (engine defaults: f32 / blocked / 0)
@@ -886,7 +1125,7 @@ mod tests {
 
     #[test]
     fn fleet_dimension_is_majority_not_first() {
-        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        let c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
         // "aaa-probe" sorts first but carries the minority dimension
         c.offer(CycleRecord { machine: "aaa-probe".into(), seq: 0, values: vec![1.0, 2.0] });
         for s in 0..6u64 {
@@ -909,7 +1148,7 @@ mod tests {
 
     #[test]
     fn reserved_route_names_rejected_at_ingest() {
-        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        let c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
         c.offer(rec("@fleet", 0, 1.0));
         c.offer(rec("ok", 0, 1.0));
         while c.queue_len() > 0 {
@@ -917,14 +1156,14 @@ mod tests {
         }
         assert_eq!(c.metrics.ingested.get(), 1);
         assert_eq!(c.metrics.malformed.get(), 1);
-        assert!(!c.machines().contains_key("@fleet"));
+        assert!(!c.with_machines(|ms| ms.contains_key("@fleet")));
         // the route still answers as a fleet query
         assert!(matches!(c.query(FLEET_QUERY), RouteResult::Fleet(_)));
     }
 
     #[test]
     fn fleet_query_without_data_is_not_ready() {
-        let mut c = Coordinator::new(cfg(2, 5, 10), cpu_factory());
+        let c = Coordinator::new(cfg(2, 5, 10), cpu_factory());
         match c.query(FLEET_QUERY) {
             RouteResult::NotReady { ingested: 0 } => {}
             other => panic!("{other:?}"),
@@ -935,7 +1174,7 @@ mod tests {
 
     #[test]
     fn fleet_query_skips_dimension_mismatched_machines() {
-        let mut c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        let c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
         // m1 produces 3-dim cycles (the `rec` helper), modd 2-dim ones
         for s in 0..8u64 {
             c.offer(rec("m1", s, s as f32));
@@ -960,12 +1199,74 @@ mod tests {
     }
 
     #[test]
+    fn query_cached_never_computes_fleet_inline() {
+        let c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        for s in 0..6u64 {
+            c.offer(rec("m1", s, s as f32));
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        c.refresh("m1");
+        assert!(matches!(c.query_cached("m1"), RouteResult::Summary(_)));
+        // the reserved fleet route resolves through the router (no
+        // machine named '@fleet' exists), not through a merge
+        let fleet_before = c.metrics.fleet_queries.get();
+        assert!(matches!(c.query_cached(FLEET_QUERY), RouteResult::UnknownMachine { .. }));
+        assert_eq!(c.metrics.fleet_queries.get(), fleet_before);
+    }
+
+    #[test]
+    fn apply_config_preserves_windows_and_rejects_engine_changes() {
+        let c = Coordinator::new(cfg(2, 1000, 50), cpu_factory());
+        for s in 0..20u64 {
+            c.offer(rec("m1", s, s as f32));
+        }
+        while c.queue_len() > 0 {
+            c.tick();
+        }
+        let window_before = c.with_machines(|ms| ms["m1"].window_len());
+        assert_eq!(window_before, 20);
+
+        // live-tunable sections apply; windows survive
+        let mut new = c.config();
+        new.summary.k = 3;
+        new.summary.refresh_every = 7;
+        new.coordinator.queue_capacity = 512;
+        new.machines = vec!["m1".into(), "m-new".into()];
+        let applied = c.apply_config(new).unwrap();
+        assert!(applied.contains(&"summary"));
+        assert!(applied.contains(&"coordinator"));
+        assert!(applied.contains(&"machines"));
+        assert_eq!(c.with_machines(|ms| ms["m1"].window_len()), window_before);
+        assert!(c.with_machines(|ms| ms.contains_key("m-new")));
+        assert_eq!(c.config().summary.k, 3);
+        assert_eq!(c.queue_stats().capacity, 512);
+
+        // shrinking the window trims in place, preserving fresh cycles
+        let mut shrink = c.config();
+        shrink.summary.window = 8;
+        c.apply_config(shrink).unwrap();
+        c.with_machines(|ms| {
+            let (_, seqs) = ms["m1"].window_matrix().unwrap();
+            assert_eq!(seqs.len(), 8);
+            assert_eq!(*seqs.last().unwrap(), 19);
+        });
+
+        // engine changes are rejected with the windows untouched
+        let mut eng = c.config();
+        eng.engine.cpu_threads = 9;
+        assert!(c.apply_config(eng).is_err());
+        assert_eq!(c.with_machines(|ms| ms["m1"].window_len()), 8);
+    }
+
+    #[test]
     fn run_stream_processes_everything() {
         use crate::coordinator::stream::SimulatedFleet;
         use crate::imm::{Part, ProcessState};
         let mut cfg = cfg(3, 50, 200);
         cfg.coordinator.queue_capacity = 4096;
-        let mut c = Coordinator::new(cfg, cpu_factory());
+        let c = Coordinator::new(cfg, cpu_factory());
         let mut fleet = SimulatedFleet::new(
             &[("a", Part::Cover, ProcessState::Stable)],
             16,

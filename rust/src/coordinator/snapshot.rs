@@ -14,28 +14,31 @@ use crate::util::json::{Json, ObjBuilder};
 /// recorder, empty when span recording is off or nothing ran).
 pub fn snapshot(c: &Coordinator) -> Json {
     let m = &c.metrics;
-    let mut machines = Vec::new();
-    for (name, ms) in c.machines() {
-        let mut b = ObjBuilder::new()
-            .str("name", name.as_str())
-            .int("window_len", ms.window_len())
-            .int("total_ingested", ms.total_ingested as usize)
-            .int("since_refresh", ms.since_refresh);
-        if let Some(s) = &ms.summary {
-            let reps = Json::Arr(
-                s.representative_seqs
-                    .iter()
-                    .map(|&q| Json::Num(q as f64))
-                    .collect(),
-            );
-            b = b
-                .val("representatives", reps)
-                .num("f_value", s.f_value as f64)
-                .num("refresh_seconds", s.refresh_seconds)
-                .int("version", s.version as usize);
+    let machines = c.with_machines(|ms| {
+        let mut out = Vec::new();
+        for (name, ms) in ms {
+            let mut b = ObjBuilder::new()
+                .str("name", name.as_str())
+                .int("window_len", ms.window_len())
+                .int("total_ingested", ms.total_ingested as usize)
+                .int("since_refresh", ms.since_refresh);
+            if let Some(s) = &ms.summary {
+                let reps = Json::Arr(
+                    s.representative_seqs
+                        .iter()
+                        .map(|&q| Json::Num(q as f64))
+                        .collect(),
+                );
+                b = b
+                    .val("representatives", reps)
+                    .num("f_value", s.f_value as f64)
+                    .num("refresh_seconds", s.refresh_seconds)
+                    .int("version", s.version as usize);
+            }
+            out.push(b.build());
         }
-        machines.push(b.build());
-    }
+        out
+    });
     ObjBuilder::new()
         .str("service", c.config().name.clone())
         .int("queue_len", c.queue_len())
@@ -160,7 +163,7 @@ mod tests {
         let factory = Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
             Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
         });
-        let mut c = Coordinator::new(cfg, factory);
+        let c = Coordinator::new(cfg, factory);
         for s in 0..6u64 {
             c.offer(CycleRecord {
                 machine: "mx".into(),
@@ -218,7 +221,7 @@ mod tests {
         let factory = Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
             Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
         });
-        let mut c = Coordinator::new(cfg, factory);
+        let c = Coordinator::new(cfg, factory);
         for s in 0..8u64 {
             c.offer(CycleRecord {
                 machine: "mx".into(),
@@ -243,7 +246,7 @@ mod tests {
         let r = &restored[0];
         assert_eq!(r.machine, "mx");
         assert_eq!(r.total_ingested, 8);
-        let live = match crate::coordinator::Router::query(c.machines(), "mx") {
+        let live = match c.query("mx") {
             crate::coordinator::RouteResult::Summary(s) => s,
             other => panic!("{other:?}"),
         };

@@ -1,0 +1,816 @@
+//! `ebc::daemon` — the actor-style production daemon over the
+//! streaming coordinator.
+//!
+//! The [`crate::coordinator::Coordinator`] is a shareable state core
+//! (every method `&self` behind fine-grained locks); this module gives
+//! it a runtime: a bounded [`queue::JobQueue`] of coalesced jobs, a
+//! worker pool executing them, a deterministic [`scheduler::Scheduler`]
+//! heartbeat, jittered-backoff [`retry::RetryPolicy`] for failed jobs,
+//! live config [`reload`], SIGINT-driven graceful drain
+//! ([`shutdown`]), and an HTTP [`status`] endpoint.
+//!
+//! The design invariant, end to end: **ingest is never blocked by
+//! summarization.** [`Daemon::offer`] touches only the coordinator's
+//! ingest-queue mutex and a job-queue push; folds, summary refreshes
+//! and `@fleet` merges all run on worker threads, and operator queries
+//! ([`Daemon::query`]) serve cached state only. Load shedding under
+//! burst is observable, not silent: the once-dark
+//! `BoundedQueue::{accepted, evicted}` counters surface here as
+//! `ebc_daemon_ingest_*` metrics.
+//!
+//! ```no_run
+//! use ebc::api::Service;
+//! use ebc::config::schema::ServiceConfig;
+//! use ebc::daemon::Daemon;
+//!
+//! let mut cfg = ServiceConfig::default();
+//! cfg.daemon.status_addr = "127.0.0.1:9180".into();
+//! let daemon = Daemon::start(Service::cpu().coordinator(cfg)).unwrap();
+//! // ... offer records, serve queries ...
+//! let report = daemon.drain(std::time::Duration::from_secs(5));
+//! assert!(report.drained);
+//! ```
+
+pub mod queue;
+pub mod reload;
+pub mod retry;
+pub mod scheduler;
+pub mod shutdown;
+pub mod status;
+
+pub use queue::{Job, JobKey, JobKind, JobQueue, JobQueueStats, Push};
+pub use reload::{plan_reload, Knobs, ReloadPlan};
+pub use retry::RetryPolicy;
+pub use scheduler::{Scheduler, TickPlan};
+pub use shutdown::{install as install_signals, ShutdownFlags};
+pub use status::{StatusRoutes, StatusServer};
+
+use crate::coordinator::backpressure::Admission;
+use crate::coordinator::snapshot;
+use crate::coordinator::stream::CycleRecord;
+use crate::coordinator::{Coordinator, FleetSummary, RouteResult, FLEET_QUERY};
+use crate::config::schema::ServiceConfig;
+use crate::obs;
+use crate::util::json::{Json, ObjBuilder};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a worker blocks in [`JobQueue::next`] before re-checking
+/// shutdown state.
+const WORKER_POLL: Duration = Duration::from_millis(25);
+
+/// Daemon-level metrics on a dedicated registry (`ebc_daemon_*`,
+/// disjoint from the global `ebc_*` and coordinator `coord_*` families
+/// so the `/metrics` exposition can concatenate all three).
+pub struct DaemonMetrics {
+    registry: obs::Registry,
+    /// Live ingest-queue depth / capacity / watermark state.
+    pub ingest_depth: obs::Gauge,
+    pub ingest_capacity: obs::Gauge,
+    pub ingest_above_watermark: obs::Gauge,
+    /// The once-dark [`crate::coordinator::backpressure::BoundedQueue`]
+    /// counters, exported (synced by delta every scheduler tick and on
+    /// drain).
+    pub ingest_accepted: obs::Counter,
+    pub ingest_evicted: obs::Counter,
+    pub jobs_enqueued: obs::Counter,
+    pub jobs_coalesced: obs::Counter,
+    pub jobs_shed: obs::Counter,
+    pub jobs_pending: obs::Gauge,
+    pub jobs_in_flight: obs::Gauge,
+    /// Job execution latency (all kinds).
+    pub job_seconds: obs::Histogram,
+    pub job_retries: obs::Counter,
+    /// Jobs that exhausted their retry budget.
+    pub job_failures: obs::Counter,
+    pub ticks: obs::Counter,
+    pub reloads: obs::Counter,
+    /// Admission latency of [`Daemon::offer`] — the soak test's proof
+    /// that ingest stays fast while summarization runs.
+    pub offer_seconds: obs::Histogram,
+    pub drain_seconds: obs::Histogram,
+}
+
+impl Default for DaemonMetrics {
+    fn default() -> DaemonMetrics {
+        let r = obs::Registry::new();
+        DaemonMetrics {
+            ingest_depth: r.gauge("ebc_daemon_ingest_depth", "records queued for ingest"),
+            ingest_capacity: r.gauge("ebc_daemon_ingest_capacity", "ingest queue capacity"),
+            ingest_above_watermark: r.gauge(
+                "ebc_daemon_ingest_above_watermark",
+                "1 when the ingest queue is past its high watermark",
+            ),
+            ingest_accepted: r
+                .counter("ebc_daemon_ingest_accepted_total", "records accepted at admission"),
+            ingest_evicted: r.counter(
+                "ebc_daemon_ingest_evicted_total",
+                "records evicted under backpressure",
+            ),
+            jobs_enqueued: r.counter("ebc_daemon_jobs_enqueued_total", "jobs enqueued"),
+            jobs_coalesced: r
+                .counter("ebc_daemon_jobs_coalesced_total", "jobs folded into a pending key"),
+            jobs_shed: r.counter("ebc_daemon_jobs_shed_total", "jobs dropped at capacity"),
+            jobs_pending: r.gauge("ebc_daemon_jobs_pending", "jobs waiting for a worker"),
+            jobs_in_flight: r.gauge("ebc_daemon_jobs_in_flight", "jobs executing now"),
+            job_seconds: r.histogram("ebc_daemon_job_seconds", "job execution latency (seconds)"),
+            job_retries: r.counter("ebc_daemon_job_retries_total", "failed jobs retried"),
+            job_failures: r
+                .counter("ebc_daemon_job_failures_total", "jobs failed past their retry budget"),
+            ticks: r.counter("ebc_daemon_ticks_total", "scheduler heartbeats"),
+            reloads: r.counter("ebc_daemon_reloads_total", "live config reloads applied"),
+            offer_seconds: r
+                .histogram("ebc_daemon_offer_seconds", "offer() admission latency (seconds)"),
+            drain_seconds: r.histogram("ebc_daemon_drain_seconds", "graceful drain duration"),
+            registry: r,
+        }
+    }
+}
+
+impl DaemonMetrics {
+    /// The backing registry (for exposition / snapshots).
+    pub fn registry(&self) -> &obs::Registry {
+        &self.registry
+    }
+}
+
+impl std::fmt::Debug for DaemonMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DaemonMetrics")
+            .field("ingest_accepted", &self.ingest_accepted.get())
+            .field("ingest_evicted", &self.ingest_evicted.get())
+            .field("jobs_enqueued", &self.jobs_enqueued.get())
+            .field("jobs_coalesced", &self.jobs_coalesced.get())
+            .field("jobs_shed", &self.jobs_shed.get())
+            .field("job_retries", &self.job_retries.get())
+            .field("job_failures", &self.job_failures.get())
+            .field("ticks", &self.ticks.get())
+            .field("reloads", &self.reloads.get())
+            .finish()
+    }
+}
+
+/// State shared by the daemon handle, its workers, the scheduler thread
+/// and the status-endpoint closures.
+struct Shared {
+    coord: Arc<Coordinator>,
+    jobs: Arc<JobQueue>,
+    metrics: Arc<DaemonMetrics>,
+    knobs: Arc<Knobs>,
+    /// Set on drain: offers are refused, the scheduler exits.
+    stop: AtomicBool,
+    /// The `@fleet` answer served to operators — recomputed by Fleet
+    /// jobs off the query path.
+    fleet_cache: Mutex<Option<FleetSummary>>,
+    /// Last permanently-failed job (surfaced in `/status`).
+    last_error: Mutex<Option<String>>,
+    /// Fault-injection seam: the next N refresh/fleet jobs fail.
+    inject_failures: AtomicU32,
+    probe_seq: AtomicU64,
+    /// Previous BoundedQueue counter readings (delta sync).
+    prev_accepted: AtomicU64,
+    prev_evicted: AtomicU64,
+}
+
+impl Shared {
+    /// Push with metric accounting.
+    fn enqueue(&self, kind: JobKind) -> Push {
+        let p = self.jobs.push(kind);
+        match p {
+            Push::Queued => self.metrics.jobs_enqueued.inc(),
+            Push::Coalesced => self.metrics.jobs_coalesced.inc(),
+            Push::Shed => self.metrics.jobs_shed.inc(),
+        }
+        p
+    }
+
+    /// Export ingest-queue + job-queue state to the daemon registry.
+    fn sync_queue_metrics(&self) {
+        let st = self.coord.queue_stats();
+        self.metrics.ingest_depth.set(st.len as i64);
+        self.metrics.ingest_capacity.set(st.capacity as i64);
+        self.metrics.ingest_above_watermark.set(st.above_watermark as i64);
+        let pa = self.prev_accepted.swap(st.accepted, Ordering::SeqCst);
+        self.metrics.ingest_accepted.add(st.accepted.saturating_sub(pa));
+        let pe = self.prev_evicted.swap(st.evicted, Ordering::SeqCst);
+        self.metrics.ingest_evicted.add(st.evicted.saturating_sub(pe));
+        let js = self.jobs.stats();
+        self.metrics.jobs_pending.set(js.pending as i64);
+        self.metrics.jobs_in_flight.set(js.in_flight as i64);
+    }
+
+    /// Consume one armed injected failure (test seam).
+    fn take_injected_failure(&self) -> Result<(), String> {
+        let armed = self
+            .inject_failures
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+            .is_ok();
+        if armed {
+            Err("injected job failure".into())
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Concatenated text exposition of every registry in the process:
+    /// global (`ebc_*`: api/shard/net/kernel), coordinator (`coord_*`)
+    /// and daemon (`ebc_daemon_*`).
+    fn metrics_text(&self) -> String {
+        let mut out = obs::expo::render_text(&obs::global().registry.snapshot());
+        out.push_str(&obs::expo::render_text(&self.coord.metrics.registry().snapshot()));
+        out.push_str(&obs::expo::render_text(&self.metrics.registry.snapshot()));
+        out
+    }
+
+    fn status_json(&self) -> Json {
+        let js = self.jobs.stats();
+        let mut b = ObjBuilder::new()
+            .str(
+                "state",
+                if self.stop.load(Ordering::SeqCst) { "draining" } else { "running" },
+            )
+            .int("ticks", self.metrics.ticks.get() as usize)
+            .int("jobs_pending", js.pending)
+            .int("jobs_in_flight", js.in_flight)
+            .int("job_failures", self.metrics.job_failures.get() as usize)
+            .bool("fleet_cached", self.fleet_cache.lock().unwrap().is_some());
+        if let Some(e) = self.last_error.lock().unwrap().as_ref() {
+            b = b.str("last_error", e.clone());
+        }
+        b.val("snapshot", snapshot::snapshot(&self.coord)).build()
+    }
+}
+
+/// Outcome of a graceful drain (see [`Daemon::drain`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrainReport {
+    /// Everything accepted was folded and every job finished in time.
+    pub drained: bool,
+    /// Ingest records still queued when the deadline hit (0 on success).
+    pub queue_len: usize,
+    /// Jobs still pending/executing when the deadline hit (0, 0 on
+    /// success).
+    pub pending_jobs: usize,
+    pub in_flight_jobs: usize,
+    /// Wall-clock the drain took (seconds).
+    pub seconds: f64,
+    /// Final snapshot location, when `[daemon] snapshot_path` is set
+    /// and the write succeeded.
+    pub snapshot_path: Option<String>,
+}
+
+/// The running daemon: worker pool + scheduler + optional status
+/// endpoint over an `Arc<Coordinator>`. See the module docs.
+pub struct Daemon {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    scheduler: Option<JoinHandle<()>>,
+    status: Option<StatusServer>,
+}
+
+impl Daemon {
+    /// Start workers, scheduler and (when `[daemon] status_addr` is
+    /// set) the status endpoint for `coord`. Fails only on a status
+    /// bind error.
+    pub fn start(coord: Coordinator) -> std::io::Result<Daemon> {
+        Self::start_arc(Arc::new(coord))
+    }
+
+    /// [`Daemon::start`] over a coordinator the caller keeps a handle
+    /// to (tests asserting on coordinator state mid-run).
+    pub fn start_arc(coord: Arc<Coordinator>) -> std::io::Result<Daemon> {
+        let d = coord.config().daemon;
+        let shared = Arc::new(Shared {
+            jobs: Arc::new(JobQueue::new(d.job_capacity)),
+            metrics: Arc::new(DaemonMetrics::default()),
+            knobs: Arc::new(Knobs::from_section(&d)),
+            coord,
+            stop: AtomicBool::new(false),
+            fleet_cache: Mutex::new(None),
+            last_error: Mutex::new(None),
+            inject_failures: AtomicU32::new(0),
+            probe_seq: AtomicU64::new(0),
+            prev_accepted: AtomicU64::new(0),
+            prev_evicted: AtomicU64::new(0),
+        });
+        let workers = (0..d.workers.max(1))
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ebc-daemon-w{i}"))
+                    .spawn(move || worker_loop(sh, i as u64))
+                    .expect("spawn daemon worker")
+            })
+            .collect();
+        let sh = Arc::clone(&shared);
+        let scheduler = std::thread::Builder::new()
+            .name("ebc-daemon-sched".into())
+            .spawn(move || scheduler_loop(sh))
+            .expect("spawn daemon scheduler");
+        let status = if d.status_addr.is_empty() {
+            None
+        } else {
+            let m = Arc::clone(&shared);
+            let s = Arc::clone(&shared);
+            Some(StatusServer::start(
+                &d.status_addr,
+                StatusRoutes {
+                    metrics: Box::new(move || m.metrics_text()),
+                    status: Box::new(move || s.status_json().dump()),
+                },
+            )?)
+        };
+        Ok(Daemon { shared, workers, scheduler: Some(scheduler), status })
+    }
+
+    /// Offer one record (sensor push path). `None` once draining —
+    /// producers must stop. Touches only the ingest-queue mutex plus a
+    /// coalesced job push: never blocked by summarization.
+    pub fn offer(&self, rec: CycleRecord) -> Option<Admission> {
+        if self.shared.stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        let t0 = Instant::now();
+        let adm = self.shared.coord.offer(rec);
+        self.shared.enqueue(JobKind::Ingest);
+        self.shared.metrics.offer_seconds.observe(t0.elapsed().as_secs_f64());
+        Some(adm)
+    }
+
+    /// Operator query from cached state only. Per-machine summaries
+    /// come from the router; [`FLEET_QUERY`] serves the cached fleet
+    /// summary (enqueuing a recompute on a cold cache) — a merge never
+    /// runs on the query path.
+    pub fn query(&self, name: &str) -> RouteResult {
+        if name == FLEET_QUERY {
+            self.shared.coord.metrics.queries.inc();
+            if let Some(f) = self.shared.fleet_cache.lock().unwrap().clone() {
+                return RouteResult::Fleet(f);
+            }
+            self.shared.enqueue(JobKind::Fleet);
+            let ingested = self
+                .shared
+                .coord
+                .with_machines(|ms| ms.values().map(|m| m.total_ingested).sum());
+            return RouteResult::NotReady { ingested };
+        }
+        self.shared.coord.query_cached(name)
+    }
+
+    /// Apply a new config live (see [`plan_reload`] for what applies,
+    /// [`Coordinator::apply_config`] for the window/queue-preserving
+    /// swap). Returns the plan that was applied.
+    pub fn reload(&self, new: ServiceConfig) -> Result<ReloadPlan, String> {
+        let old = self.shared.coord.config();
+        let plan = plan_reload(&old, &new)?;
+        if plan.is_noop() {
+            return Ok(plan);
+        }
+        self.shared.jobs.set_capacity(new.daemon.job_capacity);
+        self.shared.knobs.apply(&new.daemon);
+        for knob in &plan.restart_required {
+            log::warn!("reload: {knob} changed but only applies on restart");
+        }
+        self.shared.coord.apply_config(new)?;
+        self.shared.metrics.reloads.inc();
+        log::info!("config reloaded: {:?}", plan.sections);
+        Ok(plan)
+    }
+
+    /// Graceful drain: refuse new offers, fold everything accepted,
+    /// finish (or time out on) in-flight jobs, write the final
+    /// snapshot, and only then stop the status endpoint — it serves
+    /// `/metrics` throughout the drain.
+    pub fn drain(mut self, timeout: Duration) -> DrainReport {
+        let t0 = Instant::now();
+        let deadline = t0 + timeout;
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        // flush: keep ingest jobs flowing until the queue is empty
+        // (each fold drains one adaptive batch)
+        while self.shared.coord.queue_len() > 0 && Instant::now() < deadline {
+            self.shared.enqueue(JobKind::Ingest);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.shared.jobs.close(false);
+        let idle = self
+            .shared
+            .jobs
+            .wait_idle(deadline.saturating_duration_since(Instant::now()));
+        if idle {
+            for h in self.workers.drain(..) {
+                let _ = h.join();
+            }
+        } else {
+            // a wedged job must not wedge shutdown: leave the workers
+            // detached (close(true) in Drop keeps them from picking up
+            // anything new) and report the truth
+            log::error!("drain timed out with jobs still running");
+            self.workers.clear();
+        }
+        let queue_len = self.shared.coord.queue_len();
+        let js = self.shared.jobs.stats();
+        self.shared.sync_queue_metrics();
+        let path = self.shared.knobs.snapshot_path();
+        let snapshot_path = if path.is_empty() {
+            None
+        } else {
+            match snapshot::save(&self.shared.coord, &path) {
+                Ok(()) => Some(path),
+                Err(e) => {
+                    log::error!("final snapshot failed: {e}");
+                    None
+                }
+            }
+        };
+        let seconds = t0.elapsed().as_secs_f64();
+        self.shared.metrics.drain_seconds.observe(seconds);
+        // the status endpoint goes down last
+        if let Some(mut s) = self.status.take() {
+            s.shutdown();
+        }
+        DrainReport {
+            drained: idle && queue_len == 0,
+            queue_len,
+            pending_jobs: js.pending,
+            in_flight_jobs: js.in_flight,
+            seconds,
+            snapshot_path,
+        }
+    }
+
+    /// The coordinator this daemon runs (read-side: snapshots, tests).
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.shared.coord
+    }
+
+    pub fn metrics(&self) -> &DaemonMetrics {
+        &self.shared.metrics
+    }
+
+    /// Owned handle to the metrics (outlives [`Daemon::drain`], which
+    /// consumes the daemon).
+    pub fn metrics_arc(&self) -> Arc<DaemonMetrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// The status endpoint's bound address, when one is serving.
+    pub fn status_addr(&self) -> Option<std::net::SocketAddr> {
+        self.status.as_ref().map(|s| s.addr())
+    }
+
+    /// The `/status` JSON document (also served over HTTP).
+    pub fn status_json(&self) -> Json {
+        self.shared.status_json()
+    }
+
+    /// The `/metrics` text exposition (also served over HTTP).
+    pub fn metrics_text(&self) -> String {
+        self.shared.metrics_text()
+    }
+
+    /// Last permanently-failed job, if any (retry budget exhausted).
+    pub fn last_error(&self) -> Option<String> {
+        self.shared.last_error.lock().unwrap().clone()
+    }
+
+    /// Arm the fault-injection seam: the next `n` refresh/fleet jobs
+    /// fail (then retry per policy). Test-only by intent, but harmless
+    /// in production.
+    pub fn inject_job_failures(&self, n: u32) {
+        self.shared.inject_failures.store(n, Ordering::SeqCst);
+    }
+
+    /// Enqueue a job that occupies one worker for `sleep_ms` (test
+    /// seam: prove slow jobs never block admission).
+    pub fn probe(&self, sleep_ms: u64) -> Push {
+        let id = self.shared.probe_seq.fetch_add(1, Ordering::SeqCst);
+        self.shared.enqueue(JobKind::Probe { id, sleep_ms })
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        // abortive path (drain() already took scheduler/status/workers
+        // on the graceful one): stop everything without flushing
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.jobs.close(true);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(mut s) = self.status.take() {
+            s.shutdown();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, seed: u64) {
+    // deterministic per-worker jitter (the soak test fixes seeds)
+    let mut rng = Rng::new(0xDAE304 ^ (seed.wrapping_mul(0x9E3779B97F4A7C15)));
+    loop {
+        match sh.jobs.next(WORKER_POLL) {
+            Some(job) => run_job(&sh, job, &mut rng),
+            None => {
+                if sh.jobs.is_shutdown() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn run_job(sh: &Shared, job: Job, rng: &mut Rng) {
+    let key = job.kind.key();
+    let t0 = Instant::now();
+    let res = {
+        // every job gets its own root so obs traces show one tree per
+        // job; the coordinator/api/shard spans nest underneath
+        let _root = obs::root_span("daemon.job");
+        let _kind = obs::span(job.kind.label());
+        execute_kind(sh, &job.kind)
+    };
+    sh.metrics.job_seconds.observe(t0.elapsed().as_secs_f64());
+    match res {
+        Ok(()) => sh.jobs.finish(&key),
+        Err(e) => {
+            let policy = RetryPolicy {
+                retries: sh.knobs.retries(),
+                backoff_ms: sh.knobs.backoff_ms(),
+            };
+            if policy.should_retry(job.attempt) {
+                let delay = policy.delay(job.attempt, rng);
+                log::warn!(
+                    "{} failed (attempt {}): {e}; retrying in {delay:?}",
+                    job.kind.label(),
+                    job.attempt + 1
+                );
+                sh.metrics.job_retries.inc();
+                sh.jobs.requeue(job, delay);
+            } else {
+                log::error!(
+                    "{} failed permanently after {} attempt(s): {e}",
+                    job.kind.label(),
+                    job.attempt + 1
+                );
+                sh.metrics.job_failures.inc();
+                *sh.last_error.lock().unwrap() =
+                    Some(format!("{}: {e}", job.kind.label()));
+                sh.jobs.finish(&key);
+            }
+        }
+    }
+}
+
+fn execute_kind(sh: &Shared, kind: &JobKind) -> Result<(), String> {
+    match kind {
+        JobKind::Ingest => {
+            let (_, due) = sh.coord.fold();
+            for name in due {
+                sh.enqueue(JobKind::Refresh(name));
+            }
+            // backlog: fold again (deferred behind this run's finish)
+            if sh.coord.queue_len() > 0 {
+                sh.enqueue(JobKind::Ingest);
+            }
+            Ok(())
+        }
+        JobKind::Refresh(name) => {
+            sh.take_injected_failure()?;
+            sh.coord.refresh(name); // false = machine gone; not an error
+            Ok(())
+        }
+        JobKind::Fleet => {
+            sh.take_injected_failure()?;
+            match sh.coord.fleet_summary() {
+                RouteResult::Fleet(f) => {
+                    *sh.fleet_cache.lock().unwrap() = Some(f);
+                    Ok(())
+                }
+                // nothing pooled yet (or the backend answered NotReady):
+                // keep the previous cache, try again next cadence
+                RouteResult::NotReady { .. } => Ok(()),
+                other => Err(format!("unexpected fleet route: {other:?}")),
+            }
+        }
+        JobKind::Probe { sleep_ms, .. } => {
+            std::thread::sleep(Duration::from_millis(*sleep_ms));
+            Ok(())
+        }
+    }
+}
+
+fn scheduler_loop(sh: Arc<Shared>) {
+    let mut sched = Scheduler::new();
+    while !sh.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(sh.knobs.tick_ms()));
+        sh.metrics.ticks.inc();
+        sh.sync_queue_metrics();
+        let plan = sched.on_tick(
+            sh.knobs.refresh_ticks(),
+            sh.knobs.fleet_ticks(),
+            sh.coord.queue_len(),
+        );
+        if plan.ingest {
+            sh.enqueue(JobKind::Ingest);
+        }
+        if plan.refresh {
+            let refresh_every = sh.coord.config().summary.refresh_every;
+            let due = sh.coord.with_machines(|ms| {
+                ms.iter()
+                    .filter(|(_, m)| m.needs_refresh(refresh_every))
+                    .map(|(n, _)| n.clone())
+                    .collect::<Vec<_>>()
+            });
+            for name in due {
+                sh.enqueue(JobKind::Refresh(name));
+            }
+        }
+        if plan.fleet {
+            sh.enqueue(JobKind::Fleet);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Service;
+
+    fn fast_cfg() -> ServiceConfig {
+        let mut cfg = ServiceConfig::default();
+        cfg.summary.k = 2;
+        cfg.summary.refresh_every = 5;
+        cfg.summary.window = 100;
+        cfg.daemon.tick_ms = 2;
+        cfg.daemon.refresh_ticks = 2;
+        cfg.daemon.fleet_ticks = 0;
+        cfg.daemon.backoff_ms = 2;
+        cfg
+    }
+
+    fn rec(m: &str, seq: u64) -> CycleRecord {
+        CycleRecord { machine: m.into(), seq, values: vec![seq as f32, 1.0, 0.5] }
+    }
+
+    fn wait_for(mut pred: impl FnMut() -> bool, what: &str) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !pred() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn offers_become_summaries_off_the_query_path() {
+        let daemon = Daemon::start(Service::cpu().coordinator(fast_cfg())).unwrap();
+        for s in 0..30u64 {
+            assert!(daemon.offer(rec("m1", s)).is_some());
+        }
+        wait_for(
+            || matches!(daemon.query("m1"), RouteResult::Summary(_)),
+            "a summary for m1",
+        );
+        assert!(daemon.metrics().job_seconds.snapshot().count > 0);
+        assert_eq!(daemon.coordinator().metrics.ingested.get(), 30);
+        let report = daemon.drain(Duration::from_secs(5));
+        assert!(report.drained, "{report:?}");
+        assert_eq!(report.queue_len, 0);
+    }
+
+    #[test]
+    fn fleet_queries_serve_from_cache_only() {
+        let mut cfg = fast_cfg();
+        cfg.daemon.fleet_ticks = 3;
+        let daemon = Daemon::start(Service::cpu().coordinator(cfg)).unwrap();
+        // cold cache: NotReady + a recompute enqueued, never inline
+        assert!(matches!(daemon.query(FLEET_QUERY), RouteResult::NotReady { .. }));
+        for m in ["m1", "m2"] {
+            for s in 0..10u64 {
+                daemon.offer(rec(m, s));
+            }
+        }
+        wait_for(
+            || matches!(daemon.query(FLEET_QUERY), RouteResult::Fleet(_)),
+            "a cached fleet summary",
+        );
+        match daemon.query(FLEET_QUERY) {
+            RouteResult::Fleet(f) => assert_eq!(f.machines, 2),
+            other => panic!("{other:?}"),
+        }
+        drop(daemon);
+    }
+
+    #[test]
+    fn injected_failures_retry_then_surface() {
+        let mut cfg = fast_cfg();
+        cfg.daemon.retries = 1;
+        let daemon = Daemon::start(Service::cpu().coordinator(cfg)).unwrap();
+        for s in 0..10u64 {
+            daemon.offer(rec("m1", s));
+        }
+        wait_for(
+            || matches!(daemon.query("m1"), RouteResult::Summary(_)),
+            "initial summary",
+        );
+        // 2 failures = first attempt + its only retry → surfaced
+        daemon.inject_job_failures(2);
+        for s in 10..20u64 {
+            daemon.offer(rec("m1", s));
+        }
+        wait_for(|| daemon.metrics().job_failures.get() >= 1, "a surfaced failure");
+        assert!(daemon.metrics().job_retries.get() >= 1);
+        let err = daemon.last_error().expect("last_error recorded");
+        assert!(err.contains("injected"), "{err}");
+        // the daemon keeps working after a surfaced failure
+        for s in 20..40u64 {
+            daemon.offer(rec("m1", s));
+        }
+        let report = daemon.drain(Duration::from_secs(5));
+        assert!(report.drained, "{report:?}");
+    }
+
+    #[test]
+    fn reload_applies_live_and_preserves_windows() {
+        let daemon = Daemon::start(Service::cpu().coordinator(fast_cfg())).unwrap();
+        for s in 0..20u64 {
+            daemon.offer(rec("m1", s));
+        }
+        wait_for(|| daemon.coordinator().metrics.ingested.get() == 20, "ingest of 20");
+        let mut new = daemon.coordinator().config();
+        new.summary.k = 3;
+        new.daemon.refresh_ticks = 7;
+        new.daemon.job_capacity = 128;
+        let plan = daemon.reload(new).unwrap();
+        assert!(plan.sections.contains(&"summary"));
+        assert!(plan.sections.contains(&"daemon"));
+        assert_eq!(daemon.metrics().reloads.get(), 1);
+        assert_eq!(
+            daemon.coordinator().with_machines(|ms| ms["m1"].window_len()),
+            20,
+            "reload dropped the window"
+        );
+        // engine change rejected, nothing applied
+        let mut bad = daemon.coordinator().config();
+        bad.engine.batch = 7;
+        assert!(daemon.reload(bad).is_err());
+        assert_eq!(daemon.metrics().reloads.get(), 1);
+        drop(daemon);
+    }
+
+    #[test]
+    fn drain_timeout_reports_truthfully() {
+        let daemon = Daemon::start(Service::cpu().coordinator(fast_cfg())).unwrap();
+        assert_eq!(daemon.probe(400), Push::Queued);
+        // give a worker time to claim the probe
+        std::thread::sleep(Duration::from_millis(50));
+        let report = daemon.drain(Duration::from_millis(60));
+        assert!(!report.drained, "a 400ms probe cannot drain in 60ms: {report:?}");
+        assert!(report.seconds < 2.0, "drain blocked far past its deadline");
+    }
+
+    #[test]
+    fn status_endpoint_serves_all_metric_families() {
+        let mut cfg = fast_cfg();
+        cfg.daemon.status_addr = "127.0.0.1:0".into();
+        let daemon = Daemon::start(Service::cpu().coordinator(cfg)).unwrap();
+        for s in 0..10u64 {
+            daemon.offer(rec("m1", s));
+        }
+        wait_for(
+            || matches!(daemon.query("m1"), RouteResult::Summary(_)),
+            "a summary",
+        );
+        // the global ebc_* families only register once api::execute has
+        // run, which a fleet merge drives — force one through the cache
+        daemon.query(FLEET_QUERY);
+        wait_for(
+            || matches!(daemon.query(FLEET_QUERY), RouteResult::Fleet(_)),
+            "a cached fleet summary",
+        );
+        let text = daemon.metrics_text();
+        for family in ["ebc_requests_total", "coord_ingested_total", "ebc_daemon_job_seconds"] {
+            assert!(text.contains(family), "{family} missing from exposition");
+        }
+        let status = daemon.status_json().dump();
+        assert!(status.contains("\"state\""), "{status}");
+        assert!(status.contains("\"snapshot\""), "{status}");
+        // and over HTTP
+        let addr = daemon.status_addr().expect("status endpoint bound");
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+        let mut body = String::new();
+        s.read_to_string(&mut body).unwrap();
+        assert!(body.contains("ebc_daemon_offer_seconds"), "{body}");
+        let report = daemon.drain(Duration::from_secs(5));
+        assert!(report.drained);
+    }
+}

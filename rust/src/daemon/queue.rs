@@ -1,0 +1,406 @@
+//! The daemon's job queue: keyed coalescing, single-flight execution,
+//! bounded pending with load shedding, and delayed retry entries.
+//!
+//! Jobs are *idempotent recomputations* (fold the ingest queue, refresh
+//! one machine's summary, recompute the fleet summary), so the queue
+//! coalesces by [`JobKey`]: a push whose key is already pending is
+//! dropped (the pending run will see the newer state anyway), and a
+//! push whose key is currently **executing** is deferred — re-enqueued
+//! once the active run finishes, because that run may have read state
+//! from before the push. This gives single-flight semantics per key
+//! without ever losing a "data changed" signal.
+//!
+//! The pending set is bounded; pushes beyond capacity are **shed** and
+//! counted by the daemon (`ebc_daemon_jobs_shed_total`) — under burst
+//! the daemon prefers dropping duplicate recompute requests over
+//! unbounded memory. Retries re-enter with a `not_before` deadline so
+//! backoff never blocks a worker thread.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One unit of daemon work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobKind {
+    /// Drain a batch from the coordinator ingest queue into machine
+    /// windows ([`crate::coordinator::Coordinator::fold`]).
+    Ingest,
+    /// Refresh one machine's cached summary.
+    Refresh(String),
+    /// Recompute the cached fleet-wide summary (`@fleet`).
+    Fleet,
+    /// Occupy a worker for `sleep_ms` (test seam: proves slow jobs
+    /// never block admission). `id` keeps probe keys distinct so
+    /// probes are never coalesced.
+    Probe { id: u64, sleep_ms: u64 },
+}
+
+impl JobKind {
+    /// Coalescing identity of this job.
+    pub fn key(&self) -> JobKey {
+        match self {
+            JobKind::Ingest => JobKey::Ingest,
+            JobKind::Refresh(name) => JobKey::Refresh(name.clone()),
+            JobKind::Fleet => JobKey::Fleet,
+            JobKind::Probe { id, .. } => JobKey::Probe(*id),
+        }
+    }
+
+    /// Span / log label (static for the obs layer).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobKind::Ingest => "daemon.ingest",
+            JobKind::Refresh(_) => "daemon.refresh",
+            JobKind::Fleet => "daemon.fleet",
+            JobKind::Probe { .. } => "daemon.probe",
+        }
+    }
+}
+
+/// Coalescing key: at most one pending and one executing job per key.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JobKey {
+    Ingest,
+    Refresh(String),
+    Fleet,
+    Probe(u64),
+}
+
+/// A queued job: its kind, how many times it already failed, and the
+/// earliest instant it may run (retry backoff).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub kind: JobKind,
+    pub attempt: u32,
+    pub not_before: Option<Instant>,
+}
+
+/// Outcome of a push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Push {
+    /// Enqueued as a fresh job.
+    Queued,
+    /// Folded into an already-pending or just-executing job.
+    Coalesced,
+    /// Dropped: the queue is at capacity (or closed).
+    Shed,
+}
+
+/// Point-in-time queue state (exported as `ebc_daemon_jobs_*` gauges).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobQueueStats {
+    pub pending: usize,
+    pub in_flight: usize,
+    pub capacity: usize,
+}
+
+struct State {
+    pending: VecDeque<Job>,
+    /// Keys of pending jobs (coalescing set).
+    keys: BTreeSet<JobKey>,
+    /// Keys currently executing on a worker.
+    active: BTreeSet<JobKey>,
+    /// Keys pushed while active: re-enqueued when the active run ends.
+    deferred: BTreeMap<JobKey, JobKind>,
+    in_flight: usize,
+    capacity: usize,
+    closed: bool,
+}
+
+/// Bounded multi-producer job queue with per-key single-flight (see
+/// module docs). All methods take `&self`; workers block in
+/// [`JobQueue::next`].
+pub struct JobQueue {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> JobQueue {
+        JobQueue {
+            state: Mutex::new(State {
+                pending: VecDeque::new(),
+                keys: BTreeSet::new(),
+                active: BTreeSet::new(),
+                deferred: BTreeMap::new(),
+                in_flight: 0,
+                capacity: capacity.max(1),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue (or coalesce, or shed — see [`Push`]).
+    pub fn push(&self, kind: JobKind) -> Push {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Push::Shed;
+        }
+        let key = kind.key();
+        if s.keys.contains(&key) {
+            return Push::Coalesced;
+        }
+        if s.active.contains(&key) {
+            s.deferred.insert(key, kind);
+            return Push::Coalesced;
+        }
+        if s.pending.len() >= s.capacity {
+            return Push::Shed;
+        }
+        s.keys.insert(key);
+        s.pending.push_back(Job { kind, attempt: 0, not_before: None });
+        drop(s);
+        self.cv.notify_one();
+        Push::Queued
+    }
+
+    /// Claim the next runnable job, blocking up to `timeout`. Returns
+    /// `None` on timeout or when the queue is closed and empty — the
+    /// caller distinguishes via [`JobQueue::is_shutdown`]. The claimed
+    /// key moves to the active set; the worker must hand it back with
+    /// [`JobQueue::finish`] or [`JobQueue::requeue`].
+    pub fn next(&self, timeout: Duration) -> Option<Job> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let ready = s
+                .pending
+                .iter()
+                .position(|j| j.not_before.map_or(true, |t| t <= now));
+            if let Some(i) = ready {
+                let job = s.pending.remove(i).expect("position in bounds");
+                let key = job.kind.key();
+                s.keys.remove(&key);
+                s.active.insert(key);
+                s.in_flight += 1;
+                return Some(job);
+            }
+            if s.closed && s.pending.is_empty() {
+                return None;
+            }
+            if now >= deadline {
+                return None;
+            }
+            // sleep until the deadline or the earliest delayed retry
+            let mut wake = deadline;
+            for j in &s.pending {
+                if let Some(t) = j.not_before {
+                    wake = wake.min(t);
+                }
+            }
+            let dur = wake
+                .saturating_duration_since(now)
+                .max(Duration::from_millis(1));
+            let (guard, _) = self.cv.wait_timeout(s, dur).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Mark a claimed job done. A key deferred while it ran re-enters
+    /// the pending set (the capacity bound still applies — a shed
+    /// deferred job is safe because the *next* state change re-pushes).
+    pub fn finish(&self, key: &JobKey) {
+        let mut s = self.state.lock().unwrap();
+        s.active.remove(key);
+        s.in_flight = s.in_flight.saturating_sub(1);
+        if let Some(kind) = s.deferred.remove(key) {
+            if !s.closed && s.pending.len() < s.capacity {
+                s.keys.insert(kind.key());
+                s.pending.push_back(Job { kind, attempt: 0, not_before: None });
+            }
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Hand a failed claimed job back for a delayed retry. Retries keep
+    /// their slot even at capacity — shedding an accepted job's retry
+    /// would turn a transient failure into silent loss. Works after
+    /// close (graceful drain finishes its retries).
+    pub fn requeue(&self, job: Job, delay: Duration) {
+        let mut s = self.state.lock().unwrap();
+        let key = job.kind.key();
+        s.active.remove(&key);
+        s.in_flight = s.in_flight.saturating_sub(1);
+        s.keys.insert(key);
+        s.pending.push_back(Job {
+            kind: job.kind,
+            attempt: job.attempt + 1,
+            not_before: Some(Instant::now() + delay),
+        });
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Block until no job is pending, deferred or executing (true) or
+    /// `timeout` elapses (false).
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.pending.is_empty() && s.deferred.is_empty() && s.in_flight == 0 {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Stop accepting pushes. `discard` additionally drops everything
+    /// pending (abortive shutdown); without it queued jobs drain.
+    pub fn close(&self, discard: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        if discard {
+            s.pending.clear();
+            s.keys.clear();
+            s.deferred.clear();
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Closed with nothing left to run — workers exit on this.
+    pub fn is_shutdown(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.closed && s.pending.is_empty()
+    }
+
+    /// Live-resize the pending bound (config reload). Already-queued
+    /// jobs always survive; only future pushes see the new bound.
+    pub fn set_capacity(&self, capacity: usize) {
+        self.state.lock().unwrap().capacity = capacity.max(1);
+    }
+
+    pub fn stats(&self) -> JobQueueStats {
+        let s = self.state.lock().unwrap();
+        JobQueueStats {
+            pending: s.pending.len(),
+            in_flight: s.in_flight,
+            capacity: s.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    const TICK: Duration = Duration::from_millis(10);
+
+    #[test]
+    fn pending_pushes_coalesce_by_key() {
+        let q = JobQueue::new(8);
+        assert_eq!(q.push(JobKind::Refresh("m1".into())), Push::Queued);
+        assert_eq!(q.push(JobKind::Refresh("m1".into())), Push::Coalesced);
+        assert_eq!(q.push(JobKind::Refresh("m2".into())), Push::Queued);
+        assert_eq!(q.push(JobKind::Fleet), Push::Queued);
+        assert_eq!(q.push(JobKind::Fleet), Push::Coalesced);
+        assert_eq!(q.stats().pending, 3);
+    }
+
+    #[test]
+    fn active_key_defers_and_reenters_after_finish() {
+        let q = JobQueue::new(8);
+        q.push(JobKind::Refresh("m1".into()));
+        let job = q.next(TICK).unwrap();
+        let key = job.kind.key();
+        // while executing: a new push for the key defers, not drops
+        assert_eq!(q.push(JobKind::Refresh("m1".into())), Push::Coalesced);
+        assert_eq!(q.stats().pending, 0);
+        q.finish(&key);
+        // the deferred push re-entered: the post-finish state gets rerun
+        let again = q.next(TICK).expect("deferred job re-enqueued");
+        assert_eq!(again.kind, JobKind::Refresh("m1".into()));
+        assert_eq!(again.attempt, 0);
+        q.finish(&again.kind.key());
+        assert!(q.next(TICK).is_none());
+    }
+
+    #[test]
+    fn capacity_sheds_fresh_pushes_but_never_retries() {
+        let q = JobQueue::new(2);
+        assert_eq!(q.push(JobKind::Probe { id: 1, sleep_ms: 0 }), Push::Queued);
+        assert_eq!(q.push(JobKind::Probe { id: 2, sleep_ms: 0 }), Push::Queued);
+        assert_eq!(q.push(JobKind::Probe { id: 3, sleep_ms: 0 }), Push::Shed);
+        // a claimed job's retry re-enters even with pending at capacity
+        let job = q.next(TICK).unwrap();
+        q.push(JobKind::Probe { id: 4, sleep_ms: 0 }); // refill to capacity
+        q.requeue(job, Duration::from_millis(0));
+        assert_eq!(q.stats().pending, 3);
+    }
+
+    #[test]
+    fn requeue_respects_not_before() {
+        let q = JobQueue::new(4);
+        q.push(JobKind::Fleet);
+        let job = q.next(TICK).unwrap();
+        q.requeue(job, Duration::from_millis(60));
+        // not yet runnable
+        assert!(q.next(Duration::from_millis(5)).is_none());
+        // blocks until the backoff elapses, then hands it out
+        let retried = q.next(Duration::from_millis(500)).expect("retry became runnable");
+        assert_eq!(retried.attempt, 1);
+        assert_eq!(retried.kind, JobKind::Fleet);
+    }
+
+    #[test]
+    fn close_drains_then_shuts_down() {
+        let q = JobQueue::new(4);
+        q.push(JobKind::Ingest);
+        q.push(JobKind::Fleet);
+        q.close(false);
+        assert_eq!(q.push(JobKind::Fleet), Push::Shed);
+        assert!(!q.is_shutdown(), "closed queue still has jobs to drain");
+        let a = q.next(TICK).unwrap();
+        q.finish(&a.kind.key());
+        let b = q.next(TICK).unwrap();
+        q.finish(&b.kind.key());
+        assert!(q.is_shutdown());
+        assert!(q.next(TICK).is_none());
+    }
+
+    #[test]
+    fn close_discard_drops_pending() {
+        let q = JobQueue::new(4);
+        q.push(JobKind::Ingest);
+        q.push(JobKind::Fleet);
+        q.close(true);
+        assert!(q.is_shutdown());
+        assert!(q.next(TICK).is_none());
+    }
+
+    #[test]
+    fn wait_idle_sees_in_flight_work() {
+        let q = Arc::new(JobQueue::new(4));
+        q.push(JobKind::Ingest);
+        assert!(!q.wait_idle(Duration::from_millis(5)), "pending job is not idle");
+        let job = q.next(TICK).unwrap();
+        assert!(!q.wait_idle(Duration::from_millis(5)), "in-flight job is not idle");
+        let q2 = Arc::clone(&q);
+        let key = job.kind.key();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.finish(&key);
+        });
+        assert!(q.wait_idle(Duration::from_millis(2000)), "finish did not wake wait_idle");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn set_capacity_applies_to_future_pushes() {
+        let q = JobQueue::new(1);
+        assert_eq!(q.push(JobKind::Probe { id: 1, sleep_ms: 0 }), Push::Queued);
+        assert_eq!(q.push(JobKind::Probe { id: 2, sleep_ms: 0 }), Push::Shed);
+        q.set_capacity(3);
+        assert_eq!(q.push(JobKind::Probe { id: 2, sleep_ms: 0 }), Push::Queued);
+    }
+}

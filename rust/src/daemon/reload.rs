@@ -1,0 +1,206 @@
+//! Live config reload: diff planning + the daemon's hot knobs.
+//!
+//! A reload is split in three:
+//! 1. [`plan_reload`] — pure diff of old vs new [`ServiceConfig`],
+//!    rejecting changes that cannot apply live (the `[engine]` section
+//!    is baked into the oracle factory at startup) and flagging daemon
+//!    knobs that need a restart (worker count, status address);
+//! 2. [`crate::coordinator::Coordinator::apply_config`] — swaps the
+//!    coordinator-owned sections without dropping machine windows or
+//!    queued records;
+//! 3. [`Knobs::apply`] — the daemon's cadence/retry knobs live in
+//!    atomics the scheduler and workers re-read every tick, so they
+//!    flip between ticks with no locking.
+
+use crate::config::schema::{DaemonSection, ServiceConfig};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What a reload will do, per [`plan_reload`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReloadPlan {
+    /// Config sections that differ and will apply live.
+    pub sections: Vec<&'static str>,
+    /// Daemon knobs that differ but only take effect on restart.
+    pub restart_required: Vec<&'static str>,
+}
+
+impl ReloadPlan {
+    /// Nothing differs — the reload is a no-op.
+    pub fn is_noop(&self) -> bool {
+        self.sections.is_empty() && self.restart_required.is_empty()
+    }
+}
+
+/// Diff `old` → `new` without touching anything. `Err` when the change
+/// cannot be applied live at all (engine section).
+pub fn plan_reload(old: &ServiceConfig, new: &ServiceConfig) -> Result<ReloadPlan, String> {
+    if new.engine != old.engine {
+        return Err(
+            "the [engine] section is baked into the oracle factory at startup and cannot \
+             be live-reloaded (restart the daemon to change precision/kernel/threads)"
+                .into(),
+        );
+    }
+    let mut sections = Vec::new();
+    if new.name != old.name {
+        sections.push("name");
+    }
+    if new.summary != old.summary {
+        sections.push("summary");
+    }
+    if new.coordinator != old.coordinator {
+        sections.push("coordinator");
+    }
+    if new.shard != old.shard {
+        sections.push("shard");
+    }
+    if new.obs != old.obs {
+        sections.push("obs");
+    }
+    if new.machines != old.machines {
+        sections.push("machines");
+    }
+    let mut restart_required = Vec::new();
+    if new.daemon != old.daemon {
+        sections.push("daemon");
+        if new.daemon.workers != old.daemon.workers {
+            restart_required.push("daemon.workers");
+        }
+        if new.daemon.status_addr != old.daemon.status_addr {
+            restart_required.push("daemon.status_addr");
+        }
+    }
+    Ok(ReloadPlan { sections, restart_required })
+}
+
+/// The daemon's hot knobs: lock-free reads on the scheduler/worker hot
+/// path, swapped atomically by reload. Knobs that configure threads or
+/// sockets at startup (worker count, status address) are *not* here —
+/// they need a restart and [`plan_reload`] says so.
+#[derive(Debug)]
+pub struct Knobs {
+    tick_ms: AtomicU64,
+    refresh_ticks: AtomicU64,
+    fleet_ticks: AtomicU64,
+    retries: AtomicU32,
+    backoff_ms: AtomicU64,
+    drain_timeout_ms: AtomicU64,
+    snapshot_path: Mutex<String>,
+}
+
+impl Knobs {
+    pub fn from_section(d: &DaemonSection) -> Knobs {
+        Knobs {
+            tick_ms: AtomicU64::new(d.tick_ms.max(1)),
+            refresh_ticks: AtomicU64::new(d.refresh_ticks.max(1)),
+            fleet_ticks: AtomicU64::new(d.fleet_ticks),
+            retries: AtomicU32::new(d.retries),
+            backoff_ms: AtomicU64::new(d.backoff_ms.max(1)),
+            drain_timeout_ms: AtomicU64::new(d.drain_timeout_ms.max(1)),
+            snapshot_path: Mutex::new(d.snapshot_path.clone()),
+        }
+    }
+
+    /// Swap every hot knob to `d`'s values (between two scheduler
+    /// ticks; in-flight jobs finish under the old values).
+    pub fn apply(&self, d: &DaemonSection) {
+        self.tick_ms.store(d.tick_ms.max(1), Ordering::SeqCst);
+        self.refresh_ticks.store(d.refresh_ticks.max(1), Ordering::SeqCst);
+        self.fleet_ticks.store(d.fleet_ticks, Ordering::SeqCst);
+        self.retries.store(d.retries, Ordering::SeqCst);
+        self.backoff_ms.store(d.backoff_ms.max(1), Ordering::SeqCst);
+        self.drain_timeout_ms.store(d.drain_timeout_ms.max(1), Ordering::SeqCst);
+        *self.snapshot_path.lock().unwrap() = d.snapshot_path.clone();
+    }
+
+    pub fn tick_ms(&self) -> u64 {
+        self.tick_ms.load(Ordering::SeqCst)
+    }
+    pub fn refresh_ticks(&self) -> u64 {
+        self.refresh_ticks.load(Ordering::SeqCst)
+    }
+    pub fn fleet_ticks(&self) -> u64 {
+        self.fleet_ticks.load(Ordering::SeqCst)
+    }
+    pub fn retries(&self) -> u32 {
+        self.retries.load(Ordering::SeqCst)
+    }
+    pub fn backoff_ms(&self) -> u64 {
+        self.backoff_ms.load(Ordering::SeqCst)
+    }
+    pub fn drain_timeout_ms(&self) -> u64 {
+        self.drain_timeout_ms.load(Ordering::SeqCst)
+    }
+    pub fn snapshot_path(&self) -> String {
+        self.snapshot_path.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_plan_for_identical_configs() {
+        let c = ServiceConfig::default();
+        let plan = plan_reload(&c, &c.clone()).unwrap();
+        assert!(plan.is_noop());
+    }
+
+    #[test]
+    fn live_sections_are_listed() {
+        let old = ServiceConfig::default();
+        let mut new = old.clone();
+        new.summary.k = 9;
+        new.shard.shards = 7;
+        new.machines.push("m-new".into());
+        let plan = plan_reload(&old, &new).unwrap();
+        assert_eq!(plan.sections, vec!["summary", "shard", "machines"]);
+        assert!(plan.restart_required.is_empty());
+    }
+
+    #[test]
+    fn engine_changes_are_rejected() {
+        let old = ServiceConfig::default();
+        let mut new = old.clone();
+        new.engine.batch = 1;
+        let err = plan_reload(&old, &new).unwrap_err();
+        assert!(err.contains("[engine]"), "{err}");
+    }
+
+    #[test]
+    fn structural_daemon_knobs_need_restart() {
+        let old = ServiceConfig::default();
+        let mut new = old.clone();
+        new.daemon.workers += 2;
+        new.daemon.status_addr = "127.0.0.1:9180".into();
+        new.daemon.tick_ms = 5; // hot knob: applies live, not listed
+        let plan = plan_reload(&old, &new).unwrap();
+        assert_eq!(plan.sections, vec!["daemon"]);
+        assert_eq!(plan.restart_required, vec!["daemon.workers", "daemon.status_addr"]);
+    }
+
+    #[test]
+    fn knobs_apply_swaps_values_and_clamps() {
+        let mut d = DaemonSection::default();
+        let k = Knobs::from_section(&d);
+        assert_eq!(k.tick_ms(), 20);
+        assert_eq!(k.retries(), 2);
+        d.tick_ms = 0; // clamps to 1 rather than busy-spinning
+        d.refresh_ticks = 3;
+        d.fleet_ticks = 0;
+        d.retries = 5;
+        d.backoff_ms = 10;
+        d.drain_timeout_ms = 250;
+        d.snapshot_path = "/tmp/x.json".into();
+        k.apply(&d);
+        assert_eq!(k.tick_ms(), 1);
+        assert_eq!(k.refresh_ticks(), 3);
+        assert_eq!(k.fleet_ticks(), 0);
+        assert_eq!(k.retries(), 5);
+        assert_eq!(k.backoff_ms(), 10);
+        assert_eq!(k.drain_timeout_ms(), 250);
+        assert_eq!(k.snapshot_path(), "/tmp/x.json");
+    }
+}

@@ -1,0 +1,97 @@
+//! Jittered exponential backoff for failed daemon jobs.
+//!
+//! Reuses the replica-transport backoff shape (`shard/net.rs`):
+//! `backoff_ms * 2^attempt * U[0.5, 1.5)`. Jitter comes from a caller
+//! owned [`Rng`] so workers stay deterministic under a fixed seed —
+//! the concurrency soak test depends on reproducible retry timing.
+
+use crate::config::schema::DaemonSection;
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// Retry budget + backoff base for one job class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt before the failure is surfaced
+    /// (0 = fail fast).
+    pub retries: u32,
+    /// Base backoff (ms), doubled per attempt.
+    pub backoff_ms: u64,
+}
+
+impl RetryPolicy {
+    pub fn from_config(d: &DaemonSection) -> RetryPolicy {
+        RetryPolicy { retries: d.retries, backoff_ms: d.backoff_ms }
+    }
+
+    /// Should attempt `attempt` (0-based) be retried after a failure?
+    pub fn should_retry(&self, attempt: u32) -> bool {
+        attempt < self.retries
+    }
+
+    /// Backoff before re-running attempt `attempt + 1`:
+    /// `backoff_ms * 2^attempt`, jittered by `U[0.5, 1.5)` to keep
+    /// retries from synchronizing across workers. The shift saturates
+    /// so a pathological attempt count cannot overflow.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let base = self.backoff_ms.max(1).saturating_mul(1u64 << attempt.min(16));
+        let jitter = 0.5 + rng.f64();
+        Duration::from_millis(((base as f64) * jitter).round() as u64)
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy::from_config(&DaemonSection::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_doubles_within_jitter_bounds() {
+        let p = RetryPolicy { retries: 3, backoff_ms: 40 };
+        let mut rng = Rng::new(7);
+        for attempt in 0..4u32 {
+            let base = 40u64 << attempt;
+            for _ in 0..50 {
+                let d = p.delay(attempt, &mut rng).as_millis() as u64;
+                assert!(
+                    d >= base / 2 && d <= base + base / 2 + 1,
+                    "attempt {attempt}: {d}ms outside [{}, {}]",
+                    base / 2,
+                    base + base / 2
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn delay_is_deterministic_per_seed() {
+        let p = RetryPolicy { retries: 2, backoff_ms: 50 };
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for attempt in 0..3 {
+            assert_eq!(p.delay(attempt, &mut a), p.delay(attempt, &mut b));
+        }
+    }
+
+    #[test]
+    fn retry_budget_is_respected() {
+        let p = RetryPolicy { retries: 2, backoff_ms: 1 };
+        assert!(p.should_retry(0));
+        assert!(p.should_retry(1));
+        assert!(!p.should_retry(2));
+        let fail_fast = RetryPolicy { retries: 0, backoff_ms: 1 };
+        assert!(!fail_fast.should_retry(0));
+    }
+
+    #[test]
+    fn huge_attempt_does_not_overflow() {
+        let p = RetryPolicy { retries: u32::MAX, backoff_ms: u64::MAX / 2 };
+        let mut rng = Rng::new(1);
+        let _ = p.delay(u32::MAX, &mut rng); // must not panic
+    }
+}

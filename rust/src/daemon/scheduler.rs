@@ -1,0 +1,112 @@
+//! Deterministic tick scheduler for recurring daemon work.
+//!
+//! The scheduler is **pure state**: the daemon's driver thread calls
+//! [`Scheduler::on_tick`] once per `tick_ms` heartbeat and acts on the
+//! returned [`TickPlan`]. Keeping the decision logic free of clocks and
+//! threads makes the cadence unit-testable (tick 100 always behaves
+//! like tick 100) and lets live reload change the cadence knobs between
+//! any two ticks. Duplicate work is coalesced downstream by the
+//! [`crate::daemon::queue::JobQueue`] key set — the scheduler can ask
+//! for a refresh that is already pending and nothing runs twice.
+
+/// What the daemon should enqueue on one tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TickPlan {
+    /// Fold queued ingest records into machine windows.
+    pub ingest: bool,
+    /// Enqueue summary refreshes for machines whose policy is due.
+    pub refresh: bool,
+    /// Recompute the cached fleet-wide summary.
+    pub fleet: bool,
+}
+
+/// Tick counter + cadence logic (see module docs).
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    tick: u64,
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler { tick: 0 }
+    }
+
+    /// Ticks elapsed since construction.
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// Advance one tick and decide what recurs now. `refresh_ticks`
+    /// gates the per-machine refresh sweep, `fleet_ticks` the fleet
+    /// summary recompute (0 = on-demand only); `queue_depth` is the
+    /// coordinator ingest-queue depth (a non-empty queue always asks
+    /// for an ingest fold, so records never sit waiting for a cadence).
+    pub fn on_tick(&mut self, refresh_ticks: u64, fleet_ticks: u64, queue_depth: usize) -> TickPlan {
+        self.tick += 1;
+        TickPlan {
+            ingest: queue_depth > 0,
+            refresh: self.tick % refresh_ticks.max(1) == 0,
+            fleet: fleet_ticks > 0 && self.tick % fleet_ticks == 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadences_fire_on_their_multiples() {
+        let mut s = Scheduler::new();
+        let mut refreshes = 0;
+        let mut fleets = 0;
+        for _ in 0..100 {
+            let p = s.on_tick(10, 25, 0);
+            assert!(!p.ingest);
+            if p.refresh {
+                refreshes += 1;
+                assert_eq!(s.ticks() % 10, 0);
+            }
+            if p.fleet {
+                fleets += 1;
+                assert_eq!(s.ticks() % 25, 0);
+            }
+        }
+        assert_eq!(refreshes, 10);
+        assert_eq!(fleets, 4);
+    }
+
+    #[test]
+    fn ingest_follows_queue_depth_not_cadence() {
+        let mut s = Scheduler::new();
+        assert!(s.on_tick(5, 0, 3).ingest);
+        assert!(!s.on_tick(5, 0, 0).ingest);
+    }
+
+    #[test]
+    fn fleet_zero_means_on_demand_only() {
+        let mut s = Scheduler::new();
+        for _ in 0..200 {
+            assert!(!s.on_tick(10, 0, 0).fleet);
+        }
+    }
+
+    #[test]
+    fn refresh_zero_clamps_to_every_tick() {
+        let mut s = Scheduler::new();
+        assert!(s.on_tick(0, 0, 0).refresh);
+        assert!(s.on_tick(0, 0, 0).refresh);
+    }
+
+    #[test]
+    fn cadence_can_change_between_ticks() {
+        // live reload: the knobs are re-read every tick
+        let mut s = Scheduler::new();
+        for _ in 0..9 {
+            assert!(!s.on_tick(10, 0, 0).refresh);
+        }
+        assert!(s.on_tick(10, 0, 0).refresh); // tick 10
+        assert!(!s.on_tick(3, 0, 0).refresh); // tick 11
+        assert!(s.on_tick(3, 0, 0).refresh); // tick 12 % 3 == 0
+    }
+}

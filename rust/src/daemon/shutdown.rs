@@ -1,0 +1,128 @@
+//! Signal-driven graceful shutdown without a signal-handling crate.
+//!
+//! A tiny `extern "C"` shim over libc's `signal(2)` installs handlers
+//! that do the only async-signal-safe thing possible: set a static
+//! atomic flag. The daemon's scheduler thread and the CLI serve loops
+//! poll the flags; SIGINT/SIGTERM request a graceful drain, SIGHUP a
+//! config reload. Fixes the `serve-replica` bug where the stop flag was
+//! never set by anything, so "stop" meant `kill -9` mid-frame.
+//!
+//! On non-unix targets the shim compiles to a no-op install; the flags
+//! can still be set programmatically ([`ShutdownFlags::request_stop`]),
+//! which is also how tests and the drain path drive them.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub const SIGHUP: i32 = 1;
+pub const SIGINT: i32 = 2;
+pub const SIGTERM: i32 = 15;
+
+static STOP: AtomicBool = AtomicBool::new(false);
+static RELOAD: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sys {
+    pub type Handler = extern "C" fn(i32);
+    extern "C" {
+        pub fn signal(signum: i32, handler: Handler) -> usize;
+        pub fn raise(signum: i32) -> i32;
+    }
+}
+
+extern "C" fn on_stop(_sig: i32) {
+    STOP.store(true, Ordering::SeqCst);
+}
+
+extern "C" fn on_reload(_sig: i32) {
+    RELOAD.store(true, Ordering::SeqCst);
+}
+
+/// Handles to the process-wide shutdown/reload flags. The flags are
+/// static (signal handlers cannot capture state), so every install
+/// returns views of the same two atomics.
+#[derive(Debug, Clone, Copy)]
+pub struct ShutdownFlags {
+    pub stop: &'static AtomicBool,
+    pub reload: &'static AtomicBool,
+}
+
+impl ShutdownFlags {
+    /// Has SIGINT/SIGTERM (or [`Self::request_stop`]) fired?
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Consume a pending SIGHUP reload request (true at most once per
+    /// signal).
+    pub fn take_reload(&self) -> bool {
+        self.reload.swap(false, Ordering::SeqCst)
+    }
+
+    /// Programmatic stop (tests, embedding without signals).
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Re-arm the flags (tests; a fresh serve loop after a drain).
+    pub fn reset(&self) {
+        self.stop.store(false, Ordering::SeqCst);
+        self.reload.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Install the handlers: SIGINT/SIGTERM → stop, SIGHUP → reload.
+/// Idempotent; returns the flag handles either way.
+pub fn install() -> ShutdownFlags {
+    #[cfg(unix)]
+    unsafe {
+        sys::signal(SIGINT, on_stop);
+        sys::signal(SIGTERM, on_stop);
+        sys::signal(SIGHUP, on_reload);
+    }
+    ShutdownFlags { stop: &STOP, reload: &RELOAD }
+}
+
+/// Deliver `sig` to the current process (test helper — proves the
+/// installed handler path, not just the atomics).
+#[cfg(unix)]
+pub fn raise_signal(sig: i32) {
+    unsafe {
+        sys::raise(sig);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // one test owns the static flags: cargo runs tests in threads of
+    // one process, so flag assertions must not interleave
+    #[test]
+    fn signals_set_flags_and_resets_clear_them() {
+        let flags = install();
+        flags.reset();
+        assert!(!flags.stop_requested());
+        assert!(!flags.take_reload());
+
+        #[cfg(unix)]
+        {
+            raise_signal(SIGHUP);
+            assert!(flags.take_reload(), "SIGHUP did not set the reload flag");
+            assert!(!flags.take_reload(), "reload flag not consumed");
+            assert!(!flags.stop_requested(), "SIGHUP must not stop the daemon");
+
+            raise_signal(SIGINT);
+            assert!(flags.stop_requested(), "SIGINT did not set the stop flag");
+            flags.reset();
+
+            raise_signal(SIGTERM);
+            assert!(flags.stop_requested(), "SIGTERM did not set the stop flag");
+        }
+
+        flags.reset();
+        flags.request_stop();
+        assert!(flags.stop_requested());
+        flags.reset();
+        assert!(!flags.stop_requested());
+    }
+}

@@ -1,0 +1,210 @@
+//! Minimal HTTP/1.1 status endpoint (std-only, no framework).
+//!
+//! Serves three read-only routes from a background accept thread:
+//!
+//! | route | body |
+//! |---|---|
+//! | `GET /healthz` | `ok` (liveness probe) |
+//! | `GET /metrics` | Prometheus-style text exposition of every obs registry (global + coordinator + daemon) |
+//! | `GET /` or `/status` | daemon state + coordinator snapshot JSON |
+//!
+//! The listener is non-blocking and polls a stop flag between accepts,
+//! so the endpoint keeps serving *during* a graceful drain (operators
+//! watch the queues empty) and is shut down last. Bodies come from
+//! injected closures — the server knows nothing about the daemon, which
+//! keeps the dependency arrow pointing one way.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Body producers for the two dynamic routes.
+pub struct StatusRoutes {
+    /// `/metrics`: text exposition (Prometheus-style).
+    pub metrics: Box<dyn Fn() -> String + Send + Sync>,
+    /// `/status` and `/`: JSON document.
+    pub status: Box<dyn Fn() -> String + Send + Sync>,
+}
+
+/// Handle to the background status server; dropping it (or calling
+/// [`StatusServer::shutdown`]) stops the accept loop and joins the
+/// thread.
+pub struct StatusServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving. Fails fast on bind errors — a daemon asked for a status
+    /// endpoint it cannot open should not start silently degraded.
+    pub fn start(addr: &str, routes: StatusRoutes) -> std::io::Result<StatusServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("ebc-status".into())
+            .spawn(move || accept_loop(listener, routes, stop2))
+            .expect("spawn status thread");
+        log::info!("status endpoint on http://{local}");
+        Ok(StatusServer { addr: local, stop, thread: Some(thread) })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread (idempotent).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, routes: StatusRoutes, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Err(e) = serve_one(stream, &routes) {
+                    log::debug!("status request failed: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log::warn!("status accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream, routes: &StatusRoutes) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(2000)))?;
+    // requests are tiny ("GET /path HTTP/1.1" + headers); one read of
+    // the first segment is enough to route — we never need the headers
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let mut parts = head.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
+    }
+    match path {
+        "/healthz" => respond(&mut stream, "200 OK", "text/plain; charset=utf-8", "ok\n"),
+        "/metrics" => {
+            let body = (routes.metrics)();
+            respond(&mut stream, "200 OK", "text/plain; version=0.0.4; charset=utf-8", &body)
+        }
+        "/" | "/status" => {
+            let body = (routes.status)();
+            respond(&mut stream, "200 OK", "application/json", &body)
+        }
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn test_server() -> StatusServer {
+        StatusServer::start(
+            "127.0.0.1:0",
+            StatusRoutes {
+                metrics: Box::new(|| "ebc_daemon_up 1\n".into()),
+                status: Box::new(|| "{\"state\":\"running\"}".into()),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_respond_with_expected_bodies() {
+        let srv = test_server();
+        let health = get(srv.addr(), "/healthz");
+        assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        let metrics = get(srv.addr(), "/metrics");
+        assert!(metrics.contains("ebc_daemon_up 1"), "{metrics}");
+        assert!(metrics.contains("Content-Type: text/plain"), "{metrics}");
+
+        for path in ["/", "/status"] {
+            let status = get(srv.addr(), path);
+            assert!(status.contains("application/json"), "{status}");
+            assert!(status.ends_with("{\"state\":\"running\"}"), "{status}");
+        }
+
+        let missing = get(srv.addr(), "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+    }
+
+    #[test]
+    fn non_get_is_rejected() {
+        let srv = test_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+    }
+
+    #[test]
+    fn shutdown_joins_and_stops_serving() {
+        let mut srv = test_server();
+        let addr = srv.addr();
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        // the listener is gone: connects fail or are refused quickly
+        assert!(
+            TcpStream::connect_timeout(&addr, Duration::from_millis(300)).is_err(),
+            "listener still accepting after shutdown"
+        );
+    }
+}

@@ -31,6 +31,7 @@
 //! | [`imm`] | injection-molding process simulator (case-study substrate) |
 //! | [`shard`] | sharded two-stage summarization (partition → optimize → merge) |
 //! | [`coordinator`] | streaming summarization service + router + fleet queries |
+//! | [`daemon`] | actor-style production daemon: job queues, scheduler, retry, reload, drain, status |
 //! | [`obs`] | observability: metrics registry, spans + flight recorder, exposition |
 //! | [`bench`] | bench harness (criterion unavailable offline) |
 //! | [`config`] | TOML-subset config system |
@@ -41,6 +42,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod engine;
 pub mod gpumodel;
 pub mod imm;

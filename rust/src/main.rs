@@ -9,7 +9,7 @@
 //! * `info`         — runtime + artifact inventory
 //! * `summarize`    — summarize a synthetic dataset (quick demo)
 //! * `casestudy`    — the paper's §6 injection-molding study (Table 2 / Fig. 4)
-//! * `serve`        — run the streaming coordinator over a simulated fleet
+//! * `serve`        — run the production daemon over a simulated fleet
 //! * `serve-replica` — run one TCP worker replica (the `tcp` transport's far end)
 //! * `shard-bench`  — sharded two-stage scaling sweep (shards × wall-clock)
 //! * `kernel-bench` — CPU kernel backend sweep (scalar vs blocked × threads)
@@ -25,7 +25,8 @@ use ebc::bench::{
 };
 use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
 use ebc::config::schema::ServiceConfig;
-use ebc::coordinator::{SimulatedFleet, FLEET_QUERY};
+use ebc::coordinator::{Admission, CycleRecord, SimulatedFleet, FLEET_QUERY};
+use ebc::daemon::{shutdown, Daemon};
 use ebc::engine::{OracleSpec, PlanRequest, Precision};
 use ebc::gpumodel::{
     predict_seconds, speedup, EbcWorkload, ModelPrecision, A72, QUADRO_RTX_5000, TX2, XEON_W2155,
@@ -83,12 +84,14 @@ fn app() -> AppSpec {
             },
             CommandSpec {
                 name: "serve",
-                help: "run the streaming coordinator over a simulated fleet",
+                help: "run the production daemon over a simulated fleet (ctrl-c drains)",
                 flags: vec![
-                    opt("config", "service config file (TOML subset)", ""),
+                    opt("config", "service config file (TOML subset; SIGHUP re-reads it)", ""),
                     opt("samples", "samples per cycle", "256"),
                     opt("seed", "rng seed", "1"),
                     opt("backend", "cpu | xla", "cpu"),
+                    opt("status-addr", "status/metrics HTTP endpoint (overrides [daemon])", ""),
+                    opt("cycles", "stop after N offered cycles (0 = run until SIGINT)", "0"),
                 ],
             },
             CommandSpec {
@@ -341,40 +344,118 @@ fn cmd_casestudy(m: &Matches) -> Result<()> {
 fn cmd_serve(m: &Matches) -> Result<()> {
     let samples = m.usize("samples")?;
     let seed = m.usize("seed")? as u64;
-    let cfg = match m.str("config")? {
+    let cycles = m.usize("cycles")?;
+    let config_path = m.str("config")?.to_string();
+    let status_override = m.str("status-addr")?.to_string();
+    let mut cfg = match config_path.as_str() {
         "" => ServiceConfig::default(),
         path => ServiceConfig::load(path)?,
     };
+    if !status_override.is_empty() {
+        cfg.daemon.status_addr = status_override.clone();
+    }
+    let drain_timeout = std::time::Duration::from_millis(cfg.daemon.drain_timeout_ms);
     let service = Service::from_backend(m.str("backend")?)?;
-    let mut coordinator = service.coordinator(cfg);
-    let mut fleet = SimulatedFleet::new(
-        &[
-            ("imm-cover-1", Part::Cover, ProcessState::Stable),
-            ("imm-cover-2", Part::Cover, ProcessState::StartUp),
-            ("imm-plate-1", Part::Plate, ProcessState::Regrind),
-            ("imm-plate-2", Part::Plate, ProcessState::Downtimes),
-        ],
+    let daemon = Daemon::start(service.coordinator(cfg))?;
+    let coordinator = Arc::clone(daemon.coordinator());
+    let dmetrics = daemon.metrics_arc();
+    if let Some(addr) = daemon.status_addr() {
+        println!("status endpoint: http://{addr} (/healthz /metrics /status)");
+    }
+    let flags = shutdown::install();
+    flags.reset();
+
+    let specs = [
+        ("imm-cover-1", Part::Cover, ProcessState::Stable),
+        ("imm-cover-2", Part::Cover, ProcessState::StartUp),
+        ("imm-plate-1", Part::Plate, ProcessState::Regrind),
+        ("imm-plate-2", Part::Plate, ProcessState::Downtimes),
+    ];
+    let mut fleet = SimulatedFleet::new(&specs, samples, seed);
+    // campaign replays restart machine-local seq at 0; rebase so every
+    // machine's sequence stays monotone across replays
+    let mut seqs: std::collections::BTreeMap<String, u64> = Default::default();
+    let mut replay = 0u64;
+    let mut offered: usize = 0;
+    println!(
+        "serving {} machines ({} samples/cycle); {} (SIGHUP reloads config)",
+        specs.len(),
         samples,
-        seed,
+        if cycles == 0 { "ctrl-c to drain".to_string() } else { format!("{cycles} cycles") }
     );
     let t0 = std::time::Instant::now();
-    let n = coordinator.run_stream(&mut fleet);
+    while !flags.stop_requested() && (cycles == 0 || offered < cycles) {
+        if flags.take_reload() {
+            if config_path.is_empty() {
+                log::warn!("SIGHUP received but no --config file to reload from");
+            } else {
+                match ServiceConfig::load(&config_path) {
+                    Ok(mut new) => {
+                        if !status_override.is_empty() {
+                            new.daemon.status_addr = status_override.clone();
+                        }
+                        match daemon.reload(new) {
+                            Ok(plan) => log::info!("reloaded {config_path}: {plan:?}"),
+                            Err(e) => log::error!("reload rejected: {e}"),
+                        }
+                    }
+                    Err(e) => log::error!("reload: cannot read {config_path}: {e:#}"),
+                }
+            }
+        }
+        let rec = match fleet.next_record() {
+            Some(r) => r,
+            None => {
+                // continuous operation: replay a fresh campaign
+                replay += 1;
+                fleet = SimulatedFleet::new(&specs, samples, seed + replay);
+                continue;
+            }
+        };
+        let seq = seqs.entry(rec.machine.clone()).or_insert(0);
+        let rec = CycleRecord { seq: *seq, ..rec };
+        *seq += 1;
+        match daemon.offer(rec) {
+            None => break, // draining
+            Some(Admission::Accepted) => {}
+            // past the watermark (or evicting): yield so workers catch up
+            Some(_) => std::thread::sleep(std::time::Duration::from_millis(1)),
+        }
+        offered += 1;
+    }
     let dt = t0.elapsed().as_secs_f64();
-    println!("processed {n} cycles in {dt:.2}s ({:.0} cycles/s)", n as f64 / dt);
-    for name in ["imm-cover-1", "imm-cover-2", "imm-plate-1", "imm-plate-2"] {
+    println!(
+        "offered {offered} cycles in {dt:.2}s ({:.0} cycles/s); draining...",
+        offered as f64 / dt
+    );
+    let report = daemon.drain(drain_timeout);
+    if report.drained {
+        println!("drained in {:.2}s", report.seconds);
+    } else {
+        println!(
+            "drain timed out after {:.2}s: {} record(s) queued, {} job(s) pending, {} in flight",
+            report.seconds, report.queue_len, report.pending_jobs, report.in_flight_jobs
+        );
+    }
+    if let Some(path) = &report.snapshot_path {
+        println!("snapshot: {path}");
+    }
+    for (name, _, _) in &specs {
         println!("--- {name}: {}", coordinator.query(name).describe());
     }
     println!("--- fleet: {}", coordinator.query(FLEET_QUERY).describe());
-    println!(
-        "\nmetrics: {:?}\n\n{}",
-        coordinator.metrics,
-        obs::expo::render_text(&coordinator.metrics.registry().snapshot())
+    print!(
+        "\nmetrics:\n{}{}",
+        obs::expo::render_text(&coordinator.metrics.registry().snapshot()),
+        obs::expo::render_text(&dmetrics.registry().snapshot())
     );
+    if !report.drained {
+        anyhow::bail!("drain incomplete (work lost)");
+    }
     Ok(())
 }
 
 fn cmd_serve_replica(m: &Matches) -> Result<()> {
-    use std::sync::atomic::AtomicBool;
     let addr = m.str("addr")?;
     let id = m.str("id")?;
     let service = Service::from_backend(m.str("backend")?)?;
@@ -401,11 +482,12 @@ fn cmd_serve_replica(m: &Matches) -> Result<()> {
         server.local_addr()?,
         service.backend_name()
     );
-    // serve until the process is killed; the stop flag exists for
-    // embedders (tests flip it through ServerHandle)
-    let stop = AtomicBool::new(false);
-    let served = server.serve(&f, &stop)?;
-    println!("replica '{id}' served {served} job(s)");
+    // SIGINT/SIGTERM set the stop flag: the accept loop finishes the
+    // frame in flight and exits instead of dying mid-write
+    let flags = shutdown::install();
+    flags.reset();
+    let served = server.serve(&f, flags.stop)?;
+    println!("replica '{id}' served {served} job(s), exiting cleanly");
     Ok(())
 }
 

@@ -39,7 +39,7 @@ fn coordinator_over_xla_engine_summarizes_fleet() {
     cfg.summary.refresh_every = 100;
     cfg.summary.window = 300;
     cfg.coordinator.queue_capacity = 4096;
-    let mut c = Coordinator::new(cfg, xla_factory(Precision::F32));
+    let c = Coordinator::new(cfg, xla_factory(Precision::F32));
     let mut fleet = SimulatedFleet::new(
         &[
             ("imm-a", Part::Cover, ProcessState::Stable),
@@ -80,7 +80,7 @@ fn xla_and_cpu_coordinators_agree_on_representatives() {
     });
 
     let run = |factory: OracleFactory| {
-        let mut c = Coordinator::new(mk_cfg(), factory);
+        let c = Coordinator::new(mk_cfg(), factory);
         let mut fleet =
             SimulatedFleet::new(&[("m", Part::Cover, ProcessState::StartUp)], 100, 7);
         c.run_stream(&mut fleet);
@@ -117,7 +117,7 @@ ingest_batch = 8
     let factory: OracleFactory = Box::new(|m: ebc::linalg::SharedMatrix, _: &OracleSpec| {
         Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
     });
-    let mut c = Coordinator::new(cfg, factory);
+    let c = Coordinator::new(cfg, factory);
     let mut fleet = SimulatedFleet::new(&[("p", Part::Plate, ProcessState::Stable)], 24, 9);
     c.run_stream(&mut fleet);
     match c.query("p") {
@@ -217,7 +217,7 @@ fn bf16_coordinator_close_to_f32() {
         cfg
     };
     let run = |p: Precision| {
-        let mut c = Coordinator::new(mk_cfg(), xla_factory(p));
+        let c = Coordinator::new(mk_cfg(), xla_factory(p));
         let mut fleet =
             SimulatedFleet::new(&[("m", Part::Cover, ProcessState::Regrind)], 64, 3);
         c.run_stream(&mut fleet);

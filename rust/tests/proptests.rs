@@ -253,7 +253,7 @@ fn prop_coordinator_summary_within_window() {
             let factory = Box::new(|m: SharedMatrix, _spec: &OracleSpec| {
                 Box::new(CpuOracle::new_shared(m)) as Box<dyn Oracle>
             });
-            let mut c = Coordinator::new(cfg, factory);
+            let c = Coordinator::new(cfg, factory);
             for s in 0..*total as u64 {
                 let vals: Vec<f32> = (0..*d).map(|_| rng.normal()).collect();
                 c.offer(CycleRecord { machine: "m".into(), seq: s, values: vals });
