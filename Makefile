@@ -1,6 +1,6 @@
 # Developer entry points. `make verify` is the tier-1 gate CI runs.
 
-.PHONY: verify build test bench bench-kernel bench-shard lint doc artifacts
+.PHONY: verify build test bench bench-kernel bench-shard perf-gate pgo lint doc artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -23,6 +23,18 @@ bench-kernel:
 bench-shard:
 	cargo run --release -- shard-bench --transport loopback --replicas 3 \
 		--samples 64 --k 5 --shards 1,2,4 --out BENCH_shard.json
+
+# Fresh sweep gated against the committed BENCH_kernel.json baseline
+# (>15% regression on any blocked/simd point fails; see bench/perf.md).
+perf-gate:
+	cargo run --release -- kernel-bench --n 4000 --d 32 --c 256 \
+		--threads 1,2,4 --out BENCH_kernel.new.json
+	python3 bench/perf_gate.py --baseline BENCH_kernel.json \
+		--candidate BENCH_kernel.new.json
+
+# Profile-guided build: instrument -> profile on kernel-bench -> rebuild.
+pgo:
+	bench/run_pgo.sh
 
 lint:
 	cargo fmt --check && cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,185 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over ``BENCH_kernel.json`` (stdlib only).
+
+Compares a freshly measured kernel sweep against a committed baseline
+and fails when any comparable point regressed by more than the
+threshold (default 15%). Two modes:
+
+* ``speedup`` (default) — compares ``speedup_vs_scalar_st`` per
+  (op, kernel, precision, threads) point. Each run's scalar-ST baseline
+  is measured on the same host in the same process, so the ratio
+  normalizes away absolute machine speed; this is the mode for
+  heterogeneous CI runners.
+* ``seconds`` — compares ``min_seconds`` directly. Only meaningful when
+  baseline and candidate ran on the same hardware (e.g. a pinned perf
+  box or a local PGO before/after).
+
+Comparability rules:
+
+* scalar rows (speedup == 1.0 by construction) are never gated;
+* ``simd`` rows are skipped with a warning when the two files report
+  different ``workload.simd_level`` values (an avx2 baseline says
+  nothing about a neon runner);
+* points present in only one file are reported but not gated (the
+  sweep grid changed — that is a review question, not a regression).
+
+Exit codes: 0 ok / bootstrap, 1 regression detected, 2 nothing was
+comparable (both files parsed but no point could be gated — treat as a
+configuration error, not a pass).
+
+Bootstrap: a missing baseline file exits 0 with a notice, so the gate
+can be wired into CI before the first genuine baseline is committed.
+``--self-test`` runs the gate against synthetic in-memory documents —
+including an artificially 2x-regressed candidate that MUST fail — and
+needs no files at all.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 0.15
+GATED_KERNELS = ("blocked", "simd")
+
+
+def key(p):
+    return (p["op"], p["kernel"], p["precision"], int(p["threads"]))
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def simd_level(doc):
+    return doc.get("workload", {}).get("simd_level", "unknown")
+
+
+def compare(baseline, candidate, mode, threshold, out=sys.stdout):
+    """Return (regressions, compared, skipped) over the two documents."""
+    base = {key(p): p for p in baseline.get("points", [])}
+    cand = {key(p): p for p in candidate.get("points", [])}
+    levels = (simd_level(baseline), simd_level(candidate))
+    level_mismatch = levels[0] != levels[1]
+
+    regressions, compared, skipped = [], 0, 0
+    for k in sorted(base):
+        if k not in cand:
+            print(f"note: {k} only in baseline (grid changed?)", file=out)
+            continue
+        op, kernel, precision, threads = k
+        if kernel not in GATED_KERNELS:
+            continue
+        if kernel == "simd" and level_mismatch:
+            skipped += 1
+            print(
+                f"skip: {k} — simd_level differs "
+                f"(baseline={levels[0]}, candidate={levels[1]})",
+                file=out)
+            continue
+        b, c = base[k], cand[k]
+        if mode == "speedup":
+            want, got = b["speedup_vs_scalar_st"], c["speedup_vs_scalar_st"]
+            ok = got >= want * (1.0 - threshold)
+            detail = f"speedup {want:.2f}x -> {got:.2f}x"
+        else:
+            want, got = b["min_seconds"], c["min_seconds"]
+            ok = got <= want * (1.0 + threshold)
+            detail = f"min_seconds {want:.3e} -> {got:.3e}"
+        compared += 1
+        if not ok:
+            regressions.append((k, detail))
+            print(f"REGRESSION: {k}: {detail} "
+                  f"(threshold {threshold:.0%})", file=out)
+    for k in sorted(set(cand) - set(base)):
+        print(f"note: {k} only in candidate (not gated)", file=out)
+    return regressions, compared, skipped
+
+
+def synthetic_doc(level, scale):
+    points = []
+    for op in ("gains", "dist_col", "eval"):
+        points.append(dict(op=op, kernel="scalar", precision="f32", threads=1,
+                           mean_seconds=1.0, min_seconds=1.0,
+                           speedup_vs_scalar_st=1.0, max_abs_dev=0.0))
+        for kernel, base in (("blocked", 4.0), ("simd", 6.0)):
+            for t in (1, 2):
+                s = base * t * scale
+                points.append(dict(op=op, kernel=kernel, precision="f32",
+                                   threads=t, mean_seconds=1.0 / s,
+                                   min_seconds=1.0 / s,
+                                   speedup_vs_scalar_st=s, max_abs_dev=0.0))
+    return {"workload": {"n": 1, "d": 1, "c": 1, "seed": 0,
+                         "simd_level": level},
+            "points": points}
+
+
+def self_test(threshold):
+    base = synthetic_doc("avx2", 1.0)
+
+    clean, n, _ = compare(base, synthetic_doc("avx2", 1.0),
+                          "speedup", threshold)
+    assert not clean and n > 0, "clean candidate must pass"
+
+    # 2x slower everywhere: every gated point must be flagged
+    slow = synthetic_doc("avx2", 0.5)
+    bad, n, _ = compare(base, slow, "speedup", threshold)
+    assert len(bad) == n > 0, f"2x regression missed: {len(bad)}/{n}"
+    bad, n, _ = compare(base, slow, "seconds", threshold)
+    assert len(bad) == n > 0, "seconds mode missed the 2x regression"
+
+    # a regression just inside the threshold must NOT be flagged
+    near = synthetic_doc("avx2", 1.0 - threshold + 0.01)
+    ok, _, _ = compare(base, near, "speedup", threshold)
+    assert not ok, "within-threshold noise flagged as regression"
+
+    # simd rows across different ISAs are skipped, blocked rows still gated
+    neon = synthetic_doc("neon", 0.5)
+    bad, n, skipped = compare(base, neon, "speedup", threshold)
+    assert skipped > 0, "simd_level mismatch not skipped"
+    assert all(k[1] == "blocked" for k, _ in bad), "skipped simd still gated"
+    assert n > 0, "blocked rows must stay comparable across ISAs"
+
+    print("self-test: all gate behaviors verified")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_kernel.json",
+                    help="committed baseline document")
+    ap.add_argument("--candidate", default="BENCH_kernel.new.json",
+                    help="freshly measured document")
+    ap.add_argument("--mode", choices=("speedup", "seconds"),
+                    default="speedup")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max tolerated relative regression (default 0.15)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate flags a synthetic 2x regression")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test(args.threshold)
+
+    if not os.path.exists(args.baseline):
+        print(f"bootstrap: no baseline at {args.baseline} — nothing to "
+              f"gate against; commit the candidate as the first baseline")
+        return 0
+    baseline, candidate = load(args.baseline), load(args.candidate)
+    regressions, compared, skipped = compare(
+        baseline, candidate, args.mode, args.threshold)
+    print(f"compared {compared} point(s), skipped {skipped}, "
+          f"{len(regressions)} regression(s) [mode={args.mode}, "
+          f"threshold={args.threshold:.0%}]")
+    if regressions:
+        return 1
+    if compared == 0:
+        print("error: no comparable points — check the sweep grids and "
+              "simd levels", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Repeatable profile-guided-optimization build of the ebc binary,
+# profiled on the kernel-bench sweep (the hot gains/dist_col/eval path).
+#
+# Usage: bench/run_pgo.sh [profile-dir]
+#
+# Stages:
+#   1. build with -Cprofile-generate
+#   2. run the kernel-bench workload to collect .profraw profiles
+#   3. merge with llvm-profdata (must match rustc's LLVM — install via
+#      `rustup component add llvm-tools` if not on PATH)
+#   4. rebuild with -Cprofile-use
+#
+# The PGO binary lands in target/release/ebc-summarizer as usual; compare
+# before/after with `make bench-kernel` + `bench/perf_gate.py
+# --mode seconds` (same machine, so absolute seconds are meaningful).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+PGO_DIR="${1:-/tmp/ebc-pgo}"
+WORKLOAD=(kernel-bench --n 4000 --d 32 --c 256 --threads 1,2,4)
+
+if ! command -v llvm-profdata >/dev/null 2>&1; then
+    # rustup's llvm-tools ships it under the toolchain lib dir
+    TOOLS="$(rustc --print sysroot)/lib/rustlib/$(rustc -vV |
+        sed -n 's/^host: //p')/bin"
+    if [ -x "$TOOLS/llvm-profdata" ]; then
+        PATH="$TOOLS:$PATH"
+    else
+        echo "error: llvm-profdata not found; rustup component add llvm-tools" >&2
+        exit 1
+    fi
+fi
+
+rm -rf "$PGO_DIR" && mkdir -p "$PGO_DIR"
+
+echo "== stage 1: instrumented build"
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" cargo build --release
+
+echo "== stage 2: profiling run (${WORKLOAD[*]})"
+./target/release/ebc-summarizer "${WORKLOAD[@]}"
+
+echo "== stage 3: merge profiles"
+llvm-profdata merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"
+
+echo "== stage 4: optimized rebuild"
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" cargo build --release
+
+echo "PGO binary ready: target/release/ebc-summarizer (profiles in $PGO_DIR)"

@@ -1,0 +1,292 @@
+"""Independent Python mirror of the rust wire encoders
+(``rust/src/shard/wire.rs``) + the frozen hex goldens from
+``rust/tests/wire_golden.rs``.
+
+The rust golden suite pins encode() output byte-for-byte; this mirror
+re-derives every golden from the same struct values using nothing but
+the layout documented in the wire module — stdlib only (struct + zlib),
+no jax/numpy — so the frames can be cross-checked without a Rust
+toolchain. If the two sides ever disagree, one of them mis-implements
+the documented layout and the divergent byte is printed.
+
+Run as a script (``python3 test_wire_goldens.py``) or under pytest.
+``python3 test_wire_goldens.py --mint`` prints re-derived hex for all
+goldens (how new goldens are minted for wire_golden.rs).
+"""
+
+import struct
+import sys
+import zlib
+
+MAGIC = b"EBCW"
+WIRE_VERSION = 2
+WIRE_CONTROL_VERSION = 3
+KIND = {"job": 1, "result": 2, "request": 3,
+        "hello": 4, "heartbeat": 5, "goodbye": 6}
+CONTROL_KINDS = {"hello", "heartbeat", "goodbye"}
+PRECISION = {"f32": 0, "bf16": 1}
+CPU_KERNEL = {"scalar": 0, "blocked": 1, "simd": 2}
+KERNEL_IMPL = {"pallas": 0, "jnp": 1}
+PART = {"bottom": 0, "plate": 1, "screw": 2}
+STATE = {"calibration": 0, "production": 1, "downtimes": 2}
+DATASET = {"inline": 0, "synthetic": 1, "imm": 2}
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f32(v):
+    return struct.pack("<f", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def wstr(s):
+    b = s.encode()
+    return u32(len(b)) + b
+
+
+def bf16_hi(v):
+    """Upper 16 bits of bf16_round(v): round-to-nearest-even demotion."""
+    (bits,) = struct.unpack("<I", struct.pack("<f", v))
+    if (bits & 0x7F800000) == 0x7F800000 and (bits & 0x007FFFFF):
+        return (bits >> 16) & 0xFFFF  # NaN passes through
+    rounded = (bits + 0x7FFF + ((bits >> 16) & 1)) & 0xFFFFFFFF
+    return (rounded >> 16) & 0xFFFF
+
+
+def matrix(payload, rows, cols, data):
+    p = u32(rows) + u32(cols)
+    if payload == "f32":
+        for v in data:
+            p += f32(v)
+    else:
+        for v in data:
+            p += u16(bf16_hi(v))
+    return p
+
+
+def seal(kind, payload):
+    version = WIRE_CONTROL_VERSION if kind in CONTROL_KINDS else WIRE_VERSION
+    frame = MAGIC + u16(version) + bytes([KIND[kind], 0]) + u32(len(payload))
+    frame += payload
+    return frame + u32(zlib.crc32(frame) & 0xFFFFFFFF)
+
+
+def encode_job(shard, k, batch, optimizer, payload, precision, cpu_kernel,
+               kernel, threads, plan, ground_ids, rows, cols, data):
+    p = u32(shard) + u32(k) + u32(batch) + wstr(optimizer)
+    p += bytes([PRECISION[payload], PRECISION[precision],
+                CPU_KERNEL[cpu_kernel], KERNEL_IMPL[kernel]])
+    p += (b"\x01" + u32(threads)) if threads is not None else (b"\x00" + u32(0))
+    if plan is not None:
+        p += b"\x01" + u32(plan["n"]) + u32(plan["d"]) + u32(plan["shards"])
+        p += u32(plan["k"])
+        p += bytes([PRECISION[plan["precision"]], KERNEL_IMPL[plan["kernel"]],
+                    CPU_KERNEL[plan["cpu_kernel"]]])
+        p += u32(plan["cores"]) + u32(plan["shard_workers"])
+        p += u32(plan["oracle_threads"]) + u32(plan["merge_threads"])
+    else:
+        p += b"\x00"
+    p += u32(len(ground_ids))
+    for g in ground_ids:
+        p += u64(g)
+    p += matrix(payload, rows, cols, data)
+    return seal("job", p)
+
+
+def encode_result(shard, size, indices, f_trajectory, f_final, wall_seconds,
+                  oracle_calls, oracle_work):
+    p = u32(shard) + u32(size) + u32(len(indices))
+    for i in indices:
+        p += u64(i)
+    p += u32(len(f_trajectory))
+    for f in f_trajectory:
+        p += f32(f)
+    p += f32(f_final) + f64(wall_seconds) + u64(oracle_calls) + u64(oracle_work)
+    return seal("result", p)
+
+
+def encode_request(k, batch, optimizer, precision, cpu_kernel, threads, seed,
+                   with_baseline, shard, dataset):
+    p = u32(k) + u32(batch) + wstr(optimizer)
+    p += bytes([PRECISION[precision], CPU_KERNEL[cpu_kernel]])
+    p += u32(threads) + u64(seed) + bytes([1 if with_baseline else 0])
+    if shard is not None:
+        p += b"\x01" + u32(shard["partitions"]) + wstr(shard["partitioner"])
+        p += u32(shard["per_shard_k"]) + u32(shard["threads"])
+        p += wstr(shard["transport"]) + u32(shard["replicas"])
+        p += bytes([1 if shard["plan"] else 0]) + u32(shard["cores"])
+    else:
+        p += b"\x00"
+    p += bytes([DATASET[dataset["kind"]]])
+    if dataset["kind"] == "inline":
+        p += bytes([PRECISION[dataset["payload"]]])
+        p += matrix(dataset["payload"], dataset["rows"], dataset["cols"],
+                    dataset["data"])
+    elif dataset["kind"] == "synthetic":
+        p += u32(dataset["n"]) + u32(dataset["d"]) + u64(dataset["seed"])
+    else:
+        p += bytes([PART[dataset["part"]], STATE[dataset["state"]]])
+        p += u32(dataset["samples"]) + u64(dataset["seed"])
+    return seal("request", p)
+
+
+def encode_hello(id_, capacity):
+    return seal("hello", wstr(id_) + u32(capacity))
+
+
+def encode_heartbeat(id_, seq):
+    return seal("heartbeat", wstr(id_) + u64(seq))
+
+
+def encode_goodbye(id_, drain, detail):
+    return seal("goodbye", wstr(id_) + bytes([1 if drain else 0]) + wstr(detail))
+
+
+# --------------------------------------------------------------- goldens
+# Hex below is copied verbatim from rust/tests/wire_golden.rs; the struct
+# values are copied from the same file's constructor functions.
+
+GOLDENS = {
+    "JOB_F32": (
+        "45424357020001005c0000000100000002000000100000000600000067726565"
+        "6479000001010102000000000300000003000000000000000500000000000000"
+        "080000000000000003000000020000000000803f000000c00000003f00005040"
+        "000040bf00008040961f66b1",
+        lambda: encode_job(
+            shard=1, k=2, batch=16, optimizer="greedy", payload="f32",
+            precision="f32", cpu_kernel="blocked", kernel="jnp", threads=2,
+            plan=None, ground_ids=[3, 5, 8], rows=3, cols=2,
+            data=[1.0, -2.0, 0.5, 3.25, -0.75, 4.0]),
+    ),
+    "JOB_BF16_PLANNED": (
+        "45424357020001006c0000000000000001000000080000000b0000006c617a79"
+        "5f67726565647901010000000000000001400000000800000004000000030000"
+        "0001010108000000040000000200000008000000020000000000000000000000"
+        "02000000000000000200000002000000803f00c0203e40400c614240",
+        lambda: encode_job(
+            shard=0, k=1, batch=8, optimizer="lazy_greedy", payload="bf16",
+            precision="bf16", cpu_kernel="scalar", kernel="pallas",
+            threads=None,
+            plan=dict(n=64, d=8, shards=4, k=3, precision="bf16",
+                      kernel="jnp", cpu_kernel="blocked", cores=8,
+                      shard_workers=4, oracle_threads=2, merge_threads=8),
+            ground_ids=[0, 2], rows=2, cols=2, data=[1.0, -2.0, 0.15625, 3.0]),
+    ),
+    # PR 9: a job selecting the simd cpu kernel (code 2) — proves the
+    # grown code set rides the unchanged v2 layout
+    "JOB_SIMD": (
+        None,  # minted by this mirror; frozen on the rust side
+        lambda: encode_job(
+            shard=3, k=2, batch=32, optimizer="greedy", payload="f32",
+            precision="f32", cpu_kernel="simd", kernel="jnp", threads=4,
+            plan=None, ground_ids=[1, 4], rows=2, cols=2,
+            data=[0.5, -1.5, 2.0, -0.25]),
+    ),
+    "RESULT": (
+        "454243570200020050000000020000000a000000030000000700000000000000"
+        "03000000000000000900000000000000030000000000003f0000403f0000803f"
+        "0000803f000000000000d03f2a00000000000000d20400000000000077354eae",
+        lambda: encode_result(
+            shard=2, size=10, indices=[7, 3, 9],
+            f_trajectory=[0.5, 0.75, 1.0], f_final=1.0, wall_seconds=0.25,
+            oracle_calls=42, oracle_work=1234),
+    ),
+    "REQUEST_SYNTHETIC": (
+        "4542435702000300600000000500000000020000060000006772656564790001"
+        "02000000bc0e000000000000010104000000080000006c6f63616c6974790000"
+        "000000000000080000006c6f6f706261636b03000000010800000001e8030000"
+        "200000002a00000000000000a904221e",
+        lambda: encode_request(
+            k=5, batch=512, optimizer="greedy", precision="f32",
+            cpu_kernel="blocked", threads=2, seed=0xEBC, with_baseline=True,
+            shard=dict(partitions=4, partitioner="locality", per_shard_k=0,
+                       threads=0, transport="loopback", replicas=3, plan=True,
+                       cores=8),
+            dataset=dict(kind="synthetic", n=1000, d=32, seed=42)),
+    ),
+    "REQUEST_INLINE_BF16": (
+        "45424357020003004100000002000000400000000f00000073696576655f7374"
+        "7265616d696e6701000000000007000000000000000000000102000000030000"
+        "00803f00c0203e4040003f80be4e1bb1c1",
+        lambda: encode_request(
+            k=2, batch=64, optimizer="sieve_streaming", precision="bf16",
+            cpu_kernel="scalar", threads=0, seed=7, with_baseline=False,
+            shard=None,
+            dataset=dict(kind="inline", payload="bf16", rows=2, cols=3,
+                         data=[1.0, -2.0, 0.15625, 3.0, 0.5, -0.25])),
+    ),
+    "HELLO": (
+        "454243570300040011000000090000007265706c6963612d3704000000bf6849"
+        "fb",
+        lambda: encode_hello("replica-7", 4),
+    ),
+    "HEARTBEAT": (
+        "454243570300050015000000090000007265706c6963612d372a000000000000"
+        "004ee58850",
+        lambda: encode_heartbeat("replica-7", 42),
+    ),
+    "GOODBYE": (
+        "454243570300060024000000090000007265706c6963612d3701120000006d61"
+        "696e74656e616e63652077696e646f77518c5fc3",
+        lambda: encode_goodbye("replica-7", True, "maintenance window"),
+    ),
+}
+
+
+def check_one(name, want_hex, encode):
+    got = encode()
+    crc_body, crc_stored = got[:-4], struct.unpack("<I", got[-4:])[0]
+    assert zlib.crc32(crc_body) & 0xFFFFFFFF == crc_stored, f"{name}: bad CRC"
+    if want_hex is None:
+        return got
+    want = bytes.fromhex(want_hex)
+    if got != want:
+        diff = next(i for i in range(min(len(got), len(want)) + 1)
+                    if i >= len(got) or i >= len(want) or got[i] != want[i])
+        raise AssertionError(
+            f"{name}: mirror diverges from frozen golden at byte {diff}: "
+            f"mirror={got.hex()} golden={want.hex()}")
+    return got
+
+
+def test_goldens_match_rust_frozen_frames():
+    for name, (want_hex, encode) in GOLDENS.items():
+        check_one(name, want_hex, encode)
+
+
+def test_simd_code_sits_at_job_payload_offset_24():
+    frame = GOLDENS["JOB_SIMD"][1]()
+    header_len = 12
+    # 12 fixed + 4-byte strlen + "greedy" (6) + payload + precision bytes
+    assert frame[header_len + 24] == CPU_KERNEL["simd"] == 2
+
+
+def main(argv):
+    mint = "--mint" in argv
+    for name, (want_hex, encode) in GOLDENS.items():
+        frame = check_one(name, want_hex, encode)
+        status = "minted" if want_hex is None else "matches frozen golden"
+        print(f"{name}: {len(frame)} bytes, CRC ok, {status}")
+        if mint or want_hex is None:
+            h = frame.hex()
+            for i in range(0, len(h), 64):
+                print(f'    "{h[i:i + 64]}",')
+    print("all frames verified")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

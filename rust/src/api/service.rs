@@ -422,6 +422,23 @@ mod tests {
     }
 
     #[test]
+    fn simd_kernel_request_matches_blocked_selection() {
+        // the simd backend shares the blocked kernel's numerical
+        // contract bit-for-bit, so the whole greedy trajectory —
+        // exemplars and objective — must coincide
+        let (_, ds) = inline(48, 7, 11);
+        let service = Service::cpu();
+        let simd = service
+            .summarize(&SummarizeRequest::new(ds.clone(), 5).cpu_kernel(CpuKernel::Simd))
+            .unwrap();
+        let blocked = service
+            .summarize(&SummarizeRequest::new(ds, 5).cpu_kernel(CpuKernel::Blocked))
+            .unwrap();
+        assert_eq!(simd.exemplars, blocked.exemplars);
+        assert_eq!(simd.f_final.to_bits(), blocked.f_final.to_bits());
+    }
+
+    #[test]
     fn sharded_response_carries_full_provenance() {
         let (_, ds) = inline(60, 4, 7);
         let service = Service::cpu();

@@ -1,6 +1,7 @@
 //! Kernel-scaling harness: measure the CPU oracle hot path (`gains`,
 //! `dist_col`, `eval`) across kernel backends (scalar baseline vs the
-//! blocked Gram-matrix backend of [`crate::linalg::gemm`]), precisions
+//! blocked Gram-matrix backend of [`crate::linalg::gemm`] vs its
+//! explicit-SIMD variant in [`crate::linalg::simd`]), precisions
 //! (f32 / software-bf16) and thread counts, against one synthetic
 //! workload — plus the planned-vs-unplanned sharded CPU split
 //! ([`shard_split_sweep`]): P concurrent shard workers under the
@@ -98,8 +99,8 @@ fn max_dev(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// Run the sweep. Rows, per op: scalar ST (the baseline), scalar MT
-/// (candidate-parallel, `gains` only — the paper's MT axis), blocked
-/// f32 and blocked bf16 at every thread count.
+/// (candidate-parallel, `gains` only — the paper's MT axis), then
+/// blocked and simd at both precisions and every thread count.
 pub fn kernel_scaling_sweep(cfg: &KernelSweepConfig, settings: &Settings) -> Vec<KernelPoint> {
     let mut rng = Rng::new(cfg.seed);
     let data = Matrix::random_normal(cfg.n, cfg.d, &mut rng);
@@ -173,27 +174,30 @@ pub fn kernel_scaling_sweep(cfg: &KernelSweepConfig, settings: &Settings) -> Vec
         push("gains", "scalar", "f32", t, s, dev, &mut out, &mut base);
     }
 
-    // ---- blocked kernel, both precisions, ground-parallel -----------
-    for &(precision, pname) in &[(Precision::F32, "f32"), (Precision::Bf16, "bf16")] {
-        for &t in &thread_counts {
-            let f = EbcFunction::with_kernel(data.clone(), CpuKernel::Blocked, precision, t);
-            let dev = max_dev(&f.gains(&mindist, &cands), &ref_gains);
-            let s = measure(settings, || {
-                std::hint::black_box(f.gains(&mindist, &cands));
-            });
-            push("gains", "blocked", pname, t, s, dev, &mut out, &mut base);
+    // ---- gemm family (blocked / simd), both precisions, ------------
+    // ---- ground-parallel                                 ------------
+    for &(kernel, kname) in &[(CpuKernel::Blocked, "blocked"), (CpuKernel::Simd, "simd")] {
+        for &(precision, pname) in &[(Precision::F32, "f32"), (Precision::Bf16, "bf16")] {
+            for &t in &thread_counts {
+                let f = EbcFunction::with_kernel(data.clone(), kernel, precision, t);
+                let dev = max_dev(&f.gains(&mindist, &cands), &ref_gains);
+                let s = measure(settings, || {
+                    std::hint::black_box(f.gains(&mindist, &cands));
+                });
+                push("gains", kname, pname, t, s, dev, &mut out, &mut base);
 
-            let dev = max_dev(&f.dist_col(probe), &ref_dcol);
-            let s = measure(settings, || {
-                std::hint::black_box(f.dist_col(probe));
-            });
-            push("dist_col", "blocked", pname, t, s, dev, &mut out, &mut base);
+                let dev = max_dev(&f.dist_col(probe), &ref_dcol);
+                let s = measure(settings, || {
+                    std::hint::black_box(f.dist_col(probe));
+                });
+                push("dist_col", kname, pname, t, s, dev, &mut out, &mut base);
 
-            let dev = max_dev(&[f.eval(&eval_set)], &ref_eval);
-            let s = measure(settings, || {
-                std::hint::black_box(f.eval(&eval_set));
-            });
-            push("eval", "blocked", pname, t, s, dev, &mut out, &mut base);
+                let dev = max_dev(&[f.eval(&eval_set)], &ref_eval);
+                let s = measure(settings, || {
+                    std::hint::black_box(f.eval(&eval_set));
+                });
+                push("eval", kname, pname, t, s, dev, &mut out, &mut base);
+            }
         }
     }
     out
@@ -348,6 +352,12 @@ pub fn bench_json(
         ("d".to_string(), Json::Num(cfg.d as f64)),
         ("c".to_string(), Json::Num(cfg.c as f64)),
         ("seed".to_string(), Json::Num(cfg.seed as f64)),
+        // which vector ISA the `simd` rows actually ran on — the perf
+        // gate refuses to compare simd rows across different levels
+        (
+            "simd_level".to_string(),
+            Json::Str(crate::linalg::simd::detected().name().to_string()),
+        ),
     ]));
     let pts = points
         .iter()
@@ -435,14 +445,15 @@ mod tests {
     fn sweep_covers_every_variant() {
         let cfg = tiny();
         let pts = kernel_scaling_sweep(&cfg, &fast());
-        // 3 scalar-ST + 1 scalar-MT + 2 precisions × 2 threads × 3 ops
-        assert_eq!(pts.len(), 3 + 1 + 2 * 2 * 3);
+        // 3 scalar-ST + 1 scalar-MT
+        //   + 2 kernels × 2 precisions × 2 threads × 3 ops
+        assert_eq!(pts.len(), 3 + 1 + 2 * 2 * 2 * 3);
         for p in &pts {
             assert!(p.mean_seconds >= 0.0 && p.min_seconds >= 0.0, "{p:?}");
             assert!(p.speedup_vs_scalar_st > 0.0, "{p:?}");
         }
-        // blocked f32 stays numerically on top of the scalar reference
-        for p in pts.iter().filter(|p| p.kernel == "blocked" && p.precision == "f32") {
+        // gemm-family f32 stays numerically on top of the scalar reference
+        for p in pts.iter().filter(|p| p.kernel != "scalar" && p.precision == "f32") {
             assert!(p.max_abs_dev <= 1e-3, "{p:?}");
         }
         // bf16 drifts, but boundedly (documented looser bound)
@@ -458,6 +469,12 @@ mod tests {
         let splits = shard_split_sweep(&cfg, &[2], &fast());
         let doc = bench_json(&cfg, &pts, &splits);
         assert_eq!(doc.get("workload").and_then(|w| w.get("n")).and_then(Json::as_usize), Some(60));
+        let lvl = doc
+            .get("workload")
+            .and_then(|w| w.get("simd_level"))
+            .and_then(Json::as_str)
+            .unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&lvl), "{lvl}");
         let arr = doc.get("points").and_then(Json::as_arr).unwrap();
         assert_eq!(arr.len(), pts.len());
         assert!(arr[0].get("op").and_then(Json::as_str).is_some());

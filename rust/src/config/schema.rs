@@ -12,9 +12,11 @@ pub struct EngineSection {
     pub cpu_fallback: bool,
     pub batch: usize,
     /// CPU oracle kernel backend: one of [`crate::linalg::CPU_KERNELS`]
-    /// (`scalar` = paper baseline loops, `blocked` = tiled Gram-matrix).
+    /// (`scalar` = paper baseline loops, `blocked` = tiled Gram-matrix,
+    /// `simd` = the same tiling with runtime-detected AVX2/NEON
+    /// micro-kernels and a bit-identical scalar fallback).
     pub cpu_kernel: CpuKernel,
-    /// Ground-parallel worker threads for the blocked CPU kernel
+    /// Ground-parallel worker threads for the gemm-family CPU kernels
     /// (0 = auto via `default_threads()`).
     pub cpu_threads: usize,
 }
@@ -619,6 +621,13 @@ chaos = 77
     fn rejects_unknown_cpu_kernel() {
         let doc = ConfigDoc::parse("[engine]\ncpu_kernel = \"quantum\"\n").unwrap();
         assert!(ServiceConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn accepts_simd_cpu_kernel() {
+        let doc = ConfigDoc::parse("[engine]\ncpu_kernel = \"simd\"\n").unwrap();
+        let c = ServiceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.engine.cpu_kernel, CpuKernel::Simd);
     }
 
     #[test]

@@ -203,7 +203,7 @@ impl ShardPlan {
         };
         format!(
             "window {}x{} P={} k={}: split {}w x {}t (merge {}t, cores {}), \
-             buckets gains={} update={} eval_multi={}",
+             cpu_kernel {}, buckets gains={} update={} eval_multi={}",
             self.n,
             self.d,
             self.shards,
@@ -212,6 +212,7 @@ impl ShardPlan {
             self.oracle_threads,
             self.merge_threads,
             self.cores,
+            self.cpu_kernel.name(),
             bucket(&self.buckets.gains),
             bucket(&self.buckets.update),
             bucket(&self.buckets.eval_multi),
@@ -339,6 +340,13 @@ mod tests {
         assert_eq!((plan.shard_workers, plan.oracle_threads), (3, 4));
         assert_eq!(plan.merge_threads, 12);
         assert!(plan.describe().contains("3w x 4t"));
+        assert!(plan.describe().contains("cpu_kernel blocked"));
+
+        let mut req = PlanRequest::new(1000, 16, 3, 5);
+        req.cores = 12;
+        req.cpu_kernel = CpuKernel::Simd;
+        let plan = ShardPlan::plan(None, &req);
+        assert!(plan.describe().contains("cpu_kernel simd"));
     }
 
     #[test]

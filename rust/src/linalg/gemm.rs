@@ -20,6 +20,9 @@
 //! The scalar row-by-row kernels in [`super::distance`] remain the
 //! paper's ST/MT baselines; [`CpuKernel`] is the backend seam the rest
 //! of the stack (config, CLI, shard workers, coordinator) selects with.
+//! [`CpuKernel::Simd`] swaps this module's autovectorized micro-kernel
+//! for the explicit `std::arch` ones in [`super::simd`] — same math,
+//! same bits, guaranteed vector execution.
 
 use crate::obs;
 use anyhow::{bail, Result};
@@ -33,26 +36,34 @@ fn gemm_hist() -> &'static obs::Histogram {
 }
 
 /// CPU oracle kernel backend: the paper's scalar ST/MT baseline loops,
-/// or the blocked Gram-matrix formulation of this module.
+/// or the blocked Gram-matrix formulation of this module — with or
+/// without explicit vector micro-kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CpuKernel {
     /// Row-by-row `sq_euclidean` loops ([`super::distance`]) — the
     /// paper's ST baseline (candidate-/set-parallel when threaded).
     Scalar,
     /// Cache-blocked `D = vsq + vsqᵀ − 2XYᵀ` with ground-parallel
-    /// threading — the work-matrix formulation on the CPU.
+    /// threading — the work-matrix formulation on the CPU, relying on
+    /// the autovectorizer for SIMD.
     Blocked,
+    /// The blocked formulation with explicit `std::arch` micro-kernels
+    /// ([`super::simd`]): AVX2/NEON picked at runtime, scalar fallback
+    /// elsewhere. Bit-identical to [`CpuKernel::Blocked`] on every
+    /// input (same accumulation order, mul+add, no FMA).
+    Simd,
 }
 
 /// Kernel names accepted by [`CpuKernel::parse`] (and therefore by
 /// `engine.cpu_kernel` in the config schema and the CLI flags).
-pub const CPU_KERNELS: &[&str] = &["scalar", "blocked"];
+pub const CPU_KERNELS: &[&str] = &["scalar", "blocked", "simd"];
 
 impl CpuKernel {
     pub fn parse(s: &str) -> Result<CpuKernel> {
         Ok(match s {
             "scalar" => CpuKernel::Scalar,
             "blocked" | "gemm" => CpuKernel::Blocked,
+            "simd" => CpuKernel::Simd,
             other => bail!("unknown cpu kernel '{other}' (expected one of {CPU_KERNELS:?})"),
         })
     }
@@ -61,7 +72,17 @@ impl CpuKernel {
         match self {
             CpuKernel::Scalar => "scalar",
             CpuKernel::Blocked => "blocked",
+            CpuKernel::Simd => "simd",
         }
+    }
+
+    /// Whether this backend evaluates through the Gram-matrix
+    /// formulation (`blocked` and `simd`, which share one numerical
+    /// contract) rather than the scalar row-by-row baseline. The seam
+    /// the oracle uses to pick its evaluation strategy without
+    /// enumerating gemm-family variants at every site.
+    pub fn uses_gemm(&self) -> bool {
+        !matches!(self, CpuKernel::Scalar)
     }
 }
 
@@ -78,33 +99,62 @@ pub const KC: usize = 256;
 /// `out` must be zeroed (or hold a partial product) on entry; f32
 /// accumulation throughout, k blocked by [`KC`], [`MR`]×[`NR`] register
 /// tiles with a scalar edge path for ragged borders.
+///
+/// This is the autovectorized blocked path
+/// (`gemm_nt_with(CpuKernel::Blocked, ...)`); gemm-family callers that
+/// carry a kernel choice go through [`gemm_nt_with`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_nt(x: &[f32], y: &[f32], d: usize, m: usize, c: usize, out: &mut [f32]) {
+    gemm_nt_with(CpuKernel::Blocked, x, y, d, m, c, out)
+}
+
+/// [`gemm_nt`] through a chosen backend: [`CpuKernel::Simd`] routes to
+/// the explicit vector micro-kernels in [`super::simd`] (bit-identical
+/// to the blocked loop — see that module's contract), everything else
+/// runs the blocked loop. Both share the shape asserts and the
+/// `ebc_gemm_seconds` histogram.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_with(
+    kernel: CpuKernel,
+    x: &[f32],
+    y: &[f32],
+    d: usize,
+    m: usize,
+    c: usize,
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), m * d, "X shape mismatch");
     assert_eq!(y.len(), c * d, "Y shape mismatch");
     assert_eq!(out.len(), m * c, "out shape mismatch");
-    gemm_hist().time(|| {
-        let mut k0 = 0;
-        while k0 < d {
-            let kend = (k0 + KC).min(d);
-            let mut i0 = 0;
-            while i0 < m {
-                let iend = (i0 + MR).min(m);
-                let mut j0 = 0;
-                while j0 < c {
-                    let jend = (j0 + NR).min(c);
-                    if iend - i0 == MR && jend - j0 == NR {
-                        micro_full(x, y, d, c, i0, j0, k0, kend, out);
-                    } else {
-                        micro_edge(x, y, d, c, i0, iend, j0, jend, k0, kend, out);
-                    }
-                    j0 = jend;
-                }
-                i0 = iend;
-            }
-            k0 = kend;
-        }
+    gemm_hist().time(|| match kernel {
+        CpuKernel::Simd => super::simd::gemm_nt_dispatch(x, y, d, m, c, out),
+        _ => gemm_nt_blocked(x, y, d, m, c, out),
     })
+}
+
+/// The blocked loop body (no asserts, no histogram): also the scalar
+/// fallback target for [`super::simd`]'s runtime dispatch.
+pub(crate) fn gemm_nt_blocked(x: &[f32], y: &[f32], d: usize, m: usize, c: usize, out: &mut [f32]) {
+    let mut k0 = 0;
+    while k0 < d {
+        let kend = (k0 + KC).min(d);
+        let mut i0 = 0;
+        while i0 < m {
+            let iend = (i0 + MR).min(m);
+            let mut j0 = 0;
+            while j0 < c {
+                let jend = (j0 + NR).min(c);
+                if iend - i0 == MR && jend - j0 == NR {
+                    micro_full(x, y, d, c, i0, j0, k0, kend, out);
+                } else {
+                    micro_edge(x, y, d, c, i0, iend, j0, jend, k0, kend, out);
+                }
+                j0 = jend;
+            }
+            i0 = iend;
+        }
+        k0 = kend;
+    }
 }
 
 /// Full MR×NR register tile: rank-1 updates over the k panel; the fixed
@@ -143,10 +193,12 @@ fn micro_full(
     }
 }
 
-/// Ragged border tile: plain dot products over the k panel.
+/// Ragged border tile: plain dot products over the k panel. Shared
+/// with [`super::simd`], whose vector kernels take the same edge path
+/// (part of the bit-identity contract).
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn micro_edge(
+pub(crate) fn micro_edge(
     x: &[f32],
     y: &[f32],
     d: usize,
@@ -185,10 +237,27 @@ pub fn sq_dist_block(
     c: usize,
     out: &mut [f32],
 ) {
+    sq_dist_block_with(CpuKernel::Blocked, x, vsq_x, y, vsq_y, d, m, c, out)
+}
+
+/// [`sq_dist_block`] through a chosen gemm-family backend (the
+/// expansion on top of [`gemm_nt_with`]).
+#[allow(clippy::too_many_arguments)]
+pub fn sq_dist_block_with(
+    kernel: CpuKernel,
+    x: &[f32],
+    vsq_x: &[f32],
+    y: &[f32],
+    vsq_y: &[f32],
+    d: usize,
+    m: usize,
+    c: usize,
+    out: &mut [f32],
+) {
     assert_eq!(vsq_x.len(), m, "vsq_x length mismatch");
     assert_eq!(vsq_y.len(), c, "vsq_y length mismatch");
     out.fill(0.0);
-    gemm_nt(x, y, d, m, c, out);
+    gemm_nt_with(kernel, x, y, d, m, c, out);
     for i in 0..m {
         let vx = vsq_x[i];
         let row = &mut out[i * c..(i + 1) * c];
@@ -217,6 +286,16 @@ pub fn bf16_round(x: f32) -> f32 {
 /// Demote every element to its nearest bf16-representable value.
 pub fn demote_bf16(data: &[f32]) -> Vec<f32> {
     data.iter().map(|&v| bf16_round(v)).collect()
+}
+
+/// [`demote_bf16`] through a chosen backend: [`CpuKernel::Simd`] runs
+/// the vectorized demote in [`super::simd`] (bit-identical, NaNs
+/// included), everything else the scalar map.
+pub fn demote_bf16_with(kernel: CpuKernel, data: &[f32]) -> Vec<f32> {
+    match kernel {
+        CpuKernel::Simd => super::simd::demote_bf16_dispatch(data),
+        _ => demote_bf16(data),
+    }
 }
 
 /// Ground-row tile height for an (h×c) distance block: sized so the
@@ -365,6 +444,26 @@ mod tests {
             assert_eq!(CpuKernel::parse(name).unwrap().name(), *name);
         }
         assert_eq!(CpuKernel::parse("gemm").unwrap(), CpuKernel::Blocked);
+        assert_eq!(CpuKernel::parse("simd").unwrap(), CpuKernel::Simd);
         assert!(CpuKernel::parse("psychic").is_err());
+    }
+
+    #[test]
+    fn gemm_family_membership() {
+        assert!(!CpuKernel::Scalar.uses_gemm());
+        assert!(CpuKernel::Blocked.uses_gemm());
+        assert!(CpuKernel::Simd.uses_gemm());
+    }
+
+    #[test]
+    fn demote_with_matches_scalar_for_every_kernel() {
+        let data = [1.0f32, 3.14159, -2.71828, f32::NAN, f32::INFINITY, -0.0];
+        let want = demote_bf16(&data);
+        for k in [CpuKernel::Scalar, CpuKernel::Blocked, CpuKernel::Simd] {
+            let got = demote_bf16_with(k, &data);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "kernel {:?}", k);
+            }
+        }
     }
 }

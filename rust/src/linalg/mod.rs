@@ -10,11 +10,15 @@
 //! * [`gemm`] — the cache-blocked Gram-matrix formulation
 //!   `D = vsq + vsqᵀ − 2XYᵀ` with ground-parallel threading and a
 //!   software bf16 precision axis: the CPU mirror of the work-matrix
-//!   kernels the paper runs on the accelerator.
+//!   kernels the paper runs on the accelerator. The `simd` backend
+//!   ([`simd`]) is the same formulation with explicit AVX2/NEON
+//!   micro-kernels, runtime-detected with a bit-identical scalar
+//!   fallback.
 
 pub mod distance;
 pub mod gemm;
 pub mod matrix;
+pub mod simd;
 
 pub use distance::{sq_euclidean, sq_euclidean_accum, sq_norms};
 pub use gemm::{CpuKernel, CPU_KERNELS};

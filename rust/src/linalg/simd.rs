@@ -1,0 +1,503 @@
+//! Explicit-SIMD micro-kernels behind `CpuKernel::Simd` — the
+//! guaranteed-vector variant of the blocked Gram-matrix path.
+//!
+//! [`crate::linalg::gemm`] relies on the autovectorizer turning its
+//! fixed [`NR`]-wide inner loop into packed SIMD. That usually works,
+//! but it is a compiler heuristic, not a contract. This module makes
+//! the vector shape explicit with `std::arch` intrinsics: an AVX2
+//! micro-kernel on x86-64 (one 8-lane `__m256` accumulator per X row,
+//! broadcast-multiply-add over a k-major packed Y panel) and a NEON
+//! mirror on aarch64 (two `float32x4_t` halves per row), picked by
+//! **runtime** feature detection with a scalar fallback, plus a
+//! vectorized bf16 demote for the reduced-precision input path.
+//!
+//! ## Bit-identity contract
+//!
+//! The SIMD kernels use separate multiply **then** add — never FMA —
+//! so every output element accumulates its k-panel partial sums in the
+//! same order, with the same per-step f32 rounding, as the blocked
+//! scalar kernel (Rust forbids implicit float contraction, so the
+//! autovectorized path is mul+add too). `CpuKernel::Simd` is therefore
+//! **bit-identical** to `CpuKernel::Blocked` on every input, which is
+//! what makes the fallback safe to take silently and lets the proptest
+//! suite assert exact (to-the-bit) selection identity instead of a
+//! tolerance band. The win is not different math — it is the guarantee
+//! of vector execution plus the k-major Y panel packing, which turns
+//! the blocked kernel's strided per-k column gathers into contiguous
+//! 8-lane loads.
+//!
+//! The forced-fallback hook ([`force_scalar`]) exists so tests can
+//! prove the degradation path: with detection overridden, `Simd`
+//! routes to the blocked scalar loop and must produce the same bits.
+
+use super::gemm::{bf16_round, gemm_nt_blocked, micro_edge, KC, MR, NR};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// What the runtime dispatcher found at first use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// No usable vector extension (or detection overridden): the
+    /// `simd` kernel delegates to the blocked scalar loop.
+    Scalar,
+    /// 8-lane AVX2 micro-kernels (x86-64 / x86).
+    Avx2,
+    /// 2×4-lane NEON micro-kernels (aarch64).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase label (bench JSON, CLI output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Override runtime detection and force the `simd` kernel down its
+/// scalar fallback (the degradation path a non-AVX2/NEON host takes).
+/// Returns the previous setting so tests can restore it. Safe at any
+/// time: the fallback is bit-identical, so in-flight work is unaffected.
+pub fn force_scalar(on: bool) -> bool {
+    FORCE_SCALAR.swap(on, Ordering::SeqCst)
+}
+
+/// The vector extension this host actually has (cached at first call,
+/// ignores [`force_scalar`]).
+pub fn detected() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return SimdLevel::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return SimdLevel::Neon;
+            }
+        }
+        SimdLevel::Scalar
+    })
+}
+
+/// The level the dispatcher will actually use right now: [`detected`]
+/// unless [`force_scalar`] is in effect.
+pub fn level() -> SimdLevel {
+    if FORCE_SCALAR.load(Ordering::SeqCst) {
+        SimdLevel::Scalar
+    } else {
+        detected()
+    }
+}
+
+/// `out += X·Yᵀ` through the best available vector micro-kernel —
+/// the `CpuKernel::Simd` body behind [`crate::linalg::gemm::gemm_nt_with`]
+/// (which owns the shape asserts and the latency histogram).
+pub(crate) fn gemm_nt_dispatch(x: &[f32], y: &[f32], d: usize, m: usize, c: usize, out: &mut [f32]) {
+    match level() {
+        SimdLevel::Scalar => gemm_nt_blocked(x, y, d, m, c, out),
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        // SAFETY: level() == Avx2 only after is_x86_feature_detected!("avx2").
+        SimdLevel::Avx2 => unsafe { x86::gemm_nt_avx2(x, y, d, m, c, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: level() == Neon only after is_aarch64_feature_detected!("neon").
+        SimdLevel::Neon => unsafe { arm::gemm_nt_neon(x, y, d, m, c, out) },
+        // levels whose arch-specific arm is compiled out (Neon on x86,
+        // Avx2 on aarch64) can never be produced by level() here, but
+        // the variants still exist — fall back to the blocked loop
+        _ => gemm_nt_blocked(x, y, d, m, c, out),
+    }
+}
+
+/// Vectorized [`bf16_round`] over a whole slice — bit-identical to the
+/// scalar demote on every input, NaNs (sign and payload) included.
+pub(crate) fn demote_bf16_dispatch(data: &[f32]) -> Vec<f32> {
+    match level() {
+        SimdLevel::Scalar => data.iter().map(|&v| bf16_round(v)).collect(),
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        // SAFETY: level() == Avx2 only after is_x86_feature_detected!("avx2").
+        SimdLevel::Avx2 => unsafe { x86::demote_bf16_avx2(data) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: level() == Neon only after is_aarch64_feature_detected!("neon").
+        SimdLevel::Neon => unsafe { arm::demote_bf16_neon(data) },
+        _ => data.iter().map(|&v| bf16_round(v)).collect(),
+    }
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+mod x86 {
+    use super::*;
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// AVX2 `out += X·Yᵀ`: same k0 → tile → element accumulation order
+    /// as the blocked scalar kernel, so results are bit-identical.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_nt_avx2(
+        x: &[f32],
+        y: &[f32],
+        d: usize,
+        m: usize,
+        c: usize,
+        out: &mut [f32],
+    ) {
+        // k-major packed panel for NR y-rows: yp[kk*NR + jj] holds
+        // y[(j0+jj)*d + k0+kk], so the micro-kernel loads one
+        // contiguous 8-lane vector per k step instead of gathering
+        // NR strided columns. KC·NR f32 = 8 KB, L1-resident.
+        let mut yp = [0f32; KC * NR];
+        let mut k0 = 0;
+        while k0 < d {
+            let kend = (k0 + KC).min(d);
+            let mut j0 = 0;
+            while j0 < c {
+                let jend = (j0 + NR).min(c);
+                if jend - j0 == NR {
+                    for jj in 0..NR {
+                        let row = &y[(j0 + jj) * d + k0..(j0 + jj) * d + kend];
+                        for (kk, &v) in row.iter().enumerate() {
+                            yp[kk * NR + jj] = v;
+                        }
+                    }
+                    let mut i0 = 0;
+                    while i0 + MR <= m {
+                        micro_avx2(x, &yp, d, c, i0, j0, k0, kend - k0, out);
+                        i0 += MR;
+                    }
+                    if i0 < m {
+                        micro_edge(x, y, d, c, i0, m, j0, jend, k0, kend, out);
+                    }
+                } else {
+                    micro_edge(x, y, d, c, 0, m, j0, jend, k0, kend, out);
+                }
+                j0 = jend;
+            }
+            k0 = kend;
+        }
+    }
+
+    /// Full MR×NR tile: one `__m256` accumulator per X row, broadcast ·
+    /// panel-load, separate mul + add (never FMA — see the module's
+    /// bit-identity contract).
+    ///
+    /// # Safety
+    /// AVX2 must be available; `x` must cover rows `i0..i0+MR` at
+    /// stride `d` from column `k0` for `kc` columns, `out` rows
+    /// `i0..i0+MR` at stride `c` from column `j0` for [`NR`] columns.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn micro_avx2(
+        x: &[f32],
+        yp: &[f32; KC * NR],
+        d: usize,
+        c: usize,
+        i0: usize,
+        j0: usize,
+        k0: usize,
+        kc: usize,
+        out: &mut [f32],
+    ) {
+        let mut acc = [_mm256_setzero_ps(); MR];
+        for kk in 0..kc {
+            let b = _mm256_loadu_ps(yp.as_ptr().add(kk * NR));
+            for (ii, a) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*x.get_unchecked((i0 + ii) * d + k0 + kk));
+                *a = _mm256_add_ps(*a, _mm256_mul_ps(av, b));
+            }
+        }
+        for (ii, &v) in acc.iter().enumerate() {
+            let p = out.as_mut_ptr().add((i0 + ii) * c + j0);
+            _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), v));
+        }
+    }
+
+    /// 8-lane [`bf16_round`]: the same integer round-to-nearest-even
+    /// (`bits + 0x7FFF + lsb`, wrapping) on all lanes, with a compare
+    /// blend to pass NaNs through untouched exactly like the scalar.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn demote_bf16_avx2(data: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; data.len()];
+        let chunks = data.len() / 8;
+        let bias = _mm256_set1_epi32(0x7FFF);
+        let one = _mm256_set1_epi32(1);
+        let mask = _mm256_set1_epi32(0xFFFF_0000u32 as i32);
+        for i in 0..chunks {
+            let v = _mm256_loadu_ps(data.as_ptr().add(i * 8));
+            let bits = _mm256_castps_si256(v);
+            let lsb = _mm256_and_si256(_mm256_srli_epi32(bits, 16), one);
+            let rounded = _mm256_add_epi32(bits, _mm256_add_epi32(bias, lsb));
+            let masked = _mm256_castsi256_ps(_mm256_and_si256(rounded, mask));
+            let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(v, v);
+            let r = _mm256_blendv_ps(masked, v, nan);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i * 8), r);
+        }
+        for i in chunks * 8..data.len() {
+            out[i] = bf16_round(data[i]);
+        }
+        out
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::*;
+    use std::arch::aarch64::*;
+
+    /// NEON `out += X·Yᵀ` — the AVX2 kernel's structure with each
+    /// 8-lane vector split into two `float32x4_t` halves.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_nt_neon(
+        x: &[f32],
+        y: &[f32],
+        d: usize,
+        m: usize,
+        c: usize,
+        out: &mut [f32],
+    ) {
+        let mut yp = [0f32; KC * NR];
+        let mut k0 = 0;
+        while k0 < d {
+            let kend = (k0 + KC).min(d);
+            let mut j0 = 0;
+            while j0 < c {
+                let jend = (j0 + NR).min(c);
+                if jend - j0 == NR {
+                    for jj in 0..NR {
+                        let row = &y[(j0 + jj) * d + k0..(j0 + jj) * d + kend];
+                        for (kk, &v) in row.iter().enumerate() {
+                            yp[kk * NR + jj] = v;
+                        }
+                    }
+                    let mut i0 = 0;
+                    while i0 + MR <= m {
+                        micro_neon(x, &yp, d, c, i0, j0, k0, kend - k0, out);
+                        i0 += MR;
+                    }
+                    if i0 < m {
+                        micro_edge(x, y, d, c, i0, m, j0, jend, k0, kend, out);
+                    }
+                } else {
+                    micro_edge(x, y, d, c, 0, m, j0, jend, k0, kend, out);
+                }
+                j0 = jend;
+            }
+            k0 = kend;
+        }
+    }
+
+    /// Full MR×NR tile on two 4-lane halves per row; `vmulq` + `vaddq`
+    /// (never `vmlaq`/`vfmaq`, which contract — see the bit-identity
+    /// contract).
+    ///
+    /// # Safety
+    /// NEON must be available; slice bounds as in the AVX2 micro-kernel.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn micro_neon(
+        x: &[f32],
+        yp: &[f32; KC * NR],
+        d: usize,
+        c: usize,
+        i0: usize,
+        j0: usize,
+        k0: usize,
+        kc: usize,
+        out: &mut [f32],
+    ) {
+        let zero = vdupq_n_f32(0.0);
+        let mut lo = [zero; MR];
+        let mut hi = [zero; MR];
+        for kk in 0..kc {
+            let b0 = vld1q_f32(yp.as_ptr().add(kk * NR));
+            let b1 = vld1q_f32(yp.as_ptr().add(kk * NR + 4));
+            for ii in 0..MR {
+                let av = vdupq_n_f32(*x.get_unchecked((i0 + ii) * d + k0 + kk));
+                lo[ii] = vaddq_f32(lo[ii], vmulq_f32(av, b0));
+                hi[ii] = vaddq_f32(hi[ii], vmulq_f32(av, b1));
+            }
+        }
+        for ii in 0..MR {
+            let p = out.as_mut_ptr().add((i0 + ii) * c + j0);
+            vst1q_f32(p, vaddq_f32(vld1q_f32(p), lo[ii]));
+            vst1q_f32(p.add(4), vaddq_f32(vld1q_f32(p.add(4)), hi[ii]));
+        }
+    }
+
+    /// 4-lane [`bf16_round`] with a self-equality select for NaN
+    /// passthrough.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn demote_bf16_neon(data: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; data.len()];
+        let chunks = data.len() / 4;
+        let bias = vdupq_n_u32(0x7FFF);
+        let one = vdupq_n_u32(1);
+        let mask = vdupq_n_u32(0xFFFF_0000);
+        for i in 0..chunks {
+            let v = vld1q_f32(data.as_ptr().add(i * 4));
+            let bits = vreinterpretq_u32_f32(v);
+            let lsb = vandq_u32(vshrq_n_u32(bits, 16), one);
+            let rounded = vaddq_u32(bits, vaddq_u32(bias, lsb));
+            let masked = vandq_u32(rounded, mask);
+            // vceqq is false exactly on NaN lanes: select the original
+            // bits there, the rounded bits everywhere else
+            let ordered = vceqq_f32(v, v);
+            let r = vbslq_u32(ordered, masked, bits);
+            vst1q_f32(out.as_mut_ptr().add(i * 4), vreinterpretq_f32_u32(r));
+        }
+        for i in chunks * 4..data.len() {
+            out[i] = bf16_round(data[i]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{demote_bf16, gemm_nt, gemm_nt_with, CpuKernel};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn detected_level_is_stable_and_named() {
+        let l = detected();
+        assert_eq!(detected(), l);
+        assert!(["scalar", "avx2", "neon"].contains(&l.name()));
+    }
+
+    #[test]
+    fn simd_gemm_bit_identical_to_blocked_awkward_shapes() {
+        let mut rng = Rng::new(11);
+        // straddle MR/NR/KC borders, incl. single row/col and empty
+        for &(m, c, d) in &[
+            (0usize, 5usize, 3usize),
+            (5, 0, 3),
+            (1, 1, 1),
+            (1, 9, 7),
+            (7, 9, 5),
+            (8, 8, 8),
+            (9, 17, 31),
+            (16, 16, 257),
+            (13, 5, 300),
+            (24, 33, 260),
+        ] {
+            let x: Vec<f32> = rng.normal_vec(m * d);
+            let y: Vec<f32> = rng.normal_vec(c * d);
+            let mut blocked = vec![0f32; m * c];
+            gemm_nt(&x, &y, d, m, c, &mut blocked);
+            let mut simd = vec![0f32; m * c];
+            gemm_nt_with(CpuKernel::Simd, &x, &y, d, m, c, &mut simd);
+            for (i, (a, b)) in simd.iter().zip(&blocked).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "m={m} c={c} d={d} elem {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_gemm_accumulates_into_out() {
+        let x = [1.0f32, 2.0];
+        let y = [3.0f32, 4.0];
+        let mut out = [10.0f32];
+        gemm_nt_with(CpuKernel::Simd, &x, &y, 2, 1, 1, &mut out);
+        assert_eq!(out[0], 21.0);
+    }
+
+    // tests that flip the process-global FORCE_SCALAR serialize here;
+    // everything else is flag-agnostic (both paths are bit-identical)
+    static FORCE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn forced_fallback_is_bit_identical() {
+        let _g = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::new(12);
+        let (m, c, d) = (19, 23, 37);
+        let x: Vec<f32> = rng.normal_vec(m * d);
+        let y: Vec<f32> = rng.normal_vec(c * d);
+        let mut native = vec![0f32; m * c];
+        gemm_nt_with(CpuKernel::Simd, &x, &y, d, m, c, &mut native);
+        let prev = force_scalar(true);
+        assert_eq!(level(), SimdLevel::Scalar);
+        let mut forced = vec![0f32; m * c];
+        gemm_nt_with(CpuKernel::Simd, &x, &y, d, m, c, &mut forced);
+        let demoted = demote_bf16_dispatch(&x);
+        force_scalar(prev);
+        for (a, b) in native.iter().zip(&forced) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in demoted.iter().zip(&demote_bf16(&x)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn vector_demote_matches_scalar_bitwise() {
+        let mut rng = Rng::new(13);
+        // oddball lengths force the scalar tail; specials cover the
+        // NaN blend, infinities, signed zero, subnormals and the
+        // round-up-to-inf edge of the bias add
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 100, 1001] {
+            let mut data: Vec<f32> = rng.normal_vec(n).iter().map(|v| v * 1e3).collect();
+            for (i, s) in [
+                f32::NAN,
+                -f32::NAN,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                0.0,
+                -0.0,
+                f32::MIN_POSITIVE,
+                f32::MAX,
+                f32::MIN,
+                1.0e-40,
+            ]
+            .iter()
+            .enumerate()
+            {
+                if i < data.len() {
+                    data[i] = *s;
+                }
+            }
+            let fast = demote_bf16_dispatch(&data);
+            for (i, (a, &v)) in fast.iter().zip(&data).enumerate() {
+                let want = bf16_round(v);
+                assert_eq!(
+                    a.to_bits(),
+                    want.to_bits(),
+                    "n={n} elem {i}: {a} vs {want} (input {v})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_roundtrips() {
+        let _g = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = force_scalar(true);
+        assert!(force_scalar(prev));
+        assert_eq!(FORCE_SCALAR.load(Ordering::SeqCst), prev);
+    }
+}

@@ -12,7 +12,7 @@
 //! * `serve`        — run the production daemon over a simulated fleet
 //! * `serve-replica` — run one TCP worker replica (the `tcp` transport's far end)
 //! * `shard-bench`  — sharded two-stage scaling sweep (shards × wall-clock)
-//! * `kernel-bench` — CPU kernel backend sweep (scalar vs blocked × threads)
+//! * `kernel-bench` — CPU kernel backend sweep (scalar vs blocked vs simd × threads)
 //! * `devices`      — analytical device-model predictions (Table 1 shape)
 //! * `obs-dump`     — run a traced synthetic request, dump metrics + span tree
 
@@ -61,7 +61,7 @@ fn app() -> AppSpec {
                     opt("seed", "rng seed", "42"),
                     opt("backend", "cpu | xla", "xla"),
                     opt("precision", "f32 | bf16", "f32"),
-                    opt("kernel", "cpu kernel backend: scalar | blocked", "blocked"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked | simd", "blocked"),
                     opt("oracle-threads", "cpu oracle worker threads (0 = auto)", "0"),
                     opt("algorithm", "any optim registry name (greedy, lazy_greedy, ...)", "greedy"),
                     flag("trace", "record this request's span tree and print it"),
@@ -75,7 +75,7 @@ fn app() -> AppSpec {
                     opt("samples", "samples per cycle (paper: 3524)", "3524"),
                     opt("seed", "rng seed", "7"),
                     opt("backend", "cpu | xla", "xla"),
-                    opt("kernel", "cpu kernel backend: scalar | blocked", "scalar"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked | simd", "scalar"),
                     opt("oracle-threads", "cpu oracle worker threads (0 = auto)", "1"),
                     flag("table2", "print Table 2"),
                     flag("fig4", "export Fig. 4 regrind curves (plate)"),
@@ -104,7 +104,7 @@ fn app() -> AppSpec {
                     opt("workers", "job execution worker threads (>= 1)", "1"),
                     opt("backend", "cpu | xla", "cpu"),
                     opt("precision", "f32 | bf16", "f32"),
-                    opt("kernel", "cpu kernel backend: scalar | blocked", "blocked"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked | simd", "blocked"),
                     opt("max-frame-mb", "largest accepted frame (MiB)", "64"),
                     opt("io-timeout-ms", "per-socket-op read/write deadline", "5000"),
                 ],
@@ -121,7 +121,7 @@ fn app() -> AppSpec {
                     opt("algorithms", "comma-separated optimizer names", "greedy"),
                     opt("threads", "shard-stage worker threads (0 = auto)", "0"),
                     opt("backend", "cpu | xla", "cpu"),
-                    opt("kernel", "cpu kernel backend: scalar | blocked", "scalar"),
+                    opt("kernel", "cpu kernel backend: scalar | blocked | simd", "scalar"),
                     opt(
                         "oracle-threads",
                         "per-shard oracle threads (0 = auto; 1 = shard workers own it)",
@@ -142,7 +142,7 @@ fn app() -> AppSpec {
             },
             CommandSpec {
                 name: "kernel-bench",
-                help: "CPU kernel backend sweep: scalar vs blocked Gram-matrix x threads",
+                help: "CPU kernel backend sweep: scalar vs blocked vs simd x threads",
                 flags: vec![
                     opt("n", "ground-set size", "20000"),
                     opt("d", "dimensionality", "32"),
@@ -625,8 +625,13 @@ fn cmd_kernel_bench(m: &Matches) -> Result<()> {
     let cfg =
         KernelSweepConfig::from_request(&base, parse_usize_list(m.str("threads")?, "threads")?)?;
     println!(
-        "kernel sweep: N={} d={} C={} threads={:?} (scalar baseline vs blocked Gram-matrix)",
-        cfg.n, cfg.d, cfg.c, cfg.thread_counts
+        "kernel sweep: N={} d={} C={} threads={:?} (scalar baseline vs blocked/simd \
+         Gram-matrix; simd level: {})",
+        cfg.n,
+        cfg.d,
+        cfg.c,
+        cfg.thread_counts,
+        ebc::linalg::simd::detected().name()
     );
     let points = kernel_scaling_sweep(&cfg, &ebc::bench::Settings::default());
     let rep = ebc::bench::kernel_scaling::kernel_report(
@@ -648,16 +653,20 @@ fn cmd_kernel_bench(m: &Matches) -> Result<()> {
     ebc::bench::kernel_scaling::save_bench_json(&out, &cfg, &points, &splits)?;
     println!("\nwrote {}", out.display());
 
-    // the headline number: best blocked-f32 gains speedup over scalar ST
-    if let Some(best) = points
-        .iter()
-        .filter(|p| p.op == "gains" && p.kernel == "blocked" && p.precision == "f32")
-        .max_by(|a, b| a.speedup_vs_scalar_st.total_cmp(&b.speedup_vs_scalar_st))
-    {
-        println!(
-            "blocked f32 gains: {:.2}x vs scalar ST at {} thread(s)",
-            best.speedup_vs_scalar_st, best.threads
-        );
+    // the headline numbers: best f32 gains speedup over scalar ST for
+    // each gemm-family backend (simd vs blocked is the explicit-vector
+    // margin on this host)
+    for kernel in ["blocked", "simd"] {
+        if let Some(best) = points
+            .iter()
+            .filter(|p| p.op == "gains" && p.kernel == kernel && p.precision == "f32")
+            .max_by(|a, b| a.speedup_vs_scalar_st.total_cmp(&b.speedup_vs_scalar_st))
+        {
+            println!(
+                "{kernel} f32 gains: {:.2}x vs scalar ST at {} thread(s)",
+                best.speedup_vs_scalar_st, best.threads
+            );
+        }
     }
     Ok(())
 }

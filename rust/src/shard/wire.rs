@@ -76,6 +76,10 @@
 //!   goodbye (6):   str id · u8 drain · str detail
 //! ```
 //!
+//! `cpu_kernel` bytes carry 0 = scalar, 1 = blocked, 2 = simd (the
+//! code set grew with the simd backend; layouts are unchanged and
+//! pre-simd decoders reject code 2 as `Malformed`, never misread it).
+//!
 //! Strings are `u32 len + UTF-8 bytes`. A `bf16` payload ships each
 //! value as the upper 16 bits of its [`bf16_round`]-ed f32 (2 bytes per
 //! scalar — the edge-link option); decoding widens back losslessly, so
@@ -508,9 +512,13 @@ fn precision_code(p: Precision) -> u8 {
     }
 }
 fn cpu_kernel_code(k: CpuKernel) -> u8 {
+    // growing the code set (2 = simd, PR 9) leaves every v2 layout
+    // untouched — the field was always a free-form u8; old decoders
+    // reject unknown codes as Malformed, exactly as designed
     match k {
         CpuKernel::Scalar => 0,
         CpuKernel::Blocked => 1,
+        CpuKernel::Simd => 2,
     }
 }
 fn kernel_impl_code(k: KernelImpl) -> u8 {
@@ -776,6 +784,7 @@ impl<'a> Reader<'a> {
         match self.u8()? {
             0 => Ok(CpuKernel::Scalar),
             1 => Ok(CpuKernel::Blocked),
+            2 => Ok(CpuKernel::Simd),
             other => Err(WireError::Malformed {
                 field,
                 detail: format!("unknown cpu kernel code {other}"),
@@ -1247,6 +1256,36 @@ mod tests {
         assert_eq!(back, j_demoted);
         // re-encoding the decoded message is byte-stable
         assert_eq!(encode_job(&back), frame);
+    }
+
+    #[test]
+    fn simd_cpu_kernel_code_roundtrips_everywhere_it_appears() {
+        // job knob + plan section + request knob all carry code 2
+        let mut j = job(Precision::F32, true);
+        j.cpu_kernel = CpuKernel::Simd;
+        if let Some(plan) = &mut j.plan {
+            plan.cpu_kernel = CpuKernel::Simd;
+        }
+        let back = decode_job(&encode_job(&j)).unwrap();
+        assert_eq!(back.cpu_kernel, CpuKernel::Simd);
+        assert_eq!(back.plan.unwrap().cpu_kernel, CpuKernel::Simd);
+
+        let mut req = request(WireDataset::Synthetic { n: 10, d: 2, seed: 1 });
+        req.cpu_kernel = CpuKernel::Simd;
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+
+        // a pre-simd decoder's behaviour: code 3 is still Malformed
+        let mut frame = encode_job(&j);
+        // cpu_kernel byte sits after shard/k/batch (12) + str "greedy"
+        // (10) + payload/precision (2) at payload offset 24
+        let off = HEADER_LEN + 24;
+        assert_eq!(frame[off], 2);
+        frame[off] = 3;
+        reseal(&mut frame);
+        assert!(matches!(
+            decode_job(&frame),
+            Err(WireError::Malformed { field: "cpu_kernel", .. })
+        ));
     }
 
     #[test]

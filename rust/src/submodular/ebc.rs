@@ -4,12 +4,14 @@
 //! mindist-incremental [`CpuOracle`] the optimizers use.
 //!
 //! Every hot entry point (`gains`, `dist_col`, `eval*`) dispatches on a
-//! [`CpuKernel`]: `Scalar` is the paper-faithful baseline; `Blocked`
-//! routes through the tiled Gram-matrix backend in
-//! [`crate::linalg::gemm`], threading **ground-parallel** (over ground
-//! rows, not candidates) so small candidate batches from
-//! `lazy_greedy`/the sieves still saturate every core, with an optional
-//! bf16 input-demotion path selected via [`Precision`].
+//! [`CpuKernel`]: `Scalar` is the paper-faithful baseline; the
+//! gemm family (`Blocked`, and `Simd` with explicit vector
+//! micro-kernels — bit-identical, see [`crate::linalg::simd`]) routes
+//! through the tiled Gram-matrix backend in [`crate::linalg::gemm`],
+//! threading **ground-parallel** (over ground rows, not candidates) so
+//! small candidate batches from `lazy_greedy`/the sieves still
+//! saturate every core, with an optional bf16 input-demotion path
+//! selected via [`Precision`].
 
 use crate::linalg::gemm::{self, CpuKernel};
 use crate::linalg::{sq_euclidean, sq_norms, Matrix, SharedMatrix};
@@ -73,8 +75,8 @@ impl EbcFunction {
         threads: usize,
     ) -> EbcFunction {
         let vsq = sq_norms(v.data(), v.cols());
-        let lp = (kernel == CpuKernel::Blocked && precision == Precision::Bf16).then(|| {
-            let m = Matrix::from_vec(v.rows(), v.cols(), gemm::demote_bf16(v.data()));
+        let lp = (kernel.uses_gemm() && precision == Precision::Bf16).then(|| {
+            let m = Matrix::from_vec(v.rows(), v.cols(), gemm::demote_bf16_with(kernel, v.data()));
             let s = sq_norms(m.data(), m.cols());
             (m, s)
         });
@@ -124,7 +126,7 @@ impl EbcFunction {
                 let rows: Vec<&[f32]> = set.iter().map(|&s| self.v.row(s)).collect();
                 self.eval_scalar(&rows)
             }
-            CpuKernel::Blocked => {
+            CpuKernel::Blocked | CpuKernel::Simd => {
                 let (vm, vs) = self.eff();
                 let y = vm.gather(set);
                 let vsq_y: Vec<f32> = set.iter().map(|&s| vs[s]).collect();
@@ -142,12 +144,16 @@ impl EbcFunction {
                 let rows: Vec<&[f32]> = (0..set.rows()).map(|s| set.row(s)).collect();
                 self.eval_scalar(&rows)
             }
-            CpuKernel::Blocked if self.lp.is_some() => {
-                let m = Matrix::from_vec(set.rows(), set.cols(), gemm::demote_bf16(set.data()));
+            CpuKernel::Blocked | CpuKernel::Simd if self.lp.is_some() => {
+                let m = Matrix::from_vec(
+                    set.rows(),
+                    set.cols(),
+                    gemm::demote_bf16_with(self.kernel, set.data()),
+                );
                 let vsq_y = sq_norms(m.data(), m.cols());
                 self.eval_blocked(&m, &vsq_y)
             }
-            CpuKernel::Blocked => {
+            CpuKernel::Blocked | CpuKernel::Simd => {
                 self.eval_blocked(set, &sq_norms(set.data(), set.cols()))
             }
         }
@@ -185,7 +191,7 @@ impl EbcFunction {
         let (vm, vs) = self.eff();
         let sums = ground_partials(n, 1, self.threads, |r0, r1, part| {
             let mut acc = 0f64;
-            for_ground_tiles(vm, vs, y.data(), vsq_y, r0, r1, |i, drow| {
+            for_ground_tiles(self.kernel, vm, vs, y.data(), vsq_y, r0, r1, |i, drow| {
                 let mut t = self.vsq[i];
                 for &dv in drow {
                     if dv < t {
@@ -214,7 +220,7 @@ impl EbcFunction {
     /// blocked kernel is already ground-parallel per set, so it runs
     /// the sets sequentially instead of nesting thread scopes.
     pub fn eval_sets_mt(&self, sets: &[&[usize]], threads: usize) -> Vec<f32> {
-        if self.kernel == CpuKernel::Blocked {
+        if self.kernel.uses_gemm() {
             return self.eval_sets_st(sets);
         }
         let mut out = vec![0f32; sets.len()];
@@ -235,7 +241,7 @@ impl EbcFunction {
                 let vj = self.v.row(j);
                 (0..n).map(|i| sq_euclidean(self.v.row(i), vj)).collect()
             }
-            CpuKernel::Blocked => {
+            CpuKernel::Blocked | CpuKernel::Simd => {
                 let (vm, vs) = self.eff();
                 let vj = vm.row(j).to_vec();
                 let vsj = vs[j];
@@ -254,7 +260,8 @@ impl EbcFunction {
         let vsj = [vsj];
         let mut out = vec![0f32; n];
         scoped_chunks_mut(&mut out, self.threads, |_, start, slice| {
-            gemm::sq_dist_block(
+            gemm::sq_dist_block_with(
+                self.kernel,
                 &vm.data()[start * d..(start + slice.len()) * d],
                 &vs[start..start + slice.len()],
                 vj,
@@ -272,7 +279,7 @@ impl EbcFunction {
     pub fn gains(&self, mindist: &[f32], cands: &[usize]) -> Vec<f32> {
         match self.kernel {
             CpuKernel::Scalar => self.gains_scalar(mindist, cands),
-            CpuKernel::Blocked => self.gains_blocked(mindist, cands),
+            CpuKernel::Blocked | CpuKernel::Simd => self.gains_blocked(mindist, cands),
         }
     }
 
@@ -320,7 +327,7 @@ impl EbcFunction {
         let n = self.v.rows();
         let (vm, vs) = self.eff();
         let sums = ground_partials(n, vsq_y.len(), self.threads, |r0, r1, part| {
-            for_ground_tiles(vm, vs, y, vsq_y, r0, r1, |i, drow| {
+            for_ground_tiles(self.kernel, vm, vs, y, vsq_y, r0, r1, |i, drow| {
                 let md = mindist[i];
                 for (p, &dv) in part.iter_mut().zip(drow) {
                     let r = md - dv;
@@ -363,12 +370,12 @@ impl EbcFunction {
                     })
                     .collect()
             }
-            CpuKernel::Blocked if self.lp.is_some() => {
-                let y = gemm::demote_bf16(cands.data());
+            CpuKernel::Blocked | CpuKernel::Simd if self.lp.is_some() => {
+                let y = gemm::demote_bf16_with(self.kernel, cands.data());
                 let vsq_y = sq_norms(&y, cands.cols());
                 self.gains_blocked_rows(mindist, &y, &vsq_y)
             }
-            CpuKernel::Blocked => {
+            CpuKernel::Blocked | CpuKernel::Simd => {
                 let vsq_y = sq_norms(cands.data(), cands.cols());
                 self.gains_blocked_rows(mindist, cands.data(), &vsq_y)
             }
@@ -383,8 +390,12 @@ impl EbcFunction {
         self.work.fetch_add(n as u64, Ordering::Relaxed);
         match self.kernel {
             CpuKernel::Scalar => (0..n).map(|i| sq_euclidean(self.v.row(i), s)).collect(),
-            CpuKernel::Blocked => {
-                let sv: Vec<f32> = if self.lp.is_some() { gemm::demote_bf16(s) } else { s.to_vec() };
+            CpuKernel::Blocked | CpuKernel::Simd => {
+                let sv: Vec<f32> = if self.lp.is_some() {
+                    gemm::demote_bf16_with(self.kernel, s)
+                } else {
+                    s.to_vec()
+                };
                 let ssq = sq_norms(&sv, sv.len());
                 self.dist_col_blocked(&sv, ssq[0])
             }
@@ -397,7 +408,7 @@ impl EbcFunction {
     /// the constructor's thread width), so every entry point on one
     /// object computes with the same kernel and precision.
     pub fn gains_mt(&self, mindist: &[f32], cands: &[usize], threads: usize) -> Vec<f32> {
-        if self.kernel == CpuKernel::Blocked {
+        if self.kernel.uses_gemm() {
             return self.gains_blocked(mindist, cands);
         }
         let mut out = vec![0f32; cands.len()];
@@ -426,9 +437,12 @@ fn resolve_threads(threads: usize) -> usize {
 /// The one blocked tile loop behind both the blocked eval (min-reduce)
 /// and gains (sum-reduce): over ground rows [r0, r1), compute the
 /// clamped squared-distance block of each [`gemm::tile_rows`]-high tile
-/// against the packed member matrix `y` and hand each row to
+/// against the packed member matrix `y` — through the caller's
+/// gemm-family `kernel` — and hand each row to
 /// `row_fn(global_row_index, distance_row)`.
+#[allow(clippy::too_many_arguments)]
 fn for_ground_tiles(
+    kernel: CpuKernel,
     vm: &Matrix,
     vs: &[f32],
     y: &[f32],
@@ -445,7 +459,8 @@ fn for_ground_tiles(
     while i0 < r1 {
         let i1 = (i0 + tile).min(r1);
         let rows = i1 - i0;
-        gemm::sq_dist_block(
+        gemm::sq_dist_block_with(
+            kernel,
             &vm.data()[i0 * d..i1 * d],
             &vs[i0..i1],
             y,
@@ -780,6 +795,8 @@ mod tests {
             (CpuKernel::Scalar, Precision::F32, 1usize),
             (CpuKernel::Blocked, Precision::F32, 3),
             (CpuKernel::Blocked, Precision::Bf16, 2),
+            (CpuKernel::Simd, Precision::F32, 3),
+            (CpuKernel::Simd, Precision::Bf16, 2),
         ] {
             let f = EbcFunction::with_kernel(v.clone(), kernel, precision, threads);
             let mut mind = f.vsq().to_vec();
@@ -801,6 +818,37 @@ mod tests {
                 );
             }
             assert!(f.gains_external(&mind, &Matrix::zeros(0, 9)).is_empty());
+        }
+    }
+
+    #[test]
+    fn simd_matches_blocked_bitwise_all_entry_points() {
+        let mut rng = Rng::new(31);
+        // n=1-adjacent small dims plus d not a multiple of the 8-lane
+        // width: the simd kernel must agree with blocked to the bit on
+        // both precisions (shared accumulation order, no FMA)
+        for (n, d) in [(1usize, 3usize), (45, 11), (33, 16)] {
+            let v = Matrix::random_normal(n, d, &mut rng);
+            for precision in [Precision::F32, Precision::Bf16] {
+                for threads in [1usize, 3] {
+                    let b = EbcFunction::with_kernel(v.clone(), CpuKernel::Blocked, precision, threads);
+                    let s = EbcFunction::with_kernel(v.clone(), CpuKernel::Simd, precision, threads);
+                    let set: Vec<usize> = (0..n).step_by(7).collect();
+                    assert_eq!(b.eval(&set).to_bits(), s.eval(&set).to_bits());
+                    let probe = n / 2;
+                    for (a, bb) in b.dist_col(probe).iter().zip(&s.dist_col(probe)) {
+                        assert_eq!(a.to_bits(), bb.to_bits());
+                    }
+                    let mut mind = b.vsq().to_vec();
+                    fold_mindist(&mut mind, &b.dist_col(probe));
+                    let cands: Vec<usize> = (0..n).step_by(3).collect();
+                    for (a, bb) in
+                        b.gains(&mind, &cands).iter().zip(&s.gains(&mind, &cands))
+                    {
+                        assert_eq!(a.to_bits(), bb.to_bits());
+                    }
+                }
+            }
         }
     }
 

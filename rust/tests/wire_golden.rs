@@ -7,6 +7,15 @@
 //! `WIRE_VERSION` bump (plus regenerated goldens). The corruption half
 //! proves decoding is total: truncated, bit-flipped, resized and
 //! unknown-version frames yield typed [`WireError`]s, never panics.
+//!
+//! Provenance: every hex frame was minted by the independent Python
+//! mirror of the encoders, now committed as
+//! `python/tests/test_wire_goldens.py`. That mirror re-derives all nine
+//! frames from the documented layout (stdlib struct + zlib only) and
+//! they match the Rust encoders byte for byte — neither side has been
+//! found wrong to date. Until a cargo run confirms the Rust half in CI,
+//! the mirror is the executable cross-check; run it with
+//! `python3 python/tests/test_wire_goldens.py`.
 
 use ebc::engine::{KernelImpl, Precision};
 use ebc::imm::{Part, ProcessState};
@@ -88,6 +97,32 @@ fn job_bf16_planned() -> ShardJobMsg {
         ground_ids: vec![0, 2],
         // every value is bf16-representable, so the frame is lossless
         data: Matrix::from_vec(2, 2, vec![1.0, -2.0, 0.15625, 3.0]),
+    }
+}
+
+/// Golden 9 (PR 9): an f32 job selecting the `simd` cpu kernel
+/// (code 2) — the code set grew but the v2 layout is byte-identical,
+/// so only this new frame was minted; goldens 1–8 are untouched.
+const JOB_SIMD: &[&str] = &[
+    "45424357020001004c0000000300000002000000200000000600000067726565",
+    "6479000002010104000000000200000001000000000000000400000000000000",
+    "02000000020000000000003f0000c0bf00000040000080bebffc1499",
+];
+
+fn job_simd() -> ShardJobMsg {
+    ShardJobMsg {
+        shard: 3,
+        k: 2,
+        batch: 32,
+        optimizer: "greedy".into(),
+        payload: Precision::F32,
+        precision: Precision::F32,
+        cpu_kernel: CpuKernel::Simd,
+        kernel: KernelImpl::Jnp,
+        threads: Some(4),
+        plan: None,
+        ground_ids: vec![1, 4],
+        data: Matrix::from_vec(2, 2, vec![0.5, -1.5, 2.0, -0.25]),
     }
 }
 
@@ -223,6 +258,11 @@ fn encode_reproduces_goldens_byte_for_byte() {
         "bf16/planned job frame drifted — bump WIRE_VERSION and regenerate goldens"
     );
     assert_eq!(
+        encode_job(&job_simd()),
+        unhex(JOB_SIMD),
+        "simd job frame drifted — bump WIRE_VERSION and regenerate goldens"
+    );
+    assert_eq!(
         encode_result(&result_msg()),
         unhex(RESULT),
         "result frame drifted — bump WIRE_VERSION and regenerate goldens"
@@ -243,6 +283,7 @@ fn encode_reproduces_goldens_byte_for_byte() {
 fn decode_reproduces_the_expected_structs() {
     assert_eq!(decode_job(&unhex(JOB_F32)).unwrap(), job_f32());
     assert_eq!(decode_job(&unhex(JOB_BF16_PLANNED)).unwrap(), job_bf16_planned());
+    assert_eq!(decode_job(&unhex(JOB_SIMD)).unwrap(), job_simd());
     assert_eq!(decode_result(&unhex(RESULT)).unwrap(), result_msg());
     assert_eq!(decode_request(&unhex(REQUEST_SYNTHETIC)).unwrap(), request_synthetic());
     assert_eq!(
@@ -255,6 +296,7 @@ fn decode_reproduces_the_expected_structs() {
 fn frame_kind_classifies_goldens() {
     assert_eq!(frame_kind(&unhex(JOB_F32)).unwrap(), FrameKind::Job);
     assert_eq!(frame_kind(&unhex(JOB_BF16_PLANNED)).unwrap(), FrameKind::Job);
+    assert_eq!(frame_kind(&unhex(JOB_SIMD)).unwrap(), FrameKind::Job);
     assert_eq!(frame_kind(&unhex(RESULT)).unwrap(), FrameKind::Result);
     assert_eq!(frame_kind(&unhex(REQUEST_SYNTHETIC)).unwrap(), FrameKind::Request);
     assert_eq!(frame_kind(&unhex(REQUEST_INLINE_BF16)).unwrap(), FrameKind::Request);
@@ -299,6 +341,7 @@ fn golden_checksums_verify_independently() {
     for golden in [
         &unhex(JOB_F32),
         &unhex(JOB_BF16_PLANNED),
+        &unhex(JOB_SIMD),
         &unhex(RESULT),
         &unhex(REQUEST_SYNTHETIC),
         &unhex(REQUEST_INLINE_BF16),
@@ -357,6 +400,7 @@ fn every_bit_flip_in_every_golden_is_detected() {
     }
     for (golden, kind) in [
         (unhex(JOB_F32), Kind::Job),
+        (unhex(JOB_SIMD), Kind::Job),
         (unhex(RESULT), Kind::Result),
         (unhex(REQUEST_SYNTHETIC), Kind::Request),
     ] {
