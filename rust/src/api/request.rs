@@ -125,6 +125,19 @@ pub struct ShardSpec {
     /// never cross the wire (a remote executor fans out with its own
     /// fleet configuration), so the v2 request frame stays frozen.
     pub net: NetOptions,
+    /// Fraction of each shard's ground sieved away before stage 1
+    /// (see [`crate::prune`]); 0 = off. Local-only — the coordinator
+    /// prunes before jobs are built, so nothing prune-related ever
+    /// crosses the frozen v2 wire.
+    pub prune: f64,
+    /// Merge-tree fanout (children per merge node); 0 = single root.
+    /// Local-only, same as `prune`.
+    pub fanout: usize,
+    /// Ground-row cap per merge node; 0 = unlimited. Local-only.
+    pub max_merge_n: usize,
+    /// Registry optimizer for the merge stage(s); `"greedy"` keeps the
+    /// exact candidate-greedy merge. Local-only.
+    pub merge_optimizer: String,
 }
 
 impl Default for ShardSpec {
@@ -139,6 +152,10 @@ impl Default for ShardSpec {
             plan: false,
             cores: 0,
             net: NetOptions::default(),
+            prune: 0.0,
+            fanout: 0,
+            max_merge_n: 0,
+            merge_optimizer: "greedy".into(),
         }
     }
 }
@@ -188,6 +205,30 @@ impl ShardSpec {
     /// retry budget, chaos seed).
     pub fn net(mut self, net: NetOptions) -> ShardSpec {
         self.net = net;
+        self
+    }
+
+    /// Sieve away this fraction of each shard's ground before stage 1.
+    pub fn prune(mut self, rate: f64) -> ShardSpec {
+        self.prune = rate;
+        self
+    }
+
+    /// Merge-tree fanout (0 = single root).
+    pub fn fanout(mut self, fanout: usize) -> ShardSpec {
+        self.fanout = fanout;
+        self
+    }
+
+    /// Cap the ground rows any merge node scores (0 = unlimited).
+    pub fn max_merge_n(mut self, n: usize) -> ShardSpec {
+        self.max_merge_n = n;
+        self
+    }
+
+    /// Registry optimizer for the merge stage(s).
+    pub fn merge_optimizer(mut self, name: &str) -> ShardSpec {
+        self.merge_optimizer = name.to_string();
         self
     }
 }
@@ -393,6 +434,19 @@ impl SummarizeRequest {
                     "the tcp transport needs at least one replica endpoint",
                 ));
             }
+            if !(0.0..1.0).contains(&spec.prune) {
+                return Err(ApiError::invalid(
+                    "shard.prune",
+                    format!("prune rate {} outside [0, 1)", spec.prune),
+                ));
+            }
+            if !ALGORITHMS.contains(&spec.merge_optimizer.as_str()) {
+                return Err(ApiError::unknown(
+                    "shard.merge_optimizer",
+                    &spec.merge_optimizer,
+                    ALGORITHMS,
+                ));
+            }
         }
         Ok(())
     }
@@ -482,9 +536,14 @@ impl SummarizeRequest {
                 replicas: s.replicas as usize,
                 plan: s.plan,
                 cores: s.cores as usize,
-                // local-only knob: remote executors keep their own
-                // fleet configuration
+                // local-only knobs: remote executors keep their own
+                // fleet configuration, and pruning happens before jobs
+                // are built on whichever side runs the shards
                 net: NetOptions::default(),
+                prune: 0.0,
+                fanout: 0,
+                max_merge_n: 0,
+                merge_optimizer: "greedy".into(),
             }),
             seed: w.seed,
             with_baseline: w.with_baseline,
@@ -592,6 +651,46 @@ mod tests {
             base.to_wire(Precision::F32),
             Err(ApiError::NonRegistryOptimizer { .. })
         ));
+    }
+
+    #[test]
+    fn prune_knobs_validate_and_stay_local() {
+        let base = SummarizeRequest::new(inline(20, 4, 1), 5);
+        assert!(base
+            .clone()
+            .sharded(ShardSpec::new(2).prune(0.5).fanout(4).max_merge_n(100))
+            .validate()
+            .is_ok());
+        assert!(matches!(
+            base.clone().sharded(ShardSpec::new(2).prune(1.0)).validate(),
+            Err(ApiError::Invalid { field: "shard.prune", .. })
+        ));
+        assert!(matches!(
+            base.clone().sharded(ShardSpec::new(2).prune(-0.1)).validate(),
+            Err(ApiError::Invalid { field: "shard.prune", .. })
+        ));
+        assert!(matches!(
+            base.clone()
+                .sharded(ShardSpec::new(2).merge_optimizer("psychic"))
+                .validate(),
+            Err(ApiError::UnknownName { field: "shard.merge_optimizer", .. })
+        ));
+        // the knobs never cross the frozen v2 wire: a round trip of a
+        // pruned request comes back with pruning forced off
+        let req = base.sharded(
+            ShardSpec::new(3)
+                .prune(0.4)
+                .fanout(2)
+                .max_merge_n(50)
+                .merge_optimizer("stochastic_greedy"),
+        );
+        let frame = encode_request(&req.to_wire(Precision::F32).unwrap());
+        let back = SummarizeRequest::from_wire(&decode_request(&frame).unwrap());
+        let spec = back.shard.unwrap();
+        assert_eq!(spec.prune, 0.0);
+        assert_eq!(spec.fanout, 0);
+        assert_eq!(spec.max_merge_n, 0);
+        assert_eq!(spec.merge_optimizer, "greedy");
     }
 
     #[test]

@@ -54,6 +54,17 @@ pub struct Provenance {
     /// fallback. The exemplars are still correct; the fleet did not
     /// produce them. Always `false` for single-node runs.
     pub degraded: bool,
+    /// Ground rows sieved away before stage 1 (see [`crate::prune`];
+    /// 0 = pruning off or single-node).
+    pub pruned_n: usize,
+    /// Wall-clock of the coordinator-side prune stage.
+    pub prune_seconds: f64,
+    /// Merge-tree depth of a sharded run (1 = flat merge, 0 =
+    /// single-node).
+    pub merge_depth: usize,
+    /// Optimizer the merge stage(s) ran (`"greedy"` = the exact
+    /// candidate-greedy merge). Empty for single-node runs.
+    pub merge_optimizer: String,
     /// The request's span tree (children after parents is not
     /// guaranteed; sort key is start time). Populated only when the
     /// request set its `trace` knob and span recording is enabled —

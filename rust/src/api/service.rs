@@ -305,6 +305,10 @@ fn execute_inner(
                 shards_used: 0,
                 peak_jobs_held: 0,
                 degraded: false,
+                pruned_n: 0,
+                prune_seconds: 0.0,
+                merge_depth: 0,
+                merge_optimizer: String::new(),
                 trace: None,
             },
             baseline: None,
@@ -333,6 +337,8 @@ fn execute_inner(
             preq.precision = req.precision;
             preq.cpu_kernel = req.cpu_kernel;
             preq.cores = spec.cores;
+            preq.prune_rate = spec.prune;
+            preq.max_merge_n = spec.max_merge_n;
             Some(match env.planner {
                 Some(build) => build(&preq),
                 None => Arc::new(ShardPlan::plan(None, &preq)),
@@ -344,6 +350,16 @@ fn execute_inner(
     let mut sharded = ShardedSummarizer::from_request(req, partitioner.as_ref(), optimizer);
     sharded.plan = plan.clone();
     sharded.transport = transport;
+    // a non-greedy merge optimizer is rebuilt from the registry at the
+    // request's batch width (validate() vouched for the id)
+    let merge_built: Option<Box<dyn Optimizer>> = (spec.merge_optimizer != "greedy")
+        .then(|| {
+            build_optimizer(&spec.merge_optimizer, req.batch.max(1)).ok_or_else(|| {
+                ApiError::unknown("shard.merge_optimizer", &spec.merge_optimizer, ALGORITHMS)
+            })
+        })
+        .transpose()?;
+    sharded.merge_optimizer = merge_built.as_deref();
     let res = if req.with_baseline {
         sharded.summarize_with_baseline(data, env.factory, req.k)
     } else {
@@ -378,6 +394,10 @@ fn execute_inner(
             shards_used: res.shards_used,
             peak_jobs_held: res.peak_jobs_held,
             degraded: res.degraded,
+            pruned_n: res.pruned_n,
+            prune_seconds: res.prune_seconds,
+            merge_depth: res.merge_depth,
+            merge_optimizer: spec.merge_optimizer.clone(),
             trace: None,
         },
         baseline: res.baseline.map(|b| BaselineRun {

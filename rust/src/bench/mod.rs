@@ -14,7 +14,8 @@ pub use kernel_scaling::{
 };
 pub use report::Reporter;
 pub use shard_scaling::{
-    save_shard_json, shard_scaling_sweep, ShardScalingPoint, ShardSweepConfig,
+    prune_scaling_sweep, save_shard_json, shard_scaling_sweep, PruneSweepPoint,
+    ShardScalingPoint, ShardSweepConfig,
 };
 pub use workload::{fig2_workload, EvalProblem};
 

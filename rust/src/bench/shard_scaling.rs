@@ -40,6 +40,28 @@ pub struct ShardScalingPoint {
     pub shard_retries: u64,
 }
 
+/// One (prune-rate, shard-count) measurement from the prune sweep.
+/// The reference cell for each P is the same request at rate 0 (exact
+/// flat two-stage), so `quality_ratio` isolates what pruning costs at
+/// a fixed shard topology.
+#[derive(Debug, Clone)]
+pub struct PruneSweepPoint {
+    pub rate: f64,
+    pub shards: usize,
+    /// Ground rows dropped by the coordinator-side prune stage.
+    pub pruned_n: usize,
+    /// Wall-clock of the prune stage alone.
+    pub prune_seconds: f64,
+    /// Merge-tree depth (1 = flat single merge).
+    pub merge_depth: usize,
+    pub total_seconds: f64,
+    pub f_pruned: f32,
+    /// Same cell with pruning off (the exact two-stage reference).
+    pub f_exact: f32,
+    /// f_pruned / f_exact.
+    pub quality_ratio: f64,
+}
+
 /// Sweep settings — everything needed to derive the per-cell
 /// [`SummarizeRequest`]s.
 #[derive(Debug, Clone)]
@@ -67,6 +89,16 @@ pub struct ShardSweepConfig {
     pub cpu_kernel: CpuKernel,
     /// Per-oracle kernel threads (0 = auto).
     pub oracle_threads: usize,
+    /// Prune rates for [`prune_scaling_sweep`] (empty = skip the
+    /// prune section; rate 0 cells reuse the exact reference).
+    pub prune_rates: Vec<f64>,
+    /// Merge-tree fanout for prune-sweep cells (0 = flat merge).
+    pub fanout: usize,
+    /// Per-merge-node ground cap for prune-sweep cells (0 = off).
+    pub max_merge_n: usize,
+    /// Optimizer run at coordinator merge nodes (`greedy` = the exact
+    /// lazy path used everywhere else).
+    pub merge_optimizer: String,
 }
 
 impl Default for ShardSweepConfig {
@@ -85,6 +117,10 @@ impl Default for ShardSweepConfig {
             net: crate::shard::NetOptions::default(),
             cpu_kernel: CpuKernel::Scalar,
             oracle_threads: 1,
+            prune_rates: Vec::new(),
+            fanout: 0,
+            max_merge_n: 0,
+            merge_optimizer: "greedy".into(),
         }
     }
 }
@@ -117,6 +153,80 @@ impl ShardSweepConfig {
                     .cores(self.cores),
             )
     }
+
+    /// The api request for one prune-sweep cell: the same two-stage
+    /// request as [`Self::request`] with the coordinator-side prune
+    /// knobs engaged at `rate` (0.0 composes back to the exact flat
+    /// path when fanout/cap are also off).
+    pub fn pruned_request(
+        &self,
+        dataset: &DatasetRef,
+        algorithm: &str,
+        shards: usize,
+        rate: f64,
+    ) -> SummarizeRequest {
+        SummarizeRequest::new(dataset.clone(), self.k)
+            .optimizer(algorithm)
+            .cpu_kernel(self.cpu_kernel)
+            .threads(self.oracle_threads)
+            .seed(self.seed)
+            .sharded(
+                ShardSpec::new(shards)
+                    .partitioner(&self.partitioner)
+                    .threads(self.threads)
+                    .transport(&self.transport)
+                    .replicas(self.replicas)
+                    .net(self.net.clone())
+                    .plan(self.planned)
+                    .cores(self.cores)
+                    .prune(rate)
+                    .fanout(self.fanout)
+                    .max_merge_n(self.max_merge_n)
+                    .merge_optimizer(&self.merge_optimizer),
+            )
+    }
+}
+
+/// Sweep prune-rate × P through the façade. The first algorithm in
+/// the config is used for every cell; each P first runs the rate-0
+/// reference so `quality_ratio` compares pruned selections against
+/// the exact merge at the same topology.
+pub fn prune_scaling_sweep(
+    service: &Service,
+    dataset: &DatasetRef,
+    cfg: &ShardSweepConfig,
+) -> Result<Vec<PruneSweepPoint>, ApiError> {
+    let alg = cfg.algorithms.first().map(String::as_str).unwrap_or("greedy");
+    let mut out = Vec::new();
+    for &p in &cfg.shard_counts {
+        let exact = service.summarize(&cfg.pruned_request(dataset, alg, p, 0.0))?;
+        let f_exact = exact.f_final;
+        for &rate in &cfg.prune_rates {
+            let pruned;
+            let resp = if rate > 0.0 {
+                pruned = service.summarize(&cfg.pruned_request(dataset, alg, p, rate))?;
+                &pruned
+            } else {
+                &exact
+            };
+            out.push(PruneSweepPoint {
+                rate,
+                shards: p,
+                pruned_n: resp.provenance.pruned_n,
+                prune_seconds: resp.provenance.prune_seconds,
+                merge_depth: resp.provenance.merge_depth,
+                total_seconds: resp.timings.wall_seconds,
+                f_pruned: resp.f_final,
+                f_exact,
+                quality_ratio: if f_exact <= 0.0 {
+                    1.0
+                } else {
+                    resp.f_final as f64 / f_exact as f64
+                },
+            });
+        }
+    }
+    Ok(out)
 }
 
 /// Run the sweep through the façade. The baseline per algorithm is
@@ -174,10 +284,14 @@ pub fn shard_scaling_sweep(
 /// Persist a sweep as `BENCH_shard.json` (the artifact the CI bench
 /// job uploads): the sweep config + one record per measurement,
 /// including the transport column and its wire-traffic counters.
+/// `prune` holds the optional prune-sweep section (empty = the sweep
+/// was skipped; the `prune` key is still written so consumers can
+/// rely on its presence).
 pub fn save_shard_json(
     path: &Path,
     cfg: &ShardSweepConfig,
     points: &[ShardScalingPoint],
+    prune: &[PruneSweepPoint],
 ) -> crate::Result<PathBuf> {
     let records: Vec<Json> = points
         .iter()
@@ -201,6 +315,22 @@ pub fn save_shard_json(
                 .build()
         })
         .collect();
+    let prune_records: Vec<Json> = prune
+        .iter()
+        .map(|p| {
+            ObjBuilder::new()
+                .num("rate", p.rate)
+                .int("shards", p.shards)
+                .int("pruned_n", p.pruned_n)
+                .num("prune_seconds", p.prune_seconds)
+                .int("merge_depth", p.merge_depth)
+                .num("total_seconds", p.total_seconds)
+                .num("f_pruned", p.f_pruned as f64)
+                .num("f_exact", p.f_exact as f64)
+                .num("quality_ratio", p.quality_ratio)
+                .build()
+        })
+        .collect();
     let doc = ObjBuilder::new()
         .str("bench", "shard_scaling")
         .int("k", cfg.k)
@@ -208,7 +338,11 @@ pub fn save_shard_json(
         .str("transport", cfg.transport.clone())
         .int("replicas", cfg.replicas)
         .int("seed", cfg.seed as usize)
+        .int("fanout", cfg.fanout)
+        .int("max_merge_n", cfg.max_merge_n)
+        .str("merge_optimizer", cfg.merge_optimizer.clone())
         .val("points", Json::Arr(records))
+        .val("prune", Json::Arr(prune_records))
         // process-wide latency histograms accumulated during the sweep
         // (merge / wire encode+decode / kernel families with p50/p99)
         .val(
@@ -305,13 +439,47 @@ mod tests {
             assert_eq!(a.transport, "loopback");
         }
         let dir = std::env::temp_dir().join("ebc_shard_bench_test");
-        let path = save_shard_json(&dir.join("BENCH_shard.json"), &lb_cfg, &lb).unwrap();
+        let path = save_shard_json(&dir.join("BENCH_shard.json"), &lb_cfg, &lb, &[]).unwrap();
         let parsed =
             crate::util::json::Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
         assert_eq!(parsed.get("transport").unwrap().as_str(), Some("loopback"));
         let pts = parsed.get("points").unwrap().as_arr().unwrap();
         assert_eq!(pts.len(), 2);
         assert!(pts[0].get("wire_bytes").unwrap().as_usize().unwrap() > 0);
+        // the prune key is always present, even when the sweep is skipped
+        assert!(parsed.get("prune").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn prune_sweep_reports_drops_against_exact_reference() {
+        let ds = dataset(160, 6, 11);
+        let cfg = ShardSweepConfig {
+            k: 5,
+            shard_counts: vec![4],
+            prune_rates: vec![0.0, 0.5],
+            fanout: 2,
+            ..Default::default()
+        };
+        let pts = prune_scaling_sweep(&Service::cpu(), &ds, &cfg).unwrap();
+        assert_eq!(pts.len(), 2);
+        // the rate-0 cell IS the reference: same response, bit-equal f
+        let exact = &pts[0];
+        assert_eq!(exact.pruned_n, 0);
+        assert_eq!(exact.f_pruned.to_bits(), exact.f_exact.to_bits());
+        let pruned = &pts[1];
+        assert!(pruned.pruned_n > 0 && pruned.pruned_n < 160, "{pruned:?}");
+        assert!(pruned.prune_seconds > 0.0);
+        assert!(pruned.merge_depth >= 1);
+        assert!(pruned.quality_ratio > 0.5, "{pruned:?}");
+        // exported json carries the sweep in a dedicated section
+        let dir = std::env::temp_dir().join("ebc_prune_sweep_test");
+        let path = save_shard_json(&dir.join("BENCH_shard.json"), &cfg, &[], &pts).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let section = parsed.get("prune").unwrap().as_arr().unwrap();
+        assert_eq!(section.len(), 2);
+        assert!(section[1].get("pruned_n").unwrap().as_usize().unwrap() > 0);
+        assert_eq!(parsed.get("fanout").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -102,6 +102,16 @@ pub struct ShardSection {
     /// Fault-injection seed for chaos testing (0 = off) — see
     /// [`crate::shard::fault`].
     pub chaos: u64,
+    /// Fraction of each shard's ground sieved away before stage 1
+    /// ([`crate::prune`]); must lie in [0, 1). 0 = off.
+    pub prune: f64,
+    /// Merge-tree fanout (children per merge node); 0 = single root.
+    pub fanout: usize,
+    /// Ground-row cap per merge node; 0 = unlimited.
+    pub max_merge_n: usize,
+    /// Registry optimizer for the merge stage(s); `"greedy"` keeps the
+    /// exact candidate-greedy merge.
+    pub merge_optimizer: String,
 }
 
 impl ShardSection {
@@ -141,6 +151,10 @@ impl Default for ShardSection {
             max_frame_mb: net.max_frame_mb as u64,
             heartbeat_max_age: net.heartbeat_max_age,
             chaos: net.chaos,
+            prune: 0.0,
+            fanout: 0,
+            max_merge_n: 0,
+            merge_optimizer: "greedy".into(),
         }
     }
 }
@@ -303,6 +317,17 @@ impl ServiceConfig {
                 crate::shard::TRANSPORTS
             );
         }
+        let merge_optimizer = doc.str("shard.merge_optimizer", "greedy");
+        if !crate::optim::ALGORITHMS.contains(&merge_optimizer.as_str()) {
+            bail!(
+                "shard.merge_optimizer: unknown '{merge_optimizer}' (expected one of {:?})",
+                crate::optim::ALGORITHMS
+            );
+        }
+        let prune = doc.float("shard.prune", 0.0);
+        if !(0.0..1.0).contains(&prune) {
+            bail!("shard.prune: rate {prune} outside [0, 1)");
+        }
         let addrs = match doc.get("shard.addrs") {
             Some(Value::StrArray(a)) => a.clone(),
             _ => vec![],
@@ -359,6 +384,10 @@ impl ServiceConfig {
                 max_frame_mb: pos("shard.max_frame_mb", 64)?.max(1) as u64,
                 heartbeat_max_age: pos("shard.heartbeat_max_age", 3)?.max(1) as u64,
                 chaos: pos("shard.chaos", 0)? as u64,
+                prune,
+                fanout: pos("shard.fanout", 0)?,
+                max_merge_n: pos("shard.max_merge_n", 0)?,
+                merge_optimizer,
             },
             obs: ObsSection {
                 enabled: doc.bool("obs.enabled", true),
@@ -420,6 +449,10 @@ plan = false
 cores = 6
 transport = "loopback"
 replicas = 5
+prune = 0.4
+fanout = 4
+max_merge_n = 300
+merge_optimizer = "stochastic_greedy"
 [obs]
 enabled = false
 recorder_capacity = 512
@@ -445,6 +478,10 @@ hist_buckets = 24
         assert_eq!(c.shard.cores, 6);
         assert_eq!(c.shard.transport, "loopback");
         assert_eq!(c.shard.replicas, 5);
+        assert_eq!(c.shard.prune, 0.4);
+        assert_eq!(c.shard.fanout, 4);
+        assert_eq!(c.shard.max_merge_n, 300);
+        assert_eq!(c.shard.merge_optimizer, "stochastic_greedy");
         assert!(!c.obs.enabled);
         assert_eq!(c.obs.recorder_capacity, 512);
         assert_eq!(c.obs.hist_buckets, 24);
@@ -466,9 +503,27 @@ hist_buckets = 24
         assert_eq!(c.shard.cores, 0);
         assert_eq!(c.shard.transport, "inproc");
         assert_eq!(c.shard.replicas, 2);
+        assert_eq!(c.shard.prune, 0.0);
+        assert_eq!(c.shard.fanout, 0);
+        assert_eq!(c.shard.max_merge_n, 0);
+        assert_eq!(c.shard.merge_optimizer, "greedy");
         assert!(c.obs.enabled);
         assert_eq!(c.obs.recorder_capacity, 4096);
         assert_eq!(c.obs.hist_buckets, 40);
+    }
+
+    #[test]
+    fn prune_knobs_validate() {
+        let bad = ConfigDoc::parse("[shard]\nprune = 1.5\n").unwrap();
+        assert!(ServiceConfig::from_doc(&bad).is_err());
+        let neg = ConfigDoc::parse("[shard]\nprune = -0.2\n").unwrap();
+        assert!(ServiceConfig::from_doc(&neg).is_err());
+        let unk = ConfigDoc::parse("[shard]\nmerge_optimizer = \"psychic\"\n").unwrap();
+        assert!(ServiceConfig::from_doc(&unk).is_err());
+        let ok = ConfigDoc::parse("[shard]\nprune = 0.25\nfanout = 2\n").unwrap();
+        let c = ServiceConfig::from_doc(&ok).unwrap();
+        assert_eq!(c.shard.prune, 0.25);
+        assert_eq!(c.shard.fanout, 2);
     }
 
     #[test]

@@ -375,7 +375,11 @@ impl Coordinator {
                     .transport(&sc.transport)
                     .replicas(sc.replicas)
                     .plan(sc.plan)
-                    .cores(sc.cores),
+                    .cores(sc.cores)
+                    .prune(sc.prune)
+                    .fanout(sc.fanout)
+                    .max_merge_n(sc.max_merge_n)
+                    .merge_optimizer(&sc.merge_optimizer),
             )
     }
 

@@ -52,6 +52,13 @@ pub struct PlanRequest {
     pub cpu_kernel: CpuKernel,
     /// Core budget for the whole fleet run (0 = `default_threads()`).
     pub cores: usize,
+    /// Fraction of each shard's ground sieved away before stage 1
+    /// (see [`crate::prune`]); shrinks the shapes oracles will actually
+    /// evaluate, so buckets can be picked tighter. 0 = off.
+    pub prune_rate: f64,
+    /// Ground-row cap per merge node of a hierarchical run (0 = none):
+    /// no merge oracle ever sees more rows than this.
+    pub max_merge_n: usize,
 }
 
 impl PlanRequest {
@@ -66,7 +73,25 @@ impl PlanRequest {
             kernel: KernelImpl::Jnp,
             cpu_kernel: CpuKernel::Blocked,
             cores: 0,
+            prune_rate: 0.0,
+            max_merge_n: 0,
         }
+    }
+
+    /// Rows the largest post-prune evaluation shape can reach: pruning
+    /// keeps ⌈(1−rate)·n⌉ survivors of the full union, and a merge cap
+    /// bounds every merge oracle below `max_merge_n` (stage-1 shards are
+    /// smaller still). Plain `n` when both knobs are off.
+    pub fn effective_n(&self) -> usize {
+        let mut n_eff = if self.prune_rate > 0.0 && self.prune_rate < 1.0 {
+            ((self.n as f64) * (1.0 - self.prune_rate)).ceil() as usize
+        } else {
+            self.n
+        };
+        if self.max_merge_n > 0 {
+            n_eff = n_eff.min(self.max_merge_n);
+        }
+        n_eff.clamp(1, self.n.max(1))
     }
 }
 
@@ -84,6 +109,10 @@ pub fn plan_cpu_split(shards: usize, cores: usize) -> (usize, usize) {
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
     pub n: usize,
+    /// Post-prune maximum evaluation rows the buckets were picked for
+    /// (= `n` with every prune knob off — see
+    /// [`PlanRequest::effective_n`]).
+    pub n_eff: usize,
     pub d: usize,
     pub shards: usize,
     pub k: usize,
@@ -113,15 +142,20 @@ impl ShardPlan {
         let (shard_workers, oracle_threads) = plan_cpu_split(req.shards, cores);
         // the merge stage evaluates against the full ground set, and the
         // largest shard holds at most n rows — one (n, d)-fitting shape
-        // therefore serves every stage
-        let c = req.batch.min(req.n).max(1);
+        // therefore serves every stage. Prune/cap knobs shrink that
+        // maximum ([`PlanRequest::effective_n`]), so pruned fleets pick
+        // tighter buckets; a full-n baseline pass of such a run falls
+        // back to chunking instead.
+        let n_eff = req.effective_n();
+        let c = req.batch.min(n_eff).max(1);
         let buckets = manifest
             .map(|m| {
-                m.pick_for_max_shape(req.n, req.d, c, 1, req.k.max(1), req.precision, req.kernel)
+                m.pick_for_max_shape(n_eff, req.d, c, 1, req.k.max(1), req.precision, req.kernel)
             })
             .unwrap_or_default();
         ShardPlan {
             n: req.n,
+            n_eff,
             d: req.d,
             shards: req.shards.max(1),
             k: req.k,
@@ -201,8 +235,13 @@ impl ShardPlan {
                 None => "-".to_string(),
             }
         };
+        let eff = if self.n_eff < self.n {
+            format!(" (pruned eval <= {} rows)", self.n_eff)
+        } else {
+            String::new()
+        };
         format!(
-            "window {}x{} P={} k={}: split {}w x {}t (merge {}t, cores {}), \
+            "window {}x{}{eff} P={} k={}: split {}w x {}t (merge {}t, cores {}), \
              cpu_kernel {}, buckets gains={} update={} eval_multi={}",
             self.n,
             self.d,
@@ -361,6 +400,37 @@ mod tests {
         assert_eq!(merge.threads, Some(4));
         assert_eq!(OracleSpec::unplanned().threads_or(7), 7);
         assert_eq!(shard.threads_or(7), 2);
+    }
+
+    #[test]
+    fn pruned_plan_picks_tighter_buckets() {
+        let m = manifest();
+        let mut req = PlanRequest::new(3000, 60, 4, 10);
+        req.batch = 100;
+        assert_eq!(req.effective_n(), 3000);
+        let full = ShardPlan::plan(Some(&m), &req);
+        assert_eq!(full.n_eff, 3000);
+        assert_eq!(full.buckets.gains.as_ref().unwrap().name, "gains_big");
+
+        // sieving 95% away shrinks the max evaluation shape into the
+        // small bucket
+        req.prune_rate = 0.95;
+        assert_eq!(req.effective_n(), 150);
+        let pruned = ShardPlan::plan(Some(&m), &req);
+        assert_eq!(pruned.n_eff, 150);
+        assert_eq!(pruned.n, 3000);
+        assert_eq!(pruned.buckets.gains.as_ref().unwrap().name, "gains_small");
+        assert!(pruned.describe().contains("pruned eval <= 150 rows"));
+
+        // a merge cap composes the same way
+        req.prune_rate = 0.0;
+        req.max_merge_n = 200;
+        assert_eq!(req.effective_n(), 200);
+        // both knobs: the tighter bound wins
+        req.prune_rate = 0.5;
+        assert_eq!(req.effective_n(), 200);
+        req.max_merge_n = 2000;
+        assert_eq!(req.effective_n(), 1500);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! | [`gpumodel`] | analytical device model (Quadro/TX2/Xeon/A72) |
 //! | [`imm`] | injection-molding process simulator (case-study substrate) |
 //! | [`shard`] | sharded two-stage summarization (partition → optimize → merge) |
+//! | [`prune`] | pruned submodularity graphs + hierarchical shards-of-shards merge |
 //! | [`coordinator`] | streaming summarization service + router + fleet queries |
 //! | [`daemon`] | actor-style production daemon: job queues, scheduler, retry, reload, drain, status |
 //! | [`obs`] | observability: metrics registry, spans + flight recorder, exposition |
@@ -49,6 +50,7 @@ pub mod imm;
 pub mod linalg;
 pub mod obs;
 pub mod optim;
+pub mod prune;
 pub mod reduce;
 pub mod runtime;
 pub mod shard;

@@ -20,8 +20,8 @@ use anyhow::Result;
 use ebc::api::{DatasetRef, Service, ShardSpec, SummarizeRequest};
 use ebc::bench::report::fmt_secs;
 use ebc::bench::{
-    kernel_scaling_sweep, shard_scaling_sweep, shard_split_sweep, KernelSweepConfig, Reporter,
-    ShardSweepConfig,
+    kernel_scaling_sweep, prune_scaling_sweep, shard_scaling_sweep, shard_split_sweep,
+    KernelSweepConfig, Reporter, ShardSweepConfig,
 };
 use ebc::cli::{flag, opt, AppSpec, CommandSpec, Matches};
 use ebc::config::schema::ServiceConfig;
@@ -64,6 +64,11 @@ fn app() -> AppSpec {
                     opt("kernel", "cpu kernel backend: scalar | blocked | simd", "blocked"),
                     opt("oracle-threads", "cpu oracle worker threads (0 = auto)", "0"),
                     opt("algorithm", "any optim registry name (greedy, lazy_greedy, ...)", "greedy"),
+                    opt("shards", "run two-stage over P shards (0 = single-node)", "0"),
+                    opt("prune", "coordinator-side prune rate in [0, 1)", "0"),
+                    opt("fanout", "hierarchical merge fanout (0 = flat merge)", "0"),
+                    opt("max-merge-n", "per-merge-node ground cap (0 = off)", "0"),
+                    opt("merge-optimizer", "optimizer for coordinator merge nodes", "greedy"),
                     flag("trace", "record this request's span tree and print it"),
                 ],
             },
@@ -137,6 +142,14 @@ fn app() -> AppSpec {
                         "",
                     ),
                     opt("chaos", "fault-injection seed, 0 = off (see shard::fault)", "0"),
+                    opt(
+                        "prune",
+                        "comma-separated prune rates for the prune sweep (empty = skip)",
+                        "",
+                    ),
+                    opt("fanout", "hierarchical merge fanout for pruned cells (0 = flat)", "0"),
+                    opt("max-merge-n", "per-merge-node ground cap (0 = off)", "0"),
+                    opt("merge-optimizer", "optimizer for coordinator merge nodes", "greedy"),
                     opt("out", "output JSON path", "BENCH_shard.json"),
                 ],
             },
@@ -251,7 +264,8 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
     let n = m.usize("n")?;
     let d = m.usize("d")?;
     let service = Service::from_backend(m.str("backend")?)?;
-    let req = SummarizeRequest::new(
+    let shards = m.usize("shards")?;
+    let mut req = SummarizeRequest::new(
         DatasetRef::synthetic(n, d, m.usize("seed")? as u64),
         m.usize("k")?,
     )
@@ -260,6 +274,15 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
     .cpu_kernel(CpuKernel::parse(m.str("kernel")?)?)
     .threads(m.usize("oracle-threads")?)
     .trace(m.has("trace"));
+    if shards > 0 {
+        req = req.sharded(
+            ShardSpec::new(shards)
+                .prune(m.f64("prune")?)
+                .fanout(m.usize("fanout")?)
+                .max_merge_n(m.usize("max-merge-n")?)
+                .merge_optimizer(m.str("merge-optimizer")?),
+        );
+    }
     let res = service.summarize(&req)?;
     println!(
         "summary of {n}x{d} ({}, backend={}): k={}",
@@ -273,6 +296,16 @@ fn cmd_summarize(m: &Matches) -> Result<()> {
         "wall: {:.3}s, oracle calls: {}, distance work: {:.2e}",
         res.timings.wall_seconds, res.oracle_calls, res.oracle_work as f64
     );
+    if shards > 0 {
+        println!(
+            "shards: {} used, pruned_n = {}, prune {:.3}s, merge depth {} ({})",
+            res.provenance.shards_used,
+            res.provenance.pruned_n,
+            res.provenance.prune_seconds,
+            res.provenance.merge_depth,
+            res.provenance.merge_optimizer,
+        );
+    }
     if m.has("trace") {
         match &res.provenance.trace {
             Some(spans) => print!("\ntrace ({} spans):\n{}", spans.len(), obs::expo::render_trace(spans)),
@@ -504,6 +537,18 @@ fn parse_usize_list(raw: &str, flag: &str) -> Result<Vec<usize>> {
     Ok(out)
 }
 
+/// Comma-separated floats; an empty string is an empty list (the
+/// prune sweep is opt-in, unlike the integer lists above).
+fn parse_f64_list(raw: &str, flag: &str) -> Result<Vec<f64>> {
+    raw.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|_| {
+            anyhow::anyhow!("flag '--{flag}': '{raw}' is not a comma-separated list of numbers")
+        })
+}
+
 fn cmd_shard_bench(m: &Matches) -> Result<()> {
     let samples = m.usize("samples")?;
     let k = m.usize("k")?;
@@ -541,6 +586,10 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         },
         cpu_kernel: CpuKernel::parse(m.str("kernel")?)?,
         oracle_threads: m.usize("oracle-threads")?,
+        prune_rates: parse_f64_list(m.str("prune")?, "prune")?,
+        fanout: m.usize("fanout")?,
+        max_merge_n: m.usize("max-merge-n")?,
+        merge_optimizer: m.str("merge-optimizer")?.to_string(),
     };
 
     log::info!("generating IMM dataset (cover/stable, d={samples})");
@@ -608,8 +657,38 @@ fn cmd_shard_bench(m: &Matches) -> Result<()> {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => log::warn!("csv export failed: {e}"),
     }
+
+    // opt-in prune sweep: rate x P cells against the exact reference
+    let prune_points = if cfg.prune_rates.is_empty() {
+        Vec::new()
+    } else {
+        let pts = prune_scaling_sweep(&service, &dataset, &cfg)?;
+        let mut prep = Reporter::new(
+            "prune sweep: pruned submodularity graph + hierarchical merge vs exact",
+            &[
+                "rate", "P", "pruned_n", "prune_s", "depth", "total_s", "f_pruned",
+                "f_exact", "quality",
+            ],
+        );
+        for p in &pts {
+            prep.row(&[
+                format!("{:.2}", p.rate),
+                p.shards.to_string(),
+                p.pruned_n.to_string(),
+                fmt_secs(p.prune_seconds),
+                p.merge_depth.to_string(),
+                fmt_secs(p.total_seconds),
+                format!("{:.4}", p.f_pruned),
+                format!("{:.4}", p.f_exact),
+                format!("{:.3}", p.quality_ratio),
+            ]);
+        }
+        prep.print();
+        pts
+    };
+
     let out = std::path::PathBuf::from(m.str("out")?);
-    let path = ebc::bench::save_shard_json(&out, &cfg, &points)?;
+    let path = ebc::bench::save_shard_json(&out, &cfg, &points, &prune_points)?;
     println!("wrote {}", path.display());
     Ok(())
 }

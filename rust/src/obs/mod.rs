@@ -68,6 +68,14 @@ pub const NET_BYTES: &str = "ebc_net_bytes";
 /// Gauge of heartbeat lag: registry ticks since the freshest live
 /// replica heartbeat at the end of the last scheduling round.
 pub const NET_HEARTBEAT_LAG: &str = "ebc_net_heartbeat_lag";
+/// Histogram of per-sieve prune latency (stage-1 shard prunes and
+/// merge-node `max_merge_n` caps alike).
+pub const PRUNE_SECONDS: &str = "ebc_prune_seconds";
+/// Counter of ground rows sieved away (and charged to a dominator)
+/// across all prunes.
+pub const PRUNE_DROPPED_TOTAL: &str = "ebc_prune_dropped_total";
+/// Gauge of the merge-tree depth of the last sharded run (1 = flat).
+pub const PRUNE_MERGE_DEPTH: &str = "ebc_prune_merge_depth";
 
 /// Tunables for the process-global observability state — the `[obs]`
 /// config section. `enabled` gates only span recording; metric handles

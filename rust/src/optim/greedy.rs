@@ -7,7 +7,7 @@
 //! the accelerator engine turns into one work-matrix launch.
 
 use crate::optim::{Optimizer, SummaryResult};
-use crate::submodular::{f_from_mindist, fold_mindist, initial_mindist, Oracle};
+use crate::submodular::{fold_mindist, initial_mindist, Oracle};
 use std::time::Instant;
 
 pub struct Greedy {
@@ -79,7 +79,9 @@ pub fn greedy_over_candidates(
         fold_mindist(&mut mindist, &oracle.dist_col(j));
         remaining.retain(|&c| c != j);
         selected.push(j);
-        traj.push(f_from_mindist(oracle.vsq(), &mindist));
+        // `f_of_state` defaults to `f_from_mindist`; weighted oracles
+        // (pruned cores) report their unbiased full-ground estimate
+        traj.push(oracle.f_of_state(&mindist));
     }
 
     let f_final = traj.last().copied().unwrap_or(0.0);

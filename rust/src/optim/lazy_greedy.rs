@@ -5,7 +5,7 @@
 //! oracle call) so the engine still sees multi-candidate launches.
 
 use crate::optim::{Optimizer, SummaryResult};
-use crate::submodular::{f_from_mindist, fold_mindist, initial_mindist, Oracle};
+use crate::submodular::{fold_mindist, initial_mindist, Oracle};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Instant;
@@ -92,7 +92,7 @@ impl Optimizer for LazyGreedy {
                 }
                 fold_mindist(&mut mindist, &oracle.dist_col(w.idx));
                 selected.push(w.idx);
-                traj.push(f_from_mindist(oracle.vsq(), &mindist));
+                traj.push(oracle.f_of_state(&mindist));
                 round += 1;
                 // stale entries (still candidates) go back untouched
                 for e in stale {

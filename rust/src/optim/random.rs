@@ -2,7 +2,7 @@
 //! must beat (used by the case-study ablations).
 
 use crate::optim::{Optimizer, SummaryResult};
-use crate::submodular::{f_from_mindist, fold_mindist, initial_mindist, Oracle};
+use crate::submodular::{fold_mindist, initial_mindist, Oracle};
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -31,7 +31,7 @@ impl Optimizer for RandomSelection {
         let mut traj = Vec::with_capacity(indices.len());
         for &j in &indices {
             fold_mindist(&mut mindist, &oracle.dist_col(j));
-            traj.push(f_from_mindist(oracle.vsq(), &mindist));
+            traj.push(oracle.f_of_state(&mindist));
         }
         let f_final = traj.last().copied().unwrap_or(0.0);
         SummaryResult {

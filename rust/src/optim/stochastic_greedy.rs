@@ -4,7 +4,7 @@
 //! with a k-independent total work of O(n log 1/ε).
 
 use crate::optim::{Optimizer, SummaryResult};
-use crate::submodular::{f_from_mindist, fold_mindist, initial_mindist, Oracle};
+use crate::submodular::{fold_mindist, initial_mindist, Oracle};
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -63,7 +63,7 @@ impl Optimizer for StochasticGreedy {
             fold_mindist(&mut mindist, &oracle.dist_col(best.0));
             in_set[best.0] = true;
             selected.push(best.0);
-            traj.push(f_from_mindist(oracle.vsq(), &mindist));
+            traj.push(oracle.f_of_state(&mindist));
         }
 
         let f_final = traj.last().copied().unwrap_or(0.0);

@@ -1,0 +1,276 @@
+//! [`PrunedGround`] — the surviving core of a sieved ground set — and
+//! the weighted-oracle bridge any registry optimizer runs on unchanged.
+
+use crate::linalg::gemm::CpuKernel;
+use crate::linalg::Matrix;
+use crate::obs;
+use crate::prune::graph::{self, PruneConfig, PruneStats};
+use crate::runtime::artifact::Precision;
+use crate::submodular::CpuOracle;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+fn prune_hist() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| obs::histogram(obs::PRUNE_SECONDS, "per-sieve prune latency (seconds)"))
+}
+
+fn dropped_counter() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| {
+        obs::counter(obs::PRUNE_DROPPED_TOTAL, "ground rows sieved away across all prunes")
+    })
+}
+
+/// The surviving core of a (possibly repeatedly) sieved ground set:
+/// global row ids, the charge weight each survivor accumulated from the
+/// rows dropped onto it, and the size of the ground it stands in for.
+/// Invariant: `ids` sorted ascending, `weights.len() == ids.len()`, and
+/// `Σ weights == n_full` (charge conservation — see
+/// [`crate::prune::graph`]), which is exactly what makes the weighted
+/// objective over the core an unbiased estimate of the full-ground one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrunedGround {
+    /// Surviving global row ids, ascending.
+    pub ids: Vec<usize>,
+    /// Charge per survivor (≥ 1.0 after a fresh prune).
+    pub weights: Vec<f32>,
+    /// Rows of the ground set this core represents.
+    pub n_full: usize,
+}
+
+impl PrunedGround {
+    /// The no-op core: every row survives with unit charge.
+    pub fn identity(rows: &[usize]) -> PrunedGround {
+        PrunedGround {
+            ids: rows.to_vec(),
+            weights: vec![1.0; rows.len()],
+            n_full: rows.len(),
+        }
+    }
+
+    /// [`Self::identity`] over the full ground `0..n`.
+    pub fn full(n: usize) -> PrunedGround {
+        PrunedGround { ids: (0..n).collect(), weights: vec![1.0; n], n_full: n }
+    }
+
+    /// Survivors in the core.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Rows sieved away.
+    pub fn dropped(&self) -> usize {
+        self.n_full - self.ids.len()
+    }
+
+    /// Position of a global row id within the core, if it survived.
+    pub fn locate(&self, global: usize) -> Option<usize> {
+        self.ids.binary_search(&global).ok()
+    }
+
+    /// Build a weighted CPU oracle over the gathered core: the
+    /// sub-matrix plus the charge weights through the weighted-eval
+    /// seam on [`crate::submodular::EbcFunction`] — gains, eval and
+    /// f-trajectories all become unbiased full-ground estimates, and
+    /// any [`crate::optim::Optimizer`] runs on it unchanged. Selected
+    /// indices come back core-local; map them with [`Self::ids`].
+    pub fn oracle(
+        &self,
+        data: &Matrix,
+        kernel: CpuKernel,
+        precision: Precision,
+        threads: usize,
+    ) -> CpuOracle {
+        let sub = Arc::new(data.gather(&self.ids));
+        CpuOracle::with_kernel_shared(sub, kernel, precision, threads)
+            .with_weights(self.weights.clone())
+    }
+}
+
+/// Prune `rows` of `data` down to a `(1 − cfg.rate)` core with unit
+/// initial charges — the stage-1 entry point (`rows` = one shard's
+/// partition). Returns the identity core untouched when the rate is 0
+/// or the target rounds up to everything. Deterministic per
+/// (`cfg.seed`, inputs); records `ebc_prune_seconds` /
+/// `ebc_prune_dropped_total` and runs under a `prune.build` span.
+pub fn prune_rows(
+    data: &Matrix,
+    rows: &[usize],
+    kernel: CpuKernel,
+    threads: usize,
+    cfg: &PruneConfig,
+) -> (PrunedGround, PruneStats) {
+    let m = rows.len();
+    let keep = m.saturating_sub((m as f64 * cfg.rate).floor() as usize).max(1);
+    if cfg.rate <= 0.0 || keep >= m {
+        return (PrunedGround::identity(rows), PruneStats::default());
+    }
+    let _span = obs::span("prune.build");
+    let t0 = Instant::now();
+    let (ids, weights, stats) =
+        graph::sieve(kernel, threads, data, rows, vec![1.0; m], keep, &[], cfg);
+    prune_hist().observe(t0.elapsed().as_secs_f64());
+    dropped_counter().add(stats.dropped as u64);
+    (PrunedGround { ids, weights, n_full: m }, stats)
+}
+
+/// Enforce the `max_merge_n` cap on a merge node's ground: sieve an
+/// oversized core down to `max_n` survivors, protecting the merge
+/// `candidates` (global ids) and carrying the existing charges forward,
+/// so the capped node still scores an unbiased estimate of its whole
+/// subtree. The dominance guard is disabled — a hard cap must reach its
+/// target. No-op when `max_n` is 0 or the core already fits.
+pub fn cap_ground(
+    data: &Matrix,
+    ground: PrunedGround,
+    max_n: usize,
+    candidates: &[usize],
+    kernel: CpuKernel,
+    threads: usize,
+    seed: u64,
+) -> PrunedGround {
+    if max_n == 0 || ground.len() <= max_n {
+        return ground;
+    }
+    let _span = obs::span("prune.build");
+    let t0 = Instant::now();
+    let cfg = PruneConfig { rate: 0.0, seed, probes: 0, slack: f32::INFINITY };
+    let (ids, weights, stats) = graph::sieve(
+        kernel,
+        threads,
+        data,
+        &ground.ids,
+        ground.weights,
+        max_n,
+        candidates,
+        &cfg,
+    );
+    prune_hist().observe(t0.elapsed().as_secs_f64());
+    dropped_counter().add(stats.dropped as u64);
+    PrunedGround { ids, weights, n_full: ground.n_full }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{build_optimizer, Optimizer};
+    use crate::submodular::{CpuOracle, Oracle};
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::random_normal(n, 4, &mut rng)
+    }
+
+    #[test]
+    fn identity_core_is_a_no_op() {
+        let rows: Vec<usize> = (3..19).collect();
+        let g = PrunedGround::identity(&rows);
+        assert_eq!(g.len(), 16);
+        assert_eq!(g.dropped(), 0);
+        assert_eq!(g.locate(7), Some(4));
+        assert_eq!(g.locate(2), None);
+    }
+
+    #[test]
+    fn rate_zero_returns_identity() {
+        let v = data(30, 1);
+        let rows: Vec<usize> = (0..30).collect();
+        let (g, stats) =
+            prune_rows(&v, &rows, CpuKernel::Blocked, 1, &PruneConfig::new(0.0, 5));
+        assert_eq!(g, PrunedGround::identity(&rows));
+        assert_eq!(stats, PruneStats::default());
+    }
+
+    #[test]
+    fn prune_keeps_the_requested_fraction() {
+        let v = data(100, 2);
+        let rows: Vec<usize> = (0..100).collect();
+        let (g, stats) =
+            prune_rows(&v, &rows, CpuKernel::Blocked, 2, &PruneConfig::new(0.6, 5));
+        assert_eq!(g.len(), 40);
+        assert_eq!(g.dropped(), 60);
+        assert_eq!(stats.dropped, 60);
+        let total: f64 = g.weights.iter().map(|&w| w as f64).sum();
+        assert!((total - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cap_protects_candidates_and_charges() {
+        let v = data(120, 3);
+        let (g, _) = prune_rows(
+            &v,
+            &(0..120).collect::<Vec<_>>(),
+            CpuKernel::Blocked,
+            2,
+            &PruneConfig::new(0.25, 9),
+        );
+        let protect = [g.ids[0], g.ids[10], g.ids[20]];
+        let capped = cap_ground(&v, g, 30, &protect, CpuKernel::Blocked, 2, 17);
+        assert!(capped.len() <= 30);
+        assert_eq!(capped.n_full, 120);
+        for p in protect {
+            assert!(capped.locate(p).is_some(), "candidate {p} was capped away");
+        }
+        let total: f64 = capped.weights.iter().map(|&w| w as f64).sum();
+        assert!((total - 120.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn every_registry_optimizer_runs_on_a_pruned_core() {
+        let v = data(60, 4);
+        let (g, _) = prune_rows(
+            &v,
+            &(0..60).collect::<Vec<_>>(),
+            CpuKernel::Blocked,
+            1,
+            &PruneConfig::new(0.5, 21),
+        );
+        for name in crate::optim::ALGORITHMS {
+            let opt = build_optimizer(name, 64).unwrap();
+            let mut oracle = g.oracle(&v, CpuKernel::Blocked, Precision::F32, 1);
+            let res = opt.run(&mut oracle, 4);
+            assert!(res.k() <= 4, "{name}");
+            // core-local indices map back into the surviving ids
+            for &i in &res.indices {
+                assert!(i < g.len(), "{name}: local index {i} out of core");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_core_estimates_the_full_objective() {
+        // tight clusters: the pruned, weighted estimate of f(S) must
+        // land near the exact full-ground value
+        let mut rng = Rng::new(11);
+        let rows: Vec<Vec<f32>> = (0..80)
+            .map(|i| {
+                let c = [(i % 4) as f32 * 15.0, ((i % 4) / 2) as f32 * 15.0];
+                vec![c[0] + 0.2 * rng.normal(), c[1] + 0.2 * rng.normal()]
+            })
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let v = Matrix::from_rows(&refs);
+        let (g, _) = prune_rows(
+            &v,
+            &(0..80).collect::<Vec<_>>(),
+            CpuKernel::Blocked,
+            1,
+            &PruneConfig::new(0.5, 3),
+        );
+        let set: Vec<usize> = vec![g.ids[0], g.ids[g.len() / 2]];
+        let full = CpuOracle::new(v.clone()).function().eval(&set);
+        let local: Vec<usize> = set.iter().map(|&s| g.locate(s).unwrap()).collect();
+        let mut core = g.oracle(&v, CpuKernel::Blocked, Precision::F32, 1);
+        let est = core.eval_sets(&[&local])[0];
+        assert!(
+            (est - full).abs() <= 0.15 * (1.0 + full.abs()),
+            "weighted estimate {est} vs full {full}"
+        );
+    }
+}

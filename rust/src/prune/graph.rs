@@ -1,0 +1,335 @@
+//! The sparse directed submodularity graph and the seeded sieve prune
+//! (Zhou et al., arXiv:1606.00399, adapted to the EBC objective).
+//!
+//! The full submodularity graph has an edge u → v weighted by how much
+//! of v's marginal value survives once u is selected; for EBC
+//! (facility-location with the auxiliary exemplar e0) that weight is
+//! governed by d²(u, v): if u is close to v, then any coverage v
+//! provides, u provides up to d²(u, v) of slack. Materializing all n²
+//! edges would defeat the purpose, so — exactly as Zhou et al.'s
+//! random-probe sieve — each round draws a seeded probe set U, builds
+//! the **sparse neighbor list** {v → (argmin_{u∈U} d²(v,u), d²)} with
+//! the blocked/simd distance kernels, and drops the most-dominated
+//! elements, charging each dropped v's weight to its dominating probe.
+//! Charge is conserved: the surviving core's weights always sum to the
+//! original ground size, which is what keeps weighted evaluation over
+//! the core an unbiased estimate of the full-ground objective.
+//!
+//! **Loss bound.** A dropped element v satisfies
+//! `d²(v, u) ≤ slack · ‖v‖²` for its kept dominator u, and v's
+//! per-point contribution to f is at most ‖v‖² (= d²(v, e0)). Charging
+//! v to u therefore misestimates its coverage by at most d²(v, u), so
+//! the total objective error is bounded by
+//! `slack · Σ_dropped ‖v‖² / n` — the ε of the (1 − ε) guarantee the
+//! proptests check empirically.
+
+use crate::linalg::gemm::{self, CpuKernel};
+use crate::linalg::Matrix;
+use crate::obs;
+use crate::util::rng::Rng;
+use crate::util::threadpool::scoped_chunks_mut;
+
+/// Sieve parameters. `rate`/`seed` come from the user; the rest have
+/// solid defaults via [`PruneConfig::new`].
+#[derive(Clone, Copy, Debug)]
+pub struct PruneConfig {
+    /// Fraction of rows to drop, in [0, 1).
+    pub rate: f64,
+    /// Seed of the deterministic probe sampler.
+    pub seed: u64,
+    /// Probe-set size per round; 0 = auto (≈ √|alive|, clamped to
+    /// [8, 128]).
+    pub probes: usize,
+    /// Dominance slack: v may be dropped only when its nearest probe
+    /// satisfies `d²(v, u) ≤ slack · ‖v‖²`. `f32::INFINITY` disables
+    /// the guard (used by the hard `max_merge_n` cap, which must reach
+    /// its target).
+    pub slack: f32,
+}
+
+impl PruneConfig {
+    pub fn new(rate: f64, seed: u64) -> PruneConfig {
+        PruneConfig { rate, seed, probes: 0, slack: 1.0 }
+    }
+}
+
+/// What one sieve did — surfaced through `Provenance`/metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Probe rounds run.
+    pub rounds: usize,
+    /// Elements dropped (and charged to a dominator).
+    pub dropped: usize,
+}
+
+/// The dominance test of the pruned submodularity graph: may `v`
+/// (with squared norm `vsq_v`) be charged to a neighbor at squared
+/// distance `d_uv`? See the module docs for the induced loss bound.
+#[inline]
+pub fn dominated(d_uv: f32, vsq_v: f32, slack: f32) -> bool {
+    d_uv <= slack * vsq_v + 1e-12
+}
+
+/// Sparse neighbor list: for every row id in `query` (indices into
+/// `sub`), the position of its nearest row in `probes` plus the squared
+/// distance — computed tile-by-tile through the blocked/simd
+/// [`gemm::sq_dist_block_with`] kernel (|query| × |probes| work, never
+/// O(n²)), parallel over disjoint query chunks. Ties go to the lowest
+/// probe position, so the result is deterministic for any thread count.
+pub fn nearest_probes(
+    kernel: CpuKernel,
+    threads: usize,
+    sub: &Matrix,
+    subsq: &[f32],
+    query: &[usize],
+    probes: &[usize],
+) -> Vec<(u32, f32)> {
+    let s = probes.len();
+    let d = sub.cols();
+    assert!(s > 0, "nearest_probes needs a non-empty probe set");
+    let pm = sub.gather(probes);
+    let psq: Vec<f32> = probes.iter().map(|&p| subsq[p]).collect();
+    let mut out = vec![(0u32, 0f32); query.len()];
+    let tile = gemm::tile_rows(s);
+    scoped_chunks_mut(&mut out, threads.max(1), |_, start, slice| {
+        let mut dbuf = vec![0f32; tile * s];
+        let mut i0 = 0usize;
+        while i0 < slice.len() {
+            let i1 = (i0 + tile).min(slice.len());
+            let rows = i1 - i0;
+            let q = &query[start + i0..start + i1];
+            let qm = sub.gather(q);
+            let qsq: Vec<f32> = q.iter().map(|&r| subsq[r]).collect();
+            gemm::sq_dist_block_with(
+                kernel,
+                qm.data(),
+                &qsq,
+                pm.data(),
+                &psq,
+                d,
+                rows,
+                s,
+                &mut dbuf[..rows * s],
+            );
+            for ii in 0..rows {
+                let drow = &dbuf[ii * s..(ii + 1) * s];
+                let mut bi = 0u32;
+                let mut bd = f32::INFINITY;
+                for (j, &dv) in drow.iter().enumerate() {
+                    if dv < bd {
+                        bd = dv;
+                        bi = j as u32;
+                    }
+                }
+                slice[i0 + ii] = (bi, bd);
+            }
+            i0 = i1;
+        }
+    });
+    out
+}
+
+/// The seeded sieve: repeatedly draw probes, build the neighbor list,
+/// and drop the most-dominated elements until at most `target` of
+/// `rows` survive (or no droppable element remains). `weights` carries
+/// each row's incoming charge (pass all-ones for a fresh prune; pass a
+/// prior core's weights to sieve further, e.g. the `max_merge_n` cap);
+/// the weight of every dropped row moves to its dominating probe, so
+/// the returned weights sum to the input sum exactly. `protect` lists
+/// **global** ids that must survive (merge candidates). `rows` must be
+/// sorted ascending; the returned ids are too.
+///
+/// Fully deterministic: seed + inputs ⇒ identical core, independent of
+/// thread count.
+pub fn sieve(
+    kernel: CpuKernel,
+    threads: usize,
+    data: &Matrix,
+    rows: &[usize],
+    mut weights: Vec<f32>,
+    target: usize,
+    protect: &[usize],
+    cfg: &PruneConfig,
+) -> (Vec<usize>, Vec<f32>, PruneStats) {
+    let m = rows.len();
+    assert_eq!(weights.len(), m, "one weight per row");
+    debug_assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows must be sorted + deduplicated");
+    let target = target.max(1);
+    let mut stats = PruneStats::default();
+    if m <= target {
+        return (rows.to_vec(), weights, stats);
+    }
+
+    let sub = data.gather(rows);
+    let subsq = crate::linalg::sq_norms(sub.data(), sub.cols());
+    let mut protected = vec![false; m];
+    for g in protect {
+        if let Ok(l) = rows.binary_search(g) {
+            protected[l] = true;
+        }
+    }
+    let mut alive: Vec<usize> = (0..m).collect();
+    let mut dead = vec![false; m];
+    let mut rng = Rng::new(cfg.seed);
+    const MAX_ROUNDS: usize = 64;
+
+    while alive.len() > target && stats.rounds < MAX_ROUNDS {
+        let _round = obs::span("prune.drop");
+        stats.rounds += 1;
+        let s = if cfg.probes > 0 {
+            cfg.probes
+        } else {
+            ((alive.len() as f64).sqrt().ceil() as usize).clamp(8, 128)
+        };
+        if s >= alive.len() {
+            break; // nothing left to compare the probes against
+        }
+        // seeded partial Fisher–Yates over the (sorted) alive list
+        let mut pool = alive.clone();
+        for i in 0..s {
+            let j = i + rng.below(pool.len() - i);
+            pool.swap(i, j);
+        }
+        let probes: Vec<usize> = pool[..s].to_vec();
+        let mut probe_set = probes.clone();
+        probe_set.sort_unstable();
+        let query: Vec<usize> =
+            alive.iter().copied().filter(|l| probe_set.binary_search(l).is_err()).collect();
+        let nearest = nearest_probes(kernel, threads, &sub, &subsq, &query, &probes);
+
+        // rank droppable (unprotected, dominated) queries by how
+        // redundant they are: smallest probe distance first, ties to
+        // the lower row id
+        let mut order: Vec<usize> = (0..query.len())
+            .filter(|&qi| {
+                !protected[query[qi]] && dominated(nearest[qi].1, subsq[query[qi]], cfg.slack)
+            })
+            .collect();
+        if order.is_empty() {
+            break; // every remaining element is protected or undominated
+        }
+        order.sort_unstable_by(|&a, &b| {
+            nearest[a].1.total_cmp(&nearest[b].1).then(query[a].cmp(&query[b]))
+        });
+        // drop at most half the queries per round so later rounds see
+        // fresh probes — but never overshoot the target
+        let q = (alive.len() - target).min((query.len() / 2).max(1)).min(order.len());
+        for &qi in &order[..q] {
+            let v = query[qi];
+            let u = probes[nearest[qi].0 as usize];
+            weights[u] += weights[v];
+            weights[v] = 0.0;
+            dead[v] = true;
+        }
+        stats.dropped += q;
+        alive.retain(|&l| !dead[l]);
+    }
+
+    let ids: Vec<usize> = alive.iter().map(|&l| rows[l]).collect();
+    let w: Vec<f32> = alive.iter().map(|&l| weights[l]).collect();
+    (ids, w, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn clustered(n: usize, seed: u64) -> Matrix {
+        // tight clusters around 4 well-separated centers
+        let centers = [[0.0f32, 0.0], [20.0, 0.0], [0.0, 20.0], [20.0, 20.0]];
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let c = centers[i % 4];
+                vec![c[0] + 0.1 * rng.normal(), c[1] + 0.1 * rng.normal()]
+            })
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        Matrix::from_rows(&refs)
+    }
+
+    #[test]
+    fn nearest_probe_finds_the_closest_row() {
+        let m = clustered(40, 1);
+        let sq = crate::linalg::sq_norms(m.data(), m.cols());
+        let all: Vec<usize> = (0..40).collect();
+        let probes = vec![0usize, 1, 2, 3]; // one per cluster
+        let nn = nearest_probes(CpuKernel::Blocked, 2, &m, &sq, &all, &probes);
+        for (i, &(p, d)) in nn.iter().enumerate() {
+            // every row lands on the probe from its own cluster
+            assert_eq!(p as usize, i % 4, "row {i}");
+            assert!(d < 1.0, "row {i}: {d}");
+        }
+    }
+
+    #[test]
+    fn sieve_reaches_target_and_conserves_charge() {
+        let m = clustered(64, 2);
+        let rows: Vec<usize> = (0..64).collect();
+        let cfg = PruneConfig::new(0.75, 7);
+        let (ids, w, stats) =
+            sieve(CpuKernel::Blocked, 2, &m, &rows, vec![1.0; 64], 16, &[], &cfg);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(stats.dropped, 48);
+        assert!(stats.rounds >= 1);
+        assert!(ids.windows(2).all(|p| p[0] < p[1]), "core ids must stay sorted");
+        let total: f64 = w.iter().map(|&x| x as f64).sum();
+        assert!((total - 64.0).abs() < 1e-3, "charge not conserved: {total}");
+        assert!(w.iter().all(|&x| x >= 1.0));
+    }
+
+    #[test]
+    fn sieve_is_deterministic_across_thread_counts() {
+        let m = clustered(80, 3);
+        let rows: Vec<usize> = (0..80).collect();
+        let cfg = PruneConfig::new(0.5, 11);
+        let a = sieve(CpuKernel::Blocked, 1, &m, &rows, vec![1.0; 80], 20, &[], &cfg);
+        let b = sieve(CpuKernel::Blocked, 4, &m, &rows, vec![1.0; 80], 20, &[], &cfg);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn protected_rows_always_survive() {
+        let m = clustered(48, 4);
+        let rows: Vec<usize> = (0..48).collect();
+        let mut cfg = PruneConfig::new(0.9, 5);
+        cfg.slack = f32::INFINITY;
+        let keep = [5usize, 17, 33];
+        let (ids, _, _) =
+            sieve(CpuKernel::Blocked, 2, &m, &rows, vec![1.0; 48], 4, &keep, &cfg);
+        for g in keep {
+            assert!(ids.binary_search(&g).is_ok(), "{g} was dropped");
+        }
+    }
+
+    #[test]
+    fn dominance_guard_blocks_outlier_drops() {
+        // slack 0 ⇒ nothing is dominated ⇒ the sieve refuses to drop
+        let m = clustered(32, 6);
+        let rows: Vec<usize> = (0..32).collect();
+        let mut cfg = PruneConfig::new(0.5, 9);
+        cfg.slack = 0.0;
+        let (ids, _, stats) =
+            sieve(CpuKernel::Blocked, 1, &m, &rows, vec![1.0; 32], 8, &[], &cfg);
+        // cluster members at distance ~0 from a probe with vsq 0 can
+        // still qualify through the epsilon; everything else survives
+        assert!(ids.len() >= 8);
+        assert!(stats.dropped <= 32 - ids.len() + 1);
+    }
+
+    #[test]
+    fn subset_rows_map_back_to_global_ids() {
+        let m = clustered(60, 8);
+        let rows: Vec<usize> = (10..50).collect();
+        let cfg = PruneConfig::new(0.5, 13);
+        let (ids, w, _) =
+            sieve(CpuKernel::Blocked, 2, &m, &rows, vec![1.0; 40], 20, &[], &cfg);
+        assert_eq!(ids.len(), 20);
+        assert!(ids.iter().all(|&g| (10..50).contains(&g)));
+        let total: f64 = w.iter().map(|&x| x as f64).sum();
+        assert!((total - 40.0).abs() < 1e-3);
+    }
+}

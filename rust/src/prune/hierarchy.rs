@@ -1,0 +1,360 @@
+//! The shards-of-shards merge tree (Mitrovic et al., arXiv:1806.02815):
+//! per-shard results are merged through intermediate nodes of
+//! configurable fanout instead of one flat stage-2 merge, and no node
+//! ever scores more than `max_merge_n` ground rows.
+//!
+//! Each node unions its children's (disjoint, weighted) pruned grounds,
+//! unions their selected exemplars as the candidate pool, caps the
+//! ground at `max_merge_n` via [`cap_ground`] (candidates protected,
+//! charges carried), and re-selects `k` exemplars scored against the
+//! weighted core — an unbiased estimate of the node's whole subtree
+//! objective. The surviving (capped) ground and the node's picks flow
+//! up to the parent; the root's picks are the final summary.
+//!
+//! With `fanout = 0` (or ≥ the shard count) the tree degenerates to a
+//! single root — the flat merge shape — and with pruning off that root
+//! scores the identity ground with unit weights, which the proptests
+//! prove bit-identical to the legacy flat path.
+
+use crate::linalg::gemm::CpuKernel;
+use crate::linalg::Matrix;
+use crate::obs;
+use crate::optim::greedy::greedy_over_candidates;
+use crate::optim::{Optimizer, SummaryResult};
+use crate::prune::core::{cap_ground, PrunedGround};
+use crate::runtime::artifact::Precision;
+use crate::submodular::{CpuOracle, Oracle};
+use std::sync::Arc;
+
+/// Merge-tree knobs, resolved by the summarizer from
+/// [`crate::prune::PruneOptions`] + the run's oracle settings.
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchyConfig {
+    /// Children per merge node; 0 = unlimited (single root).
+    pub fanout: usize,
+    /// Ground-row cap per node; 0 = unlimited.
+    pub max_merge_n: usize,
+    /// Seed for the cap sieves (mixed per node).
+    pub seed: u64,
+    /// CPU kernel / precision / thread width of the node oracles.
+    pub kernel: CpuKernel,
+    pub precision: Precision,
+    pub threads: usize,
+    /// Candidate-batch size of the per-node greedy.
+    pub batch: usize,
+}
+
+/// One leaf of the tree: a shard's surviving ground core and the
+/// exemplars its stage-1 optimizer picked (global ids).
+#[derive(Clone, Debug)]
+pub struct MergeLeaf {
+    pub ground: PrunedGround,
+    pub selected: Vec<usize>,
+}
+
+/// Accounting for one merge node (asserted on by the `max_merge_n`
+/// tests, reported through `Provenance`).
+#[derive(Clone, Copy, Debug)]
+pub struct MergeNodeReport {
+    /// Tree level, 1 = first merge above the shards.
+    pub level: usize,
+    /// Ground rows this node actually scored (post-cap).
+    pub scored_n: usize,
+    /// Candidate-pool size.
+    pub candidates: usize,
+}
+
+/// The merge tree's output.
+#[derive(Clone, Debug)]
+pub struct MergeOutcome {
+    /// Root selection with **global** indices; `f_final` is the
+    /// weighted (unbiased) estimate against the root's scored core.
+    pub result: SummaryResult,
+    /// Merge levels run (1 = flat).
+    pub depth: usize,
+    /// Every node, level order.
+    pub nodes: Vec<MergeNodeReport>,
+    /// max over nodes of `scored_n` — provably ≤ `max_merge_n` when
+    /// the cap is set.
+    pub max_scored_n: usize,
+}
+
+/// Run the full merge tree over the per-shard leaves. `merge_opt`
+/// switches the per-node selector: `None` = the candidate-pool greedy
+/// (the legacy merge, scored on the node's weighted ground); `Some` =
+/// any registry optimizer run over the candidate-pool oracle (the
+/// classic two-stage shape, where stage 2's ground *is* the union of
+/// stage-1 picks), with `f_final` re-measured on the node ground so
+/// reported quality stays comparable.
+pub fn merge_tree(
+    data: &Matrix,
+    leaves: Vec<MergeLeaf>,
+    k: usize,
+    cfg: &HierarchyConfig,
+    merge_opt: Option<&dyn Optimizer>,
+) -> MergeOutcome {
+    let fanout = if cfg.fanout == 0 { usize::MAX } else { cfg.fanout.max(2) };
+    if leaves.is_empty() {
+        return MergeOutcome {
+            result: SummaryResult {
+                indices: vec![],
+                f_trajectory: vec![],
+                f_final: 0.0,
+                wall_seconds: 0.0,
+                oracle_calls: 0,
+                oracle_work: 0,
+            },
+            depth: 0,
+            nodes: vec![],
+            max_scored_n: 0,
+        };
+    }
+    let mut level = leaves;
+    let mut depth = 0usize;
+    let mut nodes = Vec::new();
+    let mut max_scored = 0usize;
+    let mut node_id = 0u64;
+    loop {
+        depth += 1;
+        let mut next: Vec<MergeLeaf> = Vec::with_capacity(level.len().div_ceil(fanout.max(1)));
+        for group in level.chunks(fanout) {
+            node_id += 1;
+            // disjoint weighted grounds → one sorted union
+            let mut pairs: Vec<(usize, f32)> = Vec::new();
+            let mut covered = 0usize;
+            for leaf in group {
+                covered += leaf.ground.n_full;
+                pairs.extend(leaf.ground.ids.iter().copied().zip(leaf.ground.weights.iter().copied()));
+            }
+            pairs.sort_unstable_by_key(|&(id, _)| id);
+            let ground = PrunedGround {
+                ids: pairs.iter().map(|&(id, _)| id).collect(),
+                weights: pairs.iter().map(|&(_, w)| w).collect(),
+                n_full: covered,
+            };
+            let mut cands: Vec<usize> =
+                group.iter().flat_map(|l| l.selected.iter().copied()).collect();
+            cands.sort_unstable();
+            cands.dedup();
+            let ground = cap_ground(
+                data,
+                ground,
+                cfg.max_merge_n,
+                &cands,
+                cfg.kernel,
+                cfg.threads,
+                cfg.seed ^ node_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let result = select_at_node(data, &ground, &cands, k, cfg, merge_opt);
+            nodes.push(MergeNodeReport {
+                level: depth,
+                scored_n: ground.len(),
+                candidates: cands.len(),
+            });
+            max_scored = max_scored.max(ground.len());
+            next.push(MergeLeaf { selected: result.indices.clone(), ground });
+            if next.len() == 1 && level.len() <= fanout {
+                // this was the root
+                obs::gauge(obs::PRUNE_MERGE_DEPTH, "merge-tree depth of the last sharded run")
+                    .set(depth as i64);
+                return MergeOutcome { result, depth, nodes, max_scored_n: max_scored };
+            }
+        }
+        level = next;
+    }
+}
+
+/// Select `k` exemplars at one node. Candidates are global ids; they
+/// are always present in `ground` (shard picks come from shard cores,
+/// and [`cap_ground`] protects them), and both lists are ascending, so
+/// the local candidate pool stays sorted — preserving the greedy
+/// tie-break order of the flat merge.
+fn select_at_node(
+    data: &Matrix,
+    ground: &PrunedGround,
+    cands: &[usize],
+    k: usize,
+    cfg: &HierarchyConfig,
+    merge_opt: Option<&dyn Optimizer>,
+) -> SummaryResult {
+    let local: Vec<usize> = cands.iter().filter_map(|&g| ground.locate(g)).collect();
+    debug_assert_eq!(local.len(), cands.len(), "merge candidates must survive the cap");
+    if local.is_empty() || k == 0 {
+        return SummaryResult {
+            indices: vec![],
+            f_trajectory: vec![],
+            f_final: 0.0,
+            wall_seconds: 0.0,
+            oracle_calls: 0,
+            oracle_work: 0,
+        };
+    }
+    let mut oracle = ground.oracle(data, cfg.kernel, cfg.precision, cfg.threads);
+    match merge_opt {
+        None => {
+            let mut r = greedy_over_candidates(&mut oracle, &local, k, cfg.batch);
+            r.indices = r.indices.iter().map(|&l| ground.ids[l]).collect();
+            r
+        }
+        Some(opt) => {
+            // stage-2 ground = the candidate pool itself, weighted by
+            // each pick's charge so dense shards count for more
+            let weights: Vec<f32> = local.iter().map(|&l| ground.weights[l]).collect();
+            let pool = Arc::new(data.gather(cands));
+            let mut pool_oracle =
+                CpuOracle::with_kernel_shared(pool, cfg.kernel, cfg.precision, cfg.threads)
+                    .with_weights(weights);
+            let mut r = opt.run(&mut pool_oracle, k);
+            r.indices = r.indices.iter().map(|&p| cands[p]).collect();
+            // re-measure f on the node ground for comparability
+            let sel_local: Vec<usize> =
+                r.indices.iter().filter_map(|&g| ground.locate(g)).collect();
+            let f = oracle.eval_sets(&[&sel_local])[0];
+            r.f_final = f;
+            if let Some(last) = r.f_trajectory.last_mut() {
+                *last = f;
+            }
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{build_optimizer, Greedy};
+    use crate::shard::merge::greedy_merge;
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::random_normal(n, 5, &mut rng)
+    }
+
+    fn cfg() -> HierarchyConfig {
+        HierarchyConfig {
+            fanout: 0,
+            max_merge_n: 0,
+            seed: 0,
+            kernel: CpuKernel::Blocked,
+            precision: Precision::F32,
+            threads: 1,
+            batch: 1024,
+        }
+    }
+
+    /// Stage-1 leaves from a round-robin split with identity grounds.
+    fn leaves(v: &Matrix, p: usize, k: usize) -> Vec<MergeLeaf> {
+        let n = v.rows();
+        (0..p)
+            .map(|s| {
+                let rows: Vec<usize> = (s..n).step_by(p).collect();
+                let g = PrunedGround::identity(&rows);
+                let mut o = g.oracle(v, CpuKernel::Blocked, Precision::F32, 1);
+                let r = Greedy::default().run(&mut o, k);
+                let selected: Vec<usize> = r.indices.iter().map(|&l| g.ids[l]).collect();
+                MergeLeaf { ground: g, selected }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_root_reproduces_the_flat_merge_bitwise() {
+        let v = data(48, 1);
+        let ls = leaves(&v, 4, 5);
+        let mut union: Vec<usize> = ls.iter().flat_map(|l| l.selected.iter().copied()).collect();
+        union.sort_unstable();
+        union.dedup();
+        let mut flat_oracle = CpuOracle::with_kernel_shared(
+            Arc::new(v.clone()),
+            CpuKernel::Blocked,
+            Precision::F32,
+            1,
+        );
+        let flat = greedy_merge(&mut flat_oracle, &union, 5, 1024);
+        for fanout in [0usize, 4, 9] {
+            let mut c = cfg();
+            c.fanout = fanout;
+            let out = merge_tree(&v, ls.clone(), 5, &c, None);
+            assert_eq!(out.depth, 1, "fanout {fanout}");
+            assert_eq!(out.result.indices, flat.indices, "fanout {fanout}");
+            assert_eq!(out.result.f_final.to_bits(), flat.f_final.to_bits(), "fanout {fanout}");
+            assert_eq!(out.max_scored_n, 48);
+        }
+    }
+
+    #[test]
+    fn fanout_two_builds_the_expected_depth() {
+        let v = data(64, 2);
+        let ls = leaves(&v, 8, 3);
+        let mut c = cfg();
+        c.fanout = 2;
+        let out = merge_tree(&v, ls, 3, &c, None);
+        // 8 → 4 → 2 → 1
+        assert_eq!(out.depth, 3);
+        assert_eq!(out.nodes.len(), 4 + 2 + 1);
+        assert_eq!(out.result.k(), 3);
+        assert!(out.result.indices.iter().all(|&i| i < 64));
+    }
+
+    #[test]
+    fn no_node_scores_more_than_the_cap() {
+        let v = data(90, 3);
+        let ls = leaves(&v, 6, 4);
+        let mut c = cfg();
+        c.fanout = 3;
+        c.max_merge_n = 25;
+        let out = merge_tree(&v, ls, 4, &c, None);
+        assert!(out.max_scored_n <= 25, "cap violated: {}", out.max_scored_n);
+        for node in &out.nodes {
+            assert!(node.scored_n <= 25, "node scored {}", node.scored_n);
+        }
+        assert_eq!(out.result.k(), 4);
+    }
+
+    #[test]
+    fn registry_merge_optimizer_selects_from_the_union() {
+        let v = data(40, 4);
+        let ls = leaves(&v, 4, 4);
+        let union: Vec<usize> =
+            ls.iter().flat_map(|l| l.selected.iter().copied()).collect();
+        let opt = build_optimizer("stochastic_greedy", 64).unwrap();
+        let out = merge_tree(&v, ls.clone(), 4, &cfg(), Some(opt.as_ref()));
+        assert!(out.result.k() <= 4);
+        for i in &out.result.indices {
+            assert!(union.contains(i), "{i} not a stage-1 pick");
+        }
+        assert!(out.result.f_final >= 0.0);
+    }
+
+    #[test]
+    fn weighted_leaves_flow_through_intermediate_levels() {
+        let v = data(120, 5);
+        let n = v.rows();
+        let p = 6;
+        let ls: Vec<MergeLeaf> = (0..p)
+            .map(|s| {
+                let rows: Vec<usize> = (s..n).step_by(p).collect();
+                let (g, _) = crate::prune::prune_rows(
+                    &v,
+                    &rows,
+                    CpuKernel::Blocked,
+                    1,
+                    &crate::prune::PruneConfig::new(0.5, s as u64),
+                );
+                let mut o = g.oracle(&v, CpuKernel::Blocked, Precision::F32, 1);
+                let r = Greedy::default().run(&mut o, 3);
+                let selected: Vec<usize> = r.indices.iter().map(|&l| g.ids[l]).collect();
+                MergeLeaf { ground: g, selected }
+            })
+            .collect();
+        let mut c = cfg();
+        c.fanout = 2;
+        c.max_merge_n = 40;
+        let out = merge_tree(&v, ls, 3, &c, None);
+        assert_eq!(out.depth, 3);
+        assert!(out.max_scored_n <= 40);
+        // the root ground still stands in for every covered row
+        assert!(out.result.f_final >= 0.0);
+    }
+}

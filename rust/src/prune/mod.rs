@@ -1,0 +1,100 @@
+//! Pruned submodularity graphs + hierarchical shards-of-shards merge —
+//! the sublinear ground-set scaling layer.
+//!
+//! Two papers drive this module:
+//!
+//! * **Zhou et al., "Scaling Submodular Maximization via Pruned
+//!   Submodularity Graphs" (arXiv:1606.00399)** — a sparse directed
+//!   graph over the ground set lets provably-dominated elements be
+//!   removed *before* any optimizer runs. [`graph`] builds probe-based
+//!   neighbor lists with the existing blocked/simd
+//!   [`gemm::sq_dist_block_with`](crate::linalg::gemm::sq_dist_block_with)
+//!   kernels (never the O(n²) dense matrix) and sieves the ground set
+//!   down to an O(n/p) core; every dropped element *charges* its
+//!   dominating neighbor, so the surviving core carries per-element
+//!   weights whose total equals the original ground size.
+//! * **Mitrovic et al., "Data Summarization at Scale: A Two-Stage
+//!   Submodular Approach" (arXiv:1806.02815)** — a shards-of-shards
+//!   reduction keeps the stage-2 merge off any single node.
+//!   [`hierarchy`] arranges the per-shard results into a merge tree of
+//!   configurable fanout whose nodes score candidates against weighted
+//!   pruned cores, capped at `max_merge_n` rows per node.
+//!
+//! [`core`] holds [`PrunedGround`] — surviving global ids + charge
+//! weights — and builds weighted [`CpuOracle`](crate::submodular::CpuOracle)s
+//! through the weighted-eval seam on
+//! [`EbcFunction`](crate::submodular::EbcFunction), so **any registry
+//! optimizer runs on a pruned core unchanged** and merge scoring stays
+//! an unbiased estimate of the full-ground objective. Weights default
+//! to 1.0 everywhere else: the unpruned path is untouched (and proven
+//! bit-identical by proptests).
+//!
+//! Everything here is coordinator-local. The prune knobs never cross
+//! the frozen v2 wire — `from_wire` forces them off — so replicas need
+//! no protocol change: a pruned stage-1 job is just a smaller job.
+
+pub mod core;
+pub mod graph;
+pub mod hierarchy;
+
+pub use self::core::{cap_ground, prune_rows, PrunedGround};
+pub use graph::{dominated, nearest_probes, sieve, PruneConfig, PruneStats};
+pub use hierarchy::{merge_tree, HierarchyConfig, MergeLeaf, MergeNodeReport, MergeOutcome};
+
+use crate::linalg::gemm::CpuKernel;
+use crate::runtime::artifact::Precision;
+
+/// Prune + hierarchy knobs as they ride on
+/// [`ShardedSummarizer`](crate::shard::ShardedSummarizer) — the
+/// summarizer-level mirror of the `[shard] prune/fanout/max_merge_n`
+/// config keys and the `--prune/--fanout/--max-merge-n` CLI flags.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PruneOptions {
+    /// Fraction of each shard's ground rows to sieve away before the
+    /// stage-1 optimizer runs (0.0 = pruning off, the legacy path).
+    pub rate: f64,
+    /// Merge-tree fanout: children per merge node. 0 = flat (a single
+    /// root merge, the legacy shape); values ≥ 2 build intermediate
+    /// levels whenever more than `fanout` shards report.
+    pub fanout: usize,
+    /// Hard cap on ground rows any single merge node may score.
+    /// 0 = unlimited. When a node's (pruned) ground exceeds the cap it
+    /// is sieved further — candidates are protected and charges carry
+    /// over, so the weighted objective estimate stays unbiased.
+    pub max_merge_n: usize,
+    /// Seed for the deterministic sieve (mixed per shard / per node).
+    pub seed: u64,
+    /// CPU kernel the sieve distance passes and the weighted merge
+    /// oracles run on (pruned merge scoring is CPU-side — weights do
+    /// not exist on the engine backend).
+    pub kernel: CpuKernel,
+    /// Precision axis for the same oracles.
+    pub precision: Precision,
+}
+
+impl Default for PruneOptions {
+    fn default() -> Self {
+        PruneOptions {
+            rate: 0.0,
+            fanout: 0,
+            max_merge_n: 0,
+            seed: 0,
+            kernel: CpuKernel::Blocked,
+            precision: Precision::F32,
+        }
+    }
+}
+
+impl PruneOptions {
+    /// Whether stage-1 pruning is on.
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Whether any knob forces the merge through the hierarchy path
+    /// (`shards` = non-empty shards that reported). Everything default
+    /// ⇒ the summarizer keeps the legacy flat merge verbatim.
+    pub fn hierarchical(&self, shards: usize) -> bool {
+        self.enabled() || self.max_merge_n > 0 || (self.fanout >= 2 && self.fanout < shards)
+    }
+}

@@ -36,6 +36,13 @@
 //! P·T ≤ cores — instead of P independently-planned, oversubscribed
 //! engines.
 //!
+//! For sublinear ground-set scaling the summarizer composes with
+//! [`crate::prune`]: each shard's ground can be sieved to a weighted
+//! core before stage 1 (jobs then ship only the surviving rows — no
+//! wire change), and the flat merge generalizes to a shards-of-shards
+//! tree whose nodes never score more than `max_merge_n` rows. With
+//! every prune knob off the legacy flat path runs verbatim.
+//!
 //! Stage 1 is dispatched through the [`transport`] seam: jobs and
 //! results travel as [`wire`]-format frames (versioned, checksummed)
 //! whether the executor is the local threadpool

@@ -6,6 +6,7 @@ use crate::linalg::gemm::CpuKernel;
 use crate::linalg::SharedMatrix;
 use crate::obs;
 use crate::optim::{Optimizer, SummaryResult};
+use crate::prune::{merge_tree, prune_rows, HierarchyConfig, MergeLeaf, PruneConfig, PruneOptions, PrunedGround};
 use crate::shard::merge::greedy_merge;
 use crate::shard::partition::Partitioner;
 use crate::shard::transport::{ExecCtx, InProcessTransport, JobSource, ShardTransport};
@@ -94,6 +95,16 @@ pub struct ShardedResult {
     /// replica dead) and stage 1 re-ran on the in-process fallback.
     /// The answer is still correct — but the fleet did not produce it.
     pub degraded: bool,
+    /// Ground rows sieved away before stage 1 (0 = pruning off).
+    pub pruned_n: usize,
+    /// Wall-clock of the coordinator-side prune stage.
+    pub prune_seconds: f64,
+    /// Merge-tree depth (1 = the flat single merge).
+    pub merge_depth: usize,
+    /// Most ground rows any single merge node scored — equals the full
+    /// ground size on the flat path, and is ≤ `max_merge_n` whenever
+    /// that cap is set.
+    pub max_merge_scored: usize,
 }
 
 impl ShardedResult {
@@ -142,6 +153,17 @@ pub struct ShardedSummarizer<'a> {
     /// through the [`crate::shard::wire`] encode/decode — there is no
     /// direct-call path.
     pub transport: Option<&'a dyn ShardTransport>,
+    /// Pruned-submodularity-graph + merge-tree knobs
+    /// ([`PruneOptions::default`] = everything off, legacy flat path).
+    /// Pruning happens coordinator-side: jobs ship only the surviving
+    /// core rows, so every transport works unchanged and nothing
+    /// prune-related ever crosses the frozen wire format.
+    pub prune: PruneOptions,
+    /// Optimizer for the merge stage(s); `None` (or greedy) keeps the
+    /// exact candidate-greedy merge. A non-greedy choice runs over a
+    /// candidate-pool oracle weighted by prune charges and forces the
+    /// merge-tree path.
+    pub merge_optimizer: Option<&'a dyn Optimizer>,
 }
 
 impl<'a> ShardedSummarizer<'a> {
@@ -159,6 +181,8 @@ impl<'a> ShardedSummarizer<'a> {
             merge_batch: 1024,
             plan: None,
             transport: None,
+            prune: PruneOptions::default(),
+            merge_optimizer: None,
         }
     }
 
@@ -183,6 +207,14 @@ impl<'a> ShardedSummarizer<'a> {
         s.threads = spec.threads;
         s.per_shard_k = spec.per_shard_k;
         s.merge_batch = req.batch.max(1);
+        s.prune = PruneOptions {
+            rate: spec.prune,
+            fanout: spec.fanout,
+            max_merge_n: spec.max_merge_n,
+            seed: req.seed,
+            kernel: req.cpu_kernel,
+            precision: req.precision,
+        };
         s
     }
 
@@ -234,6 +266,48 @@ impl<'a> ShardedSummarizer<'a> {
             .filter(|(_, part)| !part.is_empty())
             .collect();
         let partition_seconds = t0.elapsed().as_secs_f64();
+
+        // ---- stage 0: coordinator-side sieve prune per shard ----------
+        // Each shard's ground is sieved down to an O((1-rate)·m) core
+        // before any job is built: jobs then ship only the surviving
+        // rows, so pruning works over every transport with zero wire
+        // changes. Cores (with their charge weights) are kept for the
+        // merge tree; the legacy flat path never allocates them.
+        let use_tree = self.merge_optimizer.map_or(false, |o| o.name() != "greedy")
+            || self.prune.hierarchical(jobs.len());
+        let tp = Instant::now();
+        let cores: Option<Vec<PrunedGround>> = use_tree.then(|| {
+            jobs.iter()
+                .map(|(sid, part)| {
+                    if !self.prune.enabled() {
+                        return PrunedGround::identity(part);
+                    }
+                    let cfg = PruneConfig::new(
+                        self.prune.rate,
+                        self.prune.seed
+                            ^ (*sid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    prune_rows(data, part, self.prune.kernel, default_threads(), &cfg).0
+                })
+                .collect()
+        });
+        let pruned_n: usize =
+            cores.as_ref().map_or(0, |cs| cs.iter().map(|c| c.dropped()).sum());
+        let prune_seconds =
+            if self.prune.enabled() { tp.elapsed().as_secs_f64() } else { 0.0 };
+        // pruned stage-1 jobs carry the core's global ids in place of
+        // the full shard ground
+        let jobs: Vec<(usize, Vec<usize>)> = match &cores {
+            Some(cs) if self.prune.enabled() => jobs
+                .into_iter()
+                .zip(cs)
+                .map(|((sid, _), core)| (sid, core.ids.clone()))
+                .collect(),
+            _ => jobs,
+        };
+        // stage-1 results come back keyed by shard id; this maps them
+        // to their cores after `jobs` moves into the job source
+        let sids: Vec<usize> = jobs.iter().map(|(sid, _)| *sid).collect();
 
         // ---- stage 1: per-shard optimization through the transport ---
         // a plan pins the worker × kernel-thread split; unplanned runs
@@ -314,24 +388,63 @@ impl<'a> ShardedSummarizer<'a> {
         let per_shard: Vec<ShardRun> = results.iter().map(ShardRun::from_msg).collect();
         let shard_seconds = t1.elapsed().as_secs_f64();
 
-        // ---- stage 2: greedy merge over the union of shard picks -----
+        // ---- stage 2: merge over the union of shard picks ------------
         // merge + baseline alias the full dataset through the shared
-        // handle — no ground-matrix copies
+        // handle — no ground-matrix copies. With every prune/tree knob
+        // off, the legacy flat greedy merge runs verbatim (bit-identical
+        // to prior releases); otherwise the shards-of-shards tree takes
+        // over, carrying each core's charge weights into node scoring.
         let t2 = Instant::now();
-        let mut union: Vec<usize> = per_shard
-            .iter()
-            .flat_map(|s| s.result.indices.iter().copied())
-            .collect();
-        union.sort_unstable();
-        union.dedup();
         let merge_spec = match &self.plan {
             Some(plan) => OracleSpec::for_merge(plan),
             None => OracleSpec::unplanned(),
         };
-        let mut merge_oracle = factory(Arc::clone(data), &merge_spec);
-        let merged = {
-            let _span = obs::span("shard.merge");
-            merge_hist().time(|| greedy_merge(merge_oracle.as_mut(), &union, k, self.merge_batch))
+        let (merged, merge_depth, max_merge_scored) = match &cores {
+            Some(cores) => {
+                let leaves: Vec<MergeLeaf> = per_shard
+                    .iter()
+                    .map(|s| {
+                        let ci = sids
+                            .binary_search(&s.shard)
+                            .expect("stage-1 result for an unknown shard");
+                        MergeLeaf {
+                            ground: cores[ci].clone(),
+                            selected: s.result.indices.clone(),
+                        }
+                    })
+                    .collect();
+                let hcfg = HierarchyConfig {
+                    fanout: self.prune.fanout,
+                    max_merge_n: self.prune.max_merge_n,
+                    seed: self.prune.seed,
+                    kernel: self.prune.kernel,
+                    precision: self.prune.precision,
+                    threads: merge_spec.threads.unwrap_or_else(default_threads),
+                    batch: self.merge_batch,
+                };
+                let mo = self.merge_optimizer.filter(|o| o.name() != "greedy");
+                let out = {
+                    let _span = obs::span("shard.merge");
+                    merge_hist().time(|| merge_tree(data, leaves, k, &hcfg, mo))
+                };
+                (out.result, out.depth, out.max_scored_n)
+            }
+            None => {
+                let mut union: Vec<usize> = per_shard
+                    .iter()
+                    .flat_map(|s| s.result.indices.iter().copied())
+                    .collect();
+                union.sort_unstable();
+                union.dedup();
+                let mut merge_oracle = factory(Arc::clone(data), &merge_spec);
+                let merged = {
+                    let _span = obs::span("shard.merge");
+                    merge_hist().time(|| {
+                        greedy_merge(merge_oracle.as_mut(), &union, k, self.merge_batch)
+                    })
+                };
+                (merged, 1, data.rows())
+            }
         };
         let merge_seconds = t2.elapsed().as_secs_f64();
 
@@ -355,6 +468,10 @@ impl<'a> ShardedSummarizer<'a> {
             shard_retries: stats.shard_retries,
             peak_jobs_held: source.peak.load(Ordering::SeqCst),
             degraded: fell_back,
+            pruned_n,
+            prune_seconds,
+            merge_depth,
+            max_merge_scored,
         }
     }
 }
@@ -637,5 +754,103 @@ mod tests {
                 assert_eq!(shard_builds.load(Ordering::SeqCst), shards.min(v.rows()));
             }
         }
+    }
+
+    fn blocked_factory() -> impl Fn(SharedMatrix, &OracleSpec) -> Box<dyn Oracle> + Sync {
+        |m: SharedMatrix, _spec: &OracleSpec| {
+            Box::new(CpuOracle::with_kernel_shared(m, CpuKernel::Blocked, Precision::F32, 0))
+                as Box<dyn Oracle>
+        }
+    }
+
+    #[test]
+    fn forced_tree_with_identity_grounds_matches_flat_bitwise() {
+        // max_merge_n = n forces the merge-tree path while leaving the
+        // cap a no-op: one root over identity grounds with unit weights
+        // must reproduce the flat merge exactly (same kernel, same
+        // threads, all-ones weighted eval is bit-identical)
+        let v = data(72, 5, 31);
+        let greedy = Greedy::default();
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let flat =
+            ShardedSummarizer::new(part.as_ref(), &greedy, 4).summarize(&v, &blocked_factory(), 6);
+        assert_eq!(flat.merge_depth, 1);
+        assert_eq!(flat.pruned_n, 0);
+        assert_eq!(flat.max_merge_scored, 72);
+        let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, 4);
+        s.prune.max_merge_n = 72;
+        let tree = s.summarize(&v, &blocked_factory(), 6);
+        assert_eq!(tree.merge_depth, 1);
+        assert_eq!(tree.max_merge_scored, 72, "root must score the full union");
+        assert_eq!(tree.merged.indices, flat.merged.indices);
+        assert_eq!(tree.merged.f_final.to_bits(), flat.merged.f_final.to_bits());
+    }
+
+    #[test]
+    fn pruning_reports_dropped_rows_and_keeps_quality() {
+        let v = data(160, 5, 37);
+        let greedy = Greedy::default();
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, 4);
+        s.prune.rate = 0.5;
+        let res = s.summarize_with_baseline(&v, &cpu_factory(), 6);
+        assert!(res.pruned_n > 0, "nothing pruned at rate 0.5");
+        assert!(res.pruned_n < 160);
+        assert!(res.prune_seconds >= 0.0);
+        assert!(!res.merged.indices.is_empty());
+        assert!(res.merged.indices.iter().all(|&i| i < 160));
+        let ratio = res.quality_ratio().unwrap();
+        assert!(ratio >= 0.5, "pruned quality collapsed: {ratio}");
+    }
+
+    #[test]
+    fn merge_cap_and_fanout_respected_end_to_end() {
+        let v = data(90, 4, 41);
+        let greedy = Greedy::default();
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, 6);
+        s.prune.rate = 0.25;
+        s.prune.fanout = 2;
+        s.prune.max_merge_n = 30;
+        let res = s.summarize(&v, &cpu_factory(), 4);
+        assert!(res.pruned_n > 0);
+        assert!(res.merge_depth >= 2, "fanout 2 over 6 shards must build a tree");
+        assert!(res.max_merge_scored <= 30, "cap violated: {}", res.max_merge_scored);
+        assert!(!res.merged.indices.is_empty());
+        assert!(res.merged.k() <= 4);
+        assert!(res.merged.indices.iter().all(|&i| i < 90));
+    }
+
+    #[test]
+    fn non_greedy_merge_optimizer_selects_from_the_union() {
+        let v = data(60, 4, 43);
+        let greedy = Greedy::default();
+        let part = build_partitioner("round_robin", 0).unwrap();
+        let opt = build_optimizer("stochastic_greedy", 64).unwrap();
+        let mut s = ShardedSummarizer::new(part.as_ref(), &greedy, 3);
+        s.merge_optimizer = Some(opt.as_ref());
+        let res = s.summarize(&v, &cpu_factory(), 4);
+        assert_eq!(res.merge_depth, 1);
+        assert_eq!(res.pruned_n, 0);
+        let union: Vec<usize> = res
+            .per_shard
+            .iter()
+            .flat_map(|s| s.result.indices.iter().copied())
+            .collect();
+        assert!(
+            res.merged.indices.iter().all(|i| union.contains(i)),
+            "{:?} not in {union:?}",
+            res.merged.indices
+        );
+        // a merge optimizer literally named "greedy" keeps the flat path
+        let gm = build_optimizer("greedy", 64).unwrap();
+        let mut s2 = ShardedSummarizer::new(part.as_ref(), &greedy, 3);
+        s2.merge_optimizer = Some(gm.as_ref());
+        let res2 = s2.summarize(&v, &cpu_factory(), 4);
+        assert_eq!(res2.merge_depth, 1);
+        let flat =
+            ShardedSummarizer::new(part.as_ref(), &greedy, 3).summarize(&v, &cpu_factory(), 4);
+        assert_eq!(res2.merged.indices, flat.merged.indices);
+        assert_eq!(res2.merged.f_final.to_bits(), flat.merged.f_final.to_bits());
     }
 }

@@ -280,6 +280,9 @@ impl WirePlan {
     pub fn to_plan(&self) -> ShardPlan {
         ShardPlan {
             n: self.n as usize,
+            // prune knobs are local-only (never serialized): a rebuilt
+            // plan picks buckets for the full window
+            n_eff: self.n as usize,
             d: self.d as usize,
             shards: self.shards as usize,
             k: self.k as usize,

@@ -41,6 +41,12 @@ pub struct EbcFunction {
     precision: Precision,
     /// Ground-parallel worker count for the blocked kernel (>= 1).
     threads: usize,
+    /// Per-ground-row charge weights + their (f64) sum — the weighted-eval
+    /// seam of [`crate::prune`]: a pruned core's survivors stand in for
+    /// the rows sieved onto them, so eval/gains average `w_i · (…)` over
+    /// `Σw` instead of a unit weight over n. `None` (the default) keeps
+    /// every path byte-for-byte on the legacy unweighted code.
+    weights: Option<(Vec<f32>, f64)>,
     /// scalar distance-evaluation counter (ablation metric)
     work: AtomicU64,
 }
@@ -87,7 +93,45 @@ impl EbcFunction {
             kernel,
             precision,
             threads: resolve_threads(threads),
+            weights: None,
             work: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach per-row charge weights (see [`crate::prune::PrunedGround`]):
+    /// every eval/gains entry point becomes the weighted objective
+    /// `f_w(S) = Σ w_i (‖v_i‖² − mindist_i) / Σw`. All-ones weights are
+    /// bit-identical to the unweighted function (an f32 multiply by 1.0
+    /// is exact and the accumulation order is unchanged).
+    ///
+    /// # Panics
+    /// If `w.len()` differs from the ground-set size.
+    pub fn with_weights(mut self, w: Vec<f32>) -> EbcFunction {
+        assert_eq!(w.len(), self.v.rows(), "one weight per ground row");
+        let wsum: f64 = w.iter().map(|&x| x as f64).sum();
+        self.weights = Some((w, wsum));
+        self
+    }
+
+    /// The attached charge weights, if any.
+    pub fn weights(&self) -> Option<&[f32]> {
+        self.weights.as_ref().map(|(w, _)| w.as_slice())
+    }
+
+    /// f(S) from the incremental state — the weighted counterpart of
+    /// [`crate::submodular::f_from_mindist`], identical to it when no
+    /// weights are attached.
+    pub fn f_of_state(&self, mindist: &[f32]) -> f32 {
+        match &self.weights {
+            None => crate::submodular::f_from_mindist(&self.vsq, mindist),
+            Some((w, wsum)) => {
+                debug_assert_eq!(mindist.len(), self.vsq.len());
+                let mut acc = 0f64;
+                for i in 0..self.vsq.len() {
+                    acc += (w[i] * (self.vsq[i] - mindist[i])) as f64;
+                }
+                (acc / wsum) as f32
+            }
         }
     }
 
@@ -165,20 +209,39 @@ impl EbcFunction {
     /// Both entry points therefore count distance work identically.
     fn eval_scalar(&self, rows: &[&[f32]]) -> f32 {
         let n = self.v.rows();
-        let mut acc = 0f64;
-        for i in 0..n {
-            let vi = self.v.row(i);
-            let mut t = self.vsq[i]; // distance to e0
-            for vs in rows {
-                let d = sq_euclidean(vi, vs);
-                if d < t {
-                    t = d;
-                }
-            }
-            acc += (self.vsq[i] - t) as f64;
-        }
         self.work.fetch_add((n * rows.len()) as u64, Ordering::Relaxed);
-        (acc / n as f64) as f32
+        match &self.weights {
+            None => {
+                let mut acc = 0f64;
+                for i in 0..n {
+                    let vi = self.v.row(i);
+                    let mut t = self.vsq[i]; // distance to e0
+                    for vs in rows {
+                        let d = sq_euclidean(vi, vs);
+                        if d < t {
+                            t = d;
+                        }
+                    }
+                    acc += (self.vsq[i] - t) as f64;
+                }
+                (acc / n as f64) as f32
+            }
+            Some((w, wsum)) => {
+                let mut acc = 0f64;
+                for i in 0..n {
+                    let vi = self.v.row(i);
+                    let mut t = self.vsq[i];
+                    for vs in rows {
+                        let d = sq_euclidean(vi, vs);
+                        if d < t {
+                            t = d;
+                        }
+                    }
+                    acc += (w[i] * (self.vsq[i] - t)) as f64;
+                }
+                (acc / wsum) as f32
+            }
+        }
     }
 
     /// Blocked evaluation: per ground tile compute the distance block
@@ -198,11 +261,18 @@ impl EbcFunction {
                         t = dv;
                     }
                 }
-                acc += (self.vsq[i] - t) as f64;
+                match &self.weights {
+                    None => acc += (self.vsq[i] - t) as f64,
+                    Some((w, _)) => acc += (w[i] * (self.vsq[i] - t)) as f64,
+                }
             });
             part[0] += acc;
         });
-        (sums[0] / n as f64) as f32
+        let denom = match &self.weights {
+            None => n as f64,
+            Some((_, wsum)) => *wsum,
+        };
+        (sums[0] / denom) as f32
     }
 
     /// Single-threaded multi-set evaluation: Algorithm 1 looped over
@@ -287,21 +357,38 @@ impl EbcFunction {
         let n = self.v.rows() as f32;
         self.work
             .fetch_add((self.v.rows() * cands.len()) as u64, Ordering::Relaxed);
-        cands
-            .iter()
-            .map(|&c| {
-                let vc = self.v.row(c);
-                let mut acc = 0f64;
-                for i in 0..self.v.rows() {
-                    let d = sq_euclidean(self.v.row(i), vc);
-                    let r = mindist[i] - d;
-                    if r > 0.0 {
-                        acc += r as f64;
+        match &self.weights {
+            None => cands
+                .iter()
+                .map(|&c| {
+                    let vc = self.v.row(c);
+                    let mut acc = 0f64;
+                    for i in 0..self.v.rows() {
+                        let d = sq_euclidean(self.v.row(i), vc);
+                        let r = mindist[i] - d;
+                        if r > 0.0 {
+                            acc += r as f64;
+                        }
                     }
-                }
-                (acc / n as f64) as f32
-            })
-            .collect()
+                    (acc / n as f64) as f32
+                })
+                .collect(),
+            Some((w, wsum)) => cands
+                .iter()
+                .map(|&c| {
+                    let vc = self.v.row(c);
+                    let mut acc = 0f64;
+                    for i in 0..self.v.rows() {
+                        let d = sq_euclidean(self.v.row(i), vc);
+                        let r = mindist[i] - d;
+                        if r > 0.0 {
+                            acc += (w[i] * r) as f64;
+                        }
+                    }
+                    (acc / wsum) as f32
+                })
+                .collect(),
+        }
     }
 
     /// Blocked gains: one Gram-matrix distance block per ground tile,
@@ -329,15 +416,31 @@ impl EbcFunction {
         let sums = ground_partials(n, vsq_y.len(), self.threads, |r0, r1, part| {
             for_ground_tiles(self.kernel, vm, vs, y, vsq_y, r0, r1, |i, drow| {
                 let md = mindist[i];
-                for (p, &dv) in part.iter_mut().zip(drow) {
-                    let r = md - dv;
-                    if r > 0.0 {
-                        *p += r as f64;
+                match &self.weights {
+                    None => {
+                        for (p, &dv) in part.iter_mut().zip(drow) {
+                            let r = md - dv;
+                            if r > 0.0 {
+                                *p += r as f64;
+                            }
+                        }
+                    }
+                    Some((w, _)) => {
+                        let wi = w[i];
+                        for (p, &dv) in part.iter_mut().zip(drow) {
+                            let r = md - dv;
+                            if r > 0.0 {
+                                *p += (wi * r) as f64;
+                            }
+                        }
                     }
                 }
             });
         });
-        let nf = n as f64;
+        let nf = match &self.weights {
+            None => n as f64,
+            Some((_, wsum)) => *wsum,
+        };
         sums.iter().map(|&s| (s / nf) as f32).collect()
     }
 
@@ -355,7 +458,10 @@ impl EbcFunction {
         }
         match self.kernel {
             CpuKernel::Scalar => {
-                let nf = n as f64;
+                let nf = match &self.weights {
+                    None => n as f64,
+                    Some((_, wsum)) => *wsum,
+                };
                 (0..c)
                     .map(|j| {
                         let vc = cands.row(j);
@@ -363,7 +469,10 @@ impl EbcFunction {
                         for i in 0..n {
                             let r = mindist[i] - sq_euclidean(self.v.row(i), vc);
                             if r > 0.0 {
-                                acc += r as f64;
+                                match &self.weights {
+                                    None => acc += r as f64,
+                                    Some((w, _)) => acc += (w[i] * r) as f64,
+                                }
                             }
                         }
                         (acc / nf) as f32
@@ -570,6 +679,14 @@ impl CpuOracle {
     pub fn function(&self) -> &EbcFunction {
         &self.f
     }
+
+    /// Attach [`crate::prune`] charge weights — see
+    /// [`EbcFunction::with_weights`]. All-ones weights keep the oracle
+    /// bit-identical to the unweighted one.
+    pub fn with_weights(mut self, w: Vec<f32>) -> CpuOracle {
+        self.f = self.f.with_weights(w);
+        self
+    }
 }
 
 impl Oracle for CpuOracle {
@@ -600,6 +717,9 @@ impl Oracle for CpuOracle {
     }
     fn work_counter(&self) -> u64 {
         self.f.work_counter()
+    }
+    fn f_of_state(&self, mindist: &[f32]) -> f32 {
+        self.f.f_of_state(mindist)
     }
 }
 
@@ -865,6 +985,64 @@ mod tests {
         assert!(std::ptr::eq(a.ground(), v.as_ref()));
         assert!(std::ptr::eq(b.function().ground(), v.as_ref()));
         assert_eq!(a.eval(&[2]), b.function().eval(&[2]));
+    }
+
+    #[test]
+    fn all_ones_weights_bit_identical_every_entry_point() {
+        let mut rng = Rng::new(41);
+        let v = Matrix::random_normal(37, 6, &mut rng);
+        for (kernel, threads) in
+            [(CpuKernel::Scalar, 1usize), (CpuKernel::Blocked, 1), (CpuKernel::Blocked, 3)]
+        {
+            let plain = EbcFunction::with_kernel(v.clone(), kernel, Precision::F32, threads);
+            let ones = EbcFunction::with_kernel(v.clone(), kernel, Precision::F32, threads)
+                .with_weights(vec![1.0; 37]);
+            let set = [3usize, 12, 30];
+            assert_eq!(plain.eval(&set).to_bits(), ones.eval(&set).to_bits(), "{kernel:?}");
+            let mut mind = plain.vsq().to_vec();
+            fold_mindist(&mut mind, &plain.dist_col(5));
+            let cands = [0usize, 7, 19, 36];
+            for (a, b) in plain.gains(&mind, &cands).iter().zip(&ones.gains(&mind, &cands)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kernel:?}");
+            }
+            let ext = v.gather(&cands);
+            for (a, b) in
+                plain.gains_external(&mind, &ext).iter().zip(&ones.gains_external(&mind, &ext))
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kernel:?}");
+            }
+            assert_eq!(
+                plain.f_of_state(&mind).to_bits(),
+                ones.f_of_state(&mind).to_bits(),
+                "{kernel:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_eval_matches_row_duplication() {
+        // weight w on a row ≡ that row appearing w times in the ground
+        let base = Matrix::from_rows(&[&[0.0f32, 0.0], &[4.0, 0.0], &[0.0, 4.0]]);
+        let dup = Matrix::from_rows(&[
+            &[0.0f32, 0.0],
+            &[4.0, 0.0],
+            &[4.0, 0.0],
+            &[4.0, 0.0],
+            &[0.0, 4.0],
+        ]);
+        let w = EbcFunction::new(base).with_weights(vec![1.0, 3.0, 1.0]);
+        let d = EbcFunction::new(dup);
+        assert!((w.eval(&[1]) - d.eval(&[1])).abs() < 1e-6);
+        let mut mw = w.vsq().to_vec();
+        fold_mindist(&mut mw, &w.dist_col(1));
+        let mut md = d.vsq().to_vec();
+        fold_mindist(&mut md, &d.dist_col(1));
+        let gw = w.gains(&mw, &[0, 2]);
+        let gd = d.gains(&md, &[0, 4]);
+        for (a, b) in gw.iter().zip(&gd) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert!((w.f_of_state(&mw) - d.f_of_state(&md)).abs() < 1e-6);
     }
 
     #[test]

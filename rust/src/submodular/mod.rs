@@ -42,6 +42,14 @@ pub trait Oracle {
     fn work_counter(&self) -> u64 {
         0
     }
+
+    /// f(S) from the incremental state. The default is exactly
+    /// [`f_from_mindist`]; weighted oracles (a [`crate::prune`] core's
+    /// charge weights) override it so trajectories stay unbiased
+    /// estimates of the full-ground objective.
+    fn f_of_state(&self, mindist: &[f32]) -> f32 {
+        f_from_mindist(self.vsq(), mindist)
+    }
 }
 
 /// Fresh mindist state (distance to e0 only — the empty summary).

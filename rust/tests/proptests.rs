@@ -1602,6 +1602,220 @@ fn prop_registry_backed_metrics_snapshot_matches_field_mirror() {
     );
 }
 
+// ---------------------------------------------------- prune subsystem
+
+/// `n` points in `c` tight Gaussian clusters — the regime pruning is
+/// built for (dominated in-cluster rows transfer their charge to the
+/// rows that cover them).
+fn clustered_data(rng: &mut Rng, n: usize, d: usize, c: usize) -> Vec<f32> {
+    let centers: Vec<Vec<f32>> = (0..c)
+        .map(|_| rng.normal_vec(d).iter().map(|x| x * 6.0).collect())
+        .collect();
+    let mut data = Vec::with_capacity(n * d);
+    for i in 0..n {
+        for j in 0..d {
+            data.push(centers[i % c][j] + 0.05 * rng.normal());
+        }
+    }
+    data
+}
+
+#[test]
+fn prop_prune_knobs_at_defaults_are_bit_identical_to_flat() {
+    // tentpole invariant: prune 0 / fanout 0 / cap 0 / greedy merge is
+    // byte-for-byte the pre-prune flat two-stage path — for every
+    // partitioner over both local transports
+    use ebc::api::{DatasetRef, Service, ShardSpec, SummarizeRequest};
+    forall(
+        "prune knobs at defaults == flat path (all partitioners, inproc + loopback)",
+        &Config { cases: 5, seed: 0xF1A7 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 40, 5, 2.0);
+            let shards = 1 + rng.below(5);
+            let k = 1 + rng.below(4);
+            (n, d, data, shards, k)
+        },
+        |(n, d, data, shards, k)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let service = Service::cpu();
+            for name in PARTITIONERS {
+                for transport in ["inproc", "loopback"] {
+                    let base = SummarizeRequest::new(DatasetRef::Inline(Arc::clone(&v)), *k)
+                        .cpu_kernel(CpuKernel::Scalar)
+                        .threads(1)
+                        .seed(33);
+                    let spec = ShardSpec::new(*shards)
+                        .partitioner(name)
+                        .transport(transport)
+                        .replicas(2);
+                    let flat = service
+                        .summarize(&base.clone().sharded(spec.clone()))
+                        .map_err(|e| e.to_string())?;
+                    let zeroed = service
+                        .summarize(&base.sharded(
+                            spec.prune(0.0).fanout(0).max_merge_n(0).merge_optimizer("greedy"),
+                        ))
+                        .map_err(|e| e.to_string())?;
+                    if zeroed.exemplars != flat.exemplars
+                        || zeroed.f_final.to_bits() != flat.f_final.to_bits()
+                    {
+                        return Err(format!("{name}/{transport}: zeroed prune knobs drifted"));
+                    }
+                    if zeroed.provenance.pruned_n != 0 || zeroed.provenance.merge_depth != 1 {
+                        return Err(format!(
+                            "{name}/{transport}: flat run misreported: pruned_n={} depth={}",
+                            zeroed.provenance.pruned_n, zeroed.provenance.merge_depth
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_level_merge_tree_reproduces_flat_bitwise() {
+    // tentpole invariant: a cap of n (caps nothing) forces the merge
+    // tree, and fanout >= P collapses it to one root node — which must
+    // run the identical union-candidate greedy the flat path runs
+    use ebc::api::{DatasetRef, Service, ShardSpec, SummarizeRequest};
+    forall(
+        "fanout >= P + identity cap: merge tree == flat merge (bit for bit)",
+        &Config { cases: 6, seed: 0x7EE5 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 48, 5, 2.0);
+            let shards = 2 + rng.below(4);
+            let k = 1 + rng.below(4);
+            (n, d, data, shards, k)
+        },
+        |(n, d, data, shards, k)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let service = Service::cpu();
+            for name in PARTITIONERS {
+                let base = SummarizeRequest::new(DatasetRef::Inline(Arc::clone(&v)), *k)
+                    .cpu_kernel(CpuKernel::Scalar)
+                    .threads(1)
+                    .seed(44);
+                let flat = service
+                    .summarize(&base.clone().sharded(ShardSpec::new(*shards).partitioner(name)))
+                    .map_err(|e| e.to_string())?;
+                let tree = service
+                    .summarize(&base.sharded(
+                        ShardSpec::new(*shards)
+                            .partitioner(name)
+                            .fanout(*shards + 1)
+                            .max_merge_n(*n),
+                    ))
+                    .map_err(|e| e.to_string())?;
+                if tree.exemplars != flat.exemplars
+                    || tree.f_final.to_bits() != flat.f_final.to_bits()
+                {
+                    return Err(format!(
+                        "{name}: tree {:?} (f={}) != flat {:?} (f={})",
+                        tree.exemplars, tree.f_final, flat.exemplars, flat.f_final
+                    ));
+                }
+                if tree.provenance.merge_depth != 1 {
+                    return Err(format!(
+                        "{name}: single-level tree reported depth {}",
+                        tree.provenance.merge_depth
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pruned_greedy_keeps_quality_on_clusters() {
+    // satellite invariant: on tight clusters, pruning half the ground
+    // drops rows (reported in provenance) but the merged objective
+    // stays within a constant factor of the exact two-stage run
+    use ebc::api::{DatasetRef, Service, ShardSpec, SummarizeRequest};
+    forall(
+        "prune 0.5 on clusters: pruned_n > 0 and f >= 0.5 * exact",
+        &Config { cases: 6, seed: 0xC1A5 },
+        |rng| {
+            let d = 4 + rng.below(4);
+            let c = 3 + rng.below(3);
+            let n = 96 + rng.below(64);
+            let data = clustered_data(rng, n, d, c);
+            let shards = 2 + rng.below(3);
+            (n, d, data, c, shards)
+        },
+        |(n, d, data, c, shards)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let service = Service::cpu();
+            let base = SummarizeRequest::new(DatasetRef::Inline(Arc::clone(&v)), *c)
+                .cpu_kernel(CpuKernel::Scalar)
+                .threads(1)
+                .seed(5);
+            let exact = service
+                .summarize(&base.clone().sharded(ShardSpec::new(*shards)))
+                .map_err(|e| e.to_string())?;
+            let pruned = service
+                .summarize(&base.sharded(ShardSpec::new(*shards).prune(0.5).fanout(2)))
+                .map_err(|e| e.to_string())?;
+            if pruned.provenance.pruned_n == 0 {
+                return Err("prune 0.5 dropped nothing".into());
+            }
+            if pruned.provenance.pruned_n >= *n {
+                return Err("prune dropped the whole ground".into());
+            }
+            if pruned.f_final < 0.5 * exact.f_final - 1e-6 {
+                return Err(format!(
+                    "pruned f {} < 0.5 * exact f {}",
+                    pruned.f_final, exact.f_final
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_ones_weights_bit_identical_to_unweighted() {
+    // satellite invariant: the weighted-eval seam with all-ones charges
+    // is exactly the legacy objective — greedy selections, f bits and
+    // raw evals all match
+    forall(
+        "all-ones charge weights == unweighted (greedy bits + eval bits)",
+        &Config { cases: 16, seed: 0x11E5 },
+        |rng| {
+            let (n, d, data) = arb_dataset(rng, 40, 6, 2.0);
+            let k = 1 + rng.below(n.min(5));
+            let s = arb_subset(rng, n, 6);
+            (n, d, data, k, s)
+        },
+        |(n, d, data, k, s)| {
+            let v: SharedMatrix = Arc::new(Matrix::from_vec(*n, *d, data.clone()));
+            let plain = Greedy::default().run(&mut CpuOracle::new_shared(Arc::clone(&v)), *k);
+            let weighted = Greedy::default().run(
+                &mut CpuOracle::new_shared(Arc::clone(&v)).with_weights(vec![1.0; *n]),
+                *k,
+            );
+            if weighted.indices != plain.indices {
+                return Err(format!(
+                    "weighted {:?} != plain {:?}",
+                    weighted.indices, plain.indices
+                ));
+            }
+            if weighted.f_final.to_bits() != plain.f_final.to_bits() {
+                return Err(format!("f {} != {}", weighted.f_final, plain.f_final));
+            }
+            let f = EbcFunction::new(Matrix::from_vec(*n, *d, data.clone()));
+            let fw = EbcFunction::new(Matrix::from_vec(*n, *d, data.clone()))
+                .with_weights(vec![1.0; *n]);
+            if fw.eval(s).to_bits() != f.eval(s).to_bits() {
+                return Err(format!("eval drifted on {s:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 // ------------------------------------------------------- rng sanity
 
 #[test]
